@@ -1,0 +1,49 @@
+//! Adaptive (task-level) asynchronicity — the paper's future work (§6.1,
+//! §8), implemented.
+//!
+//! The paper's asynchronous mode keeps EnTK stage barriers inside each
+//! pipeline, which couples independent chains ("Aggr0 and Train1 can
+//! run at the same time" is the motivating example). `Adaptive` drops
+//! the barriers: every task set becomes eligible the instant its DAG
+//! parents complete. This example quantifies what that buys on all
+//! three paper workflows.
+//!
+//! Run: `cargo run --release --example adaptive`
+
+use asyncflow::engine::{simulate_cfg, ExecutionMode};
+use asyncflow::experiments::{experiment_workflows, paper_engine_config};
+use asyncflow::util::bench::Table;
+
+fn main() {
+    let cfg = paper_engine_config(42);
+    let mut table = Table::new(&[
+        "workflow",
+        "tSeq",
+        "tAsync (paper mode)",
+        "tAdaptive",
+        "I async",
+        "I adaptive",
+        "adaptive gain",
+    ]);
+    for (wf, cluster) in experiment_workflows() {
+        let seq = simulate_cfg(&wf, &cluster, ExecutionMode::Sequential, &cfg);
+        let asy = simulate_cfg(&wf, &cluster, ExecutionMode::Asynchronous, &cfg);
+        let ada = simulate_cfg(&wf, &cluster, ExecutionMode::Adaptive, &cfg);
+        table.row(&[
+            wf.name.clone(),
+            format!("{:.0}", seq.makespan),
+            format!("{:.0}", asy.makespan),
+            format!("{:.0}", ada.makespan),
+            format!("{:+.3}", asy.improvement_over(&seq)),
+            format!("{:+.3}", ada.improvement_over(&seq)),
+            format!("{:+.3}", 1.0 - ada.makespan / asy.makespan),
+        ]);
+    }
+    println!("# Adaptive task-level asynchronicity vs the paper's stage-barrier mode\n");
+    table.print();
+    println!(
+        "\nReading: 'adaptive gain' is the extra makespan reduction from removing\n\
+         intra-pipeline stage barriers — the paper's proposed next step. It is\n\
+         bounded above by the critical-path slack the barriers were wasting."
+    );
+}

@@ -1,0 +1,121 @@
+//! End-to-end DeepDriveMD with REAL ML compute — the full three-layer
+//! stack on a real (small) workload.
+//!
+//! This is the system's proof of composition:
+//!
+//!   Rust engine (L3) -> pilot scheduler -> MlExecutor task bodies
+//!     -> PJRT runtime -> AOT HLO artifacts (L2 JAX autoencoder + MD)
+//!     -> Pallas kernels (L1 blocked matmul / distances / LJ forces)
+//!
+//! The workflow runs Lennard-Jones MD simulations, featurizes frames
+//! into contact maps, aggregates them into batches, trains the
+//! autoencoder with SGD (logging the loss curve), and scores
+//! conformations by reconstruction error — DeepDriveMD's outlier-driven
+//! loop — in both sequential and asynchronous modes, reporting the
+//! measured relative improvement I.
+//!
+//! Requires `make artifacts` first.
+//!
+//! Run: `cargo run --release --example ddmd_e2e [-- --iterations 2]`
+
+use asyncflow::ddmd::mlexec::MlExecutor;
+use asyncflow::ddmd::{ddmd_workflow, DdmdConfig};
+use asyncflow::engine::{run, EngineConfig, ExecutionMode};
+use asyncflow::resources::ClusterSpec;
+use asyncflow::runtime::RuntimeService;
+use asyncflow::util::cli::Args;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+}
+
+fn main() -> asyncflow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let mut ddmd_cfg = DdmdConfig::small();
+    ddmd_cfg.iterations = args.get_usize("iterations", ddmd_cfg.iterations)?;
+    ddmd_cfg.train_steps = args.get_usize("train-steps", ddmd_cfg.train_steps)?;
+
+    let wf = ddmd_workflow(&ddmd_cfg);
+    let cluster = ClusterSpec::local_small();
+    let engine_cfg = EngineConfig { task_overhead: 0.0, stage_overhead: 0.0, ..Default::default() };
+
+    let svc = RuntimeService::start(artifacts_dir())?;
+    println!(
+        "runtime up: artifacts = {:?}",
+        artifacts_dir().canonicalize().unwrap_or_default()
+    );
+
+    let mut results = Vec::new();
+    for mode in [ExecutionMode::Sequential, ExecutionMode::Asynchronous] {
+        // Fresh executor (and model parameters) per mode for a fair race.
+        let mut ml = MlExecutor::new(svc.handle(), 7);
+        let store = ml.store();
+        let t0 = std::time::Instant::now();
+        let rep = run(&wf, &cluster, mode, &engine_cfg, &mut ml)?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        let st = store.lock().unwrap();
+        println!("\n== {} mode: wall {:.1}s, engine TTX {:.1}s", mode.label(), wall, rep.makespan);
+        println!(
+            "   tasks {} | frames {} | batches {} | train steps {} | inferences {}",
+            rep.records.len(),
+            st.frames_produced,
+            st.batches.len(),
+            st.train_steps_done,
+            st.scores.len()
+        );
+        println!(
+            "   cpu util {:.1}%  gpu util {:.1}%  DOA_res(meas) {}",
+            rep.cpu_utilization * 100.0,
+            rep.gpu_utilization * 100.0,
+            rep.doa_res
+        );
+        // Loss curve (downsampled).
+        if st.losses.len() >= 10 {
+            print!("   loss curve: ");
+            let stride = (st.losses.len() / 8).max(1);
+            for (step, loss) in st.losses.iter().step_by(stride) {
+                print!("{step}:{loss:.4} ");
+            }
+            println!();
+            // Compare window means (individual steps are noisy across
+            // rotating batches).
+            let k = (st.losses.len() / 4).max(3);
+            let head: f32 =
+                st.losses[..k].iter().map(|(_, l)| l).sum::<f32>() / k as f32;
+            let tail: f32 = st.losses[st.losses.len() - k..].iter().map(|(_, l)| l).sum::<f32>()
+                / k as f32;
+            assert!(
+                tail < head,
+                "training must reduce loss (head mean {head}, tail mean {tail})"
+            );
+            println!(
+                "   loss window mean {head:.4} -> {tail:.4} (improved {:.1}%)",
+                (1.0 - tail / head) * 100.0
+            );
+        }
+        if !st.scores.is_empty() {
+            let mean = st.scores.iter().sum::<f32>() / st.scores.len() as f32;
+            println!("   outlier scores: n={} mean={:.4}", st.scores.len(), mean);
+        }
+        results.push((mode, rep.makespan, wall));
+    }
+
+    let (_, t_seq, _) = results[0];
+    let (_, t_async, _) = results[1];
+    let i = 1.0 - t_async / t_seq;
+    println!("\n== relative improvement I = 1 - tAsync/tSeq = {i:+.3}");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores <= 2 {
+        println!(
+            "   (host has {cores} core(s): all PJRT compute serializes on one CPU, so\n\
+             \u{20}   asynchronous execution cannot mask anything here — note the higher\n\
+             \u{20}   utilization% above. The Summit-scale improvement is quantified by\n\
+             \u{20}   the virtual-time experiments: `asyncflow experiment table3`.)"
+        );
+    }
+    let (compiles, execs) = svc.handle().stats()?;
+    println!("== runtime: {compiles} artifact compilations, {execs} executions (compile cache OK)");
+    println!("ddmd_e2e OK — three-layer stack composed (Rust -> PJRT -> Pallas HLO)");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Quickstart: the paper's §5.3 worked example, end to end.
+//!
+//! Builds the Fig. 2b workflow (one fork, two chains), predicts the
+//! benefit of asynchronous execution with the analytical model
+//! (Eqns 1–5), then *measures* it with the discrete-event engine — the
+//! same pattern you would use to decide whether your own workflow is
+//! worth restructuring.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use asyncflow::dag::figures;
+use asyncflow::engine::{simulate_cfg, EngineConfig, ExecutionMode};
+use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::model;
+use asyncflow::resources::{ClusterSpec, ResourceRequest};
+use asyncflow::task::TaskSetSpec;
+
+fn main() {
+    // --- 1. Describe the workflow (Fig. 2b + §5.3 TX assignments) ----
+    let dag = figures::fig2b();
+    let tx = [500.0, 1000.0, 1000.0, 2000.0, 4000.0, 2000.0];
+    let sets: Vec<TaskSetSpec> = (0..6)
+        .map(|i| {
+            TaskSetSpec::new(format!("T{i}"), 1, ResourceRequest::new(4, 0), tx[i])
+                .with_sigma(0.0)
+        })
+        .collect();
+    let wf = Workflow {
+        name: "fig2b-worked-example".into(),
+        sets,
+        dag,
+        // Sequential: stage per rank.
+        sequential: vec![Pipeline::new("seq")
+            .stage(&[0])
+            .stage(&[1, 2])
+            .stage(&[3, 4])
+            .stage(&[5])],
+        // Asynchronous: chains H1 = {T1,T3,T5} and H2 = {T2,T4}.
+        asynchronous: vec![
+            Pipeline::new("p0").stage(&[0]),
+            Pipeline::new("H1").stage(&[1]).stage(&[3]).stage(&[5]),
+            Pipeline::new("H2").stage(&[2]).stage(&[4]),
+        ],
+    };
+    wf.validate().expect("valid workflow");
+
+    let cluster = ClusterSpec::uniform("lab", 2, 16, 0);
+
+    // --- 2. Predict (the paper's model, before running anything) -----
+    let pred = model::predict(&wf, &cluster);
+    println!("== prediction (Eqns 1-5)");
+    println!("  DOA_dep = {}  DOA_res = {}  WLA = {}", pred.doa_dep, pred.doa_res, pred.wla);
+    println!("  tSeq    = {:.0} s   (paper: 7500 s + overheads)", pred.t_seq);
+    println!("  tAsync  = {:.0} s   (paper: 5500 s + overheads)", pred.t_async);
+    println!("  I       = {:+.3}    (paper: ~0.26)", pred.improvement);
+
+    // --- 3. Measure (discrete-event simulation of the pilot) ---------
+    let cfg = EngineConfig::ideal();
+    let seq = simulate_cfg(&wf, &cluster, ExecutionMode::Sequential, &cfg);
+    let asy = simulate_cfg(&wf, &cluster, ExecutionMode::Asynchronous, &cfg);
+    println!("\n== measured (virtual pilot, zero overheads)");
+    println!(
+        "  sequential   TTX = {:.0} s, cpu util {:.1}%",
+        seq.makespan,
+        seq.cpu_utilization * 100.0
+    );
+    println!(
+        "  asynchronous TTX = {:.0} s, cpu util {:.1}%",
+        asy.makespan,
+        asy.cpu_utilization * 100.0
+    );
+    println!("  I = {:+.3}", asy.improvement_over(&seq));
+
+    // --- 4. Where did the time go? TX masking (§5.3) ----------------
+    let mask = model::masking_report(&wf, &cluster);
+    println!("\n== masking report (critical path {:.0} s)", mask.critical_path);
+    for s in &mask.sets {
+        println!(
+            "  {:<4} dur {:>6.0}s  slack {:>6.0}s  {}",
+            s.set_name,
+            s.duration,
+            s.slack,
+            if s.masked { "masked" } else { "on critical path" }
+        );
+    }
+
+    assert!((seq.makespan - 7500.0).abs() < 1.0);
+    assert!((asy.makespan - 5500.0).abs() < 1.0);
+    println!("\nquickstart OK — simulator matches the paper's closed-form example");
+}

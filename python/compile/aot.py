@@ -1,0 +1,116 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Each artifact gets a sibling ``<name>.meta.json`` describing its argument
+and result shapes so the Rust runtime can validate inputs without parsing
+HLO. A top-level ``manifest.json`` indexes everything.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points():
+    """(name, fn, example_args) for every artifact we ship."""
+    m = model
+    coords = _spec((m.N_ATOMS, 3))
+    vels = _spec((m.N_ATOMS, 3))
+    batch = _spec((m.BATCH, m.INPUT_DIM))
+    lr = _spec(())
+    params = tuple(_spec(shape) for _name, shape in m.PARAM_SHAPES)
+    return [
+        ("md_step", m.entry_md_step, (coords, vels)),
+        ("contact_map", m.entry_contact_map, (coords,)),
+        ("ae_train", m.entry_ae_train, params + (batch, lr)),
+        ("ae_infer", m.entry_ae_infer, params + (batch,)),
+        ("ae_encode", m.entry_ae_encode, params + (batch,)),
+        ("sanity", m.entry_sanity, (_spec((2, 2)), _spec((2, 2)))),
+    ]
+
+
+def _shape_meta(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_one(name, fn, args, out_dir):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+
+    out_tree = jax.eval_shape(fn, *args)
+    meta = {
+        "name": name,
+        "args": [_shape_meta(a) for a in args],
+        "results": [_shape_meta(r) for r in jax.tree_util.tree_leaves(out_tree)],
+        "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "hlo_bytes": len(text),
+    }
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", nargs="*", default=None, help="subset of entry points"
+    )
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+
+    manifest = {"artifacts": []}
+    for name, fn, args in entry_points():
+        if ns.only and name not in ns.only:
+            continue
+        meta = lower_one(name, fn, args, ns.out_dir)
+        manifest["artifacts"].append(meta)
+        print(f"  lowered {name}: {meta['hlo_bytes']} bytes of HLO text")
+
+    manifest["model"] = {
+        "n_atoms": model.N_ATOMS,
+        "input_dim": model.INPUT_DIM,
+        "hidden_dim": model.HIDDEN_DIM,
+        "latent_dim": model.LATENT_DIM,
+        "batch": model.BATCH,
+        "md_substeps": model.MD_SUBSTEPS,
+        "param_order": [name for name, _ in model.PARAM_SHAPES],
+    }
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

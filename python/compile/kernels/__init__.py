@@ -1,0 +1,19 @@
+"""L1 Pallas kernels for the DeepDriveMD-style ML/MD compute.
+
+Every kernel here is written for TPU idioms (VMEM tiles, MXU-shaped
+matmuls, BlockSpec HBM<->VMEM schedules) but lowered with
+``interpret=True`` so the CPU PJRT client can execute the resulting HLO.
+See DESIGN.md section "Hardware adaptation".
+"""
+
+from .matmul import matmul, matmul_pallas_raw
+from .distance import pairwise_dist2, contact_map
+from .lj import lj_forces
+
+__all__ = [
+    "matmul",
+    "matmul_pallas_raw",
+    "pairwise_dist2",
+    "contact_map",
+    "lj_forces",
+]

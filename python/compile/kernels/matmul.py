@@ -1,0 +1,131 @@
+"""Blocked matmul Pallas kernel (the autoencoder's dense-layer hot spot).
+
+TPU adaptation of the CUDA dense layer: instead of WMMA warp tiles we use
+MXU-shaped (up to 128x128) VMEM blocks, a k-loop grid dimension that
+accumulates into a VMEM scratch-like output block, and BlockSpec index
+maps expressing the HBM->VMEM schedule that a CUDA implementation would
+express with threadblocks + shared-memory staging.
+
+``matmul`` wraps the kernel in ``jax.custom_vjp`` so that ``jax.grad``
+through the autoencoder uses the *same* Pallas kernel for the backward
+matmuls (dA = g @ B^T, dB = A^T @ g) rather than falling back to XLA dot.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, preferred: int = 128) -> int:
+    """Largest power-of-two block <= preferred that divides ``dim``.
+
+    MXU tiles are 128x128; smaller dims fall back to the dim itself
+    (all model dims are powers of two >= 8).
+    """
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+#: VMEM budget for one grid cell's resident blocks (A, B and the output
+#: accumulator). Real TPU cores have ~16 MiB of VMEM; budgeting half
+#: leaves room for double buffering of the HBM->VMEM pipeline.
+VMEM_BUDGET_BYTES = 8 * 2**20
+
+
+def pick_blocks(m: int, k: int, n: int, budget: int = VMEM_BUDGET_BYTES):
+    """Choose (bm, bn, bk) minimizing grid steps under the VMEM budget.
+
+    Fewer, larger blocks win twice: on TPU they amortize the HBM<->VMEM
+    transfers per MXU pass; under interpret=True they collapse the
+    lowered grid while-loop (the perf pass measured 52 ms -> 0.7 ms on
+    the autoencoder's (32,4096)@(4096,256) layer by growing bk from 128
+    to the full K). Greedy order: maximize bk (kills the accumulator
+    loop), then bn, then bm.
+    """
+
+    def fits(bm, bn, bk):
+        return 4 * (bm * bk + bk * bn + bm * bn) <= budget
+
+    bm, bn, bk = _pick_block(m, 256), 1, 1
+    # Largest power-of-two divisor of `dim` that keeps us within budget.
+    def grow(dim, cur_fits):
+        b = dim
+        while b > 1 and not cur_fits(b):
+            b //= 2
+            while dim % b != 0 and b > 1:
+                b //= 2
+        return max(b, 1)
+
+    bk = grow(k, lambda b: fits(bm, 1, b))
+    bn = grow(n, lambda b: fits(bm, b, bk))
+    if not fits(bm, bn, bk):
+        bm = grow(m, lambda b: fits(b, bn, bk))
+    return bm, bn, bk
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Grid = (M/bm, N/bn, K/bk); k is the innermost (minor) grid dim.
+
+    The output block index map ignores k, so the same VMEM output block
+    is revisited across the k loop and serves as the accumulator —
+    the Pallas analogue of a shared-memory accumulator tile.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas_raw(a, b, bm=None, bn=None, bk=None):
+    """Raw pallas_call wrapper: (M,K) @ (K,N) -> (M,N), fp32 accumulate."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    if bm is None and bn is None and bk is None:
+        bm, bn, bk = pick_blocks(m, k, n)
+    else:
+        bm = bm or _pick_block(m)
+        bn = bn or _pick_block(n)
+        bk = bk or _pick_block(k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Differentiable blocked matmul; fwd and bwd all run on the L1 kernel."""
+    return matmul_pallas_raw(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_pallas_raw(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    da = matmul_pallas_raw(g, b.T)
+    db = matmul_pallas_raw(a.T, g)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every L1 kernel (the correctness contract).
+
+These are deliberately written in the most direct vectorized style, with
+no blocking or Pallas constructs, so that a mismatch localizes the bug
+to the kernel's tiling/index maps.
+"""
+
+import jax.numpy as jnp
+
+SOFTENING = 1e-6
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def pairwise_dist2_ref(coords):
+    disp = coords[:, None, :] - coords[None, :, :]
+    return jnp.sum(disp * disp, axis=-1)
+
+
+def contact_map_ref(coords, threshold=1.6):
+    d2 = pairwise_dist2_ref(coords)
+    return (d2 < threshold * threshold).astype(jnp.float32)
+
+
+def lj_forces_ref(coords, cutoff=3.0):
+    n = coords.shape[0]
+    disp = coords[:, None, :] - coords[None, :, :]  # (n, n, 3)
+    d2 = jnp.sum(disp * disp, axis=-1)
+    eye = jnp.eye(n, dtype=bool)
+    within = d2 < cutoff * cutoff
+    r2inv = 1.0 / (d2 + SOFTENING)
+    r6inv = r2inv ** 3
+    mag = 24.0 * (2.0 * r6inv * r6inv - r6inv) * r2inv
+    mag = jnp.where(eye | ~within, 0.0, mag)
+    return jnp.sum(mag[:, :, None] * disp, axis=1)
+
+
+def lj_energy_ref(coords, cutoff=3.0):
+    n = coords.shape[0]
+    d2 = pairwise_dist2_ref(coords)
+    eye = jnp.eye(n, dtype=bool)
+    within = d2 < cutoff * cutoff
+    r2inv = 1.0 / (d2 + SOFTENING)
+    r6inv = r2inv ** 3
+    e = 4.0 * (r6inv * r6inv - r6inv)
+    e = jnp.where(eye | ~within, 0.0, e)
+    return 0.5 * jnp.sum(e)

@@ -1,0 +1,197 @@
+"""L2: the JAX compute graphs behind DeepDriveMD's four task types.
+
+DeepDriveMD (Brace et al., IPDPS 2022) couples MD simulation with a
+convolutional variational autoencoder over contact maps. Our reproduction
+uses the same pipeline shape with TPU-friendly stand-ins:
+
+  Simulation  -> ``md_step``:       velocity-Verlet Lennard-Jones dynamics
+                                    (forces from the L1 ``lj_forces`` kernel)
+  Aggregation -> ``frame_features``: contact-map featurization of a frame
+                                    (L1 ``pairwise_dist2`` kernel)
+  Training    -> ``ae_train_step``: one SGD step of an MLP autoencoder whose
+                                    dense layers run on the L1 ``matmul``
+                                    kernel fwd AND bwd (custom_vjp)
+  Inference   -> ``ae_infer``:      per-sample reconstruction error
+                (``ae_encode``)     / latent embedding
+
+Everything here is lowered ONCE by ``aot.py`` to HLO text and executed
+from the Rust coordinator via PJRT. Python never runs at workflow time.
+
+Model dimensions (defaults): N_ATOMS=64 atoms -> 64x64 contact map ->
+flattened 4096 -> 256 -> LATENT=16 -> 256 -> 4096. All powers of two so
+the Pallas block pickers tile exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul, pairwise_dist2, contact_map
+from .kernels.lj import lj_forces
+from .kernels.ref import SOFTENING
+
+# ---------------------------------------------------------------------------
+# Default model geometry
+# ---------------------------------------------------------------------------
+
+N_ATOMS = 64
+INPUT_DIM = N_ATOMS * N_ATOMS  # flattened contact map
+HIDDEN_DIM = 256
+LATENT_DIM = 16
+BATCH = 32
+MD_SUBSTEPS = 10
+DT = 1e-3
+CONTACT_THRESHOLD = 1.6
+LJ_CUTOFF = 3.0
+
+#: Parameter layout, in the exact order the AOT entry points take them.
+PARAM_SHAPES = (
+    ("w1", (INPUT_DIM, HIDDEN_DIM)),
+    ("b1", (HIDDEN_DIM,)),
+    ("w2", (HIDDEN_DIM, LATENT_DIM)),
+    ("b2", (LATENT_DIM,)),
+    ("w3", (LATENT_DIM, HIDDEN_DIM)),
+    ("b3", (HIDDEN_DIM,)),
+    ("w4", (HIDDEN_DIM, INPUT_DIM)),
+    ("b4", (INPUT_DIM,)),
+)
+
+
+def init_params(key):
+    """He-initialized autoencoder parameters as a flat tuple of arrays."""
+    params = []
+    for _name, shape in PARAM_SHAPES:
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+# ---------------------------------------------------------------------------
+# Autoencoder (Training / Inference task bodies)
+# ---------------------------------------------------------------------------
+
+
+def _dense(x, w, b):
+    """Dense layer on the L1 blocked-matmul kernel."""
+    return matmul(x, w) + b
+
+
+def ae_forward(params, x):
+    """Full autoencoder forward: returns (reconstruction, latent)."""
+    w1, b1, w2, b2, w3, b3, w4, b4 = params
+    h = jnp.tanh(_dense(x, w1, b1))
+    z = _dense(h, w2, b2)  # latent, linear
+    h2 = jnp.tanh(_dense(z, w3, b3))
+    recon = _dense(h2, w4, b4)  # linear output (inputs are {0,1} maps)
+    return recon, z
+
+
+def ae_loss(params, x):
+    """Mean-squared reconstruction error over the batch."""
+    recon, _ = ae_forward(params, x)
+    return jnp.mean((recon - x) ** 2)
+
+
+def ae_train_step(params, x, lr):
+    """One SGD step. Returns (new_params..., loss).
+
+    Gradients flow through the Pallas matmul via its custom_vjp, so the
+    backward pass also runs on the L1 kernel.
+    """
+    loss, grads = jax.value_and_grad(ae_loss)(params, x)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return new_params + (loss,)
+
+
+def ae_infer(params, x):
+    """Per-sample reconstruction error — DeepDriveMD's outlier score."""
+    recon, _ = ae_forward(params, x)
+    return jnp.mean((recon - x) ** 2, axis=1)
+
+
+def ae_encode(params, x):
+    """Latent embedding of a batch (used for novelty analysis)."""
+    _, z = ae_forward(params, x)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# Molecular dynamics (Simulation task body)
+# ---------------------------------------------------------------------------
+
+
+def lj_energy(coords, cutoff=LJ_CUTOFF):
+    """Total LJ potential energy, distances from the L1 distance kernel."""
+    n = coords.shape[0]
+    d2 = pairwise_dist2(coords)
+    eye = jnp.eye(n, dtype=bool)
+    within = d2 < cutoff * cutoff
+    r2inv = 1.0 / (d2 + SOFTENING)
+    r6inv = r2inv ** 3
+    e = 4.0 * (r6inv * r6inv - r6inv)
+    e = jnp.where(eye | ~within, 0.0, e)
+    return 0.5 * jnp.sum(e)
+
+
+def md_step(coords, vels, substeps=MD_SUBSTEPS, dt=DT):
+    """``substeps`` velocity-Verlet LJ steps (mass = 1, reduced units).
+
+    Returns (coords', vels', potential_energy) — one "Simulation" work
+    quantum. The Rust Simulation task invokes this repeatedly, saving a
+    contact-map frame per call.
+    """
+
+    def body(state, _):
+        x, v = state
+        f = lj_forces(x)
+        v_half = v + 0.5 * dt * f
+        x_new = x + dt * v_half
+        f_new = lj_forces(x_new)
+        v_new = v_half + 0.5 * dt * f_new
+        return (x_new, v_new), None
+
+    (coords, vels), _ = jax.lax.scan(body, (coords, vels), None, length=substeps)
+    return coords, vels, lj_energy(coords)
+
+
+def frame_features(coords, threshold=CONTACT_THRESHOLD):
+    """Aggregation featurization: frame -> flattened contact map row."""
+    return contact_map(coords, threshold=threshold).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (flat-argument signatures for the Rust side)
+# ---------------------------------------------------------------------------
+# The Rust runtime feeds xla::Literal positional arguments; keep these
+# flat (no pytrees) and return tuples.
+
+
+def entry_md_step(coords, vels):
+    return md_step(coords, vels)
+
+
+def entry_contact_map(coords):
+    return (frame_features(coords),)
+
+
+def entry_ae_train(w1, b1, w2, b2, w3, b3, w4, b4, x, lr):
+    return ae_train_step((w1, b1, w2, b2, w3, b3, w4, b4), x, lr)
+
+
+def entry_ae_infer(w1, b1, w2, b2, w3, b3, w4, b4, x):
+    return (ae_infer((w1, b1, w2, b2, w3, b3, w4, b4), x),)
+
+
+def entry_ae_encode(w1, b1, w2, b2, w3, b3, w4, b4, x):
+    return (ae_encode((w1, b1, w2, b2, w3, b3, w4, b4), x),)
+
+
+def entry_sanity(x, y):
+    """Tiny smoke computation for runtime integration tests."""
+    return (jnp.matmul(x, y) + 2.0,)

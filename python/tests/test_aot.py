@@ -1,0 +1,68 @@
+"""AOT pipeline tests: entry-point metadata, manifest consistency, and
+HLO-text stability (the exact contract the Rust runtime consumes)."""
+
+import hashlib
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return aot.entry_points()
+
+
+def test_every_entry_lowerable_to_hlo_text(entries, tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    for name, fn, args in entries:
+        meta = aot.lower_one(name, fn, args, str(out))
+        hlo_path = out / f"{name}.hlo.txt"
+        assert hlo_path.exists()
+        text = hlo_path.read_text()
+        # HLO text (not a serialized proto): module header present.
+        assert text.lstrip().startswith("HloModule"), name
+        assert meta["hlo_bytes"] == len(text)
+        assert meta["hlo_sha256"] == hashlib.sha256(text.encode()).hexdigest()
+        # ENTRY computation exists and it is a tuple return
+        # (return_tuple=True contract relied on by runtime/mod.rs).
+        assert "ENTRY" in text, name
+
+
+def test_metadata_shapes_match_eval_shape(entries, tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts2")
+    for name, fn, args in entries:
+        meta = aot.lower_one(name, fn, args, str(out))
+        sidecar = json.loads((out / f"{name}.meta.json").read_text())
+        assert sidecar == meta
+        shape_tree = jax.eval_shape(fn, *args)
+        leaves = jax.tree_util.tree_leaves(shape_tree)
+        assert len(sidecar["results"]) == len(leaves), name
+        for rec, leaf in zip(sidecar["results"], leaves):
+            assert rec["shape"] == list(leaf.shape), name
+
+
+def test_manifest_written_by_repo_build():
+    """If the repo's artifacts/ exists, its manifest must be coherent."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("run `make artifacts` first")
+    manifest = json.load(open(manifest_path))
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert {"md_step", "contact_map", "ae_train", "ae_infer", "sanity"} <= names
+    for a in manifest["artifacts"]:
+        hlo = open(os.path.join(art, f"{a['name']}.hlo.txt")).read()
+        assert hashlib.sha256(hlo.encode()).hexdigest() == a["hlo_sha256"], a["name"]
+    m = manifest["model"]
+    assert m["input_dim"] == m["n_atoms"] ** 2
+    assert m["param_order"] == [n for n, _ in model.PARAM_SHAPES]
+
+
+def test_ae_train_entry_argcount_matches_params():
+    _, _, args = next(e for e in aot.entry_points() if e[0] == "ae_train")
+    # 8 params + batch + lr
+    assert len(args) == len(model.PARAM_SHAPES) + 2

@@ -1,0 +1,58 @@
+"""Property tests for the VMEM-budgeted block chooser (the §Perf L1
+optimization): blocks must always divide the dims, respect the budget,
+and never regress correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import (
+    matmul_pallas_raw,
+    pick_blocks,
+    VMEM_BUDGET_BYTES,
+)
+from compile.kernels import ref
+
+
+@given(
+    mexp=st.integers(0, 12),
+    kexp=st.integers(0, 13),
+    nexp=st.integers(0, 12),
+)
+@settings(max_examples=200, deadline=None)
+def test_pick_blocks_divides_and_fits(mexp, kexp, nexp):
+    m, k, n = 2**mexp, 2**kexp, 2**nexp
+    bm, bn, bk = pick_blocks(m, k, n)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    assert 4 * (bm * bk + bk * bn + bm * bn) <= VMEM_BUDGET_BYTES or (
+        bm == 1 and bn == 1 and bk == 1
+    )
+
+
+@given(
+    mexp=st.integers(0, 6),
+    kexp=st.integers(0, 8),
+    nexp=st.integers(0, 6),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=15, deadline=None)
+def test_budgeted_blocks_match_ref(mexp, kexp, nexp, seed):
+    m, k, n = 2**mexp, 2**kexp, 2**nexp
+    a = jax.random.normal(jax.random.PRNGKey(seed), (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n), jnp.float32)
+    got = matmul_pallas_raw(a, b)  # uses pick_blocks
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-3, atol=1e-3)
+
+
+def test_model_layer_shapes_get_single_grid_cell():
+    # The autoencoder's big layers collapse to a loop-free grid.
+    bm, bn, bk = pick_blocks(32, 4096, 256)
+    assert bk == 4096, "k-loop eliminated for the (32,4096)@(4096,256) layer"
+    assert (32 // bm) * (256 // bn) * (4096 // bk) <= 2
+
+
+def test_huge_dims_still_tile():
+    bm, bn, bk = pick_blocks(8192, 8192, 8192)
+    assert 4 * (bm * bk + bk * bn + bm * bn) <= VMEM_BUDGET_BYTES
+    assert bm >= 1 and bn >= 1 and bk >= 1

@@ -1,0 +1,194 @@
+"""L2 model correctness: autoencoder training dynamics, MD physics,
+entry-point shapes (the contract the Rust runtime relies on)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+from compile.kernels import ref
+
+
+def key(i=0):
+    return jax.random.PRNGKey(i)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return m.init_params(key(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    # Sparse binary contact-map-like batch.
+    u = jax.random.uniform(key(1), (m.BATCH, m.INPUT_DIM))
+    return (u < 0.15).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Autoencoder
+# ---------------------------------------------------------------------------
+
+
+def test_init_params_shapes(params):
+    assert len(params) == len(m.PARAM_SHAPES)
+    for p, (_n, shape) in zip(params, m.PARAM_SHAPES):
+        assert p.shape == shape
+        assert p.dtype == jnp.float32
+
+
+def test_forward_shapes(params, batch):
+    recon, z = m.ae_forward(params, batch)
+    assert recon.shape == (m.BATCH, m.INPUT_DIM)
+    assert z.shape == (m.BATCH, m.LATENT_DIM)
+
+
+def test_loss_finite_positive(params, batch):
+    loss = m.ae_loss(params, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+
+def test_train_step_decreases_loss(params, batch):
+    """A few SGD steps must strictly reduce reconstruction error."""
+    p = params
+    losses = []
+    for _ in range(5):
+        out = m.ae_train_step(p, batch, 0.05)
+        p, loss = tuple(out[:-1]), float(out[-1])
+        losses.append(loss)
+    assert losses[-1] < losses[0], f"loss did not improve: {losses}"
+
+
+def test_train_step_grad_matches_pure_jnp(params, batch):
+    """Gradients via the Pallas custom_vjp == gradients of a pure-jnp AE."""
+
+    def pure_forward(params, x):
+        w1, b1, w2, b2, w3, b3, w4, b4 = params
+        h = jnp.tanh(ref.matmul_ref(x, w1) + b1)
+        z = ref.matmul_ref(h, w2) + b2
+        h2 = jnp.tanh(ref.matmul_ref(z, w3) + b3)
+        return ref.matmul_ref(h2, w4) + b4
+
+    def pure_loss(params, x):
+        return jnp.mean((pure_forward(params, x) - x) ** 2)
+
+    g_kernel = jax.grad(m.ae_loss)(params, batch)
+    g_pure = jax.grad(pure_loss)(params, batch)
+    for gk, gp, (name, _) in zip(g_kernel, g_pure, m.PARAM_SHAPES):
+        np.testing.assert_allclose(
+            gk, gp, rtol=1e-3, atol=1e-4, err_msg=f"grad mismatch for {name}"
+        )
+
+
+def test_infer_scores_shape_and_outliers(params, batch):
+    scores = m.ae_infer(params, batch)
+    assert scores.shape == (m.BATCH,)
+    assert np.isfinite(np.asarray(scores)).all()
+    # A corrupted sample must score worse than the batch it was drawn from.
+    trained = params
+    for _ in range(30):
+        out = m.ae_train_step(trained, batch, 0.05)
+        trained = tuple(out[:-1])
+    corrupted = batch.at[0].set(1.0 - batch[0])
+    s = np.asarray(m.ae_infer(trained, corrupted))
+    assert s[0] > np.median(s[1:])
+
+
+def test_encode_shape(params, batch):
+    z = m.ae_encode(params, batch)
+    assert z.shape == (m.BATCH, m.LATENT_DIM)
+
+
+# ---------------------------------------------------------------------------
+# Molecular dynamics
+# ---------------------------------------------------------------------------
+
+
+def _lattice(n=m.N_ATOMS, spacing=1.2):
+    side = int(np.ceil(n ** (1 / 3)))
+    pts = [
+        (i * spacing, j * spacing, k * spacing)
+        for i in range(side)
+        for j in range(side)
+        for k in range(side)
+    ]
+    return jnp.asarray(pts[:n], jnp.float32)
+
+
+def test_md_step_shapes():
+    c0, v0 = _lattice(), jnp.zeros((m.N_ATOMS, 3), jnp.float32)
+    c, v, e = m.md_step(c0, v0)
+    assert c.shape == (m.N_ATOMS, 3) and v.shape == (m.N_ATOMS, 3)
+    assert e.shape == ()
+
+
+def test_md_energy_conservation():
+    """Velocity-Verlet at small dt: total energy drift stays small."""
+    c = _lattice()
+    v = jax.random.normal(key(2), c.shape, jnp.float32) * 0.05
+
+    def total_energy(c, v):
+        return float(m.lj_energy(c)) + 0.5 * float(jnp.sum(v * v))
+
+    e0 = total_energy(c, v)
+    for _ in range(10):
+        c, v, _pe = m.md_step(c, v, substeps=10, dt=1e-3)
+    e1 = total_energy(c, v)
+    assert abs(e1 - e0) / max(abs(e0), 1e-6) < 0.05, (e0, e1)
+
+
+def test_md_momentum_conservation():
+    c = _lattice()
+    v = jax.random.normal(key(3), c.shape, jnp.float32) * 0.05
+    p0 = np.asarray(jnp.sum(v, axis=0))
+    for _ in range(5):
+        c, v, _ = m.md_step(c, v)
+    p1 = np.asarray(jnp.sum(v, axis=0))
+    np.testing.assert_allclose(p0, p1, atol=1e-3)
+
+
+def test_md_moves_particles():
+    c = _lattice()
+    v = jax.random.normal(key(4), c.shape, jnp.float32) * 0.1
+    c2, _, _ = m.md_step(c, v)
+    assert float(jnp.max(jnp.abs(c2 - c))) > 0
+
+
+def test_frame_features_binary_flat():
+    feats = m.frame_features(_lattice())
+    assert feats.shape == (m.INPUT_DIM,)
+    vals = set(np.unique(np.asarray(feats)))
+    assert vals <= {0.0, 1.0}
+
+
+# ---------------------------------------------------------------------------
+# Entry points (the AOT contract)
+# ---------------------------------------------------------------------------
+
+
+def test_entry_signatures_match_aot_metadata():
+    from compile.aot import entry_points
+
+    for name, fn, args in entry_points():
+        out = jax.eval_shape(fn, *args)
+        leaves = jax.tree_util.tree_leaves(out)
+        assert len(leaves) >= 1, name
+        for leaf in leaves:
+            assert leaf.dtype == jnp.float32, (name, leaf.dtype)
+
+
+def test_entry_sanity_value():
+    x = jnp.asarray([[1.0, 2.0], [3.0, 4.0]], jnp.float32)
+    y = jnp.ones((2, 2), jnp.float32)
+    (out,) = m.entry_sanity(x, y)
+    np.testing.assert_allclose(
+        np.asarray(out), [[5.0, 5.0], [9.0, 9.0]], rtol=1e-6
+    )
+
+
+def test_entry_ae_train_roundtrip_types(params, batch):
+    out = m.entry_ae_train(*params, batch, jnp.float32(0.01))
+    assert len(out) == len(params) + 1
+    for new_p, old_p in zip(out[:-1], params):
+        assert new_p.shape == old_p.shape

@@ -1,0 +1,18 @@
+//! Regenerates Fig. 4 (DDMD utilization timelines, experiment E4) and
+//! times trace construction. `cargo bench --bench bench_fig4_ddmd`
+
+use asyncflow::experiments::{experiment_workflows, run_figure};
+use asyncflow::util::bench::{bench, report, report_header};
+
+fn main() {
+    let (wf, cluster) = experiment_workflows().remove(0);
+    let art = run_figure("fig4", &wf, &cluster, 42, Some(std::path::Path::new("results")))
+        .expect("figure generation");
+    println!("{art}");
+    println!("CSV written to results/fig4_*.csv\n");
+    report_header();
+    let r = bench("fig4 generate (2 sims + traces)", 1, 5, || {
+        let _ = run_figure("fig4", &wf, &cluster, 42, None).unwrap();
+    });
+    report(&r);
+}

@@ -1,0 +1,18 @@
+//! Regenerates Fig. 4 (c-DG1 utilization timelines, experiment E5) and
+//! times trace construction. `cargo bench --bench bench_fig5_cdg1`
+
+use asyncflow::experiments::{experiment_workflows, run_figure};
+use asyncflow::util::bench::{bench, report, report_header};
+
+fn main() {
+    let (wf, cluster) = experiment_workflows().remove(1);
+    let art = run_figure("fig5", &wf, &cluster, 42, Some(std::path::Path::new("results")))
+        .expect("figure generation");
+    println!("{art}");
+    println!("CSV written to results/fig5_*.csv\n");
+    report_header();
+    let r = bench("fig5 generate (2 sims + traces)", 1, 5, || {
+        let _ = run_figure("fig5", &wf, &cluster, 42, None).unwrap();
+    });
+    report(&r);
+}

@@ -1,0 +1,95 @@
+//! L1/L2 perf: PJRT artifact execution latency and throughput
+//! (compile-once cache, autoencoder train step, MD step, inference).
+//! Requires `make artifacts`. `cargo bench --bench bench_runtime`
+
+use asyncflow::runtime::{Engine, Tensor};
+use asyncflow::util::bench::{bench, report, report_header};
+use asyncflow::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+}
+
+fn main() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        return;
+    }
+    let mut eng = Engine::open(artifacts_dir()).expect("engine");
+    println!("platform: {}", eng.platform());
+    let mut rng = Rng::new(1);
+
+    // Model geometry from the manifest side.
+    let n_atoms = 64usize;
+    let input_dim = n_atoms * n_atoms;
+    let batch = 32usize;
+
+    let coords = Tensor::from_vec(
+        (0..n_atoms * 3).map(|_| rng.f64() as f32 * 3.0).collect(),
+        &[n_atoms, 3],
+    )
+    .unwrap();
+    let vels = Tensor::zeros(&[n_atoms, 3]);
+
+    // Parameters (He-ish random).
+    let dims: [(usize, usize); 4] = [(input_dim, 256), (256, 16), (16, 256), (256, input_dim)];
+    let mut params = Vec::new();
+    for (i, o) in dims {
+        params.push(Tensor::from_vec(
+            (0..i * o).map(|_| (rng.normal() * (2.0 / i as f64).sqrt()) as f32).collect(),
+            &[i, o],
+        )
+        .unwrap());
+        params.push(Tensor::zeros(&[o]));
+    }
+    let x = Tensor::from_vec(
+        (0..batch * input_dim).map(|_| if rng.f64() < 0.15 { 1.0 } else { 0.0 }).collect(),
+        &[batch, input_dim],
+    )
+    .unwrap();
+
+    report_header();
+
+    // Compile cost (first call) vs cached execution.
+    let t0 = std::time::Instant::now();
+    eng.ensure_compiled("ae_train").unwrap();
+    println!("ae_train compile (cold): {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+
+    let mut train_in: Vec<Tensor> = params.clone();
+    train_in.push(x.clone());
+    train_in.push(Tensor::scalar(0.05));
+    let r = bench("ae_train step (batch 32, 4096-256-16 AE)", 3, 20, || {
+        let out = eng.execute("ae_train", &train_in).unwrap();
+        std::hint::black_box(out[8].data[0]);
+    });
+    report(&r);
+    let flops = 2.0 * batch as f64 * (dims.iter().map(|(i, o)| i * o).sum::<usize>() as f64) * 3.0;
+    println!(
+        "    -> {:.1} samples/s, ~{:.2} GFLOP/s effective",
+        batch as f64 / r.secs.mean,
+        flops / r.secs.mean / 1e9
+    );
+
+    let mut infer_in: Vec<Tensor> = params.clone();
+    infer_in.push(x.clone());
+    let r = bench("ae_infer (batch 32)", 3, 30, || {
+        let out = eng.execute("ae_infer", &infer_in).unwrap();
+        std::hint::black_box(out[0].data[0]);
+    });
+    report(&r);
+
+    let r = bench("md_step (64 atoms x 10 substeps)", 3, 30, || {
+        let out = eng.execute("md_step", &[coords.clone(), vels.clone()]).unwrap();
+        std::hint::black_box(out[2].data[0]);
+    });
+    report(&r);
+
+    let r = bench("contact_map (64 atoms)", 3, 30, || {
+        let out = eng.execute("contact_map", &[coords.clone()]).unwrap();
+        std::hint::black_box(out[0].data[0]);
+    });
+    report(&r);
+
+    let (compiles, execs) = (eng.compiles, eng.executions);
+    println!("\ncompile cache: {compiles} compiles for {execs} executions");
+}

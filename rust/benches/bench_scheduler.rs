@@ -1,0 +1,87 @@
+//! L3 perf microbenchmarks: scheduler placement throughput, allocator
+//! alloc/release, event-queue ops, end-to-end engine events/s.
+//! `cargo bench --bench bench_scheduler`
+
+use asyncflow::engine::{simulate_cfg, EngineConfig, ExecutionMode};
+use asyncflow::pilot::{Policy, QueuedTask, Scheduler};
+use asyncflow::resources::{Allocator, ClusterSpec, ResourceRequest};
+use asyncflow::sim::EventQueue;
+use asyncflow::util::bench::{bench, report, report_header};
+use asyncflow::util::rng::Rng;
+use asyncflow::workflows::random_workflow;
+
+fn main() {
+    report_header();
+
+    // --- allocator ----------------------------------------------------
+    let cluster = ClusterSpec::summit_paper();
+    let r = bench("allocator: 96 gpu-task alloc+release", 10, 200, || {
+        let mut a = Allocator::new(&cluster);
+        let mut ps = Vec::with_capacity(96);
+        for _ in 0..96 {
+            ps.push(a.try_alloc(&ResourceRequest::new(4, 1)).unwrap());
+        }
+        for p in &ps {
+            a.release(p);
+        }
+        std::hint::black_box(a.free_gpus());
+    });
+    let per_op = r.secs.mean / 192.0;
+    report(&r);
+    println!("    -> {:.0} alloc/release ops/s", 1.0 / per_op);
+
+    // --- scheduler ----------------------------------------------------
+    for policy in [Policy::FifoBackfill, Policy::PipelineAge, Policy::SmallestFirst] {
+        let r = bench(&format!("scheduler: drain 1000 tasks ({policy:?})"), 5, 50, || {
+            let mut s = Scheduler::new(policy);
+            let mut rng = Rng::new(1);
+            for uid in 0..1000 {
+                s.push(QueuedTask {
+                    uid,
+                    req: ResourceRequest::new(1 + rng.below(8) as u32, (rng.below(2)) as u32),
+                    priority: rng.below(4),
+                    submitted_at: rng.f64(),
+                });
+            }
+            let mut a = Allocator::new(&cluster);
+            let placed = s.drain_schedulable(&mut a);
+            std::hint::black_box(placed.len());
+        });
+        report(&r);
+        println!("    -> {:.0} scheduling decisions/s", 1000.0 / r.secs.mean);
+    }
+
+    // --- event queue ----------------------------------------------------
+    let r = bench("event queue: 100k push+pop", 2, 20, || {
+        let mut q = EventQueue::new();
+        let mut rng = Rng::new(2);
+        for uid in 0..100_000usize {
+            q.push(rng.f64() * 1e6, uid);
+        }
+        let mut last = 0.0;
+        while let Some((t, _)) = q.pop() {
+            last = t;
+        }
+        std::hint::black_box(last);
+    });
+    report(&r);
+    println!("    -> {:.2} M events/s", 0.2 / r.secs.mean / 1e6 * 1e6 / 1e6 * 100.0);
+    println!("    -> {:.2} M push+pop pairs/s", 0.1 / r.secs.mean);
+
+    // --- whole engine ---------------------------------------------------
+    let mut rng = Rng::new(3);
+    let wf = random_workflow(&mut rng, 6, 4);
+    let tasks: u64 = wf.total_tasks();
+    let cfg = EngineConfig::default();
+    let r = bench(
+        &format!("engine: random workflow ({tasks} tasks) async sim"),
+        3,
+        30,
+        || {
+            let rep = simulate_cfg(&wf, &cluster, ExecutionMode::Asynchronous, &cfg);
+            std::hint::black_box(rep.makespan);
+        },
+    );
+    report(&r);
+    println!("    -> {:.0} simulated tasks/s", tasks as f64 / r.secs.mean);
+}

@@ -1,0 +1,47 @@
+//! Regenerates Table 3 (experiments E1–E3) and times the simulation
+//! engine on each workflow. `cargo bench --bench bench_table3`
+
+use asyncflow::engine::{simulate_cfg, ExecutionMode};
+use asyncflow::experiments::{
+    check_shapes, experiment_workflows, paper_engine_config, render_table3, run_table3,
+};
+use asyncflow::util::bench::{bench, report, report_header};
+
+fn main() {
+    println!("# Table 3 reproduction (our values; paper's in parentheses)\n");
+    let rows = run_table3(42);
+    println!("{}", render_table3(&rows));
+    let problems = check_shapes(&rows);
+    if problems.is_empty() {
+        println!("shape check: OK\n");
+    } else {
+        println!("shape check FAILED: {problems:?}\n");
+        std::process::exit(1);
+    }
+
+    println!("# Seed sensitivity (I across 5 seeds)\n");
+    for (wf, cluster) in experiment_workflows() {
+        let mut is = Vec::new();
+        for seed in 0..5 {
+            let cfg = paper_engine_config(seed);
+            let seq = simulate_cfg(&wf, &cluster, ExecutionMode::Sequential, &cfg);
+            let asy = simulate_cfg(&wf, &cluster, ExecutionMode::Asynchronous, &cfg);
+            is.push(asy.improvement_over(&seq));
+        }
+        let mean = is.iter().sum::<f64>() / is.len() as f64;
+        let min = is.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = is.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        println!("  {:<16} I = {mean:+.3} (range {min:+.3} .. {max:+.3})", wf.name);
+    }
+
+    println!("\n# Engine wall-clock (simulating one full run)\n");
+    report_header();
+    for (wf, cluster) in experiment_workflows() {
+        let cfg = paper_engine_config(42);
+        let r = bench(&format!("simulate {} async", wf.name), 2, 10, || {
+            let rep = simulate_cfg(&wf, &cluster, ExecutionMode::Asynchronous, &cfg);
+            std::hint::black_box(rep.makespan);
+        });
+        report(&r);
+    }
+}

@@ -1,0 +1,259 @@
+//! Config system (substrate S18): JSON descriptions of clusters,
+//! workflows and engine settings, so experiments are reproducible from
+//! checked-in files (`configs/*.json`) rather than code edits.
+
+use std::path::Path;
+
+use crate::dag::Dag;
+use crate::engine::EngineConfig;
+use crate::entk::{Pipeline, Stage, Workflow};
+use crate::error::{Error, Result};
+use crate::pilot::Policy;
+use crate::resources::{ClusterSpec, NodeSpec, ResourceRequest};
+use crate::task::TaskSetSpec;
+use crate::util::json::{obj, Json};
+
+/// Load a cluster from JSON:
+/// `{"name": ..., "nodes": [{"cores": 168, "gpus": 6, "count": 16}]}`
+/// or `{"profile": "summit_paper"}`.
+pub fn cluster_from_json(v: &Json) -> Result<ClusterSpec> {
+    if let Some(p) = v.get("profile").as_str() {
+        return match p {
+            "summit_paper" => Ok(ClusterSpec::summit_paper()),
+            "summit_706" => Ok(ClusterSpec::summit_706()),
+            "summit_8gpu" => Ok(ClusterSpec::summit_8gpu()),
+            "local_small" => Ok(ClusterSpec::local_small()),
+            other => Err(Error::Config(format!("unknown cluster profile '{other}'"))),
+        };
+    }
+    let name = v.req_str("name")?.to_string();
+    let mut nodes = Vec::new();
+    for n in v.req_arr("nodes")? {
+        let count = n.get("count").as_u64().unwrap_or(1) as usize;
+        let spec = NodeSpec {
+            cores: n.req_f64("cores")? as u32,
+            gpus: n.get("gpus").as_u64().unwrap_or(0) as u32,
+        };
+        nodes.extend(std::iter::repeat(spec).take(count));
+    }
+    if nodes.is_empty() {
+        return Err(Error::Config("cluster has no nodes".into()));
+    }
+    Ok(ClusterSpec { name, nodes })
+}
+
+pub fn cluster_to_json(c: &ClusterSpec) -> Json {
+    obj([
+        ("name", Json::from(c.name.clone())),
+        (
+            "nodes",
+            Json::Arr(
+                c.nodes
+                    .iter()
+                    .map(|n| {
+                        obj([
+                            ("cores", Json::from(n.cores as usize)),
+                            ("gpus", Json::from(n.gpus as usize)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Load a workflow from JSON. Schema:
+/// ```json
+/// {
+///   "name": "wf",
+///   "sets": [{"name": "T0", "tasks": 4, "cores": 2, "gpus": 1,
+///             "tx": 30.0, "sigma": 0.05}],
+///   "edges": [["T0", "T1"]],
+///   "sequential": [[["T0"], ["T1"]]],
+///   "asynchronous": [[["T0"]], [["T1"]]]
+/// }
+/// ```
+/// (realizations = array of pipelines; pipeline = array of stages;
+/// stage = array of set names.)
+pub fn workflow_from_json(v: &Json) -> Result<Workflow> {
+    let name = v.req_str("name")?.to_string();
+    let mut dag = Dag::new();
+    let mut sets = Vec::new();
+    for s in v.req_arr("sets")? {
+        let sname = s.req_str("name")?.to_string();
+        dag.add_node(sname.clone());
+        let mut set = TaskSetSpec::new(
+            sname,
+            s.req_f64("tasks")? as u32,
+            ResourceRequest::new(
+                s.req_f64("cores")? as u32,
+                s.get("gpus").as_u64().unwrap_or(0) as u32,
+            ),
+            s.req_f64("tx")?,
+        );
+        if let Some(sig) = s.get("sigma").as_f64() {
+            set = set.with_sigma(sig);
+        }
+        sets.push(set);
+    }
+    for e in v.req_arr("edges")? {
+        let pair = e
+            .as_arr()
+            .ok_or_else(|| Error::Config("edge must be a 2-array".into()))?;
+        if pair.len() != 2 {
+            return Err(Error::Config("edge must be a 2-array".into()));
+        }
+        let find = |j: &Json| -> Result<usize> {
+            let n = j.as_str().ok_or_else(|| Error::Config("edge endpoint".into()))?;
+            dag.node_by_name(n)
+                .ok_or_else(|| Error::Config(format!("unknown set '{n}' in edge")))
+        };
+        dag.add_edge(find(&pair[0])?, find(&pair[1])?)?;
+    }
+    let parse_realization = |key: &str| -> Result<Vec<Pipeline>> {
+        let mut pipelines = Vec::new();
+        for (pi, p) in v.req_arr(key)?.iter().enumerate() {
+            let stages = p
+                .as_arr()
+                .ok_or_else(|| Error::Config("pipeline must be an array of stages".into()))?;
+            let mut pipe = Pipeline::new(format!("{name}-{key}-{pi}"));
+            for st in stages {
+                let names = st
+                    .as_arr()
+                    .ok_or_else(|| Error::Config("stage must be an array of names".into()))?;
+                let mut ids = Vec::new();
+                for n in names {
+                    let n = n.as_str().ok_or_else(|| Error::Config("set name".into()))?;
+                    ids.push(
+                        dag.node_by_name(n)
+                            .ok_or_else(|| Error::Config(format!("unknown set '{n}'")))?,
+                    );
+                }
+                pipe.stages.push(Stage::of(&ids));
+            }
+            pipelines.push(pipe);
+        }
+        Ok(pipelines)
+    };
+    let sequential = parse_realization("sequential")?;
+    let asynchronous = parse_realization("asynchronous")?;
+    let _ = parse_realization;
+    let wf = Workflow { name, sets, dag, sequential, asynchronous };
+    wf.validate()?;
+    Ok(wf)
+}
+
+/// Engine settings from JSON (all fields optional).
+pub fn engine_from_json(v: &Json) -> Result<EngineConfig> {
+    let mut cfg = EngineConfig::default();
+    if let Some(s) = v.get("seed").as_u64() {
+        cfg.seed = s;
+    }
+    if let Some(t) = v.get("task_overhead").as_f64() {
+        cfg.task_overhead = t;
+    }
+    if let Some(t) = v.get("stage_overhead").as_f64() {
+        cfg.stage_overhead = t;
+    }
+    if let Some(p) = v.get("policy").as_str() {
+        cfg.policy = match p {
+            "pipeline_age" => Policy::PipelineAge,
+            "fifo" => Policy::FifoBackfill,
+            "fifo_strict" => Policy::FifoStrict,
+            "smallest_first" => Policy::SmallestFirst,
+            other => return Err(Error::Config(format!("unknown policy '{other}'"))),
+        };
+    }
+    Ok(cfg)
+}
+
+/// Load `{workflow, cluster, engine}` from a config file.
+pub fn load_experiment(path: impl AsRef<Path>) -> Result<(Workflow, ClusterSpec, EngineConfig)> {
+    let text = std::fs::read_to_string(path.as_ref())?;
+    let v = Json::parse(&text)?;
+    let wf = workflow_from_json(&v.get("workflow").clone())?;
+    let cluster = cluster_from_json(&v.get("cluster").clone())?;
+    let engine = engine_from_json(&v.get("engine").clone())?;
+    Ok((wf, cluster, engine))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WF: &str = r#"{
+      "workflow": {
+        "name": "toy",
+        "sets": [
+          {"name": "A", "tasks": 2, "cores": 1, "tx": 10.0},
+          {"name": "B", "tasks": 2, "cores": 1, "gpus": 1, "tx": 5.0, "sigma": 0.0}
+        ],
+        "edges": [["A", "B"]],
+        "sequential": [[["A"], ["B"]]],
+        "asynchronous": [[["A"], ["B"]]]
+      },
+      "cluster": {"profile": "local_small"},
+      "engine": {"seed": 1, "policy": "fifo", "task_overhead": 0.0}
+    }"#;
+
+    #[test]
+    fn parses_full_experiment() {
+        let v = Json::parse(WF).unwrap();
+        let wf = workflow_from_json(&v.get("workflow").clone()).unwrap();
+        assert_eq!(wf.sets.len(), 2);
+        assert_eq!(wf.sets[1].req.gpus, 1);
+        assert_eq!(wf.sets[1].tx_sigma_frac, 0.0);
+        assert_eq!(wf.dag.parents(1), &[0]);
+        let c = cluster_from_json(&v.get("cluster").clone()).unwrap();
+        assert_eq!(c.name, "local-small");
+        let e = engine_from_json(&v.get("engine").clone()).unwrap();
+        assert_eq!(e.seed, 1);
+        assert_eq!(e.task_overhead, 0.0);
+    }
+
+    #[test]
+    fn cluster_inline_nodes() {
+        let v = Json::parse(
+            r#"{"name": "c", "nodes": [{"cores": 4, "gpus": 1, "count": 3}]}"#,
+        )
+        .unwrap();
+        let c = cluster_from_json(&v).unwrap();
+        assert_eq!(c.nodes.len(), 3);
+        assert_eq!(c.total_gpus(), 3);
+        // round-trip through cluster_to_json
+        let c2 = cluster_from_json(&cluster_to_json(&c)).unwrap();
+        assert_eq!(c2.total_cores(), c.total_cores());
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        for bad in [
+            r#"{"profile": "nope"}"#,
+            r#"{"name": "c", "nodes": []}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(cluster_from_json(&v).is_err(), "{bad}");
+        }
+        let v = Json::parse(r#"{"policy": "zzz"}"#).unwrap();
+        assert!(engine_from_json(&v).is_err());
+        // Workflow referencing an unknown set in an edge.
+        let v = Json::parse(
+            r#"{"name":"w","sets":[{"name":"A","tasks":1,"cores":1,"tx":1}],
+                "edges":[["A","Z"]],"sequential":[[["A"]]],"asynchronous":[[["A"]]]}"#,
+        )
+        .unwrap();
+        assert!(workflow_from_json(&v).is_err());
+    }
+
+    #[test]
+    fn load_experiment_from_file() {
+        let dir = std::env::temp_dir().join("asyncflow_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("exp.json");
+        std::fs::write(&p, WF).unwrap();
+        let (wf, c, e) = load_experiment(&p).unwrap();
+        assert_eq!(wf.name, "toy");
+        assert_eq!(c.nodes.len(), 2);
+        assert_eq!(e.seed, 1);
+    }
+}

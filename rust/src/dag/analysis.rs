@@ -1,0 +1,332 @@
+//! DOA_dep analysis (§5.1): independent-branch discovery, ranks,
+//! critical path.
+//!
+//! The paper defines the dependency-permitted degree of asynchronicity
+//! as *the number of independent execution branches minus 1*, with
+//! branches discovered by depth-first search. Operationally:
+//!
+//! - a linear chain is one branch (DOA_dep = 0, Fig. 2a);
+//! - every fork with out-degree d spawns d-1 additional branches
+//!   (Fig. 2b: 1 fork -> DOA_dep = 1; Fig. 2c: forks of 2,2,2 ->
+//!   DOA_dep = 4);
+//! - disconnected components are independent branches (Fig. 2d:
+//!   edge-less DG with n+1 nodes -> DOA_dep = n);
+//! - a join (in-degree > 1) merges paths: the join node and its
+//!   descendants continue the lowest-indexed contributing branch.
+//!
+//! `branches = #components + sum_v max(0, outdeg(v)-1)
+//!             - sum_v max(0, indeg(v)-1)`
+//! (floored at #components), and `DOA_dep = branches - 1`. Forks open
+//! diverging paths; joins merge them back (Fig. 3b: forks at T0 and T2
+//! open three paths, the T4/T5 -> T7 join closes one of the four raw
+//! segments, giving the paper's three independent branches). Branch
+//! *membership* per node is what the engine uses to measure concurrent
+//! branch activity from execution traces (§5.2); note the number of
+//! distinct membership segments can exceed the branch count when joins
+//! are present.
+
+use super::Dag;
+
+/// Per-node branch assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BranchDecomposition {
+    /// branch id for every node.
+    pub branch_of: Vec<usize>,
+    num_branches: usize,
+}
+
+impl BranchDecomposition {
+    pub fn count(&self) -> usize {
+        self.num_branches
+    }
+
+    /// Node lists per branch.
+    pub fn members(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![vec![]; self.num_branches];
+        for (v, &b) in self.branch_of.iter().enumerate() {
+            out[b].push(v);
+        }
+        out
+    }
+}
+
+/// Full dependency analysis of a workflow DG.
+#[derive(Debug, Clone)]
+pub struct DagAnalysis {
+    /// Breadth-first level of each node (max parent rank + 1).
+    pub ranks: Vec<usize>,
+    pub num_ranks: usize,
+    pub branches: BranchDecomposition,
+    /// The paper's DOA_dep = branches - 1.
+    pub doa_dep: usize,
+    /// Fork nodes (out-degree > 1).
+    pub forks: Vec<usize>,
+    /// Join nodes (in-degree > 1).
+    pub joins: Vec<usize>,
+}
+
+impl DagAnalysis {
+    pub fn of(dag: &Dag) -> DagAnalysis {
+        let order = dag
+            .topo_order()
+            .expect("Dag maintains acyclicity at insertion");
+
+        // Ranks: longest path from any root (standard BFS level for
+        // stage construction).
+        let mut ranks = vec![0usize; dag.len()];
+        for &v in &order {
+            for &p in dag.parents(v) {
+                ranks[v] = ranks[v].max(ranks[p] + 1);
+            }
+        }
+        let num_ranks = ranks.iter().max().map_or(0, |m| m + 1);
+
+        // Branch assignment by DFS: first child inherits the parent's
+        // branch, later children open new branches; joins keep the
+        // branch of their lowest-branch parent (processed in topo order
+        // so parents are assigned first).
+        let mut branch_of = vec![usize::MAX; dag.len()];
+        let mut next_branch = 0usize;
+        for &v in &order {
+            if branch_of[v] == usize::MAX {
+                if dag.parents(v).is_empty() {
+                    // Root of a component: new branch.
+                    branch_of[v] = next_branch;
+                    next_branch += 1;
+                } else {
+                    // Joins / non-first children handled below via parents;
+                    // if still unassigned here, inherit min parent branch.
+                    branch_of[v] = dag
+                        .parents(v)
+                        .iter()
+                        .map(|&p| branch_of[p])
+                        .min()
+                        .unwrap();
+                }
+            }
+            // Assign children: first unassigned child continues v's
+            // branch; every further unassigned child starts a new one.
+            let mut continued = false;
+            for &c in dag.children(v) {
+                if branch_of[c] != usize::MAX {
+                    continue;
+                }
+                if dag.in_degree(c) > 1 {
+                    // Join: defer to topo processing (min parent branch).
+                    continue;
+                }
+                if !continued {
+                    branch_of[c] = branch_of[v];
+                    continued = true;
+                } else {
+                    branch_of[c] = next_branch;
+                    next_branch += 1;
+                }
+            }
+        }
+
+        // Renumber branches densely in order of first appearance.
+        let mut remap = vec![usize::MAX; next_branch];
+        let mut dense = 0usize;
+        for &v in &order {
+            let b = branch_of[v];
+            if remap[b] == usize::MAX {
+                remap[b] = dense;
+                dense += 1;
+            }
+        }
+        for b in branch_of.iter_mut() {
+            *b = remap[*b];
+        }
+
+        // DOA_dep closed form: components + fork excess - join excess,
+        // floored at the component count.
+        let comp_count = dag
+            .components()
+            .iter()
+            .copied()
+            .max()
+            .map_or(0, |m| m + 1);
+        let fork_excess: usize = (0..dag.len())
+            .map(|v| dag.out_degree(v).saturating_sub(1))
+            .sum();
+        let join_excess: usize = (0..dag.len())
+            .map(|v| dag.in_degree(v).saturating_sub(1))
+            .sum();
+        let branches_closed_form =
+            (comp_count + fork_excess).saturating_sub(join_excess).max(comp_count);
+
+        let forks = (0..dag.len()).filter(|&v| dag.out_degree(v) > 1).collect();
+        let joins = (0..dag.len()).filter(|&v| dag.in_degree(v) > 1).collect();
+
+        DagAnalysis {
+            ranks,
+            num_ranks,
+            branches: BranchDecomposition { branch_of, num_branches: dense },
+            doa_dep: branches_closed_form.saturating_sub(1),
+            forks,
+            joins,
+        }
+    }
+
+    /// Nodes grouped by rank (stage construction for sequential mode).
+    pub fn rank_groups(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![vec![]; self.num_ranks];
+        for (v, &r) in self.ranks.iter().enumerate() {
+            out[r].push(v);
+        }
+        out
+    }
+
+    /// Critical path value given per-node durations: the longest
+    /// root-to-leaf duration sum (infinite-resource lower bound on TTX;
+    /// the Eqn. 3 "max over branches" generalizes this).
+    pub fn critical_path(&self, dag: &Dag, duration: &[f64]) -> f64 {
+        assert_eq!(duration.len(), dag.len());
+        let order = dag.topo_order().unwrap();
+        let mut best = vec![0.0f64; dag.len()];
+        let mut answer = 0.0f64;
+        for &v in &order {
+            let start = dag
+                .parents(v)
+                .iter()
+                .map(|&p| best[p])
+                .fold(0.0f64, f64::max);
+            best[v] = start + duration[v];
+            answer = answer.max(best[v]);
+        }
+        answer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::figures;
+    use crate::util::prop::check_bool;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn branch_count_matches_membership_everywhere() {
+        for dag in [
+            figures::chain(5),
+            figures::fig2b(),
+            figures::fig2c(),
+            figures::edgeless(4),
+        ] {
+            let a = DagAnalysis::of(&dag);
+            let distinct: std::collections::BTreeSet<_> =
+                a.branches.branch_of.iter().copied().collect();
+            assert_eq!(
+                distinct.len(),
+                a.branches.count(),
+                "branch ids must be dense for {dag:?}"
+            );
+            // No joins in the Fig. 2 graphs: membership == closed form.
+            assert_eq!(a.branches.count(), a.doa_dep + 1);
+        }
+    }
+
+    #[test]
+    fn fork_and_join_detection() {
+        let mut d = Dag::new();
+        let t: Vec<_> = (0..4).map(|i| d.add_node(format!("T{i}"))).collect();
+        d.add_edge(t[0], t[1]).unwrap();
+        d.add_edge(t[0], t[2]).unwrap();
+        d.add_edge(t[1], t[3]).unwrap();
+        d.add_edge(t[2], t[3]).unwrap(); // diamond
+        let a = DagAnalysis::of(&d);
+        assert_eq!(a.forks, vec![0]);
+        assert_eq!(a.joins, vec![3]);
+        // Fork (+1) cancels against join (-1): the paper's metric is
+        // conservative on diamonds (the transient T1 || T2 parallelism
+        // is still exploited by the adaptive engine mode).
+        assert_eq!(a.doa_dep, 0);
+        // Join node merges into the lower branch.
+        assert_eq!(a.branches.branch_of[3], a.branches.branch_of[1]);
+        // Membership still distinguishes the two diverging segments.
+        assert_eq!(a.branches.count(), 2);
+    }
+
+    #[test]
+    fn critical_path_chain_is_sum() {
+        let d = figures::chain(4);
+        let a = DagAnalysis::of(&d);
+        let cp = a.critical_path(&d, &[1.0, 2.0, 3.0, 4.0]);
+        assert!((cp - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn critical_path_fig2b_worked_example() {
+        // §5.3: t0=500, t1=t2=1000, t3=t5=2000, t4=4000.
+        // Critical path = t0 + max(1000+2000+2000, 1000+4000) = 5500.
+        let d = figures::fig2b();
+        let a = DagAnalysis::of(&d);
+        let cp = a.critical_path(&d, &[500.0, 1000.0, 1000.0, 2000.0, 4000.0, 2000.0]);
+        assert!((cp - 5500.0).abs() < 1e-12, "cp={cp}");
+    }
+
+    #[test]
+    fn rank_groups_partition_nodes() {
+        let d = figures::fig2c();
+        let a = DagAnalysis::of(&d);
+        let total: usize = a.rank_groups().iter().map(|g| g.len()).sum();
+        assert_eq!(total, d.len());
+    }
+
+    /// Property: on random forests (trees built by random parent
+    /// choice), branches == leaves, so DOA_dep == leaves - 1.
+    #[test]
+    fn property_tree_branches_equal_leaves() {
+        check_bool(
+            0x7EE5,
+            300,
+            |rng: &mut Rng, size| {
+                let n = 2 + size.0;
+                // parent[i] < i for i>=1 -> a random tree.
+                (1..n).map(|i| rng.below(i as u64) as usize).collect::<Vec<_>>()
+            },
+            |parents| {
+                let n = parents.len() + 1;
+                let mut d = Dag::new();
+                for i in 0..n {
+                    d.add_node(format!("T{i}"));
+                }
+                for (i, &p) in parents.iter().enumerate() {
+                    d.add_edge(p, i + 1).unwrap();
+                }
+                let a = DagAnalysis::of(&d);
+                a.branches.count() == d.leaves().len()
+                    && a.doa_dep == d.leaves().len() - 1
+            },
+        );
+    }
+
+    /// Property: DOA_dep is invariant to adding a chain prefix.
+    #[test]
+    fn property_chain_prefix_preserves_doa() {
+        check_bool(
+            0xC0DE,
+            100,
+            |rng: &mut Rng, size| {
+                let fanout = 1 + rng.below(1 + size.0 as u64) as usize;
+                let prefix = 1 + rng.below(4) as usize;
+                (prefix, fanout)
+            },
+            |&(prefix, fanout)| {
+                // chain of `prefix` then fork into `fanout` leaves.
+                let mut d = Dag::new();
+                for i in 0..prefix + fanout {
+                    d.add_node(format!("T{i}"));
+                }
+                for i in 1..prefix {
+                    d.add_edge(i - 1, i).unwrap();
+                }
+                for f in 0..fanout {
+                    d.add_edge(prefix - 1, prefix + f).unwrap();
+                }
+                DagAnalysis::of(&d).doa_dep == fanout - 1
+            },
+        );
+    }
+}

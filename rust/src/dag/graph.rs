@@ -1,0 +1,318 @@
+//! The DAG container: adjacency lists, validation, topological order,
+//! Graphviz export.
+
+use std::collections::BTreeSet;
+
+use crate::error::{Error, Result};
+
+/// A directed acyclic graph over task-set nodes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Dag {
+    names: Vec<String>,
+    /// children[v] = nodes depending on v.
+    children: Vec<Vec<usize>>,
+    /// parents[v] = dependencies of v.
+    parents: Vec<Vec<usize>>,
+}
+
+impl Dag {
+    pub fn new() -> Dag {
+        Dag::default()
+    }
+
+    pub fn add_node(&mut self, name: impl Into<String>) -> usize {
+        self.names.push(name.into());
+        self.children.push(vec![]);
+        self.parents.push(vec![]);
+        self.names.len() - 1
+    }
+
+    /// Add edge `from -> to` (to depends on from). Rejects self-loops,
+    /// unknown nodes, duplicate edges, and edges that would close a cycle.
+    pub fn add_edge(&mut self, from: usize, to: usize) -> Result<()> {
+        let n = self.len();
+        if from >= n || to >= n {
+            return Err(Error::InvalidDag(format!(
+                "edge ({from}->{to}) references unknown node (n={n})"
+            )));
+        }
+        if from == to {
+            return Err(Error::InvalidDag(format!("self-loop on node {from}")));
+        }
+        if self.children[from].contains(&to) {
+            return Err(Error::InvalidDag(format!("duplicate edge {from}->{to}")));
+        }
+        if self.reaches(to, from) {
+            return Err(Error::InvalidDag(format!(
+                "edge {from}->{to} would create a cycle"
+            )));
+        }
+        self.children[from].push(to);
+        self.parents[to].push(from);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn name(&self, v: usize) -> &str {
+        &self.names[v]
+    }
+
+    pub fn node_by_name(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    pub fn children(&self, v: usize) -> &[usize] {
+        &self.children[v]
+    }
+
+    pub fn parents(&self, v: usize) -> &[usize] {
+        &self.parents[v]
+    }
+
+    pub fn out_degree(&self, v: usize) -> usize {
+        self.children[v].len()
+    }
+
+    pub fn in_degree(&self, v: usize) -> usize {
+        self.parents[v].len()
+    }
+
+    pub fn roots(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&v| self.parents[v].is_empty()).collect()
+    }
+
+    pub fn leaves(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&v| self.children[v].is_empty()).collect()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.children.iter().map(|c| c.len()).sum()
+    }
+
+    /// DFS reachability from `a` to `b`.
+    fn reaches(&self, a: usize, b: usize) -> bool {
+        let mut stack = vec![a];
+        let mut seen = vec![false; self.len()];
+        while let Some(v) = stack.pop() {
+            if v == b {
+                return true;
+            }
+            if std::mem::replace(&mut seen[v], true) {
+                continue;
+            }
+            stack.extend(self.children[v].iter().copied());
+        }
+        false
+    }
+
+    /// Kahn topological order. Errors only on internal inconsistency
+    /// (edges are cycle-checked at insertion).
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        let mut indeg: Vec<usize> = (0..self.len()).map(|v| self.in_degree(v)).collect();
+        let mut queue: Vec<usize> =
+            (0..self.len()).filter(|&v| indeg[v] == 0).collect();
+        let mut out = Vec::with_capacity(self.len());
+        let mut head = 0;
+        while head < queue.len() {
+            let v = queue[head];
+            head += 1;
+            out.push(v);
+            for &c in &self.children[v] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        if out.len() != self.len() {
+            return Err(Error::InvalidDag("cycle detected in topo sort".into()));
+        }
+        Ok(out)
+    }
+
+    /// Weakly connected components; returns component id per node.
+    pub fn components(&self) -> Vec<usize> {
+        let mut comp = vec![usize::MAX; self.len()];
+        let mut next = 0;
+        for start in 0..self.len() {
+            if comp[start] != usize::MAX {
+                continue;
+            }
+            let mut stack = vec![start];
+            comp[start] = next;
+            while let Some(v) = stack.pop() {
+                for &u in self.children[v].iter().chain(self.parents[v].iter()) {
+                    if comp[u] == usize::MAX {
+                        comp[u] = next;
+                        stack.push(u);
+                    }
+                }
+            }
+            next += 1;
+        }
+        comp
+    }
+
+    /// All ancestors of `v` (transitive parents).
+    pub fn ancestors(&self, v: usize) -> BTreeSet<usize> {
+        let mut out = BTreeSet::new();
+        let mut stack: Vec<usize> = self.parents[v].to_vec();
+        while let Some(u) = stack.pop() {
+            if out.insert(u) {
+                stack.extend(self.parents[u].iter().copied());
+            }
+        }
+        out
+    }
+
+    /// True when u and v have no dependency in either direction — the
+    /// paper's condition for task-level asynchronous execution (§6.1).
+    pub fn independent(&self, u: usize, v: usize) -> bool {
+        u != v && !self.reaches(u, v) && !self.reaches(v, u)
+    }
+
+    /// Graphviz dot rendering (debugging / docs).
+    pub fn to_dot(&self) -> String {
+        let mut s = String::from("digraph dag {\n  rankdir=TB;\n");
+        for (i, name) in self.names.iter().enumerate() {
+            s.push_str(&format!("  n{i} [label=\"{name}\"];\n"));
+        }
+        for (v, cs) in self.children.iter().enumerate() {
+            for &c in cs {
+                s.push_str(&format!("  n{v} -> n{c};\n"));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_bool;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn build_and_query() {
+        let mut d = Dag::new();
+        let a = d.add_node("A");
+        let b = d.add_node("B");
+        let c = d.add_node("C");
+        d.add_edge(a, b).unwrap();
+        d.add_edge(b, c).unwrap();
+        assert_eq!(d.roots(), vec![a]);
+        assert_eq!(d.leaves(), vec![c]);
+        assert_eq!(d.children(a), &[b]);
+        assert_eq!(d.parents(c), &[b]);
+        assert_eq!(d.node_by_name("B"), Some(b));
+        assert_eq!(d.edge_count(), 2);
+    }
+
+    #[test]
+    fn rejects_cycles_self_loops_duplicates() {
+        let mut d = Dag::new();
+        let a = d.add_node("A");
+        let b = d.add_node("B");
+        d.add_edge(a, b).unwrap();
+        assert!(d.add_edge(b, a).is_err(), "cycle");
+        assert!(d.add_edge(a, a).is_err(), "self-loop");
+        assert!(d.add_edge(a, b).is_err(), "duplicate");
+        assert!(d.add_edge(a, 99).is_err(), "unknown node");
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let d = crate::dag::figures::fig2c();
+        let order = d.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; d.len()];
+            for (i, &v) in order.iter().enumerate() {
+                p[v] = i;
+            }
+            p
+        };
+        for v in 0..d.len() {
+            for &c in d.children(v) {
+                assert!(pos[v] < pos[c]);
+            }
+        }
+    }
+
+    #[test]
+    fn components_and_independence() {
+        let d = crate::dag::figures::edgeless(3);
+        assert_eq!(d.components(), vec![0, 1, 2]);
+        assert!(d.independent(0, 2));
+
+        let c = crate::dag::figures::chain(3);
+        assert_eq!(c.components(), vec![0, 0, 0]);
+        assert!(!c.independent(0, 2));
+        assert!(!c.independent(2, 0));
+    }
+
+    #[test]
+    fn ancestors_transitive() {
+        let d = crate::dag::figures::fig2b();
+        let anc = d.ancestors(5);
+        assert_eq!(anc.into_iter().collect::<Vec<_>>(), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn dot_contains_all_nodes() {
+        let d = crate::dag::figures::fig2b();
+        let dot = d.to_dot();
+        for i in 0..6 {
+            assert!(dot.contains(&format!("T{i}")));
+        }
+    }
+
+    /// Property: random DAG construction (edges only added i<j) always
+    /// yields a valid topo order containing every node exactly once.
+    #[test]
+    fn property_random_dags_topo_sort() {
+        check_bool(
+            0xDA6,
+            200,
+            |rng: &mut Rng, size| {
+                let n = 2 + size.0;
+                let mut edges = vec![];
+                for j in 1..n {
+                    for i in 0..j {
+                        if rng.f64() < 0.3 {
+                            edges.push((i, j));
+                        }
+                    }
+                }
+                (n, edges)
+            },
+            |(n, edges)| {
+                let mut d = Dag::new();
+                for i in 0..*n {
+                    d.add_node(format!("T{i}"));
+                }
+                for &(i, j) in edges {
+                    d.add_edge(i, j).unwrap();
+                }
+                let order = d.topo_order().unwrap();
+                let mut seen = vec![false; *n];
+                for &v in &order {
+                    for &p in d.parents(v) {
+                        if !seen[p] {
+                            return false;
+                        }
+                    }
+                    seen[v] = true;
+                }
+                order.len() == *n
+            },
+        );
+    }
+}

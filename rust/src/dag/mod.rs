@@ -1,0 +1,102 @@
+//! Dependency-graph layer (substrate S7).
+//!
+//! Workflows are DAGs whose nodes are *task sets* and whose edges are
+//! data dependencies (§5.1). This module provides the graph type, the
+//! paper's degree-of-asynchronicity analysis (DOA_dep via independent
+//! branch discovery), rank (breadth-first level) computation, critical
+//! paths, and Graphviz export.
+
+mod analysis;
+mod graph;
+
+pub use analysis::{BranchDecomposition, DagAnalysis};
+pub use graph::Dag;
+
+/// The paper's Fig. 2 reference graphs, used by tests and docs.
+pub mod figures {
+    use super::Dag;
+
+    /// Fig. 2a: a linear chain T0 -> T1 -> ... -> T{n-1}. DOA_dep = 0.
+    pub fn chain(n: usize) -> Dag {
+        let mut d = Dag::new();
+        let ids: Vec<_> = (0..n).map(|i| d.add_node(format!("T{i}"))).collect();
+        for w in ids.windows(2) {
+            d.add_edge(w[0], w[1]).unwrap();
+        }
+        d
+    }
+
+    /// Fig. 2b: T0 forks into chains {T1,T3,T5} and {T2,T4}. DOA_dep = 1.
+    pub fn fig2b() -> Dag {
+        let mut d = Dag::new();
+        let t: Vec<_> = (0..6).map(|i| d.add_node(format!("T{i}"))).collect();
+        d.add_edge(t[0], t[1]).unwrap();
+        d.add_edge(t[0], t[2]).unwrap();
+        d.add_edge(t[1], t[3]).unwrap();
+        d.add_edge(t[2], t[4]).unwrap();
+        d.add_edge(t[3], t[5]).unwrap();
+        d
+    }
+
+    /// Fig. 2c: ten task sets, four forks, five diverging paths.
+    /// DOA_dep = 4.
+    pub fn fig2c() -> Dag {
+        let mut d = Dag::new();
+        let t: Vec<_> = (0..10).map(|i| d.add_node(format!("T{i}"))).collect();
+        d.add_edge(t[0], t[1]).unwrap();
+        d.add_edge(t[0], t[2]).unwrap();
+        d.add_edge(t[1], t[3]).unwrap();
+        d.add_edge(t[1], t[4]).unwrap();
+        d.add_edge(t[2], t[5]).unwrap();
+        d.add_edge(t[2], t[6]).unwrap();
+        d.add_edge(t[3], t[7]).unwrap();
+        d.add_edge(t[3], t[8]).unwrap();
+        d.add_edge(t[4], t[9]).unwrap();
+        d
+    }
+
+    /// Fig. 2d: n+1 fully independent task sets (empty edge set).
+    /// DOA_dep = n.
+    pub fn edgeless(n_plus_1: usize) -> Dag {
+        let mut d = Dag::new();
+        for i in 0..n_plus_1 {
+            d.add_node(format!("T{i}"));
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::figures::*;
+    use super::*;
+
+    // Experiment E7: the paper's Fig. 2 DOA_dep values.
+    #[test]
+    fn fig2_doa_values() {
+        assert_eq!(DagAnalysis::of(&chain(4)).doa_dep, 0);
+        assert_eq!(DagAnalysis::of(&fig2b()).doa_dep, 1);
+        assert_eq!(DagAnalysis::of(&fig2c()).doa_dep, 4);
+        assert_eq!(DagAnalysis::of(&edgeless(7)).doa_dep, 6);
+    }
+
+    #[test]
+    fn fig2b_branches() {
+        let a = DagAnalysis::of(&fig2b());
+        assert_eq!(a.branches.count(), 2);
+        // Branch of T1/T3/T5 differs from branch of T2/T4.
+        let b = &a.branches.branch_of;
+        assert_eq!(b[1], b[3]);
+        assert_eq!(b[3], b[5]);
+        assert_eq!(b[2], b[4]);
+        assert_ne!(b[1], b[2]);
+    }
+
+    #[test]
+    fn ranks_are_breadth_first() {
+        let d = fig2b();
+        let a = DagAnalysis::of(&d);
+        assert_eq!(a.ranks, vec![0, 1, 1, 2, 2, 3]);
+        assert_eq!(a.num_ranks, 4);
+    }
+}

@@ -1,0 +1,297 @@
+//! Real ML executor: DeepDriveMD task bodies backed by the PJRT
+//! runtime. Every task runs on its own thread and calls the compiled
+//! JAX/Pallas artifacts through a [`RuntimeHandle`] — the full L3 -> L2
+//! -> L1 path with Python nowhere in sight.
+//!
+//! Data flow (mirrors DeepDriveMD):
+//! - **Simulation** advances Lennard-Jones MD (`md_step`), featurizes
+//!   each chunk into a contact-map row (`contact_map`) and deposits
+//!   frames in the shared store;
+//! - **Aggregation** drains frames into fixed-size training batches;
+//! - **Training** runs `ae_train` SGD steps over batches, updating the
+//!   shared autoencoder parameters and logging the loss curve;
+//! - **Inference** scores batches with `ae_infer` (reconstruction
+//!   error), records outlier statistics, and perturbs the seed
+//!   coordinates of the worst offenders (driving the next iteration's
+//!   sampling, like DeepDriveMD's outlier-guided restarts).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::exec::{Completion, Executor, RunningTask};
+use crate::runtime::{RuntimeHandle, Tensor};
+use crate::task::TaskKind;
+use crate::util::rng::Rng;
+
+/// Model geometry (must match `python/compile/model.py` / the manifest).
+pub const N_ATOMS: usize = 64;
+pub const INPUT_DIM: usize = N_ATOMS * N_ATOMS;
+pub const BATCH: usize = 32;
+pub const LATENT: usize = 16;
+const PARAM_DIMS: [(&str, &[usize]); 8] = [
+    ("w1", &[INPUT_DIM, 256]),
+    ("b1", &[256]),
+    ("w2", &[256, LATENT]),
+    ("b2", &[LATENT]),
+    ("w3", &[LATENT, 256]),
+    ("b3", &[256]),
+    ("w4", &[256, INPUT_DIM]),
+    ("b4", &[INPUT_DIM]),
+];
+
+/// Shared DeepDriveMD state.
+#[derive(Debug)]
+pub struct DdmdStore {
+    /// Featurized frames waiting for aggregation.
+    pub frames: Vec<Vec<f32>>,
+    /// Training batches (each [BATCH, INPUT_DIM]).
+    pub batches: Vec<Tensor>,
+    /// Autoencoder parameters (8 tensors).
+    pub params: Vec<Tensor>,
+    /// Loss curve (step, loss) across all Training tasks.
+    pub losses: Vec<(usize, f32)>,
+    /// Outlier scores from Inference tasks.
+    pub scores: Vec<f32>,
+    /// Per-simulation seed state (coords, vels), keyed round-robin.
+    pub md_state: Vec<(Tensor, Tensor)>,
+    /// Monotone counters.
+    pub train_steps_done: usize,
+    pub frames_produced: usize,
+    rng: Rng,
+}
+
+impl DdmdStore {
+    pub fn new(seed: u64) -> DdmdStore {
+        let mut rng = Rng::new(seed);
+        // He-init parameters (matches model.init_params semantics).
+        let params = PARAM_DIMS
+            .iter()
+            .map(|(_, dims)| {
+                let n: usize = dims.iter().product();
+                let data = if dims.len() == 2 {
+                    let scale = (2.0 / dims[0] as f64).sqrt();
+                    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+                } else {
+                    vec![0.0f32; n]
+                };
+                Tensor::from_vec(data, dims).unwrap()
+            })
+            .collect();
+        DdmdStore {
+            frames: vec![],
+            batches: vec![],
+            params,
+            losses: vec![],
+            scores: vec![],
+            md_state: vec![],
+            train_steps_done: 0,
+            frames_produced: 0,
+            rng,
+        }
+    }
+
+    /// Fresh MD seed: a jittered cubic lattice (physically reasonable).
+    fn fresh_md_state(&mut self) -> (Tensor, Tensor) {
+        let side = (N_ATOMS as f64).powf(1.0 / 3.0).ceil() as usize;
+        let spacing = 1.2f32;
+        let mut coords = Vec::with_capacity(N_ATOMS * 3);
+        'outer: for i in 0..side {
+            for j in 0..side {
+                for k in 0..side {
+                    if coords.len() >= N_ATOMS * 3 {
+                        break 'outer;
+                    }
+                    coords.push(i as f32 * spacing + 0.05 * self.rng.normal() as f32);
+                    coords.push(j as f32 * spacing + 0.05 * self.rng.normal() as f32);
+                    coords.push(k as f32 * spacing + 0.05 * self.rng.normal() as f32);
+                }
+            }
+        }
+        let vels = vec![0.0f32; N_ATOMS * 3];
+        (
+            Tensor::from_vec(coords, &[N_ATOMS, 3]).unwrap(),
+            Tensor::from_vec(vels, &[N_ATOMS, 3]).unwrap(),
+        )
+    }
+
+    fn take_md_state(&mut self, slot: usize) -> (Tensor, Tensor) {
+        while self.md_state.len() <= slot {
+            let s = self.fresh_md_state();
+            self.md_state.push(s);
+        }
+        self.md_state[slot].clone()
+    }
+}
+
+/// Executor running DeepDriveMD bodies on real threads + PJRT.
+pub struct MlExecutor {
+    runtime: RuntimeHandle,
+    store: Arc<Mutex<DdmdStore>>,
+    epoch: Instant,
+    tx_chan: Sender<(usize, bool)>,
+    rx_chan: Receiver<(usize, bool)>,
+    in_flight: usize,
+    lr: f32,
+    next_slot: usize,
+}
+
+impl MlExecutor {
+    pub fn new(runtime: RuntimeHandle, seed: u64) -> MlExecutor {
+        let (tx_chan, rx_chan) = channel();
+        MlExecutor {
+            runtime,
+            store: Arc::new(Mutex::new(DdmdStore::new(seed))),
+            epoch: Instant::now(),
+            tx_chan,
+            rx_chan,
+            in_flight: 0,
+            lr: 0.005,
+            next_slot: 0,
+        }
+    }
+
+    pub fn store(&self) -> Arc<Mutex<DdmdStore>> {
+        Arc::clone(&self.store)
+    }
+}
+
+impl Executor for MlExecutor {
+    fn launch(&mut self, task: &RunningTask) {
+        let uid = task.uid;
+        let kind = task.kind.clone().unwrap_or(TaskKind::Stress);
+        let runtime = self.runtime.clone();
+        let store = Arc::clone(&self.store);
+        let chan = self.tx_chan.clone();
+        let lr = self.lr;
+        let nominal_tx = task.tx;
+        let slot = self.next_slot;
+        self.next_slot += 1;
+        self.in_flight += 1;
+        std::thread::spawn(move || {
+            let ok = run_body(&kind, &runtime, &store, lr, nominal_tx, slot).is_ok();
+            let _ = chan.send((uid, !ok));
+        });
+    }
+
+    fn wait_next(&mut self) -> Option<Completion> {
+        if self.in_flight == 0 {
+            return None;
+        }
+        let (uid, failed) = self.rx_chan.recv().ok()?;
+        self.in_flight -= 1;
+        Some(Completion { uid, finished_at: self.now(), failed })
+    }
+
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+}
+
+fn run_body(
+    kind: &TaskKind,
+    rt: &RuntimeHandle,
+    store: &Arc<Mutex<DdmdStore>>,
+    lr: f32,
+    nominal_tx: f64,
+    slot: usize,
+) -> crate::error::Result<()> {
+    match kind {
+        TaskKind::MdSimulation { chunks } => {
+            let (mut coords, mut vels) = store.lock().unwrap().take_md_state(slot % 64);
+            for _ in 0..*chunks {
+                let out = rt.execute("md_step", vec![coords.clone(), vels.clone()])?;
+                coords = out[0].clone();
+                vels = out[1].clone();
+                let feat = rt.execute("contact_map", vec![coords.clone()])?;
+                let mut st = store.lock().unwrap();
+                st.frames.push(feat[0].data.clone());
+                st.frames_produced += 1;
+            }
+            let mut st = store.lock().unwrap();
+            let slot = slot % 64;
+            while st.md_state.len() <= slot {
+                let s = st.fresh_md_state();
+                st.md_state.push(s);
+            }
+            st.md_state[slot] = (coords, vels);
+            Ok(())
+        }
+        TaskKind::Aggregation => {
+            let mut st = store.lock().unwrap();
+            while st.frames.len() >= BATCH {
+                let rows: Vec<Vec<f32>> = st.frames.drain(..BATCH).collect();
+                let mut data = Vec::with_capacity(BATCH * INPUT_DIM);
+                for r in rows {
+                    data.extend(r);
+                }
+                st.batches
+                    .push(Tensor::from_vec(data, &[BATCH, INPUT_DIM]).unwrap());
+            }
+            Ok(())
+        }
+        TaskKind::Training { steps } => {
+            for s in 0..*steps {
+                let (params, batch) = {
+                    let st = store.lock().unwrap();
+                    if st.batches.is_empty() {
+                        // Nothing to train on yet (dependency guarantees
+                        // usually prevent this; tolerate gracefully).
+                        return Ok(());
+                    }
+                    let b = st.batches[(st.train_steps_done + s) % st.batches.len()].clone();
+                    (st.params.clone(), b)
+                };
+                let mut inputs = params;
+                inputs.push(batch);
+                inputs.push(Tensor::scalar(lr));
+                let out = rt.execute("ae_train", inputs)?;
+                let mut st = store.lock().unwrap();
+                let loss = out[8].data[0];
+                st.params = out[..8].to_vec();
+                st.train_steps_done += 1;
+                let step = st.train_steps_done;
+                st.losses.push((step, loss));
+            }
+            Ok(())
+        }
+        TaskKind::Inference => {
+            let (params, batch) = {
+                let st = store.lock().unwrap();
+                if st.batches.is_empty() {
+                    return Ok(());
+                }
+                let b = st.batches[st.scores.len() % st.batches.len()].clone();
+                (st.params.clone(), b)
+            };
+            let mut inputs = params;
+            inputs.push(batch);
+            let out = rt.execute("ae_infer", inputs)?;
+            let mut st = store.lock().unwrap();
+            st.scores.extend(out[0].data.iter().copied());
+            // Outlier-guided restart: perturb the seed state of the slot
+            // with the worst reconstruction (novel conformation).
+            if let Some((worst, _)) = out[0]
+                .data
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+            {
+                let jitter: Vec<f32> =
+                    (0..N_ATOMS * 3).map(|_| 0.02 * st.rng.normal() as f32).collect();
+                let k = worst % st.md_state.len().max(1);
+                if k < st.md_state.len() {
+                    for (c, j) in st.md_state[k].0.data.iter_mut().zip(&jitter) {
+                        *c += j;
+                    }
+                }
+            }
+            Ok(())
+        }
+        TaskKind::Stress => {
+            // Fallback: behave like a stress task at 1:100 scale.
+            std::thread::sleep(std::time::Duration::from_secs_f64(nominal_tx * 0.01));
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! DeepDriveMD (substrate S15): the paper's contribution #1 — an
+//! asynchronous implementation of the ML-driven molecular-dynamics
+//! ensemble workflow of Brace et al. (IPDPS 2022).
+//!
+//! Four task types per iteration: Simulation -> Aggregation -> Training
+//! -> Inference (Table 1). The sequential realization is one pipeline of
+//! `4 x iterations` stages; the asynchronous realization runs one
+//! pipeline per iteration, multiplexed on a single pilot (the GPU-bound
+//! Simulation sets stagger on resource contention, yielding Fig. 3a's
+//! three independent chains and WLA = 1 on the Summit allocation).
+//!
+//! For *real* execution ([`mlexec::MlExecutor`]) the four task bodies
+//! invoke the AOT-compiled JAX/Pallas artifacts (MD, featurization,
+//! autoencoder training/inference) through the PJRT runtime.
+
+pub mod mlexec;
+
+use crate::dag::Dag;
+use crate::entk::{Pipeline, Workflow};
+use crate::resources::ResourceRequest;
+use crate::task::{TaskKind, TaskSetSpec};
+
+/// Per-task-type parameters (one row of Table 1).
+#[derive(Debug, Clone, Copy)]
+pub struct TaskTypeSpec {
+    pub tasks: u32,
+    pub cores: u32,
+    pub gpus: u32,
+    pub tx: f64,
+}
+
+/// DeepDriveMD workflow parameters.
+#[derive(Debug, Clone)]
+pub struct DdmdConfig {
+    pub iterations: usize,
+    pub simulation: TaskTypeSpec,
+    pub aggregation: TaskTypeSpec,
+    pub training: TaskTypeSpec,
+    pub inference: TaskTypeSpec,
+    pub tx_sigma_frac: f64,
+    /// Real-execution knobs (ignored by virtual runs).
+    pub md_chunks_per_sim: usize,
+    pub train_steps: usize,
+}
+
+impl DdmdConfig {
+    /// Table 1 verbatim (TX already scaled down 4x from Brace et al.,
+    /// as in the paper; sigma = 0.05).
+    pub fn paper() -> DdmdConfig {
+        DdmdConfig {
+            iterations: 3,
+            simulation: TaskTypeSpec { tasks: 96, cores: 4, gpus: 1, tx: 340.0 },
+            aggregation: TaskTypeSpec { tasks: 16, cores: 32, gpus: 0, tx: 85.0 },
+            training: TaskTypeSpec { tasks: 1, cores: 4, gpus: 1, tx: 63.0 },
+            inference: TaskTypeSpec { tasks: 96, cores: 16, gpus: 1, tx: 38.0 },
+            tx_sigma_frac: 0.05,
+            md_chunks_per_sim: 4,
+            train_steps: 30,
+        }
+    }
+
+    /// Small instance for real wall-clock execution on the local host
+    /// (examples/ddmd_e2e.rs): 2 iterations, a handful of tasks, and a
+    /// tiny cluster profile (`ClusterSpec::local_small`).
+    pub fn small() -> DdmdConfig {
+        DdmdConfig {
+            iterations: 2,
+            simulation: TaskTypeSpec { tasks: 4, cores: 1, gpus: 1, tx: 8.0 },
+            aggregation: TaskTypeSpec { tasks: 2, cores: 2, gpus: 0, tx: 2.0 },
+            training: TaskTypeSpec { tasks: 1, cores: 1, gpus: 1, tx: 2.0 },
+            inference: TaskTypeSpec { tasks: 2, cores: 1, gpus: 1, tx: 1.0 },
+            tx_sigma_frac: 0.05,
+            // 4 sims x 16 chunks = 64 contact-map frames per iteration
+            // = 2 training batches of 32 per iteration.
+            md_chunks_per_sim: 16,
+            train_steps: 25,
+        }
+    }
+
+    /// The sequential per-iteration TTX (Eqn. 2 inner sum): 526 s for
+    /// the paper configuration.
+    pub fn t_iteration(&self) -> f64 {
+        self.simulation.tx + self.aggregation.tx + self.training.tx + self.inference.tx
+    }
+}
+
+/// Build the DeepDriveMD [`Workflow`] (both realizations + DG).
+pub fn ddmd_workflow(cfg: &DdmdConfig) -> Workflow {
+    let mut dag = Dag::new();
+    let mut sets: Vec<TaskSetSpec> = Vec::with_capacity(cfg.iterations * 4);
+    let mut chain_nodes: Vec<[usize; 4]> = Vec::with_capacity(cfg.iterations);
+
+    for it in 0..cfg.iterations {
+        let mk = |name: String, t: &TaskTypeSpec, kind: TaskKind| {
+            TaskSetSpec::new(name, t.tasks, ResourceRequest::new(t.cores, t.gpus), t.tx)
+                .with_sigma(cfg.tx_sigma_frac)
+                .with_kind(kind)
+        };
+        let sim = dag.add_node(format!("Sim{it}"));
+        sets.push(mk(
+            format!("Sim{it}"),
+            &cfg.simulation,
+            TaskKind::MdSimulation { chunks: cfg.md_chunks_per_sim },
+        ));
+        let agg = dag.add_node(format!("Aggr{it}"));
+        sets.push(mk(format!("Aggr{it}"), &cfg.aggregation, TaskKind::Aggregation));
+        let train = dag.add_node(format!("Train{it}"));
+        sets.push(mk(
+            format!("Train{it}"),
+            &cfg.training,
+            TaskKind::Training { steps: cfg.train_steps },
+        ));
+        let infer = dag.add_node(format!("Infer{it}"));
+        sets.push(mk(format!("Infer{it}"), &cfg.inference, TaskKind::Inference));
+        dag.add_edge(sim, agg).unwrap();
+        dag.add_edge(agg, train).unwrap();
+        dag.add_edge(train, infer).unwrap();
+        chain_nodes.push([sim, agg, train, infer]);
+    }
+
+    // Sequential: one pipeline, iterations back-to-back (the paper's
+    // baseline: "a single pipeline ... each stage executes sequentially").
+    let mut seq = Pipeline::new("ddmd-sequential");
+    for c in &chain_nodes {
+        for &s in c {
+            seq = seq.stage(&[s]);
+        }
+    }
+
+    // Asynchronous: one pipeline per iteration (Fig. 3a's staggered
+    // chains; the stagger emerges from GPU contention).
+    let asynchronous = chain_nodes
+        .iter()
+        .enumerate()
+        .map(|(it, c)| {
+            let mut p = Pipeline::new(format!("ddmd-iter{it}"));
+            for &s in c {
+                p = p.stage(&[s]);
+            }
+            p
+        })
+        .collect();
+
+    let wf = Workflow {
+        name: format!("DeepDriveMD-x{}", cfg.iterations),
+        sets,
+        dag,
+        sequential: vec![seq],
+        asynchronous,
+    };
+    wf.validate().expect("ddmd builder produces valid workflows");
+    wf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{simulate_cfg, EngineConfig, ExecutionMode};
+    use crate::resources::ClusterSpec;
+
+    #[test]
+    fn paper_config_matches_table1() {
+        let cfg = DdmdConfig::paper();
+        assert_eq!(cfg.iterations, 3);
+        assert!((cfg.t_iteration() - 526.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workflow_structure() {
+        let wf = ddmd_workflow(&DdmdConfig::paper());
+        assert_eq!(wf.sets.len(), 12);
+        assert_eq!(wf.sequential[0].stages.len(), 12);
+        assert_eq!(wf.asynchronous.len(), 3);
+        let a = wf.analysis();
+        // Three independent chains -> DOA_dep = 2 (§7.1).
+        assert_eq!(a.doa_dep, 2);
+    }
+
+    /// Experiment E1/E9 core shape: async beats sequential by ~15-25%
+    /// on the Summit profile, and the measured DOA_res is 1 (WLA = 1).
+    #[test]
+    fn summit_async_improvement_matches_paper_shape() {
+        let wf = ddmd_workflow(&DdmdConfig::paper());
+        let cluster = ClusterSpec::summit_paper();
+        let cfg = EngineConfig { seed: 7, ..EngineConfig::default() };
+        let seq = simulate_cfg(&wf, &cluster, ExecutionMode::Sequential, &cfg);
+        let asy = simulate_cfg(&wf, &cluster, ExecutionMode::Asynchronous, &cfg);
+        let i = asy.improvement_over(&seq);
+        assert!(
+            (0.10..=0.30).contains(&i),
+            "I = {i:.3} out of the paper's ballpark (0.196); seq={} async={}",
+            seq.makespan,
+            asy.makespan
+        );
+        // Analytic DOA_res (Table 3): 1. (The raw trace-measured value
+        // can exceed it transiently — see metrics::measured_doa_res.)
+        assert_eq!(crate::model::doa_res_analytic(&wf, &cluster), 1);
+        // GPU utilization must improve under asynchronicity (Fig. 4).
+        assert!(asy.gpu_utilization > seq.gpu_utilization);
+    }
+
+    /// Ideal-overhead simulation vs the paper's closed forms: Eqn. 2
+    /// gives 3 x 526 = 1578; Eqn. 6 gives 1345.
+    #[test]
+    fn ideal_simulation_brackets_eqn6() {
+        let wf = ddmd_workflow(&DdmdConfig::paper());
+        let mut cfgv = DdmdConfig::paper();
+        cfgv.tx_sigma_frac = 0.0; // deterministic TX for exact comparison
+        let wf0 = ddmd_workflow(&cfgv);
+        let _ = wf;
+        let cluster = ClusterSpec::summit_paper();
+        let cfg = EngineConfig::ideal();
+        let seq = simulate_cfg(&wf0, &cluster, ExecutionMode::Sequential, &cfg);
+        assert!((seq.makespan - 1578.0).abs() < 1.0, "seq {}", seq.makespan);
+        let asy = simulate_cfg(&wf0, &cluster, ExecutionMode::Asynchronous, &cfg);
+        let eqn6 = crate::model::t_async_ddmd_eqn6(3, 526.0, 85.0, 63.0);
+        // The simulator resolves actual contention; Eqn. 6 is the paper's
+        // analytic estimate. They must agree within ~8%.
+        let rel = (asy.makespan - eqn6).abs() / eqn6;
+        assert!(rel < 0.08, "sim {} vs eqn6 {eqn6}", asy.makespan);
+    }
+}

@@ -1,0 +1,200 @@
+//! Realization compiler: turns a workflow + execution mode into the
+//! set-level execution plan (jobsets with dependencies) the driver runs.
+
+use crate::entk::Workflow;
+
+/// The three execution modes the paper discusses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// Baseline: the `sequential` PST realization.
+    Sequential,
+    /// The paper's contribution: the `asynchronous` PST realization
+    /// (stage barriers within pipelines, pipelines independent).
+    Asynchronous,
+    /// The paper's future-work mode: pure DAG dependencies, no stage
+    /// barriers — every task set becomes eligible the instant its DAG
+    /// parents complete (§6.1).
+    Adaptive,
+}
+
+impl ExecutionMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecutionMode::Sequential => "sequential",
+            ExecutionMode::Asynchronous => "asynchronous",
+            ExecutionMode::Adaptive => "adaptive",
+        }
+    }
+}
+
+impl std::str::FromStr for ExecutionMode {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "seq" | "sequential" => Ok(ExecutionMode::Sequential),
+            "async" | "asynchronous" => Ok(ExecutionMode::Asynchronous),
+            "adaptive" => Ok(ExecutionMode::Adaptive),
+            _ => Err(crate::error::Error::Config(format!("unknown mode '{s}'"))),
+        }
+    }
+}
+
+/// One schedulable unit: a task set plus the jobsets that must fully
+/// complete before it may start.
+#[derive(Debug, Clone)]
+pub struct JobSet {
+    /// Index into `Workflow::sets`.
+    pub set_idx: usize,
+    /// Jobset indices that must complete first.
+    pub deps: Vec<usize>,
+    /// Pipeline this set executes under (scheduling priority; for
+    /// adaptive mode this is the DAG branch id).
+    pub pipeline: usize,
+}
+
+/// Compile a workflow realization into jobsets.
+///
+/// PST modes (sequential/asynchronous) produce, for a set `s` in stage
+/// `k` of pipeline `p`, dependencies =
+/// - every set of stage `k-1` of `p` (stage ordering barrier), plus
+/// - the DAG parents of **every** member of stage `k` (stage *entry*
+///   barrier: all sets of a stage become eligible together — this is
+///   precisely the cross-branch coupling the paper's §6.1 future-work
+///   paragraph wants to remove, and `Adaptive` removes).
+pub fn compile(wf: &Workflow, mode: ExecutionMode) -> Vec<JobSet> {
+    match mode {
+        ExecutionMode::Sequential => compile_pst(wf, &wf.sequential),
+        ExecutionMode::Asynchronous => compile_pst(wf, &wf.asynchronous),
+        ExecutionMode::Adaptive => compile_adaptive(wf),
+    }
+}
+
+fn compile_pst(wf: &Workflow, pipelines: &[crate::entk::Pipeline]) -> Vec<JobSet> {
+    // jobset index == set index (each set is one jobset; validate()
+    // guarantees the realization covers every set exactly once).
+    let n = wf.sets.len();
+    let mut jobsets: Vec<JobSet> =
+        (0..n).map(|s| JobSet { set_idx: s, deps: vec![], pipeline: 0 }).collect();
+
+    for (p_idx, p) in pipelines.iter().enumerate() {
+        for (k, stage) in p.stages.iter().enumerate() {
+            // Stage-entry barrier: union of DAG parents of all members.
+            let mut entry: Vec<usize> = stage
+                .sets
+                .iter()
+                .flat_map(|&s| wf.dag.parents(s).iter().copied())
+                .collect();
+            // Stage-order barrier: all sets of the previous stage.
+            if k > 0 {
+                entry.extend(p.stages[k - 1].sets.iter().copied());
+            }
+            entry.sort_unstable();
+            entry.dedup();
+            for &s in &stage.sets {
+                jobsets[s].pipeline = p_idx;
+                jobsets[s].deps = entry.clone();
+                // A set never depends on itself (possible when a stage
+                // member is also a parent of another member).
+                jobsets[s].deps.retain(|&d| d != s);
+            }
+        }
+    }
+    jobsets
+}
+
+fn compile_adaptive(wf: &Workflow) -> Vec<JobSet> {
+    let analysis = wf.analysis();
+    (0..wf.sets.len())
+        .map(|s| JobSet {
+            set_idx: s,
+            deps: wf.dag.parents(s).to_vec(),
+            pipeline: analysis.branches.branch_of[s],
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::Dag;
+    use crate::entk::{Pipeline, Workflow};
+    use crate::resources::ResourceRequest;
+    use crate::task::TaskSetSpec;
+
+    /// c-DG-like shape: T0 -> {T1,T2}; T1->T3; T2->T4.
+    fn wf() -> Workflow {
+        let mut dag = Dag::new();
+        for name in ["T0", "T1", "T2", "T3", "T4"] {
+            dag.add_node(name);
+        }
+        dag.add_edge(0, 1).unwrap();
+        dag.add_edge(0, 2).unwrap();
+        dag.add_edge(1, 3).unwrap();
+        dag.add_edge(2, 4).unwrap();
+        let set = |n: &str| TaskSetSpec::new(n, 1, ResourceRequest::new(1, 0), 1.0);
+        Workflow {
+            name: "t".into(),
+            sets: ["T0", "T1", "T2", "T3", "T4"].iter().map(|n| set(n)).collect(),
+            dag,
+            sequential: vec![Pipeline::new("seq").stage(&[0]).stage(&[1, 2]).stage(&[3, 4])],
+            asynchronous: vec![
+                Pipeline::new("p0").stage(&[0]),
+                Pipeline::new("p1").stage(&[1]).stage(&[3]),
+                Pipeline::new("p2").stage(&[2]).stage(&[4]),
+            ],
+        }
+    }
+
+    #[test]
+    fn sequential_imposes_rank_barriers() {
+        let js = compile(&wf(), ExecutionMode::Sequential);
+        // T3's deps include BOTH T1 and T2 (stage barrier), not just T1.
+        assert_eq!(js[3].deps, vec![1, 2]);
+        assert_eq!(js[4].deps, vec![1, 2]);
+        assert!(js[0].deps.is_empty());
+    }
+
+    #[test]
+    fn async_keeps_pipelines_independent() {
+        let js = compile(&wf(), ExecutionMode::Asynchronous);
+        // T3 only waits on its own pipeline's T1.
+        assert_eq!(js[3].deps, vec![1]);
+        assert_eq!(js[4].deps, vec![2]);
+        assert_eq!(js[1].deps, vec![0], "cross-pipeline DAG parent preserved");
+        assert_eq!(js[3].pipeline, 1);
+        assert_eq!(js[4].pipeline, 2);
+    }
+
+    #[test]
+    fn adaptive_uses_dag_parents_only() {
+        let js = compile(&wf(), ExecutionMode::Adaptive);
+        for (i, j) in js.iter().enumerate() {
+            assert_eq!(j.deps, wf().dag.parents(i).to_vec());
+        }
+    }
+
+    #[test]
+    fn stage_entry_barrier_couples_stage_members() {
+        // Async realization where one stage holds sets with different
+        // parents: both wait for the union.
+        let mut w = wf();
+        w.asynchronous = vec![
+            Pipeline::new("p0").stage(&[0]),
+            Pipeline::new("p1").stage(&[1, 2]).stage(&[3, 4]),
+        ];
+        let js = compile(&w, ExecutionMode::Asynchronous);
+        // Stage {T3,T4}: entry barrier = parents(T3) u parents(T4) u prev
+        // stage {T1,T2} = {1,2}.
+        assert_eq!(js[3].deps, vec![1, 2]);
+        assert_eq!(js[4].deps, vec![1, 2]);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!("async".parse::<ExecutionMode>().unwrap(), ExecutionMode::Asynchronous);
+        assert_eq!("seq".parse::<ExecutionMode>().unwrap(), ExecutionMode::Sequential);
+        assert_eq!("adaptive".parse::<ExecutionMode>().unwrap(), ExecutionMode::Adaptive);
+        assert!("xyz".parse::<ExecutionMode>().is_err());
+        assert_eq!(ExecutionMode::Sequential.label(), "sequential");
+    }
+}

@@ -1,0 +1,228 @@
+//! EnTK-like Pipeline/Stage/Task workflow layer (substrate S11).
+//!
+//! The paper implements workflows on RADICAL EnTK's PST model [3]:
+//! a *pipeline* is an ordered list of *stages*; a stage holds task sets
+//! whose tasks may run concurrently; stages of one pipeline execute in
+//! order (stage barrier); distinct pipelines execute independently —
+//! which is exactly how the paper realizes asynchronicity ("we started
+//! multiple executions of the DeepDriveMD workflow with different
+//! starting times", §7.1; resource contention produces the stagger).
+//!
+//! A [`Workflow`] owns the task sets, the abstract dependency DAG used
+//! by the model, and the two PST realizations the paper compares
+//! (sequential = one pipeline, asynchronous = several). The engine
+//! compiles either realization — or the *adaptive* task-level mode the
+//! paper proposes as future work — into a set-level execution plan.
+
+use crate::dag::{Dag, DagAnalysis};
+use crate::error::{Error, Result};
+use crate::task::TaskSetSpec;
+
+/// A stage: indices into `Workflow::sets` that share a stage barrier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    pub sets: Vec<usize>,
+}
+
+impl Stage {
+    pub fn of(sets: &[usize]) -> Stage {
+        Stage { sets: sets.to_vec() }
+    }
+}
+
+/// An ordered list of stages executed with barriers in between.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pipeline {
+    pub name: String,
+    pub stages: Vec<Stage>,
+}
+
+impl Pipeline {
+    pub fn new(name: impl Into<String>) -> Pipeline {
+        Pipeline { name: name.into(), stages: vec![] }
+    }
+
+    pub fn stage(mut self, sets: &[usize]) -> Pipeline {
+        self.stages.push(Stage::of(sets));
+        self
+    }
+}
+
+/// A complete workflow: task sets + dependency DAG + both PST
+/// realizations.
+#[derive(Debug, Clone)]
+pub struct Workflow {
+    pub name: String,
+    /// Task sets; indices are shared with `dag` nodes.
+    pub sets: Vec<TaskSetSpec>,
+    /// Set-level dependency graph (node i <-> sets[i]).
+    pub dag: Dag,
+    /// Sequential realization (paper's baseline): usually one pipeline.
+    pub sequential: Vec<Pipeline>,
+    /// Asynchronous realization (paper's contribution): k pipelines.
+    pub asynchronous: Vec<Pipeline>,
+}
+
+impl Workflow {
+    /// Validate internal consistency; called by builders and config
+    /// loading.
+    pub fn validate(&self) -> Result<()> {
+        if self.sets.len() != self.dag.len() {
+            return Err(Error::InvalidWorkflow(format!(
+                "{} sets but {} dag nodes",
+                self.sets.len(),
+                self.dag.len()
+            )));
+        }
+        for (i, s) in self.sets.iter().enumerate() {
+            if s.tasks == 0 {
+                return Err(Error::InvalidWorkflow(format!("set '{}' has 0 tasks", s.name)));
+            }
+            if s.tx_mean <= 0.0 {
+                return Err(Error::InvalidWorkflow(format!(
+                    "set '{}' has non-positive TX",
+                    s.name
+                )));
+            }
+            if self.dag.name(i) != s.name {
+                return Err(Error::InvalidWorkflow(format!(
+                    "dag node {i} is '{}' but set is '{}'",
+                    self.dag.name(i),
+                    s.name
+                )));
+            }
+        }
+        for (label, real) in
+            [("sequential", &self.sequential), ("asynchronous", &self.asynchronous)]
+        {
+            let mut seen = vec![false; self.sets.len()];
+            for p in real {
+                for st in &p.stages {
+                    if st.sets.is_empty() {
+                        return Err(Error::InvalidWorkflow(format!(
+                            "{label}: empty stage in pipeline '{}'",
+                            p.name
+                        )));
+                    }
+                    for &s in &st.sets {
+                        if s >= self.sets.len() {
+                            return Err(Error::InvalidWorkflow(format!(
+                                "{label}: stage references unknown set {s}"
+                            )));
+                        }
+                        if std::mem::replace(&mut seen[s], true) {
+                            return Err(Error::InvalidWorkflow(format!(
+                                "{label}: set '{}' appears twice",
+                                self.sets[s].name
+                            )));
+                        }
+                    }
+                }
+            }
+            if let Some(missing) = seen.iter().position(|&s| !s) {
+                return Err(Error::InvalidWorkflow(format!(
+                    "{label}: set '{}' not covered by any stage",
+                    self.sets[missing].name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn analysis(&self) -> DagAnalysis {
+        DagAnalysis::of(&self.dag)
+    }
+
+    pub fn total_tasks(&self) -> u64 {
+        self.sets.iter().map(|s| s.tasks as u64).sum()
+    }
+
+    pub fn set_by_name(&self, name: &str) -> Option<&TaskSetSpec> {
+        self.dag.node_by_name(name).map(|i| &self.sets[i])
+    }
+
+    /// Sum over sets of tasks x cores x TX (the workload's total
+    /// core-seconds) — denominator-side input for utilization sanity
+    /// checks.
+    pub fn total_core_seconds(&self) -> f64 {
+        self.sets
+            .iter()
+            .map(|s| s.tasks as f64 * s.req.cpu_cores as f64 * s.tx_mean)
+            .sum()
+    }
+
+    pub fn total_gpu_seconds(&self) -> f64 {
+        self.sets
+            .iter()
+            .map(|s| s.tasks as f64 * s.req.gpus as f64 * s.tx_mean)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::ResourceRequest;
+
+    fn tiny_workflow() -> Workflow {
+        let mut dag = Dag::new();
+        let a = dag.add_node("A");
+        let b = dag.add_node("B");
+        let c = dag.add_node("C");
+        dag.add_edge(a, b).unwrap();
+        dag.add_edge(a, c).unwrap();
+        Workflow {
+            name: "tiny".into(),
+            sets: vec![
+                TaskSetSpec::new("A", 2, ResourceRequest::new(1, 0), 10.0),
+                TaskSetSpec::new("B", 2, ResourceRequest::new(1, 0), 20.0),
+                TaskSetSpec::new("C", 2, ResourceRequest::new(1, 0), 20.0),
+            ],
+            dag,
+            sequential: vec![Pipeline::new("seq").stage(&[0]).stage(&[1, 2])],
+            asynchronous: vec![
+                Pipeline::new("p0").stage(&[0]).stage(&[1]),
+                Pipeline::new("p1").stage(&[2]),
+            ],
+        }
+    }
+
+    #[test]
+    fn valid_workflow_passes() {
+        tiny_workflow().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_uncovered_set() {
+        let mut wf = tiny_workflow();
+        wf.sequential = vec![Pipeline::new("seq").stage(&[0]).stage(&[1])];
+        assert!(wf.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_set() {
+        let mut wf = tiny_workflow();
+        wf.asynchronous = vec![
+            Pipeline::new("p0").stage(&[0]).stage(&[1, 1]),
+            Pipeline::new("p1").stage(&[2]),
+        ];
+        assert!(wf.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_name_mismatch() {
+        let mut wf = tiny_workflow();
+        wf.sets[1].name = "Z".into();
+        assert!(wf.validate().is_err());
+    }
+
+    #[test]
+    fn totals() {
+        let wf = tiny_workflow();
+        assert_eq!(wf.total_tasks(), 6);
+        assert!((wf.total_core_seconds() - (2.0 * 10.0 + 2.0 * 20.0 + 2.0 * 20.0)).abs() < 1e-12);
+        assert_eq!(wf.total_gpu_seconds(), 0.0);
+        assert_eq!(wf.set_by_name("B").unwrap().tx_mean, 20.0);
+        assert!(wf.set_by_name("ZZ").is_none());
+    }
+}

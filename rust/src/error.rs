@@ -1,0 +1,50 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All failure modes surfaced by asyncflow's public API.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Dependency graph is malformed (cycle, dangling edge, ...).
+    #[error("invalid DAG: {0}")]
+    InvalidDag(String),
+
+    /// A task requests more resources than the whole allocation owns.
+    #[error("unsatisfiable resource request: {0}")]
+    Unsatisfiable(String),
+
+    /// Workflow construction / configuration problem.
+    #[error("invalid workflow: {0}")]
+    InvalidWorkflow(String),
+
+    /// Configuration file / JSON problem.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// JSON parse error with byte offset context.
+    #[error("json parse error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    /// Artifact (AOT HLO) loading / execution problem.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Engine / executor invariant violation.
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Underlying XLA / PJRT error.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

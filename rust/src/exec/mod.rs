@@ -1,0 +1,59 @@
+//! Executors (substrate S13): the engine's pluggable execution backends.
+//!
+//! - [`crate::sim::VirtualExecutor`] — discrete-event, virtual time
+//!   (paper-scale experiments);
+//! - [`StressExecutor`] — real threads + wall clock, tasks sleep or spin
+//!   for their (scaled) TX: validates the coordinator under true
+//!   concurrency, like the paper's `stress` executable;
+//! - the ML executor in [`crate::ddmd::mlexec`] — real threads whose
+//!   task bodies call the PJRT runtime (DeepDriveMD task semantics).
+
+mod stress;
+
+pub use stress::{StressExecutor, StressMode};
+
+use crate::task::TaskKind;
+
+/// A task handed to an executor by the engine after scheduling.
+#[derive(Debug, Clone)]
+pub struct RunningTask {
+    pub uid: usize,
+    /// Execution time in paper-scale seconds (virtual executors honor it
+    /// exactly; real executors scale it).
+    pub tx: f64,
+    /// Engine time at launch.
+    pub started_at: f64,
+    /// Body for real executors (None for virtual).
+    pub kind: Option<TaskKind>,
+}
+
+/// Completion report from an executor.
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub uid: usize,
+    pub finished_at: f64,
+    pub failed: bool,
+}
+
+/// The engine's execution backend.
+pub trait Executor {
+    /// Begin executing a scheduled task.
+    fn launch(&mut self, task: &RunningTask);
+
+    /// Block until some running task completes; `None` when nothing is
+    /// in flight.
+    fn wait_next(&mut self) -> Option<Completion>;
+
+    /// Current engine time (virtual seconds, or scaled wall-clock).
+    fn now(&self) -> f64;
+
+    /// Earliest pending completion time, when the executor can know it
+    /// (virtual time). Real executors return `None`.
+    fn peek_next_completion(&self) -> Option<f64> {
+        None
+    }
+
+    /// Fast-forward the clock to `t` (virtual time only; no-op for real
+    /// executors, which can't time-travel).
+    fn advance_to(&mut self, _t: f64) {}
+}

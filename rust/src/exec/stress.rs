@@ -1,0 +1,125 @@
+//! Real-concurrency executor: one thread per running task, sleeping
+//! (or spinning) for TX × scale wall-clock seconds — the moral
+//! equivalent of the paper's `stress` synthetic executable.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use super::{Completion, Executor, RunningTask};
+
+/// How a stress task occupies its time slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StressMode {
+    /// Sleep for the scaled TX (default: no CPU contention, so scaled
+    /// durations stay faithful even on a small host).
+    #[default]
+    Sleep,
+    /// Busy-spin for the scaled TX (exercises genuine CPU pressure).
+    Spin,
+}
+
+/// Wall-clock executor. `scale` maps paper seconds to wall seconds
+/// (e.g. 0.01 ⇒ a 340 s Simulation takes 3.4 s).
+pub struct StressExecutor {
+    scale: f64,
+    mode: StressMode,
+    epoch: Instant,
+    tx_chan: Sender<(usize, bool)>,
+    rx_chan: Receiver<(usize, bool)>,
+    in_flight: usize,
+    /// Injected failures: uids that should report failure (tests).
+    fail_uids: Vec<usize>,
+}
+
+impl StressExecutor {
+    pub fn new(scale: f64, mode: StressMode) -> StressExecutor {
+        let (tx_chan, rx_chan) = channel();
+        StressExecutor {
+            scale,
+            mode,
+            epoch: Instant::now(),
+            tx_chan,
+            rx_chan,
+            in_flight: 0,
+            fail_uids: Vec::new(),
+        }
+    }
+
+    /// Mark a uid to complete as failed (failure-injection testing).
+    pub fn inject_failure(&mut self, uid: usize) {
+        self.fail_uids.push(uid);
+    }
+}
+
+impl Executor for StressExecutor {
+    fn launch(&mut self, task: &RunningTask) {
+        let wall = (task.tx * self.scale).max(0.0);
+        let uid = task.uid;
+        let fail = self.fail_uids.contains(&uid);
+        let chan = self.tx_chan.clone();
+        let mode = self.mode;
+        self.in_flight += 1;
+        std::thread::spawn(move || {
+            match mode {
+                StressMode::Sleep => std::thread::sleep(std::time::Duration::from_secs_f64(wall)),
+                StressMode::Spin => {
+                    let t0 = Instant::now();
+                    while t0.elapsed().as_secs_f64() < wall {
+                        std::hint::black_box(0u64);
+                    }
+                }
+            }
+            // Receiver may be gone if the engine aborted; ignore.
+            let _ = chan.send((uid, fail));
+        });
+    }
+
+    fn wait_next(&mut self) -> Option<Completion> {
+        if self.in_flight == 0 {
+            return None;
+        }
+        let (uid, failed) = self.rx_chan.recv().ok()?;
+        self.in_flight -= 1;
+        Some(Completion { uid, finished_at: self.now(), failed })
+    }
+
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() / self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completes_tasks_roughly_in_tx_order() {
+        let mut ex = StressExecutor::new(0.01, StressMode::Sleep);
+        // Paper-seconds: 20 and 5 -> wall 0.2s and 0.05s.
+        ex.launch(&RunningTask { uid: 0, tx: 20.0, started_at: 0.0, kind: None });
+        ex.launch(&RunningTask { uid: 1, tx: 5.0, started_at: 0.0, kind: None });
+        let c1 = ex.wait_next().unwrap();
+        assert_eq!(c1.uid, 1);
+        let c0 = ex.wait_next().unwrap();
+        assert_eq!(c0.uid, 0);
+        // Engine time is scaled wall-clock: ~20 paper-seconds elapsed.
+        assert!(c0.finished_at >= 18.0 && c0.finished_at < 60.0, "{}", c0.finished_at);
+        assert!(ex.wait_next().is_none());
+    }
+
+    #[test]
+    fn failure_injection_reports_failed() {
+        let mut ex = StressExecutor::new(0.001, StressMode::Sleep);
+        ex.inject_failure(7);
+        ex.launch(&RunningTask { uid: 7, tx: 1.0, started_at: 0.0, kind: None });
+        let c = ex.wait_next().unwrap();
+        assert!(c.failed);
+    }
+
+    #[test]
+    fn spin_mode_also_completes() {
+        let mut ex = StressExecutor::new(0.001, StressMode::Spin);
+        ex.launch(&RunningTask { uid: 0, tx: 10.0, started_at: 0.0, kind: None });
+        assert_eq!(ex.wait_next().unwrap().uid, 0);
+    }
+}

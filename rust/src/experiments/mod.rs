@@ -1,0 +1,257 @@
+//! Experiment harness (substrate S19): regenerates every table and
+//! figure of the paper's evaluation (§7) and reports paper-vs-measured.
+
+use std::path::Path;
+
+use crate::ddmd::{ddmd_workflow, DdmdConfig};
+use crate::engine::{simulate_cfg, EngineConfig, ExecutionMode, RunReport};
+use crate::entk::Workflow;
+use crate::error::Result;
+use crate::metrics::ascii_timeline;
+use crate::model::{self, Prediction};
+use crate::resources::ClusterSpec;
+use crate::util::bench::Table;
+use crate::workflows::{cdg1, cdg2};
+
+/// Table 3 as printed in the paper (reference values for comparison).
+#[derive(Debug, Clone, Copy)]
+pub struct PaperRow {
+    pub name: &'static str,
+    pub doa_dep: usize,
+    pub doa_res: usize,
+    pub wla: usize,
+    pub t_seq_pred: f64,
+    pub t_seq_meas: f64,
+    pub t_async_pred: f64,
+    pub t_async_meas: f64,
+    pub i_pred: f64,
+    pub i_calc: f64,
+}
+
+pub const PAPER_TABLE3: [PaperRow; 3] = [
+    PaperRow {
+        name: "DeepDriveMD",
+        doa_dep: 2,
+        doa_res: 1,
+        wla: 1,
+        t_seq_pred: 1578.0,
+        t_seq_meas: 1707.0,
+        t_async_pred: 1399.0,
+        t_async_meas: 1373.0,
+        i_pred: 0.113,
+        i_calc: 0.196,
+    },
+    PaperRow {
+        name: "c-DG1",
+        doa_dep: 2,
+        doa_res: 2,
+        wla: 2,
+        t_seq_pred: 2000.0,
+        t_seq_meas: 1945.0,
+        t_async_pred: 1972.0,
+        t_async_meas: 1975.0,
+        i_pred: 0.014,
+        i_calc: -0.015,
+    },
+    PaperRow {
+        name: "c-DG2",
+        doa_dep: 2,
+        doa_res: 2,
+        wla: 2,
+        t_seq_pred: 2000.0,
+        t_seq_meas: 1856.0,
+        t_async_pred: 1378.0,
+        t_async_meas: 1372.0,
+        i_pred: 0.311,
+        i_calc: 0.261,
+    },
+];
+
+/// One reproduced row: our model prediction + our measured runs.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub name: String,
+    pub prediction: Prediction,
+    pub seq: RunReport,
+    pub asy: RunReport,
+}
+
+impl Table3Row {
+    pub fn i_measured(&self) -> f64 {
+        self.asy.improvement_over(&self.seq)
+    }
+}
+
+/// The three experiment workflows on their evaluation clusters.
+///
+/// DDMD runs on the 96-GPU Summit profile exactly as the paper
+/// describes. The c-DG workloads run on the 128-GPU profile: Table 2's
+/// c-DG2 rank-2 GPU demand (96 for {T3,T6} + 16 for {T4,T5}) exceeds
+/// the stated 96-GPU allocation, while the paper's own Eqn. 3
+/// prediction (1300 s) and measurement (1372 s) presume the sets
+/// co-run; 128 GPUs is the smallest Summit-shaped allocation under
+/// which the paper's numbers are self-consistent. The 96-GPU clipped
+/// behaviour is kept as an ablation (`bench_ablations`).
+pub fn experiment_workflows() -> Vec<(Workflow, ClusterSpec)> {
+    vec![
+        (ddmd_workflow(&DdmdConfig::paper()), ClusterSpec::summit_paper()),
+        (cdg1(), ClusterSpec::summit_8gpu()),
+        (cdg2(), ClusterSpec::summit_8gpu()),
+    ]
+}
+
+/// Engine settings calibrated to the paper's measured overheads (~4%
+/// framework + ~2% async): per-task launch 2 s, stage transition 8 s at
+/// paper TX scale.
+pub fn paper_engine_config(seed: u64) -> EngineConfig {
+    EngineConfig { seed, task_overhead: 2.0, stage_overhead: 8.0, ..Default::default() }
+}
+
+/// Experiment E1–E3: regenerate Table 3.
+pub fn run_table3(seed: u64) -> Vec<Table3Row> {
+    experiment_workflows()
+        .into_iter()
+        .map(|(wf, cluster)| {
+            let cfg = paper_engine_config(seed);
+            let prediction = model::predict(&wf, &cluster);
+            let seq = simulate_cfg(&wf, &cluster, ExecutionMode::Sequential, &cfg);
+            let asy = simulate_cfg(&wf, &cluster, ExecutionMode::Asynchronous, &cfg);
+            Table3Row { name: wf.name.clone(), prediction, seq, asy }
+        })
+        .collect()
+}
+
+/// Render the reproduced Table 3 next to the paper's values.
+pub fn render_table3(rows: &[Table3Row]) -> String {
+    let mut t = Table::new(&[
+        "experiment",
+        "DOAdep",
+        "DOAres",
+        "WLA",
+        "tSeq pred",
+        "tSeq meas",
+        "tAsync pred",
+        "tAsync meas",
+        "I pred",
+        "I meas",
+        "I paper",
+    ]);
+    for (row, paper) in rows.iter().zip(PAPER_TABLE3.iter()) {
+        t.row(&[
+            row.name.clone(),
+            format!("{} ({})", row.prediction.doa_dep, paper.doa_dep),
+            format!("{} ({})", row.prediction.doa_res, paper.doa_res),
+            format!("{} ({})", row.prediction.wla, paper.wla),
+            format!("{:.0}", row.prediction.t_seq),
+            format!("{:.0}", row.seq.makespan),
+            format!("{:.0}", row.prediction.t_async),
+            format!("{:.0}", row.asy.makespan),
+            format!("{:+.3}", row.prediction.improvement),
+            format!("{:+.3}", row.i_measured()),
+            format!("{:+.3}", paper.i_calc),
+        ]);
+    }
+    t.to_string()
+}
+
+/// Experiments E4–E6: utilization figures. Writes
+/// `results/<id>_<mode>.csv` and returns the ASCII rendering.
+pub fn run_figure(
+    id: &str,
+    wf: &Workflow,
+    cluster: &ClusterSpec,
+    seed: u64,
+    out_dir: Option<&Path>,
+) -> Result<String> {
+    let cfg = paper_engine_config(seed);
+    let mut out = String::new();
+    for mode in [ExecutionMode::Sequential, ExecutionMode::Asynchronous] {
+        let rep = simulate_cfg(wf, cluster, mode, &cfg);
+        out.push_str(&format!(
+            "== {id} {} : TTX = {:.0} s, cpu util {:.1}%, gpu util {:.1}%\n",
+            mode.label(),
+            rep.makespan,
+            rep.cpu_utilization * 100.0,
+            rep.gpu_utilization * 100.0
+        ));
+        out.push_str(&ascii_timeline(&rep.trace, 72, 6));
+        if let Some(dir) = out_dir {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(
+                dir.join(format!("{id}_{}.csv", mode.label())),
+                rep.trace.to_csv(),
+            )?;
+        }
+    }
+    Ok(out)
+}
+
+/// Shape assertions for the three headline results — used by tests and
+/// CI: signs and rough magnitudes must match the paper.
+pub fn check_shapes(rows: &[Table3Row]) -> Vec<String> {
+    let mut problems = Vec::new();
+    let ddmd = &rows[0];
+    let i = ddmd.i_measured();
+    if !(0.10..=0.30).contains(&i) {
+        problems.push(format!("DDMD I={i:.3} not in [0.10, 0.30] (paper 0.196)"));
+    }
+    let c1 = rows[1].i_measured();
+    if !(-0.10..=0.06).contains(&c1) {
+        problems.push(format!("c-DG1 I={c1:.3} not ~0 (paper -0.015)"));
+    }
+    let c2 = rows[2].i_measured();
+    if !(0.15..=0.40).contains(&c2) {
+        problems.push(format!("c-DG2 I={c2:.3} not in [0.15, 0.40] (paper 0.261)"));
+    }
+    if !(rows[2].i_measured() > rows[1].i_measured()) {
+        problems.push("ordering: c-DG2 must beat c-DG1".into());
+    }
+    problems
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_reproduces_paper_shapes() {
+        let rows = run_table3(42);
+        let problems = check_shapes(&rows);
+        assert!(problems.is_empty(), "shape violations: {problems:?}");
+    }
+
+    #[test]
+    fn table3_doa_values_match_paper() {
+        let rows = run_table3(43);
+        for (row, paper) in rows.iter().zip(PAPER_TABLE3.iter()) {
+            assert_eq!(row.prediction.doa_dep, paper.doa_dep, "{}", row.name);
+        }
+        // DDMD's resource-limited DOA (Table 3's headline subtlety).
+        assert_eq!(rows[0].prediction.doa_res, 1);
+        assert_eq!(rows[0].prediction.wla, 1);
+        // c-DG rows: DOA_res = WLA = 2 on their evaluation cluster.
+        assert_eq!(rows[1].prediction.doa_res, 2);
+        assert_eq!(rows[2].prediction.doa_res, 2);
+    }
+
+    #[test]
+    fn render_table3_is_complete() {
+        let rows = run_table3(44);
+        let s = render_table3(&rows);
+        for name in ["DeepDriveMD", "c-DG1", "c-DG2"] {
+            assert!(s.contains(name));
+        }
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    fn figures_render_and_dump_csv() {
+        let (wf, cluster) = &experiment_workflows()[0];
+        let dir = std::env::temp_dir().join("asyncflow_fig_test");
+        let art = run_figure("fig4", wf, cluster, 45, Some(&dir)).unwrap();
+        assert!(art.contains("sequential"));
+        assert!(art.contains("asynchronous"));
+        assert!(dir.join("fig4_sequential.csv").exists());
+        assert!(dir.join("fig4_asynchronous.csv").exists());
+    }
+}

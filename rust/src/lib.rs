@@ -1,0 +1,73 @@
+//! # asyncflow
+//!
+//! A reproduction of *"Asynchronous Execution of Heterogeneous Tasks in
+//! ML-driven HPC Workflows"* (Pascuzzi, Kilic, Turilli, Jha — 2022) as a
+//! production-grade three-layer stack:
+//!
+//! - **Layer 3 (this crate)**: the paper's coordination contribution — an
+//!   EnTK-like Pipeline/Stage/Task workflow engine ([`entk`]), a
+//!   RADICAL-Pilot-like pilot runtime with a continuous scheduler
+//!   ([`pilot`]), a Summit-like resource model ([`resources`]), the
+//!   asynchronicity model (DOA_dep / DOA_res / WLA, Eqns 1–7) ([`model`],
+//!   [`dag`]), a discrete-event simulator ([`sim`]) and real executors
+//!   ([`exec`]) behind one engine ([`engine`]).
+//! - **Layer 2**: JAX compute graphs (autoencoder training/inference, MD)
+//!   AOT-lowered to HLO text at build time (`python/compile/`).
+//! - **Layer 1**: Pallas kernels (blocked matmul, pairwise distances,
+//!   Lennard-Jones forces) called by Layer 2.
+//!
+//! Layer 3 executes the compiled artifacts through [`runtime`] (PJRT CPU
+//! client); Python never runs on the workflow execution path.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use asyncflow::prelude::*;
+//!
+//! // Build the paper's DeepDriveMD workflow (3 iterations).
+//! let wf = asyncflow::ddmd::ddmd_workflow(&DdmdConfig::paper());
+//! let cluster = ClusterSpec::summit_paper();
+//!
+//! // Predict with the paper's analytical model ...
+//! let pred = asyncflow::model::predict(&wf, &cluster);
+//! println!("WLA = {}, predicted I = {:.3}", pred.wla, pred.improvement);
+//!
+//! // ... and measure by simulating both execution modes.
+//! let seq = asyncflow::engine::simulate(&wf, &cluster, ExecutionMode::Sequential);
+//! let asy = asyncflow::engine::simulate(&wf, &cluster, ExecutionMode::Asynchronous);
+//! println!("measured I = {:.3}", 1.0 - asy.makespan / seq.makespan);
+//! ```
+
+pub mod campaign;
+pub mod config;
+pub mod dag;
+pub mod ddmd;
+pub mod engine;
+pub mod entk;
+pub mod error;
+pub mod exec;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod pilot;
+pub mod resources;
+pub mod runtime;
+pub mod sim;
+pub mod task;
+pub mod util;
+pub mod workflows;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::dag::{Dag, DagAnalysis};
+    pub use crate::ddmd::DdmdConfig;
+    pub use crate::engine::{simulate, ExecutionMode, RunReport};
+    pub use crate::entk::{Pipeline, Stage, Workflow};
+    pub use crate::error::{Error, Result};
+    pub use crate::metrics::UtilizationTrace;
+    pub use crate::model::Prediction;
+    pub use crate::resources::{ClusterSpec, ResourceRequest};
+    pub use crate::task::{TaskSetSpec, TaskSpec};
+}

@@ -1,0 +1,252 @@
+//! asyncflow CLI — the workflow launcher.
+//!
+//! ```text
+//! asyncflow experiment table3 [--seed N]
+//! asyncflow experiment fig4|fig5|fig6 [--out results/]
+//! asyncflow run --workflow ddmd|cdg1|cdg2 --mode seq|async|adaptive
+//!               [--cluster summit_paper|summit_706|summit_8gpu]
+//!               [--seed N] [--policy pipeline_age|fifo|fifo_strict|smallest_first]
+//! asyncflow run --config configs/experiment.json --mode async
+//! asyncflow predict --workflow ddmd|cdg1|cdg2 [--cluster ...]
+//! asyncflow masking --workflow ddmd|cdg1|cdg2 [--cluster ...]
+//! ```
+
+use asyncflow::config;
+use asyncflow::ddmd::{ddmd_workflow, DdmdConfig};
+use asyncflow::engine::{simulate_cfg, EngineConfig, ExecutionMode};
+use asyncflow::entk::Workflow;
+use asyncflow::error::{Error, Result};
+use asyncflow::experiments;
+use asyncflow::metrics::ascii_timeline;
+use asyncflow::model;
+use asyncflow::pilot::Policy;
+use asyncflow::resources::ClusterSpec;
+use asyncflow::util::cli::Args;
+use asyncflow::workflows::{cdg1, cdg2};
+
+fn main() {
+    let args = match Args::from_env(&["verbose", "ascii"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("experiment") => cmd_experiment(args),
+        Some("run") => cmd_run(args),
+        Some("predict") => cmd_predict(args),
+        Some("masking") => cmd_masking(args),
+        Some("campaign") => cmd_campaign(args),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "asyncflow — asynchronous execution of heterogeneous tasks \
+(Pascuzzi et al. 2022 reproduction)
+
+subcommands:
+  experiment table3|fig4|fig5|fig6|all   regenerate a paper table/figure
+  run      --workflow ddmd|cdg1|cdg2 --mode seq|async|adaptive
+  predict  --workflow ...                analytical model only (Eqns 1-7)
+  masking  --workflow ...                TX-masking report (Sec 5.3)
+  campaign --workflows ddmd,cdg1,cdg2    workflow-level asynchronicity
+
+common options:
+  --cluster summit_paper|summit_706|summit_8gpu|local_small
+  --seed N  --policy pipeline_age|fifo|fifo_strict|smallest_first
+  --out DIR (figures)  --ascii (timeline art)";
+
+fn pick_workflow(args: &Args) -> Result<Workflow> {
+    match args.get_or("workflow", "ddmd") {
+        "ddmd" => Ok(ddmd_workflow(&DdmdConfig::paper())),
+        "ddmd-small" => Ok(ddmd_workflow(&DdmdConfig::small())),
+        "cdg1" => Ok(cdg1()),
+        "cdg2" => Ok(cdg2()),
+        other => {
+            // Treat as a config file path.
+            let (wf, _, _) = config::load_experiment(other)?;
+            Ok(wf)
+        }
+    }
+}
+
+fn pick_cluster(args: &Args) -> Result<ClusterSpec> {
+    match args.get_or("cluster", "summit_paper") {
+        "summit_paper" => Ok(ClusterSpec::summit_paper()),
+        "summit_706" => Ok(ClusterSpec::summit_706()),
+        "summit_8gpu" => Ok(ClusterSpec::summit_8gpu()),
+        "local_small" => Ok(ClusterSpec::local_small()),
+        other => Err(Error::Config(format!("unknown cluster '{other}'"))),
+    }
+}
+
+fn pick_engine(args: &Args) -> Result<EngineConfig> {
+    let mut cfg = experiments::paper_engine_config(args.get_u64("seed", 42)?);
+    cfg.policy = match args.get_or("policy", "pipeline_age") {
+        "pipeline_age" => Policy::PipelineAge,
+        "fifo" => Policy::FifoBackfill,
+        "fifo_strict" => Policy::FifoStrict,
+        "smallest_first" => Policy::SmallestFirst,
+        other => return Err(Error::Config(format!("unknown policy '{other}'"))),
+    };
+    cfg.task_overhead = args.get_f64("task-overhead", cfg.task_overhead)?;
+    cfg.stage_overhead = args.get_f64("stage-overhead", cfg.stage_overhead)?;
+    Ok(cfg)
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let seed = args.get_u64("seed", 42)?;
+    let out_dir = args.get("out").map(std::path::PathBuf::from);
+
+    if which == "table3" || which == "all" {
+        println!("# Table 3 (paper values in parentheses / right column)\n");
+        let rows = experiments::run_table3(seed);
+        println!("{}", experiments::render_table3(&rows));
+        let problems = experiments::check_shapes(&rows);
+        if problems.is_empty() {
+            println!("shape check: OK (signs and magnitudes match the paper)");
+        } else {
+            println!("shape check: {problems:?}");
+        }
+    }
+    let wfs = experiments::experiment_workflows();
+    for (id, idx) in [("fig4", 0usize), ("fig5", 1), ("fig6", 2)] {
+        if which == id || which == "all" {
+            let (wf, cluster) = &wfs[idx];
+            println!("\n# {id}: {} utilization timelines\n", wf.name);
+            let art = experiments::run_figure(id, wf, cluster, seed, out_dir.as_deref())?;
+            println!("{art}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let (wf, cluster, mut cfg) = if let Some(path) = args.get("config") {
+        config::load_experiment(path)?
+    } else {
+        (pick_workflow(args)?, pick_cluster(args)?, pick_engine(args)?)
+    };
+    if args.get("seed").is_some() {
+        cfg.seed = args.get_u64("seed", cfg.seed)?;
+    }
+    let mode: ExecutionMode = args.get_or("mode", "async").parse()?;
+    let rep = simulate_cfg(&wf, &cluster, mode, &cfg);
+    println!(
+        "workflow={} mode={} cluster={}\n  TTX       = {:.1} s\n  cpu util  = {:.1}%\n  gpu util  = {:.1}%\n  throughput= {:.3} tasks/s\n  DOA_res   = {}\n  tasks     = {} ({} failed)",
+        rep.workflow,
+        mode.label(),
+        cluster.name,
+        rep.makespan,
+        rep.cpu_utilization * 100.0,
+        rep.gpu_utilization * 100.0,
+        rep.throughput,
+        rep.doa_res,
+        rep.records.len(),
+        rep.failed_tasks,
+    );
+    if args.flag("ascii") {
+        println!("{}", ascii_timeline(&rep.trace, 72, 6));
+    }
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        let base = format!("{}_{}", rep.workflow.replace('/', "_"), mode.label());
+        let p = std::path::Path::new(dir).join(format!("{base}.csv"));
+        std::fs::write(&p, rep.trace.to_csv())?;
+        let gantt = std::path::Path::new(dir).join(format!("{base}.trace.json"));
+        std::fs::write(&gantt, asyncflow::metrics::chrome_trace(&rep))?;
+        let rj = std::path::Path::new(dir).join(format!("{base}.report.json"));
+        std::fs::write(&rj, asyncflow::metrics::report_to_json(&rep).to_string_pretty())?;
+        println!("wrote {} (+ .trace.json for Perfetto, + .report.json)", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let wf = pick_workflow(args)?;
+    let cluster = pick_cluster(args)?;
+    let p = model::predict(&wf, &cluster);
+    println!(
+        "workflow={} cluster={}\n  DOA_dep  = {}\n  DOA_res  = {}\n  WLA      = {} (Eqn 1)\n  tSeq     = {:.0} s (Eqn 2 + overheads)\n  tAsync   = {:.0} s (Eqn 3 + overheads)\n  tAdaptive>= {:.0} s (critical path)\n  I        = {:+.3} (Eqn 5)",
+        p.workflow, cluster.name, p.doa_dep, p.doa_res, p.wla, p.t_seq, p.t_async,
+        p.t_adaptive_bound, p.improvement
+    );
+    if p.improvement <= 0.0 {
+        println!("  verdict  : asynchronicity is NOT worth it for this workflow (cf. c-DG1)");
+    } else {
+        println!("  verdict  : asynchronous execution should pay off");
+    }
+    Ok(())
+}
+
+fn cmd_campaign(args: &Args) -> Result<()> {
+    let names = args.get_or("workflows", "ddmd,cdg1,cdg2");
+    let mut camp = asyncflow::campaign::Campaign::new("campaign");
+    for n in names.split(',') {
+        camp = camp.add(match n.trim() {
+            "ddmd" => ddmd_workflow(&DdmdConfig::paper()),
+            "cdg1" => cdg1(),
+            "cdg2" => cdg2(),
+            other => {
+                let (wf, _, _) = config::load_experiment(other)?;
+                wf
+            }
+        });
+    }
+    let cluster = pick_cluster(args)?;
+    let cfg = pick_engine(args)?;
+    let (seq, asy) = camp.simulate(&cluster, &cfg)?;
+    println!(
+        "campaign of {} workflows on {}\n  sequential (workflow-level BSP): TTX = {:.0} s, cpu {:.1}%, gpu {:.1}%\n  asynchronous (workflow-level):   TTX = {:.0} s, cpu {:.1}%, gpu {:.1}%\n  I = {:+.3}",
+        camp.members.len(),
+        cluster.name,
+        seq.makespan,
+        seq.cpu_utilization * 100.0,
+        seq.gpu_utilization * 100.0,
+        asy.makespan,
+        asy.cpu_utilization * 100.0,
+        asy.gpu_utilization * 100.0,
+        asy.improvement_over(&seq)
+    );
+    Ok(())
+}
+
+fn cmd_masking(args: &Args) -> Result<()> {
+    let wf = pick_workflow(args)?;
+    let cluster = pick_cluster(args)?;
+    let r = model::masking_report(&wf, &cluster);
+    println!(
+        "critical path = {:.0} s; masked TX = {:.0} s across {} sets",
+        r.critical_path,
+        r.masked_seconds,
+        r.sets.iter().filter(|s| s.masked).count()
+    );
+    for s in &r.sets {
+        println!(
+            "  {:<10} dur={:>7.1}s start={:>7.1} finish={:>7.1} slack={:>7.1} {}",
+            s.set_name,
+            s.duration,
+            s.start,
+            s.finish,
+            s.slack,
+            if s.masked { "MASKED" } else { "critical" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,298 @@
+//! Metrics (substrate S17): per-task records, utilization timelines
+//! (the data behind Figures 4–6), throughput, and measured DOA_res.
+
+mod chrome;
+mod plot;
+mod report;
+
+pub use chrome::chrome_trace;
+pub use plot::ascii_timeline;
+pub use report::{per_set_summaries, report_to_json, SetSummary};
+
+use crate::resources::ClusterSpec;
+
+/// One executed task's lifecycle record.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub uid: usize,
+    pub set_idx: usize,
+    pub set_name: String,
+    pub pipeline: usize,
+    pub branch: usize,
+    pub submitted: f64,
+    pub started: f64,
+    pub finished: f64,
+    pub cores: u64,
+    pub gpus: u64,
+    pub failed: bool,
+}
+
+impl TaskRecord {
+    pub fn wait_time(&self) -> f64 {
+        self.started - self.submitted
+    }
+    pub fn runtime(&self) -> f64 {
+        self.finished - self.started
+    }
+}
+
+/// Step-function utilization over time, rebuilt from task records —
+/// exactly what Figs. 4–6 plot (cores/GPUs in use vs. TTX).
+#[derive(Debug, Clone)]
+pub struct UtilizationTrace {
+    /// (time, cores_in_use, gpus_in_use) at each change point.
+    pub points: Vec<(f64, u64, u64)>,
+    pub total_cores: u64,
+    pub total_gpus: u64,
+    pub makespan: f64,
+}
+
+impl UtilizationTrace {
+    pub fn from_records(records: &[TaskRecord], cluster: &ClusterSpec) -> UtilizationTrace {
+        // Change points: every start (+) and finish (-).
+        let mut deltas: Vec<(f64, i64, i64)> = Vec::with_capacity(records.len() * 2);
+        let mut makespan = 0.0f64;
+        for r in records {
+            deltas.push((r.started, r.cores as i64, r.gpus as i64));
+            deltas.push((r.finished, -(r.cores as i64), -(r.gpus as i64)));
+            makespan = makespan.max(r.finished);
+        }
+        deltas.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut points = Vec::with_capacity(deltas.len() + 1);
+        let (mut c, mut g) = (0i64, 0i64);
+        points.push((0.0, 0, 0));
+        let mut i = 0;
+        while i < deltas.len() {
+            let t = deltas[i].0;
+            // Fold all deltas at identical timestamps.
+            while i < deltas.len() && deltas[i].0 == t {
+                c += deltas[i].1;
+                g += deltas[i].2;
+                i += 1;
+            }
+            debug_assert!(c >= 0 && g >= 0);
+            points.push((t, c.max(0) as u64, g.max(0) as u64));
+        }
+        UtilizationTrace {
+            points,
+            total_cores: cluster.total_cores(),
+            total_gpus: cluster.total_gpus(),
+            makespan,
+        }
+    }
+
+    /// Time-integrated utilization in [0,1] for cores / GPUs.
+    pub fn mean_utilization(&self) -> (f64, f64) {
+        if self.makespan <= 0.0 {
+            return (0.0, 0.0);
+        }
+        let (mut core_s, mut gpu_s) = (0.0, 0.0);
+        for w in self.points.windows(2) {
+            let dt = w[1].0 - w[0].0;
+            core_s += w[0].1 as f64 * dt;
+            gpu_s += w[0].2 as f64 * dt;
+        }
+        // Tail after the last change point is all-zero by construction.
+        (
+            core_s / (self.total_cores as f64 * self.makespan),
+            gpu_s / (self.total_gpus.max(1) as f64 * self.makespan),
+        )
+    }
+
+    /// Utilization sampled on a uniform grid (CSV/figure output).
+    pub fn sampled(&self, samples: usize) -> Vec<(f64, f64, f64)> {
+        assert!(samples >= 2);
+        let mut out = Vec::with_capacity(samples);
+        let mut seg = 0usize;
+        for k in 0..samples {
+            let t = self.makespan * k as f64 / (samples - 1) as f64;
+            while seg + 1 < self.points.len() && self.points[seg + 1].0 <= t {
+                seg += 1;
+            }
+            let (_, c, g) = self.points[seg];
+            out.push((
+                t,
+                c as f64 / self.total_cores as f64,
+                g as f64 / self.total_gpus.max(1) as f64,
+            ));
+        }
+        out
+    }
+
+    /// CSV rendering: `time,cores_used,gpus_used,core_frac,gpu_frac`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("time_s,cores_used,gpus_used,core_frac,gpu_frac\n");
+        for &(t, c, g) in &self.points {
+            s.push_str(&format!(
+                "{:.3},{},{},{:.4},{:.4}\n",
+                t,
+                c,
+                g,
+                c as f64 / self.total_cores as f64,
+                g as f64 / self.total_gpus.max(1) as f64
+            ));
+        }
+        s
+    }
+}
+
+/// Measured DOA_res (§5.2): the maximum number of *distinct independent
+/// branches* with at least one task running at the same instant, minus 1.
+pub fn measured_doa_res(records: &[TaskRecord]) -> usize {
+    // Sweep-line over (time, +branch) / (time, -branch) events.
+    #[derive(PartialEq)]
+    enum Ev {
+        End,
+        Start,
+    }
+    let mut evs: Vec<(f64, Ev, usize)> = Vec::with_capacity(records.len() * 2);
+    for r in records {
+        evs.push((r.started, Ev::Start, r.branch));
+        evs.push((r.finished, Ev::End, r.branch));
+    }
+    // Ends before starts at equal time (half-open intervals).
+    evs.sort_by(|a, b| {
+        a.0.total_cmp(&b.0).then_with(|| match (&a.1, &b.1) {
+            (Ev::End, Ev::Start) => std::cmp::Ordering::Less,
+            (Ev::Start, Ev::End) => std::cmp::Ordering::Greater,
+            _ => std::cmp::Ordering::Equal,
+        })
+    });
+    let max_branch = records.iter().map(|r| r.branch).max().unwrap_or(0);
+    let mut live = vec![0usize; max_branch + 1];
+    let mut distinct = 0usize;
+    let mut best = 0usize;
+    for (_, ev, b) in evs {
+        match ev {
+            Ev::Start => {
+                live[b] += 1;
+                if live[b] == 1 {
+                    distinct += 1;
+                    best = best.max(distinct);
+                }
+            }
+            Ev::End => {
+                live[b] -= 1;
+                if live[b] == 0 {
+                    distinct -= 1;
+                }
+            }
+        }
+    }
+    best.saturating_sub(1)
+}
+
+/// Task throughput: completed tasks per second over the makespan.
+pub fn throughput(records: &[TaskRecord]) -> f64 {
+    let makespan = records.iter().map(|r| r.finished).fold(0.0, f64::max);
+    if makespan <= 0.0 {
+        0.0
+    } else {
+        records.len() as f64 / makespan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(uid: usize, branch: usize, start: f64, end: f64, cores: u64, gpus: u64) -> TaskRecord {
+        TaskRecord {
+            uid,
+            set_idx: 0,
+            set_name: "S".into(),
+            pipeline: 0,
+            branch,
+            submitted: start,
+            started: start,
+            finished: end,
+            cores,
+            gpus,
+            failed: false,
+        }
+    }
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::uniform("t", 1, 10, 2)
+    }
+
+    #[test]
+    fn utilization_integrates_correctly() {
+        // One task: 5 cores for 10s of a 10s makespan on 10 cores = 50%.
+        let recs = vec![rec(0, 0, 0.0, 10.0, 5, 0)];
+        let tr = UtilizationTrace::from_records(&recs, &cluster());
+        let (cu, gu) = tr.mean_utilization();
+        assert!((cu - 0.5).abs() < 1e-9);
+        assert_eq!(gu, 0.0);
+        assert_eq!(tr.makespan, 10.0);
+    }
+
+    #[test]
+    fn utilization_overlapping_tasks() {
+        let recs = vec![
+            rec(0, 0, 0.0, 10.0, 4, 1),
+            rec(1, 0, 5.0, 10.0, 4, 1),
+        ];
+        let tr = UtilizationTrace::from_records(&recs, &cluster());
+        // cores: 4*10 + 4*5 = 60 core-s over 100 -> 0.6
+        let (cu, gu) = tr.mean_utilization();
+        assert!((cu - 0.6).abs() < 1e-9);
+        // gpus: 1*10 + 1*5 = 15 gpu-s over 20 -> 0.75
+        assert!((gu - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampled_grid_is_uniform() {
+        let recs = vec![rec(0, 0, 0.0, 10.0, 10, 2)];
+        let tr = UtilizationTrace::from_records(&recs, &cluster());
+        let s = tr.sampled(11);
+        assert_eq!(s.len(), 11);
+        assert!((s[0].0 - 0.0).abs() < 1e-9);
+        assert!((s[10].0 - 10.0).abs() < 1e-9);
+        assert!((s[5].1 - 1.0).abs() < 1e-9, "full core usage mid-run");
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let recs = vec![rec(0, 0, 0.0, 1.0, 1, 0)];
+        let tr = UtilizationTrace::from_records(&recs, &cluster());
+        let csv = tr.to_csv();
+        assert!(csv.starts_with("time_s,"));
+        assert!(csv.lines().count() >= 3);
+    }
+
+    #[test]
+    fn doa_res_counts_distinct_branches() {
+        // Branch 0 and 1 overlap; branch 2 runs alone afterwards.
+        let recs = vec![
+            rec(0, 0, 0.0, 10.0, 1, 0),
+            rec(1, 1, 5.0, 15.0, 1, 0),
+            rec(2, 2, 20.0, 30.0, 1, 0),
+        ];
+        assert_eq!(measured_doa_res(&recs), 1);
+    }
+
+    #[test]
+    fn doa_res_sequential_is_zero() {
+        let recs = vec![
+            rec(0, 0, 0.0, 10.0, 1, 0),
+            rec(1, 1, 10.0, 20.0, 1, 0), // half-open: no overlap at t=10
+        ];
+        assert_eq!(measured_doa_res(&recs), 0);
+    }
+
+    #[test]
+    fn doa_res_same_branch_does_not_count_twice() {
+        let recs = vec![
+            rec(0, 0, 0.0, 10.0, 1, 0),
+            rec(1, 0, 0.0, 10.0, 1, 0),
+        ];
+        assert_eq!(measured_doa_res(&recs), 0);
+    }
+
+    #[test]
+    fn throughput_simple() {
+        let recs = vec![rec(0, 0, 0.0, 5.0, 1, 0), rec(1, 0, 0.0, 10.0, 1, 0)];
+        assert!((throughput(&recs) - 0.2).abs() < 1e-9);
+    }
+}

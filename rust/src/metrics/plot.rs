@@ -1,0 +1,83 @@
+//! ASCII timeline rendering of utilization traces — terminal versions
+//! of the paper's Figures 4–6.
+
+use super::UtilizationTrace;
+
+/// Render CPU and GPU utilization as two stacked ASCII strips.
+///
+/// Each column is a time bucket; glyph height encodes the fraction of
+/// the allocation in use (mirrors the colored regions of Figs. 4–6).
+pub fn ascii_timeline(trace: &UtilizationTrace, width: usize, height: usize) -> String {
+    assert!(width >= 10 && height >= 2);
+    let samples = trace.sampled(width);
+    let mut out = String::new();
+    for (label, pick) in [
+        ("CPU", 1usize), // index into (t, core_frac, gpu_frac)
+        ("GPU", 2usize),
+    ] {
+        out.push_str(&format!(
+            "{label} utilization (peak capacity = {}):\n",
+            if pick == 1 { trace.total_cores } else { trace.total_gpus }
+        ));
+        for row in (0..height).rev() {
+            let threshold = (row as f64 + 0.5) / height as f64;
+            let mut line = String::with_capacity(width + 8);
+            line.push_str(&format!("{:>4.0}% |", threshold * 100.0));
+            for s in &samples {
+                let frac = if pick == 1 { s.1 } else { s.2 };
+                line.push(if frac >= threshold { '█' } else { ' ' });
+            }
+            line.push('\n');
+            out.push_str(&line);
+        }
+        out.push_str(&format!(
+            "      +{}\n       0 s {:>w$.0} s\n",
+            "-".repeat(width),
+            trace.makespan,
+            w = width.saturating_sub(8)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::TaskRecord;
+    use crate::resources::ClusterSpec;
+
+    #[test]
+    fn renders_full_and_empty_regions() {
+        let recs = vec![TaskRecord {
+            uid: 0,
+            set_idx: 0,
+            set_name: "S".into(),
+            pipeline: 0,
+            branch: 0,
+            submitted: 0.0,
+            started: 0.0,
+            finished: 5.0,
+            cores: 10,
+            gpus: 0,
+            failed: false,
+        }, TaskRecord {
+            uid: 1,
+            set_idx: 0,
+            set_name: "S".into(),
+            pipeline: 0,
+            branch: 0,
+            submitted: 0.0,
+            started: 5.0,
+            finished: 10.0,
+            cores: 0,
+            gpus: 2,
+            failed: false,
+        }];
+        let tr = UtilizationTrace::from_records(&recs, &ClusterSpec::uniform("t", 1, 10, 2));
+        let art = ascii_timeline(&tr, 40, 4);
+        assert!(art.contains("CPU utilization"));
+        assert!(art.contains("GPU utilization"));
+        assert!(art.contains('█'));
+        assert!(art.lines().count() > 8);
+    }
+}

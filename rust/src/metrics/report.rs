@@ -1,0 +1,145 @@
+//! Structured report export: RunReport -> JSON (for downstream
+//! analysis/plotting) and per-set summary tables.
+
+use std::collections::BTreeMap;
+
+use crate::engine::RunReport;
+use crate::util::json::{obj, Json};
+use crate::util::stats::Summary;
+
+/// Per-task-set aggregate statistics from a run.
+#[derive(Debug, Clone)]
+pub struct SetSummary {
+    pub set_name: String,
+    pub tasks: usize,
+    pub wait: Summary,
+    pub runtime: Summary,
+    pub first_start: f64,
+    pub last_finish: f64,
+}
+
+/// Aggregate task records by set.
+pub fn per_set_summaries(rep: &RunReport) -> Vec<SetSummary> {
+    let mut groups: BTreeMap<&str, Vec<&crate::metrics::TaskRecord>> = BTreeMap::new();
+    for r in &rep.records {
+        groups.entry(r.set_name.as_str()).or_default().push(r);
+    }
+    groups
+        .into_iter()
+        .map(|(name, rs)| {
+            let waits: Vec<f64> = rs.iter().map(|r| r.wait_time()).collect();
+            let runtimes: Vec<f64> = rs.iter().map(|r| r.runtime()).collect();
+            SetSummary {
+                set_name: name.to_string(),
+                tasks: rs.len(),
+                wait: Summary::of(&waits),
+                runtime: Summary::of(&runtimes),
+                first_start: rs.iter().map(|r| r.started).fold(f64::INFINITY, f64::min),
+                last_finish: rs.iter().map(|r| r.finished).fold(0.0, f64::max),
+            }
+        })
+        .collect()
+}
+
+/// Full JSON export of a run (metrics + per-set summaries + trace).
+pub fn report_to_json(rep: &RunReport) -> Json {
+    let sets = per_set_summaries(rep)
+        .into_iter()
+        .map(|s| {
+            obj([
+                ("set", Json::from(s.set_name)),
+                ("tasks", Json::from(s.tasks)),
+                ("wait_mean", Json::from(s.wait.mean)),
+                ("wait_p95", Json::from(s.wait.p95)),
+                ("runtime_mean", Json::from(s.runtime.mean)),
+                ("first_start", Json::from(s.first_start)),
+                ("last_finish", Json::from(s.last_finish)),
+            ])
+        })
+        .collect();
+    obj([
+        ("workflow", Json::from(rep.workflow.clone())),
+        ("mode", Json::from(rep.mode.label())),
+        ("makespan", Json::from(rep.makespan)),
+        ("cpu_utilization", Json::from(rep.cpu_utilization)),
+        ("gpu_utilization", Json::from(rep.gpu_utilization)),
+        ("throughput", Json::from(rep.throughput)),
+        ("doa_res_measured", Json::from(rep.doa_res)),
+        ("tasks", Json::from(rep.records.len())),
+        ("failed_tasks", Json::from(rep.failed_tasks)),
+        ("sched_rounds", Json::from(rep.sched_rounds)),
+        ("sets", Json::Arr(sets)),
+        (
+            "trace",
+            Json::Arr(
+                rep.trace
+                    .points
+                    .iter()
+                    .map(|&(t, c, g)| {
+                        Json::Arr(vec![
+                            Json::from(t),
+                            Json::from(c as usize),
+                            Json::from(g as usize),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::Dag;
+    use crate::engine::{simulate_cfg, EngineConfig, ExecutionMode};
+    use crate::entk::{Pipeline, Workflow};
+    use crate::resources::{ClusterSpec, ResourceRequest};
+    use crate::task::TaskSetSpec;
+
+    fn run() -> RunReport {
+        let mut dag = Dag::new();
+        dag.add_node("A");
+        dag.add_node("B");
+        dag.add_edge(0, 1).unwrap();
+        let wf = Workflow {
+            name: "r".into(),
+            sets: vec![
+                TaskSetSpec::new("A", 3, ResourceRequest::new(1, 0), 5.0).with_sigma(0.0),
+                TaskSetSpec::new("B", 2, ResourceRequest::new(1, 0), 2.0).with_sigma(0.0),
+            ],
+            dag,
+            sequential: vec![Pipeline::new("s").stage(&[0]).stage(&[1])],
+            asynchronous: vec![Pipeline::new("a").stage(&[0]).stage(&[1])],
+        };
+        simulate_cfg(
+            &wf,
+            &ClusterSpec::uniform("t", 1, 4, 0),
+            ExecutionMode::Sequential,
+            &EngineConfig::ideal(),
+        )
+    }
+
+    #[test]
+    fn per_set_summaries_aggregate() {
+        let rep = run();
+        let sums = per_set_summaries(&rep);
+        assert_eq!(sums.len(), 2);
+        let a = sums.iter().find(|s| s.set_name == "A").unwrap();
+        assert_eq!(a.tasks, 3);
+        assert!((a.runtime.mean - 5.0).abs() < 1e-9);
+        assert_eq!(a.first_start, 0.0);
+    }
+
+    #[test]
+    fn json_export_parses_back() {
+        let rep = run();
+        let j = report_to_json(&rep);
+        let text = j.to_string_pretty();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back.get("workflow").as_str(), Some("r"));
+        assert_eq!(back.get("tasks").as_u64(), Some(5));
+        assert!(back.get("trace").as_arr().unwrap().len() >= 3);
+        assert_eq!(back.get("mode").as_str(), Some("sequential"));
+    }
+}

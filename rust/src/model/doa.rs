@@ -1,0 +1,165 @@
+//! Analytic DOA_res (§5.2): wavefront analysis of the asynchronous
+//! realization.
+//!
+//! The paper's examples reason about DOA_res by asking, at the
+//! workflow's execution frontiers, *how many independent branches can
+//! have their current task set resident on the allocation at once*
+//! (e.g. DDMD: a Simulation set takes all 96 GPUs, so at most one
+//! branch can be in Simulation while another progresses through
+//! CPU-side Aggregation — DOA_res = 1).
+//!
+//! The wavefront algorithm walks the asynchronous pipelines in
+//! lockstep: at every step it greedily places each pipeline's current
+//! stage (full concurrent footprint of all member sets) into an empty
+//! allocation, in pipeline order; placed pipelines advance. DOA_res is
+//! the maximum number of *distinct dependency branches* ever co-resident,
+//! minus one, capped at DOA_dep (resources cannot permit more
+//! asynchronicity than dependencies do).
+
+use std::collections::BTreeSet;
+
+use crate::dag::DagAnalysis;
+use crate::entk::Workflow;
+use crate::resources::{Allocator, ClusterSpec};
+
+/// Analytic resource-permitted degree of asynchronicity.
+pub fn doa_res_analytic(wf: &Workflow, cluster: &ClusterSpec) -> usize {
+    let analysis = wf.analysis();
+    let branch_of = &analysis.branches.branch_of;
+    let pipelines = &wf.asynchronous;
+    let mut stage_idx = vec![0usize; pipelines.len()];
+    let mut best = 0usize;
+    // Set indices whose stages were placed in *previous* steps — a
+    // stage is eligible only when the DAG parents of all its members
+    // are complete (cross-pipeline dependencies respected).
+    let mut completed: BTreeSet<usize> = BTreeSet::new();
+
+    // Bounded walk (progress is forced, so this terminates; the bound
+    // is belt-and-braces).
+    let total_stages: usize = pipelines.iter().map(|p| p.stages.len()).sum();
+    for _ in 0..total_stages * 2 + 4 {
+        if stage_idx
+            .iter()
+            .zip(pipelines)
+            .all(|(&s, p)| s >= p.stages.len())
+        {
+            break;
+        }
+        let mut alloc = Allocator::new(cluster);
+        let mut branches: BTreeSet<usize> = BTreeSet::new();
+        let mut advanced = Vec::new();
+        for (pi, p) in pipelines.iter().enumerate() {
+            if stage_idx[pi] >= p.stages.len() {
+                continue;
+            }
+            let stage = &p.stages[stage_idx[pi]];
+            let eligible = stage.sets.iter().all(|&s| {
+                wf.dag.parents(s).iter().all(|pa| completed.contains(pa))
+            });
+            if !eligible {
+                continue;
+            }
+            // Try to place every task of every member set.
+            let mut placements = Vec::new();
+            let mut fits = true;
+            'sets: for &s in &stage.sets {
+                let set = &wf.sets[s];
+                for _ in 0..set.tasks {
+                    match alloc.try_alloc(&set.req) {
+                        Some(pl) => placements.push(pl),
+                        None => {
+                            fits = false;
+                            break 'sets;
+                        }
+                    }
+                }
+            }
+            if fits {
+                for &s in &stage.sets {
+                    branches.insert(branch_of[s]);
+                }
+                advanced.push(pi);
+            } else {
+                // Roll back partial placement.
+                for pl in &placements {
+                    alloc.release(pl);
+                }
+            }
+        }
+        if advanced.is_empty() {
+            // Force progress on the oldest unfinished, eligible pipeline
+            // (a stage too big for even an empty allocation runs in
+            // waves; an ineligible head means a cross-pipeline dep is
+            // pending and some other pipeline advanced last step).
+            if let Some(pi) = (0..pipelines.len()).find(|&pi| {
+                stage_idx[pi] < pipelines[pi].stages.len()
+                    && pipelines[pi].stages[stage_idx[pi]]
+                        .sets
+                        .iter()
+                        .all(|&s| wf.dag.parents(s).iter().all(|pa| completed.contains(pa)))
+            }) {
+                for &s in &pipelines[pi].stages[stage_idx[pi]].sets {
+                    branches.insert(branch_of[s]);
+                }
+                advanced.push(pi);
+            }
+        }
+        best = best.max(branches.len());
+        for pi in advanced {
+            for &s in &pipelines[pi].stages[stage_idx[pi]].sets {
+                completed.insert(s);
+            }
+            stage_idx[pi] += 1;
+        }
+    }
+    best.saturating_sub(1).min(analysis.doa_dep)
+}
+
+/// Convenience: WLA = min(DOA_dep, DOA_res) (Eqn. 1).
+pub fn wla(wf: &Workflow, cluster: &ClusterSpec) -> usize {
+    DagAnalysis::of(&wf.dag)
+        .doa_dep
+        .min(doa_res_analytic(wf, cluster))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ddmd::{ddmd_workflow, DdmdConfig};
+    use crate::workflows::{cdg1, cdg2};
+
+    #[test]
+    fn ddmd_doa_res_is_1_on_summit() {
+        // Table 3: Simulation/Inference sets each need all 96 GPUs, so
+        // only one branch can hold its GPU-heavy set while a second
+        // makes CPU-side progress.
+        let wf = ddmd_workflow(&DdmdConfig::paper());
+        let c = ClusterSpec::summit_paper();
+        assert_eq!(doa_res_analytic(&wf, &c), 1);
+        assert_eq!(wla(&wf, &c), 1);
+    }
+
+    #[test]
+    fn cdg_doa_res_is_2_on_ample_gpus() {
+        // On the 128-GPU profile both {T3,T6} and {T4,T5} frontiers are
+        // co-resident: three branches -> DOA_res = 2 (Table 3).
+        let c = ClusterSpec::summit_8gpu();
+        assert_eq!(doa_res_analytic(&cdg1(), &c), 2);
+        assert_eq!(doa_res_analytic(&cdg2(), &c), 2);
+    }
+
+    #[test]
+    fn cdg2_doa_res_clips_on_96_gpus() {
+        // Table 2's c-DG2 rank-2 demand (96+16 GPUs) exceeds the stated
+        // 96-GPU allocation: the wavefront clips to 2 branches.
+        let c = ClusterSpec::summit_paper();
+        assert_eq!(doa_res_analytic(&cdg2(), &c), 1);
+    }
+
+    #[test]
+    fn unlimited_resources_hit_doa_dep() {
+        let wf = ddmd_workflow(&DdmdConfig::paper());
+        let c = ClusterSpec::uniform("huge", 64, 512, 16);
+        assert_eq!(doa_res_analytic(&wf, &c), 2, "capped at DOA_dep");
+    }
+}

@@ -1,0 +1,160 @@
+//! TX-masking analysis (§5.3): which task sets' execution times are
+//! hidden by longer-running concurrent sets in the asynchronous
+//! realization — and therefore do not contribute to the workflow TTX.
+
+use crate::engine::ExecutionMode;
+use crate::entk::Workflow;
+use crate::model::set_duration;
+use crate::resources::ClusterSpec;
+
+/// Masking verdict for one task set.
+#[derive(Debug, Clone)]
+pub struct SetMasking {
+    pub set_name: String,
+    /// Wave-aware duration on this cluster.
+    pub duration: f64,
+    /// Earliest start / finish on the infinite-resource critical-path
+    /// schedule of the asynchronous realization.
+    pub start: f64,
+    pub finish: f64,
+    /// True when the set lies off the critical path — its TX is masked
+    /// (slack > 0).
+    pub masked: bool,
+    /// Slack: how much the set's duration could grow before it joins
+    /// the critical path.
+    pub slack: f64,
+}
+
+/// Whole-workflow masking report.
+#[derive(Debug, Clone)]
+pub struct MaskingReport {
+    pub sets: Vec<SetMasking>,
+    pub critical_path: f64,
+    /// Total masked seconds: sum of durations of masked sets (the
+    /// paper's "TX-masked tasks do not contribute to the overall TTX").
+    pub masked_seconds: f64,
+}
+
+/// Analyze masking on the asynchronous realization (infinite-resource
+/// earliest/latest schedule over the jobset graph).
+pub fn masking_report(wf: &Workflow, cluster: &ClusterSpec) -> MaskingReport {
+    let jobsets = crate::engine::compile(wf, ExecutionMode::Asynchronous);
+    let n = jobsets.len();
+    let dur: Vec<f64> = jobsets
+        .iter()
+        .map(|j| set_duration(&wf.sets[j.set_idx], cluster))
+        .collect();
+
+    // Forward pass: earliest finish.
+    let mut children: Vec<Vec<usize>> = vec![vec![]; n];
+    let mut indeg = vec![0usize; n];
+    for (i, j) in jobsets.iter().enumerate() {
+        indeg[i] = j.deps.len();
+        for &d in &j.deps {
+            children[d].push(i);
+        }
+    }
+    let mut order: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut head = 0;
+    let mut est = vec![0.0f64; n]; // earliest start
+    let mut eft = vec![0.0f64; n]; // earliest finish
+    while head < order.len() {
+        let i = order[head];
+        head += 1;
+        est[i] = jobsets[i].deps.iter().map(|&d| eft[d]).fold(0.0, f64::max);
+        eft[i] = est[i] + dur[i];
+        for &c in &children[i] {
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                order.push(c);
+            }
+        }
+    }
+    let cp = eft.iter().copied().fold(0.0, f64::max);
+
+    // Backward pass: latest finish without extending the critical path.
+    let mut lft = vec![cp; n];
+    for &i in order.iter().rev() {
+        if !children[i].is_empty() {
+            lft[i] = children[i]
+                .iter()
+                .map(|&c| lft[c] - dur[c])
+                .fold(f64::INFINITY, f64::min);
+        }
+    }
+
+    let sets = (0..n)
+        .map(|i| {
+            let slack = lft[i] - eft[i];
+            SetMasking {
+                set_name: wf.sets[jobsets[i].set_idx].name.clone(),
+                duration: dur[i],
+                start: est[i],
+                finish: eft[i],
+                masked: slack > 1e-9,
+                slack,
+            }
+        })
+        .collect::<Vec<_>>();
+    let masked_seconds = sets.iter().filter(|s| s.masked).map(|s| s.duration).sum();
+    MaskingReport { sets, critical_path: cp, masked_seconds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::figures;
+    use crate::entk::{Pipeline, Workflow};
+    use crate::resources::ResourceRequest;
+    use crate::task::TaskSetSpec;
+
+    /// §5.3's Fig. 2b example: branch H2 = {T2, T4} has TTX 5000 equal to
+    /// H1 = {T1, T3, T5}; with t4=4000 masking t3+t5's tail.
+    #[test]
+    fn worked_example_masking() {
+        let dag = figures::fig2b();
+        let tx = [500.0, 1000.0, 1000.0, 2000.0, 4000.0, 2000.0];
+        let sets = (0..6)
+            .map(|i| {
+                TaskSetSpec::new(format!("T{i}"), 1, ResourceRequest::new(1, 0), tx[i])
+                    .with_sigma(0.0)
+            })
+            .collect();
+        let wf = Workflow {
+            name: "fig2b".into(),
+            sets,
+            dag,
+            sequential: vec![Pipeline::new("s").stage(&[0]).stage(&[1, 2]).stage(&[3, 4]).stage(&[5])],
+            asynchronous: vec![
+                Pipeline::new("p0").stage(&[0]),
+                Pipeline::new("h1").stage(&[1]).stage(&[3]).stage(&[5]),
+                Pipeline::new("h2").stage(&[2]).stage(&[4]),
+            ],
+        };
+        let cluster = crate::resources::ClusterSpec::uniform("inf", 1, 64, 0);
+        let r = masking_report(&wf, &cluster);
+        assert!((r.critical_path - 5500.0).abs() < 1e-9);
+        // Both chains tie (equality case of Eqn. 4): nothing is slack.
+        let slack_names: Vec<&str> = r
+            .sets
+            .iter()
+            .filter(|s| s.masked)
+            .map(|s| s.set_name.as_str())
+            .collect();
+        assert!(slack_names.is_empty(), "tie case: {slack_names:?}");
+
+        // Shrink t4 to 3000: chain H2 now has 1000s of slack.
+        let mut wf2 = wf;
+        wf2.sets[4].tx_mean = 3000.0;
+        let r2 = masking_report(&wf2, &cluster);
+        assert!((r2.critical_path - 5500.0).abs() < 1e-9);
+        let masked: Vec<&str> = r2
+            .sets
+            .iter()
+            .filter(|s| s.masked)
+            .map(|s| s.set_name.as_str())
+            .collect();
+        assert_eq!(masked, vec!["T2", "T4"]);
+        assert!(r2.masked_seconds == 1000.0 + 3000.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Pilot-job runtime (substrate S12), modeled on RADICAL-Pilot.
+//!
+//! The pilot owns the allocation ([`Allocator`]) and runs a *continuous
+//! scheduler*: whenever resources change (task completion) or new tasks
+//! arrive, it walks the ready queue in policy order and places every
+//! task that fits. Backfill (placing a later task past a blocked head)
+//! is what lets CPU-only Aggregation tasks slide in beside GPU-saturated
+//! Simulation sets — the mechanism behind the paper's TX masking.
+
+mod scheduler;
+
+pub use scheduler::{Policy, QueuedTask, ScheduledTask, Scheduler};
+
+use crate::resources::{Allocator, ClusterSpec, Placement};
+use crate::task::TaskSpec;
+
+/// The pilot agent: allocation + scheduler queue.
+///
+/// The engine drives it: `submit` when dependencies resolve, `schedule`
+/// after every state change, `complete` when the executor reports a
+/// task done.
+#[derive(Debug)]
+pub struct Agent {
+    alloc: Allocator,
+    sched: Scheduler,
+    running: Vec<Option<Placement>>, // uid -> placement
+}
+
+impl Agent {
+    pub fn new(cluster: &ClusterSpec, policy: Policy) -> Agent {
+        Agent {
+            alloc: Allocator::new(cluster),
+            sched: Scheduler::new(policy),
+            running: Vec::new(),
+        }
+    }
+
+    pub fn allocator(&self) -> &Allocator {
+        &self.alloc
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.sched.queue_len()
+    }
+
+    /// Enqueue a ready task (dependencies already satisfied).
+    pub fn submit(&mut self, task: &TaskSpec, priority: u64, submitted_at: f64) {
+        self.sched.push(QueuedTask {
+            uid: task.uid,
+            req: task.req,
+            priority,
+            submitted_at,
+        });
+    }
+
+    /// Place every queued task that fits, in policy order. Returns the
+    /// uids scheduled this round.
+    pub fn schedule(&mut self) -> Vec<ScheduledTask> {
+        let placed = self.sched.drain_schedulable(&mut self.alloc);
+        for s in &placed {
+            if self.running.len() <= s.uid {
+                self.running.resize(s.uid + 1, None);
+            }
+            self.running[s.uid] = Some(s.placement.clone());
+        }
+        placed
+    }
+
+    /// Release a completed task's resources.
+    pub fn complete(&mut self, uid: usize) {
+        let p = self.running[uid]
+            .take()
+            .expect("complete() for a task that is not running");
+        self.alloc.release(&p);
+    }
+
+    /// Number of currently running (placed) tasks.
+    pub fn running_count(&self) -> usize {
+        self.running.iter().filter(|p| p.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::ResourceRequest;
+    use crate::task::{TaskKind, TaskSpec};
+
+    fn task(uid: usize, cores: u32, gpus: u32) -> TaskSpec {
+        TaskSpec {
+            uid,
+            set_idx: 0,
+            ordinal: 0,
+            tx: 1.0,
+            req: ResourceRequest::new(cores, gpus),
+            kind: TaskKind::Stress,
+        }
+    }
+
+    #[test]
+    fn agent_schedules_and_completes() {
+        let cluster = ClusterSpec::uniform("t", 1, 4, 1);
+        let mut agent = Agent::new(&cluster, Policy::default());
+        agent.submit(&task(0, 2, 0), 0, 0.0);
+        agent.submit(&task(1, 2, 0), 0, 0.0);
+        agent.submit(&task(2, 2, 0), 0, 0.0); // won't fit yet
+        let placed = agent.schedule();
+        assert_eq!(placed.len(), 2);
+        assert_eq!(agent.queue_len(), 1);
+        assert_eq!(agent.running_count(), 2);
+        agent.complete(0);
+        let placed = agent.schedule();
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].uid, 2);
+    }
+
+    #[test]
+    fn backfill_lets_small_tasks_pass_blocked_head() {
+        let cluster = ClusterSpec::uniform("t", 1, 4, 1);
+        let mut agent = Agent::new(&cluster, Policy::default());
+        // Occupy the GPU.
+        agent.submit(&task(0, 1, 1), 0, 0.0);
+        assert_eq!(agent.schedule().len(), 1);
+        // Head of queue needs the GPU; behind it a CPU-only task.
+        agent.submit(&task(1, 1, 1), 1, 1.0);
+        agent.submit(&task(2, 1, 0), 2, 2.0);
+        let placed = agent.schedule();
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].uid, 2, "CPU task backfills past blocked GPU task");
+    }
+
+    #[test]
+    #[should_panic(expected = "not running")]
+    fn double_complete_panics() {
+        let cluster = ClusterSpec::uniform("t", 1, 4, 1);
+        let mut agent = Agent::new(&cluster, Policy::default());
+        agent.submit(&task(0, 1, 0), 0, 0.0);
+        agent.schedule();
+        agent.complete(0);
+        agent.complete(0);
+    }
+}

@@ -1,0 +1,264 @@
+//! Continuous scheduler with pluggable ordering policies and backfill.
+
+use crate::resources::{Allocator, Placement, ResourceRequest};
+
+/// Queue ordering policies (ablated in `benches/bench_ablations.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Policy {
+    /// Order by (priority, submit time, uid); the engine sets priority =
+    /// pipeline index, so older pipelines always win. Tempting, but it
+    /// starves younger pipelines' stragglers (an old pipeline's 96-task
+    /// Inference set trickles through GPUs one-by-one ahead of the last
+    /// task of a younger Simulation set) — kept as an ablation.
+    PipelineAge,
+    /// FIFO by submission time with backfill — RADICAL-Pilot-like and
+    /// the default: it reproduces the paper's masking behaviour.
+    #[default]
+    FifoBackfill,
+    /// Pure FIFO, **no** backfill: the head of the queue blocks everyone
+    /// behind it (worst case for masking; ablation baseline).
+    FifoStrict,
+    /// Shortest-job-first by requested cores (greedy packing).
+    SmallestFirst,
+}
+
+/// A task waiting for resources.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuedTask {
+    pub uid: usize,
+    pub req: ResourceRequest,
+    pub priority: u64,
+    pub submitted_at: f64,
+}
+
+/// A task the scheduler just placed.
+#[derive(Debug, Clone)]
+pub struct ScheduledTask {
+    pub uid: usize,
+    pub placement: Placement,
+}
+
+/// Ready-queue + placement loop.
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: Policy,
+    queue: Vec<QueuedTask>,
+    /// Monotone counter to make ordering total and deterministic.
+    arrival_seq: u64,
+    arrivals: Vec<u64>,
+    /// True while the queue is already in non-decreasing submit-time
+    /// order (the engine submits with a monotone clock, so this is the
+    /// common case) — lets FIFO policies skip the sort entirely.
+    fifo_sorted: bool,
+}
+
+impl Scheduler {
+    pub fn new(policy: Policy) -> Scheduler {
+        Scheduler {
+            policy,
+            queue: Vec::new(),
+            arrival_seq: 0,
+            arrivals: Vec::new(),
+            fifo_sorted: true,
+        }
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn push(&mut self, t: QueuedTask) {
+        if let Some(last) = self.queue.last() {
+            if t.submitted_at < last.submitted_at {
+                self.fifo_sorted = false;
+            }
+        }
+        self.queue.push(t);
+        self.arrivals.push(self.arrival_seq);
+        self.arrival_seq += 1;
+    }
+
+    fn order(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.queue.len()).collect();
+        if self.fifo_sorted
+            && matches!(self.policy, Policy::FifoBackfill | Policy::FifoStrict)
+        {
+            return idx; // insertion order == FIFO order
+        }
+        match self.policy {
+            Policy::PipelineAge => idx.sort_by(|&a, &b| {
+                let (ta, tb) = (&self.queue[a], &self.queue[b]);
+                ta.priority
+                    .cmp(&tb.priority)
+                    .then(ta.submitted_at.total_cmp(&tb.submitted_at))
+                    .then(self.arrivals[a].cmp(&self.arrivals[b]))
+            }),
+            Policy::FifoBackfill | Policy::FifoStrict => idx.sort_by(|&a, &b| {
+                self.queue[a]
+                    .submitted_at
+                    .total_cmp(&self.queue[b].submitted_at)
+                    .then(self.arrivals[a].cmp(&self.arrivals[b]))
+            }),
+            Policy::SmallestFirst => idx.sort_by(|&a, &b| {
+                let (ta, tb) = (&self.queue[a], &self.queue[b]);
+                (ta.req.cpu_cores + 100 * ta.req.gpus)
+                    .cmp(&(tb.req.cpu_cores + 100 * tb.req.gpus))
+                    .then(self.arrivals[a].cmp(&self.arrivals[b]))
+            }),
+        }
+        idx
+    }
+
+    /// Walk the queue in policy order placing what fits; remove placed
+    /// entries. With `FifoStrict` the walk stops at the first task that
+    /// does not fit.
+    ///
+    /// Perf: within one drain round the allocation only shrinks, so a
+    /// request shape that failed once can never succeed later in the
+    /// round — identical shapes are memoized and skipped (large win for
+    /// the paper's homogeneous 96-task sets: 1 placement probe instead
+    /// of 96 node scans per blocked set).
+    pub fn drain_schedulable(&mut self, alloc: &mut Allocator) -> Vec<ScheduledTask> {
+        let order = self.order();
+        let mut placed = Vec::new();
+        let mut remove = vec![false; self.queue.len()];
+        let mut failed_shapes: Vec<ResourceRequest> = Vec::new();
+        for &i in &order {
+            let t = self.queue[i];
+            if failed_shapes.contains(&t.req) {
+                if self.policy == Policy::FifoStrict {
+                    break;
+                }
+                continue;
+            }
+            match alloc.try_alloc(&t.req) {
+                Some(placement) => {
+                    placed.push(ScheduledTask { uid: t.uid, placement });
+                    remove[i] = true;
+                }
+                None => {
+                    if self.policy == Policy::FifoStrict {
+                        break;
+                    }
+                    failed_shapes.push(t.req);
+                }
+            }
+        }
+        // Compact queue preserving insertion order.
+        let mut q = Vec::with_capacity(self.queue.len() - placed.len());
+        let mut a = Vec::with_capacity(q.capacity());
+        for (i, t) in self.queue.iter().enumerate() {
+            if !remove[i] {
+                q.push(*t);
+                a.push(self.arrivals[i]);
+            }
+        }
+        self.queue = q;
+        self.arrivals = a;
+        placed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::ClusterSpec;
+
+    fn qt(uid: usize, cores: u32, gpus: u32, prio: u64, at: f64) -> QueuedTask {
+        QueuedTask { uid, req: ResourceRequest::new(cores, gpus), priority: prio, submitted_at: at }
+    }
+
+    #[test]
+    fn pipeline_age_orders_by_priority() {
+        let mut s = Scheduler::new(Policy::PipelineAge);
+        s.push(qt(0, 1, 0, 2, 0.0));
+        s.push(qt(1, 1, 0, 0, 5.0));
+        s.push(qt(2, 1, 0, 1, 1.0));
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 8, 0));
+        let placed = s.drain_schedulable(&mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn fifo_strict_blocks_behind_head() {
+        let mut s = Scheduler::new(Policy::FifoStrict);
+        s.push(qt(0, 8, 0, 0, 0.0)); // fills the node
+        s.push(qt(1, 16, 0, 0, 1.0)); // can never fit now
+        s.push(qt(2, 1, 0, 0, 2.0)); // would fit, but strictly blocked
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 2, 8, 0));
+        let placed = s.drain_schedulable(&mut alloc);
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].uid, 0);
+        assert_eq!(s.queue_len(), 2);
+    }
+
+    #[test]
+    fn fifo_backfill_skips_blocked_head() {
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        s.push(qt(0, 8, 0, 0, 0.0));
+        s.push(qt(1, 16, 0, 0, 1.0));
+        s.push(qt(2, 1, 0, 0, 2.0));
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 2, 8, 0));
+        let placed = s.drain_schedulable(&mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![0, 2]);
+    }
+
+    #[test]
+    fn smallest_first_packs_greedily() {
+        let mut s = Scheduler::new(Policy::SmallestFirst);
+        s.push(qt(0, 6, 0, 0, 0.0));
+        s.push(qt(1, 1, 0, 0, 1.0));
+        s.push(qt(2, 3, 0, 0, 2.0));
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 4, 0));
+        let placed = s.drain_schedulable(&mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![1, 2]); // 1+3 cores; the 6-core task waits
+    }
+
+    #[test]
+    fn fifo_out_of_order_pushes_still_sorted() {
+        // Regression for the fifo_sorted fast path: pushing an earlier
+        // submit time after a later one must disable the shortcut and
+        // fall back to the true FIFO order.
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        s.push(qt(0, 1, 0, 0, 5.0));
+        s.push(qt(1, 1, 0, 0, 1.0)); // earlier, pushed later
+        s.push(qt(2, 1, 0, 0, 3.0));
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 3, 0));
+        let placed = s.drain_schedulable(&mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn failed_shape_memo_skips_identical_requests() {
+        // 3 identical big tasks that cannot fit plus one small one:
+        // the small one still backfills (memo must not block different
+        // shapes).
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        for uid in 0..3 {
+            s.push(qt(uid, 16, 0, 0, uid as f64));
+        }
+        s.push(qt(9, 1, 0, 0, 9.0));
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 8, 0));
+        let placed = s.drain_schedulable(&mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![9]);
+        assert_eq!(s.queue_len(), 3);
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        // Identical priorities/timestamps: arrival order wins, stably.
+        let mut s = Scheduler::new(Policy::PipelineAge);
+        for uid in 0..5 {
+            s.push(qt(uid, 1, 0, 0, 0.0));
+        }
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 5, 0));
+        let placed = s.drain_schedulable(&mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![0, 1, 2, 3, 4]);
+    }
+}

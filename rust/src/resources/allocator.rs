@@ -1,0 +1,274 @@
+//! Allocation-wide slot allocator: tracks free cores/GPUs per node and
+//! places task requests under the node-locality rules.
+//!
+//! This is the pilot agent's view of the allocation; all scheduling
+//! decisions go through [`Allocator::try_alloc`] / [`Allocator::release`].
+
+use super::{ClusterSpec, ResourceRequest};
+
+/// Where a running task's resources came from: `(node, cores, gpus)`
+/// slices, one per node touched.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub slots: Vec<(usize, u32, u32)>,
+}
+
+impl Placement {
+    pub fn total_cores(&self) -> u64 {
+        self.slots.iter().map(|s| s.1 as u64).sum()
+    }
+    pub fn total_gpus(&self) -> u64 {
+        self.slots.iter().map(|s| s.2 as u64).sum()
+    }
+}
+
+/// Free-resource bookkeeping over a [`ClusterSpec`].
+#[derive(Debug, Clone)]
+pub struct Allocator {
+    spec: ClusterSpec,
+    free_cores: Vec<u32>,
+    free_gpus: Vec<u32>,
+    total_free_cores: u64,
+    total_free_gpus: u64,
+    /// Rotating start index for first-fit, spreading GPU tasks across
+    /// nodes instead of hammering node 0.
+    cursor: usize,
+}
+
+impl Allocator {
+    pub fn new(spec: &ClusterSpec) -> Allocator {
+        Allocator {
+            free_cores: spec.nodes.iter().map(|n| n.cores).collect(),
+            free_gpus: spec.nodes.iter().map(|n| n.gpus).collect(),
+            total_free_cores: spec.total_cores(),
+            total_free_gpus: spec.total_gpus(),
+            cursor: 0,
+            spec: spec.clone(),
+        }
+    }
+
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    pub fn free_cores(&self) -> u64 {
+        self.total_free_cores
+    }
+
+    pub fn free_gpus(&self) -> u64 {
+        self.total_free_gpus
+    }
+
+    pub fn used_cores(&self) -> u64 {
+        self.spec.total_cores() - self.total_free_cores
+    }
+
+    pub fn used_gpus(&self) -> u64 {
+        self.spec.total_gpus() - self.total_free_gpus
+    }
+
+    /// Cheap feasibility pre-check (no placement computed).
+    pub fn may_fit(&self, req: &ResourceRequest) -> bool {
+        req.cpu_cores as u64 <= self.total_free_cores
+            && req.gpus as u64 <= self.total_free_gpus
+    }
+
+    /// Try to place one task; returns `None` when it doesn't currently fit.
+    pub fn try_alloc(&mut self, req: &ResourceRequest) -> Option<Placement> {
+        if !self.may_fit(req) {
+            return None;
+        }
+        if req.node_local() {
+            self.alloc_node_local(req)
+        } else {
+            self.alloc_spanning(req)
+        }
+    }
+
+    fn alloc_node_local(&mut self, req: &ResourceRequest) -> Option<Placement> {
+        let n = self.free_cores.len();
+        for off in 0..n {
+            let i = (self.cursor + off) % n;
+            if self.free_cores[i] >= req.cpu_cores && self.free_gpus[i] >= req.gpus {
+                self.free_cores[i] -= req.cpu_cores;
+                self.free_gpus[i] -= req.gpus;
+                self.total_free_cores -= req.cpu_cores as u64;
+                self.total_free_gpus -= req.gpus as u64;
+                self.cursor = (i + 1) % n;
+                return Some(Placement { slots: vec![(i, req.cpu_cores, req.gpus)] });
+            }
+        }
+        None
+    }
+
+    fn alloc_spanning(&mut self, req: &ResourceRequest) -> Option<Placement> {
+        // total_free_cores >= cpu_cores was pre-checked; greedily take
+        // cores from the fullest-free nodes to limit fragmentation.
+        let mut remaining = req.cpu_cores;
+        let mut slots = Vec::new();
+        // Visit nodes in order of descending free cores.
+        let mut order: Vec<usize> = (0..self.free_cores.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(self.free_cores[i]));
+        for i in order {
+            if remaining == 0 {
+                break;
+            }
+            let take = self.free_cores[i].min(remaining);
+            if take > 0 {
+                slots.push((i, take, 0));
+                remaining -= take;
+            }
+        }
+        debug_assert_eq!(remaining, 0);
+        for &(i, c, _) in &slots {
+            self.free_cores[i] -= c;
+        }
+        self.total_free_cores -= req.cpu_cores as u64;
+        Some(Placement { slots })
+    }
+
+    /// Return a placement's resources to the pool.
+    pub fn release(&mut self, p: &Placement) {
+        for &(i, cores, gpus) in &p.slots {
+            self.free_cores[i] += cores;
+            self.free_gpus[i] += gpus;
+            debug_assert!(self.free_cores[i] <= self.spec.nodes[i].cores);
+            debug_assert!(self.free_gpus[i] <= self.spec.nodes[i].gpus);
+            self.total_free_cores += cores as u64;
+            self.total_free_gpus += gpus as u64;
+        }
+    }
+
+    /// Invariant check used by tests: per-node free counts within bounds
+    /// and totals consistent.
+    pub fn check_invariants(&self) -> bool {
+        let sum_c: u64 = self.free_cores.iter().map(|&c| c as u64).sum();
+        let sum_g: u64 = self.free_gpus.iter().map(|&g| g as u64).sum();
+        sum_c == self.total_free_cores
+            && sum_g == self.total_free_gpus
+            && self
+                .free_cores
+                .iter()
+                .zip(&self.spec.nodes)
+                .all(|(&f, n)| f <= n.cores)
+            && self
+                .free_gpus
+                .iter()
+                .zip(&self.spec.nodes)
+                .all(|(&f, n)| f <= n.gpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_bool;
+    use crate::util::rng::Rng;
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::uniform("t", 4, 8, 2)
+    }
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut a = Allocator::new(&cluster());
+        let p = a.try_alloc(&ResourceRequest::new(4, 1)).unwrap();
+        assert_eq!(a.used_cores(), 4);
+        assert_eq!(a.used_gpus(), 1);
+        a.release(&p);
+        assert_eq!(a.used_cores(), 0);
+        assert_eq!(a.used_gpus(), 0);
+        assert!(a.check_invariants());
+    }
+
+    #[test]
+    fn gpu_task_is_node_local() {
+        // 2 GPUs per node; a 2-GPU task must land on one node.
+        let mut a = Allocator::new(&cluster());
+        let p = a.try_alloc(&ResourceRequest::new(2, 2)).unwrap();
+        assert_eq!(p.slots.len(), 1);
+    }
+
+    #[test]
+    fn gpu_exhaustion_blocks() {
+        let mut a = Allocator::new(&cluster()); // 8 GPUs total
+        let mut placements = vec![];
+        for _ in 0..8 {
+            placements.push(a.try_alloc(&ResourceRequest::new(1, 1)).unwrap());
+        }
+        assert!(a.try_alloc(&ResourceRequest::new(1, 1)).is_none());
+        a.release(&placements.pop().unwrap());
+        assert!(a.try_alloc(&ResourceRequest::new(1, 1)).is_some());
+    }
+
+    #[test]
+    fn cpu_task_spans_nodes() {
+        let mut a = Allocator::new(&cluster()); // 32 cores over 4 nodes
+        let p = a.try_alloc(&ResourceRequest::new(20, 0)).unwrap();
+        assert!(p.slots.len() >= 3, "20 cores must span >= 3 of 8-core nodes");
+        assert_eq!(p.total_cores(), 20);
+        assert_eq!(a.free_cores(), 12);
+        a.release(&p);
+        assert!(a.check_invariants());
+    }
+
+    #[test]
+    fn fragmentation_can_block_node_local() {
+        // Fill 1 core + 1 gpu on each node; a (8-core,1-gpu) task then
+        // fails even though 28 cores are free allocation-wide.
+        let mut a = Allocator::new(&cluster());
+        for _ in 0..4 {
+            a.try_alloc(&ResourceRequest::new(1, 1)).unwrap();
+        }
+        assert!(a.try_alloc(&ResourceRequest::new(8, 1)).is_none());
+        // ... but a CPU-only 8-core task still fits by spanning.
+        assert!(a.try_alloc(&ResourceRequest::new(8, 0)).is_some());
+    }
+
+    #[test]
+    fn property_no_oversubscription() {
+        // Random alloc/release interleavings never violate invariants.
+        check_bool(
+            0xA110C,
+            300,
+            |rng: &mut Rng, size| {
+                let ops: Vec<(u32, u32, bool)> = (0..size.0 * 4)
+                    .map(|_| {
+                        (
+                            rng.below(10) as u32,
+                            rng.below(3) as u32,
+                            rng.f64() < 0.4,
+                        )
+                    })
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut a = Allocator::new(&ClusterSpec::uniform("p", 3, 12, 2));
+                let mut live: Vec<Placement> = vec![];
+                for &(c, g, release_first) in ops {
+                    if release_first && !live.is_empty() {
+                        let p = live.swap_remove(0);
+                        a.release(&p);
+                    }
+                    if c == 0 && g == 0 {
+                        continue;
+                    }
+                    if let Some(p) = a.try_alloc(&ResourceRequest::new(c, g)) {
+                        if p.total_cores() != c as u64 || p.total_gpus() != g as u64 {
+                            return false;
+                        }
+                        live.push(p);
+                    }
+                    if !a.check_invariants() {
+                        return false;
+                    }
+                }
+                for p in &live {
+                    a.release(p);
+                }
+                a.check_invariants() && a.used_cores() == 0 && a.used_gpus() == 0
+            },
+        );
+    }
+}

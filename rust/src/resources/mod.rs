@@ -1,0 +1,207 @@
+//! Resource model (substrate S8): Summit-like nodes, allocation-wide
+//! slot accounting, and placement rules.
+//!
+//! Placement rules mirror RADICAL-Pilot on Summit:
+//! - tasks using GPUs are **node-local** (a task's GPUs and cores must
+//!   come from a single node — CUDA devices don't span nodes);
+//! - CPU-only tasks may **span nodes** (MPI launch across nodes).
+
+mod allocator;
+
+pub use allocator::{Allocator, Placement};
+
+use crate::error::{Error, Result};
+
+/// Per-task resource requirement (Tables 1–2: "CPU cores/Task",
+/// "GPUs/Task").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceRequest {
+    pub cpu_cores: u32,
+    pub gpus: u32,
+}
+
+impl ResourceRequest {
+    pub const fn new(cpu_cores: u32, gpus: u32) -> Self {
+        ResourceRequest { cpu_cores, gpus }
+    }
+
+    /// GPU tasks must be placed on a single node.
+    pub fn node_local(&self) -> bool {
+        self.gpus > 0
+    }
+}
+
+/// One compute node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeSpec {
+    pub cores: u32,
+    pub gpus: u32,
+}
+
+/// A cluster allocation (the pilot's resource pool).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub nodes: Vec<NodeSpec>,
+}
+
+impl ClusterSpec {
+    pub fn uniform(name: impl Into<String>, nodes: usize, cores: u32, gpus: u32) -> Self {
+        ClusterSpec {
+            name: name.into(),
+            nodes: vec![NodeSpec { cores, gpus }; nodes],
+        }
+    }
+
+    /// The allocation the paper used, hardware-thread view: 16 Summit
+    /// nodes, 2x21 usable physical cores x SMT4 = 168 hardware threads
+    /// and 6 V100 GPUs per node (96 GPUs total).
+    ///
+    /// The c-DG workloads of Table 2 oversubscribe 706 physical cores by
+    /// up to 3.6x (e.g. {T1,T2}: 2x16x40 = 1280 cores) while the paper
+    /// still reports one-wave stage times; this is only consistent with
+    /// scheduling against SMT hardware threads, hence this default.
+    pub fn summit_paper() -> Self {
+        ClusterSpec::uniform("summit-16-smt", 16, 168, 6)
+    }
+
+    /// The strict "706 usable CPU cores" reading (62 of 768 reserved):
+    /// 14 nodes keep 44 cores, 2 keep 45. Used as an ablation to show
+    /// wave/serialization effects when physical cores bind.
+    pub fn summit_706() -> Self {
+        let mut nodes = vec![NodeSpec { cores: 44, gpus: 6 }; 14];
+        nodes.extend(vec![NodeSpec { cores: 45, gpus: 6 }; 2]);
+        ClusterSpec { name: "summit-16-706".into(), nodes }
+    }
+
+    /// Summit profile with 8 GPUs/node (128 total): the counterfactual
+    /// allocation under which c-DG2's full TX-masking (Eqn. 3) becomes
+    /// resource-feasible. Used by the ablation benches.
+    pub fn summit_8gpu() -> Self {
+        ClusterSpec::uniform("summit-16-8gpu", 16, 168, 8)
+    }
+
+    /// Small profile for real (wall-clock) execution on the local host.
+    pub fn local_small() -> Self {
+        ClusterSpec::uniform("local-small", 2, 8, 2)
+    }
+
+    pub fn total_cores(&self) -> u64 {
+        self.nodes.iter().map(|n| n.cores as u64).sum()
+    }
+
+    pub fn total_gpus(&self) -> u64 {
+        self.nodes.iter().map(|n| n.gpus as u64).sum()
+    }
+
+    /// Validate that a request is satisfiable at all on this cluster.
+    pub fn check(&self, req: &ResourceRequest) -> Result<()> {
+        if req.cpu_cores == 0 && req.gpus == 0 {
+            return Err(Error::Unsatisfiable("task requests zero resources".into()));
+        }
+        if req.node_local() {
+            let fits_any = self
+                .nodes
+                .iter()
+                .any(|n| n.cores >= req.cpu_cores && n.gpus >= req.gpus);
+            if !fits_any {
+                return Err(Error::Unsatisfiable(format!(
+                    "GPU task ({} cores, {} gpus) does not fit on any single node of '{}'",
+                    req.cpu_cores, req.gpus, self.name
+                )));
+            }
+        } else if (req.cpu_cores as u64) > self.total_cores() {
+            return Err(Error::Unsatisfiable(format!(
+                "CPU task ({} cores) exceeds allocation total {} cores",
+                req.cpu_cores,
+                self.total_cores()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Analytic max number of tasks with request `req` that can run
+    /// concurrently on an otherwise-empty allocation. This is what turns
+    /// per-set TX into wave-aware set TTX in the model (e.g. DDMD
+    /// Inference on the 706-core profile: 2 tasks/node -> 32 concurrent
+    /// -> ceil(96/32)=3 waves).
+    pub fn max_concurrent(&self, req: &ResourceRequest) -> u64 {
+        if req.node_local() {
+            self.nodes
+                .iter()
+                .map(|n| {
+                    let by_cores = if req.cpu_cores == 0 {
+                        u64::MAX
+                    } else {
+                        (n.cores / req.cpu_cores) as u64
+                    };
+                    let by_gpus = (n.gpus / req.gpus) as u64;
+                    by_cores.min(by_gpus)
+                })
+                .sum()
+        } else {
+            // CPU-only tasks may span nodes: bound by total cores.
+            if req.cpu_cores == 0 {
+                return u64::MAX;
+            }
+            self.total_cores() / req.cpu_cores as u64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summit_profiles() {
+        let smt = ClusterSpec::summit_paper();
+        assert_eq!(smt.nodes.len(), 16);
+        assert_eq!(smt.total_cores(), 16 * 168);
+        assert_eq!(smt.total_gpus(), 96);
+
+        let p706 = ClusterSpec::summit_706();
+        assert_eq!(p706.total_cores(), 706);
+        assert_eq!(p706.total_gpus(), 96);
+    }
+
+    #[test]
+    fn check_rejects_oversized() {
+        let c = ClusterSpec::summit_paper();
+        // 7 GPUs on one node is impossible (6/node).
+        assert!(c.check(&ResourceRequest::new(1, 7)).is_err());
+        // CPU-only task larger than the whole allocation.
+        assert!(c.check(&ResourceRequest::new(100_000, 0)).is_err());
+        // Zero request is invalid.
+        assert!(c.check(&ResourceRequest::new(0, 0)).is_err());
+        // Normal requests pass.
+        assert!(c.check(&ResourceRequest::new(4, 1)).is_ok());
+        assert!(c.check(&ResourceRequest::new(2000, 0)).is_ok());
+    }
+
+    #[test]
+    fn max_concurrent_gpu_tasks() {
+        let c = ClusterSpec::summit_paper();
+        // DDMD Simulation: 4 cores + 1 GPU -> 6/node -> 96.
+        assert_eq!(c.max_concurrent(&ResourceRequest::new(4, 1)), 96);
+        // DDMD Inference on SMT: 16 cores + 1 GPU -> min(10, 6)=6/node -> 96.
+        assert_eq!(c.max_concurrent(&ResourceRequest::new(16, 1)), 96);
+    }
+
+    #[test]
+    fn max_concurrent_on_706_profile_shows_waves() {
+        let c = ClusterSpec::summit_706();
+        // Inference: 16 cores + 1 GPU -> 2/node (44/16=2) -> 32 concurrent.
+        assert_eq!(c.max_concurrent(&ResourceRequest::new(16, 1)), 32);
+        // Aggregation (CPU-only, spans nodes): 706/32 = 22.
+        assert_eq!(c.max_concurrent(&ResourceRequest::new(32, 0)), 22);
+    }
+
+    #[test]
+    fn cpu_only_spans_nodes() {
+        let c = ClusterSpec::uniform("t", 4, 10, 0);
+        // 25-core CPU task spans nodes: total 40 cores -> 1 concurrent.
+        assert!(c.check(&ResourceRequest::new(25, 0)).is_ok());
+        assert_eq!(c.max_concurrent(&ResourceRequest::new(25, 0)), 1);
+    }
+}

@@ -1,0 +1,204 @@
+//! PJRT runtime (substrate S14): loads the AOT-compiled HLO-text
+//! artifacts produced by `python/compile/aot.py` and executes them on
+//! the CPU PJRT client — the only way L3 touches L1/L2 compute. Python
+//! never runs here.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+
+mod service;
+mod tensor;
+
+pub use service::{RuntimeHandle, RuntimeService};
+pub use tensor::Tensor;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Metadata sidecar emitted per artifact by `aot.py`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub result_shapes: Vec<Vec<usize>>,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Json) -> Result<ArtifactMeta> {
+        let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+            v.req_arr(key)?
+                .iter()
+                .map(|a| {
+                    a.req_arr("shape")?
+                        .iter()
+                        .map(|d| {
+                            d.as_u64()
+                                .map(|u| u as usize)
+                                .ok_or_else(|| Error::Config("bad dim".into()))
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            name: v.req_str("name")?.to_string(),
+            arg_shapes: shapes("args")?,
+            result_shapes: shapes("results")?,
+        })
+    }
+}
+
+/// Owns the PJRT client and compiled executables. NOT `Send` (raw PJRT
+/// pointers) — wrap in [`RuntimeService`] for cross-thread use.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    metas: BTreeMap<String, ArtifactMeta>,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Compile-cache statistics (perf accounting).
+    pub compiles: usize,
+    pub executions: usize,
+}
+
+impl Engine {
+    /// Open an artifact directory (reads `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Json::parse(&text)?;
+        let mut metas = BTreeMap::new();
+        for a in manifest.req_arr("artifacts")? {
+            let m = ArtifactMeta::from_json(a)?;
+            metas.insert(m.name.clone(), m);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, dir, metas, executables: BTreeMap::new(), compiles: 0, executions: 0 })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.metas.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    /// Compile an artifact (idempotent; cached thereafter).
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        if !self.metas.contains_key(name) {
+            return Err(Error::Runtime(format!("unknown artifact '{name}'")));
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables.insert(name.to_string(), exe);
+        self.compiles += 1;
+        Ok(())
+    }
+
+    /// Execute an artifact with f32 tensors; returns the result tuple.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let meta = &self.metas[name];
+        if inputs.len() != meta.arg_shapes.len() {
+            return Err(Error::Runtime(format!(
+                "'{name}' expects {} args, got {}",
+                meta.arg_shapes.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, want)) in inputs.iter().zip(&meta.arg_shapes).enumerate() {
+            if &t.dims != want {
+                return Err(Error::Runtime(format!(
+                    "'{name}' arg {i}: shape {:?} != expected {:?}",
+                    t.dims, want
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
+        let exe = &self.executables[name];
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.executions += 1;
+        // aot.py lowers with return_tuple=True: always a top-level tuple.
+        let parts = result.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // rust/ -> repo root
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn sanity_artifact_round_trip() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut eng = Engine::open(artifacts_dir()).unwrap();
+        assert!(eng.artifact_names().contains(&"sanity"));
+        let x = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let y = Tensor::from_vec(vec![1.0; 4], &[2, 2]).unwrap();
+        let out = eng.execute("sanity", &[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        // matmul + 2 = [[5,5],[9,9]]
+        assert_eq!(out[0].data, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut eng = Engine::open(artifacts_dir()).unwrap();
+        let bad = Tensor::from_vec(vec![0.0; 6], &[2, 3]).unwrap();
+        let ok = Tensor::from_vec(vec![0.0; 4], &[2, 2]).unwrap();
+        assert!(eng.execute("sanity", &[bad, ok.clone()]).is_err());
+        assert!(eng.execute("sanity", &[ok]).is_err(), "arity");
+        assert!(eng.execute("nope", &[]).is_err(), "unknown artifact");
+    }
+
+    #[test]
+    fn compile_cache_hits() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut eng = Engine::open(artifacts_dir()).unwrap();
+        let x = Tensor::from_vec(vec![0.0; 4], &[2, 2]).unwrap();
+        for _ in 0..3 {
+            eng.execute("sanity", &[x.clone(), x.clone()]).unwrap();
+        }
+        assert_eq!(eng.compiles, 1, "compiled once");
+        assert_eq!(eng.executions, 3);
+    }
+}

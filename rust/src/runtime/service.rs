@@ -1,0 +1,152 @@
+//! Runtime service: a dedicated thread owning the (non-`Send`) PJRT
+//! [`Engine`], fronted by a cloneable [`RuntimeHandle`].
+//!
+//! This mirrors how the paper's platform treats GPUs as scarce shared
+//! devices: ML task bodies running on worker threads funnel their
+//! compute through this service, and the service thread is the single
+//! owner of PJRT state. Requests are processed in arrival order.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::{Engine, Tensor};
+use crate::error::{Error, Result};
+
+enum Request {
+    Execute {
+        artifact: String,
+        inputs: Vec<Tensor>,
+        reply: Sender<Result<Vec<Tensor>>>,
+    },
+    Stats {
+        reply: Sender<(usize, usize)>,
+    },
+    Shutdown,
+}
+
+/// Cloneable client handle to the runtime service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Request>,
+}
+
+impl RuntimeHandle {
+    /// Execute an artifact; blocks until the service replies.
+    pub fn execute(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Execute { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| Error::Runtime("runtime service is down".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("runtime service dropped the reply".into()))?
+    }
+
+    /// (compiles, executions) counters.
+    pub fn stats(&self) -> Result<(usize, usize)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Stats { reply })
+            .map_err(|_| Error::Runtime("runtime service is down".into()))?;
+        rx.recv().map_err(|_| Error::Runtime("runtime service dropped the reply".into()))
+    }
+}
+
+/// The service thread wrapper.
+pub struct RuntimeService {
+    tx: Sender<Request>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl RuntimeService {
+    /// Spawn the service thread over an artifact directory.
+    pub fn start(artifact_dir: impl Into<std::path::PathBuf>) -> Result<RuntimeService> {
+        let dir = artifact_dir.into();
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        // Open the engine on the service thread (PJRT state never moves).
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let mut engine = match Engine::open(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Execute { artifact, inputs, reply } => {
+                            let _ = reply.send(engine.execute(&artifact, &inputs));
+                        }
+                        Request::Stats { reply } => {
+                            let _ = reply.send((engine.compiles, engine.executions));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("cannot spawn runtime thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("runtime thread died during startup".into()))??;
+        Ok(RuntimeService { tx, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        RuntimeHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+    }
+
+    #[test]
+    fn service_executes_from_multiple_threads() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let svc = RuntimeService::start(artifacts_dir()).unwrap();
+        let mut joins = vec![];
+        for i in 0..4 {
+            let h = svc.handle();
+            joins.push(std::thread::spawn(move || {
+                let x = Tensor::from_vec(vec![i as f32; 4], &[2, 2]).unwrap();
+                let y = Tensor::from_vec(vec![1.0; 4], &[2, 2]).unwrap();
+                let out = h.execute("sanity", vec![x, y]).unwrap();
+                // row-sum of constant matrix i: each element = 2*i + 2
+                assert_eq!(out[0].data[0], 2.0 * i as f32 + 2.0);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let (compiles, execs) = svc.handle().stats().unwrap();
+        assert_eq!(compiles, 1);
+        assert_eq!(execs, 4);
+    }
+
+    #[test]
+    fn missing_dir_errors_cleanly() {
+        assert!(RuntimeService::start("/nonexistent/artifacts").is_err());
+    }
+}

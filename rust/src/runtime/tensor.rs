@@ -1,0 +1,102 @@
+//! Plain-data f32 tensor: the `Send`-able value type that crosses the
+//! runtime service boundary (xla::Literal wraps raw pointers and can't).
+
+use crate::error::{Error, Result};
+
+/// Row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn from_vec(data: Vec<f32>, dims: &[usize]) -> Result<Tensor> {
+        let expect: usize = dims.iter().product();
+        if data.len() != expect {
+            return Err(Error::Runtime(format!(
+                "tensor data length {} != product of dims {:?}",
+                data.len(),
+                dims
+            )));
+        }
+        Ok(Tensor { data, dims: dims.to_vec() })
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { data: vec![v], dims: vec![] }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; dims.iter().product()], dims: dims.to_vec() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Mean of all elements (loss readouts).
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().sum::<f32>() / self.data.len() as f32
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        if self.dims.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let dims_i64: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims_i64)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Tensor::from_vec(data, &dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_validates_length() {
+        assert!(Tensor::from_vec(vec![1.0, 2.0], &[3]).is_err());
+        assert!(Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).is_ok());
+    }
+
+    #[test]
+    fn scalar_and_zeros() {
+        let s = Tensor::scalar(2.5);
+        assert_eq!(s.dims, Vec::<usize>::new());
+        assert_eq!(s.mean(), 2.5);
+        let z = Tensor::zeros(&[2, 4]);
+        assert_eq!(z.len(), 8);
+        assert_eq!(z.mean(), 0.0);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literal_round_trip() {
+        let t = Tensor::scalar(7.25);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.data, vec![7.25]);
+    }
+}

@@ -1,0 +1,179 @@
+//! Task and task-set model (substrate S6).
+//!
+//! The paper treats tasks as black boxes with four dimensions of
+//! heterogeneity: implementation, resource requirements, duration and
+//! size (§1). [`TaskSetSpec`] captures a *task set* (a node of the
+//! dependency graph): `tasks` identical black boxes, each with a
+//! [`ResourceRequest`] and a stochastic execution time
+//! TX ~ N(mu, (sigma_frac*mu)^2), exactly as Tables 1–2 specify.
+
+use crate::resources::ResourceRequest;
+use crate::util::rng::Rng;
+
+/// What a task actually *does* when executed by a real executor.
+///
+/// The virtual (discrete-event) executor ignores this; the stress
+/// executor sleeps/spins; the ML executor dispatches to the PJRT
+/// runtime (DeepDriveMD task bodies).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskKind {
+    /// Synthetic task occupying resources for TX seconds (the paper's
+    /// `stress` executable).
+    Stress,
+    /// Run MD via the `md_step` artifact and featurize frames.
+    MdSimulation { chunks: usize },
+    /// Aggregate contact-map frames into training batches.
+    Aggregation,
+    /// Run `ae_train` SGD steps on aggregated batches.
+    Training { steps: usize },
+    /// Score conformations with `ae_infer` (outlier detection).
+    Inference,
+}
+
+impl TaskKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TaskKind::Stress => "stress",
+            TaskKind::MdSimulation { .. } => "simulation",
+            TaskKind::Aggregation => "aggregation",
+            TaskKind::Training { .. } => "training",
+            TaskKind::Inference => "inference",
+        }
+    }
+}
+
+/// A *task set*: `tasks` homogeneous tasks (one DG node, cf. Fig. 2).
+#[derive(Debug, Clone)]
+pub struct TaskSetSpec {
+    /// Unique name, e.g. `"Sim0"` or `"T3"`.
+    pub name: String,
+    /// Number of tasks in the set.
+    pub tasks: u32,
+    /// Per-task resource requirement.
+    pub req: ResourceRequest,
+    /// Mean task execution time, seconds (paper scale).
+    pub tx_mean: f64,
+    /// Std-dev as a fraction of the mean (paper: 0.05).
+    pub tx_sigma_frac: f64,
+    /// Body executed by real executors.
+    pub kind: TaskKind,
+}
+
+impl TaskSetSpec {
+    pub fn new(
+        name: impl Into<String>,
+        tasks: u32,
+        req: ResourceRequest,
+        tx_mean: f64,
+    ) -> TaskSetSpec {
+        TaskSetSpec {
+            name: name.into(),
+            tasks,
+            req,
+            tx_mean,
+            tx_sigma_frac: 0.05,
+            kind: TaskKind::Stress,
+        }
+    }
+
+    pub fn with_kind(mut self, kind: TaskKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    pub fn with_sigma(mut self, frac: f64) -> Self {
+        self.tx_sigma_frac = frac;
+        self
+    }
+
+    /// Sample a concrete TX for one task of this set.
+    pub fn sample_tx(&self, rng: &mut Rng) -> f64 {
+        if self.tx_sigma_frac == 0.0 {
+            self.tx_mean
+        } else {
+            rng.normal_pos(self.tx_mean, self.tx_sigma_frac * self.tx_mean)
+        }
+    }
+
+    /// Aggregate footprint if every task of the set ran concurrently.
+    pub fn full_footprint(&self) -> (u64, u64) {
+        (
+            self.tasks as u64 * self.req.cpu_cores as u64,
+            self.tasks as u64 * self.req.gpus as u64,
+        )
+    }
+}
+
+/// A concrete task instance produced by expanding a [`TaskSetSpec`].
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    /// Unique id within a run.
+    pub uid: usize,
+    /// Index of the owning task set (within the workflow).
+    pub set_idx: usize,
+    /// Index within the set (0..tasks).
+    pub ordinal: u32,
+    /// Sampled execution time (paper-scale seconds).
+    pub tx: f64,
+    pub req: ResourceRequest,
+    pub kind: TaskKind,
+}
+
+/// Task lifecycle states, mirroring RADICAL-Pilot's task state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// Known to the engine, dependencies not yet satisfied.
+    New,
+    /// Dependencies satisfied, waiting for resources.
+    Ready,
+    /// Placed on resources, executing.
+    Running,
+    /// Finished successfully.
+    Done,
+    /// Failed (failure-injection tests).
+    Failed,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::ResourceRequest;
+
+    fn set() -> TaskSetSpec {
+        TaskSetSpec::new("Sim0", 96, ResourceRequest::new(4, 1), 340.0)
+    }
+
+    #[test]
+    fn sample_tx_respects_sigma() {
+        let s = set();
+        let mut rng = Rng::new(1);
+        let samples: Vec<f64> = (0..5000).map(|_| s.sample_tx(&mut rng)).collect();
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!((mean - 340.0).abs() < 5.0, "mean {mean}");
+        assert!(samples.iter().all(|&t| t > 0.0));
+        let sd = (samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / samples.len() as f64)
+            .sqrt();
+        assert!((sd - 17.0).abs() < 2.0, "sd {sd}"); // 0.05 * 340
+    }
+
+    #[test]
+    fn zero_sigma_is_deterministic() {
+        let s = set().with_sigma(0.0);
+        let mut rng = Rng::new(1);
+        assert_eq!(s.sample_tx(&mut rng), 340.0);
+    }
+
+    #[test]
+    fn full_footprint() {
+        let s = set();
+        assert_eq!(s.full_footprint(), (384, 96));
+    }
+
+    #[test]
+    fn kind_labels() {
+        assert_eq!(TaskKind::Stress.label(), "stress");
+        assert_eq!(TaskKind::MdSimulation { chunks: 1 }.label(), "simulation");
+        assert_eq!(TaskKind::Training { steps: 5 }.label(), "training");
+    }
+}

@@ -1,0 +1,147 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! Provides warmup + repeated timed runs with summary statistics, and a
+//! table printer shared by the `benches/` binaries so every paper
+//! table/figure regenerator reports in a consistent format.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Result of a timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Seconds per iteration.
+    pub secs: Summary,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.secs.mean
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), iters, secs: Summary::of(&times) }
+}
+
+/// Render a benchmark result line (criterion-ish).
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
+        r.name,
+        fmt_time(r.secs.mean),
+        fmt_time(r.secs.p50),
+        fmt_time(r.secs.p95),
+        r.iters
+    );
+}
+
+pub fn report_header() {
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "p50", "p95"
+    );
+    println!("{}", "-".repeat(88));
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Simple fixed-width table printer for paper-table reproduction output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String], widths: &[usize]| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers, &widths);
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row, &widths);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.secs.mean >= 0.0);
+        assert!(r.secs.p95 >= r.secs.p50 || (r.secs.p95 - r.secs.p50).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.to_string();
+        assert!(s.contains("a"));
+        assert!(s.contains("---"));
+        assert!(s.lines().count() == 3);
+    }
+}

@@ -1,0 +1,149 @@
+//! Tiny CLI argument parser (substrate S4; no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that are boolean flags (no value follows).
+    known_flags: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        known_flags: &[&'static str],
+    ) -> Result<Args> {
+        let mut out = Args { known_flags: known_flags.to_vec(), ..Default::default() };
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional.
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if out.known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(body.to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        out.options.insert(body.to_string(), v);
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(known_flags: &[&'static str]) -> Result<Args> {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: expected a number, got '{s}'"))),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: expected an integer, got '{s}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: expected an integer, got '{s}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), &["verbose", "dry-run"]).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["run", "--mode", "async", "--scale=0.01", "extra"]);
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get("mode"), Some("async"));
+        assert_eq!(a.get("scale"), Some("0.01"));
+    }
+
+    #[test]
+    fn known_flags_take_no_value() {
+        let a = parse(&["--verbose", "run"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["run", "--dry-run"]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn unknown_before_option_is_flag() {
+        let a = parse(&["--unknown", "--mode", "x"]);
+        assert!(a.flag("unknown"));
+        assert_eq!(a.get("mode"), Some("x"));
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--mode", "x", "--", "--not-an-option"]);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--scale", "0.5", "--n", "12"]);
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
+        let bad = parse(&["--n", "xy"]);
+        assert!(bad.get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Infrastructure substrates built from `std` (the offline environment
+//! ships no serde/clap/rand/criterion — we implement what we need).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

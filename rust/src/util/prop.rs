@@ -1,0 +1,105 @@
+//! Mini property-testing harness (substrate S3; no `proptest` offline).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it performs a bounded
+//! shrink-by-regeneration pass (re-draws with decreasing size hints) and
+//! reports the smallest failing case's debug representation.
+
+use crate::util::rng::Rng;
+
+/// Size hint passed to generators; starts small so early cases are tiny.
+#[derive(Debug, Clone, Copy)]
+pub struct Size(pub usize);
+
+/// Run a property over `cases` generated inputs.
+///
+/// Panics (like an assert) with the failing case on the first violation.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut generate: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng, Size) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        // Grow sizes over the run: early cases are small and debuggable.
+        let size = Size(1 + case * 20 / cases.max(1));
+        let input = generate(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // Shrink-by-regeneration: try progressively smaller sizes with
+            // fresh draws, keep the smallest failure found.
+            let mut smallest = format!("{input:?}");
+            let mut smallest_msg = msg;
+            let mut shrink_rng = rng.fork(0xBAD);
+            for s in (1..=size.0).rev() {
+                for _ in 0..20 {
+                    let cand = generate(&mut shrink_rng, Size(s));
+                    if let Err(m) = prop(&cand) {
+                        smallest = format!("{cand:?}");
+                        smallest_msg = m;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {smallest}\n  error: {smallest_msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: property returning bool.
+pub fn check_bool<T, G, P>(seed: u64, cases: usize, generate: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng, Size) -> T,
+    P: FnMut(&T) -> bool,
+{
+    check(seed, cases, generate, move |t| {
+        if prop(t) {
+            Ok(())
+        } else {
+            Err("property returned false".to_string())
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_bool(
+            1,
+            200,
+            |rng, size| (0..size.0).map(|_| rng.below(100)).collect::<Vec<_>>(),
+            |xs| xs.iter().all(|&x| x < 100),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        check_bool(
+            2,
+            200,
+            |rng, _| rng.below(10),
+            |&x| x != 7, // will eventually draw a 7
+        );
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut max_seen = 0;
+        check_bool(
+            3,
+            100,
+            |_, size| size.0,
+            |&s| {
+                max_seen = max_seen.max(s);
+                true
+            },
+        );
+        assert!(max_seen > 10);
+    }
+}

@@ -1,0 +1,271 @@
+//! Abstract-DG workflows (substrate S16): the paper's Fig. 3b graph and
+//! its two concrete parameterizations c-DG1 / c-DG2 (Table 2), plus a
+//! random-workflow generator for property tests and benches.
+//!
+//! ### Fig. 3b reconstruction
+//!
+//! The paper gives the figure only as an image; the edge set used here
+//! is reconstructed from every textual constraint:
+//! - 8 task sets T0..T7 with DOA_dep = 2 (Table 3);
+//! - T7 executes only after *both* T4 and T5 (§6.1);
+//! - (T1,T4), (T2,T5) and (T1,T5) are pairwise independent (§6.1/§6.2);
+//! - the async realization co-schedules {T3,T6} against {{T4,T5},T7}
+//!   (§7.2), with Fig. 6 noting t(T3,T6) ~ t(T4,T5)+t(T7) — so T3 and
+//!   T6 must share a stage (same rank), and the sequential stage sums
+//!   must land near the paper's ~1860/1856 s measurements;
+//!
+//! Satisfying edge set: `T0->{T1,T2,T5}; T1->T3; T2->{T4,T6};
+//! {T4,T5}->T7`. Forks at T0 (+2) and T2 (+1) open four path segments,
+//! the T7 join merges one (-1): three independent branches, DOA_dep = 2
+//! exactly as Table 3 reports. (Strict breadth-first *indexing* of the
+//! figure is sacrificed for these semantic constraints: T5 sits at
+//! rank 1.)
+//!
+//! ### Table 2 interpretation
+//!
+//! "# Task" rows with braced set pairs ({T1,T2} etc.) are read as the
+//! brace-group **total**, split evenly (e.g. c-DG2 {T3,T6}: 96 -> 48
+//! each). The per-set reading would demand 192 concurrent GPUs against
+//! the allocation's 96 and contradict the paper's own Eqn. 3 prediction
+//! of 1300 s; see DESIGN.md §Substitutions and EXPERIMENTS.md E3.
+
+use crate::dag::Dag;
+use crate::entk::{Pipeline, Workflow};
+use crate::resources::ResourceRequest;
+use crate::task::TaskSetSpec;
+use crate::util::rng::Rng;
+
+/// Fig. 3b's dependency graph.
+pub fn fig3b_dag() -> Dag {
+    let mut d = Dag::new();
+    for i in 0..8 {
+        d.add_node(format!("T{i}"));
+    }
+    d.add_edge(0, 1).unwrap();
+    d.add_edge(0, 2).unwrap();
+    d.add_edge(0, 5).unwrap();
+    d.add_edge(1, 3).unwrap();
+    d.add_edge(2, 4).unwrap();
+    d.add_edge(2, 6).unwrap();
+    d.add_edge(4, 7).unwrap();
+    d.add_edge(5, 7).unwrap();
+    d
+}
+
+/// Per-set parameters for a concrete DG (one column of Table 2).
+#[derive(Debug, Clone, Copy)]
+pub struct CdgSetParams {
+    pub tasks: u32,
+    pub cores: u32,
+    pub gpus: u32,
+    /// Mean TTX fraction of the ~2000 s budget.
+    pub ttx_fraction: f64,
+}
+
+/// Build a concrete workflow over Fig. 3b.
+///
+/// `params[i]` parameterizes task set Ti. TX mean = fraction x 2000 s,
+/// sigma = 0.05 (Table 2's N(mu, 0.05)).
+pub fn cdg_workflow(name: &str, params: [CdgSetParams; 8]) -> Workflow {
+    let dag = fig3b_dag();
+    let sets: Vec<TaskSetSpec> = params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            TaskSetSpec::new(
+                format!("T{i}"),
+                p.tasks,
+                ResourceRequest::new(p.cores, p.gpus),
+                p.ttx_fraction * 2000.0,
+            )
+            .with_sigma(0.05)
+        })
+        .collect();
+
+    // Sequential: one pipeline, stages by figure rank ({T0}, {T1,T2},
+    // {T3..T6}, {T7}); T5's only parent is T0, so placing it in stage 3
+    // is dependency-valid.
+    let sequential = vec![Pipeline::new(format!("{name}-seq"))
+        .stage(&[0])
+        .stage(&[1, 2])
+        .stage(&[3, 4, 5, 6])
+        .stage(&[7])];
+
+    // Asynchronous (§7.2): a prefix pipeline [T0; {T1,T2}], then
+    // {T3,T6} against {{T4,T5}; T7}.
+    let asynchronous = vec![
+        Pipeline::new(format!("{name}-p0")).stage(&[0]).stage(&[1, 2]),
+        Pipeline::new(format!("{name}-p1")).stage(&[3, 6]),
+        Pipeline::new(format!("{name}-p2")).stage(&[4, 5]).stage(&[7]),
+    ];
+
+    let wf = Workflow {
+        name: name.to_string(),
+        sets,
+        dag,
+        sequential,
+        asynchronous,
+    };
+    wf.validate().expect("cdg builder produces valid workflows");
+    wf
+}
+
+/// Table 2, column c-DG1: asynchronicity's *negative* case (I ~ -0.015).
+pub fn cdg1() -> Workflow {
+    let p = |tasks, cores, gpus, f| CdgSetParams { tasks, cores, gpus, ttx_fraction: f };
+    cdg_workflow(
+        "c-DG1",
+        [
+            p(96, 16, 1, 0.38), // T0
+            p(16, 40, 0, 0.11), // T1 ({T1,T2}: 32 total)
+            p(16, 40, 0, 0.11), // T2
+            p(8, 4, 0, 0.06),   // T3 ({T3,T6}: 16 total)
+            p(8, 32, 1, 0.08),  // T4 ({T4,T5}: 16 total)
+            p(8, 32, 1, 0.08),  // T5
+            p(8, 4, 0, 0.06),   // T6
+            p(96, 4, 1, 0.36),  // T7
+        ],
+    )
+}
+
+/// Table 2, column c-DG2: asynchronicity's strong win (I ~ 0.26).
+pub fn cdg2() -> Workflow {
+    let p = |tasks, cores, gpus, f| CdgSetParams { tasks, cores, gpus, ttx_fraction: f };
+    cdg_workflow(
+        "c-DG2",
+        [
+            p(96, 16, 1, 0.19), // T0
+            p(16, 40, 0, 0.08), // T1
+            p(16, 40, 0, 0.08), // T2
+            p(48, 4, 1, 0.38),  // T3 ({T3,T6}: 96 total)
+            p(8, 32, 1, 0.12),  // T4
+            p(8, 32, 1, 0.12),  // T5
+            p(48, 4, 1, 0.38),  // T6
+            p(16, 4, 0, 0.23),  // T7
+        ],
+    )
+}
+
+/// Random layered workflow generator (benches / property tests): up to
+/// `max_ranks` ranks, random fan-out, random resources bounded by the
+/// cluster's node size.
+pub fn random_workflow(rng: &mut Rng, max_ranks: usize, max_sets_per_rank: usize) -> Workflow {
+    let ranks = 2 + rng.below(max_ranks.max(1) as u64) as usize;
+    let mut dag = Dag::new();
+    let mut sets = Vec::new();
+    let mut by_rank: Vec<Vec<usize>> = Vec::new();
+    for r in 0..ranks {
+        let width = 1 + rng.below(max_sets_per_rank.max(1) as u64) as usize;
+        let mut level = Vec::new();
+        for _ in 0..width {
+            let id = dag.add_node(format!("S{}", sets.len()));
+            let gpus = if rng.f64() < 0.4 { 1 } else { 0 };
+            sets.push(
+                TaskSetSpec::new(
+                    format!("S{}", sets.len()),
+                    1 + rng.below(12) as u32,
+                    ResourceRequest::new(1 + rng.below(8) as u32, gpus),
+                    10.0 + rng.f64() * 90.0,
+                )
+                .with_sigma(0.05),
+            );
+            level.push(id);
+        }
+        if r > 0 {
+            for &v in &level {
+                // Each node gets >= 1 parent from the previous rank.
+                let prev = &by_rank[r - 1];
+                let p = prev[rng.below(prev.len() as u64) as usize];
+                dag.add_edge(p, v).unwrap();
+                if prev.len() > 1 && rng.f64() < 0.25 {
+                    let p2 = prev[rng.below(prev.len() as u64) as usize];
+                    if p2 != p {
+                        let _ = dag.add_edge(p2, v);
+                    }
+                }
+            }
+        }
+        by_rank.push(level);
+    }
+    // Sequential: rank stages. Async: one pipeline per branch chain —
+    // derived simply as rank-stage pipelines per branch id.
+    let analysis = crate::dag::DagAnalysis::of(&dag);
+    let mut seq = Pipeline::new("seq");
+    for level in &by_rank {
+        seq = seq.stage(level);
+    }
+    let nbranches = analysis.branches.count();
+    let mut async_pipes: Vec<Pipeline> = (0..nbranches)
+        .map(|b| Pipeline::new(format!("p{b}")))
+        .collect();
+    for level in &by_rank {
+        // group this rank's sets by branch
+        let mut per_branch: Vec<Vec<usize>> = vec![vec![]; nbranches];
+        for &v in level {
+            per_branch[analysis.branches.branch_of[v]].push(v);
+        }
+        for (b, group) in per_branch.into_iter().enumerate() {
+            if !group.is_empty() {
+                async_pipes[b].stages.push(crate::entk::Stage::of(&group));
+            }
+        }
+    }
+    async_pipes.retain(|p| !p.stages.is_empty());
+    let wf = Workflow {
+        name: "random".into(),
+        sets,
+        dag,
+        sequential: vec![seq],
+        asynchronous: async_pipes,
+    };
+    wf.validate().expect("random builder produces valid workflows");
+    wf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::DagAnalysis;
+    use crate::util::prop::check_bool;
+
+    #[test]
+    fn fig3b_satisfies_textual_constraints() {
+        let d = fig3b_dag();
+        let a = DagAnalysis::of(&d);
+        assert_eq!(a.doa_dep, 2, "Table 3: DOA_dep = 2");
+        // T7 after both T4 and T5.
+        assert_eq!(d.parents(7), &[4, 5]);
+        // §6.1/§6.2 independence pairs.
+        assert!(d.independent(1, 4));
+        assert!(d.independent(2, 5));
+        assert!(d.independent(1, 5));
+        // {T3,T6} share a rank (they co-run in Fig. 6's async stage).
+        assert_eq!(a.ranks[3], a.ranks[6]);
+        assert_eq!(a.ranks, vec![0, 1, 1, 2, 2, 1, 2, 3]);
+    }
+
+    #[test]
+    fn cdg1_and_cdg2_validate() {
+        cdg1().validate().unwrap();
+        cdg2().validate().unwrap();
+        // Sequential TTX budget ~2000 s (paper: "about 2000 s for both").
+        let c = crate::resources::ClusterSpec::summit_paper();
+        let t1 = crate::model::t_seq(&cdg1(), &c, 0.0);
+        let t2 = crate::model::t_seq(&cdg2(), &c, 0.0);
+        assert!((1700.0..=2100.0).contains(&t1), "c-DG1 tSeq={t1}");
+        assert!((1700.0..=2100.0).contains(&t2), "c-DG2 tSeq={t2}");
+    }
+
+    #[test]
+    fn property_random_workflows_always_valid() {
+        check_bool(
+            0xF00D,
+            60,
+            |rng: &mut Rng, size| {
+                let mut r = rng.fork(size.0 as u64);
+                random_workflow(&mut r, 4, 3)
+            },
+            |wf| wf.validate().is_ok() && wf.analysis().doa_dep + 1 >= 1,
+        );
+    }
+}

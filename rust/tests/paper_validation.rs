@@ -1,0 +1,149 @@
+//! Paper-validation integration tests: every numbered claim from §5–§7
+//! that has a closed-form value, checked end to end through the public
+//! API. These are the repository's "does it reproduce the paper"
+//! gate (see EXPERIMENTS.md for the narrative version).
+
+use asyncflow::dag::{figures, DagAnalysis};
+use asyncflow::ddmd::{ddmd_workflow, DdmdConfig};
+use asyncflow::engine::{simulate_cfg, EngineConfig, ExecutionMode};
+use asyncflow::experiments::{check_shapes, run_table3, PAPER_TABLE3};
+use asyncflow::model;
+use asyncflow::resources::ClusterSpec;
+use asyncflow::workflows::{cdg1, cdg2, fig3b_dag};
+
+/// §5.1 / Fig. 2 (E7): DOA_dep for the four reference graphs.
+#[test]
+fn e7_fig2_doa_dep() {
+    assert_eq!(DagAnalysis::of(&figures::chain(6)).doa_dep, 0);
+    assert_eq!(DagAnalysis::of(&figures::fig2b()).doa_dep, 1);
+    assert_eq!(DagAnalysis::of(&figures::fig2c()).doa_dep, 4);
+    for n in [1usize, 3, 9] {
+        assert_eq!(DagAnalysis::of(&figures::edgeless(n + 1)).doa_dep, n);
+    }
+}
+
+/// §5.3 worked example (E8): tSeq = 7500 s, tAsync = 5500 s, I ~ 26%.
+#[test]
+fn e8_worked_example_closed_forms() {
+    assert!((model::improvement(7500.0, 5500.0) - 0.26667).abs() < 1e-4);
+    assert!((model::t_async_ddmd_eqn6(3, 526.0, 85.0, 63.0) - 1345.0).abs() < 1e-9);
+}
+
+/// §7.1 (E9): the DDMD prediction chain — Eqn. 2 gives 3 x 526 = 1578;
+/// the ideal simulator lands within 8% of Eqn. 6's 1345.
+#[test]
+fn e9_ddmd_prediction_chain() {
+    let mut cfg = DdmdConfig::paper();
+    cfg.tx_sigma_frac = 0.0;
+    let wf = ddmd_workflow(&cfg);
+    let cluster = ClusterSpec::summit_paper();
+    assert!((model::t_seq(&wf, &cluster, 0.0) - 1578.0).abs() < 1e-6);
+
+    let ideal = EngineConfig::ideal();
+    let seq = simulate_cfg(&wf, &cluster, ExecutionMode::Sequential, &ideal);
+    assert!((seq.makespan - 1578.0).abs() < 1.0);
+    let asy = simulate_cfg(&wf, &cluster, ExecutionMode::Asynchronous, &ideal);
+    let eqn6 = model::t_async_ddmd_eqn6(3, 526.0, 85.0, 63.0);
+    assert!(
+        (asy.makespan - eqn6).abs() / eqn6 < 0.08,
+        "sim {} vs eqn6 {eqn6}",
+        asy.makespan
+    );
+}
+
+/// Table 3 (E1–E3): DOA columns exact; I columns in the paper's bands;
+/// orderings preserved.
+#[test]
+fn e1_e3_table3_shape() {
+    let rows = run_table3(42);
+    assert!(check_shapes(&rows).is_empty(), "{:?}", check_shapes(&rows));
+    for (row, paper) in rows.iter().zip(PAPER_TABLE3.iter()) {
+        assert_eq!(row.prediction.doa_dep, paper.doa_dep);
+        assert_eq!(row.prediction.doa_res, paper.doa_res);
+        assert_eq!(row.prediction.wla, paper.wla);
+        // Predictions agree with our own measurements within 15%
+        // (the paper reports <6% for its runs; ours includes the
+        // stochastic max-of-96 stage stretch the model ignores).
+        let rel = (row.prediction.t_async - row.asy.makespan).abs() / row.asy.makespan;
+        assert!(rel < 0.15, "{}: pred {} meas {}", row.name, row.prediction.t_async, row.asy.makespan);
+    }
+}
+
+/// Figs. 4–6 (E4–E6): asynchronicity must raise mean utilization for
+/// DDMD and c-DG2, and leave c-DG1 roughly flat.
+#[test]
+fn e4_e6_utilization_shapes() {
+    let cfg = asyncflow::experiments::paper_engine_config(42);
+    // DDMD on Summit: GPU utilization improves markedly (Fig. 4).
+    let wf = ddmd_workflow(&DdmdConfig::paper());
+    let cl = ClusterSpec::summit_paper();
+    let seq = simulate_cfg(&wf, &cl, ExecutionMode::Sequential, &cfg);
+    let asy = simulate_cfg(&wf, &cl, ExecutionMode::Asynchronous, &cfg);
+    assert!(asy.gpu_utilization > seq.gpu_utilization + 0.05, "Fig 4 shape");
+
+    // c-DG2 (Fig. 6): clear improvement.
+    let cl8 = ClusterSpec::summit_8gpu();
+    let wf2 = cdg2();
+    let s2 = simulate_cfg(&wf2, &cl8, ExecutionMode::Sequential, &cfg);
+    let a2 = simulate_cfg(&wf2, &cl8, ExecutionMode::Asynchronous, &cfg);
+    assert!(a2.cpu_utilization > s2.cpu_utilization, "Fig 6 shape");
+
+    // c-DG1 (Fig. 5): negligible change (within 5 points).
+    let wf1 = cdg1();
+    let s1 = simulate_cfg(&wf1, &cl8, ExecutionMode::Sequential, &cfg);
+    let a1 = simulate_cfg(&wf1, &cl8, ExecutionMode::Asynchronous, &cfg);
+    assert!((a1.cpu_utilization - s1.cpu_utilization).abs() < 0.05, "Fig 5 shape");
+}
+
+/// §5.2's collapse scenario: when every branch needs 100% of the
+/// allocation, the async DG degenerates to a chain and I <= 0.
+#[test]
+fn s52_collapse_to_chain() {
+    // R_i = R-tilde for all i (§5.2): every task set needs 100% of the
+    // allocation — the otherwise-independent chains collapse to a
+    // single chain and asynchronicity buys nothing.
+    let mut cfgw = DdmdConfig::paper();
+    cfgw.simulation = asyncflow::ddmd::TaskTypeSpec { tasks: 96, cores: 4, gpus: 1, tx: 340.0 };
+    // One monolithic MPI aggregation spanning every core: no waves can
+    // slide in beside a Simulation set.
+    cfgw.aggregation = asyncflow::ddmd::TaskTypeSpec { tasks: 1, cores: 2688, gpus: 0, tx: 85.0 };
+    cfgw.training = asyncflow::ddmd::TaskTypeSpec { tasks: 96, cores: 4, gpus: 1, tx: 63.0 };
+    cfgw.inference = asyncflow::ddmd::TaskTypeSpec { tasks: 96, cores: 16, gpus: 1, tx: 38.0 };
+    cfgw.tx_sigma_frac = 0.0;
+    let wf = ddmd_workflow(&cfgw);
+    let cl = ClusterSpec::summit_paper();
+    assert_eq!(model::doa_res_analytic(&wf, &cl), 0, "no branch pair co-fits");
+    let ideal = EngineConfig::ideal();
+    let seq = simulate_cfg(&wf, &cl, ExecutionMode::Sequential, &ideal);
+    let asy = simulate_cfg(&wf, &cl, ExecutionMode::Asynchronous, &ideal);
+    let i = asy.improvement_over(&seq);
+    assert!(i.abs() < 0.05, "collapse scenario still showed I = {i:.3}");
+}
+
+/// Fig. 3b reconstruction invariants (documented in workflows::mod).
+#[test]
+fn fig3b_reconstruction_invariants() {
+    let d = fig3b_dag();
+    let a = DagAnalysis::of(&d);
+    assert_eq!(a.doa_dep, 2);
+    assert_eq!(d.parents(7), &[4, 5]);
+    assert!(d.independent(1, 4) && d.independent(2, 5) && d.independent(1, 5));
+}
+
+/// The model's verdict matches measurement on both sides of the
+/// asynchronicity decision (the paper's core design-guidance claim).
+#[test]
+fn model_verdict_matches_measurement() {
+    let cl8 = ClusterSpec::summit_8gpu();
+    let cfg = asyncflow::experiments::paper_engine_config(42);
+    // c-DG2: model says go async; measurement agrees.
+    let p2 = model::predict(&cdg2(), &cl8);
+    let s = simulate_cfg(&cdg2(), &cl8, ExecutionMode::Sequential, &cfg);
+    let a = simulate_cfg(&cdg2(), &cl8, ExecutionMode::Asynchronous, &cfg);
+    assert!(p2.improvement > 0.1 && a.improvement_over(&s) > 0.1);
+    // c-DG1: model says don't bother; measurement agrees.
+    let p1 = model::predict(&cdg1(), &cl8);
+    let s = simulate_cfg(&cdg1(), &cl8, ExecutionMode::Sequential, &cfg);
+    let a = simulate_cfg(&cdg1(), &cl8, ExecutionMode::Asynchronous, &cfg);
+    assert!(p1.improvement < 0.03 && a.improvement_over(&s) < 0.03);
+}
