@@ -30,6 +30,24 @@ fn main() {
     report(&r);
     println!("    -> {:.0} alloc/release ops/s", 1.0 / per_op);
 
+    // Spanning (CPU-only) allocation bursts: the lazily-repaired
+    // descending-free-cores index sorts once per burst instead of once
+    // per allocation (the c-DG T1/T2 sets place 16 x 40-core spanning
+    // tasks in a single scheduler drain round).
+    let r = bench("allocator: 64-task spanning burst (40c) + release", 10, 200, || {
+        let mut a = Allocator::new(&cluster);
+        let mut ps = Vec::with_capacity(64);
+        for _ in 0..64 {
+            ps.push(a.try_alloc(&ResourceRequest::new(40, 0)).unwrap());
+        }
+        for p in &ps {
+            a.release(p);
+        }
+        std::hint::black_box(a.free_cores());
+    });
+    report(&r);
+    println!("    -> {:.0} spanning allocs/s", 64.0 / r.secs.mean);
+
     // --- scheduler ----------------------------------------------------
     for policy in [Policy::FifoBackfill, Policy::PipelineAge, Policy::SmallestFirst] {
         let r = bench(&format!("scheduler: drain 1000 tasks ({policy:?})"), 5, 50, || {

@@ -10,12 +10,29 @@
 //! every member's asynchronous pipelines concurrently. DOA_dep of the
 //! merged DAG grows by the number of extra components, exactly as
 //! Fig. 2d's edge-less DG prescribes.
+//!
+//! Two concurrent execution paths exist:
+//!
+//! - [`Campaign::simulate`] — the static merged-DAG path: members are
+//!   fused into one workflow before execution (all must be known at
+//!   t = 0);
+//! - [`Campaign::simulate_online`] — the shared-agent path: one
+//!   [`Coordinator`] multiplexes a live [`WorkflowDriver`](crate::engine::WorkflowDriver)
+//!   per member over a single pilot, so members may *arrive while
+//!   others are running* (RADICAL-Pilot / RHAPSODY-style sessions).
+//!   With all-zero arrival offsets it reproduces the merged-DAG
+//!   asynchronous makespan exactly (see `tests/coordinator.rs`).
+
+use std::time::Duration;
 
 use crate::dag::Dag;
-use crate::engine::{simulate_cfg, EngineConfig, ExecutionMode, RunReport};
+use crate::engine::{
+    simulate_cfg, Coordinator, EngineConfig, ExecutionMode, RunReport,
+};
 use crate::entk::{Pipeline, Stage, Workflow};
 use crate::error::{Error, Result};
 use crate::resources::ClusterSpec;
+use crate::sim::VirtualExecutor;
 
 /// A set of independent workflows executed as one campaign.
 #[derive(Debug, Clone)]
@@ -120,6 +137,98 @@ impl Campaign {
             simulate_cfg(&wf, cluster, ExecutionMode::Asynchronous, cfg),
         ))
     }
+
+    /// Simulate the campaign *online*: every member runs through its own
+    /// driver on one shared pilot agent, member `i` arriving at
+    /// `arrivals[i]` engine-seconds (so workflows can join a busy
+    /// allocation mid-run). Requires one arrival offset per member.
+    pub fn simulate_online(
+        &self,
+        arrivals: &[f64],
+        cluster: &ClusterSpec,
+        cfg: &EngineConfig,
+    ) -> Result<CampaignReport> {
+        if self.members.is_empty() {
+            return Err(Error::InvalidWorkflow("campaign has no members".into()));
+        }
+        if arrivals.len() != self.members.len() {
+            return Err(Error::Config(format!(
+                "campaign '{}': {} arrival offsets for {} members",
+                self.name,
+                arrivals.len(),
+                self.members.len()
+            )));
+        }
+        let mut coord = Coordinator::new(cluster, cfg);
+        for (wf, &arrival) in self.members.iter().zip(arrivals) {
+            coord.add_workflow(wf.clone(), ExecutionMode::Asynchronous, arrival)?;
+        }
+        let mut ex = VirtualExecutor::new();
+        let members = coord.run(&mut ex)?;
+        let campaign = merge_member_reports(&self.name, &members, cluster);
+        Ok(CampaignReport { arrivals: arrivals.to_vec(), members, campaign })
+    }
+}
+
+/// Result of an online (shared-agent) campaign run.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    /// Arrival offset of each member (engine seconds).
+    pub arrivals: Vec<f64>,
+    /// Per-member reports; `makespan` is the member's *absolute* finish
+    /// time on the campaign clock (member TTX = [`CampaignReport::member_ttx`]).
+    pub members: Vec<RunReport>,
+    /// Merged campaign-level view: records re-uid'd into one namespace,
+    /// branch/pipeline ids offset per member, one utilization trace.
+    pub campaign: RunReport,
+}
+
+impl CampaignReport {
+    /// Member i's time-to-execution measured from its own arrival.
+    pub fn member_ttx(&self, i: usize) -> f64 {
+        self.members[i].makespan - self.arrivals[i]
+    }
+
+    /// Campaign TTX: first arrival to last finish.
+    pub fn campaign_ttx(&self) -> f64 {
+        let first = self.arrivals.iter().copied().fold(f64::INFINITY, f64::min);
+        self.campaign.makespan - first
+    }
+}
+
+/// Fuse per-member reports into one campaign-level [`RunReport`]
+/// (global task uids, per-member branch/pipeline offsets, shared trace).
+fn merge_member_reports(
+    name: &str,
+    members: &[RunReport],
+    cluster: &ClusterSpec,
+) -> RunReport {
+    let mut records = Vec::with_capacity(members.iter().map(|m| m.records.len()).sum());
+    let mut branch_off = 0usize;
+    let mut pipe_off = 0usize;
+    for (mi, m) in members.iter().enumerate() {
+        let n_branches = m.records.iter().map(|r| r.branch).max().map_or(0, |b| b + 1);
+        let n_pipes = m.records.iter().map(|r| r.pipeline).max().map_or(0, |p| p + 1);
+        for r in &m.records {
+            let mut r = r.clone();
+            r.uid = records.len();
+            r.branch += branch_off;
+            r.pipeline += pipe_off;
+            // "<name>@<member index>/" keeps set names unique even when
+            // the same workflow joins a campaign twice (same scheme as
+            // Campaign::merge).
+            r.set_name = format!("{}@{mi}/{}", m.workflow, r.set_name);
+            records.push(r);
+        }
+        branch_off += n_branches;
+        pipe_off += n_pipes;
+    }
+    let failed: usize = members.iter().map(|m| m.failed_tasks).sum();
+    let mut campaign =
+        RunReport::from_records(name, ExecutionMode::Asynchronous, records, cluster, failed);
+    campaign.sched_rounds = members.first().map_or(0, |m| m.sched_rounds);
+    campaign.sched_wall = members.first().map_or(Duration::ZERO, |m| m.sched_wall);
+    campaign
 }
 
 #[cfg(test)]
@@ -170,6 +279,71 @@ mod tests {
         );
         // Both workflows' branches progress concurrently.
         assert!(asy.doa_res >= 1);
+    }
+
+    #[test]
+    fn online_zero_arrivals_reproduces_merged_async() {
+        // The shared-agent coordinator path with simultaneous arrivals
+        // must be *exactly* the merged-DAG asynchronous run — same TX
+        // draws (order-independent per-set streams), same submission
+        // order, same placements, same makespan.
+        let camp = Campaign::new("mixed").add(cdg1()).add(cdg2());
+        let cluster = ClusterSpec::summit_8gpu();
+        let cfg = EngineConfig::ideal();
+        let (_, merged_asy) = camp.simulate(&cluster, &cfg).unwrap();
+        let online = camp.simulate_online(&[0.0, 0.0], &cluster, &cfg).unwrap();
+        assert!(
+            (online.campaign.makespan - merged_asy.makespan).abs() < 1e-9,
+            "online {} vs merged {}",
+            online.campaign.makespan,
+            merged_asy.makespan
+        );
+        assert_eq!(online.campaign.records.len(), merged_asy.records.len());
+        assert!((online.campaign.cpu_utilization - merged_asy.cpu_utilization).abs() < 1e-9);
+        assert_eq!(online.members.len(), 2);
+    }
+
+    #[test]
+    fn online_staggered_arrivals_shift_the_second_member() {
+        let camp = Campaign::new("staggered").add(cdg1()).add(cdg2());
+        let cluster = ClusterSpec::summit_8gpu();
+        let cfg = EngineConfig::ideal();
+        let zero = camp.simulate_online(&[0.0, 0.0], &cluster, &cfg).unwrap();
+        let lag = camp.simulate_online(&[0.0, 400.0], &cluster, &cfg).unwrap();
+        // The late member cannot submit before it arrives.
+        let first_sub = lag.members[1]
+            .records
+            .iter()
+            .map(|r| r.submitted)
+            .fold(f64::INFINITY, f64::min);
+        assert!(first_sub >= 400.0 - 1e-9, "first submission at {first_sub}");
+        // Staggering produces a strictly different, internally
+        // consistent campaign timeline.
+        assert!(
+            (lag.campaign.makespan - zero.campaign.makespan).abs() > 1e-6,
+            "staggered {} == simultaneous {}",
+            lag.campaign.makespan,
+            zero.campaign.makespan
+        );
+        let member_max = lag
+            .members
+            .iter()
+            .map(|m| m.makespan)
+            .fold(0.0f64, f64::max);
+        assert!((lag.campaign.makespan - member_max).abs() < 1e-9);
+        assert!(lag.member_ttx(1) > 0.0);
+        assert!(lag.campaign_ttx() >= lag.member_ttx(0));
+    }
+
+    #[test]
+    fn online_rejects_mismatched_arrivals() {
+        let camp = Campaign::new("c").add(small_ddmd(1)).add(small_ddmd(1));
+        let cluster = ClusterSpec::summit_paper();
+        let cfg = EngineConfig::ideal();
+        assert!(camp.simulate_online(&[0.0], &cluster, &cfg).is_err());
+        assert!(Campaign::new("empty")
+            .simulate_online(&[], &cluster, &cfg)
+            .is_err());
     }
 
     #[test]

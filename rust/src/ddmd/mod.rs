@@ -13,6 +13,7 @@
 //! invoke the AOT-compiled JAX/Pallas artifacts (MD, featurization,
 //! autoencoder training/inference) through the PJRT runtime.
 
+#[cfg(feature = "pjrt")]
 pub mod mlexec;
 
 use crate::dag::Dag;

@@ -1,0 +1,320 @@
+//! Multi-workflow coordinator: multiplexes N [`WorkflowDriver`]s over
+//! one shared pilot [`Agent`] and one [`Executor`].
+//!
+//! The coordinator owns the three global resources the drivers must
+//! share — the allocation (via the agent), the clock (via the
+//! executor), and the task-uid namespace — and runs the event loop:
+//!
+//! 1. feed `ClockAdvanced` to every driver and submit whatever became
+//!    ready (a late-arriving workflow's roots are just deferred
+//!    activations that come due);
+//! 2. invoke the continuous scheduler once per state change;
+//! 3. launch placements, then drain the executor's next completion
+//!    batch (all completions sharing one instant are handed back in a
+//!    single call) and route each back to its owning driver.
+//!
+//! `engine::run` is a coordinator with exactly one driver, so the
+//! single-workflow path and the concurrent-campaign path are the same
+//! code.
+
+use std::time::{Duration, Instant};
+
+use super::driver::{EngineEvent, Submission, WorkflowDriver};
+use super::{EngineConfig, ExecutionMode, RunReport};
+use crate::entk::Workflow;
+use crate::error::{Error, Result};
+use crate::exec::{Executor, RunningTask};
+use crate::pilot::Agent;
+use crate::resources::ClusterSpec;
+use crate::task::TaskSpec;
+
+/// Shared-pilot multiplexer over any number of workflow drivers.
+pub struct Coordinator {
+    cluster: ClusterSpec,
+    cfg: EngineConfig,
+    drivers: Vec<WorkflowDriver>,
+    /// Next driver's TX-stream base (cumulative set count, i.e. the
+    /// merged-DAG node offset).
+    next_set_stream: u64,
+    /// Next driver's priority base (cumulative pipeline count).
+    next_pipeline: u64,
+}
+
+impl Coordinator {
+    pub fn new(cluster: &ClusterSpec, cfg: &EngineConfig) -> Coordinator {
+        Coordinator {
+            cluster: cluster.clone(),
+            cfg: cfg.clone(),
+            drivers: Vec::new(),
+            next_set_stream: 0,
+            next_pipeline: 0,
+        }
+    }
+
+    /// Register a workflow whose roots become schedulable at `arrival`
+    /// (engine seconds). Returns the index of its report in
+    /// [`Coordinator::run`]'s result.
+    pub fn add_workflow(
+        &mut self,
+        wf: Workflow,
+        mode: ExecutionMode,
+        arrival: f64,
+    ) -> Result<usize> {
+        if !arrival.is_finite() || arrival < 0.0 {
+            return Err(Error::Config(format!(
+                "workflow '{}': invalid arrival time {arrival}",
+                wf.name
+            )));
+        }
+        for s in &wf.sets {
+            self.cluster.check(&s.req)?;
+        }
+        let n_sets = wf.sets.len() as u64;
+        let d = WorkflowDriver::new(
+            wf,
+            mode,
+            &self.cfg,
+            arrival,
+            self.next_set_stream,
+            self.next_pipeline,
+        )?;
+        self.next_set_stream += n_sets;
+        self.next_pipeline += d.pipeline_count() as u64;
+        self.drivers.push(d);
+        Ok(self.drivers.len() - 1)
+    }
+
+    pub fn driver_count(&self) -> usize {
+        self.drivers.len()
+    }
+
+    /// Drive every registered workflow to completion over `executor`;
+    /// returns one [`RunReport`] per driver, in registration order.
+    /// Scheduler accounting (rounds / wall time) is global and repeated
+    /// on every report.
+    pub fn run(mut self, executor: &mut dyn Executor) -> Result<Vec<RunReport>> {
+        let mut agent = Agent::new(&self.cluster, self.cfg.policy);
+        // Global uid -> (driver index, driver-local uid).
+        let mut route: Vec<(usize, usize)> = Vec::new();
+        // Global-uid-indexed specs (what the executor launches).
+        let mut specs: Vec<TaskSpec> = Vec::new();
+        let mut in_flight = 0usize;
+        let mut sched_rounds = 0usize;
+        let mut sched_wall = Duration::ZERO;
+        // Only invoke the scheduler when the system state changed (new
+        // submissions or freed resources) — avoids O(queue) rescans on
+        // clock-advance iterations.
+        let mut sched_dirty = true;
+
+        loop {
+            let now = executor.now();
+
+            // 1. Release activations that are due, in driver order (this
+            // matches merged-DAG set ordering: member k's sets precede
+            // member k+1's).
+            for di in 0..self.drivers.len() {
+                let subs = self.drivers[di].step(EngineEvent::ClockAdvanced { now });
+                for sub in subs {
+                    Self::submit(&mut agent, &mut route, &mut specs, di, sub, now);
+                    sched_dirty = true;
+                }
+            }
+
+            // 2. Schedule everything that fits.
+            let placed = if sched_dirty {
+                let t0 = Instant::now();
+                let placed = agent.schedule();
+                sched_wall += t0.elapsed();
+                sched_rounds += 1;
+                sched_dirty = false;
+                placed
+            } else {
+                Vec::new()
+            };
+            for s in &placed {
+                let spec = &specs[s.uid];
+                let (di, local) = route[s.uid];
+                self.drivers[di].on_started(local, now);
+                executor.launch(&RunningTask {
+                    uid: s.uid,
+                    tx: spec.tx + self.cfg.task_overhead,
+                    started_at: now,
+                    kind: Some(spec.kind.clone()),
+                });
+                in_flight += 1;
+            }
+
+            // 3. Wait for progress.
+            let next_deferred = self
+                .drivers
+                .iter()
+                .filter_map(|d| d.next_activation())
+                .fold(f64::INFINITY, f64::min);
+            if in_flight > 0 {
+                match executor.peek_next_completion() {
+                    // An activation is due before the next completion:
+                    // fast-forward to it (virtual time).
+                    Some(peek) if next_deferred < peek => {
+                        executor.advance_to(next_deferred);
+                        continue;
+                    }
+                    Some(_) => {}
+                    // Real executor: wait no longer than the next due
+                    // activation; wake early if a completion lands.
+                    None => {
+                        if next_deferred.is_finite() && next_deferred > now + 1e-12 {
+                            if !executor.wait_until(next_deferred) {
+                                continue; // deadline hit; release at loop top
+                            }
+                        }
+                    }
+                }
+                let completions = executor.drain_ready();
+                if completions.is_empty() {
+                    return Err(Error::Engine("executor lost in-flight tasks".into()));
+                }
+                for c in completions {
+                    in_flight -= 1;
+                    agent.complete(c.uid);
+                    sched_dirty = true; // resources were freed
+                    let (di, local) = route[c.uid];
+                    let _ = self.drivers[di].step(EngineEvent::TaskCompleted {
+                        uid: local,
+                        finished_at: c.finished_at,
+                        failed: c.failed,
+                    });
+                    if c.failed && self.cfg.abort_on_failure {
+                        // Report the driver-local uid: that is the uid
+                        // visible in the member's RunReport records.
+                        return Err(Error::Engine(format!(
+                            "task {} ({}) of workflow '{}' failed",
+                            local,
+                            self.drivers[di].record(local).set_name,
+                            self.drivers[di].workflow_name()
+                        )));
+                    }
+                }
+            } else if next_deferred.is_finite() {
+                // Nothing running; sleep (real) or fast-forward (virtual)
+                // to the next activation — e.g. a workflow yet to arrive.
+                executor.wait_until(next_deferred);
+            } else if agent.queue_len() > 0 {
+                return Err(Error::Engine(
+                    "deadlock: tasks queued but nothing running (unsatisfiable request?)"
+                        .into(),
+                ));
+            } else {
+                break; // every driver drained
+            }
+        }
+
+        debug_assert!(self.drivers.iter().all(|d| d.is_done()));
+        let cluster = self.cluster;
+        let mut reports: Vec<RunReport> = self
+            .drivers
+            .into_iter()
+            .map(|d| d.into_report(&cluster))
+            .collect();
+        for r in &mut reports {
+            r.sched_rounds = sched_rounds;
+            r.sched_wall = sched_wall;
+        }
+        Ok(reports)
+    }
+
+    /// Move a driver submission into the global namespace and enqueue it.
+    fn submit(
+        agent: &mut Agent,
+        route: &mut Vec<(usize, usize)>,
+        specs: &mut Vec<TaskSpec>,
+        driver_idx: usize,
+        sub: Submission,
+        now: f64,
+    ) {
+        let local = sub.spec.uid;
+        let mut spec = sub.spec;
+        spec.uid = specs.len();
+        agent.submit(&spec, sub.priority, now);
+        route.push((driver_idx, local));
+        specs.push(spec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::Dag;
+    use crate::entk::{Pipeline, Workflow};
+    use crate::resources::ResourceRequest;
+    use crate::sim::VirtualExecutor;
+    use crate::task::TaskSetSpec;
+
+    fn solo(tx: f64) -> Workflow {
+        let mut dag = Dag::new();
+        dag.add_node("A");
+        Workflow {
+            name: "solo".into(),
+            sets: vec![TaskSetSpec::new("A", 1, ResourceRequest::new(1, 0), tx).with_sigma(0.0)],
+            dag,
+            sequential: vec![Pipeline::new("s").stage(&[0])],
+            asynchronous: vec![Pipeline::new("a").stage(&[0])],
+        }
+    }
+
+    #[test]
+    fn two_drivers_share_one_agent() {
+        let cluster = ClusterSpec::uniform("t", 1, 2, 0);
+        let cfg = EngineConfig::ideal();
+        let mut coord = Coordinator::new(&cluster, &cfg);
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        coord.add_workflow(solo(20.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        let mut ex = VirtualExecutor::new();
+        let reports = coord.run(&mut ex).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert!((reports[0].makespan - 10.0).abs() < 1e-9);
+        assert!((reports[1].makespan - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn late_arrival_shifts_the_member_timeline() {
+        let cluster = ClusterSpec::uniform("t", 1, 2, 0);
+        let cfg = EngineConfig::ideal();
+        let mut coord = Coordinator::new(&cluster, &cfg);
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 100.0).unwrap();
+        let mut ex = VirtualExecutor::new();
+        let reports = coord.run(&mut ex).unwrap();
+        assert!((reports[0].makespan - 10.0).abs() < 1e-9);
+        assert!((reports[1].records[0].submitted - 100.0).abs() < 1e-9);
+        assert!((reports[1].makespan - 110.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_serializes_across_drivers() {
+        // One core: two single-task workflows arriving together must run
+        // back to back on the shared allocation.
+        let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+        let cfg = EngineConfig::ideal();
+        let mut coord = Coordinator::new(&cluster, &cfg);
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        let mut ex = VirtualExecutor::new();
+        let reports = coord.run(&mut ex).unwrap();
+        assert!((reports[0].makespan - 10.0).abs() < 1e-9);
+        assert!((reports[1].makespan - 20.0).abs() < 1e-9, "second waits for the core");
+    }
+
+    #[test]
+    fn rejects_bad_arrivals_and_unsatisfiable_requests() {
+        let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+        let cfg = EngineConfig::ideal();
+        let mut coord = Coordinator::new(&cluster, &cfg);
+        assert!(coord
+            .add_workflow(solo(1.0), ExecutionMode::Asynchronous, -1.0)
+            .is_err());
+        let mut wf = solo(1.0);
+        wf.sets[0].req = ResourceRequest::new(0, 3); // no GPUs exist
+        assert!(coord.add_workflow(wf, ExecutionMode::Asynchronous, 0.0).is_err());
+        assert_eq!(coord.driver_count(), 0);
+    }
+}

@@ -1,0 +1,421 @@
+//! Per-workflow execution state machine.
+//!
+//! A [`WorkflowDriver`] owns everything one workflow needs to make
+//! progress — compiled jobsets, dependency countdowns, deferred
+//! activations, task specs and lifecycle records — but owns **no**
+//! resources and **no** clock. It is driven purely by typed
+//! [`EngineEvent`]s fed to [`WorkflowDriver::step`], and answers with
+//! the task [`Submission`]s those events made ready.
+//!
+//! This inversion is what lets the [`Coordinator`](super::Coordinator)
+//! multiplex N drivers — including workflows that *arrive while others
+//! are running* — over one shared pilot [`Agent`](crate::pilot::Agent)
+//! and one executor, the way RADICAL-Pilot serves concurrent workflow
+//! sessions on a single allocation.
+//!
+//! ## Uid spaces
+//!
+//! Drivers speak their own *local* task-uid space (`0..n_tasks`); the
+//! coordinator re-uids submissions into the shared global namespace and
+//! routes completions back through the mapping. A driver never sees
+//! another driver's tasks.
+//!
+//! ## Determinism
+//!
+//! Task execution times are drawn from a per-set stream seeded only by
+//! `(seed, set_stream_offset + set_idx)`, never from a shared mutable
+//! RNG. Activation order therefore cannot perturb TX draws, which is
+//! what makes "N workflows arriving at t=0 over one agent" reproduce a
+//! statically merged-DAG campaign *exactly* (see `tests/coordinator.rs`).
+
+use super::plan::{compile, ExecutionMode, JobSet};
+use super::{EngineConfig, RunReport};
+use crate::entk::Workflow;
+use crate::error::Result;
+use crate::metrics::TaskRecord;
+use crate::resources::ClusterSpec;
+use crate::task::TaskSpec;
+use crate::util::rng::Rng;
+
+/// A typed event consumed by [`WorkflowDriver::step`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EngineEvent {
+    /// The shared engine clock reached `now`; deferred jobset
+    /// activations (stage transitions, the workflow's own arrival) may
+    /// have become due.
+    ClockAdvanced { now: f64 },
+    /// One of this driver's tasks completed (driver-local uid).
+    TaskCompleted { uid: usize, finished_at: f64, failed: bool },
+}
+
+/// A ready task the driver wants submitted to the shared pilot agent.
+#[derive(Debug, Clone)]
+pub struct Submission {
+    /// Task spec in the driver's *local* uid space; the coordinator
+    /// re-uids it into the global namespace before submission.
+    pub spec: TaskSpec,
+    /// Scheduling priority, already globally namespaced (the driver's
+    /// pipeline offset + the jobset's pipeline index).
+    pub priority: u64,
+}
+
+/// One workflow's complete execution state, progressed via [`step`].
+///
+/// [`step`]: WorkflowDriver::step
+#[derive(Debug)]
+pub struct WorkflowDriver {
+    wf: Workflow,
+    mode: ExecutionMode,
+    jobsets: Vec<JobSet>,
+    branch_of: Vec<usize>,
+    n_branches: usize,
+    /// Unmet dependency count per jobset.
+    deps_left: Vec<usize>,
+    /// Uncompleted task count per jobset.
+    tasks_left: Vec<usize>,
+    /// Jobsets unlocked by each jobset's completion.
+    children: Vec<Vec<usize>>,
+    /// Owning jobset per local uid (grows as jobsets activate; specs
+    /// themselves move out in `Submission`s — the coordinator keeps the
+    /// launchable copy).
+    jobset_of: Vec<usize>,
+    records: Vec<TaskRecord>,
+    /// Pending jobset activations: (due time, jobset index).
+    deferred: Vec<(f64, usize)>,
+    seed: u64,
+    stage_overhead: f64,
+    /// Global base for this driver's per-set TX streams (the merged-DAG
+    /// set-index offset when part of a campaign).
+    set_stream_offset: u64,
+    /// Global base for this driver's pipeline priorities.
+    pipeline_offset: u64,
+    /// When the workflow arrives at the shared agent (engine seconds).
+    arrival: f64,
+    tasks_remaining: u64,
+    failed_tasks: usize,
+}
+
+impl WorkflowDriver {
+    /// Compile `wf` under `mode` into a driver whose root jobsets become
+    /// due at `arrival`. `set_stream_offset` / `pipeline_offset`
+    /// namespace this driver's TX streams and priorities among its
+    /// coordinator siblings.
+    pub fn new(
+        wf: Workflow,
+        mode: ExecutionMode,
+        cfg: &EngineConfig,
+        arrival: f64,
+        set_stream_offset: u64,
+        pipeline_offset: u64,
+    ) -> Result<WorkflowDriver> {
+        wf.validate()?;
+        let jobsets = compile(&wf, mode);
+        let analysis = wf.analysis();
+        let branch_of = analysis.branches.branch_of.clone();
+        let n_branches = analysis.branches.count();
+        let n_js = jobsets.len();
+        let deps_left: Vec<usize> = jobsets.iter().map(|j| j.deps.len()).collect();
+        let tasks_left: Vec<usize> =
+            jobsets.iter().map(|j| wf.sets[j.set_idx].tasks as usize).collect();
+        let mut children: Vec<Vec<usize>> = vec![vec![]; n_js];
+        for (i, j) in jobsets.iter().enumerate() {
+            for &d in &j.deps {
+                children[d].push(i);
+            }
+        }
+        // Root jobsets are "deferred to the arrival time": a workflow
+        // arriving mid-campaign is just one whose roots are due later.
+        let deferred: Vec<(f64, usize)> = jobsets
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| j.deps.is_empty())
+            .map(|(i, _)| (arrival, i))
+            .collect();
+        let tasks_remaining = wf.total_tasks();
+        Ok(WorkflowDriver {
+            jobsets,
+            branch_of,
+            n_branches,
+            deps_left,
+            tasks_left,
+            children,
+            jobset_of: Vec::new(),
+            records: Vec::new(),
+            deferred,
+            seed: cfg.seed,
+            stage_overhead: cfg.stage_overhead,
+            set_stream_offset,
+            pipeline_offset,
+            arrival,
+            tasks_remaining,
+            failed_tasks: 0,
+            wf,
+            mode,
+        })
+    }
+
+    /// Consume one event; return the submissions it made ready.
+    pub fn step(&mut self, ev: EngineEvent) -> Vec<Submission> {
+        match ev {
+            EngineEvent::ClockAdvanced { now } => self.release_due(now),
+            EngineEvent::TaskCompleted { uid, finished_at, failed } => {
+                self.records[uid].finished = finished_at;
+                self.records[uid].failed = failed;
+                if failed {
+                    self.failed_tasks += 1;
+                }
+                self.tasks_remaining -= 1;
+                let js = self.jobset_of[uid];
+                self.tasks_left[js] -= 1;
+                if self.tasks_left[js] == 0 {
+                    // Jobset fully complete -> count down its children;
+                    // those reaching zero become due after the stage
+                    // transition overhead.
+                    for ci in 0..self.children[js].len() {
+                        let child = self.children[js][ci];
+                        self.deps_left[child] -= 1;
+                        if self.deps_left[child] == 0 {
+                            self.deferred.push((finished_at + self.stage_overhead, child));
+                        }
+                    }
+                }
+                Vec::new()
+            }
+        }
+    }
+
+    /// Release every deferred activation due at `now`, in deterministic
+    /// (time, jobset index) order, expanding each into task submissions.
+    fn release_due(&mut self, now: f64) -> Vec<Submission> {
+        // Fast path: the coordinator clocks every driver on every loop
+        // iteration; skip the sort when nothing is due.
+        if self.deferred.iter().all(|d| d.0 > now + 1e-12) {
+            return Vec::new();
+        }
+        self.deferred
+            .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut k = 0;
+        while k < self.deferred.len() && self.deferred[k].0 <= now + 1e-12 {
+            k += 1;
+        }
+        let due: Vec<(f64, usize)> = self.deferred.drain(..k).collect();
+        let mut out = Vec::new();
+        for (_, js) in due {
+            self.activate(js, now, &mut out);
+        }
+        out
+    }
+
+    /// Expand one jobset into its task specs/records/submissions.
+    fn activate(&mut self, js: usize, now: f64, out: &mut Vec<Submission>) {
+        let j = &self.jobsets[js];
+        let set = &self.wf.sets[j.set_idx];
+        // Per-set TX stream keyed by (seed, global set index) only:
+        // order-independent, so concurrent and late-arriving siblings
+        // draw exactly what a merged-DAG run would.
+        let mut set_rng =
+            Rng::new(self.seed).fork(self.set_stream_offset + j.set_idx as u64);
+        for ordinal in 0..set.tasks {
+            let uid = self.records.len();
+            let tx = set.sample_tx(&mut set_rng);
+            let spec = TaskSpec {
+                uid,
+                set_idx: j.set_idx,
+                ordinal,
+                tx,
+                req: set.req,
+                kind: set.kind.clone(),
+            };
+            self.records.push(TaskRecord {
+                uid,
+                set_idx: j.set_idx,
+                set_name: set.name.clone(),
+                pipeline: j.pipeline,
+                branch: self.branch_of[j.set_idx],
+                submitted: now,
+                started: f64::NAN,
+                finished: f64::NAN,
+                cores: set.req.cpu_cores as u64,
+                gpus: set.req.gpus as u64,
+                failed: false,
+            });
+            self.jobset_of.push(js);
+            out.push(Submission {
+                spec,
+                priority: self.pipeline_offset + j.pipeline as u64,
+            });
+        }
+    }
+
+    /// Record that a (local-uid) task was placed and started at `now`.
+    pub fn on_started(&mut self, uid: usize, now: f64) {
+        self.records[uid].started = now;
+    }
+
+    /// Earliest pending deferred activation, if any.
+    pub fn next_activation(&self) -> Option<f64> {
+        self.deferred.iter().map(|d| d.0).reduce(f64::min)
+    }
+
+    /// Lifecycle record of an activated task (local uid).
+    pub fn record(&self, uid: usize) -> &TaskRecord {
+        &self.records[uid]
+    }
+
+    /// True once every task of the workflow has completed.
+    pub fn is_done(&self) -> bool {
+        self.tasks_remaining == 0
+    }
+
+    pub fn workflow_name(&self) -> &str {
+        &self.wf.name
+    }
+
+    pub fn mode(&self) -> ExecutionMode {
+        self.mode
+    }
+
+    pub fn arrival(&self) -> f64 {
+        self.arrival
+    }
+
+    /// Number of independent DAG branches (for campaign-level branch
+    /// namespacing).
+    pub fn branch_count(&self) -> usize {
+        self.n_branches
+    }
+
+    /// Number of pipelines in the compiled realization (for priority
+    /// namespacing; matches merged-DAG pipeline numbering).
+    pub fn pipeline_count(&self) -> usize {
+        match self.mode {
+            ExecutionMode::Sequential => self.wf.sequential.len(),
+            ExecutionMode::Asynchronous => self.wf.asynchronous.len(),
+            ExecutionMode::Adaptive => self.n_branches,
+        }
+    }
+
+    /// Finalize into a per-workflow [`RunReport`]. Scheduler accounting
+    /// is coordinator-global and filled in by the caller.
+    pub fn into_report(self, cluster: &ClusterSpec) -> RunReport {
+        RunReport::from_records(
+            self.wf.name.clone(),
+            self.mode,
+            self.records,
+            cluster,
+            self.failed_tasks,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::Dag;
+    use crate::entk::{Pipeline, Workflow};
+    use crate::resources::ResourceRequest;
+    use crate::task::TaskSetSpec;
+
+    fn chain_wf() -> Workflow {
+        let mut dag = Dag::new();
+        let a = dag.add_node("A");
+        let b = dag.add_node("B");
+        dag.add_edge(a, b).unwrap();
+        Workflow {
+            name: "chain".into(),
+            sets: vec![
+                TaskSetSpec::new("A", 2, ResourceRequest::new(1, 0), 10.0).with_sigma(0.0),
+                TaskSetSpec::new("B", 1, ResourceRequest::new(1, 0), 5.0).with_sigma(0.0),
+            ],
+            dag,
+            sequential: vec![Pipeline::new("s").stage(&[0]).stage(&[1])],
+            asynchronous: vec![Pipeline::new("p").stage(&[0]).stage(&[1])],
+        }
+    }
+
+    fn driver_at(arrival: f64) -> WorkflowDriver {
+        WorkflowDriver::new(
+            chain_wf(),
+            ExecutionMode::Sequential,
+            &EngineConfig::ideal(),
+            arrival,
+            0,
+            0,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roots_release_at_arrival_not_before() {
+        let mut d = driver_at(50.0);
+        assert_eq!(d.next_activation(), Some(50.0));
+        assert!(d.step(EngineEvent::ClockAdvanced { now: 10.0 }).is_empty());
+        let subs = d.step(EngineEvent::ClockAdvanced { now: 50.0 });
+        assert_eq!(subs.len(), 2, "set A has two tasks");
+        assert_eq!(subs[0].spec.uid, 0);
+        assert_eq!(subs[1].spec.uid, 1);
+        assert_eq!(d.next_activation(), None);
+    }
+
+    #[test]
+    fn completion_unlocks_children_after_all_set_tasks() {
+        let mut d = driver_at(0.0);
+        let subs = d.step(EngineEvent::ClockAdvanced { now: 0.0 });
+        assert_eq!(subs.len(), 2);
+        d.on_started(0, 0.0);
+        d.on_started(1, 0.0);
+        // First A task completing does not unlock B.
+        d.step(EngineEvent::TaskCompleted { uid: 0, finished_at: 10.0, failed: false });
+        assert_eq!(d.next_activation(), None);
+        // Second one does.
+        d.step(EngineEvent::TaskCompleted { uid: 1, finished_at: 10.0, failed: false });
+        assert_eq!(d.next_activation(), Some(10.0));
+        let subs = d.step(EngineEvent::ClockAdvanced { now: 10.0 });
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0].spec.set_idx, 1);
+        assert!(!d.is_done());
+        d.on_started(2, 10.0);
+        d.step(EngineEvent::TaskCompleted { uid: 2, finished_at: 15.0, failed: false });
+        assert!(d.is_done());
+    }
+
+    #[test]
+    fn tx_streams_are_activation_order_independent() {
+        // Same seed, different arrival offsets: identical TX draws.
+        let mut sigma_wf = chain_wf();
+        sigma_wf.sets[0].tx_sigma_frac = 0.2;
+        let cfg = EngineConfig { seed: 9, ..EngineConfig::ideal() };
+        let draws = |arrival: f64| {
+            let mut d = WorkflowDriver::new(
+                sigma_wf.clone(),
+                ExecutionMode::Sequential,
+                &cfg,
+                arrival,
+                0,
+                0,
+            )
+            .unwrap();
+            d.step(EngineEvent::ClockAdvanced { now: arrival })
+                .iter()
+                .map(|s| s.spec.tx)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(draws(0.0), draws(123.0));
+    }
+
+    #[test]
+    fn priorities_carry_pipeline_offset() {
+        let d = WorkflowDriver::new(
+            chain_wf(),
+            ExecutionMode::Asynchronous,
+            &EngineConfig::ideal(),
+            0.0,
+            0,
+            7,
+        );
+        let mut d = d.unwrap();
+        let subs = d.step(EngineEvent::ClockAdvanced { now: 0.0 });
+        assert!(subs.iter().all(|s| s.priority == 7));
+        assert_eq!(d.pipeline_count(), 1);
+    }
+}

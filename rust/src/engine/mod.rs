@@ -13,22 +13,30 @@
 //!
 //! and two time domains: virtual (discrete-event, paper scale) and real
 //! (threads + wall clock, scaled).
+//!
+//! The engine core is event-driven and composable: a [`WorkflowDriver`]
+//! is one workflow's state machine, and a [`Coordinator`] multiplexes
+//! any number of drivers — including workflows arriving mid-run — over
+//! one shared pilot agent. [`run`] is the single-workflow convenience
+//! wrapper (one coordinator, one driver).
 
+mod coordinator;
+mod driver;
 mod plan;
 
+pub use coordinator::Coordinator;
+pub use driver::{EngineEvent, Submission, WorkflowDriver};
 pub use plan::{compile, ExecutionMode, JobSet};
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::entk::Workflow;
-use crate::error::{Error, Result};
-use crate::exec::{Executor, RunningTask};
+use crate::error::Result;
+use crate::exec::Executor;
 use crate::metrics::{measured_doa_res, throughput, TaskRecord, UtilizationTrace};
-use crate::pilot::{Agent, Policy};
+use crate::pilot::Policy;
 use crate::resources::ClusterSpec;
 use crate::sim::VirtualExecutor;
-use crate::task::TaskSpec;
-use crate::util::rng::Rng;
 
 /// Engine tunables.
 #[derive(Debug, Clone)]
@@ -96,6 +104,37 @@ impl RunReport {
     pub fn improvement_over(&self, seq: &RunReport) -> f64 {
         1.0 - self.makespan / seq.makespan
     }
+
+    /// Derive a report from finished task records: makespan,
+    /// utilization trace, throughput and measured DOA_res. Scheduler
+    /// accounting starts zeroed (it is coordinator-global). Single
+    /// source of the metric derivations for per-workflow and merged
+    /// campaign reports alike.
+    pub fn from_records(
+        workflow: impl Into<String>,
+        mode: ExecutionMode,
+        records: Vec<TaskRecord>,
+        cluster: &ClusterSpec,
+        failed_tasks: usize,
+    ) -> RunReport {
+        let makespan = records.iter().map(|r| r.finished).fold(0.0, f64::max);
+        let trace = UtilizationTrace::from_records(&records, cluster);
+        let (cpu_u, gpu_u) = trace.mean_utilization();
+        RunReport {
+            workflow: workflow.into(),
+            mode,
+            makespan,
+            throughput: throughput(&records),
+            doa_res: measured_doa_res(&records),
+            cpu_utilization: cpu_u,
+            gpu_utilization: gpu_u,
+            failed_tasks,
+            sched_rounds: 0,
+            sched_wall: Duration::ZERO,
+            records,
+            trace,
+        }
+    }
 }
 
 /// Simulate a workflow on a virtual cluster (discrete-event, exact).
@@ -114,6 +153,11 @@ pub fn simulate_cfg(
 }
 
 /// Drive a workflow to completion over an arbitrary executor.
+///
+/// Thin wrapper: one [`Coordinator`] multiplexing a single
+/// [`WorkflowDriver`] arriving at t = 0. Concurrent / late-arriving
+/// workflows use the coordinator directly (or
+/// [`Campaign::simulate_online`](crate::campaign::Campaign::simulate_online)).
 pub fn run(
     wf: &Workflow,
     cluster: &ClusterSpec,
@@ -121,218 +165,10 @@ pub fn run(
     cfg: &EngineConfig,
     executor: &mut dyn Executor,
 ) -> Result<RunReport> {
-    wf.validate()?;
-    for s in &wf.sets {
-        cluster.check(&s.req)?;
-    }
-    let jobsets = compile(wf, mode);
-    let analysis = wf.analysis();
-    let branch_of = &analysis.branches.branch_of;
-
-    let mut rng = Rng::new(cfg.seed);
-    let mut agent = Agent::new(cluster, cfg.policy);
-
-    // Per-jobset countdowns.
-    let n_js = jobsets.len();
-    let mut deps_left: Vec<usize> = jobsets.iter().map(|j| j.deps.len()).collect();
-    let mut tasks_left: Vec<usize> = jobsets.iter().map(|j| wf.sets[j.set_idx].tasks as usize).collect();
-    let mut children: Vec<Vec<usize>> = vec![vec![]; n_js];
-    for (i, j) in jobsets.iter().enumerate() {
-        for &d in &j.deps {
-            children[d].push(i);
-        }
-    }
-
-    // Task bookkeeping (uid-indexed).
-    let mut specs: Vec<TaskSpec> = Vec::new();
-    let mut jobset_of: Vec<usize> = Vec::new();
-    let mut records: Vec<TaskRecord> = Vec::new();
-
-    // Deferred jobset activations: (ready_at, jobset).
-    let mut deferred: Vec<(f64, usize)> = Vec::new();
-    let mut in_flight = 0usize;
-    let mut failed_tasks = 0usize;
-    let mut sched_rounds = 0usize;
-    let mut sched_wall = Duration::ZERO;
-
-    // Activate roots at t=0 (no stage_overhead on initial submission).
-    for (i, j) in jobsets.iter().enumerate() {
-        if j.deps.is_empty() {
-            deferred.push((0.0, i));
-        }
-        let _ = j;
-    }
-
-    let activate =
-        |js: usize,
-         now: f64,
-         rng: &mut Rng,
-         specs: &mut Vec<TaskSpec>,
-         jobset_of: &mut Vec<usize>,
-         records: &mut Vec<TaskRecord>,
-         agent: &mut Agent| {
-            let j = &jobsets[js];
-            let set = &wf.sets[j.set_idx];
-            let mut set_rng = rng.fork(j.set_idx as u64);
-            for ordinal in 0..set.tasks {
-                let uid = specs.len();
-                let tx = set.sample_tx(&mut set_rng);
-                let spec = TaskSpec {
-                    uid,
-                    set_idx: j.set_idx,
-                    ordinal,
-                    tx,
-                    req: set.req,
-                    kind: set.kind.clone(),
-                };
-                agent.submit(&spec, j.pipeline as u64, now);
-                records.push(TaskRecord {
-                    uid,
-                    set_idx: j.set_idx,
-                    set_name: set.name.clone(),
-                    pipeline: j.pipeline,
-                    branch: branch_of[j.set_idx],
-                    submitted: now,
-                    started: f64::NAN,
-                    finished: f64::NAN,
-                    cores: set.req.cpu_cores as u64,
-                    gpus: set.req.gpus as u64,
-                    failed: false,
-                });
-                specs.push(spec);
-                jobset_of.push(js);
-            }
-        };
-
-    // Only invoke the scheduler when the system state changed (new
-    // submissions or freed resources) — avoids O(queue) rescans on
-    // clock-advance iterations.
-    let mut sched_dirty = true;
-    loop {
-        let now = executor.now();
-
-        // 1. Release deferred activations that are due.
-        let mut i = 0;
-        while i < deferred.len() {
-            if deferred[i].0 <= now + 1e-12 {
-                let (_, js) = deferred.swap_remove(i);
-                activate(js, now, &mut rng, &mut specs, &mut jobset_of, &mut records, &mut agent);
-                sched_dirty = true;
-            } else {
-                i += 1;
-            }
-        }
-
-        // 2. Schedule everything that fits.
-        let placed = if sched_dirty {
-            let t0 = Instant::now();
-            let placed = agent.schedule();
-            sched_wall += t0.elapsed();
-            sched_rounds += 1;
-            sched_dirty = false;
-            placed
-        } else {
-            Vec::new()
-        };
-        for s in &placed {
-            let spec = &specs[s.uid];
-            records[s.uid].started = now;
-            executor.launch(&RunningTask {
-                uid: s.uid,
-                tx: spec.tx + cfg.task_overhead,
-                started_at: now,
-                kind: Some(spec.kind.clone()),
-            });
-            in_flight += 1;
-        }
-
-        // 3. Wait for progress.
-        if in_flight > 0 {
-            // If a deferred activation is due before the next completion,
-            // fast-forward to it instead (virtual time only).
-            let next_deferred = deferred
-                .iter()
-                .map(|d| d.0)
-                .fold(f64::INFINITY, f64::min);
-            if let Some(peek) = executor_peek(executor) {
-                if next_deferred < peek {
-                    executor_advance(executor, next_deferred);
-                    continue;
-                }
-            }
-            let c = executor
-                .wait_next()
-                .ok_or_else(|| Error::Engine("executor lost in-flight tasks".into()))?;
-            in_flight -= 1;
-            agent.complete(c.uid);
-            sched_dirty = true; // resources were freed
-            records[c.uid].finished = c.finished_at;
-            records[c.uid].failed = c.failed;
-            if c.failed {
-                failed_tasks += 1;
-                if cfg.abort_on_failure {
-                    return Err(Error::Engine(format!(
-                        "task {} ({}) failed",
-                        c.uid, records[c.uid].set_name
-                    )));
-                }
-            }
-            // Jobset completion -> unlock children.
-            let js = jobset_of[c.uid];
-            tasks_left[js] -= 1;
-            if tasks_left[js] == 0 {
-                for &child in &children[js] {
-                    deps_left[child] -= 1;
-                    if deps_left[child] == 0 {
-                        deferred.push((c.finished_at + cfg.stage_overhead, child));
-                    }
-                }
-            }
-        } else if !deferred.is_empty() {
-            let t = deferred.iter().map(|d| d.0).fold(f64::INFINITY, f64::min);
-            executor_advance(executor, t);
-            if executor_peek(executor).is_none() && executor.now() < t {
-                // Real executor cannot time-travel; busy-wait briefly.
-                std::thread::sleep(Duration::from_millis(1));
-            }
-        } else if agent.queue_len() > 0 {
-            return Err(Error::Engine(
-                "deadlock: tasks queued but nothing running (unsatisfiable request?)".into(),
-            ));
-        } else {
-            break; // all done
-        }
-    }
-
-    let makespan = records.iter().map(|r| r.finished).fold(0.0, f64::max);
-    let trace = UtilizationTrace::from_records(&records, cluster);
-    let (cpu_u, gpu_u) = trace.mean_utilization();
-    Ok(RunReport {
-        workflow: wf.name.clone(),
-        mode,
-        makespan,
-        throughput: throughput(&records),
-        doa_res: measured_doa_res(&records),
-        cpu_utilization: cpu_u,
-        gpu_utilization: gpu_u,
-        failed_tasks,
-        sched_rounds,
-        sched_wall,
-        records,
-        trace,
-    })
-}
-
-// --- virtual-time helpers (dynamic dispatch workaround) ---------------
-// The Executor trait keeps a minimal object-safe surface; virtual-time
-// peeking/advancing is engine-internal and implemented via downcasting.
-
-fn executor_peek(ex: &dyn Executor) -> Option<f64> {
-    ex.peek_next_completion()
-}
-
-fn executor_advance(ex: &mut dyn Executor, t: f64) {
-    ex.advance_to(t);
+    let mut coord = Coordinator::new(cluster, cfg);
+    coord.add_workflow(wf.clone(), mode, 0.0)?;
+    let mut reports = coord.run(executor)?;
+    Ok(reports.pop().expect("one driver yields one report"))
 }
 
 #[cfg(test)]

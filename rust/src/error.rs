@@ -1,46 +1,72 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — no
+//! `thiserror` dependency; the crate builds with zero external deps).
 
-use thiserror::Error;
+use std::fmt;
 
 /// All failure modes surfaced by asyncflow's public API.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Dependency graph is malformed (cycle, dangling edge, ...).
-    #[error("invalid DAG: {0}")]
     InvalidDag(String),
 
     /// A task requests more resources than the whole allocation owns.
-    #[error("unsatisfiable resource request: {0}")]
     Unsatisfiable(String),
 
     /// Workflow construction / configuration problem.
-    #[error("invalid workflow: {0}")]
     InvalidWorkflow(String),
 
     /// Configuration file / JSON problem.
-    #[error("config error: {0}")]
     Config(String),
 
     /// JSON parse error with byte offset context.
-    #[error("json parse error at byte {offset}: {message}")]
     Json { offset: usize, message: String },
 
     /// Artifact (AOT HLO) loading / execution problem.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Engine / executor invariant violation.
-    #[error("engine error: {0}")]
     Engine(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    /// Underlying XLA / PJRT error.
-    #[error("xla error: {0}")]
+    /// Underlying XLA / PJRT error (`pjrt` feature).
     Xla(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidDag(m) => write!(f, "invalid DAG: {m}"),
+            Error::Unsatisfiable(m) => write!(f, "unsatisfiable resource request: {m}"),
+            Error::InvalidWorkflow(m) => write!(f, "invalid workflow: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Json { offset, message } => {
+                write!(f, "json parse error at byte {offset}: {message}")
+            }
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Engine(m) => write!(f, "engine error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -48,3 +74,19 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_keeps_wire_format() {
+        assert_eq!(Error::Engine("boom".into()).to_string(), "engine error: boom");
+        assert_eq!(
+            Error::Json { offset: 7, message: "bad".into() }.to_string(),
+            "json parse error at byte 7: bad"
+        );
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "nope").into();
+        assert!(io.to_string().starts_with("io error: "));
+    }
+}

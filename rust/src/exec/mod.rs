@@ -12,6 +12,8 @@ mod stress;
 
 pub use stress::{StressExecutor, StressMode};
 
+use std::time::Duration;
+
 use crate::task::TaskKind;
 
 /// A task handed to an executor by the engine after scheduling.
@@ -56,4 +58,29 @@ pub trait Executor {
     /// Fast-forward the clock to `t` (virtual time only; no-op for real
     /// executors, which can't time-travel).
     fn advance_to(&mut self, _t: f64) {}
+
+    /// Batched completion draining: block until at least one running
+    /// task completes, then hand back *every* completion sharing that
+    /// instant (virtual time) or already waiting (real executors) in
+    /// one call, instead of one-by-one wakeups. Returns an empty batch
+    /// only when nothing is in flight.
+    fn drain_ready(&mut self) -> Vec<Completion> {
+        self.wait_next().into_iter().collect()
+    }
+
+    /// Block until engine time reaches `t` or a completion becomes
+    /// available, whichever happens first; returns `true` when a
+    /// completion may be ready to drain. Virtual executors fast-forward
+    /// instantly. The default naps briefly (no busy-spin) and then
+    /// reports `true`: a real executor without a timed-wait primitive
+    /// cannot rule out a pending completion, and the caller's blocking
+    /// drain must not be starved until the deadline.
+    fn wait_until(&mut self, t: f64) -> bool {
+        self.advance_to(t);
+        if self.now() + 1e-12 < t {
+            std::thread::sleep(Duration::from_millis(1));
+            return true;
+        }
+        false
+    }
 }

@@ -2,8 +2,9 @@
 //! (or spinning) for TX × scale wall-clock seconds — the moral
 //! equivalent of the paper's `stress` synthetic executable.
 
+use std::collections::{HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::{Completion, Executor, RunningTask};
 
@@ -27,8 +28,11 @@ pub struct StressExecutor {
     tx_chan: Sender<(usize, bool)>,
     rx_chan: Receiver<(usize, bool)>,
     in_flight: usize,
+    /// Completions received while waiting on a deadline, not yet handed
+    /// to the engine.
+    pending: VecDeque<(usize, bool)>,
     /// Injected failures: uids that should report failure (tests).
-    fail_uids: Vec<usize>,
+    fail_uids: HashSet<usize>,
 }
 
 impl StressExecutor {
@@ -41,13 +45,18 @@ impl StressExecutor {
             tx_chan,
             rx_chan,
             in_flight: 0,
-            fail_uids: Vec::new(),
+            pending: VecDeque::new(),
+            fail_uids: HashSet::new(),
         }
     }
 
     /// Mark a uid to complete as failed (failure-injection testing).
     pub fn inject_failure(&mut self, uid: usize) {
-        self.fail_uids.push(uid);
+        self.fail_uids.insert(uid);
+    }
+
+    fn completion(&self, (uid, failed): (usize, bool)) -> Completion {
+        Completion { uid, finished_at: self.now(), failed }
     }
 }
 
@@ -75,16 +84,70 @@ impl Executor for StressExecutor {
     }
 
     fn wait_next(&mut self) -> Option<Completion> {
+        if let Some(msg) = self.pending.pop_front() {
+            self.in_flight -= 1;
+            return Some(self.completion(msg));
+        }
         if self.in_flight == 0 {
             return None;
         }
-        let (uid, failed) = self.rx_chan.recv().ok()?;
+        let msg = self.rx_chan.recv().ok()?;
         self.in_flight -= 1;
-        Some(Completion { uid, finished_at: self.now(), failed })
+        Some(self.completion(msg))
     }
 
     fn now(&self) -> f64 {
         self.epoch.elapsed().as_secs_f64() / self.scale
+    }
+
+    fn drain_ready(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        // Anything buffered by wait_until drains without blocking ...
+        while let Some(msg) = self.pending.pop_front() {
+            self.in_flight -= 1;
+            out.push(self.completion(msg));
+        }
+        // ... otherwise block for the first completion ...
+        if out.is_empty() {
+            match self.wait_next() {
+                Some(c) => out.push(c),
+                None => return out,
+            }
+        }
+        // ... then sweep up everything else that already landed.
+        while self.in_flight > 0 {
+            match self.rx_chan.try_recv() {
+                Ok(msg) => {
+                    self.in_flight -= 1;
+                    out.push(self.completion(msg));
+                }
+                Err(_) => break,
+            }
+        }
+        out
+    }
+
+    fn wait_until(&mut self, t: f64) -> bool {
+        if !self.pending.is_empty() {
+            return true;
+        }
+        // Clamp: non-finite deadlines (infinity = "any completion") and
+        // absurd horizons must not panic Duration::from_secs_f64; cap
+        // each wait at an hour and let the caller loop. f64::min maps
+        // NaN to the cap too.
+        let wall = ((t - self.now()) * self.scale).min(3600.0);
+        if wall <= 0.0 {
+            return false;
+        }
+        // Timed wait (no busy-spinning): wakes early when a completion
+        // lands, which we buffer for the next drain.
+        match self.rx_chan.recv_timeout(Duration::from_secs_f64(wall)) {
+            Ok(msg) => {
+                self.pending.push_back(msg);
+                true
+            }
+            Err(_) => false,
+        }
     }
 }
 
@@ -121,5 +184,38 @@ mod tests {
         let mut ex = StressExecutor::new(0.001, StressMode::Spin);
         ex.launch(&RunningTask { uid: 0, tx: 10.0, started_at: 0.0, kind: None });
         assert_eq!(ex.wait_next().unwrap().uid, 0);
+    }
+
+    #[test]
+    fn drain_ready_collects_landed_batch() {
+        let mut ex = StressExecutor::new(0.001, StressMode::Sleep);
+        for uid in 0..4 {
+            ex.launch(&RunningTask { uid, tx: 5.0, started_at: 0.0, kind: None });
+        }
+        // Let every task land, then drain: one blocking call should
+        // sweep (at least the already-arrived subset of) them all.
+        std::thread::sleep(Duration::from_millis(50));
+        let mut got = 0;
+        while got < 4 {
+            let batch = ex.drain_ready();
+            assert!(!batch.is_empty());
+            got += batch.len();
+        }
+        assert!(ex.drain_ready().is_empty());
+    }
+
+    #[test]
+    fn wait_until_honors_deadline_and_wakes_on_completion() {
+        let mut ex = StressExecutor::new(0.001, StressMode::Sleep);
+        // Nothing in flight: waits out the deadline, reports no work.
+        let t0 = Instant::now();
+        assert!(!ex.wait_until(ex.now() + 20.0)); // 20 paper-ms = 20 wall-ms
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        // A completing task interrupts the wait and is buffered.
+        ex.launch(&RunningTask { uid: 3, tx: 10.0, started_at: 0.0, kind: None });
+        assert!(ex.wait_until(ex.now() + 10_000.0));
+        let batch = ex.drain_ready();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].uid, 3);
     }
 }

@@ -16,8 +16,10 @@
 //! - **Layer 1**: Pallas kernels (blocked matmul, pairwise distances,
 //!   Lennard-Jones forces) called by Layer 2.
 //!
-//! Layer 3 executes the compiled artifacts through [`runtime`] (PJRT CPU
-//! client); Python never runs on the workflow execution path.
+//! Layer 3 executes the compiled artifacts through the `runtime` module
+//! (PJRT CPU client, behind the `pjrt` feature — the default build has
+//! zero external dependencies); Python never runs on the workflow
+//! execution path.
 //!
 //! ## Quick tour
 //!
@@ -51,6 +53,7 @@ pub mod metrics;
 pub mod model;
 pub mod pilot;
 pub mod resources;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod task;

@@ -61,6 +61,9 @@ subcommands:
   predict  --workflow ...                analytical model only (Eqns 1-7)
   masking  --workflow ...                TX-masking report (Sec 5.3)
   campaign --workflows ddmd,cdg1,cdg2    workflow-level asynchronicity
+           [--arrivals 0,300,600]        online mode: members share one
+                                         pilot agent and arrive at the
+                                         given offsets (seconds)
 
 common options:
   --cluster summit_paper|summit_706|summit_8gpu|local_small
@@ -211,6 +214,45 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     }
     let cluster = pick_cluster(args)?;
     let cfg = pick_engine(args)?;
+
+    // Online mode: one shared pilot agent, per-member arrival offsets.
+    if let Some(spec) = args.get("arrivals") {
+        let arrivals: Vec<f64> = spec
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<f64>().map_err(|_| {
+                    Error::Config(format!("--arrivals: expected a number, got '{s}'"))
+                })
+            })
+            .collect::<Result<_>>()?;
+        let rep = camp.simulate_online(&arrivals, &cluster, &cfg)?;
+        println!(
+            "online campaign of {} workflows on {} (shared pilot, asynchronous members)",
+            camp.members.len(),
+            cluster.name
+        );
+        for (i, m) in rep.members.iter().enumerate() {
+            println!(
+                "  {:<16} arrival {:>6.0} s  finish {:>7.0} s  TTX {:>7.0} s  ({} tasks, {} failed)",
+                m.workflow,
+                rep.arrivals[i],
+                m.makespan,
+                rep.member_ttx(i),
+                m.records.len(),
+                m.failed_tasks
+            );
+        }
+        println!(
+            "  campaign TTX = {:.0} s (last finish {:.0} s), cpu {:.1}%, gpu {:.1}%, throughput {:.3} tasks/s",
+            rep.campaign_ttx(),
+            rep.campaign.makespan,
+            rep.campaign.cpu_utilization * 100.0,
+            rep.campaign.gpu_utilization * 100.0,
+            rep.campaign.throughput
+        );
+        return Ok(());
+    }
+
     let (seq, asy) = camp.simulate(&cluster, &cfg)?;
     println!(
         "campaign of {} workflows on {}\n  sequential (workflow-level BSP): TTX = {:.0} s, cpu {:.1}%, gpu {:.1}%\n  asynchronous (workflow-level):   TTX = {:.0} s, cpu {:.1}%, gpu {:.1}%\n  I = {:+.3}",

@@ -33,6 +33,14 @@ pub struct Allocator {
     /// Rotating start index for first-fit, spreading GPU tasks across
     /// nodes instead of hammering node 0.
     cursor: usize,
+    /// Node visit order for spanning allocations, descending by free
+    /// cores — a lazily-repaired index. Mutations outside
+    /// `alloc_spanning` (node-local allocs, releases) only mark it
+    /// stale; `alloc_spanning` repairs its own damage incrementally, so
+    /// a burst of spanning allocations (one scheduler drain round
+    /// placing a whole CPU task set) sorts once instead of per-task.
+    span_order: Vec<usize>,
+    span_order_stale: bool,
 }
 
 impl Allocator {
@@ -43,6 +51,8 @@ impl Allocator {
             total_free_cores: spec.total_cores(),
             total_free_gpus: spec.total_gpus(),
             cursor: 0,
+            span_order: Vec::new(),
+            span_order_stale: true,
             spec: spec.clone(),
         }
     }
@@ -95,6 +105,9 @@ impl Allocator {
                 self.total_free_cores -= req.cpu_cores as u64;
                 self.total_free_gpus -= req.gpus as u64;
                 self.cursor = (i + 1) % n;
+                if req.cpu_cores > 0 {
+                    self.span_order_stale = true;
+                }
                 return Some(Placement { slots: vec![(i, req.cpu_cores, req.gpus)] });
             }
         }
@@ -104,16 +117,22 @@ impl Allocator {
     fn alloc_spanning(&mut self, req: &ResourceRequest) -> Option<Placement> {
         // total_free_cores >= cpu_cores was pre-checked; greedily take
         // cores from the fullest-free nodes to limit fragmentation.
+        if self.span_order_stale {
+            self.span_order = (0..self.free_cores.len()).collect();
+            self.span_order
+                .sort_by_key(|&i| std::cmp::Reverse(self.free_cores[i]));
+            self.span_order_stale = false;
+        }
         let mut remaining = req.cpu_cores;
         let mut slots = Vec::new();
-        // Visit nodes in order of descending free cores.
-        let mut order: Vec<usize> = (0..self.free_cores.len()).collect();
-        order.sort_by_key(|&i| std::cmp::Reverse(self.free_cores[i]));
-        for i in order {
+        // Visit nodes in cached descending-free-cores order.
+        let mut consumed = 0usize;
+        for &i in &self.span_order {
             if remaining == 0 {
                 break;
             }
             let take = self.free_cores[i].min(remaining);
+            consumed += 1;
             if take > 0 {
                 slots.push((i, take, 0));
                 remaining -= take;
@@ -124,11 +143,35 @@ impl Allocator {
             self.free_cores[i] -= c;
         }
         self.total_free_cores -= req.cpu_cores as u64;
+        self.repair_span_order(consumed);
         Some(Placement { slots })
+    }
+
+    /// Restore `span_order`'s descending-free-cores invariant after a
+    /// spanning allocation that consumed its first `consumed` entries:
+    /// all but the last are drained to zero free cores and belong at
+    /// the back; the last — possibly only partially drained — is
+    /// re-positioned by binary search. In place, via rotates: no
+    /// comparison sort, no allocations.
+    fn repair_span_order(&mut self, consumed: usize) {
+        if consumed == 0 {
+            return;
+        }
+        let n = self.span_order.len();
+        // [drained.., partial, rest..] -> [partial, rest.., drained..].
+        self.span_order.rotate_left(consumed - 1);
+        // Slot the partial node (now at index 0) into the still-sorted
+        // rest.
+        let rest_len = n - consumed;
+        let free = self.free_cores[self.span_order[0]];
+        let pos = self.span_order[1..1 + rest_len]
+            .partition_point(|&i| self.free_cores[i] >= free);
+        self.span_order[..=pos].rotate_left(1);
     }
 
     /// Return a placement's resources to the pool.
     pub fn release(&mut self, p: &Placement) {
+        self.span_order_stale = true;
         for &(i, cores, gpus) in &p.slots {
             self.free_cores[i] += cores;
             self.free_gpus[i] += gpus;
@@ -140,11 +183,24 @@ impl Allocator {
     }
 
     /// Invariant check used by tests: per-node free counts within bounds
-    /// and totals consistent.
+    /// and totals consistent; a non-stale span index must be a
+    /// permutation in descending free-cores order.
     pub fn check_invariants(&self) -> bool {
         let sum_c: u64 = self.free_cores.iter().map(|&c| c as u64).sum();
         let sum_g: u64 = self.free_gpus.iter().map(|&g| g as u64).sum();
-        sum_c == self.total_free_cores
+        let span_ok = self.span_order_stale || {
+            let mut seen = vec![false; self.free_cores.len()];
+            self.span_order.len() == self.free_cores.len()
+                && self.span_order.iter().all(|&i| {
+                    i < seen.len() && !std::mem::replace(&mut seen[i], true)
+                })
+                && self
+                    .span_order
+                    .windows(2)
+                    .all(|w| self.free_cores[w[0]] >= self.free_cores[w[1]])
+        };
+        span_ok
+            && sum_c == self.total_free_cores
             && sum_g == self.total_free_gpus
             && self
                 .free_cores
@@ -223,6 +279,31 @@ mod tests {
         assert!(a.try_alloc(&ResourceRequest::new(8, 1)).is_none());
         // ... but a CPU-only 8-core task still fits by spanning.
         assert!(a.try_alloc(&ResourceRequest::new(8, 0)).is_some());
+    }
+
+    #[test]
+    fn span_order_stays_sorted_across_alloc_bursts() {
+        // Bursts of spanning allocations repair the index in place; the
+        // invariant checker verifies descending order + permutation.
+        let mut a = Allocator::new(&ClusterSpec::uniform("t", 6, 10, 1));
+        let mut live = vec![];
+        for cores in [7, 7, 9, 4, 12, 3, 11] {
+            live.push(a.try_alloc(&ResourceRequest::new(cores, 0)).unwrap());
+            assert!(a.check_invariants(), "after spanning alloc of {cores}");
+        }
+        // Interleave node-local + release (stale paths) with more bursts.
+        let g = a.try_alloc(&ResourceRequest::new(1, 1)).unwrap();
+        a.release(&live.pop().unwrap());
+        for cores in [5, 5] {
+            live.push(a.try_alloc(&ResourceRequest::new(cores, 0)).unwrap());
+            assert!(a.check_invariants(), "after re-sort + alloc of {cores}");
+        }
+        a.release(&g);
+        for p in &live {
+            a.release(p);
+        }
+        assert!(a.check_invariants());
+        assert_eq!(a.used_cores(), 0);
     }
 
     #[test]

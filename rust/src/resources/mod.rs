@@ -14,7 +14,7 @@ use crate::error::{Error, Result};
 
 /// Per-task resource requirement (Tables 1–2: "CPU cores/Task",
 /// "GPUs/Task").
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ResourceRequest {
     pub cpu_cores: u32,
     pub gpus: u32,

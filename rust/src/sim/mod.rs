@@ -127,6 +127,27 @@ impl Executor for VirtualExecutor {
     fn advance_to(&mut self, t: f64) {
         self.queue.advance_to(t);
     }
+
+    fn drain_ready(&mut self) -> Vec<Completion> {
+        // Pop the earliest event plus every event at exactly the same
+        // virtual instant: one engine wakeup per time point, not per
+        // task (the paper-scale workloads complete 96-task sets
+        // simultaneously when sigma = 0).
+        let mut out = Vec::new();
+        if let Some((t, uid)) = self.queue.pop() {
+            out.push(Completion { uid, finished_at: t, failed: false });
+            while self.queue.peek_time() == Some(t) {
+                let (t2, uid2) = self.queue.pop().expect("peeked event exists");
+                out.push(Completion { uid: uid2, finished_at: t2, failed: false });
+            }
+        }
+        out
+    }
+
+    fn wait_until(&mut self, t: f64) -> bool {
+        self.queue.advance_to(t);
+        false
+    }
 }
 
 #[cfg(test)]
@@ -167,6 +188,23 @@ mod tests {
         q.push(q.now() + 1.0, 2);
         assert_eq!(q.pop(), Some((6.0, 2)));
         assert_eq!(q.pop(), Some((7.0, 1)));
+    }
+
+    #[test]
+    fn drain_ready_batches_simultaneous_completions() {
+        let mut ex = VirtualExecutor::new();
+        ex.launch(&RunningTask { uid: 0, tx: 5.0, started_at: 0.0, kind: None });
+        ex.launch(&RunningTask { uid: 1, tx: 5.0, started_at: 0.0, kind: None });
+        ex.launch(&RunningTask { uid: 2, tx: 9.0, started_at: 0.0, kind: None });
+        let batch = ex.drain_ready();
+        assert_eq!(batch.len(), 2, "both t=5 completions in one call");
+        assert_eq!(batch[0].uid, 0);
+        assert_eq!(batch[1].uid, 1);
+        assert_eq!(ex.now(), 5.0);
+        let batch = ex.drain_ready();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].uid, 2);
+        assert!(ex.drain_ready().is_empty());
     }
 
     #[test]
