@@ -1,0 +1,64 @@
+//! Streaming-traffic throughput: how fast the coordinator chews
+//! through 1k streamed workflows (arrival sampling + lazy driver
+//! materialization + uid recycling + queueing-metric reduction).
+//! `cargo bench --bench bench_traffic`
+
+use asyncflow::dag::Dag;
+use asyncflow::engine::EngineConfig;
+use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::resources::{ClusterSpec, ResourceRequest};
+use asyncflow::task::TaskSetSpec;
+use asyncflow::traffic::{run_traffic, ArrivalProcess, Catalog, TrafficSpec, WorkloadMix};
+use asyncflow::util::bench::{bench, report, report_header};
+
+/// Small two-stage chain (4 + 1 tasks) — enough structure to exercise
+/// dependencies without dominating the run with task-event volume.
+fn chain() -> Workflow {
+    let mut dag = Dag::new();
+    let a = dag.add_node("A");
+    let b = dag.add_node("B");
+    dag.add_edge(a, b).unwrap();
+    Workflow {
+        name: "chain".into(),
+        sets: vec![
+            TaskSetSpec::new("A", 4, ResourceRequest::new(2, 0), 20.0).with_sigma(0.05),
+            TaskSetSpec::new("B", 1, ResourceRequest::new(4, 0), 10.0).with_sigma(0.05),
+        ],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0]).stage(&[1])],
+        asynchronous: vec![Pipeline::new("p").stage(&[0]).stage(&[1])],
+    }
+}
+
+fn main() {
+    report_header();
+    let catalog = Catalog::new().insert("chain", chain());
+    let cluster = ClusterSpec::uniform("bench", 4, 16, 2);
+    let cfg = EngineConfig::ideal();
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Poisson { rate: 0.5 },
+        mix: WorkloadMix::parse("chain").unwrap(),
+        duration: 1e9, // the cap, not the window, bounds this run
+        max_workflows: 1000,
+        seed: 1,
+    };
+    let probe = run_traffic(&spec, &catalog, &cluster, &cfg).unwrap();
+    let n_wf = probe.workflows.len();
+    let n_tasks = probe.total_tasks;
+    println!(
+        "workload: {n_wf} workflows / {n_tasks} tasks, peak live {} tasks, peak backlog {} tasks\n",
+        probe.peak_live_tasks,
+        probe.peak_backlog.0
+    );
+
+    let r = bench("traffic: 1k streamed workflows (shared pilot)", 1, 10, || {
+        let rep = run_traffic(&spec, &catalog, &cluster, &cfg).unwrap();
+        std::hint::black_box(rep.makespan);
+    });
+    report(&r);
+    println!(
+        "    -> {:.0} workflows/s, {:.0} task events/s simulated",
+        n_wf as f64 / r.secs.mean,
+        n_tasks as f64 / r.secs.mean
+    );
+}

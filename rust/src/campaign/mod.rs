@@ -198,7 +198,9 @@ impl CampaignReport {
 
 /// Fuse per-member reports into one campaign-level [`RunReport`]
 /// (global task uids, per-member branch/pipeline offsets, shared trace).
-fn merge_member_reports(
+/// Shared with the [`traffic`](crate::traffic) load generator, which
+/// merges hundreds of streamed members the same way.
+pub(crate) fn merge_member_reports(
     name: &str,
     members: &[RunReport],
     cluster: &ClusterSpec,
@@ -228,6 +230,7 @@ fn merge_member_reports(
         RunReport::from_records(name, ExecutionMode::Asynchronous, records, cluster, failed);
     campaign.sched_rounds = members.first().map_or(0, |m| m.sched_rounds);
     campaign.sched_wall = members.first().map_or(Duration::ZERO, |m| m.sched_wall);
+    campaign.peak_live_tasks = members.first().map_or(0, |m| m.peak_live_tasks);
     campaign
 }
 

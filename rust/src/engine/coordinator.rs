@@ -5,13 +5,28 @@
 //! share — the allocation (via the agent), the clock (via the
 //! executor), and the task-uid namespace — and runs the event loop:
 //!
-//! 1. feed `ClockAdvanced` to every driver and submit whatever became
-//!    ready (a late-arriving workflow's roots are just deferred
-//!    activations that come due);
-//! 2. invoke the continuous scheduler once per state change;
-//! 3. launch placements, then drain the executor's next completion
+//! 1. materialize the driver of every registered workflow whose arrival
+//!    time has been reached (workflows are *streamed*: a member that
+//!    arrives at t = 10⁴ costs one pending spec until then, not live
+//!    driver state);
+//! 2. feed `ClockAdvanced` to every live driver and submit whatever
+//!    became ready;
+//! 3. invoke the continuous scheduler once per state change;
+//! 4. launch placements, then drain the executor's next completion
 //!    batch (all completions sharing one instant are handed back in a
-//!    single call) and route each back to its owning driver.
+//!    single call) and route each back to its owning driver; drivers
+//!    that finish are folded into their [`RunReport`] immediately and
+//!    dropped.
+//!
+//! ## Bounded live state
+//!
+//! Global task uids are recycled through a free list the moment their
+//! completion is processed, so the `specs` / `route` slabs (and the
+//! agent's placement table) are bounded by **in-flight + queued** tasks
+//! — not by the total number of tasks ever streamed. A traffic run of
+//! thousands of workflows holds per-task engine state only for the work
+//! that is actually outstanding; the high-water mark is reported as
+//! [`RunReport::peak_live_tasks`].
 //!
 //! `engine::run` is a coordinator with exactly one driver, so the
 //! single-workflow path and the concurrent-campaign path are the same
@@ -19,7 +34,7 @@
 
 use std::time::{Duration, Instant};
 
-use super::driver::{EngineEvent, Submission, WorkflowDriver};
+use super::driver::{EngineEvent, WorkflowDriver};
 use super::{EngineConfig, ExecutionMode, RunReport};
 use crate::entk::Workflow;
 use crate::error::{Error, Result};
@@ -28,15 +43,31 @@ use crate::pilot::Agent;
 use crate::resources::ClusterSpec;
 use crate::task::TaskSpec;
 
+/// A registered workflow whose driver has not been materialized yet:
+/// until the engine clock reaches `arrival` it costs one workflow spec,
+/// no per-task state.
+#[derive(Debug)]
+struct PendingArrival {
+    wf: Workflow,
+    mode: ExecutionMode,
+    arrival: f64,
+    /// Member slot (index of its report in [`Coordinator::run`]'s
+    /// result, i.e. registration order).
+    slot: usize,
+    /// TX-stream base (cumulative set count — the merged-DAG node
+    /// offset).
+    set_stream: u64,
+    /// Priority base (cumulative pipeline count).
+    pipeline_base: u64,
+}
+
 /// Shared-pilot multiplexer over any number of workflow drivers.
 pub struct Coordinator {
     cluster: ClusterSpec,
     cfg: EngineConfig,
-    drivers: Vec<WorkflowDriver>,
-    /// Next driver's TX-stream base (cumulative set count, i.e. the
-    /// merged-DAG node offset).
+    /// Registered workflows, materialized lazily during [`run`](Self::run).
+    pending: Vec<PendingArrival>,
     next_set_stream: u64,
-    /// Next driver's priority base (cumulative pipeline count).
     next_pipeline: u64,
 }
 
@@ -45,7 +76,7 @@ impl Coordinator {
         Coordinator {
             cluster: cluster.clone(),
             cfg: cfg.clone(),
-            drivers: Vec::new(),
+            pending: Vec::new(),
             next_set_stream: 0,
             next_pipeline: 0,
         }
@@ -53,7 +84,8 @@ impl Coordinator {
 
     /// Register a workflow whose roots become schedulable at `arrival`
     /// (engine seconds). Returns the index of its report in
-    /// [`Coordinator::run`]'s result.
+    /// [`Coordinator::run`]'s result. The driver itself is only built
+    /// when the clock reaches `arrival` (streamed registration).
     pub fn add_workflow(
         &mut self,
         wf: Workflow,
@@ -69,35 +101,62 @@ impl Coordinator {
         for s in &wf.sets {
             self.cluster.check(&s.req)?;
         }
+        // Validate now so registration errors surface at add time, not
+        // mid-run when the driver is materialized.
+        wf.validate()?;
         let n_sets = wf.sets.len() as u64;
-        let d = WorkflowDriver::new(
+        let n_pipes = WorkflowDriver::pipeline_count_of(&wf, mode) as u64;
+        let slot = self.pending.len();
+        self.pending.push(PendingArrival {
             wf,
             mode,
-            &self.cfg,
             arrival,
-            self.next_set_stream,
-            self.next_pipeline,
-        )?;
+            slot,
+            set_stream: self.next_set_stream,
+            pipeline_base: self.next_pipeline,
+        });
         self.next_set_stream += n_sets;
-        self.next_pipeline += d.pipeline_count() as u64;
-        self.drivers.push(d);
-        Ok(self.drivers.len() - 1)
+        self.next_pipeline += n_pipes;
+        Ok(slot)
     }
 
+    /// Number of registered workflows (pending or live).
     pub fn driver_count(&self) -> usize {
-        self.drivers.len()
+        self.pending.len()
     }
 
     /// Drive every registered workflow to completion over `executor`;
-    /// returns one [`RunReport`] per driver, in registration order.
-    /// Scheduler accounting (rounds / wall time) is global and repeated
-    /// on every report.
+    /// returns one [`RunReport`] per workflow, in registration order.
+    /// Scheduler accounting (rounds / wall time) and the live-task
+    /// high-water mark are global and repeated on every report.
     pub fn run(mut self, executor: &mut dyn Executor) -> Result<Vec<RunReport>> {
         let mut agent = Agent::new(&self.cluster, self.cfg.policy);
-        // Global uid -> (driver index, driver-local uid).
+        let n_members = self.pending.len();
+        // Per-slot live drivers / finished reports.
+        let mut drivers: Vec<Option<WorkflowDriver>> = Vec::new();
+        drivers.resize_with(n_members, || None);
+        let mut done: Vec<Option<RunReport>> = Vec::new();
+        done.resize_with(n_members, || None);
+        // Arrival-ordered stream of registrations, consumed as the
+        // clock reaches each arrival (ties resolve in registration
+        // order, matching merged-DAG set ordering).
+        let mut pending_list = std::mem::take(&mut self.pending);
+        pending_list.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.slot.cmp(&b.slot)));
+        let mut pending = pending_list.into_iter().peekable();
+        // Slots with a live driver, kept sorted by slot: the event loop
+        // walks only live members, so per-event cost tracks live state
+        // (like memory), not the total stream length.
+        let mut live_slots: Vec<usize> = Vec::new();
+
+        // Global uid slab: uid -> (driver slot, driver-local uid) and
+        // the launchable spec. Completed uids are recycled via the free
+        // list, bounding live entries by in-flight + queued tasks.
         let mut route: Vec<(usize, usize)> = Vec::new();
-        // Global-uid-indexed specs (what the executor launches).
         let mut specs: Vec<TaskSpec> = Vec::new();
+        let mut free_uids: Vec<usize> = Vec::new();
+        let mut live_uids = 0usize;
+        let mut peak_live = 0usize;
+
         let mut in_flight = 0usize;
         let mut sched_rounds = 0usize;
         let mut sched_wall = Duration::ZERO;
@@ -109,18 +168,60 @@ impl Coordinator {
         loop {
             let now = executor.now();
 
-            // 1. Release activations that are due, in driver order (this
+            // 1. Materialize every registered workflow whose arrival is
+            // due; its roots release in step 2 below.
+            while pending.peek().is_some_and(|p| p.arrival <= now + 1e-12) {
+                let p = pending.next().expect("peeked pending arrival");
+                // Validated at registration; compile only.
+                let d = WorkflowDriver::compile_prevalidated(
+                    p.wf,
+                    p.mode,
+                    &self.cfg,
+                    p.arrival,
+                    p.set_stream,
+                    p.pipeline_base,
+                );
+                drivers[p.slot] = Some(d);
+                if let Err(pos) = live_slots.binary_search(&p.slot) {
+                    live_slots.insert(pos, p.slot);
+                }
+            }
+
+            // 2. Release activations that are due, in slot order (this
             // matches merged-DAG set ordering: member k's sets precede
             // member k+1's).
-            for di in 0..self.drivers.len() {
-                let subs = self.drivers[di].step(EngineEvent::ClockAdvanced { now });
+            for li in 0..live_slots.len() {
+                let di = live_slots[li];
+                let subs = drivers[di]
+                    .as_mut()
+                    .expect("live slot holds a driver")
+                    .step(EngineEvent::ClockAdvanced { now });
                 for sub in subs {
-                    Self::submit(&mut agent, &mut route, &mut specs, di, sub, now);
+                    let local = sub.spec.uid;
+                    let mut spec = sub.spec;
+                    let gid = match free_uids.pop() {
+                        Some(g) => {
+                            spec.uid = g;
+                            specs[g] = spec;
+                            route[g] = (di, local);
+                            g
+                        }
+                        None => {
+                            let g = specs.len();
+                            spec.uid = g;
+                            specs.push(spec);
+                            route.push((di, local));
+                            g
+                        }
+                    };
+                    agent.submit(&specs[gid], sub.priority, now);
+                    live_uids += 1;
+                    peak_live = peak_live.max(live_uids);
                     sched_dirty = true;
                 }
             }
 
-            // 2. Schedule everything that fits.
+            // 3. Schedule everything that fits.
             let placed = if sched_dirty {
                 let t0 = Instant::now();
                 let placed = agent.schedule();
@@ -134,7 +235,10 @@ impl Coordinator {
             for s in &placed {
                 let spec = &specs[s.uid];
                 let (di, local) = route[s.uid];
-                self.drivers[di].on_started(local, now);
+                drivers[di]
+                    .as_mut()
+                    .expect("placed task belongs to a live driver")
+                    .on_started(local, now);
                 executor.launch(&RunningTask {
                     uid: s.uid,
                     tx: spec.tx + self.cfg.task_overhead,
@@ -144,12 +248,19 @@ impl Coordinator {
                 in_flight += 1;
             }
 
-            // 3. Wait for progress.
-            let next_deferred = self
-                .drivers
+            // 4. Wait for progress.
+            let mut next_deferred = live_slots
                 .iter()
-                .filter_map(|d| d.next_activation())
+                .filter_map(|&di| {
+                    drivers[di]
+                        .as_ref()
+                        .expect("live slot holds a driver")
+                        .next_activation()
+                })
                 .fold(f64::INFINITY, f64::min);
+            if let Some(p) = pending.peek() {
+                next_deferred = next_deferred.min(p.arrival);
+            }
             if in_flight > 0 {
                 match executor.peek_next_completion() {
                     // An activation is due before the next completion:
@@ -178,20 +289,40 @@ impl Coordinator {
                     agent.complete(c.uid);
                     sched_dirty = true; // resources were freed
                     let (di, local) = route[c.uid];
-                    let _ = self.drivers[di].step(EngineEvent::TaskCompleted {
-                        uid: local,
-                        finished_at: c.finished_at,
-                        failed: c.failed,
-                    });
-                    if c.failed && self.cfg.abort_on_failure {
-                        // Report the driver-local uid: that is the uid
-                        // visible in the member's RunReport records.
-                        return Err(Error::Engine(format!(
-                            "task {} ({}) of workflow '{}' failed",
-                            local,
-                            self.drivers[di].record(local).set_name,
-                            self.drivers[di].workflow_name()
-                        )));
+                    // Recycle the global uid: its spec/route slot (and
+                    // the agent's placement entry) are now reusable.
+                    free_uids.push(c.uid);
+                    live_uids -= 1;
+                    {
+                        let d = drivers[di]
+                            .as_mut()
+                            .expect("completion routed to a live driver");
+                        let _ = d.step(EngineEvent::TaskCompleted {
+                            uid: local,
+                            finished_at: c.finished_at,
+                            failed: c.failed,
+                        });
+                        if c.failed && self.cfg.abort_on_failure {
+                            // Report the driver-local uid: that is the
+                            // uid visible in the member's RunReport
+                            // records.
+                            return Err(Error::Engine(format!(
+                                "task {} ({}) of workflow '{}' failed",
+                                local,
+                                d.record(local).set_name,
+                                d.workflow_name()
+                            )));
+                        }
+                    }
+                    // Fold finished drivers into their report right
+                    // away: streamed runs never accumulate dead driver
+                    // state.
+                    if drivers[di].as_ref().is_some_and(|d| d.is_done()) {
+                        let d = drivers[di].take().expect("checked is_some");
+                        done[di] = Some(d.into_report(&self.cluster));
+                        if let Ok(pos) = live_slots.binary_search(&di) {
+                            live_slots.remove(pos);
+                        }
                     }
                 }
             } else if next_deferred.is_finite() {
@@ -208,35 +339,24 @@ impl Coordinator {
             }
         }
 
-        debug_assert!(self.drivers.iter().all(|d| d.is_done()));
-        let cluster = self.cluster;
-        let mut reports: Vec<RunReport> = self
-            .drivers
-            .into_iter()
-            .map(|d| d.into_report(&cluster))
-            .collect();
+        // Degenerate members (zero-task workflows) never see a
+        // completion; finalize whatever is left.
+        for di in 0..drivers.len() {
+            if let Some(d) = drivers[di].take() {
+                debug_assert!(d.is_done());
+                done[di] = Some(d.into_report(&self.cluster));
+            }
+        }
+        let mut reports: Vec<RunReport> = Vec::with_capacity(n_members);
+        for slot in done {
+            reports.push(slot.expect("every registered workflow produces a report"));
+        }
         for r in &mut reports {
             r.sched_rounds = sched_rounds;
             r.sched_wall = sched_wall;
+            r.peak_live_tasks = peak_live;
         }
         Ok(reports)
-    }
-
-    /// Move a driver submission into the global namespace and enqueue it.
-    fn submit(
-        agent: &mut Agent,
-        route: &mut Vec<(usize, usize)>,
-        specs: &mut Vec<TaskSpec>,
-        driver_idx: usize,
-        sub: Submission,
-        now: f64,
-    ) {
-        let local = sub.spec.uid;
-        let mut spec = sub.spec;
-        spec.uid = specs.len();
-        agent.submit(&spec, sub.priority, now);
-        route.push((driver_idx, local));
-        specs.push(spec);
     }
 }
 
@@ -302,6 +422,45 @@ mod tests {
         let reports = coord.run(&mut ex).unwrap();
         assert!((reports[0].makespan - 10.0).abs() < 1e-9);
         assert!((reports[1].makespan - 20.0).abs() < 1e-9, "second waits for the core");
+    }
+
+    #[test]
+    fn streamed_arrivals_recycle_task_state() {
+        // 50 workflows arriving one after another: live per-task state
+        // must stay bounded by in-flight + queued, not grow with the
+        // total stream length.
+        let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+        let cfg = EngineConfig::ideal();
+        let mut coord = Coordinator::new(&cluster, &cfg);
+        for k in 0..50 {
+            coord
+                .add_workflow(solo(1.0), ExecutionMode::Asynchronous, 2.0 * k as f64)
+                .unwrap();
+        }
+        let mut ex = VirtualExecutor::new();
+        let reports = coord.run(&mut ex).unwrap();
+        assert_eq!(reports.len(), 50);
+        assert!((reports[49].makespan - 99.0).abs() < 1e-9, "arrival 98 s + 1 s run");
+        assert!(
+            reports[0].peak_live_tasks <= 2,
+            "peak live task state {} for a 50-task stream",
+            reports[0].peak_live_tasks
+        );
+    }
+
+    #[test]
+    fn out_of_order_registration_reports_in_registration_order() {
+        let cluster = ClusterSpec::uniform("t", 1, 2, 0);
+        let cfg = EngineConfig::ideal();
+        let mut coord = Coordinator::new(&cluster, &cfg);
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 100.0).unwrap();
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        let mut ex = VirtualExecutor::new();
+        let reports = coord.run(&mut ex).unwrap();
+        assert!((reports[0].records[0].submitted - 100.0).abs() < 1e-9);
+        assert!((reports[1].records[0].submitted - 0.0).abs() < 1e-9);
+        assert!((reports[0].makespan - 110.0).abs() < 1e-9);
+        assert!((reports[1].makespan - 10.0).abs() < 1e-9);
     }
 
     #[test]

@@ -109,6 +109,28 @@ impl WorkflowDriver {
         pipeline_offset: u64,
     ) -> Result<WorkflowDriver> {
         wf.validate()?;
+        Ok(Self::compile_prevalidated(
+            wf,
+            mode,
+            cfg,
+            arrival,
+            set_stream_offset,
+            pipeline_offset,
+        ))
+    }
+
+    /// [`new`](Self::new) minus the validation pass, for callers that
+    /// already validated the workflow (the coordinator validates at
+    /// registration time and materializes the driver much later —
+    /// re-validating every streamed member would double the cost).
+    pub(crate) fn compile_prevalidated(
+        wf: Workflow,
+        mode: ExecutionMode,
+        cfg: &EngineConfig,
+        arrival: f64,
+        set_stream_offset: u64,
+        pipeline_offset: u64,
+    ) -> WorkflowDriver {
         let jobsets = compile(&wf, mode);
         let analysis = wf.analysis();
         let branch_of = analysis.branches.branch_of.clone();
@@ -132,7 +154,7 @@ impl WorkflowDriver {
             .map(|(i, _)| (arrival, i))
             .collect();
         let tasks_remaining = wf.total_tasks();
-        Ok(WorkflowDriver {
+        WorkflowDriver {
             jobsets,
             branch_of,
             n_branches,
@@ -151,7 +173,7 @@ impl WorkflowDriver {
             failed_tasks: 0,
             wf,
             mode,
-        })
+        }
     }
 
     /// Consume one event; return the submissions it made ready.
@@ -289,9 +311,22 @@ impl WorkflowDriver {
     /// namespacing; matches merged-DAG pipeline numbering).
     pub fn pipeline_count(&self) -> usize {
         match self.mode {
-            ExecutionMode::Sequential => self.wf.sequential.len(),
-            ExecutionMode::Asynchronous => self.wf.asynchronous.len(),
+            // Cached at compile time; pipeline_count_of recomputes the
+            // same branch analysis.
             ExecutionMode::Adaptive => self.n_branches,
+            mode => Self::pipeline_count_of(&self.wf, mode),
+        }
+    }
+
+    /// [`pipeline_count`](Self::pipeline_count) without building the
+    /// driver — the coordinator reserves priority bases at registration
+    /// time, long before the driver is materialized, and the two
+    /// computations must never diverge.
+    pub fn pipeline_count_of(wf: &Workflow, mode: ExecutionMode) -> usize {
+        match mode {
+            ExecutionMode::Sequential => wf.sequential.len(),
+            ExecutionMode::Asynchronous => wf.asynchronous.len(),
+            ExecutionMode::Adaptive => wf.analysis().branches.count(),
         }
     }
 

@@ -96,6 +96,11 @@ pub struct RunReport {
     pub sched_rounds: usize,
     /// Wall-clock spent inside the scheduler (perf accounting).
     pub sched_wall: Duration,
+    /// High-water mark of live per-task engine state (in-flight +
+    /// queued) during the run. Coordinator-global (repeated on every
+    /// member report, like `sched_rounds`); streamed campaigns keep
+    /// this far below the total task count.
+    pub peak_live_tasks: usize,
 }
 
 impl RunReport {
@@ -131,6 +136,7 @@ impl RunReport {
             failed_tasks,
             sched_rounds: 0,
             sched_wall: Duration::ZERO,
+            peak_live_tasks: 0,
             records,
             trace,
         }

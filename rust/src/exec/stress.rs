@@ -31,8 +31,12 @@ pub struct StressExecutor {
     /// Completions received while waiting on a deadline, not yet handed
     /// to the engine.
     pending: VecDeque<(usize, bool)>,
-    /// Injected failures: uids that should report failure (tests).
-    fail_uids: HashSet<usize>,
+    /// Injected failures: 0-based *launch ordinals* that should report
+    /// failure (tests). Keyed on launch order, not uid: the engine
+    /// recycles global uids, so a uid no longer names one task.
+    fail_launches: HashSet<usize>,
+    /// Tasks launched so far (the next launch's ordinal).
+    launches: usize,
 }
 
 impl StressExecutor {
@@ -46,13 +50,15 @@ impl StressExecutor {
             rx_chan,
             in_flight: 0,
             pending: VecDeque::new(),
-            fail_uids: HashSet::new(),
+            fail_launches: HashSet::new(),
+            launches: 0,
         }
     }
 
-    /// Mark a uid to complete as failed (failure-injection testing).
-    pub fn inject_failure(&mut self, uid: usize) {
-        self.fail_uids.insert(uid);
+    /// Mark the `n`-th launched task (0-based launch order) to complete
+    /// as failed (failure-injection testing).
+    pub fn inject_failure(&mut self, n: usize) {
+        self.fail_launches.insert(n);
     }
 
     fn completion(&self, (uid, failed): (usize, bool)) -> Completion {
@@ -64,7 +70,8 @@ impl Executor for StressExecutor {
     fn launch(&mut self, task: &RunningTask) {
         let wall = (task.tx * self.scale).max(0.0);
         let uid = task.uid;
-        let fail = self.fail_uids.contains(&uid);
+        let fail = self.fail_launches.contains(&self.launches);
+        self.launches += 1;
         let chan = self.tx_chan.clone();
         let mode = self.mode;
         self.in_flight += 1;
@@ -171,12 +178,17 @@ mod tests {
     }
 
     #[test]
-    fn failure_injection_reports_failed() {
+    fn failure_injection_targets_launch_order_not_uid() {
         let mut ex = StressExecutor::new(0.001, StressMode::Sleep);
-        ex.inject_failure(7);
+        ex.inject_failure(0);
+        // uid is irrelevant: the first *launch* fails.
         ex.launch(&RunningTask { uid: 7, tx: 1.0, started_at: 0.0, kind: None });
         let c = ex.wait_next().unwrap();
         assert!(c.failed);
+        // A later launch reusing the same uid does not fail.
+        ex.launch(&RunningTask { uid: 7, tx: 1.0, started_at: 0.0, kind: None });
+        let c = ex.wait_next().unwrap();
+        assert!(!c.failed);
     }
 
     #[test]

@@ -9,8 +9,9 @@
 //!   RADICAL-Pilot-like pilot runtime with a continuous scheduler
 //!   ([`pilot`]), a Summit-like resource model ([`resources`]), the
 //!   asynchronicity model (DOA_dep / DOA_res / WLA, Eqns 1–7) ([`model`],
-//!   [`dag`]), a discrete-event simulator ([`sim`]) and real executors
-//!   ([`exec`]) behind one engine ([`engine`]).
+//!   [`dag`]), a discrete-event simulator ([`sim`]), real executors
+//!   ([`exec`]) behind one engine ([`engine`]), and a streaming-traffic
+//!   load generator with queueing metrics ([`traffic`]).
 //! - **Layer 2**: JAX compute graphs (autoencoder training/inference, MD)
 //!   AOT-lowered to HLO text at build time (`python/compile/`).
 //! - **Layer 1**: Pallas kernels (blocked matmul, pairwise distances,
@@ -57,6 +58,7 @@ pub mod resources;
 pub mod runtime;
 pub mod sim;
 pub mod task;
+pub mod traffic;
 pub mod util;
 pub mod workflows;
 

@@ -45,6 +45,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("predict") => cmd_predict(args),
         Some("masking") => cmd_masking(args),
         Some("campaign") => cmd_campaign(args),
+        Some("traffic") => cmd_traffic(args),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -64,6 +65,16 @@ subcommands:
            [--arrivals 0,300,600]        online mode: members share one
                                          pilot agent and arrive at the
                                          given offsets (seconds)
+  traffic  --rate 0.02 --duration 20000  streaming workflow traffic on
+           --mix ddmd:2,cdg2:1           one shared pilot: Poisson (or
+           [--interval S] [--trace F]    fixed-interval / trace-driven)
+           [--sweep 0.005,0.01,0.02]     arrivals drawn from a weighted
+           [--max-workflows N]           workload mix; reports wait/TTX
+                                         percentiles, backlog, and the
+                                         saturation verdict. --sweep
+                                         runs several rates to find the
+                                         knee. Catalog: ddmd ddmd-small
+                                         cdg1 cdg2 cdg1-small cdg2-small
 
 common options:
   --cluster summit_paper|summit_706|summit_8gpu|local_small
@@ -266,6 +277,89 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         asy.gpu_utilization * 100.0,
         asy.improvement_over(&seq)
     );
+    Ok(())
+}
+
+fn cmd_traffic(args: &Args) -> Result<()> {
+    use asyncflow::traffic::{
+        load_trace_file, run_traffic, ArrivalProcess, Catalog, TrafficSpec, WorkloadMix,
+    };
+    let cluster = pick_cluster(args)?;
+    let cfg = pick_engine(args)?;
+    let seed = args.get_u64("seed", 42)?;
+    let duration = args.get_f64("duration", 20000.0)?;
+    let mix = WorkloadMix::parse(args.get_or("mix", "ddmd:2,cdg2:1"))?;
+    let max_workflows = args.get_usize("max-workflows", 10_000)?;
+    let catalog = Catalog::builtin();
+    let spec_for = |process: ArrivalProcess| TrafficSpec {
+        process,
+        mix: mix.clone(),
+        duration,
+        max_workflows,
+        seed,
+    };
+
+    // Rate sweep: one run per rate, tabulated to expose the saturation
+    // knee (bounded wait/backlog below it, growing backlog above it).
+    if let Some(rates) = args.get("sweep") {
+        let rates: Vec<f64> = rates
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<f64>().map_err(|_| {
+                    Error::Config(format!("--sweep: expected a number, got '{s}'"))
+                })
+            })
+            .collect::<Result<_>>()?;
+        println!(
+            "traffic sweep on {} (mix {}, window {:.0} s, seed {seed})\n",
+            cluster.name,
+            args.get_or("mix", "ddmd:2,cdg2:1"),
+            duration
+        );
+        println!(
+            "{:>9} {:>6} {:>10} {:>10} {:>10} {:>12} {:>8}  verdict",
+            "rate/s", "wf", "wait_mean", "ttx_p50", "ttx_p95", "backlog_mean", "growth"
+        );
+        for rate in rates {
+            let rep = run_traffic(
+                &spec_for(ArrivalProcess::Poisson { rate }),
+                &catalog,
+                &cluster,
+                &cfg,
+            )?;
+            println!(
+                "{:>9.4} {:>6} {:>10.1} {:>10.1} {:>10.1} {:>12.1} {:>7.2}x  {}",
+                rate,
+                rep.workflows.len(),
+                rep.wait.mean,
+                rep.ttx.p50,
+                rep.ttx.p95,
+                rep.mean_backlog_tasks,
+                rep.backlog_growth(),
+                if rep.is_saturated() { "SATURATED" } else { "bounded" },
+            );
+        }
+        return Ok(());
+    }
+
+    let process = if let Some(path) = args.get("trace") {
+        load_trace_file(path)?
+    } else if args.get("interval").is_some() {
+        ArrivalProcess::Deterministic { interval: args.get_f64("interval", 0.0)? }
+    } else {
+        ArrivalProcess::Poisson { rate: args.get_f64("rate", 0.02)? }
+    };
+    let rep = run_traffic(&spec_for(process), &catalog, &cluster, &cfg)?;
+    print!("{}", rep.render(args.flag("verbose")));
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        let base = std::path::Path::new(dir);
+        let bp = base.join("traffic_backlog.csv");
+        std::fs::write(&bp, rep.backlog.to_csv())?;
+        let jp = base.join("traffic_report.json");
+        std::fs::write(&jp, rep.to_json().to_string_pretty())?;
+        println!("wrote {} and {}", bp.display(), jp.display());
+    }
     Ok(())
 }
 

@@ -93,8 +93,10 @@ impl UtilizationTrace {
             gpu_s += w[0].2 as f64 * dt;
         }
         // Tail after the last change point is all-zero by construction.
+        // `.max(1)` guards GPU-only / CPU-only cluster specs (a zero
+        // denominator would silently poison reports with NaN).
         (
-            core_s / (self.total_cores as f64 * self.makespan),
+            core_s / (self.total_cores.max(1) as f64 * self.makespan),
             gpu_s / (self.total_gpus.max(1) as f64 * self.makespan),
         )
     }
@@ -112,7 +114,7 @@ impl UtilizationTrace {
             let (_, c, g) = self.points[seg];
             out.push((
                 t,
-                c as f64 / self.total_cores as f64,
+                c as f64 / self.total_cores.max(1) as f64,
                 g as f64 / self.total_gpus.max(1) as f64,
             ));
         }
@@ -128,9 +130,114 @@ impl UtilizationTrace {
                 t,
                 c,
                 g,
-                c as f64 / self.total_cores as f64,
+                c as f64 / self.total_cores.max(1) as f64,
                 g as f64 / self.total_gpus.max(1) as f64
             ));
+        }
+        s
+    }
+}
+
+/// Step-function *allocation backlog* over time: how many tasks (and
+/// how many cores / GPUs they request) are queued — submitted but not
+/// yet placed — at each instant. The companion of [`UtilizationTrace`]
+/// for streaming-traffic analysis: a backlog that keeps growing over
+/// the arrival window means the workload exceeds the allocation's
+/// service capacity (the saturation knee).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BacklogTrace {
+    /// (time, queued tasks, queued cores, queued gpus) at each change
+    /// point; starts at (0, 0, 0, 0).
+    pub points: Vec<(f64, u64, u64, u64)>,
+    /// Last task finish time (the observation horizon).
+    pub horizon: f64,
+}
+
+impl BacklogTrace {
+    pub fn from_records(records: &[TaskRecord]) -> BacklogTrace {
+        // Change points: +req at submission, -req at placement (start).
+        let mut deltas: Vec<(f64, i64, i64, i64)> = Vec::with_capacity(records.len() * 2);
+        let mut horizon = 0.0f64;
+        for r in records {
+            if r.finished.is_finite() {
+                horizon = horizon.max(r.finished);
+            }
+            if !r.submitted.is_finite() || !r.started.is_finite() {
+                continue; // never-placed task (aborted run); skip
+            }
+            deltas.push((r.submitted, 1, r.cores as i64, r.gpus as i64));
+            deltas.push((r.started, -1, -(r.cores as i64), -(r.gpus as i64)));
+        }
+        deltas.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut points = Vec::with_capacity(deltas.len() + 1);
+        points.push((0.0, 0, 0, 0));
+        let (mut n, mut c, mut g) = (0i64, 0i64, 0i64);
+        let mut i = 0;
+        while i < deltas.len() {
+            let t = deltas[i].0;
+            // Fold all deltas at identical timestamps.
+            while i < deltas.len() && deltas[i].0 == t {
+                n += deltas[i].1;
+                c += deltas[i].2;
+                g += deltas[i].3;
+                i += 1;
+            }
+            debug_assert!(n >= 0 && c >= 0 && g >= 0);
+            points.push((t, n.max(0) as u64, c.max(0) as u64, g.max(0) as u64));
+        }
+        BacklogTrace { points, horizon }
+    }
+
+    /// Peak backlog as (tasks, cores, gpus) — each dimension's own
+    /// maximum (they need not occur at the same instant).
+    pub fn peak(&self) -> (u64, u64, u64) {
+        let mut p = (0, 0, 0);
+        for &(_, n, c, g) in &self.points {
+            p.0 = p.0.max(n);
+            p.1 = p.1.max(c);
+            p.2 = p.2.max(g);
+        }
+        p
+    }
+
+    /// Time-averaged queued-task count over `[t0, t1]`.
+    pub fn mean_tasks_between(&self, t0: f64, t1: f64) -> f64 {
+        if !(t1 > t0) {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for w in self.points.windows(2) {
+            let (s, e) = (w[0].0.max(t0), w[1].0.min(t1));
+            if e > s {
+                acc += w[0].1 as f64 * (e - s);
+            }
+        }
+        // After the last change point the backlog holds its last value.
+        if let Some(&(last_t, last_n, _, _)) = self.points.last() {
+            let s = last_t.max(t0);
+            if t1 > s {
+                acc += last_n as f64 * (t1 - s);
+            }
+        }
+        acc / (t1 - t0)
+    }
+
+    /// Time-averaged queued-task count over the whole horizon.
+    pub fn mean_tasks(&self) -> f64 {
+        self.mean_tasks_between(0.0, self.horizon)
+    }
+
+    /// Backlog at the end of the horizon (nonzero only for aborted or
+    /// truncated runs; complete runs always drain to zero).
+    pub fn final_tasks(&self) -> u64 {
+        self.points.last().map_or(0, |&(_, n, _, _)| n)
+    }
+
+    /// CSV rendering: `time_s,queued_tasks,queued_cores,queued_gpus`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("time_s,queued_tasks,queued_cores,queued_gpus\n");
+        for &(t, n, c, g) in &self.points {
+            s.push_str(&format!("{t:.3},{n},{c},{g}\n"));
         }
         s
     }
@@ -294,5 +401,55 @@ mod tests {
     fn throughput_simple() {
         let recs = vec![rec(0, 0, 0.0, 5.0, 1, 0), rec(1, 0, 0.0, 10.0, 1, 0)];
         assert!((throughput(&recs) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_core_cluster_yields_finite_utilization() {
+        // Regression: a GPU-only ClusterSpec (0 cores) used to divide by
+        // zero in mean_utilization/sampled and poison reports with NaN.
+        let recs = vec![rec(0, 0, 0.0, 10.0, 0, 1)];
+        let gpu_only = ClusterSpec::uniform("gpu-only", 1, 0, 2);
+        let tr = UtilizationTrace::from_records(&recs, &gpu_only);
+        let (cu, gu) = tr.mean_utilization();
+        assert!(cu.is_finite() && gu.is_finite());
+        assert_eq!(cu, 0.0, "no cores in use, no cores in the cluster");
+        assert!((gu - 0.5).abs() < 1e-9, "1 of 2 GPUs busy the whole run");
+        for (t, c, g) in tr.sampled(5) {
+            assert!(t.is_finite() && c.is_finite() && g.is_finite());
+        }
+        assert!(!tr.to_csv().contains("NaN"));
+    }
+
+    fn queued(uid: usize, sub: f64, start: f64, end: f64, cores: u64, gpus: u64) -> TaskRecord {
+        let mut r = rec(uid, 0, start, end, cores, gpus);
+        r.submitted = sub;
+        r
+    }
+
+    #[test]
+    fn backlog_trace_integrates_queue_time() {
+        // Task 0 queued [0, 4), task 1 queued [2, 8): overlap in [2, 4).
+        let recs = vec![
+            queued(0, 0.0, 4.0, 10.0, 2, 0),
+            queued(1, 2.0, 8.0, 10.0, 1, 1),
+        ];
+        let tr = BacklogTrace::from_records(&recs);
+        assert_eq!(tr.horizon, 10.0);
+        assert_eq!(tr.peak(), (2, 3, 1));
+        assert_eq!(tr.final_tasks(), 0);
+        // Queued-task integral: 1*2 + 2*2 + 1*4 = 10 task-seconds.
+        assert!((tr.mean_tasks() - 1.0).abs() < 1e-9);
+        assert!((tr.mean_tasks_between(0.0, 4.0) - 1.5).abs() < 1e-9);
+        assert!((tr.mean_tasks_between(8.0, 10.0) - 0.0).abs() < 1e-9);
+        assert!(tr.to_csv().starts_with("time_s,queued_tasks"));
+    }
+
+    #[test]
+    fn backlog_zero_wait_tasks_cancel_out() {
+        // submitted == started: the +/- deltas fold to a flat zero line.
+        let recs = vec![queued(0, 1.0, 1.0, 5.0, 4, 1)];
+        let tr = BacklogTrace::from_records(&recs);
+        assert_eq!(tr.peak(), (0, 0, 0));
+        assert_eq!(tr.mean_tasks(), 0.0);
     }
 }

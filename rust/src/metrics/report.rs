@@ -68,6 +68,7 @@ pub fn report_to_json(rep: &RunReport) -> Json {
         ("tasks", Json::from(rep.records.len())),
         ("failed_tasks", Json::from(rep.failed_tasks)),
         ("sched_rounds", Json::from(rep.sched_rounds)),
+        ("peak_live_tasks", Json::from(rep.peak_live_tasks)),
         ("sets", Json::Arr(sets)),
         (
             "trace",

@@ -50,8 +50,14 @@ pub struct Scheduler {
     arrivals: Vec<u64>,
     /// True while the queue is already in non-decreasing submit-time
     /// order (the engine submits with a monotone clock, so this is the
-    /// common case) — lets FIFO policies skip the sort entirely.
+    /// common case) — lets FIFO policies skip the sort entirely. Reset
+    /// whenever the queue drains empty or compaction leaves a sorted
+    /// remainder, so one historical out-of-order push does not tax every
+    /// later drain forever.
     fifo_sorted: bool,
+    /// How many ordering sorts have been performed (perf accounting;
+    /// lets tests and benches observe the FIFO fast path).
+    sorts: u64,
 }
 
 impl Scheduler {
@@ -62,6 +68,7 @@ impl Scheduler {
             arrival_seq: 0,
             arrivals: Vec::new(),
             fifo_sorted: true,
+            sorts: 0,
         }
     }
 
@@ -69,24 +76,36 @@ impl Scheduler {
         self.queue.len()
     }
 
+    /// Number of ordering sorts performed so far (the FIFO fast path
+    /// performs none).
+    pub fn sorts_performed(&self) -> u64 {
+        self.sorts
+    }
+
     pub fn push(&mut self, t: QueuedTask) {
-        if let Some(last) = self.queue.last() {
-            if t.submitted_at < last.submitted_at {
-                self.fifo_sorted = false;
+        match self.queue.last() {
+            Some(last) => {
+                if t.submitted_at < last.submitted_at {
+                    self.fifo_sorted = false;
+                }
             }
+            // A single element is trivially sorted, whatever history
+            // left `fifo_sorted` at.
+            None => self.fifo_sorted = true,
         }
         self.queue.push(t);
         self.arrivals.push(self.arrival_seq);
         self.arrival_seq += 1;
     }
 
-    fn order(&self) -> Vec<usize> {
+    fn order(&mut self) -> Vec<usize> {
         let mut idx: Vec<usize> = (0..self.queue.len()).collect();
         if self.fifo_sorted
             && matches!(self.policy, Policy::FifoBackfill | Policy::FifoStrict)
         {
             return idx; // insertion order == FIFO order
         }
+        self.sorts += 1;
         match self.policy {
             Policy::PipelineAge => idx.sort_by(|&a, &b| {
                 let (ta, tb) = (&self.queue[a], &self.queue[b]);
@@ -124,7 +143,9 @@ impl Scheduler {
     pub fn drain_schedulable(&mut self, alloc: &mut Allocator) -> Vec<ScheduledTask> {
         let order = self.order();
         let mut placed = Vec::new();
-        let mut remove = vec![false; self.queue.len()];
+        // Allocated lazily on the first placement: a fully-blocked
+        // drain round touches nothing.
+        let mut remove: Vec<bool> = Vec::new();
         let mut failed_shapes: HashSet<ResourceRequest> = HashSet::new();
         for &i in &order {
             let t = self.queue[i];
@@ -136,6 +157,9 @@ impl Scheduler {
             }
             match alloc.try_alloc(&t.req) {
                 Some(placement) => {
+                    if remove.is_empty() {
+                        remove = vec![false; self.queue.len()];
+                    }
                     placed.push(ScheduledTask { uid: t.uid, placement });
                     remove[i] = true;
                 }
@@ -146,6 +170,12 @@ impl Scheduler {
                     failed_shapes.insert(t.req);
                 }
             }
+        }
+        // Nothing placed (the common case for a blocked queue under
+        // sustained load): the queue is untouched, so skip the
+        // compaction copy entirely.
+        if placed.is_empty() {
+            return placed;
         }
         // Compact queue preserving insertion order.
         let mut q = Vec::with_capacity(self.queue.len() - placed.len());
@@ -158,6 +188,15 @@ impl Scheduler {
         }
         self.queue = q;
         self.arrivals = a;
+        // Out-of-order pushes are transient; once the disordered entries
+        // have drained (fully, or down to a sorted remainder) the FIFO
+        // fast path is valid again.
+        if !self.fifo_sorted {
+            self.fifo_sorted = self
+                .queue
+                .windows(2)
+                .all(|w| w[0].submitted_at <= w[1].submitted_at);
+        }
         placed
     }
 }
@@ -250,6 +289,86 @@ mod tests {
         let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
         assert_eq!(uids, vec![9]);
         assert_eq!(s.queue_len(), 3);
+    }
+
+    #[test]
+    fn fifo_fast_path_recovers_after_full_drain() {
+        // Regression: one out-of-order push used to flip `fifo_sorted`
+        // permanently, so every later FIFO drain paid a sort — even
+        // after the queue had fully drained.
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        s.push(qt(0, 1, 0, 0, 5.0));
+        s.push(qt(1, 1, 0, 0, 1.0)); // earlier submit, pushed later
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 8, 0));
+        let placed = s.drain_schedulable(&mut alloc);
+        assert_eq!(
+            placed.iter().map(|p| p.uid).collect::<Vec<_>>(),
+            vec![1, 0],
+            "true FIFO order despite out-of-order push"
+        );
+        assert_eq!(s.queue_len(), 0);
+        let sorts_after_disorder = s.sorts_performed();
+        assert!(sorts_after_disorder >= 1, "disordered drain must sort");
+        // Queue drained: in-order pushes must ride the fast path again.
+        s.push(qt(2, 1, 0, 0, 7.0));
+        s.push(qt(3, 1, 0, 0, 8.0));
+        let placed = s.drain_schedulable(&mut alloc);
+        assert_eq!(placed.iter().map(|p| p.uid).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(
+            s.sorts_performed(),
+            sorts_after_disorder,
+            "FIFO fast path must be back after the queue drained empty"
+        );
+    }
+
+    #[test]
+    fn fifo_fast_path_recovers_after_sorted_remainder() {
+        // Partial drain that removes the disordered entry: the sorted
+        // remainder re-enables the fast path.
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        s.push(qt(0, 1, 0, 0, 5.0));
+        s.push(qt(1, 1, 0, 0, 1.0)); // out of order; drains first (FIFO)
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 1, 0));
+        let placed = s.drain_schedulable(&mut alloc);
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].uid, 1, "FIFO places the earliest submit");
+        assert_eq!(s.queue_len(), 1, "uid 0 remains queued");
+        let sorts = s.sorts_performed();
+        alloc.release(&placed[0].placement);
+        let placed = s.drain_schedulable(&mut alloc);
+        assert_eq!(placed[0].uid, 0);
+        assert_eq!(
+            s.sorts_performed(),
+            sorts,
+            "single-element remainder is sorted; no further sorts"
+        );
+    }
+
+    #[test]
+    fn noop_drain_leaves_queue_untouched() {
+        // Regression: a drain that places nothing used to rebuild the
+        // queue and arrival vectors anyway — the common case for a
+        // blocked queue under sustained load.
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        for uid in 0..4 {
+            s.push(qt(uid, 16, 0, 0, uid as f64)); // none fit on 8 cores
+        }
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 8, 0));
+        let ptr_before = s.queue.as_ptr();
+        let arr_before = s.arrivals.as_ptr();
+        let placed = s.drain_schedulable(&mut alloc);
+        assert!(placed.is_empty());
+        assert_eq!(s.queue_len(), 4);
+        assert_eq!(
+            s.queue.as_ptr(),
+            ptr_before,
+            "no-op drain must not reallocate the queue"
+        );
+        assert_eq!(
+            s.arrivals.as_ptr(),
+            arr_before,
+            "no-op drain must not reallocate the arrival tags"
+        );
     }
 
     #[test]

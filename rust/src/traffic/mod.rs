@@ -1,0 +1,482 @@
+//! Streaming workflow traffic: arrival processes, workload mixes, and
+//! the load generator that streams workflows through a shared-pilot
+//! [`Coordinator`].
+//!
+//! The paper's core claim is that asynchronous execution raises
+//! utilization and throughput when heterogeneous workflows share one
+//! allocation. RADICAL-Pilot's production characterization
+//! (arXiv:2103.00091) and RHAPSODY's hybrid-workflow campaigns
+//! (arXiv:2512.20795) both treat *sustained workflow streams against a
+//! fixed allocation* as the defining workload — not a fixed two-member
+//! campaign. This module turns the coordinator into that load
+//! generator:
+//!
+//! - [`ArrivalProcess`] — deterministic-interval, Poisson (via
+//!   [`Rng::exp`]) or trace-driven workflow arrivals;
+//! - [`WorkloadMix`] + [`Catalog`] — each arriving workflow is drawn
+//!   from a weighted catalog of named workloads (`ddmd`, `cdg1`,
+//!   `cdg2`, scaled variants, or custom entries);
+//! - [`run_traffic`] — streams the sampled arrivals through one
+//!   [`Coordinator`] on a [`VirtualExecutor`] and reduces the member
+//!   reports to a [`TrafficReport`] with queueing metrics: per-workflow
+//!   wait, allocation backlog over time, TTX percentiles and sustained
+//!   throughput.
+//!
+//! Sweeping the arrival rate against a fixed allocation locates the
+//! *saturation knee*: below it, wait and backlog are bounded; above it,
+//! the backlog grows without bound for as long as arrivals continue
+//! (`asyncflow traffic --sweep ...`).
+//!
+//! Determinism: arrivals and mix draws come from two forked streams of
+//! the spec's seed, and TX sampling is per-set-stream keyed (see
+//! [`WorkflowDriver`](crate::engine::WorkflowDriver)); the same spec,
+//! catalog, cluster and engine config reproduce a bit-identical
+//! [`TrafficReport`].
+
+mod report;
+
+pub use report::{TrafficReport, WorkflowStat};
+
+use crate::ddmd::{ddmd_workflow, DdmdConfig};
+use crate::engine::{Coordinator, EngineConfig, ExecutionMode};
+use crate::entk::Workflow;
+use crate::error::{Error, Result};
+use crate::resources::ClusterSpec;
+use crate::sim::VirtualExecutor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workflows::{cdg1, cdg2};
+
+/// One arrival of a trace-driven process: a time offset and optionally
+/// a pinned workload name (`None` draws from the [`WorkloadMix`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceArrival {
+    /// Arrival offset in engine seconds (>= 0).
+    pub at: f64,
+    /// Catalog workload to instantiate; `None` samples the mix.
+    pub workload: Option<String>,
+}
+
+/// How workflow arrival times are generated.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// One arrival every `interval` seconds, starting at t = 0.
+    Deterministic { interval: f64 },
+    /// Poisson process with `rate` arrivals per second (exponential
+    /// inter-arrival times; first arrival strictly after t = 0).
+    Poisson { rate: f64 },
+    /// Explicit arrival offsets (e.g. replayed from a production log);
+    /// taken verbatim, sorted by time — the `duration` window does not
+    /// truncate a trace.
+    Trace(Vec<TraceArrival>),
+}
+
+impl ArrivalProcess {
+    /// Concrete arrivals for one run: at most `cap` entries, generated
+    /// processes stop at the `duration` horizon.
+    pub fn generate(&self, duration: f64, cap: usize, rng: &mut Rng) -> Vec<TraceArrival> {
+        let mut out = Vec::new();
+        match self {
+            ArrivalProcess::Deterministic { interval } => {
+                if *interval > 0.0 {
+                    let mut t = 0.0;
+                    while t < duration && out.len() < cap {
+                        out.push(TraceArrival { at: t, workload: None });
+                        t += interval;
+                    }
+                }
+            }
+            ArrivalProcess::Poisson { rate } => {
+                if *rate > 0.0 {
+                    let mut t = rng.exp(*rate);
+                    while t < duration && out.len() < cap {
+                        out.push(TraceArrival { at: t, workload: None });
+                        t += rng.exp(*rate);
+                    }
+                }
+            }
+            ArrivalProcess::Trace(entries) => {
+                // Sort before capping so a capped unsorted trace keeps
+                // the *earliest* arrivals, not a file-order prefix.
+                out = entries.to_vec();
+                out.sort_by(|a, b| a.at.total_cmp(&b.at));
+                out.truncate(cap);
+            }
+        }
+        out
+    }
+}
+
+/// A weighted mix of catalog workload names, e.g. `"ddmd:2,cdg2:1"`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadMix {
+    /// (workload name, weight > 0).
+    entries: Vec<(String, f64)>,
+    total: f64,
+}
+
+impl WorkloadMix {
+    /// Parse `"name[:weight],name[:weight],..."`; a bare name weighs 1.
+    pub fn parse(spec: &str) -> Result<WorkloadMix> {
+        let mut entries = Vec::new();
+        let mut total = 0.0;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, weight) = match part.split_once(':') {
+                Some((n, w)) => {
+                    let w: f64 = w.trim().parse().map_err(|_| {
+                        Error::Config(format!("--mix: bad weight in '{part}'"))
+                    })?;
+                    (n.trim(), w)
+                }
+                None => (part, 1.0),
+            };
+            if name.is_empty() || !weight.is_finite() || weight <= 0.0 {
+                return Err(Error::Config(format!("--mix: invalid entry '{part}'")));
+            }
+            total += weight;
+            entries.push((name.to_string(), weight));
+        }
+        if entries.is_empty() {
+            return Err(Error::Config(format!("--mix: no workloads in '{spec}'")));
+        }
+        Ok(WorkloadMix { entries, total })
+    }
+
+    /// Draw one workload name, weight-proportionally.
+    pub fn sample(&self, rng: &mut Rng) -> &str {
+        let mut u = rng.f64() * self.total;
+        for (name, w) in &self.entries {
+            if u < *w {
+                return name;
+            }
+            u -= w;
+        }
+        // Floating-point slop: fall back to the last entry.
+        &self.entries.last().expect("mix is non-empty").0
+    }
+
+    /// Workload names in the mix (mix-spec order).
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|(n, _)| n.as_str())
+    }
+}
+
+/// Named workload catalog: each arriving workflow clones one entry.
+#[derive(Debug, Clone, Default)]
+pub struct Catalog {
+    entries: Vec<(String, Workflow)>,
+}
+
+impl Catalog {
+    pub fn new() -> Catalog {
+        Catalog::default()
+    }
+
+    /// Builder-style insert (later inserts shadow earlier same names).
+    pub fn insert(mut self, name: impl Into<String>, wf: Workflow) -> Catalog {
+        let name = name.into();
+        self.entries.retain(|(n, _)| *n != name);
+        self.entries.push((name, wf));
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Workflow> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, wf)| wf)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// The paper workloads plus scaled variants: `ddmd`, `ddmd-small`,
+    /// `cdg1`, `cdg2`, and `cdg1-small` / `cdg2-small` (task counts
+    /// divided by 8, TX scaled to 10% — sized so a stream of them
+    /// saturates a Summit-scale allocation in minutes, not hours).
+    pub fn builtin() -> Catalog {
+        Catalog::new()
+            .insert("ddmd", ddmd_workflow(&DdmdConfig::paper()))
+            .insert("ddmd-small", ddmd_workflow(&DdmdConfig::small()))
+            .insert("cdg1", cdg1())
+            .insert("cdg2", cdg2())
+            .insert("cdg1-small", scaled_workflow(&cdg1(), 8, 0.1))
+            .insert("cdg2-small", scaled_workflow(&cdg2(), 8, 0.1))
+    }
+}
+
+/// Scale a workflow for traffic experiments: divide every set's task
+/// count by `tasks_div` (floored at 1) and multiply its mean TX by
+/// `tx_scale`. Structure (DAG, realizations, per-task resources) is
+/// preserved.
+pub fn scaled_workflow(wf: &Workflow, tasks_div: u32, tx_scale: f64) -> Workflow {
+    assert!(tasks_div >= 1, "tasks_div must be >= 1");
+    assert!(tx_scale > 0.0, "tx_scale must be positive");
+    let mut out = wf.clone();
+    out.name = format!("{}-div{}", wf.name, tasks_div);
+    for s in &mut out.sets {
+        s.tasks = (s.tasks / tasks_div).max(1);
+        s.tx_mean *= tx_scale;
+    }
+    out
+}
+
+/// One streaming-traffic scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficSpec {
+    pub process: ArrivalProcess,
+    pub mix: WorkloadMix,
+    /// Arrival window in engine seconds: generators stop emitting at
+    /// this horizon; already-queued work still drains to completion.
+    pub duration: f64,
+    /// Hard cap on generated workflows (runaway-sweep guard).
+    pub max_workflows: usize,
+    /// Seed for the arrival and mix streams (task TX streams use
+    /// [`EngineConfig::seed`]).
+    pub seed: u64,
+}
+
+/// Run one traffic scenario: sample arrivals, stream every workflow
+/// through a shared-pilot [`Coordinator`] at its arrival time, and
+/// reduce the member reports to queueing metrics.
+pub fn run_traffic(
+    spec: &TrafficSpec,
+    catalog: &Catalog,
+    cluster: &ClusterSpec,
+    cfg: &EngineConfig,
+) -> Result<TrafficReport> {
+    if !spec.duration.is_finite() || spec.duration <= 0.0 {
+        return Err(Error::Config(format!(
+            "traffic: invalid duration {}",
+            spec.duration
+        )));
+    }
+    if spec.max_workflows == 0 {
+        return Err(Error::Config("traffic: max_workflows must be >= 1".into()));
+    }
+    // Catch mix typos up front, not when an entry is first sampled
+    // mid-run (which would be seed-dependent).
+    for name in spec.mix.names() {
+        if catalog.get(name).is_none() {
+            return Err(Error::Config(format!(
+                "traffic: unknown workload '{name}' in mix (catalog: {})",
+                catalog.names().join(", ")
+            )));
+        }
+    }
+    let mut root = Rng::new(spec.seed);
+    let mut arrival_rng = root.fork(0x5452_4146); // "TRAF"
+    let mut mix_rng = root.fork(0x4d49_5858); // "MIXX"
+    let arrivals =
+        spec.process
+            .generate(spec.duration, spec.max_workflows, &mut arrival_rng);
+    if arrivals.is_empty() {
+        return Err(Error::Config(
+            "traffic: arrival process produced no arrivals in the window".into(),
+        ));
+    }
+    // Queueing metrics are windowed over the *actual* arrival span:
+    // for the generated processes that is `duration` — unless the
+    // max_workflows cap cut the stream short — and a trace is taken
+    // verbatim (never truncated to `duration`), so its own span is the
+    // window. Windowing over a longer interval than arrivals actually
+    // covered would dilute the backlog halves with post-arrival drain
+    // and flip a genuinely saturated run to "bounded".
+    let last_arrival = arrivals.last().map(|a| a.at).unwrap_or(0.0);
+    let arrival_window = match &spec.process {
+        ArrivalProcess::Trace(_) => last_arrival.max(f64::MIN_POSITIVE),
+        _ if arrivals.len() == spec.max_workflows => {
+            last_arrival.max(f64::MIN_POSITIVE)
+        }
+        _ => spec.duration,
+    };
+
+    let mut coord = Coordinator::new(cluster, cfg);
+    let mut names = Vec::with_capacity(arrivals.len());
+    let mut times = Vec::with_capacity(arrivals.len());
+    for a in &arrivals {
+        let name = match &a.workload {
+            Some(n) => n.clone(),
+            None => spec.mix.sample(&mut mix_rng).to_string(),
+        };
+        let wf = catalog.get(&name).ok_or_else(|| {
+            Error::Config(format!(
+                "traffic: unknown workload '{name}' (catalog: {})",
+                catalog.names().join(", ")
+            ))
+        })?;
+        coord.add_workflow(wf.clone(), ExecutionMode::Asynchronous, a.at)?;
+        names.push(name);
+        times.push(a.at);
+    }
+
+    let mut ex = VirtualExecutor::new();
+    let members = coord.run(&mut ex)?;
+    Ok(TrafficReport::build(
+        arrival_window,
+        names,
+        times,
+        members,
+        cluster,
+    ))
+}
+
+/// Parse a trace-driven arrival file. Accepted shapes:
+///
+/// ```json
+/// { "arrivals": [0, 300.5, {"t": 900, "workload": "cdg2"}] }
+/// ```
+///
+/// or a bare top-level array. Plain numbers draw their workload from
+/// the mix; objects may pin one with `"workload"`.
+pub fn parse_trace(src: &str) -> Result<ArrivalProcess> {
+    let v = Json::parse(src)?;
+    let arr = match &v {
+        Json::Arr(_) => v.as_arr().expect("matched array"),
+        _ => v
+            .get("arrivals")
+            .as_arr()
+            .ok_or_else(|| Error::Config("trace: expected an array or {\"arrivals\": [...]}".into()))?,
+    };
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, e) in arr.iter().enumerate() {
+        let (at, workload) = match e {
+            Json::Num(t) => (*t, None),
+            Json::Obj(_) => (
+                e.req_f64("t")?,
+                e.get("workload").as_str().map(|s| s.to_string()),
+            ),
+            _ => {
+                return Err(Error::Config(format!(
+                    "trace: arrival #{i} must be a number or an object with 't'"
+                )))
+            }
+        };
+        if !at.is_finite() || at < 0.0 {
+            return Err(Error::Config(format!("trace: invalid arrival time {at}")));
+        }
+        out.push(TraceArrival { at, workload });
+    }
+    Ok(ArrivalProcess::Trace(out))
+}
+
+/// [`parse_trace`] over a file path.
+pub fn load_trace_file(path: &str) -> Result<ArrivalProcess> {
+    let src = std::fs::read_to_string(path)?;
+    parse_trace(&src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_arrivals_start_at_zero() {
+        let mut rng = Rng::new(1);
+        let a = ArrivalProcess::Deterministic { interval: 10.0 }.generate(35.0, 100, &mut rng);
+        let ts: Vec<f64> = a.iter().map(|x| x.at).collect();
+        assert_eq!(ts, vec![0.0, 10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn poisson_arrivals_are_reproducible_and_in_window() {
+        let gen = |seed| {
+            let mut rng = Rng::new(seed);
+            ArrivalProcess::Poisson { rate: 0.1 }
+                .generate(1000.0, 10_000, &mut rng)
+                .iter()
+                .map(|x| x.at)
+                .collect::<Vec<f64>>()
+        };
+        let a = gen(7);
+        let b = gen(7);
+        assert_eq!(a, b, "same seed, same arrivals");
+        assert_ne!(a, gen(8), "different seed, different arrivals");
+        // ~100 expected; loose 3-sigma-ish bounds.
+        assert!((60..=140).contains(&a.len()), "got {} arrivals", a.len());
+        assert!(a.iter().all(|&t| t > 0.0 && t < 1000.0));
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "sorted by construction");
+    }
+
+    #[test]
+    fn arrival_cap_is_respected() {
+        let mut rng = Rng::new(1);
+        let a = ArrivalProcess::Deterministic { interval: 1.0 }.generate(1e9, 25, &mut rng);
+        assert_eq!(a.len(), 25);
+    }
+
+    #[test]
+    fn mix_parses_and_samples_proportionally() {
+        let mix = WorkloadMix::parse("a:3, b:1").unwrap();
+        assert_eq!(mix.names().collect::<Vec<_>>(), vec!["a", "b"]);
+        let mut rng = Rng::new(9);
+        let mut na = 0;
+        for _ in 0..4000 {
+            if mix.sample(&mut rng) == "a" {
+                na += 1;
+            }
+        }
+        // E[na] = 3000; loose bounds.
+        assert!((2700..=3300).contains(&na), "na = {na}");
+        // Bare names weigh 1.
+        let m2 = WorkloadMix::parse("solo").unwrap();
+        assert_eq!(m2.sample(&mut rng), "solo");
+    }
+
+    #[test]
+    fn mix_rejects_garbage() {
+        assert!(WorkloadMix::parse("").is_err());
+        assert!(WorkloadMix::parse("a:0").is_err());
+        assert!(WorkloadMix::parse("a:-1").is_err());
+        assert!(WorkloadMix::parse("a:x").is_err());
+        assert!(WorkloadMix::parse(":2").is_err());
+    }
+
+    #[test]
+    fn builtin_catalog_has_paper_workloads() {
+        let c = Catalog::builtin();
+        for name in ["ddmd", "ddmd-small", "cdg1", "cdg2", "cdg1-small", "cdg2-small"] {
+            let wf = c.get(name).unwrap_or_else(|| panic!("missing '{name}'"));
+            wf.validate().unwrap();
+        }
+        assert!(c.get("nope").is_none());
+    }
+
+    #[test]
+    fn scaled_workflow_shrinks_tasks_and_tx() {
+        let base = cdg2();
+        let s = scaled_workflow(&base, 8, 0.1);
+        s.validate().unwrap();
+        assert_eq!(s.sets.len(), base.sets.len());
+        for (orig, small) in base.sets.iter().zip(&s.sets) {
+            assert_eq!(small.tasks, (orig.tasks / 8).max(1));
+            assert!((small.tx_mean - orig.tx_mean * 0.1).abs() < 1e-9);
+            assert_eq!(small.req, orig.req);
+        }
+        assert!(s.total_tasks() < base.total_tasks());
+    }
+
+    #[test]
+    fn parse_trace_accepts_numbers_and_objects() {
+        let p = parse_trace(r#"{"arrivals": [0, 300.5, {"t": 900, "workload": "cdg2"}]}"#)
+            .unwrap();
+        let ArrivalProcess::Trace(entries) = &p else {
+            panic!("expected trace")
+        };
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0], TraceArrival { at: 0.0, workload: None });
+        assert_eq!(entries[1].at, 300.5);
+        assert_eq!(entries[2].workload.as_deref(), Some("cdg2"));
+        // Bare array form.
+        let p2 = parse_trace("[1, 2, 3]").unwrap();
+        let ArrivalProcess::Trace(e2) = &p2 else { panic!() };
+        assert_eq!(e2.len(), 3);
+        // Rejects negatives and junk.
+        assert!(parse_trace("[-1]").is_err());
+        assert!(parse_trace(r#"[{"workload": "x"}]"#).is_err());
+        assert!(parse_trace(r#"{"x": 1}"#).is_err());
+        assert!(parse_trace(r#"["zero"]"#).is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! Queueing-theoretic reduction of a streamed traffic run: per-workflow
+//! wait and TTX, allocation backlog over time, percentiles, throughput.
+
+use crate::campaign::merge_member_reports;
+use crate::engine::RunReport;
+use crate::metrics::BacklogTrace;
+use crate::resources::ClusterSpec;
+use crate::util::json::{obj, Json};
+use crate::util::stats::Summary;
+
+/// One streamed workflow's queueing lifecycle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowStat {
+    /// Arrival order index.
+    pub index: usize,
+    /// Catalog workload name.
+    pub name: String,
+    /// Arrival time (engine seconds).
+    pub arrival: f64,
+    /// First task placement (start of service).
+    pub first_start: f64,
+    /// Last task finish.
+    pub finish: f64,
+    /// Arrival -> first placement (the queueing delay the paper's
+    /// shared-allocation model is meant to bound).
+    pub wait: f64,
+    /// Arrival -> last finish (per-workflow TTX).
+    pub ttx: f64,
+    pub tasks: usize,
+}
+
+/// Everything measured about one streaming-traffic run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficReport {
+    /// Arrival window the generator used (seconds).
+    pub arrival_window: f64,
+    /// Per-workflow stats, in arrival order.
+    pub workflows: Vec<WorkflowStat>,
+    /// Wait-time distribution across workflows.
+    pub wait: Summary,
+    /// TTX distribution across workflows.
+    pub ttx: Summary,
+    /// First arrival to last finish (campaign clock).
+    pub makespan: f64,
+    pub total_tasks: usize,
+    pub failed_tasks: usize,
+    pub cpu_utilization: f64,
+    pub gpu_utilization: f64,
+    /// Completed tasks per engine second over the makespan.
+    pub task_throughput: f64,
+    /// Completed workflows per engine second over the makespan.
+    pub workflow_throughput: f64,
+    /// Queued-resource step trace (companion of the utilization trace).
+    pub backlog: BacklogTrace,
+    /// Peak queued (tasks, cores, gpus).
+    pub peak_backlog: (u64, u64, u64),
+    /// Time-averaged queued tasks over the whole run.
+    pub mean_backlog_tasks: f64,
+    /// Time-averaged queued tasks over the first half of the arrival
+    /// window.
+    pub backlog_first_half: f64,
+    /// ... and over the second half: the growth signal. A stable system
+    /// holds these roughly equal; past the saturation knee the second
+    /// half is strictly larger and keeps growing with the window.
+    pub backlog_second_half: f64,
+    /// High-water mark of live per-task engine state (in-flight +
+    /// queued) — the streaming-coordinator memory bound.
+    pub peak_live_tasks: usize,
+}
+
+impl TrafficReport {
+    /// Reduce per-member coordinator reports to traffic metrics.
+    /// `names`/`arrivals`/`members` are parallel, in arrival order.
+    pub(crate) fn build(
+        arrival_window: f64,
+        names: Vec<String>,
+        arrivals: Vec<f64>,
+        members: Vec<RunReport>,
+        cluster: &ClusterSpec,
+    ) -> TrafficReport {
+        debug_assert_eq!(names.len(), members.len());
+        debug_assert_eq!(arrivals.len(), members.len());
+        let mut workflows = Vec::with_capacity(members.len());
+        for (i, m) in members.iter().enumerate() {
+            // A degenerate zero-task member starts and finishes at its
+            // own arrival (guards the folds below against producing
+            // non-finite wait/TTX that would poison the summaries).
+            let (first_start, finish) = if m.records.is_empty() {
+                (arrivals[i], arrivals[i])
+            } else {
+                (
+                    m.records
+                        .iter()
+                        .map(|r| r.started)
+                        .fold(f64::INFINITY, f64::min),
+                    m.records.iter().map(|r| r.finished).fold(0.0, f64::max),
+                )
+            };
+            workflows.push(WorkflowStat {
+                index: i,
+                name: names[i].clone(),
+                arrival: arrivals[i],
+                first_start,
+                finish,
+                wait: first_start - arrivals[i],
+                ttx: finish - arrivals[i],
+                tasks: m.records.len(),
+            });
+        }
+        let waits: Vec<f64> = workflows.iter().map(|w| w.wait).collect();
+        let ttxs: Vec<f64> = workflows.iter().map(|w| w.ttx).collect();
+
+        let merged = merge_member_reports("traffic", &members, cluster);
+        let backlog = BacklogTrace::from_records(&merged.records);
+        let peak_backlog = backlog.peak();
+        let mean_backlog_tasks = backlog.mean_tasks();
+        let half = arrival_window / 2.0;
+        let backlog_first_half = backlog.mean_tasks_between(0.0, half);
+        let backlog_second_half = backlog.mean_tasks_between(half, arrival_window);
+        let makespan = merged.makespan;
+        let workflow_throughput = if makespan > 0.0 {
+            workflows.len() as f64 / makespan
+        } else {
+            0.0
+        };
+
+        TrafficReport {
+            arrival_window,
+            wait: Summary::try_of(&waits).unwrap_or_else(Summary::empty),
+            ttx: Summary::try_of(&ttxs).unwrap_or_else(Summary::empty),
+            makespan,
+            total_tasks: merged.records.len(),
+            failed_tasks: merged.failed_tasks,
+            cpu_utilization: merged.cpu_utilization,
+            gpu_utilization: merged.gpu_utilization,
+            task_throughput: merged.throughput,
+            workflow_throughput,
+            backlog,
+            peak_backlog,
+            mean_backlog_tasks,
+            backlog_first_half,
+            backlog_second_half,
+            peak_live_tasks: merged.peak_live_tasks,
+            workflows,
+        }
+    }
+
+    /// Second-half over first-half mean backlog — > 1 means the queue
+    /// was still growing across the arrival window.
+    pub fn backlog_growth(&self) -> f64 {
+        self.backlog_second_half / self.backlog_first_half.max(1e-9)
+    }
+
+    /// Saturation heuristic: the backlog in the second half of the
+    /// arrival window is at least double the first half (with a small
+    /// absolute floor so an idle system never counts as saturated).
+    pub fn is_saturated(&self) -> bool {
+        self.backlog_second_half > 2.0 * self.backlog_first_half.max(0.5)
+    }
+
+    /// Human-readable multi-line summary; `verbose` appends one line
+    /// per workflow.
+    pub fn render(&self, verbose: bool) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "traffic: {} workflows ({} tasks, {} failed) over a {:.0} s arrival window\n",
+            self.workflows.len(),
+            self.total_tasks,
+            self.failed_tasks,
+            self.arrival_window,
+        ));
+        s.push_str(&format!(
+            "  wait    mean {:>8.1} s  p50 {:>8.1}  p95 {:>8.1}  p99 {:>8.1}  max {:>8.1}\n",
+            self.wait.mean, self.wait.p50, self.wait.p95, self.wait.p99, self.wait.max
+        ));
+        s.push_str(&format!(
+            "  TTX     mean {:>8.1} s  p50 {:>8.1}  p95 {:>8.1}  p99 {:>8.1}  max {:>8.1}\n",
+            self.ttx.mean, self.ttx.p50, self.ttx.p95, self.ttx.p99, self.ttx.max
+        ));
+        s.push_str(&format!(
+            "  backlog mean {:.1} tasks  peak {} tasks / {} cores / {} gpus  half-window growth {:.2}x ({})\n",
+            self.mean_backlog_tasks,
+            self.peak_backlog.0,
+            self.peak_backlog.1,
+            self.peak_backlog.2,
+            self.backlog_growth(),
+            if self.is_saturated() { "SATURATED" } else { "bounded" },
+        ));
+        s.push_str(&format!(
+            "  makespan {:.0} s  throughput {:.4} wf/s, {:.3} tasks/s  cpu {:.1}%  gpu {:.1}%\n",
+            self.makespan,
+            self.workflow_throughput,
+            self.task_throughput,
+            self.cpu_utilization * 100.0,
+            self.gpu_utilization * 100.0,
+        ));
+        s.push_str(&format!(
+            "  peak live task state: {} (in-flight + queued; total streamed {})\n",
+            self.peak_live_tasks, self.total_tasks,
+        ));
+        if verbose {
+            for w in &self.workflows {
+                s.push_str(&format!(
+                    "    #{:<4} {:<14} arrival {:>8.1}  wait {:>8.1}  TTX {:>8.1}  ({} tasks)\n",
+                    w.index, w.name, w.arrival, w.wait, w.ttx, w.tasks
+                ));
+            }
+        }
+        s
+    }
+
+    /// Structured export (deterministic field order via `BTreeMap`):
+    /// the same spec and seed serialize bit-identically.
+    pub fn to_json(&self) -> Json {
+        let wfs = self
+            .workflows
+            .iter()
+            .map(|w| {
+                obj([
+                    ("index", Json::from(w.index)),
+                    ("name", Json::from(w.name.clone())),
+                    ("arrival", Json::from(w.arrival)),
+                    ("wait", Json::from(w.wait)),
+                    ("ttx", Json::from(w.ttx)),
+                    ("finish", Json::from(w.finish)),
+                    ("tasks", Json::from(w.tasks)),
+                ])
+            })
+            .collect();
+        let backlog_points = self
+            .backlog
+            .points
+            .iter()
+            .map(|&(t, n, c, g)| {
+                Json::Arr(vec![
+                    Json::from(t),
+                    Json::from(n as f64),
+                    Json::from(c as f64),
+                    Json::from(g as f64),
+                ])
+            })
+            .collect();
+        obj([
+            ("arrival_window", Json::from(self.arrival_window)),
+            ("workflows", Json::Arr(wfs)),
+            ("wait_mean", Json::from(self.wait.mean)),
+            ("wait_p50", Json::from(self.wait.p50)),
+            ("wait_p95", Json::from(self.wait.p95)),
+            ("wait_p99", Json::from(self.wait.p99)),
+            ("ttx_mean", Json::from(self.ttx.mean)),
+            ("ttx_p50", Json::from(self.ttx.p50)),
+            ("ttx_p95", Json::from(self.ttx.p95)),
+            ("ttx_p99", Json::from(self.ttx.p99)),
+            ("makespan", Json::from(self.makespan)),
+            ("total_tasks", Json::from(self.total_tasks)),
+            ("failed_tasks", Json::from(self.failed_tasks)),
+            ("cpu_utilization", Json::from(self.cpu_utilization)),
+            ("gpu_utilization", Json::from(self.gpu_utilization)),
+            ("task_throughput", Json::from(self.task_throughput)),
+            ("workflow_throughput", Json::from(self.workflow_throughput)),
+            ("mean_backlog_tasks", Json::from(self.mean_backlog_tasks)),
+            ("backlog_first_half", Json::from(self.backlog_first_half)),
+            ("backlog_second_half", Json::from(self.backlog_second_half)),
+            ("peak_backlog_tasks", Json::from(self.peak_backlog.0 as f64)),
+            ("peak_backlog_cores", Json::from(self.peak_backlog.1 as f64)),
+            ("peak_backlog_gpus", Json::from(self.peak_backlog.2 as f64)),
+            ("peak_live_tasks", Json::from(self.peak_live_tasks)),
+            ("saturated", Json::from(self.is_saturated())),
+            ("backlog_trace", Json::Arr(backlog_points)),
+        ])
+    }
+}

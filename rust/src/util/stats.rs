@@ -14,6 +14,22 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Like [`Summary::of`] but total: `None` on an empty sample
+    /// instead of panicking (streaming reports may legitimately see
+    /// zero samples, e.g. a traffic window with no completions).
+    pub fn try_of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            None
+        } else {
+            Some(Summary::of(xs))
+        }
+    }
+
+    /// All-zero placeholder (`n == 0`) for rendering empty samples.
+    pub fn empty() -> Summary {
+        Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p95: 0.0, p99: 0.0 }
+    }
+
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "Summary::of on empty sample");
         let n = xs.len();
@@ -91,6 +107,15 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn try_of_handles_empty_samples() {
+        assert_eq!(Summary::try_of(&[]), None);
+        assert_eq!(Summary::try_of(&[2.0]), Some(Summary::of(&[2.0])));
+        let e = Summary::empty();
+        assert_eq!(e.n, 0);
+        assert_eq!(e.mean, 0.0);
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Integration tests for the streaming-traffic subsystem: saturation
+//! behavior (bounded vs growing backlog), determinism, trace-driven
+//! equivalence with explicit `--arrivals` offsets, and the streamed
+//! coordinator's bounded live-state guarantee.
+
+use asyncflow::campaign::Campaign;
+use asyncflow::dag::Dag;
+use asyncflow::engine::EngineConfig;
+use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::resources::{ClusterSpec, ResourceRequest};
+use asyncflow::task::TaskSetSpec;
+use asyncflow::traffic::{
+    run_traffic, ArrivalProcess, Catalog, TraceArrival, TrafficSpec, WorkloadMix,
+};
+
+/// Single-task workflow: 1 core for `tx` seconds, deterministic.
+fn solo(tx: f64) -> Workflow {
+    let mut dag = Dag::new();
+    dag.add_node("A");
+    Workflow {
+        name: "solo".into(),
+        sets: vec![TaskSetSpec::new("A", 1, ResourceRequest::new(1, 0), tx).with_sigma(0.0)],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0])],
+        asynchronous: vec![Pipeline::new("a").stage(&[0])],
+    }
+}
+
+fn catalog() -> Catalog {
+    Catalog::new().insert("solo", solo(10.0))
+}
+
+/// 4 cores, so service capacity is 0.4 solo-workflows per second.
+fn cluster() -> ClusterSpec {
+    ClusterSpec::uniform("t", 1, 4, 0)
+}
+
+fn spec(process: ArrivalProcess, duration: f64, seed: u64) -> TrafficSpec {
+    TrafficSpec {
+        process,
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration,
+        max_workflows: 100_000,
+        seed,
+    }
+}
+
+#[test]
+fn sub_capacity_poisson_keeps_wait_and_backlog_bounded() {
+    // lambda = 0.05/s vs capacity 0.4/s: offered load ~12.5%.
+    let rep = run_traffic(
+        &spec(ArrivalProcess::Poisson { rate: 0.05 }, 4000.0, 1),
+        &catalog(),
+        &cluster(),
+        &EngineConfig::ideal(),
+    )
+    .unwrap();
+    assert!(rep.workflows.len() > 120, "got {} arrivals", rep.workflows.len());
+    assert!(rep.wait.mean < 2.0, "wait mean {} under light load", rep.wait.mean);
+    assert!(rep.wait.p99 < 15.0, "wait p99 {}", rep.wait.p99);
+    assert!(
+        rep.mean_backlog_tasks < 1.0,
+        "mean backlog {} under light load",
+        rep.mean_backlog_tasks
+    );
+    assert!(!rep.is_saturated());
+    // Every workflow completed; TTX >= service time.
+    assert!(rep.workflows.iter().all(|w| w.ttx >= 10.0 - 1e-9));
+    assert_eq!(rep.failed_tasks, 0);
+}
+
+#[test]
+fn super_capacity_poisson_grows_backlog_monotonically() {
+    // lambda = 1.0/s vs capacity 0.4/s: the queue must build for as
+    // long as arrivals continue.
+    let rep = run_traffic(
+        &spec(ArrivalProcess::Poisson { rate: 1.0 }, 400.0, 2),
+        &catalog(),
+        &cluster(),
+        &EngineConfig::ideal(),
+    )
+    .unwrap();
+    assert!(rep.workflows.len() > 300);
+    assert!(
+        rep.backlog_second_half > 2.0 * rep.backlog_first_half,
+        "backlog halves: {} -> {}",
+        rep.backlog_first_half,
+        rep.backlog_second_half
+    );
+    assert!(rep.is_saturated());
+    // Quarter-by-quarter the mean backlog keeps climbing.
+    let q = |a: f64, b: f64| rep.backlog.mean_tasks_between(a, b);
+    assert!(q(100.0, 200.0) > q(0.0, 100.0));
+    assert!(q(200.0, 300.0) > q(100.0, 200.0));
+    assert!(q(300.0, 400.0) > q(200.0, 300.0));
+    // Waits are dominated by queueing, far above the 10 s service time.
+    assert!(rep.wait.mean > 50.0, "wait mean {}", rep.wait.mean);
+    // The run still drains: final backlog is zero and makespan extends
+    // past the arrival window.
+    assert_eq!(rep.backlog.final_tasks(), 0);
+    assert!(rep.makespan > 400.0);
+}
+
+#[test]
+fn rate_sweep_crosses_the_saturation_knee() {
+    // Same window, rising rate: the verdict must flip from bounded to
+    // saturated as the offered load crosses capacity (0.4/s).
+    let verdicts: Vec<bool> = [0.05, 0.2, 0.8, 1.6]
+        .iter()
+        .map(|&rate| {
+            run_traffic(
+                &spec(ArrivalProcess::Poisson { rate }, 500.0, 5),
+                &catalog(),
+                &cluster(),
+                &EngineConfig::ideal(),
+            )
+            .unwrap()
+            .is_saturated()
+        })
+        .collect();
+    assert!(!verdicts[0], "12.5% load must be bounded");
+    assert!(verdicts[2], "200% load must saturate");
+    assert!(verdicts[3], "400% load must saturate");
+}
+
+#[test]
+fn identical_seed_and_rate_reproduce_the_report_bit_for_bit() {
+    let s = spec(ArrivalProcess::Poisson { rate: 0.2 }, 1000.0, 7);
+    let run = || {
+        run_traffic(&s, &catalog(), &cluster(), &EngineConfig::ideal()).unwrap()
+    };
+    let r1 = run();
+    let r2 = run();
+    assert_eq!(r1, r2, "same spec, same report (PartialEq)");
+    assert_eq!(
+        r1.to_json().to_string(),
+        r2.to_json().to_string(),
+        "same spec, bit-identical serialized report"
+    );
+    // A different traffic seed draws different arrivals.
+    let r3 = run_traffic(
+        &spec(ArrivalProcess::Poisson { rate: 0.2 }, 1000.0, 8),
+        &catalog(),
+        &cluster(),
+        &EngineConfig::ideal(),
+    )
+    .unwrap();
+    assert_ne!(r1.to_json().to_string(), r3.to_json().to_string());
+}
+
+#[test]
+fn trace_driven_arrivals_reproduce_explicit_offsets_exactly() {
+    // A trace [0, 300] must be indistinguishable from
+    // `campaign --arrivals 0,300` over the same members.
+    let cfg = EngineConfig::ideal();
+    let trace = ArrivalProcess::Trace(vec![
+        TraceArrival { at: 0.0, workload: Some("solo".into()) },
+        TraceArrival { at: 300.0, workload: Some("solo".into()) },
+    ]);
+    let rep = run_traffic(&spec(trace, 1000.0, 1), &catalog(), &cluster(), &cfg).unwrap();
+    let camp = Campaign::new("c").add(solo(10.0)).add(solo(10.0));
+    let online = camp.simulate_online(&[0.0, 300.0], &cluster(), &cfg).unwrap();
+    assert_eq!(rep.workflows.len(), 2);
+    for (i, w) in rep.workflows.iter().enumerate() {
+        assert!((w.arrival - online.arrivals[i]).abs() < 1e-12);
+        assert!((w.finish - online.members[i].makespan).abs() < 1e-12);
+        assert!((w.ttx - online.member_ttx(i)).abs() < 1e-12);
+    }
+    assert!((rep.makespan - online.campaign.makespan).abs() < 1e-12);
+}
+
+#[test]
+fn trace_file_round_trips_through_the_parser() {
+    let dir = std::env::temp_dir().join("asyncflow_traffic_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("arrivals.json");
+    std::fs::write(
+        &path,
+        r#"{"arrivals": [0, 50, {"t": 125.5, "workload": "solo"}]}"#,
+    )
+    .unwrap();
+    let process = asyncflow::traffic::load_trace_file(path.to_str().unwrap()).unwrap();
+    let rep = run_traffic(
+        &spec(process, 1000.0, 1),
+        &catalog(),
+        &cluster(),
+        &EngineConfig::ideal(),
+    )
+    .unwrap();
+    assert_eq!(rep.workflows.len(), 3);
+    assert_eq!(rep.workflows[0].arrival, 0.0);
+    assert_eq!(rep.workflows[1].arrival, 50.0);
+    assert_eq!(rep.workflows[2].arrival, 125.5);
+    assert_eq!(rep.workflows[2].name, "solo");
+}
+
+#[test]
+fn streamed_1k_workflows_keep_live_state_bounded() {
+    // 1000 workflows, sub-capacity deterministic arrivals: the
+    // coordinator must recycle per-task state, keeping the live
+    // high-water mark at in-flight + queued — not the total stream.
+    let rep = run_traffic(
+        &spec(ArrivalProcess::Deterministic { interval: 5.0 }, 5000.0, 3),
+        &catalog(),
+        &cluster(),
+        &EngineConfig::ideal(),
+    )
+    .unwrap();
+    assert_eq!(rep.workflows.len(), 1000);
+    assert_eq!(rep.total_tasks, 1000);
+    assert!(
+        rep.peak_live_tasks <= 8,
+        "peak live task state {} must stay near in-flight + queued, not 1000",
+        rep.peak_live_tasks
+    );
+    // Sub-capacity: essentially no queueing.
+    assert!(rep.wait.p99 < 1.0);
+    assert!(!rep.is_saturated());
+}
+
+#[test]
+fn mix_ratio_shapes_the_sampled_stream() {
+    let cat = Catalog::new()
+        .insert("fast", solo(5.0))
+        .insert("slow", solo(20.0));
+    let s = TrafficSpec {
+        process: ArrivalProcess::Poisson { rate: 0.1 },
+        mix: WorkloadMix::parse("fast:3,slow:1").unwrap(),
+        duration: 4000.0,
+        max_workflows: 100_000,
+        seed: 11,
+    };
+    let rep = run_traffic(&s, &cat, &cluster(), &EngineConfig::ideal()).unwrap();
+    let fast = rep.workflows.iter().filter(|w| w.name == "fast").count();
+    let slow = rep.workflows.len() - fast;
+    assert!(fast > slow, "3:1 mix must favor 'fast' ({fast} vs {slow})");
+    let frac = fast as f64 / rep.workflows.len() as f64;
+    assert!((0.55..=0.95).contains(&frac), "fast fraction {frac}");
+}
+
+#[test]
+fn unknown_workload_and_empty_windows_error() {
+    let err = run_traffic(
+        &TrafficSpec {
+            process: ArrivalProcess::Poisson { rate: 0.1 },
+            mix: WorkloadMix::parse("nope").unwrap(),
+            duration: 1000.0,
+            max_workflows: 10,
+            seed: 1,
+        },
+        &catalog(),
+        &cluster(),
+        &EngineConfig::ideal(),
+    );
+    assert!(err.is_err(), "unknown workload must error");
+    let err = run_traffic(
+        &spec(ArrivalProcess::Trace(vec![]), 1000.0, 1),
+        &catalog(),
+        &cluster(),
+        &EngineConfig::ideal(),
+    );
+    assert!(err.is_err(), "an empty arrival set must error");
+}
