@@ -41,6 +41,7 @@ fn main() {
         duration: 1e9, // the cap, not the window, bounds this run
         max_workflows: 1000,
         seed: 1,
+        plan: None,
     };
     let probe = run_traffic(&spec, &catalog, &cluster, &cfg).unwrap();
     let n_wf = probe.workflows.len();

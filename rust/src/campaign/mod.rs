@@ -142,6 +142,28 @@ impl Campaign {
     /// driver on one shared pilot agent, member `i` arriving at
     /// `arrivals[i]` engine-seconds (so workflows can join a busy
     /// allocation mid-run). Requires one arrival offset per member.
+    ///
+    /// # Examples
+    ///
+    /// Two paper workflows share one allocation; the second arrives
+    /// 300 s into the first one's run:
+    ///
+    /// ```
+    /// use asyncflow::campaign::Campaign;
+    /// use asyncflow::engine::EngineConfig;
+    /// use asyncflow::resources::ClusterSpec;
+    /// use asyncflow::workflows::{cdg1, cdg2};
+    ///
+    /// let camp = Campaign::new("mixed").add(cdg1()).add(cdg2());
+    /// let rep = camp
+    ///     .simulate_online(&[0.0, 300.0], &ClusterSpec::summit_8gpu(), &EngineConfig::ideal())
+    ///     .unwrap();
+    /// assert_eq!(rep.members.len(), 2);
+    /// // Member TTX is measured from each member's own arrival; the
+    /// // campaign TTX spans first arrival to last finish.
+    /// assert!(rep.member_ttx(1) > 0.0);
+    /// assert!(rep.campaign_ttx() >= rep.member_ttx(0));
+    /// ```
     pub fn simulate_online(
         &self,
         arrivals: &[f64],
@@ -205,6 +227,13 @@ pub(crate) fn merge_member_reports(
     members: &[RunReport],
     cluster: &ClusterSpec,
 ) -> RunReport {
+    // The coordinator stamps every member with the run's full capacity
+    // timeline; merged utilization must integrate against it (elastic
+    // runs), falling back to the fixed cluster for empty member sets.
+    let capacity = members
+        .first()
+        .map(|m| m.capacity.clone())
+        .unwrap_or_else(|| crate::metrics::CapacityTimeline::of_cluster(cluster));
     let mut records = Vec::with_capacity(members.iter().map(|m| m.records.len()).sum());
     let mut branch_off = 0usize;
     let mut pipe_off = 0usize;
@@ -226,8 +255,13 @@ pub(crate) fn merge_member_reports(
         pipe_off += n_pipes;
     }
     let failed: usize = members.iter().map(|m| m.failed_tasks).sum();
-    let mut campaign =
-        RunReport::from_records(name, ExecutionMode::Asynchronous, records, cluster, failed);
+    let mut campaign = RunReport::from_records_capacity(
+        name,
+        ExecutionMode::Asynchronous,
+        records,
+        capacity,
+        failed,
+    );
     campaign.sched_rounds = members.first().map_or(0, |m| m.sched_rounds);
     campaign.sched_wall = members.first().map_or(Duration::ZERO, |m| m.sched_wall);
     campaign.peak_live_tasks = members.first().map_or(0, |m| m.peak_live_tasks);

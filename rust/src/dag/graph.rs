@@ -9,9 +9,9 @@ use crate::error::{Error, Result};
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Dag {
     names: Vec<String>,
-    /// children[v] = nodes depending on v.
+    /// `children[v]` = nodes depending on v.
     children: Vec<Vec<usize>>,
-    /// parents[v] = dependencies of v.
+    /// `parents[v]` = dependencies of v.
     parents: Vec<Vec<usize>>,
 }
 

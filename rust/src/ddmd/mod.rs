@@ -9,7 +9,8 @@
 //! Simulation sets stagger on resource contention, yielding Fig. 3a's
 //! three independent chains and WLA = 1 on the Summit allocation).
 //!
-//! For *real* execution ([`mlexec::MlExecutor`]) the four task bodies
+//! For *real* execution (`mlexec::MlExecutor`, behind the `pjrt`
+//! feature) the four task bodies
 //! invoke the AOT-compiled JAX/Pallas artifacts (MD, featurization,
 //! autoencoder training/inference) through the PJRT runtime.
 

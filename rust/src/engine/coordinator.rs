@@ -39,8 +39,9 @@ use super::{EngineConfig, ExecutionMode, RunReport};
 use crate::entk::Workflow;
 use crate::error::{Error, Result};
 use crate::exec::{Executor, RunningTask};
-use crate::pilot::Agent;
-use crate::resources::ClusterSpec;
+use crate::metrics::CapacityTimeline;
+use crate::pilot::{Agent, AutoscalePolicy, ResizeEvent, ResourcePlan};
+use crate::resources::{ClusterSpec, NodeSpec};
 use crate::task::TaskSpec;
 
 /// A registered workflow whose driver has not been materialized yet:
@@ -69,6 +70,9 @@ pub struct Coordinator {
     pending: Vec<PendingArrival>,
     next_set_stream: u64,
     next_pipeline: u64,
+    /// Elastic allocation plan (timed resizes + autoscaler), applied
+    /// inside the event loop.
+    plan: Option<ResourcePlan>,
 }
 
 impl Coordinator {
@@ -79,7 +83,24 @@ impl Coordinator {
             pending: Vec::new(),
             next_set_stream: 0,
             next_pipeline: 0,
+            plan: None,
         }
+    }
+
+    /// Attach an elastic [`ResourcePlan`]: timed grow/drain events and
+    /// an optional backlog-driven autoscaler, applied to the shared
+    /// pilot while drivers run. Every change to the *offered* capacity
+    /// is recorded on the run's [`CapacityTimeline`] (see
+    /// [`RunReport::capacity`]), which utilization metrics integrate
+    /// against: grows appear at the instant they apply; a graceful
+    /// drain sheds a node's free cores immediately and its busy cores
+    /// as the running work releases them. Workflow feasibility
+    /// ([`ClusterSpec::check`]) is still validated against the *initial*
+    /// cluster at registration time.
+    pub fn set_resource_plan(&mut self, plan: ResourcePlan) -> Result<()> {
+        plan.validate()?;
+        self.plan = Some(plan);
+        Ok(())
     }
 
     /// Register a workflow whose roots become schedulable at `arrival`
@@ -131,6 +152,39 @@ impl Coordinator {
     /// high-water mark are global and repeated on every report.
     pub fn run(mut self, executor: &mut dyn Executor) -> Result<Vec<RunReport>> {
         let mut agent = Agent::new(&self.cluster, self.cfg.policy);
+        let mut capacity = CapacityTimeline::of_cluster(&self.cluster);
+        // Elastic plan state: timed events in time order, the autoscaler
+        // and its next evaluation time, and the node shape growth uses.
+        let plan = self.plan.take();
+        let (resize_events, autoscale, grow_node): (
+            Vec<ResizeEvent>,
+            Option<AutoscalePolicy>,
+            Option<NodeSpec>,
+        ) = match &plan {
+            Some(p) => {
+                let mut evs = p.events.clone();
+                evs.sort_by(|a, b| a.at.total_cmp(&b.at));
+                let node = p.node.or_else(|| self.cluster.nodes.first().copied());
+                if node.is_none()
+                    && (p.autoscale.is_some() || evs.iter().any(|e| e.delta > 0))
+                {
+                    return Err(Error::Config(
+                        "resource plan: no node shape to grow by \
+                         (empty cluster and no plan.node)"
+                            .into(),
+                    ));
+                }
+                (evs, p.autoscale.clone(), node)
+            }
+            None => (Vec::new(), None, None),
+        };
+        let mut next_resize = 0usize;
+        let mut next_check: Option<f64> = autoscale.as_ref().map(|p| p.interval);
+        // Consecutive no-op autoscaler evaluations with nothing running:
+        // past a small bound the tick stops being scheduled, so a queue
+        // the autoscaler cannot help (max_nodes reached, unfit shape)
+        // surfaces as the deadlock error instead of ticking forever.
+        let mut stalled_checks = 0u32;
         let n_members = self.pending.len();
         // Per-slot live drivers / finished reports.
         let mut drivers: Vec<Option<WorkflowDriver>> = Vec::new();
@@ -167,6 +221,54 @@ impl Coordinator {
 
         loop {
             let now = executor.now();
+
+            // 0. Elasticity: apply every timed resize that is due, then
+            // at most one (catch-up) autoscaler evaluation. The timeline
+            // records *offered* capacity (free + busy): a grow shows up
+            // at the instant it applies, a graceful drain sheds a node's
+            // free cores now and its busy cores only as the work on them
+            // releases (step 4) — so cores in use never exceed the
+            // recorded capacity. Growth can unblock queued work, so it
+            // re-arms the scheduler.
+            while next_resize < resize_events.len()
+                && resize_events[next_resize].at <= now + 1e-12
+            {
+                let ev = resize_events[next_resize];
+                next_resize += 1;
+                if ev.delta > 0 {
+                    agent.grow(ev.delta as usize, grow_node.expect("validated above"));
+                    sched_dirty = true;
+                } else {
+                    agent.drain(ev.delta.unsigned_abs() as usize);
+                }
+                record_offered(&mut capacity, &agent, now);
+            }
+            if let (Some(p), Some(t)) = (&autoscale, next_check) {
+                if t <= now + 1e-12 {
+                    // One evaluation per wakeup; the next check lands on
+                    // the first interval multiple strictly after `now`.
+                    let missed = ((now - t) / p.interval).floor().max(0.0) + 1.0;
+                    next_check = Some(t + missed * p.interval);
+                    let delta = autoscale_delta(p, &agent, in_flight);
+                    let acted = if delta > 0 {
+                        agent.grow(delta as usize, grow_node.expect("validated above"));
+                        sched_dirty = true;
+                        true
+                    } else if delta < 0 {
+                        agent.drain(delta.unsigned_abs() as usize) > 0
+                    } else {
+                        false
+                    };
+                    if acted {
+                        record_offered(&mut capacity, &agent, now);
+                    }
+                    if acted || in_flight > 0 {
+                        stalled_checks = 0;
+                    } else {
+                        stalled_checks += 1;
+                    }
+                }
+            }
 
             // 1. Materialize every registered workflow whose arrival is
             // due; its roots release in step 2 below.
@@ -218,6 +320,10 @@ impl Coordinator {
                     live_uids += 1;
                     peak_live = peak_live.max(live_uids);
                     sched_dirty = true;
+                    // Fresh work re-arms a parked autoscaler: the rescue
+                    // path (grow when tasks queue with nothing running)
+                    // must get its chance before the deadlock check.
+                    stalled_checks = 0;
                 }
             }
 
@@ -260,6 +366,19 @@ impl Coordinator {
                 .fold(f64::INFINITY, f64::min);
             if let Some(p) = pending.peek() {
                 next_deferred = next_deferred.min(p.arrival);
+            }
+            // Unapplied timed resizes are wake-ups too (a future grow
+            // may be the only thing that can serve a starved queue).
+            if next_resize < resize_events.len() {
+                next_deferred = next_deferred.min(resize_events[next_resize].at);
+            }
+            // The autoscaler only ticks while there is work its decision
+            // could affect, and parks after repeated no-op evaluations
+            // with nothing running (see `stalled_checks`).
+            if let Some(t) = next_check {
+                if (in_flight > 0 || agent.queue_len() > 0) && stalled_checks < 3 {
+                    next_deferred = next_deferred.min(t);
+                }
             }
             if in_flight > 0 {
                 match executor.peek_next_completion() {
@@ -319,12 +438,16 @@ impl Coordinator {
                     // state.
                     if drivers[di].as_ref().is_some_and(|d| d.is_done()) {
                         let d = drivers[di].take().expect("checked is_some");
-                        done[di] = Some(d.into_report(&self.cluster));
+                        done[di] = Some(d.into_report(&capacity));
                         if let Ok(pos) = live_slots.binary_search(&di) {
                             live_slots.remove(pos);
                         }
                     }
                 }
+                // Graceful shrink: resources this batch released on
+                // draining nodes left the allocation at this instant —
+                // a no-op compare for ordinary completions.
+                record_offered(&mut capacity, &agent, executor.now());
             } else if next_deferred.is_finite() {
                 // Nothing running; sleep (real) or fast-forward (virtual)
                 // to the next activation — e.g. a workflow yet to arrive.
@@ -344,7 +467,7 @@ impl Coordinator {
         for di in 0..drivers.len() {
             if let Some(d) = drivers[di].take() {
                 debug_assert!(d.is_done());
-                done[di] = Some(d.into_report(&self.cluster));
+                done[di] = Some(d.into_report(&capacity));
             }
         }
         let mut reports: Vec<RunReport> = Vec::with_capacity(n_members);
@@ -355,9 +478,56 @@ impl Coordinator {
             r.sched_rounds = sched_rounds;
             r.sched_wall = sched_wall;
             r.peak_live_tasks = peak_live;
+            // The full (final) timeline replaces each member's
+            // fold-time snapshot: member utilization was already
+            // integrated over the member's own window, for which the
+            // snapshot was complete, and downstream merges (campaign /
+            // traffic reports) need the whole run's capacity history.
+            r.capacity = capacity.clone();
         }
         Ok(reports)
     }
+}
+
+/// Append a point to the offered-capacity timeline iff the agent's
+/// offered capacity (free + busy; see [`Agent::offered`]) moved since
+/// the last recorded point.
+fn record_offered(capacity: &mut CapacityTimeline, agent: &Agent, now: f64) {
+    let (c, g) = agent.offered();
+    if (c, g) != capacity.final_capacity() {
+        capacity.record(now, c, g);
+    }
+}
+
+/// One autoscaler evaluation: positive = nodes to add, negative = nodes
+/// to drain, 0 = leave the allocation alone. Pure decision logic —
+/// deterministic given the agent state.
+fn autoscale_delta(p: &AutoscalePolicy, agent: &Agent, in_flight: usize) -> i64 {
+    let (cap_c, cap_g) = agent.capacity();
+    let nodes = agent.schedulable_nodes();
+    let queued = agent.queue_len();
+    let (q_c, q_g) = agent.queued_demand();
+    // Backlog pressure: queued demand exceeds the threshold fraction of
+    // capacity — or tasks are queued with nothing running at all (the
+    // rescue case after a deep shrink left the queue unservable).
+    let pressured = q_c as f64 > p.up_backlog * cap_c as f64
+        || q_g as f64 > p.up_backlog * cap_g as f64
+        || (queued > 0 && in_flight == 0);
+    if pressured {
+        if nodes < p.max_nodes {
+            return p.step.min(p.max_nodes - nodes) as i64;
+        }
+        return 0;
+    }
+    if queued == 0 && nodes > p.min_nodes {
+        let (free_c, free_g) = agent.free();
+        if free_c as f64 >= p.down_idle * cap_c as f64
+            && free_g as f64 >= p.down_idle * cap_g as f64
+        {
+            return -(p.step.min(nodes - p.min_nodes) as i64);
+        }
+    }
+    0
 }
 
 #[cfg(test)]
@@ -461,6 +631,119 @@ mod tests {
         assert!((reports[1].records[0].submitted - 0.0).abs() < 1e-9);
         assert!((reports[0].makespan - 110.0).abs() < 1e-9);
         assert!((reports[1].makespan - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timed_grow_unblocks_a_starved_queue() {
+        // One 1-core node, two 10 s tasks at t = 0: the second is
+        // queued. A +1-node grow at t = 5 lets it start right then.
+        let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+        let cfg = EngineConfig::ideal();
+        let mut coord = Coordinator::new(&cluster, &cfg);
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        coord
+            .set_resource_plan(crate::pilot::ResourcePlan::new().resize(5.0, 1))
+            .unwrap();
+        let mut ex = VirtualExecutor::new();
+        let reports = coord.run(&mut ex).unwrap();
+        assert!((reports[0].makespan - 10.0).abs() < 1e-9);
+        assert!(
+            (reports[1].makespan - 15.0).abs() < 1e-9,
+            "queued task must start on the grown node at t = 5, got {}",
+            reports[1].makespan
+        );
+        // The capacity timeline carries the grow.
+        assert_eq!(reports[0].capacity.points, vec![(0.0, 1, 0), (5.0, 2, 0)]);
+        assert_eq!(reports[1].capacity, reports[0].capacity);
+    }
+
+    #[test]
+    fn shrink_is_graceful_and_future_work_avoids_drained_nodes() {
+        // Two 1-core nodes, two tasks running from t = 0; a drain at
+        // t = 2 marks one node (both equally busy -> the newest). Both
+        // tasks still finish at 10; a third workflow arriving at t = 3
+        // must wait for the *surviving* core and finish at 20.
+        let cluster = ClusterSpec::uniform("t", 2, 1, 0);
+        let cfg = EngineConfig::ideal();
+        let mut coord = Coordinator::new(&cluster, &cfg);
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 3.0).unwrap();
+        coord
+            .set_resource_plan(crate::pilot::ResourcePlan::new().resize(2.0, -1))
+            .unwrap();
+        let mut ex = VirtualExecutor::new();
+        let reports = coord.run(&mut ex).unwrap();
+        assert!((reports[0].makespan - 10.0).abs() < 1e-9, "running work finishes");
+        assert!((reports[1].makespan - 10.0).abs() < 1e-9, "running work finishes");
+        assert!(
+            (reports[2].makespan - 20.0).abs() < 1e-9,
+            "late arrival waits for the surviving core, got {}",
+            reports[2].makespan
+        );
+        // Offered capacity: the drained node was fully busy at t = 2,
+        // so its core leaves the timeline when its task releases it at
+        // t = 10 — never before the work that occupied it finished.
+        assert_eq!(reports[0].capacity.points, vec![(0.0, 2, 0), (10.0, 1, 0)]);
+        // Utilization stays a true fraction even though both initial
+        // tasks keep running past the drain: offered core-seconds over
+        // [0, 10] are 2x10 (the busy drained core still counts until
+        // released), so in-use never exceeds offered.
+        for r in &reports {
+            let (cu, _) = r.trace.mean_utilization();
+            assert!(cu <= 1.0 + 1e-9, "utilization must stay in [0,1], got {cu}");
+        }
+    }
+
+    #[test]
+    fn draining_everything_with_queued_work_is_a_deadlock() {
+        // One node, one running + one queued task; draining the only
+        // node at t = 1 leaves the queued task unservable forever.
+        let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+        let cfg = EngineConfig::ideal();
+        let mut coord = Coordinator::new(&cluster, &cfg);
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        coord
+            .set_resource_plan(crate::pilot::ResourcePlan::new().resize(1.0, -1))
+            .unwrap();
+        let mut ex = VirtualExecutor::new();
+        let err = coord.run(&mut ex);
+        assert!(err.is_err(), "shrink below queued demand must surface as an error");
+    }
+
+    #[test]
+    fn autoscaler_rescues_a_starved_queue_and_records_capacity() {
+        // One 1-core node, three 10 s tasks at t = 0. The autoscaler
+        // (interval 5, step 1, max 3) sees the backlog and grows; the
+        // campaign finishes far earlier than the serial 30 s.
+        let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+        let cfg = EngineConfig::ideal();
+        let mut coord = Coordinator::new(&cluster, &cfg);
+        for _ in 0..3 {
+            coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        }
+        coord
+            .set_resource_plan(crate::pilot::ResourcePlan::new().with_autoscale(
+                crate::pilot::AutoscalePolicy {
+                    interval: 5.0,
+                    min_nodes: 1,
+                    max_nodes: 3,
+                    step: 1,
+                    ..Default::default()
+                },
+            ))
+            .unwrap();
+        let mut ex = VirtualExecutor::new();
+        let reports = coord.run(&mut ex).unwrap();
+        let last = reports.iter().map(|r| r.makespan).fold(0.0f64, f64::max);
+        assert!(
+            last < 30.0 - 1e-9,
+            "autoscaler must relieve the 1-core serialization, got {last}"
+        );
+        assert!(!reports[0].capacity.is_constant(), "growth must be recorded");
+        assert!(reports[0].capacity.peak().0 >= 2);
     }
 
     #[test]

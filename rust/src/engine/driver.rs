@@ -32,8 +32,7 @@ use super::plan::{compile, ExecutionMode, JobSet};
 use super::{EngineConfig, RunReport};
 use crate::entk::Workflow;
 use crate::error::Result;
-use crate::metrics::TaskRecord;
-use crate::resources::ClusterSpec;
+use crate::metrics::{CapacityTimeline, TaskRecord};
 use crate::task::TaskSpec;
 use crate::util::rng::Rng;
 
@@ -330,14 +329,17 @@ impl WorkflowDriver {
         }
     }
 
-    /// Finalize into a per-workflow [`RunReport`]. Scheduler accounting
-    /// is coordinator-global and filled in by the caller.
-    pub fn into_report(self, cluster: &ClusterSpec) -> RunReport {
-        RunReport::from_records(
+    /// Finalize into a per-workflow [`RunReport`] against the capacity
+    /// timeline observed so far (complete up to this driver's last
+    /// finish, which is all its utilization integrates over).
+    /// Scheduler accounting is coordinator-global and filled in by the
+    /// caller.
+    pub fn into_report(self, capacity: &CapacityTimeline) -> RunReport {
+        RunReport::from_records_capacity(
             self.wf.name.clone(),
             self.mode,
             self.records,
-            cluster,
+            capacity.clone(),
             self.failed_tasks,
         )
     }

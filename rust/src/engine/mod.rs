@@ -18,7 +18,26 @@
 //! is one workflow's state machine, and a [`Coordinator`] multiplexes
 //! any number of drivers — including workflows arriving mid-run — over
 //! one shared pilot agent. [`run`] is the single-workflow convenience
-//! wrapper (one coordinator, one driver).
+//! wrapper (one coordinator, one driver). See `docs/ARCHITECTURE.md`
+//! for the full event flow.
+//!
+//! # Examples
+//!
+//! Simulate the paper's DeepDriveMD workflow in both modes and measure
+//! the improvement asynchronous execution buys (Eqn. 5):
+//!
+//! ```
+//! use asyncflow::ddmd::{ddmd_workflow, DdmdConfig};
+//! use asyncflow::engine::{simulate, ExecutionMode};
+//! use asyncflow::resources::ClusterSpec;
+//!
+//! let wf = ddmd_workflow(&DdmdConfig::paper());
+//! let cluster = ClusterSpec::summit_paper();
+//! let seq = simulate(&wf, &cluster, ExecutionMode::Sequential);
+//! let asy = simulate(&wf, &cluster, ExecutionMode::Asynchronous);
+//! assert!(asy.makespan < seq.makespan);
+//! assert!(asy.improvement_over(&seq) > 0.0);
+//! ```
 
 mod coordinator;
 mod driver;
@@ -33,7 +52,9 @@ use std::time::Duration;
 use crate::entk::Workflow;
 use crate::error::Result;
 use crate::exec::Executor;
-use crate::metrics::{measured_doa_res, throughput, TaskRecord, UtilizationTrace};
+use crate::metrics::{
+    measured_doa_res, throughput, CapacityTimeline, TaskRecord, UtilizationTrace,
+};
 use crate::pilot::Policy;
 use crate::resources::ClusterSpec;
 use crate::sim::VirtualExecutor;
@@ -101,6 +122,14 @@ pub struct RunReport {
     /// member report, like `sched_rounds`); streamed campaigns keep
     /// this far below the total task count.
     pub peak_live_tasks: usize,
+    /// Offered-capacity timeline of the run (free + in-use resources).
+    /// Constant for fixed allocations; elastic runs (a
+    /// [`ResourcePlan`](crate::pilot::ResourcePlan) was active) carry
+    /// one point per change — grows when applied, drained cores when
+    /// the work occupying them released. Like `sched_rounds`, this is
+    /// coordinator-global and repeated on every member report;
+    /// utilization figures integrate against it.
+    pub capacity: CapacityTimeline,
 }
 
 impl RunReport {
@@ -122,8 +151,27 @@ impl RunReport {
         cluster: &ClusterSpec,
         failed_tasks: usize,
     ) -> RunReport {
+        Self::from_records_capacity(
+            workflow,
+            mode,
+            records,
+            CapacityTimeline::of_cluster(cluster),
+            failed_tasks,
+        )
+    }
+
+    /// [`from_records`](Self::from_records) against a time-varying
+    /// capacity (elastic allocations): utilization integrates against
+    /// the timeline, not a constant core/GPU count.
+    pub fn from_records_capacity(
+        workflow: impl Into<String>,
+        mode: ExecutionMode,
+        records: Vec<TaskRecord>,
+        capacity: CapacityTimeline,
+        failed_tasks: usize,
+    ) -> RunReport {
         let makespan = records.iter().map(|r| r.finished).fold(0.0, f64::max);
-        let trace = UtilizationTrace::from_records(&records, cluster);
+        let trace = UtilizationTrace::from_records_capacity(&records, capacity.clone());
         let (cpu_u, gpu_u) = trace.mean_utilization();
         RunReport {
             workflow: workflow.into(),
@@ -137,6 +185,7 @@ impl RunReport {
             sched_rounds: 0,
             sched_wall: Duration::ZERO,
             peak_live_tasks: 0,
+            capacity,
             records,
             trace,
         }

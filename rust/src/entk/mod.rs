@@ -55,7 +55,7 @@ pub struct Workflow {
     pub name: String,
     /// Task sets; indices are shared with `dag` nodes.
     pub sets: Vec<TaskSetSpec>,
-    /// Set-level dependency graph (node i <-> sets[i]).
+    /// Set-level dependency graph (node i <-> `sets[i]`).
     pub dag: Dag,
     /// Sequential realization (paper's baseline): usually one pipeline.
     pub sequential: Vec<Pipeline>,

@@ -5,8 +5,9 @@
 //! - [`StressExecutor`] — real threads + wall clock, tasks sleep or spin
 //!   for their (scaled) TX: validates the coordinator under true
 //!   concurrency, like the paper's `stress` executable;
-//! - the ML executor in [`crate::ddmd::mlexec`] — real threads whose
-//!   task bodies call the PJRT runtime (DeepDriveMD task semantics).
+//! - the ML executor in `crate::ddmd::mlexec` (behind the `pjrt`
+//!   feature) — real threads whose task bodies call the PJRT runtime
+//!   (DeepDriveMD task semantics).
 
 mod stress;
 

@@ -71,8 +71,9 @@ pub mod prelude {
     pub use crate::engine::{simulate, ExecutionMode, RunReport};
     pub use crate::entk::{Pipeline, Stage, Workflow};
     pub use crate::error::{Error, Result};
-    pub use crate::metrics::UtilizationTrace;
+    pub use crate::metrics::{CapacityTimeline, UtilizationTrace};
     pub use crate::model::Prediction;
-    pub use crate::resources::{ClusterSpec, ResourceRequest};
+    pub use crate::pilot::{AutoscalePolicy, ResourcePlan};
+    pub use crate::resources::{ClusterSpec, NodeSpec, ResourceRequest};
     pub use crate::task::{TaskSetSpec, TaskSpec};
 }

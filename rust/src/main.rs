@@ -25,7 +25,7 @@ use asyncflow::util::cli::Args;
 use asyncflow::workflows::{cdg1, cdg2};
 
 fn main() {
-    let args = match Args::from_env(&["verbose", "ascii"]) {
+    let args = match Args::from_env(&["verbose", "ascii", "autoscale"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -70,11 +70,17 @@ subcommands:
            [--interval S] [--trace F]    fixed-interval / trace-driven)
            [--sweep 0.005,0.01,0.02]     arrivals drawn from a weighted
            [--max-workflows N]           workload mix; reports wait/TTX
-                                         percentiles, backlog, and the
-                                         saturation verdict. --sweep
-                                         runs several rates to find the
-                                         knee. Catalog: ddmd ddmd-small
-                                         cdg1 cdg2 cdg1-small cdg2-small
+           [--resize T:+N,T:-N]          percentiles, backlog, and the
+           [--autoscale]                 saturation verdict. --sweep
+           [--autoscale-min N]           runs several rates to find the
+           [--autoscale-max N]           knee. --resize grows/drains
+           [--autoscale-interval S]      pilot nodes at the given times
+           [--autoscale-step N]          (drains are graceful: running
+                                         tasks finish first); --autoscale
+                                         sizes the allocation from the
+                                         backlog every interval seconds.
+                                         Catalog: ddmd ddmd-small cdg1
+                                         cdg2 cdg1-small cdg2-small
 
 common options:
   --cluster summit_paper|summit_706|summit_8gpu|local_small
@@ -281,6 +287,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
 }
 
 fn cmd_traffic(args: &Args) -> Result<()> {
+    use asyncflow::pilot::{AutoscalePolicy, ResourcePlan};
     use asyncflow::traffic::{
         load_trace_file, run_traffic, ArrivalProcess, Catalog, TrafficSpec, WorkloadMix,
     };
@@ -291,12 +298,33 @@ fn cmd_traffic(args: &Args) -> Result<()> {
     let mix = WorkloadMix::parse(args.get_or("mix", "ddmd:2,cdg2:1"))?;
     let max_workflows = args.get_usize("max-workflows", 10_000)?;
     let catalog = Catalog::builtin();
+
+    // Elastic allocation: timed --resize events and/or the
+    // backlog-driven --autoscale policy (nodes added have the shape of
+    // the cluster's first node).
+    let mut plan: Option<ResourcePlan> = match args.get("resize") {
+        Some(spec) => Some(ResourcePlan::parse_resize(spec)?),
+        None => None,
+    };
+    if args.flag("autoscale") {
+        let defaults = AutoscalePolicy::default();
+        let policy = AutoscalePolicy {
+            interval: args.get_f64("autoscale-interval", defaults.interval)?,
+            min_nodes: args.get_usize("autoscale-min", 1)?,
+            max_nodes: args.get_usize("autoscale-max", cluster.nodes.len().max(1) * 2)?,
+            step: args.get_usize("autoscale-step", defaults.step)?,
+            ..defaults
+        };
+        plan = Some(plan.unwrap_or_default().with_autoscale(policy));
+    }
+
     let spec_for = |process: ArrivalProcess| TrafficSpec {
         process,
         mix: mix.clone(),
         duration,
         max_workflows,
         seed,
+        plan: plan.clone(),
     };
 
     // Rate sweep: one run per rate, tabulated to expose the saturation
@@ -358,7 +386,13 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         std::fs::write(&bp, rep.backlog.to_csv())?;
         let jp = base.join("traffic_report.json");
         std::fs::write(&jp, rep.to_json().to_string_pretty())?;
-        println!("wrote {} and {}", bp.display(), jp.display());
+        if !rep.capacity.is_constant() {
+            let cp = base.join("traffic_capacity.csv");
+            std::fs::write(&cp, rep.capacity.to_csv())?;
+            println!("wrote {}, {} and {}", bp.display(), jp.display(), cp.display());
+        } else {
+            println!("wrote {} and {}", bp.display(), jp.display());
+        }
     }
     Ok(())
 }

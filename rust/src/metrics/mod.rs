@@ -36,19 +36,139 @@ impl TaskRecord {
     }
 }
 
+/// Step-function *offered capacity* over time: `(t, cores, gpus)`
+/// change points, non-decreasing in time. Fixed allocations have a
+/// single point at t = 0; elastic runs append a point whenever the
+/// offered capacity moves — grows at the instant they apply, graceful
+/// drains as a node's free cores leave immediately and its busy cores
+/// leave when the work on them releases. Because resources in use are
+/// always part of the offered capacity, utilization integrated against
+/// this timeline stays in [0, 1]; a shrink that removes idle nodes
+/// *raises* reported utilization instead of silently diluting it
+/// against capacity that no longer exists.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityTimeline {
+    /// `(time, offered cores, offered gpus)`; the first point carries
+    /// the initial capacity (t = 0 in practice).
+    pub points: Vec<(f64, u64, u64)>,
+}
+
+impl CapacityTimeline {
+    /// A capacity that never changes.
+    pub fn constant(cores: u64, gpus: u64) -> CapacityTimeline {
+        CapacityTimeline { points: vec![(0.0, cores, gpus)] }
+    }
+
+    /// The (constant) capacity of a fixed allocation.
+    pub fn of_cluster(cluster: &ClusterSpec) -> CapacityTimeline {
+        CapacityTimeline::constant(cluster.total_cores(), cluster.total_gpus())
+    }
+
+    /// Append a change point at `t` (monotone); a point at the exact
+    /// same instant overwrites the previous one (e.g. two resize events
+    /// applied in the same engine step).
+    pub fn record(&mut self, t: f64, cores: u64, gpus: u64) {
+        match self.points.last_mut() {
+            Some(last) if last.0 == t => {
+                last.1 = cores;
+                last.2 = gpus;
+            }
+            Some(last) => {
+                debug_assert!(t > last.0, "capacity points must be monotone in time");
+                self.points.push((t, cores, gpus));
+            }
+            None => self.points.push((t, cores, gpus)),
+        }
+    }
+
+    /// Capacity in effect at time `t` (0 before the first point).
+    pub fn at(&self, t: f64) -> (u64, u64) {
+        let mut cur = (0, 0);
+        for &(pt, c, g) in &self.points {
+            if pt <= t {
+                cur = (c, g);
+            } else {
+                break;
+            }
+        }
+        cur
+    }
+
+    /// True when the capacity never changes over the timeline.
+    pub fn is_constant(&self) -> bool {
+        self.points
+            .windows(2)
+            .all(|w| w[0].1 == w[1].1 && w[0].2 == w[1].2)
+    }
+
+    /// Offered `(core-seconds, gpu-seconds)` over `[t0, t1]` — the
+    /// utilization denominator for a window.
+    pub fn integrate(&self, t0: f64, t1: f64) -> (f64, f64) {
+        if !(t1 > t0) {
+            return (0.0, 0.0);
+        }
+        let (mut cs, mut gs) = (0.0, 0.0);
+        for (k, &(pt, c, g)) in self.points.iter().enumerate() {
+            let end = self.points.get(k + 1).map_or(f64::INFINITY, |p| p.0);
+            let (s, e) = (pt.max(t0), end.min(t1));
+            if e > s {
+                cs += c as f64 * (e - s);
+                gs += g as f64 * (e - s);
+            }
+        }
+        (cs, gs)
+    }
+
+    /// Per-dimension maximum capacity over the timeline.
+    pub fn peak(&self) -> (u64, u64) {
+        self.points
+            .iter()
+            .fold((0, 0), |(c, g), &(_, pc, pg)| (c.max(pc), g.max(pg)))
+    }
+
+    /// Capacity after the last change point.
+    pub fn final_capacity(&self) -> (u64, u64) {
+        self.points.last().map_or((0, 0), |&(_, c, g)| (c, g))
+    }
+
+    /// CSV rendering: `time_s,capacity_cores,capacity_gpus`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("time_s,capacity_cores,capacity_gpus\n");
+        for &(t, c, g) in &self.points {
+            s.push_str(&format!("{t:.3},{c},{g}\n"));
+        }
+        s
+    }
+}
+
 /// Step-function utilization over time, rebuilt from task records —
 /// exactly what Figs. 4–6 plot (cores/GPUs in use vs. TTX).
 #[derive(Debug, Clone)]
 pub struct UtilizationTrace {
     /// (time, cores_in_use, gpus_in_use) at each change point.
     pub points: Vec<(f64, u64, u64)>,
+    /// Peak schedulable capacity over the run (fraction denominators in
+    /// [`sampled`](Self::sampled) fall back to the per-instant capacity,
+    /// not these).
     pub total_cores: u64,
     pub total_gpus: u64,
+    /// Capacity timeline the utilization integrates against; constant
+    /// for fixed allocations.
+    pub capacity: CapacityTimeline,
     pub makespan: f64,
 }
 
 impl UtilizationTrace {
     pub fn from_records(records: &[TaskRecord], cluster: &ClusterSpec) -> UtilizationTrace {
+        UtilizationTrace::from_records_capacity(records, CapacityTimeline::of_cluster(cluster))
+    }
+
+    /// [`from_records`](Self::from_records) against a time-varying
+    /// capacity (elastic allocations).
+    pub fn from_records_capacity(
+        records: &[TaskRecord],
+        capacity: CapacityTimeline,
+    ) -> UtilizationTrace {
         // Change points: every start (+) and finish (-).
         let mut deltas: Vec<(f64, i64, i64)> = Vec::with_capacity(records.len() * 2);
         let mut makespan = 0.0f64;
@@ -73,15 +193,17 @@ impl UtilizationTrace {
             debug_assert!(c >= 0 && g >= 0);
             points.push((t, c.max(0) as u64, g.max(0) as u64));
         }
-        UtilizationTrace {
-            points,
-            total_cores: cluster.total_cores(),
-            total_gpus: cluster.total_gpus(),
-            makespan,
-        }
+        let (total_cores, total_gpus) = capacity.peak();
+        UtilizationTrace { points, total_cores, total_gpus, capacity, makespan }
     }
 
-    /// Time-integrated utilization in [0,1] for cores / GPUs.
+    /// Time-integrated utilization in [0,1] for cores / GPUs: used
+    /// core/GPU-seconds over core/GPU-seconds *offered by the capacity
+    /// timeline* across the makespan. On a fixed allocation this is the
+    /// classic `used / (total x makespan)`; on an elastic one, capacity
+    /// that was never offered (drained idle nodes) no longer dilutes
+    /// the ratio — and since busy cores stay on the timeline until
+    /// released, the ratio cannot exceed 1 either.
     pub fn mean_utilization(&self) -> (f64, f64) {
         if self.makespan <= 0.0 {
             return (0.0, 0.0);
@@ -93,15 +215,17 @@ impl UtilizationTrace {
             gpu_s += w[0].2 as f64 * dt;
         }
         // Tail after the last change point is all-zero by construction.
-        // `.max(1)` guards GPU-only / CPU-only cluster specs (a zero
-        // denominator would silently poison reports with NaN).
+        // Zero offered capacity (GPU-only / CPU-only specs) yields 0,
+        // not NaN.
+        let (cap_core_s, cap_gpu_s) = self.capacity.integrate(0.0, self.makespan);
         (
-            core_s / (self.total_cores.max(1) as f64 * self.makespan),
-            gpu_s / (self.total_gpus.max(1) as f64 * self.makespan),
+            if cap_core_s > 0.0 { core_s / cap_core_s } else { 0.0 },
+            if cap_gpu_s > 0.0 { gpu_s / cap_gpu_s } else { 0.0 },
         )
     }
 
-    /// Utilization sampled on a uniform grid (CSV/figure output).
+    /// Utilization sampled on a uniform grid (CSV/figure output);
+    /// fractions are against the capacity in effect at each sample.
     pub fn sampled(&self, samples: usize) -> Vec<(f64, f64, f64)> {
         assert!(samples >= 2);
         let mut out = Vec::with_capacity(samples);
@@ -112,26 +236,30 @@ impl UtilizationTrace {
                 seg += 1;
             }
             let (_, c, g) = self.points[seg];
+            let (cap_c, cap_g) = self.capacity.at(t);
             out.push((
                 t,
-                c as f64 / self.total_cores.max(1) as f64,
-                g as f64 / self.total_gpus.max(1) as f64,
+                c as f64 / cap_c.max(1) as f64,
+                g as f64 / cap_g.max(1) as f64,
             ));
         }
         out
     }
 
-    /// CSV rendering: `time,cores_used,gpus_used,core_frac,gpu_frac`.
+    /// CSV rendering: `time,cores_used,gpus_used,core_frac,gpu_frac`;
+    /// fractions are against the capacity in effect at each change
+    /// point.
     pub fn to_csv(&self) -> String {
         let mut s = String::from("time_s,cores_used,gpus_used,core_frac,gpu_frac\n");
         for &(t, c, g) in &self.points {
+            let (cap_c, cap_g) = self.capacity.at(t);
             s.push_str(&format!(
                 "{:.3},{},{},{:.4},{:.4}\n",
                 t,
                 c,
                 g,
-                c as f64 / self.total_cores.max(1) as f64,
-                g as f64 / self.total_gpus.max(1) as f64
+                c as f64 / cap_c.max(1) as f64,
+                g as f64 / cap_g.max(1) as f64
             ));
         }
         s
@@ -451,5 +579,59 @@ mod tests {
         let tr = BacklogTrace::from_records(&recs);
         assert_eq!(tr.peak(), (0, 0, 0));
         assert_eq!(tr.mean_tasks(), 0.0);
+    }
+
+    #[test]
+    fn capacity_timeline_records_and_integrates() {
+        let mut cap = CapacityTimeline::constant(10, 2);
+        assert!(cap.is_constant());
+        cap.record(5.0, 5, 1);
+        cap.record(8.0, 15, 3);
+        assert!(!cap.is_constant());
+        assert_eq!(cap.at(0.0), (10, 2));
+        assert_eq!(cap.at(4.999), (10, 2));
+        assert_eq!(cap.at(5.0), (5, 1));
+        assert_eq!(cap.at(100.0), (15, 3));
+        assert_eq!(cap.peak(), (15, 3));
+        assert_eq!(cap.final_capacity(), (15, 3));
+        // 10*5 + 5*3 + 15*2 = 95 core-s; 2*5 + 1*3 + 3*2 = 19 gpu-s.
+        let (cs, gs) = cap.integrate(0.0, 10.0);
+        assert!((cs - 95.0).abs() < 1e-9);
+        assert!((gs - 19.0).abs() < 1e-9);
+        // Sub-window spanning one change point: 10*1 + 5*1 = 15.
+        assert!((cap.integrate(4.0, 6.0).0 - 15.0).abs() < 1e-9);
+        // Same-instant record overwrites instead of duplicating.
+        cap.record(8.0, 20, 4);
+        assert_eq!(cap.points.last(), Some(&(8.0, 20, 4)));
+        assert!(cap.to_csv().starts_with("time_s,capacity_cores"));
+    }
+
+    #[test]
+    fn shrink_with_idle_nodes_raises_utilization() {
+        // Regression for the elastic fix: one task using 4 of 10 cores
+        // for the whole 10 s run. Against the constant capacity that is
+        // 40%; if half the (idle) capacity is drained at t = 5 the
+        // offered core-seconds shrink to 10*5 + 5*5 = 75, so the same
+        // work reads as 40/75 ≈ 53%.
+        let recs = vec![rec(0, 0, 0.0, 10.0, 4, 0)];
+        let fixed = UtilizationTrace::from_records(&recs, &cluster());
+        let mut cap = CapacityTimeline::constant(10, 2);
+        cap.record(5.0, 5, 1);
+        let elastic = UtilizationTrace::from_records_capacity(&recs, cap);
+        let (cu_fixed, _) = fixed.mean_utilization();
+        let (cu_elastic, _) = elastic.mean_utilization();
+        assert!((cu_fixed - 0.4).abs() < 1e-9);
+        assert!((cu_elastic - 40.0 / 75.0).abs() < 1e-9);
+        assert!(
+            cu_elastic > cu_fixed,
+            "shrinking idle capacity must raise utilization ({cu_elastic} vs {cu_fixed})"
+        );
+        // Peak capacity feeds the public totals.
+        assert_eq!(elastic.total_cores, 10);
+        // Sampled fractions use the capacity in effect at each instant:
+        // 4/10 before the shrink, 4/5 after.
+        let s = elastic.sampled(11);
+        assert!((s[2].1 - 0.4).abs() < 1e-9);
+        assert!((s[8].1 - 0.8).abs() < 1e-9);
     }
 }

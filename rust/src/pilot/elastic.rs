@@ -1,0 +1,270 @@
+//! Elastic resource plans: timed grow/shrink events and a
+//! backlog-driven autoscaler policy for the pilot allocation.
+//!
+//! A [`ResourcePlan`] describes how the allocation should change while
+//! workflows run. Two mechanisms compose:
+//!
+//! - **Timed events** ([`ResizeEvent`]): "at t = 5000 s add 4 nodes, at
+//!   t = 12000 s drain 8" — the shape of a queue-backfill or
+//!   walltime-limited allocation on a leadership-class machine (CLI:
+//!   `asyncflow traffic --resize 5000:+4,12000:-8`).
+//! - **Autoscaling** ([`AutoscalePolicy`]): evaluated every
+//!   [`interval`](AutoscalePolicy::interval) engine seconds against the
+//!   scheduler backlog and idle capacity, growing toward
+//!   [`max_nodes`](AutoscalePolicy::max_nodes) under queue pressure and
+//!   draining toward [`min_nodes`](AutoscalePolicy::min_nodes) when the
+//!   allocation sits idle (CLI: `asyncflow traffic --autoscale`).
+//!
+//! The [`Coordinator`](crate::engine::Coordinator) applies the plan to
+//! the shared pilot [`Agent`](crate::pilot::Agent) inside its event
+//! loop and records every change to the *offered* capacity on the
+//! run's [`CapacityTimeline`](crate::metrics::CapacityTimeline), which
+//! is what utilization metrics integrate against. Shrinks are
+//! *graceful*: drained nodes finish their running tasks and never
+//! accept new ones (see
+//! [`Allocator::drain_node`](crate::resources::Allocator::drain_node));
+//! their free cores leave the timeline at the drain, their busy cores
+//! when the work on them completes.
+//!
+//! Plans are plain data (`Clone + PartialEq`) and are part of a traffic
+//! scenario's identity: the same seed and the same plan reproduce a
+//! bit-identical [`TrafficReport`](crate::traffic::TrafficReport).
+
+use crate::error::{Error, Result};
+use crate::resources::NodeSpec;
+
+/// One timed capacity change: at engine time `at`, add (`delta` > 0) or
+/// drain (`delta` < 0) that many nodes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResizeEvent {
+    /// Engine time (seconds, >= 0) at which the change applies.
+    pub at: f64,
+    /// Node count delta: positive grows, negative drains.
+    pub delta: i64,
+}
+
+/// Backlog-driven autoscaler: evaluated every `interval` engine
+/// seconds while work is outstanding.
+///
+/// Scale-up triggers when the queued resource demand exceeds
+/// `up_backlog` times the current schedulable capacity (or when tasks
+/// are queued with nothing running at all — the rescue case after a
+/// deep shrink); scale-down triggers when the queue is empty and at
+/// least `down_idle` of the capacity sits free. Both move `step` nodes
+/// per evaluation and respect the `[min_nodes, max_nodes]` band.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscalePolicy {
+    /// Evaluation cadence in engine seconds (> 0).
+    pub interval: f64,
+    /// Never drain below this many schedulable nodes.
+    pub min_nodes: usize,
+    /// Never grow above this many schedulable nodes.
+    pub max_nodes: usize,
+    /// Scale up when queued cores (or GPUs) exceed this fraction of the
+    /// schedulable capacity.
+    pub up_backlog: f64,
+    /// Scale down when the queue is empty and at least this fraction of
+    /// the capacity is free.
+    pub down_idle: f64,
+    /// Nodes added / drained per evaluation (>= 1).
+    pub step: usize,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            interval: 300.0,
+            min_nodes: 1,
+            max_nodes: 64,
+            up_backlog: 0.5,
+            down_idle: 0.95,
+            step: 1,
+        }
+    }
+}
+
+impl AutoscalePolicy {
+    fn validate(&self) -> Result<()> {
+        if !self.interval.is_finite() || self.interval <= 0.0 {
+            return Err(Error::Config(format!(
+                "autoscale: interval must be positive, got {}",
+                self.interval
+            )));
+        }
+        if self.min_nodes > self.max_nodes {
+            return Err(Error::Config(format!(
+                "autoscale: min_nodes {} exceeds max_nodes {}",
+                self.min_nodes, self.max_nodes
+            )));
+        }
+        if self.step == 0 {
+            return Err(Error::Config("autoscale: step must be >= 1".into()));
+        }
+        if !self.up_backlog.is_finite()
+            || self.up_backlog < 0.0
+            || !self.down_idle.is_finite()
+            || !(0.0..=1.0).contains(&self.down_idle)
+        {
+            return Err(Error::Config(format!(
+                "autoscale: thresholds out of range (up_backlog {}, down_idle {})",
+                self.up_backlog, self.down_idle
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// How the pilot allocation changes over a run: timed events, an
+/// optional autoscaler, and the node shape used when growing.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ResourcePlan {
+    /// Timed grow/drain events (applied in time order).
+    pub events: Vec<ResizeEvent>,
+    /// Optional backlog-driven autoscaler.
+    pub autoscale: Option<AutoscalePolicy>,
+    /// Shape of nodes added by grow events / the autoscaler; `None`
+    /// clones the initial cluster's first node.
+    pub node: Option<NodeSpec>,
+}
+
+impl ResourcePlan {
+    pub fn new() -> ResourcePlan {
+        ResourcePlan::default()
+    }
+
+    /// Builder: append one timed resize event.
+    pub fn resize(mut self, at: f64, delta: i64) -> ResourcePlan {
+        self.events.push(ResizeEvent { at, delta });
+        self
+    }
+
+    /// Builder: enable the autoscaler.
+    pub fn with_autoscale(mut self, policy: AutoscalePolicy) -> ResourcePlan {
+        self.autoscale = Some(policy);
+        self
+    }
+
+    /// Builder: set the node shape used for growth.
+    pub fn with_node(mut self, node: NodeSpec) -> ResourcePlan {
+        self.node = Some(node);
+        self
+    }
+
+    /// A plan with neither events nor an autoscaler does nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.autoscale.is_none()
+    }
+
+    /// Parse the CLI resize spec `"t:+n,t:-n,..."`.
+    ///
+    /// ```
+    /// use asyncflow::pilot::ResourcePlan;
+    ///
+    /// let plan = ResourcePlan::parse_resize("5000:+4,12000:-8").unwrap();
+    /// assert_eq!(plan.events.len(), 2);
+    /// assert_eq!(plan.events[1].delta, -8);
+    /// ```
+    pub fn parse_resize(spec: &str) -> Result<ResourcePlan> {
+        let mut plan = ResourcePlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (t, d) = part.split_once(':').ok_or_else(|| {
+                Error::Config(format!("--resize: expected t:+n or t:-n, got '{part}'"))
+            })?;
+            let at: f64 = t.trim().parse().map_err(|_| {
+                Error::Config(format!("--resize: bad time in '{part}'"))
+            })?;
+            let delta: i64 = d.trim().parse().map_err(|_| {
+                Error::Config(format!("--resize: bad node delta in '{part}'"))
+            })?;
+            plan.events.push(ResizeEvent { at, delta });
+        }
+        if plan.events.is_empty() {
+            return Err(Error::Config(format!("--resize: no events in '{spec}'")));
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Check the plan is well-formed (finite non-negative event times,
+    /// nonzero deltas, sane autoscaler parameters).
+    pub fn validate(&self) -> Result<()> {
+        for e in &self.events {
+            if !e.at.is_finite() || e.at < 0.0 {
+                return Err(Error::Config(format!(
+                    "resource plan: invalid event time {}",
+                    e.at
+                )));
+            }
+            if e.delta == 0 {
+                return Err(Error::Config(format!(
+                    "resource plan: zero-node resize at t = {}",
+                    e.at
+                )));
+            }
+        }
+        if let Some(p) = &self.autoscale {
+            p.validate()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_resize_accepts_signed_deltas() {
+        let plan = ResourcePlan::parse_resize("5000:+4, 12000:-8").unwrap();
+        assert_eq!(
+            plan.events,
+            vec![
+                ResizeEvent { at: 5000.0, delta: 4 },
+                ResizeEvent { at: 12000.0, delta: -8 },
+            ]
+        );
+        assert!(plan.autoscale.is_none());
+        assert!(!plan.is_empty());
+        // Bare numbers grow too (parse accepts a leading '+' or none).
+        let p2 = ResourcePlan::parse_resize("0:2").unwrap();
+        assert_eq!(p2.events[0].delta, 2);
+    }
+
+    #[test]
+    fn parse_resize_rejects_garbage() {
+        assert!(ResourcePlan::parse_resize("").is_err());
+        assert!(ResourcePlan::parse_resize("5000").is_err());
+        assert!(ResourcePlan::parse_resize("x:+4").is_err());
+        assert!(ResourcePlan::parse_resize("100:zero").is_err());
+        assert!(ResourcePlan::parse_resize("100:+0").is_err());
+        assert!(ResourcePlan::parse_resize("-5:+1").is_err());
+    }
+
+    #[test]
+    fn validate_checks_autoscale_band() {
+        let bad = ResourcePlan::new().with_autoscale(AutoscalePolicy {
+            min_nodes: 8,
+            max_nodes: 2,
+            ..AutoscalePolicy::default()
+        });
+        assert!(bad.validate().is_err());
+        let bad = ResourcePlan::new().with_autoscale(AutoscalePolicy {
+            interval: 0.0,
+            ..AutoscalePolicy::default()
+        });
+        assert!(bad.validate().is_err());
+        let bad = ResourcePlan::new().with_autoscale(AutoscalePolicy {
+            step: 0,
+            ..AutoscalePolicy::default()
+        });
+        assert!(bad.validate().is_err());
+        let ok = ResourcePlan::new()
+            .resize(100.0, 2)
+            .with_autoscale(AutoscalePolicy::default());
+        assert!(ok.validate().is_ok());
+    }
+}

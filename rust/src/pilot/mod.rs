@@ -7,11 +7,13 @@
 //! is what lets CPU-only Aggregation tasks slide in beside GPU-saturated
 //! Simulation sets — the mechanism behind the paper's TX masking.
 
+mod elastic;
 mod scheduler;
 
+pub use elastic::{AutoscalePolicy, ResizeEvent, ResourcePlan};
 pub use scheduler::{Policy, QueuedTask, ScheduledTask, Scheduler};
 
-use crate::resources::{Allocator, ClusterSpec, Placement};
+use crate::resources::{Allocator, ClusterSpec, NodeSpec, Placement};
 use crate::task::TaskSpec;
 
 /// The pilot agent: allocation + scheduler queue.
@@ -78,6 +80,69 @@ impl Agent {
     pub fn running_count(&self) -> usize {
         self.running.iter().filter(|p| p.is_some()).count()
     }
+
+    /// Grow the allocation by `n` nodes of the given shape. Draining
+    /// nodes of the *same* shape are reclaimed first (newest first) —
+    /// an oscillating autoscaler reuses capacity instead of leaking
+    /// zombie node slots — and fresh nodes are appended for the rest.
+    /// Returns `n`.
+    pub fn grow(&mut self, n: usize, node: NodeSpec) -> usize {
+        let mut added = 0;
+        for i in (0..self.alloc.node_count()).rev() {
+            if added == n {
+                break;
+            }
+            if self.alloc.is_draining(i) && self.alloc.spec().nodes[i] == node {
+                self.alloc.undrain_node(i).expect("draining node undrains");
+                added += 1;
+            }
+        }
+        while added < n {
+            self.alloc.add_node(node);
+            added += 1;
+        }
+        added
+    }
+
+    /// Gracefully drain up to `n` nodes: the least-busy schedulable
+    /// nodes stop accepting work immediately; tasks already on them run
+    /// to completion, and their resources then leave the allocation.
+    /// Returns how many nodes actually started draining.
+    pub fn drain(&mut self, n: usize) -> usize {
+        let picks = self.alloc.drain_candidates(n);
+        for &i in &picks {
+            self.alloc.drain_node(i).expect("candidate is schedulable");
+        }
+        picks.len()
+    }
+
+    /// `(cores, gpus)` of schedulable capacity (draining nodes excluded).
+    pub fn capacity(&self) -> (u64, u64) {
+        (self.alloc.capacity_cores(), self.alloc.capacity_gpus())
+    }
+
+    /// `(cores, gpus)` of *offered* capacity: schedulable capacity plus
+    /// resources still occupied on draining nodes (see
+    /// [`Allocator::offered_cores`]) — the utilization denominator.
+    pub fn offered(&self) -> (u64, u64) {
+        (self.alloc.offered_cores(), self.alloc.offered_gpus())
+    }
+
+    /// `(cores, gpus)` currently free.
+    pub fn free(&self) -> (u64, u64) {
+        (self.alloc.free_cores(), self.alloc.free_gpus())
+    }
+
+    /// Number of nodes accepting placements.
+    pub fn schedulable_nodes(&self) -> usize {
+        self.alloc.schedulable_nodes()
+    }
+
+    /// `(cores, gpus)` requested by the queued (unplaced) tasks — the
+    /// backlog pressure signal the autoscaler scales on.
+    pub fn queued_demand(&self) -> (u64, u64) {
+        self.sched.queued_demand()
+    }
 }
 
 #[cfg(test)]
@@ -138,5 +203,65 @@ mod tests {
         agent.schedule();
         agent.complete(0);
         agent.complete(0);
+    }
+
+    #[test]
+    fn drain_finishes_running_work_and_blocks_new() {
+        let cluster = ClusterSpec::uniform("t", 2, 2, 1);
+        let mut agent = Agent::new(&cluster, Policy::default());
+        // Fill both nodes with one GPU task each.
+        agent.submit(&task(0, 1, 1), 0, 0.0);
+        agent.submit(&task(1, 1, 1), 0, 0.0);
+        let placed = agent.schedule();
+        assert_eq!(placed.len(), 2);
+        // Drain one node (both equally busy: newest index drains).
+        assert_eq!(agent.drain(1), 1);
+        assert_eq!(agent.schedulable_nodes(), 1);
+        assert_eq!(agent.capacity(), (2, 1));
+        // A new GPU task cannot fit anywhere (survivor's GPU is busy).
+        agent.submit(&task(2, 1, 1), 0, 1.0);
+        assert!(agent.schedule().is_empty());
+        assert_eq!(agent.queued_demand(), (1, 1));
+        // The draining node's task completes; its resources vanish, the
+        // queued task still waits for the survivor's GPU.
+        let drained_node = placed
+            .iter()
+            .flat_map(|s| s.placement.slots.iter())
+            .map(|&(i, _, _)| i)
+            .find(|&i| agent.allocator().is_draining(i))
+            .expect("one placement sits on the draining node");
+        let victim = placed
+            .iter()
+            .find(|s| s.placement.slots[0].0 == drained_node)
+            .unwrap()
+            .uid;
+        agent.complete(victim);
+        assert!(agent.allocator().node_idle(drained_node));
+        assert!(agent.schedule().is_empty(), "drained GPU must not be re-granted");
+        // The survivor's task completes: now the queued task runs.
+        agent.complete(1 - victim);
+        let placed = agent.schedule();
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].uid, 2);
+        assert_ne!(placed[0].placement.slots[0].0, drained_node);
+    }
+
+    #[test]
+    fn grow_reclaims_draining_nodes_before_appending() {
+        let cluster = ClusterSpec::uniform("t", 2, 4, 0);
+        let mut agent = Agent::new(&cluster, Policy::default());
+        assert_eq!(agent.drain(1), 1);
+        assert_eq!(agent.schedulable_nodes(), 1);
+        let shape = cluster.nodes[0];
+        // Grow by 2: one reclaimed, one appended.
+        assert_eq!(agent.grow(2, shape), 2);
+        assert_eq!(agent.schedulable_nodes(), 3);
+        assert_eq!(agent.allocator().node_count(), 3, "exactly one node appended");
+        assert_eq!(agent.capacity(), (12, 0));
+        // Different-shape growth never reclaims.
+        agent.drain(1);
+        agent.grow(1, crate::resources::NodeSpec { cores: 16, gpus: 2 });
+        assert_eq!(agent.allocator().node_count(), 4);
+        assert_eq!(agent.schedulable_nodes(), 3);
     }
 }

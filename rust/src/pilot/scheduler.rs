@@ -82,6 +82,14 @@ impl Scheduler {
         self.sorts
     }
 
+    /// Total `(cores, gpus)` requested by the queued tasks. O(queue);
+    /// called per autoscaler evaluation, not per scheduling round.
+    pub fn queued_demand(&self) -> (u64, u64) {
+        self.queue.iter().fold((0, 0), |(c, g), t| {
+            (c + t.req.cpu_cores as u64, g + t.req.gpus as u64)
+        })
+    }
+
     pub fn push(&mut self, t: QueuedTask) {
         match self.queue.last() {
             Some(last) => {

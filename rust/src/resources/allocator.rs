@@ -3,8 +3,24 @@
 //!
 //! This is the pilot agent's view of the allocation; all scheduling
 //! decisions go through [`Allocator::try_alloc`] / [`Allocator::release`].
+//!
+//! ## Elasticity
+//!
+//! The allocation is *elastic*: nodes can be appended while tasks run
+//! ([`Allocator::add_node`]) and drained ([`Allocator::drain_node`]).
+//! Draining is graceful — the node is immediately unschedulable (its
+//! free cores/GPUs leave the pool and nothing new is placed on it), but
+//! placements already on the node keep running; resources they release
+//! vanish instead of returning to the pool. A draining node can be
+//! brought back with [`Allocator::undrain_node`] (the pilot's `grow`
+//! reuses same-shape draining nodes before appending fresh ones).
+//!
+//! Node indices are stable for the lifetime of the allocator: drained
+//! nodes keep their slot (with zero schedulable capacity) so that
+//! in-flight [`Placement`]s remain valid.
 
-use super::{ClusterSpec, ResourceRequest};
+use super::{ClusterSpec, NodeSpec, ResourceRequest};
+use crate::error::{Error, Result};
 
 /// Where a running task's resources came from: `(node, cores, gpus)`
 /// slices, one per node touched.
@@ -28,17 +44,30 @@ pub struct Allocator {
     spec: ClusterSpec,
     free_cores: Vec<u32>,
     free_gpus: Vec<u32>,
+    /// Per-node in-use counts. Needed explicitly (not derivable from
+    /// `spec - free`) because a draining node has zero free capacity
+    /// while its running tasks still occupy cores.
+    busy_cores: Vec<u32>,
+    busy_gpus: Vec<u32>,
+    /// Draining nodes are unschedulable; releases on them vanish.
+    draining: Vec<bool>,
     total_free_cores: u64,
     total_free_gpus: u64,
+    total_busy_cores: u64,
+    total_busy_gpus: u64,
+    /// Schedulable capacity: spec totals over non-draining nodes.
+    cap_cores: u64,
+    cap_gpus: u64,
     /// Rotating start index for first-fit, spreading GPU tasks across
     /// nodes instead of hammering node 0.
     cursor: usize,
     /// Node visit order for spanning allocations, descending by free
     /// cores — a lazily-repaired index. Mutations outside
-    /// `alloc_spanning` (node-local allocs, releases) only mark it
-    /// stale; `alloc_spanning` repairs its own damage incrementally, so
-    /// a burst of spanning allocations (one scheduler drain round
-    /// placing a whole CPU task set) sorts once instead of per-task.
+    /// `alloc_spanning` (node-local allocs, releases, node add/drain)
+    /// only mark it stale; `alloc_spanning` repairs its own damage
+    /// incrementally, so a burst of spanning allocations (one scheduler
+    /// drain round placing a whole CPU task set) sorts once instead of
+    /// per-task.
     span_order: Vec<usize>,
     span_order_stale: bool,
 }
@@ -48,8 +77,15 @@ impl Allocator {
         Allocator {
             free_cores: spec.nodes.iter().map(|n| n.cores).collect(),
             free_gpus: spec.nodes.iter().map(|n| n.gpus).collect(),
+            busy_cores: vec![0; spec.nodes.len()],
+            busy_gpus: vec![0; spec.nodes.len()],
+            draining: vec![false; spec.nodes.len()],
             total_free_cores: spec.total_cores(),
             total_free_gpus: spec.total_gpus(),
+            total_busy_cores: 0,
+            total_busy_gpus: 0,
+            cap_cores: spec.total_cores(),
+            cap_gpus: spec.total_gpus(),
             cursor: 0,
             span_order: Vec::new(),
             span_order_stale: true,
@@ -57,6 +93,8 @@ impl Allocator {
         }
     }
 
+    /// Current node inventory, *including* drained nodes (stable
+    /// indices).
     pub fn spec(&self) -> &ClusterSpec {
         &self.spec
     }
@@ -70,11 +108,148 @@ impl Allocator {
     }
 
     pub fn used_cores(&self) -> u64 {
-        self.spec.total_cores() - self.total_free_cores
+        self.total_busy_cores
     }
 
     pub fn used_gpus(&self) -> u64 {
-        self.spec.total_gpus() - self.total_free_gpus
+        self.total_busy_gpus
+    }
+
+    /// Schedulable core capacity: spec cores over non-draining nodes.
+    pub fn capacity_cores(&self) -> u64 {
+        self.cap_cores
+    }
+
+    /// Schedulable GPU capacity: spec GPUs over non-draining nodes.
+    pub fn capacity_gpus(&self) -> u64 {
+        self.cap_gpus
+    }
+
+    /// *Offered* core capacity: everything free plus everything busy —
+    /// the schedulable capacity plus cores still occupied by running
+    /// tasks on draining nodes. This is what utilization denominators
+    /// integrate against: cores in use can never exceed it, and a
+    /// gracefully draining node's cores leave the allocation exactly
+    /// when the work on them finishes.
+    pub fn offered_cores(&self) -> u64 {
+        self.total_free_cores + self.total_busy_cores
+    }
+
+    /// *Offered* GPU capacity (see [`Allocator::offered_cores`]).
+    pub fn offered_gpus(&self) -> u64 {
+        self.total_free_gpus + self.total_busy_gpus
+    }
+
+    /// Total nodes ever part of the allocation (including drained).
+    pub fn node_count(&self) -> usize {
+        self.spec.nodes.len()
+    }
+
+    /// Nodes currently accepting placements.
+    pub fn schedulable_nodes(&self) -> usize {
+        self.draining.iter().filter(|&&d| !d).count()
+    }
+
+    pub fn is_draining(&self, node: usize) -> bool {
+        self.draining[node]
+    }
+
+    /// `(free cores, free gpus)` on one node.
+    pub fn node_free(&self, node: usize) -> (u32, u32) {
+        (self.free_cores[node], self.free_gpus[node])
+    }
+
+    /// `(busy cores, busy gpus)` on one node.
+    pub fn node_busy(&self, node: usize) -> (u32, u32) {
+        (self.busy_cores[node], self.busy_gpus[node])
+    }
+
+    /// True once a draining node has no running work left (its cores
+    /// are fully gone from the allocation).
+    pub fn node_idle(&self, node: usize) -> bool {
+        self.busy_cores[node] == 0 && self.busy_gpus[node] == 0
+    }
+
+    /// Append a node to the allocation; its capacity is schedulable
+    /// immediately. Returns the new node's index.
+    pub fn add_node(&mut self, node: NodeSpec) -> usize {
+        let i = self.spec.nodes.len();
+        self.spec.nodes.push(node);
+        self.free_cores.push(node.cores);
+        self.free_gpus.push(node.gpus);
+        self.busy_cores.push(0);
+        self.busy_gpus.push(0);
+        self.draining.push(false);
+        self.total_free_cores += node.cores as u64;
+        self.total_free_gpus += node.gpus as u64;
+        self.cap_cores += node.cores as u64;
+        self.cap_gpus += node.gpus as u64;
+        self.span_order_stale = true;
+        i
+    }
+
+    /// Mark a node draining: its free capacity leaves the pool now,
+    /// nothing new is placed on it, and resources released by its
+    /// still-running tasks vanish instead of returning. Errors if the
+    /// index is out of bounds or the node is already draining.
+    pub fn drain_node(&mut self, node: usize) -> Result<()> {
+        if node >= self.spec.nodes.len() {
+            return Err(Error::Config(format!(
+                "drain_node: no node {node} (allocation has {})",
+                self.spec.nodes.len()
+            )));
+        }
+        if self.draining[node] {
+            return Err(Error::Config(format!("drain_node: node {node} is already draining")));
+        }
+        self.total_free_cores -= self.free_cores[node] as u64;
+        self.total_free_gpus -= self.free_gpus[node] as u64;
+        self.free_cores[node] = 0;
+        self.free_gpus[node] = 0;
+        self.cap_cores -= self.spec.nodes[node].cores as u64;
+        self.cap_gpus -= self.spec.nodes[node].gpus as u64;
+        self.draining[node] = true;
+        self.span_order_stale = true;
+        Ok(())
+    }
+
+    /// Bring a draining node back: its unused capacity (spec minus
+    /// whatever is still busy) returns to the pool and it accepts
+    /// placements again.
+    pub fn undrain_node(&mut self, node: usize) -> Result<()> {
+        if node >= self.spec.nodes.len() {
+            return Err(Error::Config(format!(
+                "undrain_node: no node {node} (allocation has {})",
+                self.spec.nodes.len()
+            )));
+        }
+        if !self.draining[node] {
+            return Err(Error::Config(format!("undrain_node: node {node} is not draining")));
+        }
+        self.draining[node] = false;
+        let fc = self.spec.nodes[node].cores - self.busy_cores[node];
+        let fg = self.spec.nodes[node].gpus - self.busy_gpus[node];
+        self.free_cores[node] = fc;
+        self.free_gpus[node] = fg;
+        self.total_free_cores += fc as u64;
+        self.total_free_gpus += fg as u64;
+        self.cap_cores += self.spec.nodes[node].cores as u64;
+        self.cap_gpus += self.spec.nodes[node].gpus as u64;
+        self.span_order_stale = true;
+        Ok(())
+    }
+
+    /// Pick up to `n` nodes to drain: least-busy first (cores, then
+    /// GPUs), ties broken toward the highest index (shed the newest
+    /// nodes first). Deterministic; draining nodes are never picked.
+    pub fn drain_candidates(&self, n: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> =
+            (0..self.spec.nodes.len()).filter(|&i| !self.draining[i]).collect();
+        idx.sort_by_key(|&i| {
+            (self.busy_cores[i], self.busy_gpus[i], std::cmp::Reverse(i))
+        });
+        idx.truncate(n);
+        idx
     }
 
     /// Cheap feasibility pre-check (no placement computed).
@@ -99,11 +274,17 @@ impl Allocator {
         let n = self.free_cores.len();
         for off in 0..n {
             let i = (self.cursor + off) % n;
+            // Draining nodes hold zero free capacity, so any nonzero
+            // request skips them here without an explicit flag check.
             if self.free_cores[i] >= req.cpu_cores && self.free_gpus[i] >= req.gpus {
                 self.free_cores[i] -= req.cpu_cores;
                 self.free_gpus[i] -= req.gpus;
+                self.busy_cores[i] += req.cpu_cores;
+                self.busy_gpus[i] += req.gpus;
                 self.total_free_cores -= req.cpu_cores as u64;
                 self.total_free_gpus -= req.gpus as u64;
+                self.total_busy_cores += req.cpu_cores as u64;
+                self.total_busy_gpus += req.gpus as u64;
                 self.cursor = (i + 1) % n;
                 if req.cpu_cores > 0 {
                     self.span_order_stale = true;
@@ -125,7 +306,10 @@ impl Allocator {
         }
         let mut remaining = req.cpu_cores;
         let mut slots = Vec::new();
-        // Visit nodes in cached descending-free-cores order.
+        // Visit nodes in cached descending-free-cores order. Draining
+        // nodes sort to the back with zero free cores and are never
+        // reached (the pre-check guarantees the nonzero prefix covers
+        // the request).
         let mut consumed = 0usize;
         for &i in &self.span_order {
             if remaining == 0 {
@@ -141,8 +325,10 @@ impl Allocator {
         debug_assert_eq!(remaining, 0);
         for &(i, c, _) in &slots {
             self.free_cores[i] -= c;
+            self.busy_cores[i] += c;
         }
         self.total_free_cores -= req.cpu_cores as u64;
+        self.total_busy_cores += req.cpu_cores as u64;
         self.repair_span_order(consumed);
         Some(Placement { slots })
     }
@@ -169,25 +355,53 @@ impl Allocator {
         self.span_order[..=pos].rotate_left(1);
     }
 
-    /// Return a placement's resources to the pool.
+    /// Return a placement's resources to the pool. Slices on draining
+    /// nodes leave the allocation instead (graceful shrink: the cores
+    /// disappear only after the work on them finished).
     pub fn release(&mut self, p: &Placement) {
         self.span_order_stale = true;
         for &(i, cores, gpus) in &p.slots {
+            self.busy_cores[i] -= cores;
+            self.busy_gpus[i] -= gpus;
+            self.total_busy_cores -= cores as u64;
+            self.total_busy_gpus -= gpus as u64;
+            if self.draining[i] {
+                continue;
+            }
             self.free_cores[i] += cores;
             self.free_gpus[i] += gpus;
-            debug_assert!(self.free_cores[i] <= self.spec.nodes[i].cores);
-            debug_assert!(self.free_gpus[i] <= self.spec.nodes[i].gpus);
+            debug_assert!(self.free_cores[i] + self.busy_cores[i] <= self.spec.nodes[i].cores);
+            debug_assert!(self.free_gpus[i] + self.busy_gpus[i] <= self.spec.nodes[i].gpus);
             self.total_free_cores += cores as u64;
             self.total_free_gpus += gpus as u64;
         }
     }
 
-    /// Invariant check used by tests: per-node free counts within bounds
-    /// and totals consistent; a non-stale span index must be a
-    /// permutation in descending free-cores order.
+    /// Invariant check used by tests: per-node free/busy counts within
+    /// bounds and totals consistent (free + busy == spec on schedulable
+    /// nodes, free == 0 on draining ones); a non-stale span index must
+    /// be a permutation in descending free-cores order.
     pub fn check_invariants(&self) -> bool {
         let sum_c: u64 = self.free_cores.iter().map(|&c| c as u64).sum();
         let sum_g: u64 = self.free_gpus.iter().map(|&g| g as u64).sum();
+        let sum_bc: u64 = self.busy_cores.iter().map(|&c| c as u64).sum();
+        let sum_bg: u64 = self.busy_gpus.iter().map(|&g| g as u64).sum();
+        let cap_c: u64 = self
+            .spec
+            .nodes
+            .iter()
+            .zip(&self.draining)
+            .filter(|(_, &d)| !d)
+            .map(|(n, _)| n.cores as u64)
+            .sum();
+        let cap_g: u64 = self
+            .spec
+            .nodes
+            .iter()
+            .zip(&self.draining)
+            .filter(|(_, &d)| !d)
+            .map(|(n, _)| n.gpus as u64)
+            .sum();
         let span_ok = self.span_order_stale || {
             let mut seen = vec![false; self.free_cores.len()];
             self.span_order.len() == self.free_cores.len()
@@ -199,19 +413,26 @@ impl Allocator {
                     .windows(2)
                     .all(|w| self.free_cores[w[0]] >= self.free_cores[w[1]])
         };
+        let nodes_ok = (0..self.spec.nodes.len()).all(|i| {
+            let n = &self.spec.nodes[i];
+            if self.draining[i] {
+                self.free_cores[i] == 0
+                    && self.free_gpus[i] == 0
+                    && self.busy_cores[i] <= n.cores
+                    && self.busy_gpus[i] <= n.gpus
+            } else {
+                self.free_cores[i] + self.busy_cores[i] == n.cores
+                    && self.free_gpus[i] + self.busy_gpus[i] == n.gpus
+            }
+        });
         span_ok
+            && nodes_ok
             && sum_c == self.total_free_cores
             && sum_g == self.total_free_gpus
-            && self
-                .free_cores
-                .iter()
-                .zip(&self.spec.nodes)
-                .all(|(&f, n)| f <= n.cores)
-            && self
-                .free_gpus
-                .iter()
-                .zip(&self.spec.nodes)
-                .all(|(&f, n)| f <= n.gpus)
+            && sum_bc == self.total_busy_cores
+            && sum_bg == self.total_busy_gpus
+            && cap_c == self.cap_cores
+            && cap_g == self.cap_gpus
     }
 }
 
@@ -307,6 +528,91 @@ mod tests {
     }
 
     #[test]
+    fn add_node_grows_schedulable_capacity() {
+        let mut a = Allocator::new(&ClusterSpec::uniform("t", 1, 4, 1));
+        assert!(a.try_alloc(&ResourceRequest::new(6, 0)).is_none());
+        let i = a.add_node(NodeSpec { cores: 4, gpus: 1 });
+        assert_eq!(i, 1);
+        assert_eq!(a.capacity_cores(), 8);
+        assert_eq!(a.capacity_gpus(), 2);
+        assert!(a.check_invariants());
+        // A 6-core spanning task now fits across both nodes.
+        let p = a.try_alloc(&ResourceRequest::new(6, 0)).unwrap();
+        assert_eq!(p.total_cores(), 6);
+        assert!(a.check_invariants());
+        a.release(&p);
+        assert_eq!(a.free_cores(), 8);
+    }
+
+    #[test]
+    fn drain_is_graceful_and_never_double_grants() {
+        let mut a = Allocator::new(&ClusterSpec::uniform("t", 2, 4, 1));
+        // Pin a task to a node via the GPU (node-local).
+        let p = a.try_alloc(&ResourceRequest::new(2, 1)).unwrap();
+        let node = p.slots[0].0;
+        a.drain_node(node).unwrap();
+        assert!(a.check_invariants());
+        assert!(a.is_draining(node));
+        assert_eq!(a.capacity_cores(), 4, "only the surviving node counts");
+        assert!(!a.node_idle(node), "task still running on the draining node");
+        // Nothing new lands on the draining node.
+        for _ in 0..4 {
+            if let Some(q) = a.try_alloc(&ResourceRequest::new(1, 0)) {
+                assert!(q.slots.iter().all(|&(i, _, _)| i != node));
+            }
+        }
+        // Free capacity is exactly the other node's (minus what we took).
+        assert!(a.free_cores() <= 4);
+        // The running task finishes: its cores vanish, node goes idle.
+        a.release(&p);
+        assert!(a.node_idle(node));
+        assert_eq!(a.node_free(node), (0, 0), "drained capacity never returns");
+        assert!(a.check_invariants());
+        // Double drain errors; undrain restores full capacity.
+        assert!(a.drain_node(node).is_err());
+        a.undrain_node(node).unwrap();
+        assert_eq!(a.capacity_cores(), 8);
+        assert!(a.check_invariants());
+        assert!(a.undrain_node(node).is_err());
+    }
+
+    #[test]
+    fn undrain_while_busy_restores_only_unused_capacity() {
+        let mut a = Allocator::new(&ClusterSpec::uniform("t", 1, 8, 2));
+        let p = a.try_alloc(&ResourceRequest::new(3, 1)).unwrap();
+        a.drain_node(0).unwrap();
+        assert_eq!(a.free_cores(), 0);
+        a.undrain_node(0).unwrap();
+        assert_eq!(a.free_cores(), 5);
+        assert_eq!(a.free_gpus(), 1);
+        assert!(a.check_invariants());
+        a.release(&p);
+        assert_eq!(a.free_cores(), 8);
+        assert!(a.check_invariants());
+    }
+
+    #[test]
+    fn drain_candidates_prefer_idle_then_newest() {
+        let mut a = Allocator::new(&ClusterSpec::uniform("t", 3, 4, 1));
+        // Busy up node 0 (cursor starts there for the GPU task).
+        let p = a.try_alloc(&ResourceRequest::new(2, 1)).unwrap();
+        let busy_node = p.slots[0].0;
+        let picks = a.drain_candidates(2);
+        assert_eq!(picks.len(), 2);
+        assert!(
+            !picks.contains(&busy_node),
+            "least-busy nodes first: {picks:?} must skip busy node {busy_node}"
+        );
+        // Idle tie-break: highest index first.
+        assert!(picks[0] > picks[1]);
+        // Draining nodes are never re-picked.
+        a.drain_node(picks[0]).unwrap();
+        let again = a.drain_candidates(3);
+        assert!(!again.contains(&picks[0]));
+        assert_eq!(again.len(), 2);
+    }
+
+    #[test]
     fn property_no_oversubscription() {
         // Random alloc/release interleavings never violate invariants.
         check_bool(
@@ -349,6 +655,104 @@ mod tests {
                     a.release(p);
                 }
                 a.check_invariants() && a.used_cores() == 0 && a.used_gpus() == 0
+            },
+        );
+    }
+
+    #[test]
+    fn property_elastic_interleavings_match_fresh_allocator() {
+        // Any interleaving of grow/drain/alloc/release must leave the
+        // allocator equivalent to one freshly built over the surviving
+        // (non-draining) nodes: same per-node free counts, same totals,
+        // valid span order, and drained cores are never granted.
+        check_bool(
+            0xE1A57,
+            250,
+            |rng: &mut Rng, size| {
+                let ops: Vec<(u8, u32, u32)> = (0..size.0 * 5)
+                    .map(|_| {
+                        (
+                            rng.below(5) as u8,
+                            rng.below(64) as u32,
+                            rng.below(64) as u32,
+                        )
+                    })
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut a = Allocator::new(&ClusterSpec::uniform("p", 3, 8, 2));
+                let mut live: Vec<Placement> = vec![];
+                for &(op, x, y) in ops {
+                    match op {
+                        // Weight allocation slightly higher than the rest.
+                        0 | 4 => {
+                            let (c, g) = (x % 10, y % 3);
+                            if c == 0 && g == 0 {
+                                continue;
+                            }
+                            if let Some(p) = a.try_alloc(&ResourceRequest::new(c, g)) {
+                                if p.total_cores() != c as u64
+                                    || p.total_gpus() != g as u64
+                                {
+                                    return false;
+                                }
+                                // No double-grant of drained cores.
+                                if p.slots.iter().any(|&(i, _, _)| a.is_draining(i)) {
+                                    return false;
+                                }
+                                live.push(p);
+                            }
+                        }
+                        1 => {
+                            if !live.is_empty() {
+                                let p = live.swap_remove(x as usize % live.len());
+                                a.release(&p);
+                            }
+                        }
+                        2 => {
+                            a.add_node(NodeSpec { cores: 2 + x % 8, gpus: y % 3 });
+                        }
+                        3 => {
+                            let i = x as usize % a.node_count();
+                            // May legitimately fail on already-draining
+                            // nodes; equivalence is what matters.
+                            let _ = a.drain_node(i);
+                        }
+                        _ => unreachable!("op is drawn below 5"),
+                    }
+                    if !a.check_invariants() {
+                        return false;
+                    }
+                }
+                for p in &live {
+                    a.release(p);
+                }
+                if !(a.check_invariants() && a.used_cores() == 0 && a.used_gpus() == 0) {
+                    return false;
+                }
+                // Fresh allocator over the surviving nodes.
+                let survivors: Vec<NodeSpec> = (0..a.node_count())
+                    .filter(|&i| !a.is_draining(i))
+                    .map(|i| a.spec().nodes[i])
+                    .collect();
+                let fresh = Allocator::new(&ClusterSpec {
+                    name: "fresh".into(),
+                    nodes: survivors,
+                });
+                let mut mine: Vec<(u32, u32)> = (0..a.node_count())
+                    .filter(|&i| !a.is_draining(i))
+                    .map(|i| a.node_free(i))
+                    .collect();
+                let mut theirs: Vec<(u32, u32)> =
+                    (0..fresh.node_count()).map(|i| fresh.node_free(i)).collect();
+                mine.sort_unstable();
+                theirs.sort_unstable();
+                mine == theirs
+                    && a.free_cores() == fresh.free_cores()
+                    && a.free_gpus() == fresh.free_gpus()
+                    && a.capacity_cores() == fresh.capacity_cores()
+                    && a.capacity_gpus() == fresh.capacity_gpus()
             },
         );
     }

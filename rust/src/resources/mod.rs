@@ -5,6 +5,11 @@
 //! - tasks using GPUs are **node-local** (a task's GPUs and cores must
 //!   come from a single node — CUDA devices don't span nodes);
 //! - CPU-only tasks may **span nodes** (MPI launch across nodes).
+//!
+//! Allocations are **elastic**: the [`Allocator`] supports appending
+//! nodes and gracefully draining them mid-run (see the allocator module
+//! docs); the pilot and the engine coordinator drive that API from a
+//! [`ResourcePlan`](crate::pilot::ResourcePlan).
 
 mod allocator;
 

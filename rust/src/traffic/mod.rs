@@ -27,11 +27,48 @@
 //! the backlog grows without bound for as long as arrivals continue
 //! (`asyncflow traffic --sweep ...`).
 //!
+//! The allocation itself need not stay fixed: a
+//! [`ResourcePlan`](crate::pilot::ResourcePlan) on the [`TrafficSpec`]
+//! grows/drains pilot nodes under live traffic (timed `--resize`
+//! events, or the backlog-driven `--autoscale` policy), and the
+//! [`TrafficReport`] then carries the capacity timeline utilization is
+//! integrated against.
+//!
 //! Determinism: arrivals and mix draws come from two forked streams of
 //! the spec's seed, and TX sampling is per-set-stream keyed (see
 //! [`WorkflowDriver`](crate::engine::WorkflowDriver)); the same spec,
-//! catalog, cluster and engine config reproduce a bit-identical
-//! [`TrafficReport`].
+//! catalog, cluster, engine config — and, for elastic runs, the same
+//! resource plan — reproduce a bit-identical [`TrafficReport`].
+//!
+//! # Examples
+//!
+//! Two small c-DG2 workflows, 600 s apart, on the paper's allocation:
+//!
+//! ```
+//! use asyncflow::engine::EngineConfig;
+//! use asyncflow::resources::ClusterSpec;
+//! use asyncflow::traffic::{
+//!     run_traffic, ArrivalProcess, Catalog, TrafficSpec, WorkloadMix,
+//! };
+//!
+//! let spec = TrafficSpec {
+//!     process: ArrivalProcess::Deterministic { interval: 600.0 },
+//!     mix: WorkloadMix::parse("cdg2-small").unwrap(),
+//!     duration: 1200.0,
+//!     max_workflows: 4,
+//!     seed: 1,
+//!     plan: None,
+//! };
+//! let report = run_traffic(
+//!     &spec,
+//!     &Catalog::builtin(),
+//!     &ClusterSpec::summit_paper(),
+//!     &EngineConfig::ideal(),
+//! )
+//! .unwrap();
+//! assert_eq!(report.workflows.len(), 2);
+//! assert!(!report.is_saturated());
+//! ```
 
 mod report;
 
@@ -41,6 +78,7 @@ use crate::ddmd::{ddmd_workflow, DdmdConfig};
 use crate::engine::{Coordinator, EngineConfig, ExecutionMode};
 use crate::entk::Workflow;
 use crate::error::{Error, Result};
+use crate::pilot::ResourcePlan;
 use crate::resources::ClusterSpec;
 use crate::sim::VirtualExecutor;
 use crate::util::json::Json;
@@ -236,11 +274,44 @@ pub struct TrafficSpec {
     /// Seed for the arrival and mix streams (task TX streams use
     /// [`EngineConfig::seed`]).
     pub seed: u64,
+    /// Elastic allocation plan (timed `--resize` events and/or the
+    /// `--autoscale` policy); `None` keeps the allocation fixed.
+    pub plan: Option<ResourcePlan>,
 }
 
 /// Run one traffic scenario: sample arrivals, stream every workflow
 /// through a shared-pilot [`Coordinator`] at its arrival time, and
 /// reduce the member reports to queueing metrics.
+///
+/// # Examples
+///
+/// Stream three small c-DG2 workflows, one every 400 s, through the
+/// paper's Summit allocation:
+///
+/// ```
+/// use asyncflow::engine::EngineConfig;
+/// use asyncflow::resources::ClusterSpec;
+/// use asyncflow::traffic::{run_traffic, ArrivalProcess, Catalog, TrafficSpec, WorkloadMix};
+///
+/// let spec = TrafficSpec {
+///     process: ArrivalProcess::Deterministic { interval: 400.0 },
+///     mix: WorkloadMix::parse("cdg2-small").unwrap(),
+///     duration: 1200.0,
+///     max_workflows: 8,
+///     seed: 7,
+///     plan: None,
+/// };
+/// let report = run_traffic(
+///     &spec,
+///     &Catalog::builtin(),
+///     &ClusterSpec::summit_paper(),
+///     &EngineConfig::ideal(),
+/// )
+/// .unwrap();
+/// assert_eq!(report.workflows.len(), 3); // arrivals at t = 0, 400, 800
+/// assert!(report.makespan > 0.0);
+/// assert!(report.capacity.is_constant()); // no resource plan attached
+/// ```
 pub fn run_traffic(
     spec: &TrafficSpec,
     catalog: &Catalog,
@@ -294,6 +365,9 @@ pub fn run_traffic(
     };
 
     let mut coord = Coordinator::new(cluster, cfg);
+    if let Some(plan) = &spec.plan {
+        coord.set_resource_plan(plan.clone())?;
+    }
     let mut names = Vec::with_capacity(arrivals.len());
     let mut times = Vec::with_capacity(arrivals.len());
     for a in &arrivals {
@@ -335,10 +409,9 @@ pub fn parse_trace(src: &str) -> Result<ArrivalProcess> {
     let v = Json::parse(src)?;
     let arr = match &v {
         Json::Arr(_) => v.as_arr().expect("matched array"),
-        _ => v
-            .get("arrivals")
-            .as_arr()
-            .ok_or_else(|| Error::Config("trace: expected an array or {\"arrivals\": [...]}".into()))?,
+        _ => v.get("arrivals").as_arr().ok_or_else(|| {
+            Error::Config("trace: expected an array or {\"arrivals\": [...]}".into())
+        })?,
     };
     let mut out = Vec::with_capacity(arr.len());
     for (i, e) in arr.iter().enumerate() {

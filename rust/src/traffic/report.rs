@@ -3,7 +3,7 @@
 
 use crate::campaign::merge_member_reports;
 use crate::engine::RunReport;
-use crate::metrics::BacklogTrace;
+use crate::metrics::{BacklogTrace, CapacityTimeline};
 use crate::resources::ClusterSpec;
 use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
@@ -66,6 +66,12 @@ pub struct TrafficReport {
     /// High-water mark of live per-task engine state (in-flight +
     /// queued) — the streaming-coordinator memory bound.
     pub peak_live_tasks: usize,
+    /// Offered-capacity timeline of the run (free + in-use resources).
+    /// Constant without a [`ResourcePlan`](crate::pilot::ResourcePlan);
+    /// elastic runs carry one point per change (grows when applied,
+    /// gracefully drained cores when released), and every utilization
+    /// figure above integrates against it.
+    pub capacity: CapacityTimeline,
 }
 
 impl TrafficReport {
@@ -111,6 +117,7 @@ impl TrafficReport {
         let ttxs: Vec<f64> = workflows.iter().map(|w| w.ttx).collect();
 
         let merged = merge_member_reports("traffic", &members, cluster);
+        let capacity = merged.capacity.clone();
         let backlog = BacklogTrace::from_records(&merged.records);
         let peak_backlog = backlog.peak();
         let mean_backlog_tasks = backlog.mean_tasks();
@@ -141,6 +148,7 @@ impl TrafficReport {
             backlog_first_half,
             backlog_second_half,
             peak_live_tasks: merged.peak_live_tasks,
+            capacity,
             workflows,
         }
     }
@@ -198,6 +206,19 @@ impl TrafficReport {
             "  peak live task state: {} (in-flight + queued; total streamed {})\n",
             self.peak_live_tasks, self.total_tasks,
         ));
+        if !self.capacity.is_constant() {
+            let first = self.capacity.points.first().map_or((0, 0), |&(_, c, g)| (c, g));
+            let last = self.capacity.final_capacity();
+            s.push_str(&format!(
+                "  elastic capacity: cores {} -> {} / gpus {} -> {} over {} change points (peak {} cores)\n",
+                first.0,
+                last.0,
+                first.1,
+                last.1,
+                self.capacity.points.len() - 1,
+                self.capacity.peak().0,
+            ));
+        }
         if verbose {
             for w in &self.workflows {
                 s.push_str(&format!(
@@ -240,6 +261,14 @@ impl TrafficReport {
                 ])
             })
             .collect();
+        let capacity_points = self
+            .capacity
+            .points
+            .iter()
+            .map(|&(t, c, g)| {
+                Json::Arr(vec![Json::from(t), Json::from(c as f64), Json::from(g as f64)])
+            })
+            .collect();
         obj([
             ("arrival_window", Json::from(self.arrival_window)),
             ("workflows", Json::Arr(wfs)),
@@ -267,6 +296,7 @@ impl TrafficReport {
             ("peak_live_tasks", Json::from(self.peak_live_tasks)),
             ("saturated", Json::from(self.is_saturated())),
             ("backlog_trace", Json::Arr(backlog_points)),
+            ("capacity_trace", Json::Arr(capacity_points)),
         ])
     }
 }

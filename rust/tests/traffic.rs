@@ -1,12 +1,15 @@
 //! Integration tests for the streaming-traffic subsystem: saturation
 //! behavior (bounded vs growing backlog), determinism, trace-driven
-//! equivalence with explicit `--arrivals` offsets, and the streamed
-//! coordinator's bounded live-state guarantee.
+//! equivalence with explicit `--arrivals` offsets, the streamed
+//! coordinator's bounded live-state guarantee, and elastic allocations
+//! (timed grow/drain plans and the backlog-driven autoscaler) under
+//! live traffic.
 
 use asyncflow::campaign::Campaign;
 use asyncflow::dag::Dag;
 use asyncflow::engine::EngineConfig;
 use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::pilot::{AutoscalePolicy, ResourcePlan};
 use asyncflow::resources::{ClusterSpec, ResourceRequest};
 use asyncflow::task::TaskSetSpec;
 use asyncflow::traffic::{
@@ -42,6 +45,7 @@ fn spec(process: ArrivalProcess, duration: f64, seed: u64) -> TrafficSpec {
         duration,
         max_workflows: 100_000,
         seed,
+        plan: None,
     }
 }
 
@@ -229,6 +233,7 @@ fn mix_ratio_shapes_the_sampled_stream() {
         duration: 4000.0,
         max_workflows: 100_000,
         seed: 11,
+        plan: None,
     };
     let rep = run_traffic(&s, &cat, &cluster(), &EngineConfig::ideal()).unwrap();
     let fast = rep.workflows.iter().filter(|w| w.name == "fast").count();
@@ -236,6 +241,175 @@ fn mix_ratio_shapes_the_sampled_stream() {
     assert!(fast > slow, "3:1 mix must favor 'fast' ({fast} vs {slow})");
     let frac = fast as f64 / rep.workflows.len() as f64;
     assert!((0.55..=0.95).contains(&frac), "fast fraction {frac}");
+}
+
+#[test]
+fn shrink_under_saturation_never_strands_work_and_reproduces_bit_for_bit() {
+    // 2 nodes x 2 cores (service capacity 0.4 wf/s) vs lambda = 1.0/s;
+    // half the allocation drains mid-window. Draining must never strand
+    // work: tasks already on the draining node run to completion,
+    // nothing new lands on it, and the whole stream still drains.
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let plan = ResourcePlan::new().resize(150.0, -1);
+    let run = || {
+        run_traffic(
+            &TrafficSpec {
+                plan: Some(plan.clone()),
+                ..spec(ArrivalProcess::Poisson { rate: 1.0 }, 300.0, 2)
+            },
+            &catalog(),
+            &cluster,
+            &EngineConfig::ideal(),
+        )
+        .unwrap()
+    };
+    let rep = run();
+    // The timeline tracks *offered* capacity: under saturation the
+    // drained node is fully busy at t = 150, so its cores leave the
+    // timeline only as the tasks occupying them finish — at or after
+    // the drain, never before.
+    assert_eq!(rep.capacity.points.first(), Some(&(0.0, 4, 0)));
+    assert_eq!(rep.capacity.final_capacity(), (2, 0));
+    assert!(!rep.capacity.is_constant());
+    assert!(
+        rep.capacity.points[1..].iter().all(|&(t, c, _)| t >= 150.0 - 1e-9 && c < 4),
+        "drained cores may only leave at/after the drain: {:?}",
+        rep.capacity.points
+    );
+    // Utilization integrates against offered capacity: a true fraction.
+    assert!(
+        rep.cpu_utilization <= 1.0 + 1e-9,
+        "utilization must stay in [0,1], got {}",
+        rep.cpu_utilization
+    );
+    // No stranded work: every streamed workflow completes its task.
+    assert_eq!(rep.failed_tasks, 0);
+    assert_eq!(rep.backlog.final_tasks(), 0);
+    assert!(rep.workflows.iter().all(|w| w.finish >= w.arrival + 10.0 - 1e-9));
+    assert!(rep.is_saturated());
+    // Same seed + same resize plan: bit-for-bit identical reports.
+    let rep2 = run();
+    assert_eq!(rep, rep2, "same spec + plan, same report (PartialEq)");
+    assert_eq!(
+        rep.to_json().to_string(),
+        rep2.to_json().to_string(),
+        "same spec + plan, bit-identical serialized report"
+    );
+    // Against the fixed full-size allocation the same load drains sooner.
+    let fixed = run_traffic(
+        &spec(ArrivalProcess::Poisson { rate: 1.0 }, 300.0, 2),
+        &catalog(),
+        &cluster,
+        &EngineConfig::ideal(),
+    )
+    .unwrap();
+    assert!(
+        rep.makespan > fixed.makespan + 1e-9,
+        "losing half the cores must stretch the drain: {} vs {}",
+        rep.makespan,
+        fixed.makespan
+    );
+}
+
+#[test]
+fn shrinking_idle_capacity_raises_reported_utilization() {
+    // 2 x 1-core nodes, one 10 s task at a time: the second node is
+    // never touched (spanning placement prefers the fullest-free node,
+    // ties toward index 0). Draining the idle node at t = 20 halves the
+    // offered core-seconds from t = 20 on without changing a single
+    // placement, so the *same* work must read as higher utilization —
+    // the elastic-metrics regression from the capacity-timeline fix.
+    let cluster = ClusterSpec::uniform("t", 2, 1, 0);
+    let arrivals = ArrivalProcess::Deterministic { interval: 10.0 };
+    let fixed = run_traffic(
+        &spec(arrivals.clone(), 40.0, 1),
+        &catalog(),
+        &cluster,
+        &EngineConfig::ideal(),
+    )
+    .unwrap();
+    let elastic = run_traffic(
+        &TrafficSpec {
+            plan: Some(ResourcePlan::new().resize(20.0, -1)),
+            ..spec(arrivals, 40.0, 1)
+        },
+        &catalog(),
+        &cluster,
+        &EngineConfig::ideal(),
+    )
+    .unwrap();
+    // Identical schedule: same makespan, no queueing in either run.
+    assert_eq!(fixed.workflows.len(), 4);
+    assert!((fixed.makespan - elastic.makespan).abs() < 1e-9);
+    assert!(elastic.wait.max < 1e-9);
+    // 4 tasks x 10 s x 1 core = 40 core-s. Fixed: 40 / (2 x 40) = 50%.
+    // Elastic: 40 / (2 x 20 + 1 x 20) = 2/3.
+    assert!((fixed.cpu_utilization - 0.5).abs() < 1e-9);
+    assert!((elastic.cpu_utilization - 2.0 / 3.0).abs() < 1e-9);
+    assert!(
+        elastic.cpu_utilization > fixed.cpu_utilization + 0.1,
+        "shrinking idle capacity must raise utilization ({} vs {})",
+        elastic.cpu_utilization,
+        fixed.cpu_utilization
+    );
+    assert_eq!(elastic.capacity.points, vec![(0.0, 2, 0), (20.0, 1, 0)]);
+}
+
+#[test]
+fn autoscaler_relieves_saturation_and_scales_back_down() {
+    // 1 x 1-core node vs one 10 s workflow every 2 s: hopelessly
+    // saturated when fixed. The backlog-driven autoscaler must grow the
+    // allocation, cut wait and makespan, and shed idle nodes again once
+    // the stream ends.
+    let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+    let policy = AutoscalePolicy {
+        interval: 4.0,
+        min_nodes: 1,
+        max_nodes: 8,
+        step: 2,
+        down_idle: 0.5,
+        ..AutoscalePolicy::default()
+    };
+    let arrivals = ArrivalProcess::Deterministic { interval: 2.0 };
+    let fixed = run_traffic(
+        &spec(arrivals.clone(), 20.0, 1),
+        &catalog(),
+        &cluster,
+        &EngineConfig::ideal(),
+    )
+    .unwrap();
+    let scaled = run_traffic(
+        &TrafficSpec {
+            plan: Some(ResourcePlan::new().with_autoscale(policy)),
+            ..spec(arrivals, 20.0, 1)
+        },
+        &catalog(),
+        &cluster,
+        &EngineConfig::ideal(),
+    )
+    .unwrap();
+    assert_eq!(scaled.workflows.len(), 10);
+    assert_eq!(scaled.failed_tasks, 0);
+    assert!(!scaled.capacity.is_constant(), "growth must be recorded");
+    assert!(
+        scaled.capacity.peak().0 >= 3,
+        "autoscaler must have grown, peak {:?}",
+        scaled.capacity.peak()
+    );
+    assert!(
+        scaled.makespan < fixed.makespan - 1e-9,
+        "autoscaling must beat the fixed 1-core serialization: {} vs {}",
+        scaled.makespan,
+        fixed.makespan
+    );
+    assert!(scaled.wait.mean < fixed.wait.mean);
+    // Scale-down: once the queue stays empty and the allocation idles,
+    // capacity is shed again (graceful drains, min_nodes floor).
+    assert!(
+        scaled.capacity.final_capacity().0 < scaled.capacity.peak().0,
+        "idle-down must shed nodes: {:?}",
+        scaled.capacity.points
+    );
 }
 
 #[test]
@@ -247,6 +421,7 @@ fn unknown_workload_and_empty_windows_error() {
             duration: 1000.0,
             max_workflows: 10,
             seed: 1,
+            plan: None,
         },
         &catalog(),
         &cluster(),
