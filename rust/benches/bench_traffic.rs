@@ -42,6 +42,7 @@ fn main() {
         max_workflows: 1000,
         seed: 1,
         plan: None,
+        checkpoint_at: None,
     };
     let probe = run_traffic(&spec, &catalog, &cluster, &cfg).unwrap();
     let n_wf = probe.workflows.len();

@@ -1,0 +1,89 @@
+//! Checkpoint/resume of the whole simulation (substrate S18).
+//!
+//! HPC allocations are finite and preemptible: a Summit-class pilot
+//! job hits its walltime limit, a preemptible/backfill allocation is
+//! revoked, a campaign outlives its batch slot. RADICAL-Pilot's design
+//! papers treat surviving allocation boundaries as a first-class
+//! middleware concern; this module gives the engine that property.
+//!
+//! A [`SimSnapshot`] captures the **entire live simulation** at one
+//! engine instant — the coordinator's pending-arrival queue, every
+//! live [`WorkflowDriver`](crate::engine::WorkflowDriver)'s dependency
+//! countdowns / deferred activations / task records, the reports of
+//! already-finished members, the global uid slab and its free list,
+//! the allocator's per-node occupancy, drain flags and first-fit
+//! cursor, the scheduler queue, every in-flight task's placement, the
+//! offered-capacity timeline, and the remaining
+//! [`ResourcePlan`](crate::pilot::ResourcePlan) position — as
+//! deterministic JSON via the crate's [`ToJson`]/[`FromJson`] spine.
+//!
+//! ## Semantics
+//!
+//! - **Checkpoint** —
+//!   [`Coordinator::run_until`](crate::engine::Coordinator::run_until)
+//!   stops the event loop at its top the moment the clock reaches the
+//!   checkpoint time. Task completions landing *exactly* at that
+//!   instant have already been drained (they are what advances the
+//!   clock), while arrivals, stage activations and resizes due at it
+//!   are still pending — restore re-enters the loop at exactly the
+//!   iteration the uninterrupted run would have executed next.
+//! - **Restore** —
+//!   [`Coordinator::restore`](crate::engine::Coordinator::restore)
+//!   rebuilds the loop state.
+//!   In-flight tasks are re-injected into the fresh executor with
+//!   their original start times and sampled durations (the snapshot
+//!   carries their progress), and their placements are re-claimed on
+//!   the rebuilt allocator: completions land at exactly the instants
+//!   the uninterrupted run saw. The headline invariant, enforced by
+//!   `tests/checkpoint.rs`: for any seed, checkpoint-at-T + resume
+//!   produces reports **bit-identical** to the uninterrupted run.
+//! - **Resume on a different-shaped pilot** — attach a new
+//!   [`ResourcePlan`](crate::pilot::ResourcePlan) to the restored
+//!   coordinator: its events are absolute engine times, so `0:-4`
+//!   drains four nodes at the resume instant (gracefully — work still
+//!   running on them finishes first; nothing is stranded) and the
+//!   autoscaler can grow the follow-up allocation on backlog pressure.
+//!
+//! ## What is *not* captured
+//!
+//! Wall-clock scheduler accounting (`sched_wall`) restarts at zero —
+//! it measures this process, not the simulation. No live RNG state
+//! exists mid-run (TX streams are keyed per set, arrival/mix streams
+//! are drawn up front), but [`Rng::state`](crate::util::rng::Rng::state)
+//! / [`from_state`](crate::util::rng::Rng::from_state) provide the
+//! same capture/restore property for future stateful streams.
+//!
+//! ```
+//! use asyncflow::engine::{Coordinator, EngineConfig, ExecutionMode, RunOutcome};
+//! use asyncflow::checkpoint::SimSnapshot;
+//! use asyncflow::resources::ClusterSpec;
+//! use asyncflow::sim::VirtualExecutor;
+//! use asyncflow::util::json::{FromJson, Json, ToJson};
+//! use asyncflow::workflows::cdg2;
+//!
+//! let cluster = ClusterSpec::summit_8gpu();
+//! let cfg = EngineConfig::default();
+//! let mut coord = Coordinator::new(&cluster, &cfg);
+//! coord.add_workflow(cdg2(), ExecutionMode::Asynchronous, 0.0).unwrap();
+//!
+//! // Preempted at t = 500 s: snapshot, serialize, (pretend to) move
+//! // to a new allocation, restore, finish.
+//! let mut ex = VirtualExecutor::new();
+//! let RunOutcome::Checkpointed(snap) = coord.checkpoint(&mut ex, 500.0).unwrap()
+//! else { panic!("cdg2 runs past 500 s") };
+//! let wire = snap.to_json().to_string();
+//! let snap = SimSnapshot::from_json(&Json::parse(&wire).unwrap()).unwrap();
+//! let mut ex2 = VirtualExecutor::new();
+//! let reports = asyncflow::engine::Coordinator::restore(snap)
+//!     .unwrap()
+//!     .run(&mut ex2)
+//!     .unwrap();
+//! assert_eq!(reports.len(), 1);
+//! ```
+
+mod snapshot;
+
+pub use snapshot::{
+    DriverEntry, FinishedMember, LiveTask, PendingMember, RunningEntry, SimSnapshot,
+    SNAPSHOT_VERSION,
+};

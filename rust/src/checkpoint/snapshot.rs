@@ -1,0 +1,606 @@
+//! The snapshot schema: plain-data structs mirroring every piece of
+//! live engine-loop state, with [`ToJson`]/[`FromJson`] impls and the
+//! structural validation run before a restore.
+
+use crate::engine::{DriverState, EngineConfig, ExecutionMode};
+use crate::entk::Workflow;
+use crate::error::{Error, Result};
+use crate::metrics::{CapacityTimeline, TaskRecord};
+use crate::pilot::{AutoscalePolicy, QueuedTask, ResizeEvent};
+use crate::resources::{ClusterSpec, NodeSpec, Placement};
+use crate::task::TaskSpec;
+use crate::util::json::{arr_of, from_u64, obj, parse_arr, FromJson, Json, ToJson};
+
+/// Schema version stamped into every snapshot; bumped on breaking
+/// layout changes so a stale checkpoint fails loudly instead of
+/// restoring garbage.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// A registered workflow whose driver has not materialized yet: until
+/// the engine clock reaches `arrival` it costs one workflow spec, no
+/// per-task state. This is also the coordinator's *internal* pending
+/// representation, so snapshots carry it verbatim.
+#[derive(Debug, Clone)]
+pub struct PendingMember {
+    pub wf: Workflow,
+    pub mode: ExecutionMode,
+    /// When the workflow arrives at the shared agent (engine seconds).
+    pub arrival: f64,
+    /// Member slot (index of its report in the run result, i.e.
+    /// registration order).
+    pub slot: usize,
+    /// TX-stream base (cumulative set count — the merged-DAG node
+    /// offset).
+    pub set_stream: u64,
+    /// Priority base (cumulative pipeline count).
+    pub pipeline_base: u64,
+}
+
+/// A live driver's evolving state, tagged with its member slot.
+#[derive(Debug, Clone)]
+pub struct DriverEntry {
+    pub slot: usize,
+    pub state: DriverState,
+}
+
+/// A member that finished before the checkpoint: everything needed to
+/// rebuild its [`RunReport`](crate::engine::RunReport) at restore.
+#[derive(Debug, Clone)]
+pub struct FinishedMember {
+    pub slot: usize,
+    pub workflow: String,
+    pub mode: ExecutionMode,
+    pub records: Vec<TaskRecord>,
+    /// Offered-capacity timeline *as of the member's fold instant* —
+    /// the report is rebuilt against it so the member's utilization
+    /// trace matches the uninterrupted run exactly (a capacity change
+    /// between the member's finish and the checkpoint must not leak
+    /// into its trace).
+    pub capacity: CapacityTimeline,
+    pub failed_tasks: usize,
+}
+
+/// One live (queued or running) entry of the global uid slab.
+#[derive(Debug, Clone)]
+pub struct LiveTask {
+    pub uid: usize,
+    pub slot: usize,
+    pub local: usize,
+    pub spec: TaskSpec,
+}
+
+/// One in-flight task's placement (uid -> where its resources live).
+#[derive(Debug, Clone)]
+pub struct RunningEntry {
+    pub uid: usize,
+    pub placement: Placement,
+}
+
+/// Complete, self-contained state of one interrupted simulation: the
+/// inverse image of the coordinator event loop at a single engine
+/// instant. Serialize with [`ToJson`]; restore through
+/// [`Coordinator::restore`](crate::engine::Coordinator::restore).
+#[derive(Debug, Clone)]
+pub struct SimSnapshot {
+    /// Engine time of the checkpoint (the loop top the restore
+    /// re-enters).
+    pub now: f64,
+    pub cfg: EngineConfig,
+    /// Cluster the workflows were registered against (feasibility
+    /// checks; the live node inventory is `nodes`).
+    pub cluster: ClusterSpec,
+    /// Total registered members (pending + live + finished).
+    pub n_members: usize,
+    pub next_set_stream: u64,
+    pub next_pipeline: u64,
+    pub pending: Vec<PendingMember>,
+    pub drivers: Vec<DriverEntry>,
+    pub finished: Vec<FinishedMember>,
+    /// Size of the uid slab (live entries + free list).
+    pub slab_len: usize,
+    pub live_tasks: Vec<LiveTask>,
+    /// Recycled uids, in stack order (pop order matters for exact
+    /// replay of uid assignment).
+    pub free_uids: Vec<usize>,
+    pub peak_live: usize,
+    /// Node inventory at checkpoint time (including drained slots —
+    /// indices are stable for in-flight placements).
+    pub nodes: Vec<NodeSpec>,
+    pub draining: Vec<bool>,
+    /// First-fit rotation position of the allocator.
+    pub cursor: usize,
+    /// The allocator's cached spanning-allocation node order when it
+    /// was valid at checkpoint time (`None` = stale, rebuilt on first
+    /// use). Carried because its equal-free tie-breaks are
+    /// repair-history dependent.
+    pub span_order: Option<Vec<usize>>,
+    pub running: Vec<RunningEntry>,
+    /// Scheduler queue in insertion order.
+    pub queue: Vec<QueuedTask>,
+    pub capacity: CapacityTimeline,
+    /// Resize events not yet applied, in time order.
+    pub resize_events: Vec<ResizeEvent>,
+    pub autoscale: Option<AutoscalePolicy>,
+    pub next_check: Option<f64>,
+    pub stalled_checks: u32,
+    pub grow_node: Option<NodeSpec>,
+    pub sched_rounds: usize,
+    pub sched_dirty: bool,
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::from(x)).collect())
+}
+
+fn parse_usize_arr(v: &Json, key: &str) -> Result<Vec<usize>> {
+    parse_usize_arr_value(v.get(key), key)
+}
+
+fn parse_usize_arr_value(v: &Json, what: &str) -> Result<Vec<usize>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| Error::Config(format!("snapshot: '{what}' must be an array")))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for x in arr {
+        out.push(x.as_u64().ok_or_else(|| {
+            Error::Config(format!("snapshot: bad index in '{what}'"))
+        })? as usize);
+    }
+    Ok(out)
+}
+
+fn mode_from(v: &Json, key: &str) -> Result<ExecutionMode> {
+    v.req_str(key)?.parse()
+}
+
+impl ToJson for DriverState {
+    fn to_json(&self) -> Json {
+        obj([
+            ("wf", self.wf.to_json()),
+            ("mode", Json::from(self.mode.label())),
+            ("arrival", Json::from(self.arrival)),
+            ("set_stream_offset", from_u64(self.set_stream_offset)),
+            ("pipeline_offset", from_u64(self.pipeline_offset)),
+            ("deps_left", usize_arr(&self.deps_left)),
+            ("tasks_left", usize_arr(&self.tasks_left)),
+            ("jobset_of", usize_arr(&self.jobset_of)),
+            ("records", arr_of(&self.records)),
+            (
+                "deferred",
+                Json::Arr(
+                    self.deferred
+                        .iter()
+                        .map(|&(t, js)| Json::Arr(vec![Json::from(t), Json::from(js)]))
+                        .collect(),
+                ),
+            ),
+            ("tasks_remaining", from_u64(self.tasks_remaining)),
+            ("failed_tasks", Json::from(self.failed_tasks)),
+        ])
+    }
+}
+
+impl FromJson for DriverState {
+    fn from_json(v: &Json) -> Result<DriverState> {
+        let records: Vec<TaskRecord> = parse_arr(v, "records")?;
+        let mut deferred = Vec::new();
+        for d in v.req_arr("deferred")? {
+            let pair = d.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+                Error::Config("snapshot: deferred entries must be [time, jobset]".into())
+            })?;
+            let t = pair[0]
+                .as_f64()
+                .ok_or_else(|| Error::Config("snapshot: bad deferred time".into()))?;
+            let js = pair[1]
+                .as_u64()
+                .ok_or_else(|| Error::Config("snapshot: bad deferred jobset".into()))?;
+            deferred.push((t, js as usize));
+        }
+        Ok(DriverState {
+            wf: Workflow::from_json(v.get("wf"))?,
+            mode: mode_from(v, "mode")?,
+            arrival: v.req_f64("arrival")?,
+            set_stream_offset: v.req_u64("set_stream_offset")?,
+            pipeline_offset: v.req_u64("pipeline_offset")?,
+            deps_left: parse_usize_arr(v, "deps_left")?,
+            tasks_left: parse_usize_arr(v, "tasks_left")?,
+            jobset_of: parse_usize_arr(v, "jobset_of")?,
+            records,
+            deferred,
+            tasks_remaining: v.req_u64("tasks_remaining")?,
+            failed_tasks: v.req_u64("failed_tasks")? as usize,
+        })
+    }
+}
+
+impl ToJson for PendingMember {
+    fn to_json(&self) -> Json {
+        obj([
+            ("wf", self.wf.to_json()),
+            ("mode", Json::from(self.mode.label())),
+            ("arrival", Json::from(self.arrival)),
+            ("slot", Json::from(self.slot)),
+            ("set_stream", from_u64(self.set_stream)),
+            ("pipeline_base", from_u64(self.pipeline_base)),
+        ])
+    }
+}
+
+impl FromJson for PendingMember {
+    fn from_json(v: &Json) -> Result<PendingMember> {
+        Ok(PendingMember {
+            wf: Workflow::from_json(v.get("wf"))?,
+            mode: mode_from(v, "mode")?,
+            arrival: v.req_f64("arrival")?,
+            slot: v.req_u64("slot")? as usize,
+            set_stream: v.req_u64("set_stream")?,
+            pipeline_base: v.req_u64("pipeline_base")?,
+        })
+    }
+}
+
+impl ToJson for DriverEntry {
+    fn to_json(&self) -> Json {
+        obj([("slot", Json::from(self.slot)), ("state", self.state.to_json())])
+    }
+}
+
+impl FromJson for DriverEntry {
+    fn from_json(v: &Json) -> Result<DriverEntry> {
+        Ok(DriverEntry {
+            slot: v.req_u64("slot")? as usize,
+            state: DriverState::from_json(v.get("state"))?,
+        })
+    }
+}
+
+impl ToJson for FinishedMember {
+    fn to_json(&self) -> Json {
+        obj([
+            ("slot", Json::from(self.slot)),
+            ("workflow", Json::from(self.workflow.clone())),
+            ("mode", Json::from(self.mode.label())),
+            ("records", arr_of(&self.records)),
+            ("capacity", self.capacity.to_json()),
+            ("failed_tasks", Json::from(self.failed_tasks)),
+        ])
+    }
+}
+
+impl FromJson for FinishedMember {
+    fn from_json(v: &Json) -> Result<FinishedMember> {
+        Ok(FinishedMember {
+            slot: v.req_u64("slot")? as usize,
+            workflow: v.req_str("workflow")?.to_string(),
+            mode: mode_from(v, "mode")?,
+            records: parse_arr(v, "records")?,
+            capacity: CapacityTimeline::from_json(v.get("capacity"))?,
+            failed_tasks: v.req_u64("failed_tasks")? as usize,
+        })
+    }
+}
+
+impl ToJson for LiveTask {
+    fn to_json(&self) -> Json {
+        obj([
+            ("uid", Json::from(self.uid)),
+            ("slot", Json::from(self.slot)),
+            ("local", Json::from(self.local)),
+            ("spec", self.spec.to_json()),
+        ])
+    }
+}
+
+impl FromJson for LiveTask {
+    fn from_json(v: &Json) -> Result<LiveTask> {
+        Ok(LiveTask {
+            uid: v.req_u64("uid")? as usize,
+            slot: v.req_u64("slot")? as usize,
+            local: v.req_u64("local")? as usize,
+            spec: TaskSpec::from_json(v.get("spec"))?,
+        })
+    }
+}
+
+impl ToJson for RunningEntry {
+    fn to_json(&self) -> Json {
+        obj([("uid", Json::from(self.uid)), ("placement", self.placement.to_json())])
+    }
+}
+
+impl FromJson for RunningEntry {
+    fn from_json(v: &Json) -> Result<RunningEntry> {
+        Ok(RunningEntry {
+            uid: v.req_u64("uid")? as usize,
+            placement: Placement::from_json(v.get("placement"))?,
+        })
+    }
+}
+
+impl ToJson for SimSnapshot {
+    fn to_json(&self) -> Json {
+        obj([
+            ("version", from_u64(SNAPSHOT_VERSION)),
+            ("now", Json::from(self.now)),
+            ("cfg", self.cfg.to_json()),
+            ("cluster", self.cluster.to_json()),
+            ("n_members", Json::from(self.n_members)),
+            ("next_set_stream", from_u64(self.next_set_stream)),
+            ("next_pipeline", from_u64(self.next_pipeline)),
+            ("pending", arr_of(&self.pending)),
+            ("drivers", arr_of(&self.drivers)),
+            ("finished", arr_of(&self.finished)),
+            ("slab_len", Json::from(self.slab_len)),
+            ("live_tasks", arr_of(&self.live_tasks)),
+            ("free_uids", usize_arr(&self.free_uids)),
+            ("peak_live", Json::from(self.peak_live)),
+            ("nodes", arr_of(&self.nodes)),
+            (
+                "draining",
+                Json::Arr(self.draining.iter().map(|&d| Json::from(d)).collect()),
+            ),
+            ("cursor", Json::from(self.cursor)),
+            (
+                "span_order",
+                match &self.span_order {
+                    Some(o) => usize_arr(o),
+                    None => Json::Null,
+                },
+            ),
+            ("running", arr_of(&self.running)),
+            ("queue", arr_of(&self.queue)),
+            ("capacity", self.capacity.to_json()),
+            ("resize_events", arr_of(&self.resize_events)),
+            (
+                "autoscale",
+                match &self.autoscale {
+                    Some(p) => p.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "next_check",
+                match self.next_check {
+                    Some(t) => Json::from(t),
+                    None => Json::Null,
+                },
+            ),
+            ("stalled_checks", Json::from(self.stalled_checks as usize)),
+            (
+                "grow_node",
+                match &self.grow_node {
+                    Some(n) => n.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            ("sched_rounds", Json::from(self.sched_rounds)),
+            ("sched_dirty", Json::from(self.sched_dirty)),
+        ])
+    }
+}
+
+impl FromJson for SimSnapshot {
+    fn from_json(v: &Json) -> Result<SimSnapshot> {
+        let version = v.req_u64("version")?;
+        if version != SNAPSHOT_VERSION {
+            return Err(Error::Config(format!(
+                "snapshot: version {version} is not supported (expected {SNAPSHOT_VERSION})"
+            )));
+        }
+        let mut draining = Vec::new();
+        for d in v.req_arr("draining")? {
+            draining.push(d.as_bool().ok_or_else(|| {
+                Error::Config("snapshot: draining flags must be booleans".into())
+            })?);
+        }
+        let snapshot = SimSnapshot {
+            now: v.req_f64("now")?,
+            cfg: EngineConfig::from_json(v.get("cfg"))?,
+            cluster: ClusterSpec::from_json(v.get("cluster"))?,
+            n_members: v.req_u64("n_members")? as usize,
+            next_set_stream: v.req_u64("next_set_stream")?,
+            next_pipeline: v.req_u64("next_pipeline")?,
+            pending: parse_arr(v, "pending")?,
+            drivers: parse_arr(v, "drivers")?,
+            finished: parse_arr(v, "finished")?,
+            slab_len: v.req_u64("slab_len")? as usize,
+            live_tasks: parse_arr(v, "live_tasks")?,
+            free_uids: parse_usize_arr(v, "free_uids")?,
+            peak_live: v.req_u64("peak_live")? as usize,
+            nodes: parse_arr(v, "nodes")?,
+            draining,
+            cursor: v.req_u64("cursor")? as usize,
+            span_order: match v.get("span_order") {
+                Json::Null => None,
+                o => Some(parse_usize_arr_value(o, "span_order")?),
+            },
+            running: parse_arr(v, "running")?,
+            queue: parse_arr(v, "queue")?,
+            capacity: CapacityTimeline::from_json(v.get("capacity"))?,
+            resize_events: parse_arr(v, "resize_events")?,
+            autoscale: match v.get("autoscale") {
+                Json::Null => None,
+                p => Some(AutoscalePolicy::from_json(p)?),
+            },
+            next_check: match v.get("next_check") {
+                Json::Null => None,
+                t => Some(t.as_f64().ok_or_else(|| {
+                    Error::Config("snapshot: next_check must be a number or null".into())
+                })?),
+            },
+            stalled_checks: v.req_u64("stalled_checks")? as u32,
+            grow_node: match v.get("grow_node") {
+                Json::Null => None,
+                n => Some(NodeSpec::from_json(n)?),
+            },
+            sched_rounds: v.req_u64("sched_rounds")? as usize,
+            sched_dirty: v.req_bool("sched_dirty")?,
+        };
+        snapshot.validate()?;
+        Ok(snapshot)
+    }
+}
+
+impl SimSnapshot {
+    /// Structural consistency checks run before any restore: slot and
+    /// uid spaces must partition cleanly, every running/queued uid must
+    /// be live, and the node inventory must be internally consistent.
+    /// Deeper semantic checks (placements fitting their nodes, driver
+    /// countdowns matching the recompiled plan) happen while the
+    /// restore rebuilds the respective component.
+    pub fn validate(&self) -> Result<()> {
+        if !self.now.is_finite() || self.now < 0.0 {
+            return Err(Error::Config(format!(
+                "snapshot: invalid checkpoint time {}",
+                self.now
+            )));
+        }
+        // Member slots: pending + live + finished partition a subset of
+        // 0..n_members with no slot claimed twice.
+        let mut slot_seen = vec![false; self.n_members];
+        let mut claim_slot = |slot: usize, what: &str| -> Result<()> {
+            if slot >= self.n_members {
+                return Err(Error::Config(format!(
+                    "snapshot: {what} slot {slot} out of range (n_members {})",
+                    self.n_members
+                )));
+            }
+            if std::mem::replace(&mut slot_seen[slot], true) {
+                return Err(Error::Config(format!(
+                    "snapshot: member slot {slot} appears twice"
+                )));
+            }
+            Ok(())
+        };
+        for p in &self.pending {
+            claim_slot(p.slot, "pending")?;
+        }
+        for d in &self.drivers {
+            claim_slot(d.slot, "driver")?;
+        }
+        for f in &self.finished {
+            claim_slot(f.slot, "finished")?;
+        }
+        if slot_seen.iter().any(|&s| !s) {
+            return Err(Error::Config(
+                "snapshot: some member slots have no pending/live/finished entry".into(),
+            ));
+        }
+        // Uid slab: live + free partition 0..slab_len exactly.
+        let mut uid_live = vec![false; self.slab_len];
+        for lt in &self.live_tasks {
+            if lt.uid >= self.slab_len {
+                return Err(Error::Config(format!(
+                    "snapshot: live uid {} out of range (slab {})",
+                    lt.uid, self.slab_len
+                )));
+            }
+            if std::mem::replace(&mut uid_live[lt.uid], true) {
+                return Err(Error::Config(format!(
+                    "snapshot: live uid {} appears twice",
+                    lt.uid
+                )));
+            }
+        }
+        let mut uid_free = vec![false; self.slab_len];
+        for &uid in &self.free_uids {
+            if uid >= self.slab_len || uid_live[uid] {
+                return Err(Error::Config(format!(
+                    "snapshot: free uid {uid} is out of range or live"
+                )));
+            }
+            if std::mem::replace(&mut uid_free[uid], true) {
+                return Err(Error::Config(format!(
+                    "snapshot: free uid {uid} appears twice"
+                )));
+            }
+        }
+        if self.live_tasks.len() + self.free_uids.len() != self.slab_len {
+            return Err(Error::Config(format!(
+                "snapshot: {} live + {} free uids do not cover the slab of {}",
+                self.live_tasks.len(),
+                self.free_uids.len(),
+                self.slab_len
+            )));
+        }
+        // Running + queued must partition the live uids.
+        let mut uid_placed = vec![false; self.slab_len];
+        for r in &self.running {
+            if r.uid >= self.slab_len || !uid_live[r.uid] {
+                return Err(Error::Config(format!(
+                    "snapshot: running uid {} is not live",
+                    r.uid
+                )));
+            }
+            if std::mem::replace(&mut uid_placed[r.uid], true) {
+                return Err(Error::Config(format!(
+                    "snapshot: running uid {} appears twice",
+                    r.uid
+                )));
+            }
+        }
+        for q in &self.queue {
+            if q.uid >= self.slab_len || !uid_live[q.uid] {
+                return Err(Error::Config(format!(
+                    "snapshot: queued uid {} is not live",
+                    q.uid
+                )));
+            }
+            if std::mem::replace(&mut uid_placed[q.uid], true) {
+                return Err(Error::Config(format!(
+                    "snapshot: uid {} is both running and queued",
+                    q.uid
+                )));
+            }
+        }
+        if self.running.len() + self.queue.len() != self.live_tasks.len() {
+            return Err(Error::Config(format!(
+                "snapshot: {} running + {} queued does not match {} live tasks",
+                self.running.len(),
+                self.queue.len(),
+                self.live_tasks.len()
+            )));
+        }
+        // Live tasks must route into live drivers.
+        let driver_slots: std::collections::HashSet<usize> =
+            self.drivers.iter().map(|d| d.slot).collect();
+        for lt in &self.live_tasks {
+            if !driver_slots.contains(&lt.slot) {
+                return Err(Error::Config(format!(
+                    "snapshot: live uid {} routes to slot {} with no live driver",
+                    lt.uid, lt.slot
+                )));
+            }
+        }
+        // Node inventory.
+        if self.draining.len() != self.nodes.len() {
+            return Err(Error::Config(format!(
+                "snapshot: {} drain flags for {} nodes",
+                self.draining.len(),
+                self.nodes.len()
+            )));
+        }
+        if self.capacity.points.is_empty() {
+            return Err(Error::Config("snapshot: empty capacity timeline".into()));
+        }
+        // Anything that can grow needs a node shape to grow by — the
+        // event loop relies on this (a fresh run validates it when the
+        // plan is attached; a corrupted snapshot must not panic there).
+        if self.grow_node.is_none()
+            && (self.autoscale.is_some()
+                || self.resize_events.iter().any(|e| e.delta > 0))
+        {
+            return Err(Error::Config(
+                "snapshot: growing resize events or an autoscaler without a \
+                 grow-node shape"
+                    .into(),
+            ));
+        }
+        if self.next_check.is_some() && self.autoscale.is_none() {
+            return Err(Error::Config(
+                "snapshot: an autoscaler evaluation time without an autoscaler".into(),
+            ));
+        }
+        Ok(())
+    }
+}

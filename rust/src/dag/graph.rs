@@ -4,6 +4,7 @@
 use std::collections::BTreeSet;
 
 use crate::error::{Error, Result};
+use crate::util::json::{obj, FromJson, Json, ToJson};
 
 /// A directed acyclic graph over task-set nodes.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -178,6 +179,17 @@ impl Dag {
         u != v && !self.reaches(u, v) && !self.reaches(v, u)
     }
 
+    /// All edges as `(from, to)` pairs, in insertion order per node.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.edge_count());
+        for (v, cs) in self.children.iter().enumerate() {
+            for &c in cs {
+                out.push((v, c));
+            }
+        }
+        out
+    }
+
     /// Graphviz dot rendering (debugging / docs).
     pub fn to_dot(&self) -> String {
         let mut s = String::from("digraph dag {\n  rankdir=TB;\n");
@@ -191,6 +203,52 @@ impl Dag {
         }
         s.push_str("}\n");
         s
+    }
+}
+
+impl ToJson for Dag {
+    fn to_json(&self) -> Json {
+        obj([
+            (
+                "nodes",
+                Json::Arr(self.names.iter().map(|n| Json::from(n.clone())).collect()),
+            ),
+            (
+                "edges",
+                Json::Arr(
+                    self.edges()
+                        .into_iter()
+                        .map(|(a, b)| Json::Arr(vec![Json::from(a), Json::from(b)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl FromJson for Dag {
+    fn from_json(v: &Json) -> Result<Dag> {
+        let mut dag = Dag::new();
+        for n in v.req_arr("nodes")? {
+            let name = n
+                .as_str()
+                .ok_or_else(|| Error::Config("dag: node names must be strings".into()))?;
+            dag.add_node(name);
+        }
+        for e in v.req_arr("edges")? {
+            let pair = e.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+                Error::Config("dag: each edge must be a [from, to] pair".into())
+            })?;
+            let from = pair[0]
+                .as_u64()
+                .ok_or_else(|| Error::Config("dag: bad edge endpoint".into()))?;
+            let to = pair[1]
+                .as_u64()
+                .ok_or_else(|| Error::Config("dag: bad edge endpoint".into()))?;
+            // add_edge re-validates bounds, cycles and duplicates.
+            dag.add_edge(from as usize, to as usize)?;
+        }
+        Ok(dag)
     }
 }
 

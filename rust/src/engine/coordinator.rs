@@ -28,38 +28,53 @@
 //! that is actually outstanding; the high-water mark is reported as
 //! [`RunReport::peak_live_tasks`].
 //!
+//! ## Checkpoint / resume
+//!
+//! The whole event loop is snapshottable: [`Coordinator::run_until`]
+//! stops the loop the moment the engine clock reaches a checkpoint
+//! time and returns a [`SimSnapshot`] capturing every piece of live
+//! state — pending arrivals, driver countdowns and records, the uid
+//! slab and free list, the allocator's per-node occupancy and drain
+//! flags, the scheduler queue, in-flight tasks, the capacity timeline
+//! and the resource-plan position. [`Coordinator::restore`] rebuilds a
+//! runnable coordinator from the snapshot; in-flight tasks are
+//! re-launched into the fresh executor with their original start time
+//! and sampled duration, and their placements are re-claimed on the
+//! restored allocator, so the resumed run continues **bit-identically**
+//! to the uninterrupted one (see `tests/checkpoint.rs`). A resume may
+//! attach a *different* [`ResourcePlan`] — the preemptible /
+//! queue-backfill scenario where the follow-up allocation has another
+//! shape.
+//!
 //! `engine::run` is a coordinator with exactly one driver, so the
 //! single-workflow path and the concurrent-campaign path are the same
 //! code.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use super::driver::{EngineEvent, WorkflowDriver};
 use super::{EngineConfig, ExecutionMode, RunReport};
+use crate::checkpoint::{
+    DriverEntry, FinishedMember, LiveTask, PendingMember, RunningEntry, SimSnapshot,
+};
 use crate::entk::Workflow;
 use crate::error::{Error, Result};
 use crate::exec::{Executor, RunningTask};
 use crate::metrics::CapacityTimeline;
-use crate::pilot::{Agent, AutoscalePolicy, ResizeEvent, ResourcePlan};
-use crate::resources::{ClusterSpec, NodeSpec};
-use crate::task::TaskSpec;
+use crate::pilot::{Agent, AutoscalePolicy, ResizeEvent, ResourcePlan, Scheduler};
+use crate::resources::{Allocator, ClusterSpec, NodeSpec, Placement, ResourceRequest};
+use crate::task::{TaskKind, TaskSpec};
 
-/// A registered workflow whose driver has not been materialized yet:
-/// until the engine clock reaches `arrival` it costs one workflow spec,
-/// no per-task state.
+/// How a (possibly checkpointed) coordinator run ended.
 #[derive(Debug)]
-struct PendingArrival {
-    wf: Workflow,
-    mode: ExecutionMode,
-    arrival: f64,
-    /// Member slot (index of its report in [`Coordinator::run`]'s
-    /// result, i.e. registration order).
-    slot: usize,
-    /// TX-stream base (cumulative set count — the merged-DAG node
-    /// offset).
-    set_stream: u64,
-    /// Priority base (cumulative pipeline count).
-    pipeline_base: u64,
+pub enum RunOutcome {
+    /// Every workflow drained; one report per member, in registration
+    /// order.
+    Completed(Vec<RunReport>),
+    /// The engine clock reached the checkpoint time first; the boxed
+    /// snapshot restores via [`Coordinator::restore`].
+    Checkpointed(Box<SimSnapshot>),
 }
 
 /// Shared-pilot multiplexer over any number of workflow drivers.
@@ -67,12 +82,16 @@ pub struct Coordinator {
     cluster: ClusterSpec,
     cfg: EngineConfig,
     /// Registered workflows, materialized lazily during [`run`](Self::run).
-    pending: Vec<PendingArrival>,
+    /// Stored directly as the checkpoint schema's [`PendingMember`] —
+    /// a not-yet-arrived workflow costs one spec, no per-task state.
+    pending: Vec<PendingMember>,
     next_set_stream: u64,
     next_pipeline: u64,
     /// Elastic allocation plan (timed resizes + autoscaler), applied
     /// inside the event loop.
     plan: Option<ResourcePlan>,
+    /// Snapshot to resume from (set by [`Coordinator::restore`]).
+    resume: Option<Box<SimSnapshot>>,
 }
 
 impl Coordinator {
@@ -84,7 +103,29 @@ impl Coordinator {
             next_set_stream: 0,
             next_pipeline: 0,
             plan: None,
+            resume: None,
         }
+    }
+
+    /// Rebuild a runnable coordinator from a [`SimSnapshot`]. The next
+    /// [`run`](Self::run) (or [`run_until`](Self::run_until)) continues
+    /// the interrupted simulation exactly where the checkpoint stopped
+    /// it: same clock, same queue, same in-flight work. Attach a
+    /// [`ResourcePlan`] via [`set_resource_plan`](Self::set_resource_plan)
+    /// to resume on a *different-shaped* pilot (the plan replaces any
+    /// remnant of the checkpointed run's plan; its event times are
+    /// absolute engine times, so `0:-2` shrinks at the resume instant).
+    pub fn restore(snapshot: SimSnapshot) -> Result<Coordinator> {
+        snapshot.validate()?;
+        Ok(Coordinator {
+            cluster: snapshot.cluster.clone(),
+            cfg: snapshot.cfg.clone(),
+            pending: Vec::new(),
+            next_set_stream: snapshot.next_set_stream,
+            next_pipeline: snapshot.next_pipeline,
+            plan: None,
+            resume: Some(Box::new(snapshot)),
+        })
     }
 
     /// Attach an elastic [`ResourcePlan`]: timed grow/drain events and
@@ -96,7 +137,8 @@ impl Coordinator {
     /// drain sheds a node's free cores immediately and its busy cores
     /// as the running work releases them. Workflow feasibility
     /// ([`ClusterSpec::check`]) is still validated against the *initial*
-    /// cluster at registration time.
+    /// cluster at registration time. On a restored coordinator the plan
+    /// replaces the checkpointed run's remaining plan.
     pub fn set_resource_plan(&mut self, plan: ResourcePlan) -> Result<()> {
         plan.validate()?;
         self.plan = Some(plan);
@@ -113,6 +155,13 @@ impl Coordinator {
         mode: ExecutionMode,
         arrival: f64,
     ) -> Result<usize> {
+        if self.resume.is_some() {
+            return Err(Error::Config(format!(
+                "workflow '{}': cannot register new workflows on a restored \
+                 coordinator (the member set is part of the checkpoint)",
+                wf.name
+            )));
+        }
         if !arrival.is_finite() || arrival < 0.0 {
             return Err(Error::Config(format!(
                 "workflow '{}': invalid arrival time {arrival}",
@@ -128,7 +177,7 @@ impl Coordinator {
         let n_sets = wf.sets.len() as u64;
         let n_pipes = WorkflowDriver::pipeline_count_of(&wf, mode) as u64;
         let slot = self.pending.len();
-        self.pending.push(PendingArrival {
+        self.pending.push(PendingMember {
             wf,
             mode,
             arrival,
@@ -150,77 +199,476 @@ impl Coordinator {
     /// returns one [`RunReport`] per workflow, in registration order.
     /// Scheduler accounting (rounds / wall time) and the live-task
     /// high-water mark are global and repeated on every report.
-    pub fn run(mut self, executor: &mut dyn Executor) -> Result<Vec<RunReport>> {
-        let mut agent = Agent::new(&self.cluster, self.cfg.policy);
-        let mut capacity = CapacityTimeline::of_cluster(&self.cluster);
-        // Elastic plan state: timed events in time order, the autoscaler
-        // and its next evaluation time, and the node shape growth uses.
-        let plan = self.plan.take();
-        let (resize_events, autoscale, grow_node): (
-            Vec<ResizeEvent>,
-            Option<AutoscalePolicy>,
-            Option<NodeSpec>,
-        ) = match &plan {
-            Some(p) => {
-                let mut evs = p.events.clone();
-                evs.sort_by(|a, b| a.at.total_cmp(&b.at));
-                let node = p.node.or_else(|| self.cluster.nodes.first().copied());
-                if node.is_none()
-                    && (p.autoscale.is_some() || evs.iter().any(|e| e.delta > 0))
-                {
-                    return Err(Error::Config(
-                        "resource plan: no node shape to grow by \
-                         (empty cluster and no plan.node)"
-                            .into(),
-                    ));
-                }
-                (evs, p.autoscale.clone(), node)
+    pub fn run(self, executor: &mut dyn Executor) -> Result<Vec<RunReport>> {
+        match self.run_until(executor, None)? {
+            RunOutcome::Completed(reports) => Ok(reports),
+            RunOutcome::Checkpointed(_) => {
+                unreachable!("run_until(None) never checkpoints")
             }
+        }
+    }
+
+    /// [`run`](Self::run) with an optional preemption point: when the
+    /// engine clock reaches `checkpoint_at` before the last workflow
+    /// drains, the loop stops and returns
+    /// [`RunOutcome::Checkpointed`] with the full simulation state.
+    /// A run that finishes earlier returns
+    /// [`RunOutcome::Completed`] as usual.
+    pub fn run_until(
+        mut self,
+        executor: &mut dyn Executor,
+        checkpoint_at: Option<f64>,
+    ) -> Result<RunOutcome> {
+        // NaN/inf would silently disable the requested preemption (every
+        // clock comparison against them is false); refuse up front.
+        if let Some(t) = checkpoint_at {
+            if !t.is_finite() {
+                return Err(Error::Config(format!(
+                    "checkpoint: invalid checkpoint time {t}"
+                )));
+            }
+        }
+        let plan = self.plan.take();
+        let state = match self.resume.take() {
+            Some(snap) => EngineLoop::from_snapshot(*snap, plan, executor)?,
+            None => EngineLoop::fresh(self, plan)?,
+        };
+        state.drive(executor, checkpoint_at)
+    }
+
+    /// Convenience wrapper: run with a mandatory preemption point (the
+    /// checkpoint entry point named in the architecture docs).
+    pub fn checkpoint(
+        self,
+        executor: &mut dyn Executor,
+        at: f64,
+    ) -> Result<RunOutcome> {
+        self.run_until(executor, Some(at))
+    }
+}
+
+/// The event loop's complete live state. One instance per
+/// [`Coordinator::run_until`] call, built either fresh from the
+/// registered workflows or from a [`SimSnapshot`]; snapshotting is the
+/// inverse of construction.
+struct EngineLoop {
+    cfg: EngineConfig,
+    cluster: ClusterSpec,
+    next_set_stream: u64,
+    next_pipeline: u64,
+    agent: Agent,
+    capacity: CapacityTimeline,
+    /// Timed resize events in time order; `next_resize` indexes the
+    /// first unapplied one.
+    resize_events: Vec<ResizeEvent>,
+    next_resize: usize,
+    autoscale: Option<AutoscalePolicy>,
+    next_check: Option<f64>,
+    /// Consecutive no-op autoscaler evaluations with nothing running:
+    /// past a small bound the tick stops being scheduled, so a queue
+    /// the autoscaler cannot help (max_nodes reached, unfit shape)
+    /// surfaces as the deadlock error instead of ticking forever.
+    stalled_checks: u32,
+    grow_node: Option<NodeSpec>,
+    /// Arrival-ordered stream of registrations, consumed from the
+    /// front as the clock reaches each arrival (ties resolve in
+    /// registration order, matching merged-DAG set ordering).
+    pending: VecDeque<PendingMember>,
+    /// Per-slot live drivers / finished reports.
+    drivers: Vec<Option<WorkflowDriver>>,
+    done: Vec<Option<RunReport>>,
+    /// Slots with a live driver, kept sorted by slot: the event loop
+    /// walks only live members, so per-event cost tracks live state
+    /// (like memory), not the total stream length.
+    live_slots: Vec<usize>,
+    /// Global uid slab: uid -> (driver slot, driver-local uid) and the
+    /// launchable spec. Completed uids are recycled via the free list,
+    /// bounding live entries by in-flight + queued tasks.
+    route: Vec<(usize, usize)>,
+    specs: Vec<TaskSpec>,
+    free_uids: Vec<usize>,
+    live_uids: usize,
+    peak_live: usize,
+    in_flight: usize,
+    sched_rounds: usize,
+    sched_wall: Duration,
+    /// Only invoke the scheduler when the system state changed (new
+    /// submissions or freed resources) — avoids O(queue) rescans on
+    /// clock-advance iterations.
+    sched_dirty: bool,
+}
+
+/// Normalize an attached [`ResourcePlan`] into loop state: events
+/// sorted by time, the autoscaler, and the grow-node shape (defaulting
+/// to the cluster's first node; its absence is an error whenever
+/// anything could grow). One code path for fresh runs and resumes.
+fn normalize_plan(
+    plan: ResourcePlan,
+    cluster: &ClusterSpec,
+) -> Result<(Vec<ResizeEvent>, Option<AutoscalePolicy>, Option<NodeSpec>)> {
+    let mut evs = plan.events;
+    evs.sort_by(|a, b| a.at.total_cmp(&b.at));
+    let node = plan.node.or_else(|| cluster.nodes.first().copied());
+    if node.is_none() && (plan.autoscale.is_some() || evs.iter().any(|e| e.delta > 0)) {
+        return Err(Error::Config(
+            "resource plan: no node shape to grow by \
+             (empty cluster and no plan.node)"
+                .into(),
+        ));
+    }
+    Ok((evs, plan.autoscale, node))
+}
+
+impl EngineLoop {
+    /// Fresh loop state over the coordinator's registered workflows.
+    fn fresh(coord: Coordinator, plan: Option<ResourcePlan>) -> Result<EngineLoop> {
+        let agent = Agent::new(&coord.cluster, coord.cfg.policy);
+        let capacity = CapacityTimeline::of_cluster(&coord.cluster);
+        let (resize_events, autoscale, grow_node) = match plan {
+            Some(p) => normalize_plan(p, &coord.cluster)?,
             None => (Vec::new(), None, None),
         };
-        let mut next_resize = 0usize;
-        let mut next_check: Option<f64> = autoscale.as_ref().map(|p| p.interval);
-        // Consecutive no-op autoscaler evaluations with nothing running:
-        // past a small bound the tick stops being scheduled, so a queue
-        // the autoscaler cannot help (max_nodes reached, unfit shape)
-        // surfaces as the deadlock error instead of ticking forever.
-        let mut stalled_checks = 0u32;
-        let n_members = self.pending.len();
-        // Per-slot live drivers / finished reports.
+        let next_check = autoscale.as_ref().map(|p| p.interval);
+        let n_members = coord.pending.len();
         let mut drivers: Vec<Option<WorkflowDriver>> = Vec::new();
         drivers.resize_with(n_members, || None);
         let mut done: Vec<Option<RunReport>> = Vec::new();
         done.resize_with(n_members, || None);
-        // Arrival-ordered stream of registrations, consumed as the
-        // clock reaches each arrival (ties resolve in registration
-        // order, matching merged-DAG set ordering).
-        let mut pending_list = std::mem::take(&mut self.pending);
-        pending_list.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.slot.cmp(&b.slot)));
-        let mut pending = pending_list.into_iter().peekable();
-        // Slots with a live driver, kept sorted by slot: the event loop
-        // walks only live members, so per-event cost tracks live state
-        // (like memory), not the total stream length.
-        let mut live_slots: Vec<usize> = Vec::new();
+        let mut pending_list = coord.pending;
+        pending_list
+            .sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.slot.cmp(&b.slot)));
+        Ok(EngineLoop {
+            cfg: coord.cfg,
+            cluster: coord.cluster,
+            next_set_stream: coord.next_set_stream,
+            next_pipeline: coord.next_pipeline,
+            agent,
+            capacity,
+            resize_events,
+            next_resize: 0,
+            autoscale,
+            next_check,
+            stalled_checks: 0,
+            grow_node,
+            pending: pending_list.into(),
+            drivers,
+            done,
+            live_slots: Vec::new(),
+            route: Vec::new(),
+            specs: Vec::new(),
+            free_uids: Vec::new(),
+            live_uids: 0,
+            peak_live: 0,
+            in_flight: 0,
+            sched_rounds: 0,
+            sched_wall: Duration::ZERO,
+            sched_dirty: true,
+        })
+    }
 
-        // Global uid slab: uid -> (driver slot, driver-local uid) and
-        // the launchable spec. Completed uids are recycled via the free
-        // list, bounding live entries by in-flight + queued tasks.
-        let mut route: Vec<(usize, usize)> = Vec::new();
-        let mut specs: Vec<TaskSpec> = Vec::new();
-        let mut free_uids: Vec<usize> = Vec::new();
-        let mut live_uids = 0usize;
-        let mut peak_live = 0usize;
+    /// Rebuild loop state from a checkpoint. Re-launches every
+    /// in-flight task into `executor` with its original start time and
+    /// sampled duration (so completions land at the original instants)
+    /// and fast-forwards the clock to the snapshot time. A `plan` given
+    /// here (via [`Coordinator::set_resource_plan`] after restore)
+    /// replaces the snapshot's remaining plan.
+    fn from_snapshot(
+        s: SimSnapshot,
+        plan: Option<ResourcePlan>,
+        executor: &mut dyn Executor,
+    ) -> Result<EngineLoop> {
+        let SimSnapshot {
+            now,
+            cfg,
+            cluster,
+            n_members,
+            next_set_stream,
+            next_pipeline,
+            pending,
+            drivers: driver_entries,
+            finished,
+            slab_len,
+            live_tasks,
+            free_uids,
+            peak_live,
+            nodes,
+            draining,
+            cursor,
+            span_order,
+            running,
+            queue,
+            capacity,
+            resize_events,
+            autoscale,
+            next_check,
+            stalled_checks,
+            grow_node,
+            sched_rounds,
+            sched_dirty,
+        } = s;
 
-        let mut in_flight = 0usize;
-        let mut sched_rounds = 0usize;
-        let mut sched_wall = Duration::ZERO;
-        // Only invoke the scheduler when the system state changed (new
-        // submissions or freed resources) — avoids O(queue) rescans on
-        // clock-advance iterations.
-        let mut sched_dirty = true;
+        // Members: live drivers, finished reports, not-yet-arrived.
+        let mut drivers: Vec<Option<WorkflowDriver>> = Vec::new();
+        drivers.resize_with(n_members, || None);
+        for e in driver_entries {
+            let slot = e.slot;
+            drivers[slot] = Some(WorkflowDriver::from_state(e.state, &cfg)?);
+        }
+        let mut done: Vec<Option<RunReport>> = Vec::new();
+        done.resize_with(n_members, || None);
+        for m in finished {
+            // Rebuild against the member's *fold-time* capacity (not
+            // the checkpoint-time one) so its utilization trace is
+            // bit-identical to the uninterrupted run's.
+            done[m.slot] = Some(RunReport::from_records_capacity(
+                m.workflow,
+                m.mode,
+                m.records,
+                m.capacity,
+                m.failed_tasks,
+            ));
+        }
+        let live_slots: Vec<usize> = drivers
+            .iter()
+            .enumerate()
+            .filter_map(|(i, d)| d.as_ref().map(|_| i))
+            .collect();
+        let mut pending_list = pending;
+        pending_list
+            .sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.slot.cmp(&b.slot)));
 
+        // Uid slab: free slots hold inert placeholders.
+        let placeholder = TaskSpec {
+            uid: 0,
+            set_idx: 0,
+            ordinal: 0,
+            tx: 0.0,
+            req: ResourceRequest::new(0, 0),
+            kind: TaskKind::Stress,
+        };
+        let mut specs: Vec<TaskSpec> = vec![placeholder; slab_len];
+        let mut route: Vec<(usize, usize)> = vec![(0, 0); slab_len];
+        for lt in &live_tasks {
+            route[lt.uid] = (lt.slot, lt.local);
+            let mut spec = lt.spec.clone();
+            spec.uid = lt.uid;
+            specs[lt.uid] = spec;
+        }
+        let live_uids = live_tasks.len();
+
+        // Agent: allocator with the snapshot occupancy re-claimed
+        // (claims precede drains — a draining node's still-busy slices
+        // need its free capacity on the books to be claimable), the
+        // scheduler queue re-pushed in insertion order, and the
+        // uid -> placement table of running work.
+        let mut alloc = Allocator::new(&ClusterSpec { name: cluster.name.clone(), nodes });
+        for r in &running {
+            alloc.claim(&r.placement)?;
+        }
+        for (i, d) in draining.iter().enumerate() {
+            if *d {
+                alloc.drain_node(i)?;
+            }
+        }
+        alloc.set_cursor(cursor);
+        // A valid-at-checkpoint spanning order is restored verbatim:
+        // its equal-free tie-breaks are repair-history dependent and a
+        // fresh sort could pick different nodes for the next spanning
+        // placement.
+        if let Some(order) = &span_order {
+            alloc.restore_span_order(order)?;
+        }
+        let mut sched = Scheduler::new(cfg.policy);
+        for q in &queue {
+            sched.push(*q);
+        }
+        let mut running_table: Vec<Option<Placement>> = vec![None; slab_len];
+        for r in &running {
+            running_table[r.uid] = Some(r.placement.clone());
+        }
+        let agent = Agent::from_parts(alloc, sched, running_table);
+        let in_flight = running.len();
+
+        // Re-launch in-flight work into the fresh executor: original
+        // start time + original total duration, so every completion
+        // lands at exactly the instant the uninterrupted run saw.
+        for r in &running {
+            let (slot, local) = route[r.uid];
+            let d = drivers[slot].as_ref().ok_or_else(|| {
+                Error::Config(format!(
+                    "snapshot: running task {} routed to slot {slot} with no live driver",
+                    r.uid
+                ))
+            })?;
+            if local >= d.record_count() {
+                return Err(Error::Config(format!(
+                    "snapshot: running task {} has no task record",
+                    r.uid
+                )));
+            }
+            let started = d.record(local).started;
+            if !started.is_finite() {
+                return Err(Error::Config(format!(
+                    "snapshot: running task {} has no start time",
+                    r.uid
+                )));
+            }
+            executor.launch(&RunningTask {
+                uid: r.uid,
+                tx: specs[r.uid].tx + cfg.task_overhead,
+                started_at: started,
+                kind: Some(specs[r.uid].kind.clone()),
+            });
+        }
+        executor.advance_to(now);
+
+        // Plan: an explicit plan attached after restore replaces the
+        // checkpointed run's remnant (events are absolute engine times;
+        // anything at or before `now` applies at the resume instant).
+        let (resize_events, autoscale, next_check, stalled_checks, grow_node) =
+            match plan {
+                Some(p) => {
+                    let (evs, auto, node) = normalize_plan(p, &cluster)?;
+                    let nc = auto.as_ref().map(|a| a.interval);
+                    (evs, auto, nc, 0, node)
+                }
+                None => (resize_events, autoscale, next_check, stalled_checks, grow_node),
+            };
+
+        Ok(EngineLoop {
+            cfg,
+            cluster,
+            next_set_stream,
+            next_pipeline,
+            agent,
+            capacity,
+            resize_events,
+            next_resize: 0,
+            autoscale,
+            next_check,
+            stalled_checks,
+            grow_node,
+            pending: pending_list.into(),
+            drivers,
+            done,
+            live_slots,
+            route,
+            specs,
+            free_uids,
+            live_uids,
+            peak_live,
+            in_flight,
+            sched_rounds,
+            sched_wall: Duration::ZERO,
+            sched_dirty,
+        })
+    }
+
+    /// Capture the complete loop state at engine time `now` — always a
+    /// loop top: completions at exactly `now` have been drained (they
+    /// advanced the clock), while arrivals/activations/resizes due at
+    /// `now` are still pending. Restore re-enters the loop at the same
+    /// point.
+    fn into_snapshot(self, now: f64) -> SimSnapshot {
+        let mut driver_entries = Vec::new();
+        for (slot, d) in self.drivers.iter().enumerate() {
+            if let Some(d) = d {
+                driver_entries.push(DriverEntry { slot, state: d.snapshot_state() });
+            }
+        }
+        let mut finished = Vec::new();
+        for (slot, r) in self.done.iter().enumerate() {
+            if let Some(r) = r {
+                finished.push(FinishedMember {
+                    slot,
+                    workflow: r.workflow.clone(),
+                    mode: r.mode,
+                    records: r.records.clone(),
+                    // `r.capacity` still holds the fold-time timeline
+                    // here (the end-of-run overwrite with the final
+                    // timeline only happens when the run completes).
+                    capacity: r.capacity.clone(),
+                    failed_tasks: r.failed_tasks,
+                });
+            }
+        }
+        let pending: Vec<PendingMember> = self.pending.into_iter().collect();
+        let free: std::collections::HashSet<usize> =
+            self.free_uids.iter().copied().collect();
+        let mut live_tasks = Vec::new();
+        for uid in 0..self.specs.len() {
+            if free.contains(&uid) {
+                continue;
+            }
+            let (slot, local) = self.route[uid];
+            live_tasks.push(LiveTask { uid, slot, local, spec: self.specs[uid].clone() });
+        }
+        let running: Vec<RunningEntry> = self
+            .agent
+            .running_placements()
+            .into_iter()
+            .map(|(uid, placement)| RunningEntry { uid, placement })
+            .collect();
+        let queue = self.agent.queued_tasks().to_vec();
+        let alloc = self.agent.allocator();
+        let nodes = alloc.spec().nodes.clone();
+        let draining: Vec<bool> =
+            (0..alloc.node_count()).map(|i| alloc.is_draining(i)).collect();
+        let cursor = alloc.cursor();
+        let span_order = alloc.span_order_state().map(|o| o.to_vec());
+        SimSnapshot {
+            now,
+            cfg: self.cfg,
+            cluster: self.cluster,
+            n_members: self.done.len(),
+            next_set_stream: self.next_set_stream,
+            next_pipeline: self.next_pipeline,
+            pending,
+            drivers: driver_entries,
+            finished,
+            slab_len: self.route.len(),
+            live_tasks,
+            free_uids: self.free_uids,
+            peak_live: self.peak_live,
+            nodes,
+            draining,
+            cursor,
+            span_order,
+            running,
+            queue,
+            capacity: self.capacity,
+            resize_events: self.resize_events[self.next_resize..].to_vec(),
+            autoscale: self.autoscale,
+            next_check: self.next_check,
+            stalled_checks: self.stalled_checks,
+            grow_node: self.grow_node,
+            sched_rounds: self.sched_rounds,
+            sched_dirty: self.sched_dirty,
+        }
+    }
+
+    /// The event loop (see the module docs for the step numbering).
+    fn drive(
+        mut self,
+        executor: &mut dyn Executor,
+        checkpoint_at: Option<f64>,
+    ) -> Result<RunOutcome> {
         loop {
             let now = executor.now();
+
+            // Preemption point: snapshot at the loop top. Completions
+            // at exactly `now` were drained on the way here; pending
+            // arrivals/activations/resizes due at `now` are captured
+            // unprocessed — restore re-enters here, so the resumed run
+            // replays the same iteration the uninterrupted run would
+            // have executed next.
+            if let Some(t_ck) = checkpoint_at {
+                if now + 1e-12 >= t_ck {
+                    return Ok(RunOutcome::Checkpointed(Box::new(
+                        self.into_snapshot(now),
+                    )));
+                }
+            }
 
             // 0. Elasticity: apply every timed resize that is due, then
             // at most one (catch-up) autoscaler evaluation. The timeline
@@ -230,51 +678,60 @@ impl Coordinator {
             // releases (step 4) — so cores in use never exceed the
             // recorded capacity. Growth can unblock queued work, so it
             // re-arms the scheduler.
-            while next_resize < resize_events.len()
-                && resize_events[next_resize].at <= now + 1e-12
+            while self.next_resize < self.resize_events.len()
+                && self.resize_events[self.next_resize].at <= now + 1e-12
             {
-                let ev = resize_events[next_resize];
-                next_resize += 1;
+                let ev = self.resize_events[self.next_resize];
+                self.next_resize += 1;
                 if ev.delta > 0 {
-                    agent.grow(ev.delta as usize, grow_node.expect("validated above"));
-                    sched_dirty = true;
+                    self.agent
+                        .grow(ev.delta as usize, self.grow_node.expect("validated above"));
+                    self.sched_dirty = true;
                 } else {
-                    agent.drain(ev.delta.unsigned_abs() as usize);
+                    self.agent.drain(ev.delta.unsigned_abs() as usize);
                 }
-                record_offered(&mut capacity, &agent, now);
+                record_offered(&mut self.capacity, &self.agent, now);
             }
-            if let (Some(p), Some(t)) = (&autoscale, next_check) {
-                if t <= now + 1e-12 {
+            // Clone the policy only on iterations where a check is
+            // actually due (this is the event loop's hot path).
+            if self.next_check.is_some_and(|t| t <= now + 1e-12) {
+                if let (Some(p), Some(t)) = (self.autoscale.clone(), self.next_check) {
                     // One evaluation per wakeup; the next check lands on
                     // the first interval multiple strictly after `now`.
                     let missed = ((now - t) / p.interval).floor().max(0.0) + 1.0;
-                    next_check = Some(t + missed * p.interval);
-                    let delta = autoscale_delta(p, &agent, in_flight);
+                    self.next_check = Some(t + missed * p.interval);
+                    let delta = autoscale_delta(&p, &self.agent, self.in_flight);
                     let acted = if delta > 0 {
-                        agent.grow(delta as usize, grow_node.expect("validated above"));
-                        sched_dirty = true;
+                        self.agent
+                            .grow(delta as usize, self.grow_node.expect("validated above"));
+                        self.sched_dirty = true;
                         true
                     } else if delta < 0 {
-                        agent.drain(delta.unsigned_abs() as usize) > 0
+                        self.agent.drain(delta.unsigned_abs() as usize) > 0
                     } else {
                         false
                     };
                     if acted {
-                        record_offered(&mut capacity, &agent, now);
+                        record_offered(&mut self.capacity, &self.agent, now);
                     }
-                    if acted || in_flight > 0 {
-                        stalled_checks = 0;
+                    if acted || self.in_flight > 0 {
+                        self.stalled_checks = 0;
                     } else {
-                        stalled_checks += 1;
+                        self.stalled_checks += 1;
                     }
                 }
             }
 
             // 1. Materialize every registered workflow whose arrival is
             // due; its roots release in step 2 below.
-            while pending.peek().is_some_and(|p| p.arrival <= now + 1e-12) {
-                let p = pending.next().expect("peeked pending arrival");
+            while self
+                .pending
+                .front()
+                .is_some_and(|p| p.arrival <= now + 1e-12)
+            {
+                let p = self.pending.pop_front().expect("peeked pending arrival");
                 // Validated at registration; compile only.
+                let slot = p.slot;
                 let d = WorkflowDriver::compile_prevalidated(
                     p.wf,
                     p.mode,
@@ -283,65 +740,64 @@ impl Coordinator {
                     p.set_stream,
                     p.pipeline_base,
                 );
-                drivers[p.slot] = Some(d);
-                if let Err(pos) = live_slots.binary_search(&p.slot) {
-                    live_slots.insert(pos, p.slot);
+                self.drivers[slot] = Some(d);
+                if let Err(pos) = self.live_slots.binary_search(&slot) {
+                    self.live_slots.insert(pos, slot);
                 }
             }
 
             // 2. Release activations that are due, in slot order (this
             // matches merged-DAG set ordering: member k's sets precede
             // member k+1's).
-            for li in 0..live_slots.len() {
-                let di = live_slots[li];
-                let subs = drivers[di]
+            for &di in &self.live_slots {
+                let subs = self.drivers[di]
                     .as_mut()
                     .expect("live slot holds a driver")
                     .step(EngineEvent::ClockAdvanced { now });
                 for sub in subs {
                     let local = sub.spec.uid;
                     let mut spec = sub.spec;
-                    let gid = match free_uids.pop() {
+                    let gid = match self.free_uids.pop() {
                         Some(g) => {
                             spec.uid = g;
-                            specs[g] = spec;
-                            route[g] = (di, local);
+                            self.specs[g] = spec;
+                            self.route[g] = (di, local);
                             g
                         }
                         None => {
-                            let g = specs.len();
+                            let g = self.specs.len();
                             spec.uid = g;
-                            specs.push(spec);
-                            route.push((di, local));
+                            self.specs.push(spec);
+                            self.route.push((di, local));
                             g
                         }
                     };
-                    agent.submit(&specs[gid], sub.priority, now);
-                    live_uids += 1;
-                    peak_live = peak_live.max(live_uids);
-                    sched_dirty = true;
+                    self.agent.submit(&self.specs[gid], sub.priority, now);
+                    self.live_uids += 1;
+                    self.peak_live = self.peak_live.max(self.live_uids);
+                    self.sched_dirty = true;
                     // Fresh work re-arms a parked autoscaler: the rescue
                     // path (grow when tasks queue with nothing running)
                     // must get its chance before the deadlock check.
-                    stalled_checks = 0;
+                    self.stalled_checks = 0;
                 }
             }
 
             // 3. Schedule everything that fits.
-            let placed = if sched_dirty {
+            let placed = if self.sched_dirty {
                 let t0 = Instant::now();
-                let placed = agent.schedule();
-                sched_wall += t0.elapsed();
-                sched_rounds += 1;
-                sched_dirty = false;
+                let placed = self.agent.schedule();
+                self.sched_wall += t0.elapsed();
+                self.sched_rounds += 1;
+                self.sched_dirty = false;
                 placed
             } else {
                 Vec::new()
             };
             for s in &placed {
-                let spec = &specs[s.uid];
-                let (di, local) = route[s.uid];
-                drivers[di]
+                let spec = &self.specs[s.uid];
+                let (di, local) = self.route[s.uid];
+                self.drivers[di]
                     .as_mut()
                     .expect("placed task belongs to a live driver")
                     .on_started(local, now);
@@ -351,36 +807,52 @@ impl Coordinator {
                     started_at: now,
                     kind: Some(spec.kind.clone()),
                 });
-                in_flight += 1;
+                self.in_flight += 1;
             }
 
             // 4. Wait for progress.
-            let mut next_deferred = live_slots
+            let mut next_deferred = self
+                .live_slots
                 .iter()
                 .filter_map(|&di| {
-                    drivers[di]
+                    self.drivers[di]
                         .as_ref()
                         .expect("live slot holds a driver")
                         .next_activation()
                 })
                 .fold(f64::INFINITY, f64::min);
-            if let Some(p) = pending.peek() {
+            if let Some(p) = self.pending.front() {
                 next_deferred = next_deferred.min(p.arrival);
             }
             // Unapplied timed resizes are wake-ups too (a future grow
             // may be the only thing that can serve a starved queue).
-            if next_resize < resize_events.len() {
-                next_deferred = next_deferred.min(resize_events[next_resize].at);
+            if self.next_resize < self.resize_events.len() {
+                next_deferred = next_deferred.min(self.resize_events[self.next_resize].at);
             }
             // The autoscaler only ticks while there is work its decision
             // could affect, and parks after repeated no-op evaluations
             // with nothing running (see `stalled_checks`).
-            if let Some(t) = next_check {
-                if (in_flight > 0 || agent.queue_len() > 0) && stalled_checks < 3 {
+            if let Some(t) = self.next_check {
+                if (self.in_flight > 0 || self.agent.queue_len() > 0)
+                    && self.stalled_checks < 3
+                {
                     next_deferred = next_deferred.min(t);
                 }
             }
-            if in_flight > 0 {
+            // The checkpoint time is a wake-up: the clock must land on
+            // it exactly so the snapshot's `now` is the requested one.
+            // Only while the simulation is still active, though — a run
+            // that drains before the checkpoint must complete normally,
+            // not idle forward to t_ck and snapshot a finished sim.
+            let sim_active = self.in_flight > 0
+                || next_deferred.is_finite()
+                || self.agent.queue_len() > 0;
+            if let Some(t_ck) = checkpoint_at {
+                if sim_active {
+                    next_deferred = next_deferred.min(t_ck);
+                }
+            }
+            if self.in_flight > 0 {
                 match executor.peek_next_completion() {
                     // An activation is due before the next completion:
                     // fast-forward to it (virtual time).
@@ -392,10 +864,11 @@ impl Coordinator {
                     // Real executor: wait no longer than the next due
                     // activation; wake early if a completion lands.
                     None => {
-                        if next_deferred.is_finite() && next_deferred > now + 1e-12 {
-                            if !executor.wait_until(next_deferred) {
-                                continue; // deadline hit; release at loop top
-                            }
+                        if next_deferred.is_finite()
+                            && next_deferred > now + 1e-12
+                            && !executor.wait_until(next_deferred)
+                        {
+                            continue; // deadline hit; release at loop top
                         }
                     }
                 }
@@ -404,16 +877,16 @@ impl Coordinator {
                     return Err(Error::Engine("executor lost in-flight tasks".into()));
                 }
                 for c in completions {
-                    in_flight -= 1;
-                    agent.complete(c.uid);
-                    sched_dirty = true; // resources were freed
-                    let (di, local) = route[c.uid];
+                    self.in_flight -= 1;
+                    self.agent.complete(c.uid);
+                    self.sched_dirty = true; // resources were freed
+                    let (di, local) = self.route[c.uid];
                     // Recycle the global uid: its spec/route slot (and
                     // the agent's placement entry) are now reusable.
-                    free_uids.push(c.uid);
-                    live_uids -= 1;
+                    self.free_uids.push(c.uid);
+                    self.live_uids -= 1;
                     {
-                        let d = drivers[di]
+                        let d = self.drivers[di]
                             .as_mut()
                             .expect("completion routed to a live driver");
                         let _ = d.step(EngineEvent::TaskCompleted {
@@ -436,23 +909,23 @@ impl Coordinator {
                     // Fold finished drivers into their report right
                     // away: streamed runs never accumulate dead driver
                     // state.
-                    if drivers[di].as_ref().is_some_and(|d| d.is_done()) {
-                        let d = drivers[di].take().expect("checked is_some");
-                        done[di] = Some(d.into_report(&capacity));
-                        if let Ok(pos) = live_slots.binary_search(&di) {
-                            live_slots.remove(pos);
+                    if self.drivers[di].as_ref().is_some_and(|d| d.is_done()) {
+                        let d = self.drivers[di].take().expect("checked is_some");
+                        self.done[di] = Some(d.into_report(&self.capacity));
+                        if let Ok(pos) = self.live_slots.binary_search(&di) {
+                            self.live_slots.remove(pos);
                         }
                     }
                 }
                 // Graceful shrink: resources this batch released on
                 // draining nodes left the allocation at this instant —
                 // a no-op compare for ordinary completions.
-                record_offered(&mut capacity, &agent, executor.now());
+                record_offered(&mut self.capacity, &self.agent, executor.now());
             } else if next_deferred.is_finite() {
                 // Nothing running; sleep (real) or fast-forward (virtual)
                 // to the next activation — e.g. a workflow yet to arrive.
                 executor.wait_until(next_deferred);
-            } else if agent.queue_len() > 0 {
+            } else if self.agent.queue_len() > 0 {
                 return Err(Error::Engine(
                     "deadlock: tasks queued but nothing running (unsatisfiable request?)"
                         .into(),
@@ -464,28 +937,30 @@ impl Coordinator {
 
         // Degenerate members (zero-task workflows) never see a
         // completion; finalize whatever is left.
-        for di in 0..drivers.len() {
-            if let Some(d) = drivers[di].take() {
+        let drained: Vec<Option<WorkflowDriver>> = std::mem::take(&mut self.drivers);
+        for (di, slot) in drained.into_iter().enumerate() {
+            if let Some(d) = slot {
                 debug_assert!(d.is_done());
-                done[di] = Some(d.into_report(&capacity));
+                self.done[di] = Some(d.into_report(&self.capacity));
             }
         }
+        let n_members = self.done.len();
         let mut reports: Vec<RunReport> = Vec::with_capacity(n_members);
-        for slot in done {
+        for slot in self.done {
             reports.push(slot.expect("every registered workflow produces a report"));
         }
         for r in &mut reports {
-            r.sched_rounds = sched_rounds;
-            r.sched_wall = sched_wall;
-            r.peak_live_tasks = peak_live;
+            r.sched_rounds = self.sched_rounds;
+            r.sched_wall = self.sched_wall;
+            r.peak_live_tasks = self.peak_live;
             // The full (final) timeline replaces each member's
             // fold-time snapshot: member utilization was already
             // integrated over the member's own window, for which the
             // snapshot was complete, and downstream merges (campaign /
             // traffic reports) need the whole run's capacity history.
-            r.capacity = capacity.clone();
+            r.capacity = self.capacity.clone();
         }
-        Ok(reports)
+        Ok(RunOutcome::Completed(reports))
     }
 }
 
@@ -758,5 +1233,111 @@ mod tests {
         wf.sets[0].req = ResourceRequest::new(0, 3); // no GPUs exist
         assert!(coord.add_workflow(wf, ExecutionMode::Asynchronous, 0.0).is_err());
         assert_eq!(coord.driver_count(), 0);
+    }
+
+    // ----- checkpoint / resume ----------------------------------------
+
+    fn contended_coord() -> Coordinator {
+        // 1 core, three 10 s workflows (t = 0, 0, 12): at t = 5 one
+        // task is running, one queued, one pending arrival — every
+        // member population of the snapshot is non-empty.
+        let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+        let cfg = EngineConfig::ideal();
+        let mut coord = Coordinator::new(&cluster, &cfg);
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 0.0).unwrap();
+        coord.add_workflow(solo(10.0), ExecutionMode::Asynchronous, 12.0).unwrap();
+        coord
+    }
+
+    #[test]
+    fn checkpoint_then_restore_is_bit_identical() {
+        let mut ex = VirtualExecutor::new();
+        let straight = contended_coord().run(&mut ex).unwrap();
+
+        let mut ex1 = VirtualExecutor::new();
+        let outcome = contended_coord().checkpoint(&mut ex1, 5.0).unwrap();
+        let RunOutcome::Checkpointed(snap) = outcome else {
+            panic!("run must reach the t = 5 checkpoint before finishing")
+        };
+        assert_eq!(snap.now, 5.0);
+        assert_eq!(snap.running.len(), 1, "one task in flight at t = 5");
+        assert_eq!(snap.queue.len(), 1, "one task queued at t = 5");
+        assert_eq!(snap.pending.len(), 1, "one arrival still pending at t = 5");
+        let mut ex2 = VirtualExecutor::new();
+        let resumed = Coordinator::restore(*snap).unwrap().run(&mut ex2).unwrap();
+
+        assert_eq!(resumed.len(), straight.len());
+        for (a, b) in straight.iter().zip(&resumed) {
+            assert_eq!(a.makespan, b.makespan, "exact f64 equality required");
+            assert_eq!(a.records.len(), b.records.len());
+            for (ra, rb) in a.records.iter().zip(&b.records) {
+                assert_eq!(ra.submitted.to_bits(), rb.submitted.to_bits());
+                assert_eq!(ra.started.to_bits(), rb.started.to_bits());
+                assert_eq!(ra.finished.to_bits(), rb.finished.to_bits());
+            }
+            assert_eq!(a.capacity, b.capacity);
+            assert_eq!(a.peak_live_tasks, b.peak_live_tasks);
+        }
+    }
+
+    #[test]
+    fn checkpoint_at_zero_and_past_completion() {
+        // t = 0: nothing has happened yet; resume reproduces the run.
+        let mut ex = VirtualExecutor::new();
+        let outcome = contended_coord().run_until(&mut ex, Some(0.0)).unwrap();
+        let RunOutcome::Checkpointed(snap) = outcome else {
+            panic!("t = 0 checkpoint must fire before any work")
+        };
+        assert!(snap.running.is_empty());
+        let mut ex2 = VirtualExecutor::new();
+        let resumed = Coordinator::restore(*snap).unwrap().run(&mut ex2).unwrap();
+        assert!((resumed[2].makespan - 30.0).abs() < 1e-9);
+
+        // A checkpoint beyond the last finish: the run just completes.
+        let mut ex3 = VirtualExecutor::new();
+        match contended_coord().run_until(&mut ex3, Some(1e9)).unwrap() {
+            RunOutcome::Completed(reports) => assert_eq!(reports.len(), 3),
+            RunOutcome::Checkpointed(_) => panic!("run finishes before t = 1e9"),
+        }
+    }
+
+    #[test]
+    fn restored_coordinator_rejects_new_registrations() {
+        let mut ex = VirtualExecutor::new();
+        let RunOutcome::Checkpointed(snap) =
+            contended_coord().run_until(&mut ex, Some(5.0)).unwrap()
+        else {
+            panic!("must checkpoint")
+        };
+        let mut coord = Coordinator::restore(*snap).unwrap();
+        assert!(coord
+            .add_workflow(solo(1.0), ExecutionMode::Asynchronous, 0.0)
+            .is_err());
+    }
+
+    #[test]
+    fn resume_with_plan_replaces_the_remnant_plan() {
+        // Checkpoint mid-run, then resume with an immediate +1-node
+        // grow: the queued task starts at the resume instant instead of
+        // waiting for the busy core.
+        let mut ex = VirtualExecutor::new();
+        let RunOutcome::Checkpointed(snap) =
+            contended_coord().run_until(&mut ex, Some(5.0)).unwrap()
+        else {
+            panic!("must checkpoint")
+        };
+        let mut coord = Coordinator::restore(*snap).unwrap();
+        coord
+            .set_resource_plan(crate::pilot::ResourcePlan::new().resize(0.0, 1))
+            .unwrap();
+        let mut ex2 = VirtualExecutor::new();
+        let reports = coord.run(&mut ex2).unwrap();
+        assert!((reports[0].makespan - 10.0).abs() < 1e-9);
+        assert!(
+            (reports[1].makespan - 15.0).abs() < 1e-9,
+            "queued task must start on the grown node at the t = 5 resume, got {}",
+            reports[1].makespan
+        );
     }
 }

@@ -31,7 +31,7 @@
 use super::plan::{compile, ExecutionMode, JobSet};
 use super::{EngineConfig, RunReport};
 use crate::entk::Workflow;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::{CapacityTimeline, TaskRecord};
 use crate::task::TaskSpec;
 use crate::util::rng::Rng;
@@ -56,6 +56,27 @@ pub struct Submission {
     /// Scheduling priority, already globally namespaced (the driver's
     /// pipeline offset + the jobset's pipeline index).
     pub priority: u64,
+}
+
+/// Serializable mid-run driver state (the checkpoint subsystem's view
+/// of one live workflow). Only the *evolving* state is captured: the
+/// compiled jobsets, branch decomposition and children lists are pure
+/// functions of `(wf, mode)` and are recompiled on restore, so the
+/// snapshot stays schema-stable as compilation internals change.
+#[derive(Debug, Clone)]
+pub struct DriverState {
+    pub wf: Workflow,
+    pub mode: ExecutionMode,
+    pub arrival: f64,
+    pub set_stream_offset: u64,
+    pub pipeline_offset: u64,
+    pub deps_left: Vec<usize>,
+    pub tasks_left: Vec<usize>,
+    pub jobset_of: Vec<usize>,
+    pub records: Vec<TaskRecord>,
+    pub deferred: Vec<(f64, usize)>,
+    pub tasks_remaining: u64,
+    pub failed_tasks: usize,
 }
 
 /// One workflow's complete execution state, progressed via [`step`].
@@ -175,6 +196,69 @@ impl WorkflowDriver {
         }
     }
 
+    /// Capture the evolving state for a checkpoint (see [`DriverState`]).
+    pub fn snapshot_state(&self) -> DriverState {
+        DriverState {
+            wf: self.wf.clone(),
+            mode: self.mode,
+            arrival: self.arrival,
+            set_stream_offset: self.set_stream_offset,
+            pipeline_offset: self.pipeline_offset,
+            deps_left: self.deps_left.clone(),
+            tasks_left: self.tasks_left.clone(),
+            jobset_of: self.jobset_of.clone(),
+            records: self.records.clone(),
+            deferred: self.deferred.clone(),
+            tasks_remaining: self.tasks_remaining,
+            failed_tasks: self.failed_tasks,
+        }
+    }
+
+    /// Rebuild a live driver from a checkpointed [`DriverState`]:
+    /// recompiles the jobsets from `(wf, mode)` and overlays the
+    /// captured countdowns, records and deferred activations. Errors
+    /// when the state is inconsistent with the recompiled plan.
+    pub fn from_state(s: DriverState, cfg: &EngineConfig) -> Result<WorkflowDriver> {
+        let mut d = Self::new(
+            s.wf,
+            s.mode,
+            cfg,
+            s.arrival,
+            s.set_stream_offset,
+            s.pipeline_offset,
+        )?;
+        let n_js = d.jobsets.len();
+        if s.deps_left.len() != n_js || s.tasks_left.len() != n_js {
+            return Err(Error::Config(format!(
+                "driver state: {} countdown entries for {} jobsets",
+                s.deps_left.len(),
+                n_js
+            )));
+        }
+        if s.jobset_of.len() != s.records.len() {
+            return Err(Error::Config(format!(
+                "driver state: {} task records but {} jobset owners",
+                s.records.len(),
+                s.jobset_of.len()
+            )));
+        }
+        if s.jobset_of.iter().any(|&js| js >= n_js)
+            || s.deferred.iter().any(|&(_, js)| js >= n_js)
+        {
+            return Err(Error::Config(
+                "driver state: jobset index out of range".into(),
+            ));
+        }
+        d.deps_left = s.deps_left;
+        d.tasks_left = s.tasks_left;
+        d.jobset_of = s.jobset_of;
+        d.records = s.records;
+        d.deferred = s.deferred;
+        d.tasks_remaining = s.tasks_remaining;
+        d.failed_tasks = s.failed_tasks;
+        Ok(d)
+    }
+
     /// Consume one event; return the submissions it made ready.
     pub fn step(&mut self, ev: EngineEvent) -> Vec<Submission> {
         match ev {
@@ -192,8 +276,7 @@ impl WorkflowDriver {
                     // Jobset fully complete -> count down its children;
                     // those reaching zero become due after the stage
                     // transition overhead.
-                    for ci in 0..self.children[js].len() {
-                        let child = self.children[js][ci];
+                    for &child in &self.children[js] {
                         self.deps_left[child] -= 1;
                         if self.deps_left[child] == 0 {
                             self.deferred.push((finished_at + self.stage_overhead, child));
@@ -281,6 +364,12 @@ impl WorkflowDriver {
     /// Lifecycle record of an activated task (local uid).
     pub fn record(&self, uid: usize) -> &TaskRecord {
         &self.records[uid]
+    }
+
+    /// Number of activated task records so far (bounds-check for
+    /// restore paths before calling [`record`](Self::record)).
+    pub fn record_count(&self) -> usize {
+        self.records.len()
     }
 
     /// True once every task of the workflow has completed.

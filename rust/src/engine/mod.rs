@@ -43,8 +43,8 @@ mod coordinator;
 mod driver;
 mod plan;
 
-pub use coordinator::Coordinator;
-pub use driver::{EngineEvent, Submission, WorkflowDriver};
+pub use coordinator::{Coordinator, RunOutcome};
+pub use driver::{DriverState, EngineEvent, Submission, WorkflowDriver};
 pub use plan::{compile, ExecutionMode, JobSet};
 
 use std::time::Duration;
@@ -58,6 +58,7 @@ use crate::metrics::{
 use crate::pilot::Policy;
 use crate::resources::ClusterSpec;
 use crate::sim::VirtualExecutor;
+use crate::util::json::{from_u64, obj, FromJson, Json, ToJson};
 
 /// Engine tunables.
 #[derive(Debug, Clone)]
@@ -94,6 +95,30 @@ impl EngineConfig {
     /// Zero-overhead config (model-validation tests).
     pub fn ideal() -> Self {
         EngineConfig { task_overhead: 0.0, stage_overhead: 0.0, ..Default::default() }
+    }
+}
+
+impl ToJson for EngineConfig {
+    fn to_json(&self) -> Json {
+        obj([
+            ("seed", from_u64(self.seed)),
+            ("task_overhead", Json::from(self.task_overhead)),
+            ("stage_overhead", Json::from(self.stage_overhead)),
+            ("policy", Json::from(self.policy.label())),
+            ("abort_on_failure", Json::from(self.abort_on_failure)),
+        ])
+    }
+}
+
+impl FromJson for EngineConfig {
+    fn from_json(v: &Json) -> Result<EngineConfig> {
+        Ok(EngineConfig {
+            seed: v.req_u64("seed")?,
+            task_overhead: v.req_f64("task_overhead")?,
+            stage_overhead: v.req_f64("stage_overhead")?,
+            policy: v.req_str("policy")?.parse()?,
+            abort_on_failure: v.req_bool("abort_on_failure")?,
+        })
     }
 }
 

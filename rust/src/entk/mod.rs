@@ -17,6 +17,7 @@
 use crate::dag::{Dag, DagAnalysis};
 use crate::error::{Error, Result};
 use crate::task::TaskSetSpec;
+use crate::util::json::{arr_of, obj, parse_arr, FromJson, Json, ToJson};
 
 /// A stage: indices into `Workflow::sets` that share a stage barrier.
 #[derive(Debug, Clone, PartialEq)]
@@ -45,6 +46,44 @@ impl Pipeline {
     pub fn stage(mut self, sets: &[usize]) -> Pipeline {
         self.stages.push(Stage::of(sets));
         self
+    }
+}
+
+impl ToJson for Pipeline {
+    fn to_json(&self) -> Json {
+        obj([
+            ("name", Json::from(self.name.clone())),
+            (
+                "stages",
+                Json::Arr(
+                    self.stages
+                        .iter()
+                        .map(|st| {
+                            Json::Arr(st.sets.iter().map(|&s| Json::from(s)).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl FromJson for Pipeline {
+    fn from_json(v: &Json) -> Result<Pipeline> {
+        let mut stages = Vec::new();
+        for st in v.req_arr("stages")? {
+            let sets = st.as_arr().ok_or_else(|| {
+                Error::Config("pipeline: each stage must be an array of set indices".into())
+            })?;
+            let mut idx = Vec::with_capacity(sets.len());
+            for s in sets {
+                idx.push(s.as_u64().ok_or_else(|| {
+                    Error::Config("pipeline: stage entries must be set indices".into())
+                })? as usize);
+            }
+            stages.push(Stage { sets: idx });
+        }
+        Ok(Pipeline { name: v.req_str("name")?.to_string(), stages })
     }
 }
 
@@ -159,6 +198,32 @@ impl Workflow {
     }
 }
 
+impl ToJson for Workflow {
+    fn to_json(&self) -> Json {
+        obj([
+            ("name", Json::from(self.name.clone())),
+            ("sets", arr_of(&self.sets)),
+            ("dag", self.dag.to_json()),
+            ("sequential", arr_of(&self.sequential)),
+            ("asynchronous", arr_of(&self.asynchronous)),
+        ])
+    }
+}
+
+impl FromJson for Workflow {
+    fn from_json(v: &Json) -> Result<Workflow> {
+        let wf = Workflow {
+            name: v.req_str("name")?.to_string(),
+            sets: parse_arr(v, "sets")?,
+            dag: Dag::from_json(v.get("dag"))?,
+            sequential: parse_arr(v, "sequential")?,
+            asynchronous: parse_arr(v, "asynchronous")?,
+        };
+        wf.validate()?;
+        Ok(wf)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +279,28 @@ mod tests {
         let mut wf = tiny_workflow();
         wf.sets[1].name = "Z".into();
         assert!(wf.validate().is_err());
+    }
+
+    #[test]
+    fn workflow_round_trips_through_json() {
+        let wf = tiny_workflow();
+        let wire = wf.to_json().to_string();
+        let back =
+            Workflow::from_json(&crate::util::json::Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.name, wf.name);
+        assert_eq!(back.sets.len(), wf.sets.len());
+        for (a, b) in wf.sets.iter().zip(&back.sets) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.tasks, b.tasks);
+            assert_eq!(a.req, b.req);
+            assert_eq!(a.tx_mean, b.tx_mean);
+            assert_eq!(a.tx_sigma_frac, b.tx_sigma_frac);
+            assert_eq!(a.kind, b.kind);
+        }
+        assert_eq!(back.dag, wf.dag);
+        assert_eq!(back.sequential, wf.sequential);
+        assert_eq!(back.asynchronous, wf.asynchronous);
+        back.validate().unwrap();
     }
 
     #[test]

@@ -10,8 +10,10 @@
 //!   ([`pilot`]), a Summit-like resource model ([`resources`]), the
 //!   asynchronicity model (DOA_dep / DOA_res / WLA, Eqns 1–7) ([`model`],
 //!   [`dag`]), a discrete-event simulator ([`sim`]), real executors
-//!   ([`exec`]) behind one engine ([`engine`]), and a streaming-traffic
-//!   load generator with queueing metrics ([`traffic`]).
+//!   ([`exec`]) behind one engine ([`engine`]), a streaming-traffic
+//!   load generator with queueing metrics ([`traffic`]), and
+//!   whole-simulation checkpoint/resume for preemptible allocations
+//!   ([`checkpoint`]).
 //! - **Layer 2**: JAX compute graphs (autoencoder training/inference, MD)
 //!   AOT-lowered to HLO text at build time (`python/compile/`).
 //! - **Layer 1**: Pallas kernels (blocked matmul, pairwise distances,
@@ -42,6 +44,7 @@
 //! ```
 
 pub mod campaign;
+pub mod checkpoint;
 pub mod config;
 pub mod dag;
 pub mod ddmd;

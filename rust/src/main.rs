@@ -46,6 +46,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("masking") => cmd_masking(args),
         Some("campaign") => cmd_campaign(args),
         Some("traffic") => cmd_traffic(args),
+        Some("resume") => cmd_resume(args),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -76,11 +77,22 @@ subcommands:
            [--autoscale-max N]           knee. --resize grows/drains
            [--autoscale-interval S]      pilot nodes at the given times
            [--autoscale-step N]          (drains are graceful: running
-                                         tasks finish first); --autoscale
-                                         sizes the allocation from the
+           [--checkpoint-at T]           tasks finish first); --autoscale
+           [--checkpoint-out F.json]     sizes the allocation from the
                                          backlog every interval seconds.
+                                         --checkpoint-at snapshots the
+                                         whole simulation at T (a
+                                         preemption) to --checkpoint-out.
                                          Catalog: ddmd ddmd-small cdg1
                                          cdg2 cdg1-small cdg2-small
+  resume   ckpt.json                     resume a preempted traffic run
+           [--resize T:+N,T:-N]          from its checkpoint file; the
+           [--autoscale ...]             optional plan reshapes the new
+           [--out DIR] [--verbose]       pilot (times are absolute, so
+                                         0:-4 shrinks at the resume
+                                         instant) and the finished run
+                                         prints the same report the
+                                         uninterrupted one would have
 
 common options:
   --cluster summit_paper|summit_706|summit_8gpu|local_small
@@ -286,22 +298,16 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_traffic(args: &Args) -> Result<()> {
+/// Elastic-allocation plan from the shared CLI flags: timed `--resize`
+/// events and/or the backlog-driven `--autoscale` policy (nodes added
+/// have the shape of the cluster's first node). `default_max_nodes`
+/// seeds `--autoscale-max` (traffic: 2x the initial cluster; resume:
+/// 2x the checkpointed inventory).
+fn plan_from_args(
+    args: &Args,
+    default_max_nodes: usize,
+) -> Result<Option<asyncflow::pilot::ResourcePlan>> {
     use asyncflow::pilot::{AutoscalePolicy, ResourcePlan};
-    use asyncflow::traffic::{
-        load_trace_file, run_traffic, ArrivalProcess, Catalog, TrafficSpec, WorkloadMix,
-    };
-    let cluster = pick_cluster(args)?;
-    let cfg = pick_engine(args)?;
-    let seed = args.get_u64("seed", 42)?;
-    let duration = args.get_f64("duration", 20000.0)?;
-    let mix = WorkloadMix::parse(args.get_or("mix", "ddmd:2,cdg2:1"))?;
-    let max_workflows = args.get_usize("max-workflows", 10_000)?;
-    let catalog = Catalog::builtin();
-
-    // Elastic allocation: timed --resize events and/or the
-    // backlog-driven --autoscale policy (nodes added have the shape of
-    // the cluster's first node).
     let mut plan: Option<ResourcePlan> = match args.get("resize") {
         Some(spec) => Some(ResourcePlan::parse_resize(spec)?),
         None => None,
@@ -311,11 +317,64 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         let policy = AutoscalePolicy {
             interval: args.get_f64("autoscale-interval", defaults.interval)?,
             min_nodes: args.get_usize("autoscale-min", 1)?,
-            max_nodes: args.get_usize("autoscale-max", cluster.nodes.len().max(1) * 2)?,
+            max_nodes: args.get_usize("autoscale-max", default_max_nodes)?,
             step: args.get_usize("autoscale-step", defaults.step)?,
             ..defaults
         };
         plan = Some(plan.unwrap_or_default().with_autoscale(policy));
+    }
+    Ok(plan)
+}
+
+/// Print a finished traffic report and write the optional `--out`
+/// artifacts (shared by `traffic` and `resume`).
+fn emit_traffic_report(args: &Args, rep: &asyncflow::traffic::TrafficReport) -> Result<()> {
+    print!("{}", rep.render(args.flag("verbose")));
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        let base = std::path::Path::new(dir);
+        let bp = base.join("traffic_backlog.csv");
+        std::fs::write(&bp, rep.backlog.to_csv())?;
+        let jp = base.join("traffic_report.json");
+        std::fs::write(&jp, rep.to_json().to_string_pretty())?;
+        if !rep.capacity.is_constant() {
+            let cp = base.join("traffic_capacity.csv");
+            std::fs::write(&cp, rep.capacity.to_csv())?;
+            println!("wrote {}, {} and {}", bp.display(), jp.display(), cp.display());
+        } else {
+            println!("wrote {} and {}", bp.display(), jp.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_traffic(args: &Args) -> Result<()> {
+    use asyncflow::traffic::{
+        load_trace_file, run_traffic, run_traffic_resumable, ArrivalProcess, Catalog,
+        TrafficOutcome, TrafficSpec, WorkloadMix,
+    };
+    use asyncflow::util::json::ToJson;
+    let cluster = pick_cluster(args)?;
+    let cfg = pick_engine(args)?;
+    let seed = args.get_u64("seed", 42)?;
+    let duration = args.get_f64("duration", 20000.0)?;
+    let mix = WorkloadMix::parse(args.get_or("mix", "ddmd:2,cdg2:1"))?;
+    let max_workflows = args.get_usize("max-workflows", 10_000)?;
+    let catalog = Catalog::builtin();
+    let plan = plan_from_args(args, cluster.nodes.len().max(1) * 2)?;
+
+    // Preemption point: --checkpoint-at T snapshots the simulation at
+    // engine time T and writes it to --checkpoint-out (default
+    // ckpt.json) instead of finishing the run.
+    let checkpoint_at = match args.get("checkpoint-at") {
+        Some(_) => Some(args.get_f64("checkpoint-at", 0.0)?),
+        None => None,
+    };
+    if checkpoint_at.is_none() && args.get("checkpoint-out").is_some() {
+        return Err(Error::Config(
+            "--checkpoint-out requires --checkpoint-at (nothing would be snapshotted)"
+                .into(),
+        ));
     }
 
     let spec_for = |process: ArrivalProcess| TrafficSpec {
@@ -325,11 +384,18 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         max_workflows,
         seed,
         plan: plan.clone(),
+        checkpoint_at,
     };
 
     // Rate sweep: one run per rate, tabulated to expose the saturation
     // knee (bounded wait/backlog below it, growing backlog above it).
     if let Some(rates) = args.get("sweep") {
+        if checkpoint_at.is_some() {
+            return Err(Error::Config(
+                "--checkpoint-at does not combine with --sweep (one checkpoint, one run)"
+                    .into(),
+            ));
+        }
         let rates: Vec<f64> = rates
             .split(',')
             .map(|s| {
@@ -377,24 +443,58 @@ fn cmd_traffic(args: &Args) -> Result<()> {
     } else {
         ArrivalProcess::Poisson { rate: args.get_f64("rate", 0.02)? }
     };
-    let rep = run_traffic(&spec_for(process), &catalog, &cluster, &cfg)?;
-    print!("{}", rep.render(args.flag("verbose")));
-    if let Some(dir) = args.get("out") {
-        std::fs::create_dir_all(dir)?;
-        let base = std::path::Path::new(dir);
-        let bp = base.join("traffic_backlog.csv");
-        std::fs::write(&bp, rep.backlog.to_csv())?;
-        let jp = base.join("traffic_report.json");
-        std::fs::write(&jp, rep.to_json().to_string_pretty())?;
-        if !rep.capacity.is_constant() {
-            let cp = base.join("traffic_capacity.csv");
-            std::fs::write(&cp, rep.capacity.to_csv())?;
-            println!("wrote {}, {} and {}", bp.display(), jp.display(), cp.display());
-        } else {
-            println!("wrote {} and {}", bp.display(), jp.display());
+    match run_traffic_resumable(&spec_for(process), &catalog, &cluster, &cfg)? {
+        TrafficOutcome::Completed(rep) => {
+            if checkpoint_at.is_some() {
+                println!(
+                    "note: the run finished before the checkpoint time; no snapshot taken"
+                );
+            }
+            emit_traffic_report(args, &rep)?;
+        }
+        TrafficOutcome::Checkpointed(ck) => {
+            let path = args.get_or("checkpoint-out", "ckpt.json");
+            std::fs::write(path, ck.to_json().to_string_pretty())?;
+            println!(
+                "checkpointed at t = {:.1} s: {} live / {} finished / {} pending \
+                 workflows, {} running + {} queued tasks",
+                ck.sim.now,
+                ck.sim.drivers.len(),
+                ck.sim.finished.len(),
+                ck.sim.pending.len(),
+                ck.sim.running.len(),
+                ck.sim.queue.len(),
+            );
+            println!("wrote {path} — resume with: asyncflow resume {path}");
         }
     }
     Ok(())
+}
+
+fn cmd_resume(args: &Args) -> Result<()> {
+    use asyncflow::traffic::TrafficCheckpoint;
+    use asyncflow::util::json::{FromJson, Json};
+    let path = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
+        Error::Config("resume: expected a checkpoint file (asyncflow resume ckpt.json)".into())
+    })?;
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("resume: cannot read '{path}': {e}")))?;
+    let ck = TrafficCheckpoint::from_json(&Json::parse(&src)?)?;
+    let nodes = ck.sim.nodes.len().max(1);
+    let plan = plan_from_args(args, nodes * 2)?;
+    println!(
+        "resuming from {path}: t = {:.1} s, {} members ({} live, {} pending), \
+         {} running + {} queued tasks{}",
+        ck.sim.now,
+        ck.sim.n_members,
+        ck.sim.drivers.len(),
+        ck.sim.pending.len(),
+        ck.sim.running.len(),
+        ck.sim.queue.len(),
+        if plan.is_some() { ", new resource plan attached" } else { "" },
+    );
+    let rep = ck.resume(plan)?;
+    emit_traffic_report(args, &rep)
 }
 
 fn cmd_masking(args: &Args) -> Result<()> {

@@ -9,7 +9,9 @@ pub use chrome::chrome_trace;
 pub use plot::ascii_timeline;
 pub use report::{per_set_summaries, report_to_json, SetSummary};
 
+use crate::error::{Error, Result};
 use crate::resources::ClusterSpec;
+use crate::util::json::{f64_or_nan, from_f64_nan, obj, FromJson, Json, ToJson};
 
 /// One executed task's lifecycle record.
 #[derive(Debug, Clone)]
@@ -33,6 +35,43 @@ impl TaskRecord {
     }
     pub fn runtime(&self) -> f64 {
         self.finished - self.started
+    }
+}
+
+impl ToJson for TaskRecord {
+    fn to_json(&self) -> Json {
+        obj([
+            ("uid", Json::from(self.uid)),
+            ("set_idx", Json::from(self.set_idx)),
+            ("set_name", Json::from(self.set_name.clone())),
+            ("pipeline", Json::from(self.pipeline)),
+            ("branch", Json::from(self.branch)),
+            // Not-yet-started/finished tasks hold NaN -> null.
+            ("submitted", from_f64_nan(self.submitted)),
+            ("started", from_f64_nan(self.started)),
+            ("finished", from_f64_nan(self.finished)),
+            ("cores", Json::from(self.cores as usize)),
+            ("gpus", Json::from(self.gpus as usize)),
+            ("failed", Json::from(self.failed)),
+        ])
+    }
+}
+
+impl FromJson for TaskRecord {
+    fn from_json(v: &Json) -> Result<TaskRecord> {
+        Ok(TaskRecord {
+            uid: v.req_u64("uid")? as usize,
+            set_idx: v.req_u64("set_idx")? as usize,
+            set_name: v.req_str("set_name")?.to_string(),
+            pipeline: v.req_u64("pipeline")? as usize,
+            branch: v.req_u64("branch")? as usize,
+            submitted: f64_or_nan(v.get("submitted"))?,
+            started: f64_or_nan(v.get("started"))?,
+            finished: f64_or_nan(v.get("finished"))?,
+            cores: v.req_u64("cores")?,
+            gpus: v.req_u64("gpus")?,
+            failed: v.req_bool("failed")?,
+        })
     }
 }
 
@@ -138,6 +177,48 @@ impl CapacityTimeline {
             s.push_str(&format!("{t:.3},{c},{g}\n"));
         }
         s
+    }
+}
+
+impl ToJson for CapacityTimeline {
+    fn to_json(&self) -> Json {
+        Json::Arr(
+            self.points
+                .iter()
+                .map(|&(t, c, g)| {
+                    Json::Arr(vec![
+                        Json::from(t),
+                        Json::from(c as usize),
+                        Json::from(g as usize),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+impl FromJson for CapacityTimeline {
+    fn from_json(v: &Json) -> Result<CapacityTimeline> {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| Error::Config("capacity timeline: expected an array".into()))?;
+        let mut points = Vec::with_capacity(arr.len());
+        for p in arr {
+            let triple = p.as_arr().filter(|t| t.len() == 3).ok_or_else(|| {
+                Error::Config("capacity timeline: each point must be [t, cores, gpus]".into())
+            })?;
+            let t = triple[0]
+                .as_f64()
+                .ok_or_else(|| Error::Config("capacity timeline: bad time".into()))?;
+            let c = triple[1]
+                .as_u64()
+                .ok_or_else(|| Error::Config("capacity timeline: bad cores".into()))?;
+            let g = triple[2]
+                .as_u64()
+                .ok_or_else(|| Error::Config("capacity timeline: bad gpus".into()))?;
+            points.push((t, c, g));
+        }
+        Ok(CapacityTimeline { points })
     }
 }
 

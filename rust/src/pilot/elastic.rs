@@ -32,6 +32,7 @@
 
 use crate::error::{Error, Result};
 use crate::resources::NodeSpec;
+use crate::util::json::{arr_of, obj, parse_arr, FromJson, Json, ToJson};
 
 /// One timed capacity change: at engine time `at`, add (`delta` > 0) or
 /// drain (`delta` < 0) that many nodes.
@@ -41,6 +42,18 @@ pub struct ResizeEvent {
     pub at: f64,
     /// Node count delta: positive grows, negative drains.
     pub delta: i64,
+}
+
+impl ToJson for ResizeEvent {
+    fn to_json(&self) -> Json {
+        obj([("at", Json::from(self.at)), ("delta", Json::Num(self.delta as f64))])
+    }
+}
+
+impl FromJson for ResizeEvent {
+    fn from_json(v: &Json) -> Result<ResizeEvent> {
+        Ok(ResizeEvent { at: v.req_f64("at")?, delta: v.req_i64("delta")? })
+    }
 }
 
 /// Backlog-driven autoscaler: evaluated every `interval` engine
@@ -111,6 +124,34 @@ impl AutoscalePolicy {
             )));
         }
         Ok(())
+    }
+}
+
+impl ToJson for AutoscalePolicy {
+    fn to_json(&self) -> Json {
+        obj([
+            ("interval", Json::from(self.interval)),
+            ("min_nodes", Json::from(self.min_nodes)),
+            ("max_nodes", Json::from(self.max_nodes)),
+            ("up_backlog", Json::from(self.up_backlog)),
+            ("down_idle", Json::from(self.down_idle)),
+            ("step", Json::from(self.step)),
+        ])
+    }
+}
+
+impl FromJson for AutoscalePolicy {
+    fn from_json(v: &Json) -> Result<AutoscalePolicy> {
+        let p = AutoscalePolicy {
+            interval: v.req_f64("interval")?,
+            min_nodes: v.req_u64("min_nodes")? as usize,
+            max_nodes: v.req_u64("max_nodes")? as usize,
+            up_backlog: v.req_f64("up_backlog")?,
+            down_idle: v.req_f64("down_idle")?,
+            step: v.req_u64("step")? as usize,
+        };
+        p.validate()?;
+        Ok(p)
     }
 }
 
@@ -190,7 +231,10 @@ impl ResourcePlan {
     }
 
     /// Check the plan is well-formed (finite non-negative event times,
-    /// nonzero deltas, sane autoscaler parameters).
+    /// nonzero deltas, no duplicate timestamps, sane autoscaler
+    /// parameters). Duplicate timestamps are rejected because the
+    /// apply order of same-instant resizes would be spec-order
+    /// dependent — fold them into one signed delta instead.
     pub fn validate(&self) -> Result<()> {
         for e in &self.events {
             if !e.at.is_finite() || e.at < 0.0 {
@@ -206,10 +250,58 @@ impl ResourcePlan {
                 )));
             }
         }
+        let mut times: Vec<f64> = self.events.iter().map(|e| e.at).collect();
+        times.sort_by(f64::total_cmp);
+        if let Some(w) = times.windows(2).find(|w| w[0] == w[1]) {
+            return Err(Error::Config(format!(
+                "resource plan: duplicate resize timestamp t = {} \
+                 (fold same-instant events into one delta)",
+                w[0]
+            )));
+        }
         if let Some(p) = &self.autoscale {
             p.validate()?;
         }
         Ok(())
+    }
+}
+
+impl ToJson for ResourcePlan {
+    fn to_json(&self) -> Json {
+        obj([
+            ("events", arr_of(&self.events)),
+            (
+                "autoscale",
+                match &self.autoscale {
+                    Some(p) => p.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "node",
+                match &self.node {
+                    Some(n) => n.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+impl FromJson for ResourcePlan {
+    fn from_json(v: &Json) -> Result<ResourcePlan> {
+        let events = parse_arr(v, "events")?;
+        let autoscale = match v.get("autoscale") {
+            Json::Null => None,
+            p => Some(AutoscalePolicy::from_json(p)?),
+        };
+        let node = match v.get("node") {
+            Json::Null => None,
+            n => Some(NodeSpec::from_json(n)?),
+        };
+        let plan = ResourcePlan { events, autoscale, node };
+        plan.validate()?;
+        Ok(plan)
     }
 }
 
@@ -242,6 +334,68 @@ mod tests {
         assert!(ResourcePlan::parse_resize("100:zero").is_err());
         assert!(ResourcePlan::parse_resize("100:+0").is_err());
         assert!(ResourcePlan::parse_resize("-5:+1").is_err());
+    }
+
+    #[test]
+    fn parse_resize_rejects_malformed_tokens_with_context() {
+        // Every malformed-token class names the offending token so CLI
+        // users see *which* part of a long spec is broken.
+        for (spec, needle) in [
+            ("5000:+4,:-2", "':-2'"),          // empty time
+            ("5000:", "'5000:'"),              // empty delta
+            ("10:+2,20::+1", "'20::+1'"),      // double separator
+            ("1e3:+2,nan:-1", "NaN"),          // non-finite time
+            ("inf:+1", "inf"),                 // infinite time
+            ("10:+1.5", "'10:+1.5'"),          // fractional node delta
+            ("10:++2", "'10:++2'"),            // double sign
+        ] {
+            let err = ResourcePlan::parse_resize(spec).unwrap_err().to_string();
+            assert!(
+                err.contains(needle),
+                "spec {spec:?} must fail mentioning {needle}: got {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_resize_rejects_duplicate_timestamps_and_negative_times() {
+        // Duplicate timestamps are ambiguous (apply order would be
+        // spec-order dependent) and rejected by validate().
+        let err = ResourcePlan::parse_resize("100:+2,100:-1").unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "got {err:?}");
+        // ... including duplicates written in different spellings.
+        assert!(ResourcePlan::parse_resize("100.0:+2,100:+1").is_err());
+        // Negative times are invalid wherever they appear in the spec.
+        for spec in ["-1:+2", "10:+1,-3:-1", "-0.5:-2"] {
+            let err = ResourcePlan::parse_resize(spec).unwrap_err().to_string();
+            assert!(
+                err.contains("bad time") || err.contains("invalid event time"),
+                "spec {spec:?}: got {err:?}"
+            );
+        }
+        // The builder path hits the same validation.
+        let dup = ResourcePlan::new().resize(5.0, 1).resize(5.0, -1);
+        assert!(dup.validate().is_err());
+    }
+
+    #[test]
+    fn plan_round_trips_through_json() {
+        let plan = ResourcePlan::new()
+            .resize(100.0, 2)
+            .resize(900.0, -1)
+            .with_autoscale(AutoscalePolicy { step: 3, ..AutoscalePolicy::default() })
+            .with_node(NodeSpec { cores: 8, gpus: 2 });
+        let wire = plan.to_json().to_string();
+        let back =
+            ResourcePlan::from_json(&crate::util::json::Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, plan);
+        // None fields stay None.
+        let bare = ResourcePlan::new().resize(1.0, 1);
+        let back = ResourcePlan::from_json(
+            &crate::util::json::Json::parse(&bare.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, bare);
     }
 
     #[test]

@@ -37,8 +37,35 @@ impl Agent {
         }
     }
 
+    /// Rebuild an agent from checkpointed parts: an allocator with the
+    /// snapshot occupancy already claimed, a scheduler queue re-pushed
+    /// in insertion order, and the uid -> placement table of running
+    /// tasks.
+    pub(crate) fn from_parts(
+        alloc: Allocator,
+        sched: Scheduler,
+        running: Vec<Option<Placement>>,
+    ) -> Agent {
+        Agent { alloc, sched, running }
+    }
+
     pub fn allocator(&self) -> &Allocator {
         &self.alloc
+    }
+
+    /// Queued (unplaced) tasks in insertion order (checkpointing).
+    pub fn queued_tasks(&self) -> &[QueuedTask] {
+        self.sched.queued()
+    }
+
+    /// `(uid, placement)` of every running task, ascending by uid
+    /// (checkpointing).
+    pub fn running_placements(&self) -> Vec<(usize, Placement)> {
+        self.running
+            .iter()
+            .enumerate()
+            .filter_map(|(uid, p)| p.as_ref().map(|p| (uid, p.clone())))
+            .collect()
     }
 
     pub fn queue_len(&self) -> usize {

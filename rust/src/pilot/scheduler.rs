@@ -2,7 +2,9 @@
 
 use std::collections::HashSet;
 
+use crate::error::{Error, Result};
 use crate::resources::{Allocator, Placement, ResourceRequest};
+use crate::util::json::{from_u64, obj, FromJson, Json, ToJson};
 
 /// Queue ordering policies (ablated in `benches/bench_ablations.rs`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -24,6 +26,31 @@ pub enum Policy {
     SmallestFirst,
 }
 
+impl Policy {
+    /// Stable wire name (configs, checkpoints).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::PipelineAge => "pipeline_age",
+            Policy::FifoBackfill => "fifo_backfill",
+            Policy::FifoStrict => "fifo_strict",
+            Policy::SmallestFirst => "smallest_first",
+        }
+    }
+}
+
+impl std::str::FromStr for Policy {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Policy> {
+        match s {
+            "pipeline_age" => Ok(Policy::PipelineAge),
+            "fifo" | "fifo_backfill" => Ok(Policy::FifoBackfill),
+            "fifo_strict" => Ok(Policy::FifoStrict),
+            "smallest_first" => Ok(Policy::SmallestFirst),
+            other => Err(Error::Config(format!("unknown scheduler policy '{other}'"))),
+        }
+    }
+}
+
 /// A task waiting for resources.
 #[derive(Debug, Clone, Copy)]
 pub struct QueuedTask {
@@ -31,6 +58,28 @@ pub struct QueuedTask {
     pub req: ResourceRequest,
     pub priority: u64,
     pub submitted_at: f64,
+}
+
+impl ToJson for QueuedTask {
+    fn to_json(&self) -> Json {
+        obj([
+            ("uid", Json::from(self.uid)),
+            ("req", self.req.to_json()),
+            ("priority", from_u64(self.priority)),
+            ("submitted_at", Json::from(self.submitted_at)),
+        ])
+    }
+}
+
+impl FromJson for QueuedTask {
+    fn from_json(v: &Json) -> Result<QueuedTask> {
+        Ok(QueuedTask {
+            uid: v.req_u64("uid")? as usize,
+            req: ResourceRequest::from_json(v.get("req"))?,
+            priority: v.req_u64("priority")?,
+            submitted_at: v.req_f64("submitted_at")?,
+        })
+    }
 }
 
 /// A task the scheduler just placed.
@@ -74,6 +123,13 @@ impl Scheduler {
 
     pub fn queue_len(&self) -> usize {
         self.queue.len()
+    }
+
+    /// The queued tasks in insertion order (checkpoint snapshots;
+    /// re-pushing them into a fresh scheduler in this order reproduces
+    /// the queue, including FIFO tie-breaks).
+    pub fn queued(&self) -> &[QueuedTask] {
+        &self.queue
     }
 
     /// Number of ordering sorts performed so far (the FIFO fast path

@@ -21,6 +21,7 @@
 
 use super::{ClusterSpec, NodeSpec, ResourceRequest};
 use crate::error::{Error, Result};
+use crate::util::json::{FromJson, Json, ToJson};
 
 /// Where a running task's resources came from: `(node, cores, gpus)`
 /// slices, one per node touched.
@@ -35,6 +36,48 @@ impl Placement {
     }
     pub fn total_gpus(&self) -> u64 {
         self.slots.iter().map(|s| s.2 as u64).sum()
+    }
+}
+
+impl ToJson for Placement {
+    fn to_json(&self) -> Json {
+        Json::Arr(
+            self.slots
+                .iter()
+                .map(|&(i, c, g)| {
+                    Json::Arr(vec![
+                        Json::from(i),
+                        Json::from(c as usize),
+                        Json::from(g as usize),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+impl FromJson for Placement {
+    fn from_json(v: &Json) -> Result<Placement> {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| Error::Config("placement: expected an array".into()))?;
+        let mut slots = Vec::with_capacity(arr.len());
+        for s in arr {
+            let triple = s.as_arr().filter(|t| t.len() == 3).ok_or_else(|| {
+                Error::Config("placement: each slot must be [node, cores, gpus]".into())
+            })?;
+            let node = triple[0]
+                .as_u64()
+                .ok_or_else(|| Error::Config("placement: bad node index".into()))?;
+            let cores = triple[1]
+                .as_u64()
+                .ok_or_else(|| Error::Config("placement: bad core count".into()))?;
+            let gpus = triple[2]
+                .as_u64()
+                .ok_or_else(|| Error::Config("placement: bad gpu count".into()))?;
+            slots.push((node as usize, cores as u32, gpus as u32));
+        }
+        Ok(Placement { slots })
     }
 }
 
@@ -355,6 +398,95 @@ impl Allocator {
         self.span_order[..=pos].rotate_left(1);
     }
 
+    /// Re-apply a known placement (checkpoint restore): subtracts the
+    /// placement's slices from the free pool exactly as if
+    /// [`Allocator::try_alloc`] had produced it. Errors — leaving the
+    /// allocator untouched — when any slice does not fit its node,
+    /// which on a restore path means the snapshot is inconsistent.
+    pub fn claim(&mut self, p: &Placement) -> Result<()> {
+        // Validate cumulatively (a malformed placement may list one
+        // node twice) before mutating anything.
+        let mut need: std::collections::BTreeMap<usize, (u64, u64)> =
+            std::collections::BTreeMap::new();
+        for &(i, cores, gpus) in &p.slots {
+            let e = need.entry(i).or_insert((0, 0));
+            e.0 += cores as u64;
+            e.1 += gpus as u64;
+        }
+        for (&i, &(cores, gpus)) in &need {
+            if i >= self.spec.nodes.len()
+                || (self.free_cores[i] as u64) < cores
+                || (self.free_gpus[i] as u64) < gpus
+            {
+                return Err(Error::Engine(format!(
+                    "claim: slice ({cores} cores, {gpus} gpus) does not fit node {i}"
+                )));
+            }
+        }
+        for &(i, cores, gpus) in &p.slots {
+            self.free_cores[i] -= cores;
+            self.free_gpus[i] -= gpus;
+            self.busy_cores[i] += cores;
+            self.busy_gpus[i] += gpus;
+            self.total_free_cores -= cores as u64;
+            self.total_free_gpus -= gpus as u64;
+            self.total_busy_cores += cores as u64;
+            self.total_busy_gpus += gpus as u64;
+        }
+        self.span_order_stale = true;
+        Ok(())
+    }
+
+    /// First-fit rotation position (serialized by checkpoints so a
+    /// restored allocator probes nodes in the same order).
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Restore the first-fit rotation position (checkpoint restore).
+    pub fn set_cursor(&mut self, cursor: usize) {
+        let n = self.spec.nodes.len().max(1);
+        self.cursor = cursor % n;
+    }
+
+    /// The cached spanning-allocation node order, when it is currently
+    /// valid (`None` while stale). Checkpoints carry it because its
+    /// tie-breaks among equal-free nodes are repair-history dependent:
+    /// a freshly sorted index is *a* valid order but not necessarily
+    /// *the* order the interrupted run would have used next.
+    pub fn span_order_state(&self) -> Option<&[usize]> {
+        if self.span_order_stale {
+            None
+        } else {
+            Some(&self.span_order)
+        }
+    }
+
+    /// Restore a captured spanning order (checkpoint restore). Errors
+    /// unless `order` is a permutation of the node indices in
+    /// non-increasing free-core order — the invariant `alloc_spanning`
+    /// relies on.
+    pub fn restore_span_order(&mut self, order: &[usize]) -> Result<()> {
+        let n = self.free_cores.len();
+        let mut seen = vec![false; n];
+        let valid = order.len() == n
+            && order
+                .iter()
+                .all(|&i| i < n && !std::mem::replace(&mut seen[i], true))
+            && order
+                .windows(2)
+                .all(|w| self.free_cores[w[0]] >= self.free_cores[w[1]]);
+        if !valid {
+            return Err(Error::Engine(
+                "restore_span_order: not a descending-free permutation of the nodes"
+                    .into(),
+            ));
+        }
+        self.span_order = order.to_vec();
+        self.span_order_stale = false;
+        Ok(())
+    }
+
     /// Return a placement's resources to the pool. Slices on draining
     /// nodes leave the allocation instead (graceful shrink: the cores
     /// disappear only after the work on them finished).
@@ -610,6 +742,64 @@ mod tests {
         let again = a.drain_candidates(3);
         assert!(!again.contains(&picks[0]));
         assert_eq!(again.len(), 2);
+    }
+
+    #[test]
+    fn claim_reapplies_known_placements_exactly() {
+        // A fresh allocator fed the running placements of another one
+        // (the checkpoint-restore path) reproduces its occupancy.
+        let mut a = Allocator::new(&cluster());
+        let p1 = a.try_alloc(&ResourceRequest::new(20, 0)).unwrap(); // spans nodes
+        let p2 = a.try_alloc(&ResourceRequest::new(2, 2)).unwrap(); // node-local
+        let mut b = Allocator::new(&cluster());
+        b.claim(&p1).unwrap();
+        b.claim(&p2).unwrap();
+        b.set_cursor(a.cursor());
+        assert!(b.check_invariants());
+        assert_eq!(b.free_cores(), a.free_cores());
+        assert_eq!(b.free_gpus(), a.free_gpus());
+        for i in 0..a.node_count() {
+            assert_eq!(b.node_free(i), a.node_free(i), "node {i} free");
+            assert_eq!(b.node_busy(i), a.node_busy(i), "node {i} busy");
+        }
+        assert_eq!(b.cursor(), a.cursor());
+        // Releasing the claimed placements drains the occupancy fully.
+        b.release(&p1);
+        b.release(&p2);
+        assert_eq!(b.used_cores(), 0);
+        assert!(b.check_invariants());
+        // Over-claiming errors and leaves the allocator untouched.
+        let mut c = Allocator::new(&ClusterSpec::uniform("t", 1, 2, 0));
+        let bad = Placement { slots: vec![(0, 2, 0), (0, 1, 0)] };
+        assert!(c.claim(&bad).is_err(), "cumulative over-claim must fail");
+        assert_eq!(c.free_cores(), 2);
+        assert!(c.claim(&Placement { slots: vec![(5, 1, 0)] }).is_err());
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn span_order_state_round_trips() {
+        let mut a = Allocator::new(&ClusterSpec::uniform("t", 3, 4, 0));
+        assert!(a.span_order_state().is_none(), "fresh allocator starts stale");
+        let p = a.try_alloc(&ResourceRequest::new(6, 0)).unwrap();
+        let order = a.span_order_state().expect("spanning alloc builds the index").to_vec();
+        // A fresh allocator brought to the same occupancy accepts the
+        // captured order and ends up with the identical index.
+        let mut b = Allocator::new(&ClusterSpec::uniform("t", 3, 4, 0));
+        b.claim(&p).unwrap();
+        b.restore_span_order(&order).unwrap();
+        assert_eq!(b.span_order_state(), Some(order.as_slice()));
+        assert!(b.check_invariants());
+        // Invalid orders are rejected: wrong length, duplicate entries,
+        // and orderings that violate descending free cores.
+        assert!(b.restore_span_order(&order[1..]).is_err());
+        let dup: Vec<usize> = vec![order[0]; order.len()];
+        assert!(b.restore_span_order(&dup).is_err());
+        let mut reversed = order.clone();
+        reversed.reverse();
+        if reversed != order {
+            assert!(b.restore_span_order(&reversed).is_err());
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@ mod allocator;
 pub use allocator::{Allocator, Placement};
 
 use crate::error::{Error, Result};
+use crate::util::json::{arr_of, obj, parse_arr, FromJson, Json, ToJson};
 
 /// Per-task resource requirement (Tables 1–2: "CPU cores/Task",
 /// "GPUs/Task").
@@ -36,6 +37,24 @@ impl ResourceRequest {
     }
 }
 
+impl ToJson for ResourceRequest {
+    fn to_json(&self) -> Json {
+        obj([
+            ("cores", Json::from(self.cpu_cores as usize)),
+            ("gpus", Json::from(self.gpus as usize)),
+        ])
+    }
+}
+
+impl FromJson for ResourceRequest {
+    fn from_json(v: &Json) -> Result<ResourceRequest> {
+        Ok(ResourceRequest {
+            cpu_cores: v.req_u64("cores")? as u32,
+            gpus: v.req_u64("gpus")? as u32,
+        })
+    }
+}
+
 /// One compute node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct NodeSpec {
@@ -43,11 +62,47 @@ pub struct NodeSpec {
     pub gpus: u32,
 }
 
+impl ToJson for NodeSpec {
+    fn to_json(&self) -> Json {
+        obj([
+            ("cores", Json::from(self.cores as usize)),
+            ("gpus", Json::from(self.gpus as usize)),
+        ])
+    }
+}
+
+impl FromJson for NodeSpec {
+    fn from_json(v: &Json) -> Result<NodeSpec> {
+        Ok(NodeSpec {
+            cores: v.req_u64("cores")? as u32,
+            gpus: v.req_u64("gpus")? as u32,
+        })
+    }
+}
+
 /// A cluster allocation (the pilot's resource pool).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterSpec {
     pub name: String,
     pub nodes: Vec<NodeSpec>,
+}
+
+impl ToJson for ClusterSpec {
+    fn to_json(&self) -> Json {
+        obj([
+            ("name", Json::from(self.name.clone())),
+            ("nodes", arr_of(&self.nodes)),
+        ])
+    }
+}
+
+impl FromJson for ClusterSpec {
+    fn from_json(v: &Json) -> Result<ClusterSpec> {
+        Ok(ClusterSpec {
+            name: v.req_str("name")?.to_string(),
+            nodes: parse_arr(v, "nodes")?,
+        })
+    }
 }
 
 impl ClusterSpec {

@@ -7,7 +7,9 @@
 //! [`ResourceRequest`] and a stochastic execution time
 //! TX ~ N(mu, (sigma_frac*mu)^2), exactly as Tables 1–2 specify.
 
+use crate::error::{Error, Result};
 use crate::resources::ResourceRequest;
+use crate::util::json::{obj, FromJson, Json, ToJson};
 use crate::util::rng::Rng;
 
 /// What a task actually *does* when executed by a real executor.
@@ -38,6 +40,37 @@ impl TaskKind {
             TaskKind::Aggregation => "aggregation",
             TaskKind::Training { .. } => "training",
             TaskKind::Inference => "inference",
+        }
+    }
+}
+
+impl ToJson for TaskKind {
+    fn to_json(&self) -> Json {
+        match self {
+            TaskKind::MdSimulation { chunks } => obj([
+                ("kind", Json::from(self.label())),
+                ("chunks", Json::from(*chunks)),
+            ]),
+            TaskKind::Training { steps } => obj([
+                ("kind", Json::from(self.label())),
+                ("steps", Json::from(*steps)),
+            ]),
+            _ => obj([("kind", Json::from(self.label()))]),
+        }
+    }
+}
+
+impl FromJson for TaskKind {
+    fn from_json(v: &Json) -> Result<TaskKind> {
+        match v.req_str("kind")? {
+            "stress" => Ok(TaskKind::Stress),
+            "simulation" => Ok(TaskKind::MdSimulation {
+                chunks: v.req_u64("chunks")? as usize,
+            }),
+            "aggregation" => Ok(TaskKind::Aggregation),
+            "training" => Ok(TaskKind::Training { steps: v.req_u64("steps")? as usize }),
+            "inference" => Ok(TaskKind::Inference),
+            other => Err(Error::Config(format!("unknown task kind '{other}'"))),
         }
     }
 }
@@ -104,6 +137,32 @@ impl TaskSetSpec {
     }
 }
 
+impl ToJson for TaskSetSpec {
+    fn to_json(&self) -> Json {
+        obj([
+            ("name", Json::from(self.name.clone())),
+            ("tasks", Json::from(self.tasks as usize)),
+            ("req", self.req.to_json()),
+            ("tx_mean", Json::from(self.tx_mean)),
+            ("tx_sigma_frac", Json::from(self.tx_sigma_frac)),
+            ("task_kind", self.kind.to_json()),
+        ])
+    }
+}
+
+impl FromJson for TaskSetSpec {
+    fn from_json(v: &Json) -> Result<TaskSetSpec> {
+        Ok(TaskSetSpec {
+            name: v.req_str("name")?.to_string(),
+            tasks: v.req_u64("tasks")? as u32,
+            req: ResourceRequest::from_json(v.get("req"))?,
+            tx_mean: v.req_f64("tx_mean")?,
+            tx_sigma_frac: v.req_f64("tx_sigma_frac")?,
+            kind: TaskKind::from_json(v.get("task_kind"))?,
+        })
+    }
+}
+
 /// A concrete task instance produced by expanding a [`TaskSetSpec`].
 #[derive(Debug, Clone)]
 pub struct TaskSpec {
@@ -117,6 +176,32 @@ pub struct TaskSpec {
     pub tx: f64,
     pub req: ResourceRequest,
     pub kind: TaskKind,
+}
+
+impl ToJson for TaskSpec {
+    fn to_json(&self) -> Json {
+        obj([
+            ("uid", Json::from(self.uid)),
+            ("set_idx", Json::from(self.set_idx)),
+            ("ordinal", Json::from(self.ordinal as usize)),
+            ("tx", Json::from(self.tx)),
+            ("req", self.req.to_json()),
+            ("task_kind", self.kind.to_json()),
+        ])
+    }
+}
+
+impl FromJson for TaskSpec {
+    fn from_json(v: &Json) -> Result<TaskSpec> {
+        Ok(TaskSpec {
+            uid: v.req_u64("uid")? as usize,
+            set_idx: v.req_u64("set_idx")? as usize,
+            ordinal: v.req_u64("ordinal")? as u32,
+            tx: v.req_f64("tx")?,
+            req: ResourceRequest::from_json(v.get("req"))?,
+            kind: TaskKind::from_json(v.get("task_kind"))?,
+        })
+    }
 }
 
 /// Task lifecycle states, mirroring RADICAL-Pilot's task state machine.

@@ -58,6 +58,7 @@
 //!     max_workflows: 4,
 //!     seed: 1,
 //!     plan: None,
+//!     checkpoint_at: None,
 //! };
 //! let report = run_traffic(
 //!     &spec,
@@ -74,14 +75,15 @@ mod report;
 
 pub use report::{TrafficReport, WorkflowStat};
 
+use crate::checkpoint::SimSnapshot;
 use crate::ddmd::{ddmd_workflow, DdmdConfig};
-use crate::engine::{Coordinator, EngineConfig, ExecutionMode};
+use crate::engine::{Coordinator, EngineConfig, ExecutionMode, RunOutcome};
 use crate::entk::Workflow;
 use crate::error::{Error, Result};
 use crate::pilot::ResourcePlan;
 use crate::resources::ClusterSpec;
 use crate::sim::VirtualExecutor;
-use crate::util::json::Json;
+use crate::util::json::{from_u64, obj, FromJson, Json, ToJson};
 use crate::util::rng::Rng;
 use crate::workflows::{cdg1, cdg2};
 
@@ -277,6 +279,11 @@ pub struct TrafficSpec {
     /// Elastic allocation plan (timed `--resize` events and/or the
     /// `--autoscale` policy); `None` keeps the allocation fixed.
     pub plan: Option<ResourcePlan>,
+    /// Preemption point (engine seconds): when set, the run stops the
+    /// moment the clock reaches it and [`run_traffic_resumable`]
+    /// returns a [`TrafficCheckpoint`] instead of a report. `None`
+    /// runs to completion.
+    pub checkpoint_at: Option<f64>,
 }
 
 /// Run one traffic scenario: sample arrivals, stream every workflow
@@ -300,6 +307,7 @@ pub struct TrafficSpec {
 ///     max_workflows: 8,
 ///     seed: 7,
 ///     plan: None,
+///     checkpoint_at: None,
 /// };
 /// let report = run_traffic(
 ///     &spec,
@@ -318,6 +326,37 @@ pub fn run_traffic(
     cluster: &ClusterSpec,
     cfg: &EngineConfig,
 ) -> Result<TrafficReport> {
+    match run_traffic_resumable(spec, catalog, cluster, cfg)? {
+        TrafficOutcome::Completed(report) => Ok(*report),
+        TrafficOutcome::Checkpointed(_) => Err(Error::Config(
+            "traffic: the run reached its checkpoint point before finishing; \
+             use run_traffic_resumable (CLI: --checkpoint-out + `asyncflow resume`)"
+                .into(),
+        )),
+    }
+}
+
+/// How a (possibly preempted) traffic run ended.
+#[derive(Debug)]
+pub enum TrafficOutcome {
+    /// The stream drained; the full queueing report.
+    Completed(Box<TrafficReport>),
+    /// The clock reached [`TrafficSpec::checkpoint_at`] first.
+    Checkpointed(Box<TrafficCheckpoint>),
+}
+
+/// [`run_traffic`] with preemption support: when
+/// [`TrafficSpec::checkpoint_at`] is set and the engine clock reaches
+/// it before the stream drains, returns a [`TrafficCheckpoint`]
+/// carrying the full simulation snapshot plus the traffic-level
+/// bookkeeping (workload names, arrival times, arrival window) needed
+/// to finish the report after [`TrafficCheckpoint::resume`].
+pub fn run_traffic_resumable(
+    spec: &TrafficSpec,
+    catalog: &Catalog,
+    cluster: &ClusterSpec,
+    cfg: &EngineConfig,
+) -> Result<TrafficOutcome> {
     if !spec.duration.is_finite() || spec.duration <= 0.0 {
         return Err(Error::Config(format!(
             "traffic: invalid duration {}",
@@ -387,14 +426,116 @@ pub fn run_traffic(
     }
 
     let mut ex = VirtualExecutor::new();
-    let members = coord.run(&mut ex)?;
-    Ok(TrafficReport::build(
-        arrival_window,
-        names,
-        times,
-        members,
-        cluster,
-    ))
+    match coord.run_until(&mut ex, spec.checkpoint_at)? {
+        RunOutcome::Completed(members) => Ok(TrafficOutcome::Completed(Box::new(
+            TrafficReport::build(arrival_window, names, times, members, cluster),
+        ))),
+        RunOutcome::Checkpointed(sim) => {
+            Ok(TrafficOutcome::Checkpointed(Box::new(TrafficCheckpoint {
+                arrival_window,
+                names,
+                arrivals: times,
+                sim: *sim,
+            })))
+        }
+    }
+}
+
+/// A preempted traffic run: the simulation snapshot plus the
+/// traffic-level bookkeeping needed to finish the [`TrafficReport`]
+/// after resuming. Serializes via [`ToJson`]/[`FromJson`] (the CLI's
+/// `--checkpoint-out ckpt.json` / `asyncflow resume ckpt.json`).
+#[derive(Debug, Clone)]
+pub struct TrafficCheckpoint {
+    /// Arrival window the generator used (seconds).
+    pub arrival_window: f64,
+    /// Catalog workload name per member, in registration order.
+    pub names: Vec<String>,
+    /// Arrival time per member, in registration order.
+    pub arrivals: Vec<f64>,
+    /// The engine-level snapshot.
+    pub sim: SimSnapshot,
+}
+
+impl TrafficCheckpoint {
+    /// Resume the interrupted run to completion and reduce it to the
+    /// same [`TrafficReport`] the uninterrupted run would have
+    /// produced (bit-identical for an unchanged allocation). `plan`
+    /// optionally reshapes the follow-up pilot: its resize events are
+    /// absolute engine times (anything at or before the checkpoint
+    /// instant applies immediately), so a preempted run can restart on
+    /// a smaller or growing allocation.
+    pub fn resume(self, plan: Option<ResourcePlan>) -> Result<TrafficReport> {
+        let TrafficCheckpoint { arrival_window, names, arrivals, sim } = self;
+        if names.len() != sim.n_members || arrivals.len() != sim.n_members {
+            return Err(Error::Config(format!(
+                "traffic checkpoint: {} names / {} arrivals for {} members",
+                names.len(),
+                arrivals.len(),
+                sim.n_members
+            )));
+        }
+        let cluster = sim.cluster.clone();
+        let mut coord = Coordinator::restore(sim)?;
+        if let Some(p) = plan {
+            coord.set_resource_plan(p)?;
+        }
+        let mut ex = VirtualExecutor::new();
+        let members = coord.run(&mut ex)?;
+        Ok(TrafficReport::build(arrival_window, names, arrivals, members, &cluster))
+    }
+}
+
+impl ToJson for TrafficCheckpoint {
+    fn to_json(&self) -> Json {
+        obj([
+            ("version", from_u64(crate::checkpoint::SNAPSHOT_VERSION)),
+            ("arrival_window", Json::from(self.arrival_window)),
+            (
+                "names",
+                Json::Arr(self.names.iter().map(|n| Json::from(n.clone())).collect()),
+            ),
+            (
+                "arrivals",
+                Json::Arr(self.arrivals.iter().map(|&t| Json::from(t)).collect()),
+            ),
+            ("sim", self.sim.to_json()),
+        ])
+    }
+}
+
+impl FromJson for TrafficCheckpoint {
+    fn from_json(v: &Json) -> Result<TrafficCheckpoint> {
+        let version = v.req_u64("version")?;
+        if version != crate::checkpoint::SNAPSHOT_VERSION {
+            return Err(Error::Config(format!(
+                "traffic checkpoint: version {version} is not supported (expected {})",
+                crate::checkpoint::SNAPSHOT_VERSION
+            )));
+        }
+        let mut names = Vec::new();
+        for n in v.req_arr("names")? {
+            names.push(
+                n.as_str()
+                    .ok_or_else(|| {
+                        Error::Config("traffic checkpoint: names must be strings".into())
+                    })?
+                    .to_string(),
+            );
+        }
+        let mut arrivals = Vec::new();
+        for t in v.req_arr("arrivals")? {
+            arrivals.push(t.as_f64().ok_or_else(|| {
+                Error::Config("traffic checkpoint: arrivals must be numbers".into())
+            })?);
+        }
+        Ok(TrafficCheckpoint {
+            arrival_window: v.req_f64("arrival_window")?,
+            names,
+            arrivals,
+            sim: SimSnapshot::from_json(v.get("sim"))?,
+        })
+    }
 }
 
 /// Parse a trace-driven arrival file. Accepted shapes:

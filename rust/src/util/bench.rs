@@ -85,7 +85,7 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
-    pub fn to_string(&self) -> String {
+    fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
             for (i, c) in row.iter().enumerate() {
@@ -109,7 +109,15 @@ impl Table {
     }
 
     pub fn print(&self) {
-        print!("{}", self.to_string());
+        print!("{self}");
+    }
+}
+
+// Compact rendering via `Display` (so `.to_string()` keeps working for
+// existing callers without shadowing `ToString`).
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.render())
     }
 }
 

@@ -3,11 +3,30 @@
 //! The offline build environment has no `serde`; configs, artifact
 //! metadata (`artifacts/*.meta.json`) and experiment reports all speak
 //! JSON, so we implement RFC 8259 parsing with precise error offsets.
+//!
+//! The [`ToJson`] / [`FromJson`] traits are the crate's serialization
+//! spine: core state types (resource requests, task specs, records,
+//! workflows, resource plans, RNG state) implement them so the
+//! [`checkpoint`](crate::checkpoint) subsystem — and future consumers
+//! like distributed coordinators — can snapshot and restore structured
+//! state through one deterministic wire format.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 use crate::error::{Error, Result};
+
+/// Serialize into a [`Json`] value (deterministic: objects are
+/// `BTreeMap`s, so the same value always renders the same bytes).
+pub trait ToJson {
+    fn to_json(&self) -> Json;
+}
+
+/// Reconstruct from a [`Json`] value; the inverse of [`ToJson`].
+/// Implementations must round-trip: `T::from_json(&t.to_json()) == t`.
+pub trait FromJson: Sized {
+    fn from_json(v: &Json) -> Result<Self>;
+}
 
 /// A JSON value. Objects use `BTreeMap` for deterministic serialization.
 #[derive(Debug, Clone, PartialEq)]
@@ -49,6 +68,28 @@ impl Json {
                 None
             }
         })
+    }
+
+    /// Exact signed-integer view: `None` for non-numbers, fractions,
+    /// and magnitudes beyond what an `f64` stores exactly (2^53).
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().and_then(|f| {
+            if f.fract() == 0.0 && f.abs() <= (1u64 << 53) as f64 {
+                Some(f as i64)
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Lossless `u64` view: accepts plain numbers (exact integers up to
+    /// 2^53) *and* decimal strings, the encoding [`from_u64`] emits for
+    /// full-width values that an `f64` JSON number cannot carry.
+    pub fn as_u64_lossless(&self) -> Option<u64> {
+        match self {
+            Json::Str(s) => s.parse().ok(),
+            _ => self.as_u64(),
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -104,13 +145,37 @@ impl Json {
             .ok_or_else(|| Error::Config(format!("missing/invalid array field '{key}'")))
     }
 
-    // ----- serialization ----------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
-        s
+    /// Required unsigned integer, accepting the lossless string
+    /// encoding of [`from_u64`] (restore paths for seeds, priorities
+    /// and RNG words, which use all 64 bits).
+    pub fn req_u64(&self, key: &str) -> Result<u64> {
+        self.get(key).as_u64_lossless().ok_or_else(|| {
+            Error::Config(format!("missing/invalid unsigned integer field '{key}'"))
+        })
     }
+
+    pub fn req_bool(&self, key: &str) -> Result<bool> {
+        self.get(key)
+            .as_bool()
+            .ok_or_else(|| Error::Config(format!("missing/invalid boolean field '{key}'")))
+    }
+
+    pub fn req_obj(&self, key: &str) -> Result<&BTreeMap<String, Json>> {
+        self.get(key)
+            .as_obj()
+            .ok_or_else(|| Error::Config(format!("missing/invalid object field '{key}'")))
+    }
+
+    /// Required signed integer (exact; see [`Json::as_i64`]).
+    pub fn req_i64(&self, key: &str) -> Result<i64> {
+        self.get(key)
+            .as_i64()
+            .ok_or_else(|| Error::Config(format!("missing/invalid integer field '{key}'")))
+    }
+
+    // ----- serialization ----------------------------------------------
+    // Compact rendering is `Display` (so `.to_string()` works); pretty
+    // rendering is the inherent method below.
 
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
@@ -167,6 +232,14 @@ impl Json {
     }
 }
 
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        f.write_str(&s)
+    }
+}
+
 fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(w) = indent {
         out.push('\n');
@@ -197,6 +270,52 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Ergonomic object builder: `obj([("a", Json::Num(1.0))])`.
 pub fn obj<I: IntoIterator<Item = (&'static str, Json)>>(items: I) -> Json {
     Json::Obj(items.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Serialize a slice of [`ToJson`] values into a JSON array.
+pub fn arr_of<T: ToJson>(xs: &[T]) -> Json {
+    Json::Arr(xs.iter().map(|x| x.to_json()).collect())
+}
+
+/// Parse a required array field whose elements are [`FromJson`] —
+/// the inverse of [`arr_of`] under a key.
+pub fn parse_arr<T: FromJson>(v: &Json, key: &str) -> Result<Vec<T>> {
+    let mut out = Vec::new();
+    for x in v.req_arr(key)? {
+        out.push(T::from_json(x)?);
+    }
+    Ok(out)
+}
+
+/// Lossless `u64` encoding: values an `f64` carries exactly go out as
+/// numbers; full-width values (seeds, RNG words) as decimal strings.
+/// Read back with [`Json::as_u64_lossless`] / [`Json::req_u64`].
+pub fn from_u64(v: u64) -> Json {
+    if v <= (1u64 << 53) {
+        Json::Num(v as f64)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+/// NaN-safe `f64` encoding: JSON has no NaN literal, and task records
+/// legitimately hold NaN for not-yet-started/finished timestamps, so
+/// NaN maps to `null`. Read back with [`f64_or_nan`].
+pub fn from_f64_nan(v: f64) -> Json {
+    if v.is_nan() {
+        Json::Null
+    } else {
+        Json::Num(v)
+    }
+}
+
+/// Inverse of [`from_f64_nan`]: `null` -> NaN, numbers pass through.
+pub fn f64_or_nan(v: &Json) -> Result<f64> {
+    match v {
+        Json::Null => Ok(f64::NAN),
+        Json::Num(n) => Ok(*n),
+        _ => Err(Error::Config("expected a number or null".into())),
+    }
 }
 
 impl From<f64> for Json {
@@ -511,5 +630,78 @@ mod tests {
         assert_eq!(v.get("n").as_u64(), Some(3));
         assert_eq!(Json::Num(-1.0).as_u64(), None);
         assert_eq!(Json::Num(1.5).as_u64(), None);
+    }
+
+    #[test]
+    fn typed_required_accessors() {
+        let v = Json::parse(r#"{"n": 7, "b": true, "o": {"x": 1}, "i": -4, "f": 1.5}"#)
+            .unwrap();
+        assert_eq!(v.req_u64("n").unwrap(), 7);
+        assert!(v.req_bool("b").unwrap());
+        assert_eq!(v.req_obj("o").unwrap().len(), 1);
+        assert_eq!(v.req_i64("i").unwrap(), -4);
+        // Wrong types and missing keys all error.
+        assert!(v.req_u64("b").is_err(), "bool is not a u64");
+        assert!(v.req_u64("i").is_err(), "negative is not a u64");
+        assert!(v.req_u64("f").is_err(), "fraction is not a u64");
+        assert!(v.req_bool("n").is_err());
+        assert!(v.req_obj("n").is_err());
+        assert!(v.req_i64("f").is_err());
+        assert!(v.req_u64("missing").is_err());
+        assert!(v.req_bool("missing").is_err());
+        assert!(v.req_obj("missing").is_err());
+    }
+
+    #[test]
+    fn string_escapes_round_trip_through_serializer() {
+        // Every escape class: quote, backslash, control chars, \u escape
+        // below 0x20, multi-byte UTF-8 and an astral-plane char.
+        for s in [
+            "plain",
+            "quote\"backslash\\slash/",
+            "ctl\n\r\t\u{8}\u{c}",
+            "low\u{1}\u{1f}",
+            "héllo wörld",
+            "emoji 😀 done",
+        ] {
+            let v = Json::Str(s.to_string());
+            let wire = v.to_string();
+            assert_eq!(Json::parse(&wire).unwrap().as_str(), Some(s), "via {wire}");
+        }
+    }
+
+    #[test]
+    fn large_and_negative_integers_round_trip() {
+        // Exact integers on both sides of the 1e15 formatting switch.
+        for n in [
+            0.0,
+            -1.0,
+            9007199254740992.0,  // 2^53
+            -9007199254740992.0, // -2^53
+            1e18,
+            -123456789012345.0,
+        ] {
+            let wire = Json::Num(n).to_string();
+            assert_eq!(Json::parse(&wire).unwrap(), Json::Num(n), "via {wire}");
+        }
+        // Full-width u64s survive via the lossless string encoding.
+        for v in [0u64, 1 << 53, u64::MAX, u64::MAX - 1] {
+            let j = from_u64(v);
+            let wire = j.to_string();
+            let back = Json::parse(&wire).unwrap();
+            assert_eq!(back.as_u64_lossless(), Some(v), "via {wire}");
+        }
+        // ... and the plain-number path stays a number for small values.
+        assert_eq!(from_u64(42), Json::Num(42.0));
+        assert_eq!(Json::parse("42").unwrap().as_u64_lossless(), Some(42));
+    }
+
+    #[test]
+    fn nan_maps_to_null_and_back() {
+        assert_eq!(from_f64_nan(f64::NAN), Json::Null);
+        assert_eq!(from_f64_nan(2.5), Json::Num(2.5));
+        assert!(f64_or_nan(&Json::Null).unwrap().is_nan());
+        assert_eq!(f64_or_nan(&Json::Num(3.0)).unwrap(), 3.0);
+        assert!(f64_or_nan(&Json::Bool(true)).is_err());
     }
 }

@@ -1,0 +1,337 @@
+//! Integration tests for the checkpoint/resume subsystem.
+//!
+//! The headline invariant: for any seed and checkpoint time,
+//! checkpoint-at-T + serialize + parse + resume produces a
+//! `TrafficReport` **bit-identical** to the uninterrupted run —
+//! including runs whose snapshot lands mid-drain of a draining node.
+//! Resuming on a shrunken pilot completes every workflow (graceful
+//! drains strand nothing) at a makespan penalty.
+
+use asyncflow::dag::Dag;
+use asyncflow::engine::EngineConfig;
+use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::pilot::ResourcePlan;
+use asyncflow::resources::{ClusterSpec, ResourceRequest};
+use asyncflow::task::TaskSetSpec;
+use asyncflow::traffic::{
+    run_traffic, run_traffic_resumable, ArrivalProcess, Catalog, TrafficCheckpoint,
+    TrafficOutcome, TrafficReport, TrafficSpec, WorkloadMix,
+};
+use asyncflow::util::json::{FromJson, Json, ToJson};
+
+/// Single-task workflow: 1 core for `tx` seconds, deterministic.
+fn solo(tx: f64) -> Workflow {
+    let mut dag = Dag::new();
+    dag.add_node("A");
+    Workflow {
+        name: "solo".into(),
+        sets: vec![TaskSetSpec::new("A", 1, ResourceRequest::new(1, 0), tx).with_sigma(0.0)],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0])],
+        asynchronous: vec![Pipeline::new("a").stage(&[0])],
+    }
+}
+
+fn catalog() -> Catalog {
+    Catalog::new().insert("solo", solo(10.0))
+}
+
+/// Run `spec` uninterrupted, then again preempted at `t_ck` with a
+/// full JSON round-trip of the checkpoint before resuming; returns
+/// both reports (panics if the run finishes before the checkpoint).
+fn straight_and_resumed(
+    spec: &TrafficSpec,
+    cat: &Catalog,
+    cluster: &ClusterSpec,
+    cfg: &EngineConfig,
+    t_ck: f64,
+) -> (TrafficReport, TrafficReport, TrafficCheckpoint) {
+    let straight = run_traffic(spec, cat, cluster, cfg).unwrap();
+    let preempted = TrafficSpec { checkpoint_at: Some(t_ck), ..spec.clone() };
+    let outcome = run_traffic_resumable(&preempted, cat, cluster, cfg).unwrap();
+    let TrafficOutcome::Checkpointed(ck) = outcome else {
+        panic!("run finished before the t = {t_ck} checkpoint")
+    };
+    // Serialize -> parse: the wire format must capture everything.
+    let wire = ck.to_json().to_string();
+    let parsed = TrafficCheckpoint::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    let ck_copy = TrafficCheckpoint::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    let resumed = parsed.resume(None).unwrap();
+    (straight, resumed, ck_copy)
+}
+
+#[test]
+fn resume_is_bit_identical_across_seeds_and_checkpoint_times() {
+    // Saturated Poisson stream over an allocation that loses a node
+    // mid-window: checkpoints both before and after the drain, three
+    // seeds each. The resumed report must equal the uninterrupted one
+    // bit for bit (PartialEq over every f64, and the serialized JSON).
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let cfg = EngineConfig::ideal();
+    for seed in [1, 2, 3] {
+        let spec = TrafficSpec {
+            process: ArrivalProcess::Poisson { rate: 1.0 },
+            mix: WorkloadMix::parse("solo").unwrap(),
+            duration: 30.0,
+            max_workflows: 100_000,
+            seed,
+            plan: Some(ResourcePlan::new().resize(15.0, -1)),
+            checkpoint_at: None,
+        };
+        for t_ck in [7.0, 21.0] {
+            let (straight, resumed, ck) =
+                straight_and_resumed(&spec, &catalog(), &cluster, &cfg, t_ck);
+            assert_eq!(
+                ck.sim.now, t_ck,
+                "snapshot clock must land exactly on the checkpoint time"
+            );
+            assert_eq!(
+                straight, resumed,
+                "seed {seed}, checkpoint {t_ck}: reports must be identical"
+            );
+            assert_eq!(
+                straight.to_json().to_string(),
+                resumed.to_json().to_string(),
+                "seed {seed}, checkpoint {t_ck}: serialized reports must be bit-identical"
+            );
+            assert_eq!(straight.total_tasks, resumed.total_tasks);
+            assert_eq!(straight.failed_tasks, 0);
+        }
+    }
+}
+
+#[test]
+fn checkpoint_mid_drain_of_a_draining_node_restores_exactly() {
+    // Deterministic construction of the mid-drain state: 2 x 2-core
+    // nodes, a 10 s 1-core workflow every 2 s, one node drained at
+    // t = 5 while its task has 7+ seconds left. At the t = 7
+    // checkpoint the drained node is still busy, another task is
+    // queued, and two arrivals are pending — every snapshot population
+    // is non-trivial, including the drain flags.
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let cfg = EngineConfig::ideal();
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Deterministic { interval: 2.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 12.0,
+        max_workflows: 100_000,
+        seed: 1,
+        plan: Some(ResourcePlan::new().resize(5.0, -1)),
+        checkpoint_at: None,
+    };
+    let (straight, resumed, ck) =
+        straight_and_resumed(&spec, &catalog(), &cluster, &cfg, 7.0);
+
+    // The snapshot really is mid-drain: some node is draining *and*
+    // still hosts a running placement.
+    let draining: Vec<usize> = (0..ck.sim.draining.len())
+        .filter(|&i| ck.sim.draining[i])
+        .collect();
+    assert_eq!(draining.len(), 1, "exactly one node draining at t = 7");
+    let busy_on_draining = ck.sim.running.iter().any(|r| {
+        r.placement.slots.iter().any(|&(node, _, _)| node == draining[0])
+    });
+    assert!(busy_on_draining, "the draining node must still be running work");
+    assert!(!ck.sim.queue.is_empty(), "contention must have queued work");
+    assert!(!ck.sim.pending.is_empty(), "later arrivals must still be pending");
+
+    assert_eq!(straight, resumed);
+    assert_eq!(straight.to_json().to_string(), resumed.to_json().to_string());
+    // The drained node's core left the offered capacity only when its
+    // task released it — identically in both runs.
+    assert_eq!(straight.capacity, resumed.capacity);
+    assert!(!resumed.capacity.is_constant());
+}
+
+#[test]
+fn resume_with_jittered_builtin_workloads_is_bit_identical() {
+    // Paper workloads with TX jitter (sigma > 0): the per-set TX
+    // streams must draw identically across the checkpoint boundary.
+    let cluster = ClusterSpec::summit_8gpu();
+    let cfg = EngineConfig::default();
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Deterministic { interval: 400.0 },
+        mix: WorkloadMix::parse("cdg2-small,cdg1-small").unwrap(),
+        duration: 2000.0,
+        max_workflows: 100_000,
+        seed: 5,
+        plan: None,
+        checkpoint_at: None,
+    };
+    let (straight, resumed, ck) =
+        straight_and_resumed(&spec, &Catalog::builtin(), &cluster, &cfg, 600.0);
+    assert!(
+        !ck.sim.drivers.is_empty() || !ck.sim.pending.is_empty(),
+        "t = 600 must land mid-stream (arrivals at 800+ are still pending)"
+    );
+    assert_eq!(straight, resumed);
+    assert_eq!(straight.to_json().to_string(), resumed.to_json().to_string());
+}
+
+#[test]
+fn resume_on_a_shrunken_pilot_completes_all_work_with_a_makespan_penalty() {
+    // Preempted at t = 7, resumed on a pilot that immediately loses
+    // half its nodes (the preemptible / backfill scenario): every
+    // workflow must still finish — graceful drains let running work
+    // complete and nothing is stranded — at a strictly larger
+    // makespan than the uninterrupted full-size run.
+    let cluster = ClusterSpec::uniform("t", 4, 1, 0);
+    let cfg = EngineConfig::ideal();
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Deterministic { interval: 2.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 20.0,
+        max_workflows: 100_000,
+        seed: 1,
+        plan: None,
+        checkpoint_at: None,
+    };
+    let straight = run_traffic(&spec, &catalog(), &cluster, &cfg).unwrap();
+    assert_eq!(straight.workflows.len(), 10);
+
+    let preempted = TrafficSpec { checkpoint_at: Some(7.0), ..spec.clone() };
+    let TrafficOutcome::Checkpointed(ck) =
+        run_traffic_resumable(&preempted, &catalog(), &cluster, &cfg).unwrap()
+    else {
+        panic!("stream runs past t = 7")
+    };
+    let shrunk = ck.resume(Some(ResourcePlan::new().resize(0.0, -2))).unwrap();
+
+    // All work completes; nothing stranded.
+    assert_eq!(shrunk.workflows.len(), 10);
+    assert_eq!(shrunk.total_tasks, straight.total_tasks);
+    assert_eq!(shrunk.failed_tasks, 0);
+    assert_eq!(shrunk.backlog.final_tasks(), 0);
+    assert!(shrunk
+        .workflows
+        .iter()
+        .all(|w| w.finish >= w.arrival + 10.0 - 1e-9));
+    // ... at the expected cost: the 2-node tail serves the same queue
+    // strictly slower than 4 nodes would have.
+    assert!(
+        shrunk.makespan > straight.makespan + 1e-9,
+        "halving the pilot must stretch the makespan: {} vs {}",
+        shrunk.makespan,
+        straight.makespan
+    );
+    // The capacity timeline records the resume-time shrink: offered
+    // cores step down from 4 and end at 2.
+    assert_eq!(shrunk.capacity.points.first(), Some(&(0.0, 4, 0)));
+    assert_eq!(shrunk.capacity.final_capacity(), (2, 0));
+    // Work running on the drained nodes at the resume instant finished
+    // there: no core leaves the offered capacity before t = 7.
+    assert!(shrunk.capacity.points[1..].iter().all(|&(t, _, _)| t >= 7.0 - 1e-9));
+}
+
+#[test]
+fn resume_with_autoscaler_grows_the_follow_up_allocation() {
+    // Resume a saturated run with an autoscaler attached: the follow-up
+    // pilot grows under backlog pressure and beats the fixed-size
+    // uninterrupted run.
+    let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+    let cfg = EngineConfig::ideal();
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Deterministic { interval: 2.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 20.0,
+        max_workflows: 100_000,
+        seed: 1,
+        plan: None,
+        checkpoint_at: None,
+    };
+    let straight = run_traffic(&spec, &catalog(), &cluster, &cfg).unwrap();
+    let preempted = TrafficSpec { checkpoint_at: Some(6.0), ..spec };
+    let TrafficOutcome::Checkpointed(ck) =
+        run_traffic_resumable(&preempted, &catalog(), &cluster, &cfg).unwrap()
+    else {
+        panic!("stream runs past t = 6")
+    };
+    let scaled = ck
+        .resume(Some(ResourcePlan::new().with_autoscale(
+            asyncflow::pilot::AutoscalePolicy {
+                interval: 4.0,
+                min_nodes: 1,
+                max_nodes: 8,
+                step: 2,
+                ..Default::default()
+            },
+        )))
+        .unwrap();
+    assert_eq!(scaled.workflows.len(), 10);
+    assert_eq!(scaled.failed_tasks, 0);
+    assert!(
+        scaled.capacity.peak().0 > 1,
+        "autoscaler must grow the resumed allocation: {:?}",
+        scaled.capacity.points
+    );
+    assert!(
+        scaled.makespan < straight.makespan - 1e-9,
+        "the grown follow-up pilot must beat the fixed 1-core run: {} vs {}",
+        scaled.makespan,
+        straight.makespan
+    );
+}
+
+#[test]
+fn run_traffic_refuses_a_checkpoint_it_cannot_return() {
+    // The plain run_traffic entry point cannot hand back a snapshot;
+    // hitting the preemption point there is an error, not silence.
+    let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Deterministic { interval: 2.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 10.0,
+        max_workflows: 100_000,
+        seed: 1,
+        plan: None,
+        checkpoint_at: Some(5.0),
+    };
+    let err = run_traffic(&spec, &catalog(), &cluster, &EngineConfig::ideal());
+    assert!(err.is_err(), "run_traffic must refuse to swallow a checkpoint");
+    // Non-finite checkpoint times would silently never fire; rejected.
+    for bad in [f64::NAN, f64::INFINITY] {
+        let spec = TrafficSpec { checkpoint_at: Some(bad), ..spec.clone() };
+        assert!(
+            run_traffic_resumable(&spec, &catalog(), &cluster, &EngineConfig::ideal())
+                .is_err(),
+            "checkpoint_at = {bad} must error"
+        );
+    }
+}
+
+#[test]
+fn corrupted_snapshots_are_rejected_not_restored() {
+    let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Deterministic { interval: 2.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 10.0,
+        max_workflows: 100_000,
+        seed: 1,
+        plan: None,
+        checkpoint_at: Some(5.0),
+    };
+    let TrafficOutcome::Checkpointed(ck) =
+        run_traffic_resumable(&spec, &catalog(), &cluster, &EngineConfig::ideal()).unwrap()
+    else {
+        panic!("must checkpoint at t = 5")
+    };
+    let wire = ck.to_json().to_string();
+    // Sanity: the uncorrupted wire restores.
+    assert!(TrafficCheckpoint::from_json(&Json::parse(&wire).unwrap()).is_ok());
+    // Unsupported snapshot version.
+    let bumped = wire.replacen("\"version\":1", "\"version\":999", 2);
+    assert!(TrafficCheckpoint::from_json(&Json::parse(&bumped).unwrap()).is_err());
+    // Structural damage: a slab smaller than its live tasks + free list.
+    let slab = ck.sim.slab_len;
+    assert!(slab >= 1, "t = 5 snapshot holds live tasks");
+    let torn = wire.replace(
+        &format!("\"slab_len\":{slab}"),
+        &format!("\"slab_len\":{}", slab - 1),
+    );
+    assert_ne!(torn, wire, "slab_len must appear in the wire format");
+    assert!(
+        TrafficCheckpoint::from_json(&Json::parse(&torn).unwrap()).is_err(),
+        "inconsistent uid slab must be rejected"
+    );
+}

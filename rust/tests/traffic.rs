@@ -46,6 +46,7 @@ fn spec(process: ArrivalProcess, duration: f64, seed: u64) -> TrafficSpec {
         max_workflows: 100_000,
         seed,
         plan: None,
+        checkpoint_at: None,
     }
 }
 
@@ -234,6 +235,7 @@ fn mix_ratio_shapes_the_sampled_stream() {
         max_workflows: 100_000,
         seed: 11,
         plan: None,
+        checkpoint_at: None,
     };
     let rep = run_traffic(&s, &cat, &cluster(), &EngineConfig::ideal()).unwrap();
     let fast = rep.workflows.iter().filter(|w| w.name == "fast").count();
@@ -422,6 +424,7 @@ fn unknown_workload_and_empty_windows_error() {
             max_workflows: 10,
             seed: 1,
             plan: None,
+            checkpoint_at: None,
         },
         &catalog(),
         &cluster(),
