@@ -46,6 +46,7 @@ fn main() {
         seed: 1,
         plan: None,
         checkpoint_at: None,
+        policy: None,
     };
 
     // Probe: where is mid-stream, and what does the snapshot carry?

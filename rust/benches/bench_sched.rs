@@ -1,0 +1,137 @@
+//! Scheduling-subsystem benchmark: saturated 10k-task queue drain
+//! under the fifo / fair / backfill disciplines, against the
+//! pre-refactor flat-queue walk as the baseline.
+//!
+//! The scenario is the streaming hot path: a fully-occupied allocation
+//! and a deep ready queue, re-drained on every engine state change.
+//! The old scheduler walked all 10 000 entries per round (memoizing
+//! failed shapes but still touching every task); the shape-bucketed
+//! queue screens the 8 distinct shapes and stops. The acceptance bar
+//! for the refactor is a >= 5x faster drain round here.
+//!
+//! `cargo bench --bench bench_sched`
+
+use std::collections::HashSet;
+
+use asyncflow::resources::{Allocator, ClusterSpec, ResourceRequest};
+use asyncflow::sched::{DrainCtx, InFlight, Policy, QueuedTask, Scheduler};
+use asyncflow::util::bench::{bench, report, report_header};
+
+const QUEUE: usize = 10_000;
+
+/// The 8 distinct task shapes of the queue (c-DG-like mix).
+const SHAPES: [(u32, u32); 8] =
+    [(1, 0), (4, 0), (16, 0), (40, 0), (4, 1), (16, 1), (8, 2), (1, 1)];
+
+fn queued(uid: usize) -> QueuedTask {
+    let (c, g) = SHAPES[uid % SHAPES.len()];
+    QueuedTask {
+        uid,
+        req: ResourceRequest::new(c, g),
+        priority: (uid % 4) as u64,
+        submitted_at: uid as f64,
+        tenant: uid % 16,
+        est: 10.0 + (uid % 100) as f64,
+    }
+}
+
+/// Fill the paper's 16-node allocation completely (one node-sized task
+/// per node), returning the running view the backfill policy projects
+/// against.
+fn saturate(alloc: &mut Allocator) -> Vec<InFlight> {
+    let node = ResourceRequest::new(168, 6);
+    (0..16)
+        .map(|i| {
+            alloc.try_alloc(&node).expect("node-sized task fills node");
+            InFlight { end: 1000.0 + i as f64, req: node, tenant: i }
+        })
+        .collect()
+}
+
+/// The pre-refactor drain: walk the whole flat queue in FIFO order
+/// with a failed-shape memo (verbatim from the old `pilot::scheduler`,
+/// minus the placement branch that a saturated round never takes).
+fn legacy_drain(queue: &[QueuedTask], alloc: &mut Allocator) -> usize {
+    let mut failed_shapes: HashSet<ResourceRequest> = HashSet::new();
+    let mut placed = 0;
+    for t in queue {
+        if failed_shapes.contains(&t.req) {
+            continue;
+        }
+        match alloc.try_alloc(&t.req) {
+            Some(_) => placed += 1,
+            None => {
+                failed_shapes.insert(t.req);
+            }
+        }
+    }
+    placed
+}
+
+fn main() {
+    report_header();
+    let cluster = ClusterSpec::summit_paper();
+
+    // --- baseline: flat-queue walk ------------------------------------
+    let mut alloc = Allocator::new(&cluster);
+    saturate(&mut alloc);
+    let flat: Vec<QueuedTask> = (0..QUEUE).map(queued).collect();
+    let legacy = bench("legacy flat drain: 10k tasks, saturated", 5, 60, || {
+        std::hint::black_box(legacy_drain(&flat, &mut alloc));
+    });
+    report(&legacy);
+
+    // --- bucketed disciplines -----------------------------------------
+    let mut speedup_fifo = 0.0;
+    for policy in [Policy::FifoBackfill, Policy::WeightedFair, Policy::Backfill] {
+        let mut alloc = Allocator::new(&cluster);
+        let running = saturate(&mut alloc);
+        let mut s = Scheduler::new(policy);
+        for uid in 0..QUEUE {
+            s.push(queued(uid));
+        }
+        let label = format!("bucketed drain: 10k tasks, saturated ({policy:?})");
+        let r = bench(&label, 5, 60, || {
+            let ctx = DrainCtx { now: 0.0, running: &running };
+            let placed = s.drain_schedulable(&mut alloc, &ctx);
+            assert!(placed.is_empty(), "saturated round must place nothing");
+        });
+        report(&r);
+        let speedup = legacy.secs.mean / r.secs.mean;
+        println!("    -> {speedup:.1}x vs the legacy flat walk");
+        if policy == Policy::FifoBackfill {
+            speedup_fifo = speedup;
+        }
+        assert_eq!(s.queue_len(), QUEUE, "no-op rounds must not lose tasks");
+    }
+
+    println!(
+        "\nheadline: fifo drain round {speedup_fifo:.1}x faster than the \
+         pre-refactor O(queue) walk (target >= 5x)"
+    );
+
+    // --- non-saturated sanity: drain-to-empty throughput --------------
+    let r = bench("bucketed fifo: drain 10k tasks to empty (free pilot)", 3, 20, || {
+        let mut alloc = Allocator::new(&cluster);
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        for uid in 0..QUEUE {
+            s.push(queued(uid));
+        }
+        let mut done = 0usize;
+        let mut live: Vec<asyncflow::resources::Placement> = Vec::new();
+        while done < QUEUE {
+            let placed = s.drain_schedulable(&mut alloc, &DrainCtx::at(done as f64));
+            if placed.is_empty() {
+                for p in live.drain(..) {
+                    alloc.release(&p);
+                }
+                continue;
+            }
+            done += placed.len();
+            live.extend(placed.into_iter().map(|p| p.placement));
+        }
+        std::hint::black_box(done);
+    });
+    report(&r);
+    println!("    -> {:.0} placements/s end to end", QUEUE as f64 / r.secs.mean);
+}

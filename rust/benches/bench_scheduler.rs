@@ -5,6 +5,7 @@
 use asyncflow::engine::{simulate_cfg, EngineConfig, ExecutionMode};
 use asyncflow::pilot::{Policy, QueuedTask, Scheduler};
 use asyncflow::resources::{Allocator, ClusterSpec, ResourceRequest};
+use asyncflow::sched::DrainCtx;
 use asyncflow::sim::EventQueue;
 use asyncflow::util::bench::{bench, report, report_header};
 use asyncflow::util::rng::Rng;
@@ -59,10 +60,12 @@ fn main() {
                     req: ResourceRequest::new(1 + rng.below(8) as u32, (rng.below(2)) as u32),
                     priority: rng.below(4),
                     submitted_at: rng.f64(),
+                    tenant: uid % 8,
+                    est: 10.0,
                 });
             }
             let mut a = Allocator::new(&cluster);
-            let placed = s.drain_schedulable(&mut a);
+            let placed = s.drain_schedulable(&mut a, &DrainCtx::at(0.0));
             std::hint::black_box(placed.len());
         });
         report(&r);

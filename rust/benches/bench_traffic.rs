@@ -43,6 +43,7 @@ fn main() {
         seed: 1,
         plan: None,
         checkpoint_at: None,
+        policy: None,
     };
     let probe = run_traffic(&spec, &catalog, &cluster, &cfg).unwrap();
     let n_wf = probe.workflows.len();

@@ -6,15 +6,17 @@ use crate::engine::{DriverState, EngineConfig, ExecutionMode};
 use crate::entk::Workflow;
 use crate::error::{Error, Result};
 use crate::metrics::{CapacityTimeline, TaskRecord};
-use crate::pilot::{AutoscalePolicy, QueuedTask, ResizeEvent};
+use crate::pilot::{AutoscalePolicy, ResizeEvent};
 use crate::resources::{ClusterSpec, NodeSpec, Placement};
+use crate::sched::QueuedTask;
 use crate::task::TaskSpec;
 use crate::util::json::{arr_of, from_u64, obj, parse_arr, FromJson, Json, ToJson};
 
 /// Schema version stamped into every snapshot; bumped on breaking
 /// layout changes so a stale checkpoint fails loudly instead of
-/// restoring garbage.
-pub const SNAPSHOT_VERSION: u64 = 1;
+/// restoring garbage. (v2: queued tasks carry the owning driver slot
+/// and service estimate — the fair-share and backfill policy inputs.)
+pub const SNAPSHOT_VERSION: u64 = 2;
 
 /// A registered workflow whose driver has not materialized yet: until
 /// the engine clock reaches `arrival` it costs one workflow spec, no
@@ -117,6 +119,10 @@ pub struct SimSnapshot {
     pub running: Vec<RunningEntry>,
     /// Scheduler queue in insertion order.
     pub queue: Vec<QueuedTask>,
+    /// Non-default fair-share weights `(tenant, weight)` — replayed
+    /// through the scheduler on restore so a weighted run resumes
+    /// bit-identically (empty for unweighted policies).
+    pub tenant_weights: Vec<(usize, f64)>,
     pub capacity: CapacityTimeline,
     /// Resize events not yet applied, in time order.
     pub resize_events: Vec<ResizeEvent>,
@@ -349,6 +355,15 @@ impl ToJson for SimSnapshot {
             ),
             ("running", arr_of(&self.running)),
             ("queue", arr_of(&self.queue)),
+            (
+                "tenant_weights",
+                Json::Arr(
+                    self.tenant_weights
+                        .iter()
+                        .map(|&(t, w)| Json::Arr(vec![Json::from(t), Json::from(w)]))
+                        .collect(),
+                ),
+            ),
             ("capacity", self.capacity.to_json()),
             ("resize_events", arr_of(&self.resize_events)),
             (
@@ -416,6 +431,24 @@ impl FromJson for SimSnapshot {
             },
             running: parse_arr(v, "running")?,
             queue: parse_arr(v, "queue")?,
+            tenant_weights: {
+                let mut out = Vec::new();
+                for p in v.req_arr("tenant_weights")? {
+                    let pair = p.as_arr().filter(|x| x.len() == 2).ok_or_else(|| {
+                        Error::Config(
+                            "snapshot: tenant_weights entries must be [tenant, weight]".into(),
+                        )
+                    })?;
+                    let t = pair[0].as_u64().ok_or_else(|| {
+                        Error::Config("snapshot: bad tenant in tenant_weights".into())
+                    })?;
+                    let w = pair[1].as_f64().ok_or_else(|| {
+                        Error::Config("snapshot: bad weight in tenant_weights".into())
+                    })?;
+                    out.push((t as usize, w));
+                }
+                out
+            },
             capacity: CapacityTimeline::from_json(v.get("capacity"))?,
             resize_events: parse_arr(v, "resize_events")?,
             autoscale: match v.get("autoscale") {

@@ -156,13 +156,7 @@ pub fn engine_from_json(v: &Json) -> Result<EngineConfig> {
         cfg.stage_overhead = t;
     }
     if let Some(p) = v.get("policy").as_str() {
-        cfg.policy = match p {
-            "pipeline_age" => Policy::PipelineAge,
-            "fifo" => Policy::FifoBackfill,
-            "fifo_strict" => Policy::FifoStrict,
-            "smallest_first" => Policy::SmallestFirst,
-            other => return Err(Error::Config(format!("unknown policy '{other}'"))),
-        };
+        cfg.policy = p.parse::<Policy>()?;
     }
     Ok(cfg)
 }

@@ -62,8 +62,8 @@ use crate::entk::Workflow;
 use crate::error::{Error, Result};
 use crate::exec::{Executor, RunningTask};
 use crate::metrics::CapacityTimeline;
-use crate::pilot::{Agent, AutoscalePolicy, ResizeEvent, ResourcePlan, Scheduler};
-use crate::resources::{Allocator, ClusterSpec, NodeSpec, Placement, ResourceRequest};
+use crate::pilot::{Agent, AutoscalePolicy, ResizeEvent, ResourcePlan, RunningMeta, Scheduler};
+use crate::resources::{Allocator, ClusterSpec, NodeSpec, ResourceRequest};
 use crate::task::{TaskKind, TaskSpec};
 
 /// How a (possibly checkpointed) coordinator run ended.
@@ -322,7 +322,7 @@ fn normalize_plan(
 impl EngineLoop {
     /// Fresh loop state over the coordinator's registered workflows.
     fn fresh(coord: Coordinator, plan: Option<ResourcePlan>) -> Result<EngineLoop> {
-        let agent = Agent::new(&coord.cluster, coord.cfg.policy);
+        let agent = Agent::new(&coord.cluster, coord.cfg.policy, coord.cfg.task_overhead);
         let capacity = CapacityTimeline::of_cluster(&coord.cluster);
         let (resize_events, autoscale, grow_node) = match plan {
             Some(p) => normalize_plan(p, &coord.cluster)?,
@@ -397,6 +397,7 @@ impl EngineLoop {
             span_order,
             running,
             queue,
+            tenant_weights,
             capacity,
             resize_events,
             autoscale,
@@ -460,7 +461,7 @@ impl EngineLoop {
         // (claims precede drains — a draining node's still-busy slices
         // need its free capacity on the books to be claimable), the
         // scheduler queue re-pushed in insertion order, and the
-        // uid -> placement table of running work.
+        // uid -> running bookkeeping of in-flight work.
         let mut alloc = Allocator::new(&ClusterSpec { name: cluster.name.clone(), nodes });
         for r in &running {
             alloc.claim(&r.placement)?;
@@ -479,19 +480,21 @@ impl EngineLoop {
             alloc.restore_span_order(order)?;
         }
         let mut sched = Scheduler::new(cfg.policy);
+        for &(t, w) in &tenant_weights {
+            sched.set_weight(t, w);
+        }
         for q in &queue {
             sched.push(*q);
         }
-        let mut running_table: Vec<Option<Placement>> = vec![None; slab_len];
-        for r in &running {
-            running_table[r.uid] = Some(r.placement.clone());
-        }
-        let agent = Agent::from_parts(alloc, sched, running_table);
         let in_flight = running.len();
 
-        // Re-launch in-flight work into the fresh executor: original
+        // Re-launch in-flight work into the fresh executor — original
         // start time + original total duration, so every completion
-        // lands at exactly the instant the uninterrupted run saw.
+        // lands at exactly the instant the uninterrupted run saw — and
+        // rebuild the per-task running bookkeeping the scheduler
+        // disciplines consume: owning tenant (fair-share ledger) and
+        // projected completion (conservative-backfill reservation).
+        let mut running_table: Vec<Option<RunningMeta>> = vec![None; slab_len];
         for r in &running {
             let (slot, local) = route[r.uid];
             let d = drivers[slot].as_ref().ok_or_else(|| {
@@ -513,14 +516,23 @@ impl EngineLoop {
                     r.uid
                 )));
             }
+            let tx = specs[r.uid].tx + cfg.task_overhead;
             executor.launch(&RunningTask {
                 uid: r.uid,
-                tx: specs[r.uid].tx + cfg.task_overhead,
+                tx,
                 started_at: started,
                 kind: Some(specs[r.uid].kind.clone()),
             });
+            sched.note_started(slot, &specs[r.uid].req);
+            running_table[r.uid] = Some(RunningMeta {
+                placement: r.placement.clone(),
+                tenant: slot,
+                req: specs[r.uid].req,
+                end: started + tx,
+            });
         }
         executor.advance_to(now);
+        let agent = Agent::from_parts(alloc, sched, running_table, cfg.task_overhead);
 
         // Plan: an explicit plan attached after restore replaces the
         // checkpointed run's remnant (events are absolute engine times;
@@ -609,7 +621,8 @@ impl EngineLoop {
             .into_iter()
             .map(|(uid, placement)| RunningEntry { uid, placement })
             .collect();
-        let queue = self.agent.queued_tasks().to_vec();
+        let queue = self.agent.queued_tasks();
+        let tenant_weights = self.agent.tenant_weights();
         let alloc = self.agent.allocator();
         let nodes = alloc.spec().nodes.clone();
         let draining: Vec<bool> =
@@ -636,6 +649,7 @@ impl EngineLoop {
             span_order,
             running,
             queue,
+            tenant_weights,
             capacity: self.capacity,
             resize_events: self.resize_events[self.next_resize..].to_vec(),
             autoscale: self.autoscale,
@@ -772,7 +786,7 @@ impl EngineLoop {
                             g
                         }
                     };
-                    self.agent.submit(&self.specs[gid], sub.priority, now);
+                    self.agent.submit(&self.specs[gid], sub.priority, di, now);
                     self.live_uids += 1;
                     self.peak_live = self.peak_live.max(self.live_uids);
                     self.sched_dirty = true;
@@ -786,7 +800,7 @@ impl EngineLoop {
             // 3. Schedule everything that fits.
             let placed = if self.sched_dirty {
                 let t0 = Instant::now();
-                let placed = self.agent.schedule();
+                let placed = self.agent.schedule(now);
                 self.sched_wall += t0.elapsed();
                 self.sched_rounds += 1;
                 self.sched_dirty = false;

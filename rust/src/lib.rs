@@ -6,8 +6,9 @@
 //!
 //! - **Layer 3 (this crate)**: the paper's coordination contribution — an
 //!   EnTK-like Pipeline/Stage/Task workflow engine ([`entk`]), a
-//!   RADICAL-Pilot-like pilot runtime with a continuous scheduler
-//!   ([`pilot`]), a Summit-like resource model ([`resources`]), the
+//!   RADICAL-Pilot-like pilot runtime ([`pilot`]) over a pluggable
+//!   shape-bucketed continuous scheduler ([`sched`]), a Summit-like
+//!   resource model ([`resources`]), the
 //!   asynchronicity model (DOA_dep / DOA_res / WLA, Eqns 1–7) ([`model`],
 //!   [`dag`]), a discrete-event simulator ([`sim`]), real executors
 //!   ([`exec`]) behind one engine ([`engine`]), a streaming-traffic
@@ -59,6 +60,7 @@ pub mod pilot;
 pub mod resources;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod task;
 pub mod traffic;

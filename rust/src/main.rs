@@ -71,15 +71,24 @@ subcommands:
            [--interval S] [--trace F]    fixed-interval / trace-driven)
            [--sweep 0.005,0.01,0.02]     arrivals drawn from a weighted
            [--max-workflows N]           workload mix; reports wait/TTX
-           [--resize T:+N,T:-N]          percentiles, backlog, and the
-           [--autoscale]                 saturation verdict. --sweep
-           [--autoscale-min N]           runs several rates to find the
-           [--autoscale-max N]           knee. --resize grows/drains
-           [--autoscale-interval S]      pilot nodes at the given times
-           [--autoscale-step N]          (drains are graceful: running
-           [--checkpoint-at T]           tasks finish first); --autoscale
-           [--checkpoint-out F.json]     sizes the allocation from the
+           [--policy fifo|fair|backfill] percentiles, backlog, per-
+           [--resize T:+N,T:-N]          workload waits + Jain fairness,
+           [--autoscale]                 and the saturation verdict.
+           [--autoscale-min N]           --sweep runs several rates to
+           [--autoscale-max N]           find the knee (composes with
+           [--autoscale-interval S]      --autoscale*: the peak_c column
+           [--autoscale-step N]          shows how far each rate grew).
+           [--checkpoint-at T]           --resize grows/drains pilot
+           [--checkpoint-out F.json]     nodes at the given times
+                                         (drains are graceful: running
+                                         tasks finish first); --autoscale
+                                         sizes the allocation from the
                                          backlog every interval seconds.
+                                         --policy fair = per-driver
+                                         weighted fair shares (no member
+                                         starves late arrivals);
+                                         backfill = conservative (never
+                                         delays a blocked head).
                                          --checkpoint-at snapshots the
                                          whole simulation at T (a
                                          preemption) to --checkpoint-out.
@@ -96,7 +105,8 @@ subcommands:
 
 common options:
   --cluster summit_paper|summit_706|summit_8gpu|local_small
-  --seed N  --policy pipeline_age|fifo|fifo_strict|smallest_first
+  --seed N
+  --policy pipeline_age|fifo|fifo_strict|smallest_first|fair|backfill
   --out DIR (figures)  --ascii (timeline art)";
 
 fn pick_workflow(args: &Args) -> Result<Workflow> {
@@ -125,13 +135,7 @@ fn pick_cluster(args: &Args) -> Result<ClusterSpec> {
 
 fn pick_engine(args: &Args) -> Result<EngineConfig> {
     let mut cfg = experiments::paper_engine_config(args.get_u64("seed", 42)?);
-    cfg.policy = match args.get_or("policy", "pipeline_age") {
-        "pipeline_age" => Policy::PipelineAge,
-        "fifo" => Policy::FifoBackfill,
-        "fifo_strict" => Policy::FifoStrict,
-        "smallest_first" => Policy::SmallestFirst,
-        other => return Err(Error::Config(format!("unknown policy '{other}'"))),
-    };
+    cfg.policy = args.get_or("policy", "pipeline_age").parse::<Policy>()?;
     cfg.task_overhead = args.get_f64("task-overhead", cfg.task_overhead)?;
     cfg.stage_overhead = args.get_f64("stage-overhead", cfg.stage_overhead)?;
     Ok(cfg)
@@ -333,17 +337,25 @@ fn emit_traffic_report(args: &Args, rep: &asyncflow::traffic::TrafficReport) -> 
     if let Some(dir) = args.get("out") {
         std::fs::create_dir_all(dir)?;
         let base = std::path::Path::new(dir);
+        let mut wrote = Vec::new();
         let bp = base.join("traffic_backlog.csv");
         std::fs::write(&bp, rep.backlog.to_csv())?;
+        wrote.push(bp.display().to_string());
+        let wp = base.join("traffic_waits.csv");
+        std::fs::write(&wp, rep.waits_csv())?;
+        wrote.push(wp.display().to_string());
+        let fp = base.join("traffic_fairness.csv");
+        std::fs::write(&fp, rep.fairness_csv())?;
+        wrote.push(fp.display().to_string());
         let jp = base.join("traffic_report.json");
         std::fs::write(&jp, rep.to_json().to_string_pretty())?;
+        wrote.push(jp.display().to_string());
         if !rep.capacity.is_constant() {
             let cp = base.join("traffic_capacity.csv");
             std::fs::write(&cp, rep.capacity.to_csv())?;
-            println!("wrote {}, {} and {}", bp.display(), jp.display(), cp.display());
-        } else {
-            println!("wrote {} and {}", bp.display(), jp.display());
+            wrote.push(cp.display().to_string());
         }
+        println!("wrote {}", wrote.join(", "));
     }
     Ok(())
 }
@@ -377,6 +389,13 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         ));
     }
 
+    // The --policy flag is already folded into the engine config by
+    // pick_engine; recording it on the spec too makes the spec fully
+    // self-describing (and is what the test matrices vary).
+    let policy = match args.get("policy") {
+        Some(p) => Some(p.parse::<asyncflow::sched::Policy>()?),
+        None => None,
+    };
     let spec_for = |process: ArrivalProcess| TrafficSpec {
         process,
         mix: mix.clone(),
@@ -385,6 +404,7 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         seed,
         plan: plan.clone(),
         checkpoint_at,
+        policy,
     };
 
     // Rate sweep: one run per rate, tabulated to expose the saturation
@@ -411,8 +431,8 @@ fn cmd_traffic(args: &Args) -> Result<()> {
             duration
         );
         println!(
-            "{:>9} {:>6} {:>10} {:>10} {:>10} {:>12} {:>8}  verdict",
-            "rate/s", "wf", "wait_mean", "ttx_p50", "ttx_p95", "backlog_mean", "growth"
+            "{:>9} {:>6} {:>10} {:>10} {:>10} {:>12} {:>8} {:>7}  verdict",
+            "rate/s", "wf", "wait_mean", "ttx_p50", "ttx_p95", "backlog_mean", "growth", "peak_c"
         );
         for rate in rates {
             let rep = run_traffic(
@@ -421,8 +441,10 @@ fn cmd_traffic(args: &Args) -> Result<()> {
                 &cluster,
                 &cfg,
             )?;
+            // peak_c exposes how far an --autoscale'd sweep actually
+            // grew at each rate (constant for fixed-pilot sweeps).
             println!(
-                "{:>9.4} {:>6} {:>10.1} {:>10.1} {:>10.1} {:>12.1} {:>7.2}x  {}",
+                "{:>9.4} {:>6} {:>10.1} {:>10.1} {:>10.1} {:>12.1} {:>7.2}x {:>7}  {}",
                 rate,
                 rep.workflows.len(),
                 rep.wait.mean,
@@ -430,6 +452,7 @@ fn cmd_traffic(args: &Args) -> Result<()> {
                 rep.ttx.p95,
                 rep.mean_backlog_tasks,
                 rep.backlog_growth(),
+                rep.capacity.peak().0,
                 if rep.is_saturated() { "SATURATED" } else { "bounded" },
             );
         }

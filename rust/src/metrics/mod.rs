@@ -498,6 +498,26 @@ pub fn measured_doa_res(records: &[TaskRecord]) -> usize {
     best.saturating_sub(1)
 }
 
+/// Jain's fairness index over a sample: `(Σx)² / (n · Σx²)`, in
+/// `(0, 1]` — 1 when every value is equal, `1/n` when one value holds
+/// everything. The traffic report applies it to per-workflow waits to
+/// quantify scheduler starvation: FIFO under a greedy member drives it
+/// toward `1/n`, weighted fair sharing holds it near 1.
+///
+/// Degenerate samples (empty, or all-zero — nobody waited) are
+/// perfectly fair by definition: 1.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sum_sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sum_sq <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sum_sq)
+}
+
 /// Task throughput: completed tasks per second over the makespan.
 pub fn throughput(records: &[TaskRecord]) -> f64 {
     let makespan = records.iter().map(|r| r.finished).fold(0.0, f64::max);
@@ -604,6 +624,18 @@ mod tests {
             rec(1, 0, 0.0, 10.0, 1, 0),
         ];
         assert_eq!(measured_doa_res(&recs), 0);
+    }
+
+    #[test]
+    fn jain_index_ranges() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0, "nobody waited: perfectly fair");
+        assert!((jain_index(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        // One value holds everything: 1/n.
+        assert!((jain_index(&[10.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+        // Moderate skew lands strictly between.
+        let j = jain_index(&[1.0, 2.0, 3.0]);
+        assert!(j > 1.0 / 3.0 && j < 1.0, "got {j}");
     }
 
     #[test]

@@ -2,19 +2,38 @@
 //!
 //! The pilot owns the allocation ([`Allocator`]) and runs a *continuous
 //! scheduler*: whenever resources change (task completion) or new tasks
-//! arrive, it walks the ready queue in policy order and places every
-//! task that fits. Backfill (placing a later task past a blocked head)
-//! is what lets CPU-only Aggregation tasks slide in beside GPU-saturated
-//! Simulation sets — the mechanism behind the paper's TX masking.
+//! arrive, it drains the ready queue in policy order and places every
+//! task the active discipline admits. The queue and the disciplines
+//! live in the [`sched`](crate::sched) subsystem (shape-bucketed ready
+//! queue + pluggable [`SchedPolicy`](crate::sched::SchedPolicy)
+//! implementations); the [`Agent`] is the glue that binds one scheduler
+//! to one allocation and keeps the running-task bookkeeping — per-task
+//! placements, owning driver (fair-share tenant), and projected
+//! completion (conservative backfill) — that the disciplines consume.
+//!
+//! Backfill (placing a later task past a blocked head) is what lets
+//! CPU-only Aggregation tasks slide in beside GPU-saturated Simulation
+//! sets — the mechanism behind the paper's TX masking.
 
 mod elastic;
-mod scheduler;
 
+pub use crate::sched::{Policy, QueuedTask, ScheduledTask, Scheduler};
 pub use elastic::{AutoscalePolicy, ResizeEvent, ResourcePlan};
-pub use scheduler::{Policy, QueuedTask, ScheduledTask, Scheduler};
 
-use crate::resources::{Allocator, ClusterSpec, NodeSpec, Placement};
+use crate::resources::{Allocator, ClusterSpec, NodeSpec, Placement, ResourceRequest};
+use crate::sched::{DrainCtx, InFlight};
 use crate::task::TaskSpec;
+
+/// One running task's bookkeeping: where its resources live, which
+/// driver owns it, what it asked for, and when it is expected to
+/// finish (start + sampled TX + launch overhead).
+#[derive(Debug, Clone)]
+pub struct RunningMeta {
+    pub placement: Placement,
+    pub tenant: usize,
+    pub req: ResourceRequest,
+    pub end: f64,
+}
 
 /// The pilot agent: allocation + scheduler queue.
 ///
@@ -25,28 +44,33 @@ use crate::task::TaskSpec;
 pub struct Agent {
     alloc: Allocator,
     sched: Scheduler,
-    running: Vec<Option<Placement>>, // uid -> placement
+    /// Per-task launch overhead added to TX when projecting a running
+    /// task's completion (must match what the engine launches with).
+    task_overhead: f64,
+    running: Vec<Option<RunningMeta>>, // uid -> running bookkeeping
 }
 
 impl Agent {
-    pub fn new(cluster: &ClusterSpec, policy: Policy) -> Agent {
+    pub fn new(cluster: &ClusterSpec, policy: Policy, task_overhead: f64) -> Agent {
         Agent {
             alloc: Allocator::new(cluster),
             sched: Scheduler::new(policy),
+            task_overhead,
             running: Vec::new(),
         }
     }
 
     /// Rebuild an agent from checkpointed parts: an allocator with the
-    /// snapshot occupancy already claimed, a scheduler queue re-pushed
-    /// in insertion order, and the uid -> placement table of running
-    /// tasks.
+    /// snapshot occupancy already claimed, a scheduler with the queue
+    /// re-pushed in insertion order and the fair-share ledger replayed,
+    /// and the uid -> running bookkeeping of in-flight tasks.
     pub(crate) fn from_parts(
         alloc: Allocator,
         sched: Scheduler,
-        running: Vec<Option<Placement>>,
+        running: Vec<Option<RunningMeta>>,
+        task_overhead: f64,
     ) -> Agent {
-        Agent { alloc, sched, running }
+        Agent { alloc, sched, task_overhead, running }
     }
 
     pub fn allocator(&self) -> &Allocator {
@@ -54,7 +78,7 @@ impl Agent {
     }
 
     /// Queued (unplaced) tasks in insertion order (checkpointing).
-    pub fn queued_tasks(&self) -> &[QueuedTask] {
+    pub fn queued_tasks(&self) -> Vec<QueuedTask> {
         self.sched.queued()
     }
 
@@ -64,7 +88,7 @@ impl Agent {
         self.running
             .iter()
             .enumerate()
-            .filter_map(|(uid, p)| p.as_ref().map(|p| (uid, p.clone())))
+            .filter_map(|(uid, m)| m.as_ref().map(|m| (uid, m.placement.clone())))
             .collect()
     }
 
@@ -72,40 +96,102 @@ impl Agent {
         self.sched.queue_len()
     }
 
-    /// Enqueue a ready task (dependencies already satisfied).
-    pub fn submit(&mut self, task: &TaskSpec, priority: u64, submitted_at: f64) {
+    /// The scheduler's drain accounting (probe/scan counters).
+    pub fn sched_stats(&self) -> crate::sched::SchedStats {
+        self.sched.stats()
+    }
+
+    /// Set a driver slot's fair-share weight (meaningful under
+    /// [`Policy::WeightedFair`]; a no-op elsewhere). Checkpoints carry
+    /// the weights (see [`Agent::tenant_weights`]), so a weighted run
+    /// resumes bit-identically.
+    pub fn set_tenant_weight(&mut self, tenant: usize, weight: f64) {
+        self.sched.set_weight(tenant, weight);
+    }
+
+    /// Non-default `(tenant, weight)` fair-share pairs (checkpointing).
+    pub fn tenant_weights(&self) -> Vec<(usize, f64)> {
+        self.sched.tenant_weights()
+    }
+
+    /// Enqueue a ready task (dependencies already satisfied). `tenant`
+    /// is the owning driver slot — the fair-share accounting unit.
+    pub fn submit(&mut self, task: &TaskSpec, priority: u64, tenant: usize, submitted_at: f64) {
         self.sched.push(QueuedTask {
             uid: task.uid,
             req: task.req,
             priority,
             submitted_at,
+            tenant,
+            est: task.tx + self.task_overhead,
         });
     }
 
-    /// Place every queued task that fits, in policy order. Returns the
-    /// uids scheduled this round.
-    pub fn schedule(&mut self) -> Vec<ScheduledTask> {
-        let placed = self.sched.drain_schedulable(&mut self.alloc);
+    /// Place every queued task the active policy admits, in policy
+    /// order. `now` is the engine clock (placed tasks are projected to
+    /// finish at `now + est`). Returns the placements of this round.
+    pub fn schedule(&mut self, now: f64) -> Vec<ScheduledTask> {
+        // The in-flight projection is only built for policies that
+        // consume it (conservative backfill) — it costs a sort.
+        let view: Vec<InFlight> = if self.sched.needs_projection() {
+            let mut v: Vec<(f64, usize)> = self
+                .running
+                .iter()
+                .enumerate()
+                .filter_map(|(uid, m)| m.as_ref().map(|m| (m.end, uid)))
+                .collect();
+            v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            v.into_iter()
+                .map(|(end, uid)| {
+                    let m = self.running[uid].as_ref().expect("collected above");
+                    InFlight { end, req: self.releasable(&m.placement), tenant: m.tenant }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let ctx = DrainCtx { now, running: &view };
+        let placed = self.sched.drain_schedulable(&mut self.alloc, &ctx);
         for s in &placed {
             if self.running.len() <= s.uid {
                 self.running.resize(s.uid + 1, None);
             }
-            self.running[s.uid] = Some(s.placement.clone());
+            self.running[s.uid] = Some(RunningMeta {
+                placement: s.placement.clone(),
+                tenant: s.task.tenant,
+                req: s.task.req,
+                end: now + s.task.est,
+            });
         }
         placed
     }
 
+    /// The portion of a placement that returns to the free pool when it
+    /// releases: slices on draining nodes vanish instead, so the
+    /// backfill projection must not count them as future capacity.
+    fn releasable(&self, p: &Placement) -> ResourceRequest {
+        let (mut c, mut g) = (0u32, 0u32);
+        for &(node, cores, gpus) in &p.slots {
+            if !self.alloc.is_draining(node) {
+                c += cores;
+                g += gpus;
+            }
+        }
+        ResourceRequest::new(c, g)
+    }
+
     /// Release a completed task's resources.
     pub fn complete(&mut self, uid: usize) {
-        let p = self.running[uid]
+        let m = self.running[uid]
             .take()
             .expect("complete() for a task that is not running");
-        self.alloc.release(&p);
+        self.alloc.release(&m.placement);
+        self.sched.note_finished(m.tenant, &m.req);
     }
 
     /// Number of currently running (placed) tasks.
     pub fn running_count(&self) -> usize {
-        self.running.iter().filter(|p| p.is_some()).count()
+        self.running.iter().filter(|m| m.is_some()).count()
     }
 
     /// Grow the allocation by `n` nodes of the given shape. Draining
@@ -166,7 +252,8 @@ impl Agent {
     }
 
     /// `(cores, gpus)` requested by the queued (unplaced) tasks — the
-    /// backlog pressure signal the autoscaler scales on.
+    /// backlog pressure signal the autoscaler scales on. O(1): the
+    /// bucketed queue maintains it incrementally.
     pub fn queued_demand(&self) -> (u64, u64) {
         self.sched.queued_demand()
     }
@@ -189,19 +276,23 @@ mod tests {
         }
     }
 
+    fn agent(cluster: &ClusterSpec) -> Agent {
+        Agent::new(cluster, Policy::default(), 0.0)
+    }
+
     #[test]
     fn agent_schedules_and_completes() {
         let cluster = ClusterSpec::uniform("t", 1, 4, 1);
-        let mut agent = Agent::new(&cluster, Policy::default());
-        agent.submit(&task(0, 2, 0), 0, 0.0);
-        agent.submit(&task(1, 2, 0), 0, 0.0);
-        agent.submit(&task(2, 2, 0), 0, 0.0); // won't fit yet
-        let placed = agent.schedule();
+        let mut agent = agent(&cluster);
+        agent.submit(&task(0, 2, 0), 0, 0, 0.0);
+        agent.submit(&task(1, 2, 0), 0, 0, 0.0);
+        agent.submit(&task(2, 2, 0), 0, 0, 0.0); // won't fit yet
+        let placed = agent.schedule(0.0);
         assert_eq!(placed.len(), 2);
         assert_eq!(agent.queue_len(), 1);
         assert_eq!(agent.running_count(), 2);
         agent.complete(0);
-        let placed = agent.schedule();
+        let placed = agent.schedule(1.0);
         assert_eq!(placed.len(), 1);
         assert_eq!(placed[0].uid, 2);
     }
@@ -209,25 +300,52 @@ mod tests {
     #[test]
     fn backfill_lets_small_tasks_pass_blocked_head() {
         let cluster = ClusterSpec::uniform("t", 1, 4, 1);
-        let mut agent = Agent::new(&cluster, Policy::default());
+        let mut agent = agent(&cluster);
         // Occupy the GPU.
-        agent.submit(&task(0, 1, 1), 0, 0.0);
-        assert_eq!(agent.schedule().len(), 1);
+        agent.submit(&task(0, 1, 1), 0, 0, 0.0);
+        assert_eq!(agent.schedule(0.0).len(), 1);
         // Head of queue needs the GPU; behind it a CPU-only task.
-        agent.submit(&task(1, 1, 1), 1, 1.0);
-        agent.submit(&task(2, 1, 0), 2, 2.0);
-        let placed = agent.schedule();
+        agent.submit(&task(1, 1, 1), 1, 0, 1.0);
+        agent.submit(&task(2, 1, 0), 2, 0, 2.0);
+        let placed = agent.schedule(2.0);
         assert_eq!(placed.len(), 1);
         assert_eq!(placed[0].uid, 2, "CPU task backfills past blocked GPU task");
+    }
+
+    #[test]
+    fn conservative_backfill_threads_the_projection_through() {
+        // 1 node x 4 cores. A 2-core task runs [0, 100); the head needs
+        // all 4 cores, so its projected start is t = 100. A long
+        // 1-core task would hold a core past that and must wait under
+        // Policy::Backfill; a short 2-core task of a different shape
+        // finishes well before t = 100 and may jump.
+        let cluster = ClusterSpec::uniform("t", 1, 4, 0);
+        let mut agent = Agent::new(&cluster, Policy::Backfill, 0.0);
+        let mut blocker = task(0, 2, 0);
+        blocker.tx = 100.0;
+        agent.submit(&blocker, 0, 0, 0.0);
+        assert_eq!(agent.schedule(0.0).len(), 1);
+        let mut head = task(1, 4, 0);
+        head.tx = 10.0;
+        agent.submit(&head, 0, 0, 1.0);
+        let mut long_small = task(2, 1, 0);
+        long_small.tx = 500.0;
+        agent.submit(&long_small, 0, 0, 2.0);
+        let mut short_small = task(3, 2, 0);
+        short_small.tx = 5.0;
+        agent.submit(&short_small, 0, 0, 3.0);
+        let placed = agent.schedule(3.0);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![3], "only the short task may jump the blocked head");
     }
 
     #[test]
     #[should_panic(expected = "not running")]
     fn double_complete_panics() {
         let cluster = ClusterSpec::uniform("t", 1, 4, 1);
-        let mut agent = Agent::new(&cluster, Policy::default());
-        agent.submit(&task(0, 1, 0), 0, 0.0);
-        agent.schedule();
+        let mut agent = agent(&cluster);
+        agent.submit(&task(0, 1, 0), 0, 0, 0.0);
+        agent.schedule(0.0);
         agent.complete(0);
         agent.complete(0);
     }
@@ -235,19 +353,19 @@ mod tests {
     #[test]
     fn drain_finishes_running_work_and_blocks_new() {
         let cluster = ClusterSpec::uniform("t", 2, 2, 1);
-        let mut agent = Agent::new(&cluster, Policy::default());
+        let mut agent = agent(&cluster);
         // Fill both nodes with one GPU task each.
-        agent.submit(&task(0, 1, 1), 0, 0.0);
-        agent.submit(&task(1, 1, 1), 0, 0.0);
-        let placed = agent.schedule();
+        agent.submit(&task(0, 1, 1), 0, 0, 0.0);
+        agent.submit(&task(1, 1, 1), 0, 0, 0.0);
+        let placed = agent.schedule(0.0);
         assert_eq!(placed.len(), 2);
         // Drain one node (both equally busy: newest index drains).
         assert_eq!(agent.drain(1), 1);
         assert_eq!(agent.schedulable_nodes(), 1);
         assert_eq!(agent.capacity(), (2, 1));
         // A new GPU task cannot fit anywhere (survivor's GPU is busy).
-        agent.submit(&task(2, 1, 1), 0, 1.0);
-        assert!(agent.schedule().is_empty());
+        agent.submit(&task(2, 1, 1), 0, 0, 1.0);
+        assert!(agent.schedule(1.0).is_empty());
         assert_eq!(agent.queued_demand(), (1, 1));
         // The draining node's task completes; its resources vanish, the
         // queued task still waits for the survivor's GPU.
@@ -264,10 +382,10 @@ mod tests {
             .uid;
         agent.complete(victim);
         assert!(agent.allocator().node_idle(drained_node));
-        assert!(agent.schedule().is_empty(), "drained GPU must not be re-granted");
+        assert!(agent.schedule(2.0).is_empty(), "drained GPU must not be re-granted");
         // The survivor's task completes: now the queued task runs.
         agent.complete(1 - victim);
-        let placed = agent.schedule();
+        let placed = agent.schedule(3.0);
         assert_eq!(placed.len(), 1);
         assert_eq!(placed[0].uid, 2);
         assert_ne!(placed[0].placement.slots[0].0, drained_node);
@@ -276,7 +394,7 @@ mod tests {
     #[test]
     fn grow_reclaims_draining_nodes_before_appending() {
         let cluster = ClusterSpec::uniform("t", 2, 4, 0);
-        let mut agent = Agent::new(&cluster, Policy::default());
+        let mut agent = agent(&cluster);
         assert_eq!(agent.drain(1), 1);
         assert_eq!(agent.schedulable_nodes(), 1);
         let shape = cluster.nodes[0];

@@ -1,0 +1,760 @@
+//! Pluggable scheduling subsystem (substrate S13): a shape-bucketed
+//! ready queue under a [`SchedPolicy`] trait.
+//!
+//! This replaces the old monolithic `pilot::scheduler`. Two structural
+//! ideas:
+//!
+//! - **Shape bucketing** ([`ShapeQueue`]): queued tasks are indexed by
+//!   resource shape `(cores, gpus)`. Within one drain round the
+//!   allocation only shrinks, so a shape that failed to place once can
+//!   never place later in the round — a blocked *bucket* is skipped
+//!   wholesale, making a fully-blocked round O(shapes) instead of
+//!   O(queue). Per-bucket ordering plus a k-way merge reproduces the
+//!   old flat-queue policy order bit-for-bit (property-tested against
+//!   a reference implementation in `tests/sched_equiv.rs`).
+//! - **Policy pluggability** ([`SchedPolicy`]): the drain discipline is
+//!   a trait object selected per run via [`Policy`]. Besides the
+//!   classic FIFO(+backfill) family, two disciplines target the
+//!   streaming-coordinator workload: [`WeightedFair`] (per-driver
+//!   dominant-resource fair sharing, so one greedy campaign member
+//!   cannot starve late arrivals) and [`Backfill`] (conservative
+//!   backfill that never delays a blocked head's projected start).
+//!
+//! Determinism is a hard contract: every discipline produces identical
+//! placements from identical state, which is what lets the checkpoint
+//! subsystem resume a preempted run bit-identically under any policy.
+//!
+//! # Examples
+//!
+//! ```
+//! use asyncflow::resources::{Allocator, ClusterSpec, ResourceRequest};
+//! use asyncflow::sched::{DrainCtx, Policy, QueuedTask, Scheduler};
+//!
+//! let mut s = Scheduler::new(Policy::FifoBackfill);
+//! for uid in 0..3 {
+//!     s.push(QueuedTask {
+//!         uid,
+//!         req: ResourceRequest::new(2, 0),
+//!         priority: 0,
+//!         submitted_at: uid as f64,
+//!         tenant: 0,
+//!         est: 10.0,
+//!     });
+//! }
+//! let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 4, 0));
+//! let placed = s.drain_schedulable(&mut alloc, &DrainCtx::at(0.0));
+//! assert_eq!(placed.len(), 2, "4 cores fit two 2-core tasks");
+//! assert_eq!(s.queue_len(), 1);
+//! assert_eq!(s.queued_demand(), (2, 0));
+//! ```
+
+mod fair;
+mod policy;
+mod queue;
+
+pub use fair::WeightedFair;
+pub use policy::{Backfill, DrainCtx, Fifo, InFlight, PipelineAge, SchedPolicy, SmallestFirst};
+pub use queue::{OrdKey, ShapeQueue};
+
+use crate::error::{Error, Result};
+use crate::resources::{Allocator, Placement, ResourceRequest};
+use crate::util::json::{from_u64, obj, FromJson, Json, ToJson};
+
+/// Scheduling disciplines (selected per run; `--policy` on the CLI).
+///
+/// # Examples
+///
+/// ```
+/// use asyncflow::sched::Policy;
+///
+/// let p: Policy = "fair".parse().unwrap();
+/// assert_eq!(p, Policy::WeightedFair);
+/// assert_eq!(p.label(), "weighted_fair");
+/// assert_eq!("backfill".parse::<Policy>().unwrap(), Policy::Backfill);
+/// assert_eq!("fifo".parse::<Policy>().unwrap(), Policy::FifoBackfill);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Policy {
+    /// Order by (priority, submit time, uid); the engine sets priority =
+    /// pipeline index, so older pipelines always win. Tempting, but it
+    /// starves younger pipelines' stragglers (an old pipeline's 96-task
+    /// Inference set trickles through GPUs one-by-one ahead of the last
+    /// task of a younger Simulation set) — kept as an ablation.
+    PipelineAge,
+    /// FIFO by submission time with aggressive backfill — RADICAL-
+    /// Pilot-like and the default: it reproduces the paper's masking
+    /// behaviour.
+    #[default]
+    FifoBackfill,
+    /// Pure FIFO, **no** backfill: the head of the queue blocks everyone
+    /// behind it (worst case for masking; ablation baseline).
+    FifoStrict,
+    /// Shortest-job-first by requested cores (greedy packing).
+    SmallestFirst,
+    /// Per-driver weighted fair sharing via dominant-resource usage
+    /// accounting: the next free slot goes to the driver with the
+    /// lowest running share, so a greedy campaign member cannot starve
+    /// late arrivals (see [`WeightedFair`]).
+    WeightedFair,
+    /// Conservative backfill: small tasks may jump a blocked head only
+    /// when they cannot delay its projected start (see [`Backfill`]).
+    Backfill,
+}
+
+impl Policy {
+    /// Stable wire name (configs, checkpoints).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::PipelineAge => "pipeline_age",
+            Policy::FifoBackfill => "fifo_backfill",
+            Policy::FifoStrict => "fifo_strict",
+            Policy::SmallestFirst => "smallest_first",
+            Policy::WeightedFair => "weighted_fair",
+            Policy::Backfill => "backfill",
+        }
+    }
+
+    /// Instantiate the discipline implementing this policy.
+    pub fn build(&self) -> Box<dyn SchedPolicy> {
+        match self {
+            Policy::PipelineAge => Box::new(PipelineAge),
+            Policy::FifoBackfill => Box::new(Fifo { strict: false }),
+            Policy::FifoStrict => Box::new(Fifo { strict: true }),
+            Policy::SmallestFirst => Box::new(SmallestFirst),
+            Policy::WeightedFair => Box::new(WeightedFair::new()),
+            Policy::Backfill => Box::new(Backfill),
+        }
+    }
+}
+
+impl std::str::FromStr for Policy {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Policy> {
+        match s {
+            "pipeline_age" => Ok(Policy::PipelineAge),
+            "fifo" | "fifo_backfill" => Ok(Policy::FifoBackfill),
+            "fifo_strict" => Ok(Policy::FifoStrict),
+            "smallest_first" => Ok(Policy::SmallestFirst),
+            "fair" | "weighted_fair" => Ok(Policy::WeightedFair),
+            "backfill" | "conservative_backfill" => Ok(Policy::Backfill),
+            other => Err(Error::Config(format!("unknown scheduler policy '{other}'"))),
+        }
+    }
+}
+
+/// A task waiting for resources.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueuedTask {
+    pub uid: usize,
+    pub req: ResourceRequest,
+    pub priority: u64,
+    pub submitted_at: f64,
+    /// Owning driver slot — the fair-share accounting unit.
+    pub tenant: usize,
+    /// Expected service time (sampled TX plus launch overhead) — the
+    /// conservative-backfill projection input.
+    pub est: f64,
+}
+
+impl ToJson for QueuedTask {
+    fn to_json(&self) -> Json {
+        obj([
+            ("uid", Json::from(self.uid)),
+            ("req", self.req.to_json()),
+            ("priority", from_u64(self.priority)),
+            ("submitted_at", Json::from(self.submitted_at)),
+            ("tenant", Json::from(self.tenant)),
+            ("est", Json::from(self.est)),
+        ])
+    }
+}
+
+impl FromJson for QueuedTask {
+    fn from_json(v: &Json) -> Result<QueuedTask> {
+        Ok(QueuedTask {
+            uid: v.req_u64("uid")? as usize,
+            req: ResourceRequest::from_json(v.get("req"))?,
+            priority: v.req_u64("priority")?,
+            submitted_at: v.req_f64("submitted_at")?,
+            tenant: v.req_u64("tenant")? as usize,
+            est: v.req_f64("est")?,
+        })
+    }
+}
+
+/// A task the scheduler just placed.
+#[derive(Debug, Clone)]
+pub struct ScheduledTask {
+    pub uid: usize,
+    pub placement: Placement,
+    /// The queue entry that was placed (tenant / request / service
+    /// estimate — the agent's running-task bookkeeping).
+    pub task: QueuedTask,
+}
+
+/// Drain-round accounting: what the bucketed queue actually did, per
+/// scheduler lifetime. The headline probe is `shape_probes` vs
+/// `tasks_examined` — on a fully-blocked round the former grows by the
+/// number of distinct shapes while the latter stays put, which is the
+/// whole point of bucketing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// Drain rounds executed.
+    pub rounds: u64,
+    /// Shape-granular fit probes: the per-bucket screen plus every
+    /// failed placement attempt that blocked a bucket.
+    pub shape_probes: u64,
+    /// Queue entries actually visited (placement attempts + admission
+    /// checks) — the replacement for the retired sort counter.
+    pub tasks_examined: u64,
+}
+
+/// Ready-queue + placement loop: a [`ShapeQueue`] drained by the
+/// discipline selected via [`Policy`] (see the module docs and
+/// [`SchedPolicy`] for the extension seam).
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: Policy,
+    discipline: Box<dyn SchedPolicy>,
+    queue: ShapeQueue,
+    stats: SchedStats,
+}
+
+impl Scheduler {
+    pub fn new(policy: Policy) -> Scheduler {
+        Scheduler {
+            policy,
+            discipline: policy.build(),
+            queue: ShapeQueue::new(),
+            stats: SchedStats::default(),
+        }
+    }
+
+    /// The wire-level policy tag this scheduler runs.
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The queued tasks in insertion order (checkpoint snapshots;
+    /// re-pushing them into a fresh scheduler in this order reproduces
+    /// the buckets, including every tie-break).
+    pub fn queued(&self) -> Vec<QueuedTask> {
+        self.queue.queued()
+    }
+
+    /// Total `(cores, gpus)` requested by the queued tasks — O(1), the
+    /// queue maintains it incrementally (the autoscaler probes this
+    /// every evaluation).
+    pub fn queued_demand(&self) -> (u64, u64) {
+        self.queue.demand()
+    }
+
+    /// Lifetime drain accounting (see [`SchedStats`]).
+    pub fn stats(&self) -> SchedStats {
+        self.stats
+    }
+
+    /// Number of distinct resource shapes currently queued.
+    pub fn shape_count(&self) -> usize {
+        self.queue.shape_count()
+    }
+
+    /// Whether drains need [`DrainCtx::running`] populated (the
+    /// conservative-backfill projection).
+    pub fn needs_projection(&self) -> bool {
+        self.discipline.needs_projection()
+    }
+
+    pub fn push(&mut self, t: QueuedTask) {
+        let d = &self.discipline;
+        self.queue.push(t, |task, seq| d.key(task, seq));
+    }
+
+    /// Walk the queue in policy order placing what fits; remove placed
+    /// entries. With [`Policy::FifoStrict`] the walk stops at the first
+    /// task that does not fit. `ctx` carries the engine clock and (for
+    /// projection policies) the in-flight view — [`DrainCtx::at`] for
+    /// callers without one.
+    pub fn drain_schedulable(
+        &mut self,
+        alloc: &mut Allocator,
+        ctx: &DrainCtx,
+    ) -> Vec<ScheduledTask> {
+        self.stats.rounds += 1;
+        if self.queue.is_empty() {
+            return Vec::new();
+        }
+        let placed = self.discipline.drain(&mut self.queue, alloc, ctx, &mut self.stats);
+        self.queue.finish_round();
+        for s in &placed {
+            self.discipline.task_started(s.task.tenant, &s.task.req);
+        }
+        placed
+    }
+
+    /// Record an externally-started task (checkpoint restore re-claims
+    /// in-flight placements without a drain round).
+    pub fn note_started(&mut self, tenant: usize, req: &ResourceRequest) {
+        self.discipline.task_started(tenant, req);
+    }
+
+    /// Release a running task from the usage accounting (its resources
+    /// return to the allocator separately).
+    pub fn note_finished(&mut self, tenant: usize, req: &ResourceRequest) {
+        self.discipline.task_finished(tenant, req);
+    }
+
+    /// Set a tenant's fair-share weight (no-op under unweighted
+    /// policies). Weights are part of the run's state: checkpoints
+    /// capture them via [`tenant_weights`](Self::tenant_weights) and
+    /// restore replays them, so a weighted run resumes bit-identically.
+    pub fn set_weight(&mut self, tenant: usize, weight: f64) {
+        self.discipline.set_weight(tenant, weight);
+    }
+
+    /// Non-default `(tenant, weight)` pairs (checkpoint capture; see
+    /// [`set_weight`](Self::set_weight)).
+    pub fn tenant_weights(&self) -> Vec<(usize, f64)> {
+        self.discipline.weights()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::ClusterSpec;
+
+    fn qt(uid: usize, cores: u32, gpus: u32, prio: u64, at: f64) -> QueuedTask {
+        QueuedTask {
+            uid,
+            req: ResourceRequest::new(cores, gpus),
+            priority: prio,
+            submitted_at: at,
+            tenant: 0,
+            est: 10.0,
+        }
+    }
+
+    fn drain(s: &mut Scheduler, alloc: &mut Allocator) -> Vec<ScheduledTask> {
+        s.drain_schedulable(alloc, &DrainCtx::at(0.0))
+    }
+
+    #[test]
+    fn pipeline_age_orders_by_priority() {
+        let mut s = Scheduler::new(Policy::PipelineAge);
+        s.push(qt(0, 1, 0, 2, 0.0));
+        s.push(qt(1, 1, 0, 0, 5.0));
+        s.push(qt(2, 1, 0, 1, 1.0));
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 8, 0));
+        let placed = drain(&mut s, &mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn fifo_strict_blocks_behind_head() {
+        let mut s = Scheduler::new(Policy::FifoStrict);
+        s.push(qt(0, 8, 0, 0, 0.0)); // fills the node
+        s.push(qt(1, 16, 0, 0, 1.0)); // can never fit now
+        s.push(qt(2, 1, 0, 0, 2.0)); // would fit, but strictly blocked
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 2, 8, 0));
+        let placed = drain(&mut s, &mut alloc);
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].uid, 0);
+        assert_eq!(s.queue_len(), 2);
+    }
+
+    #[test]
+    fn fifo_backfill_skips_blocked_head() {
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        s.push(qt(0, 8, 0, 0, 0.0));
+        s.push(qt(1, 16, 0, 0, 1.0));
+        s.push(qt(2, 1, 0, 0, 2.0));
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 2, 8, 0));
+        let placed = drain(&mut s, &mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![0, 2]);
+    }
+
+    #[test]
+    fn smallest_first_packs_greedily() {
+        let mut s = Scheduler::new(Policy::SmallestFirst);
+        s.push(qt(0, 6, 0, 0, 0.0));
+        s.push(qt(1, 1, 0, 0, 1.0));
+        s.push(qt(2, 3, 0, 0, 2.0));
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 4, 0));
+        let placed = drain(&mut s, &mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![1, 2]); // 1+3 cores; the 6-core task waits
+    }
+
+    #[test]
+    fn fifo_out_of_order_pushes_still_sorted() {
+        // Pushing an earlier submit time after a later one must fall
+        // back to the true FIFO order (binary insert into the bucket).
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        s.push(qt(0, 1, 0, 0, 5.0));
+        s.push(qt(1, 1, 0, 0, 1.0)); // earlier, pushed later
+        s.push(qt(2, 1, 0, 0, 3.0));
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 3, 0));
+        let placed = drain(&mut s, &mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn blocked_shapes_cost_one_probe_not_one_scan_per_task() {
+        // 3 identical big tasks that cannot fit plus one small one: the
+        // small one still backfills, and the blocked shape is probed
+        // once per round — not once per task (the bucketed replacement
+        // for the old failed-shape memo).
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        for uid in 0..3 {
+            s.push(qt(uid, 16, 0, 0, uid as f64));
+        }
+        s.push(qt(9, 1, 0, 0, 9.0));
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 8, 0));
+        let placed = drain(&mut s, &mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![9]);
+        assert_eq!(s.queue_len(), 3);
+        let after_first = s.stats();
+        assert_eq!(
+            after_first.tasks_examined, 1,
+            "only the placed task is examined; the blocked shape dies at the screen"
+        );
+        // A fully-blocked follow-up round examines nothing at all: the
+        // screen rejects the lone remaining shape in O(shapes).
+        let placed = drain(&mut s, &mut alloc);
+        assert!(placed.is_empty());
+        let after_second = s.stats();
+        assert_eq!(after_second.tasks_examined, after_first.tasks_examined);
+        assert_eq!(after_second.shape_probes, after_first.shape_probes + 1);
+    }
+
+    #[test]
+    fn saturated_round_is_o_shapes() {
+        // 1000 tasks over 4 shapes against a full allocator: the round
+        // must touch 4 buckets, not 1000 entries.
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        for uid in 0..1000 {
+            let cores = [2u32, 3, 5, 7][uid % 4];
+            s.push(qt(uid, cores, 0, 0, uid as f64));
+        }
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 8, 0));
+        let hog = alloc.try_alloc(&ResourceRequest::new(8, 0)).unwrap();
+        let placed = drain(&mut s, &mut alloc);
+        assert!(placed.is_empty());
+        let st = s.stats();
+        assert_eq!(s.shape_count(), 4);
+        assert_eq!(st.tasks_examined, 0, "screen kills every bucket");
+        assert_eq!(st.shape_probes, 4);
+        // Free the hog: the next round places in FIFO order again.
+        alloc.release(&hog);
+        let placed = drain(&mut s, &mut alloc);
+        assert_eq!(placed[0].uid, 0, "FIFO head places first");
+    }
+
+    #[test]
+    fn noop_drain_leaves_queue_untouched() {
+        // A drain that places nothing must not rebuild the queue — the
+        // common case for a blocked queue under sustained load.
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        for uid in 0..4 {
+            s.push(qt(uid, 16, 0, 0, uid as f64)); // none fit on 8 cores
+        }
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 8, 0));
+        let placed = drain(&mut s, &mut alloc);
+        assert!(placed.is_empty());
+        assert_eq!(s.queue_len(), 4);
+        assert_eq!(s.queued_demand(), (64, 0));
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        // Identical priorities/timestamps: arrival order wins, stably.
+        let mut s = Scheduler::new(Policy::PipelineAge);
+        for uid in 0..5 {
+            s.push(qt(uid, 1, 0, 0, 0.0));
+        }
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 5, 0));
+        let placed = drain(&mut s, &mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn queued_round_trips_through_a_fresh_scheduler() {
+        // The checkpoint contract: re-pushing queued() into a fresh
+        // scheduler reproduces the drain order exactly.
+        let mut s = Scheduler::new(Policy::FifoBackfill);
+        s.push(qt(0, 2, 0, 0, 5.0));
+        s.push(qt(1, 1, 0, 0, 1.0));
+        s.push(qt(2, 2, 0, 0, 3.0));
+        let mut copy = Scheduler::new(Policy::FifoBackfill);
+        for t in s.queued() {
+            copy.push(t);
+        }
+        let mut a1 = Allocator::new(&ClusterSpec::uniform("t", 1, 8, 0));
+        let mut a2 = Allocator::new(&ClusterSpec::uniform("t", 1, 8, 0));
+        let u1: Vec<usize> = drain(&mut s, &mut a1).iter().map(|p| p.uid).collect();
+        let u2: Vec<usize> = drain(&mut copy, &mut a2).iter().map(|p| p.uid).collect();
+        assert_eq!(u1, u2);
+        assert_eq!(u1, vec![1, 2, 0]);
+    }
+
+    // ----- conservative backfill --------------------------------------
+
+    #[test]
+    fn backfill_admits_short_jumpers_and_protects_the_head() {
+        // 4 cores; a 2-core task runs until t = 100. Head needs all 4
+        // cores -> projected start 100. A 1-core 10 s task behind it
+        // finishes by then: admitted. A 1-core 200 s task would hold a
+        // core past t = 100 and delay the head: denied (aggressive
+        // FifoBackfill would admit both).
+        let cluster = ClusterSpec::uniform("t", 1, 4, 0);
+        let run = |policy: Policy| {
+            let mut alloc = Allocator::new(&cluster);
+            alloc.try_alloc(&ResourceRequest::new(2, 0)).unwrap();
+            let mut s = Scheduler::new(policy);
+            s.push(QueuedTask {
+                uid: 0,
+                req: ResourceRequest::new(4, 0),
+                priority: 0,
+                submitted_at: 0.0,
+                tenant: 0,
+                est: 50.0,
+            });
+            s.push(QueuedTask {
+                uid: 1,
+                req: ResourceRequest::new(1, 0),
+                priority: 0,
+                submitted_at: 1.0,
+                tenant: 0,
+                est: 10.0,
+            });
+            s.push(QueuedTask {
+                uid: 2,
+                req: ResourceRequest::new(1, 0),
+                priority: 0,
+                submitted_at: 2.0,
+                tenant: 0,
+                est: 200.0,
+            });
+            let running = [InFlight {
+                end: 100.0,
+                req: ResourceRequest::new(2, 0),
+                tenant: 0,
+            }];
+            let ctx = DrainCtx { now: 0.0, running: &running };
+            s.drain_schedulable(&mut alloc, &ctx)
+                .iter()
+                .map(|p| p.uid)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(Policy::Backfill), vec![1], "only the short task may jump");
+        assert_eq!(
+            run(Policy::FifoBackfill),
+            vec![1, 2],
+            "aggressive backfill admits the long one too"
+        );
+    }
+
+    #[test]
+    fn backfill_spare_capacity_admits_long_tasks_the_head_does_not_need() {
+        // 4 cores, 1 busy until t = 100. Head needs 2 cores: projected
+        // start is "now" at vector level... make head GPU-blocked
+        // instead: 1 node, 1 GPU busy until 100. Head needs the GPU;
+        // a long CPU-only task consumes cores the head never needs ->
+        // spare-capacity admission.
+        let cluster = ClusterSpec::uniform("t", 1, 4, 1);
+        let mut alloc = Allocator::new(&cluster);
+        alloc.try_alloc(&ResourceRequest::new(1, 1)).unwrap();
+        let mut s = Scheduler::new(Policy::Backfill);
+        s.push(QueuedTask {
+            uid: 0,
+            req: ResourceRequest::new(1, 1),
+            priority: 0,
+            submitted_at: 0.0,
+            tenant: 0,
+            est: 50.0,
+        });
+        s.push(QueuedTask {
+            uid: 1,
+            req: ResourceRequest::new(2, 0),
+            priority: 0,
+            submitted_at: 1.0,
+            tenant: 0,
+            est: 500.0, // far past the projected start
+        });
+        let running =
+            [InFlight { end: 100.0, req: ResourceRequest::new(1, 1), tenant: 0 }];
+        let ctx = DrainCtx { now: 0.0, running: &running };
+        let placed = s.drain_schedulable(&mut alloc, &ctx);
+        assert_eq!(placed.len(), 1);
+        assert_eq!(
+            placed[0].uid, 1,
+            "long CPU task fits the spare (head only contends on the GPU)"
+        );
+    }
+
+    #[test]
+    fn backfill_with_unsatisfiable_head_degenerates_to_aggressive() {
+        // The head wants more cores than the inventory will ever hold:
+        // there is no projected start to protect, so backfill admits
+        // everything that fits (and the engine's deadlock detection
+        // owns surfacing the stuck head).
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 4, 0));
+        let mut s = Scheduler::new(Policy::Backfill);
+        s.push(qt(0, 16, 0, 0, 0.0));
+        s.push(qt(1, 1, 0, 0, 1.0));
+        let ctx = DrainCtx { now: 0.0, running: &[] };
+        let placed = s.drain_schedulable(&mut alloc, &ctx);
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].uid, 1);
+    }
+
+    // ----- weighted fair sharing --------------------------------------
+
+    #[test]
+    fn fair_gives_the_free_slot_to_the_starved_tenant() {
+        let mut s = Scheduler::new(Policy::WeightedFair);
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 4, 0));
+        let mk = |uid: usize, tenant: usize, at: f64| QueuedTask {
+            uid,
+            req: ResourceRequest::new(1, 0),
+            priority: 0,
+            submitted_at: at,
+            tenant,
+            est: 10.0,
+        };
+        // Tenant 0 floods the queue first; tenant 1 arrives later.
+        for uid in 0..8 {
+            s.push(mk(uid, 0, uid as f64));
+        }
+        s.push(mk(100, 1, 50.0));
+        let placed = drain(&mut s, &mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        // First pick: both tenants at share 0, lower tenant id wins one
+        // core; then tenant 1 (still 0 running... it got one) — after
+        // each placement shares move, so the 4 cores split 3 / 1 or
+        // 2 / 2 depending on tie-breaks. The invariant that matters:
+        // tenant 1's task is NOT last despite being submitted last.
+        assert!(uids.contains(&100), "late tenant must be served in round one");
+        assert!(
+            uids.iter().position(|&u| u == 100).unwrap() < placed.len() - 1
+                || placed.len() == 1,
+            "fair share must not leave the late tenant for last: {uids:?}"
+        );
+        // FIFO control: the late tenant IS served last.
+        let mut f = Scheduler::new(Policy::FifoBackfill);
+        for uid in 0..8 {
+            f.push(mk(uid, 0, uid as f64));
+        }
+        f.push(mk(100, 1, 50.0));
+        let mut alloc2 = Allocator::new(&ClusterSpec::uniform("t", 1, 4, 0));
+        let fifo_uids: Vec<usize> = drain(&mut f, &mut alloc2).iter().map(|p| p.uid).collect();
+        assert_eq!(fifo_uids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn fair_weights_tilt_the_split() {
+        let mut s = Scheduler::new(Policy::WeightedFair);
+        s.set_weight(0, 3.0);
+        s.set_weight(1, 1.0);
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 4, 0));
+        for uid in 0..8 {
+            s.push(QueuedTask {
+                uid,
+                req: ResourceRequest::new(1, 0),
+                priority: 0,
+                submitted_at: 0.0,
+                tenant: uid % 2,
+                est: 10.0,
+            });
+        }
+        let placed = drain(&mut s, &mut alloc);
+        let t0 = placed.iter().filter(|p| p.task.tenant == 0).count();
+        let t1 = placed.len() - t0;
+        assert_eq!(placed.len(), 4);
+        assert_eq!((t0, t1), (3, 1), "3:1 weights split 4 cores 3/1");
+    }
+
+    #[test]
+    fn fair_weights_round_trip_for_checkpoints() {
+        // The checkpoint contract for weighted runs: capturing
+        // tenant_weights() and replaying them through set_weight on a
+        // fresh scheduler reproduces the drain behaviour exactly.
+        let mut s = Scheduler::new(Policy::WeightedFair);
+        s.set_weight(0, 3.0);
+        s.set_weight(2, 0.5);
+        assert_eq!(s.tenant_weights(), vec![(0, 3.0), (2, 0.5)]);
+        let mut copy = Scheduler::new(Policy::WeightedFair);
+        for (t, w) in s.tenant_weights() {
+            copy.set_weight(t, w);
+        }
+        assert_eq!(copy.tenant_weights(), s.tenant_weights());
+        for uid in 0..8 {
+            let t = qt(uid, 1, 0, 0, 0.0);
+            s.push(QueuedTask { tenant: uid % 2, ..t });
+            copy.push(QueuedTask { tenant: uid % 2, ..t });
+        }
+        let mut a1 = Allocator::new(&ClusterSpec::uniform("t", 1, 4, 0));
+        let mut a2 = Allocator::new(&ClusterSpec::uniform("t", 1, 4, 0));
+        let u1: Vec<usize> = drain(&mut s, &mut a1).iter().map(|p| p.uid).collect();
+        let u2: Vec<usize> = drain(&mut copy, &mut a2).iter().map(|p| p.uid).collect();
+        assert_eq!(u1, u2, "replayed weights must reproduce the drain");
+        // An unweighted policy reports no weights to capture.
+        let f = Scheduler::new(Policy::FifoBackfill);
+        assert!(f.tenant_weights().is_empty());
+    }
+
+    #[test]
+    fn fair_accounting_survives_note_round_trips() {
+        // note_started (restore path) must weigh exactly like a drain
+        // placement, and note_finished must release it.
+        let mut s = Scheduler::new(Policy::WeightedFair);
+        let req = ResourceRequest::new(2, 0);
+        s.note_started(0, &req);
+        s.note_started(0, &req);
+        let mut alloc = Allocator::new(&ClusterSpec::uniform("t", 1, 8, 0));
+        // Tenant 0 holds 4 of 8 cores (share 0.5); tenant 1 at 0.
+        alloc.try_alloc(&ResourceRequest::new(4, 0)).unwrap();
+        s.push(QueuedTask {
+            uid: 0,
+            req: ResourceRequest::new(1, 0),
+            priority: 0,
+            submitted_at: 0.0,
+            tenant: 0,
+            est: 1.0,
+        });
+        s.push(QueuedTask {
+            uid: 1,
+            req: ResourceRequest::new(1, 0),
+            priority: 0,
+            submitted_at: 1.0,
+            tenant: 1,
+            est: 1.0,
+        });
+        let placed = drain(&mut s, &mut alloc);
+        assert_eq!(placed[0].uid, 1, "tenant with zero usage goes first");
+        // Release everything: tenant 0 back to zero share.
+        s.note_finished(0, &req);
+        s.note_finished(0, &req);
+        s.push(QueuedTask {
+            uid: 2,
+            req: ResourceRequest::new(1, 0),
+            priority: 0,
+            submitted_at: 2.0,
+            tenant: 1,
+            est: 1.0,
+        });
+        let placed = drain(&mut s, &mut alloc);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![0, 2], "equal shares fall back to FIFO per pick");
+    }
+}

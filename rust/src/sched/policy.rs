@@ -1,0 +1,373 @@
+//! The [`SchedPolicy`] trait and the built-in scheduling disciplines.
+//!
+//! A policy owns two things: the total **merge order** over queued
+//! tasks (an [`OrdKey`] per task, used both for within-bucket ordering
+//! and the k-way merge across buckets) and the **drain discipline**
+//! that walks the bucketed queue placing work. Everything else — the
+//! bucket structure, taken-entry bookkeeping, compaction — is shared
+//! [`ShapeQueue`] machinery, so a new discipline only implements the
+//! decision logic.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::queue::{OrdKey, ShapeQueue};
+use super::{Policy, QueuedTask, SchedStats, ScheduledTask};
+use crate::resources::{Allocator, ResourceRequest};
+
+/// A running task's projection, as seen by policies that reason about
+/// the future (conservative backfill): when its resources come back,
+/// how much of them actually return to the pool (slices on draining
+/// nodes vanish instead), and which driver owns it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InFlight {
+    /// Expected completion instant (engine seconds).
+    pub end: f64,
+    /// The portion of the task's request that will return to the free
+    /// pool on completion (excludes slices on draining nodes).
+    pub req: ResourceRequest,
+    /// Owning driver slot.
+    pub tenant: usize,
+}
+
+/// Per-round context handed to [`SchedPolicy::drain`].
+#[derive(Debug, Clone, Copy)]
+pub struct DrainCtx<'a> {
+    /// The engine clock at this drain round.
+    pub now: f64,
+    /// In-flight tasks sorted by `(end, uid)` — empty unless the active
+    /// policy asked for it via [`SchedPolicy::needs_projection`].
+    pub running: &'a [InFlight],
+}
+
+impl DrainCtx<'static> {
+    /// A context with no projection data (policies that never look at
+    /// the future — everything but conservative backfill).
+    pub fn at(now: f64) -> DrainCtx<'static> {
+        DrainCtx { now, running: &[] }
+    }
+}
+
+/// A pluggable scheduling discipline over the shape-bucketed ready
+/// queue. Implementations must be deterministic: identical queue,
+/// allocator and context state must produce identical placements (the
+/// checkpoint/resume subsystem replays drains bit-for-bit).
+pub trait SchedPolicy: std::fmt::Debug {
+    /// The wire-level tag this discipline implements.
+    fn kind(&self) -> Policy;
+
+    /// Merge key for a task arriving with sequence number `seq` (see
+    /// [`OrdKey`] for the comparison semantics).
+    fn key(&self, t: &QueuedTask, seq: u64) -> OrdKey;
+
+    /// One placement round: walk the queue in discipline order, place
+    /// what the discipline admits, and return the placements in
+    /// decision order. Entries are removed via [`ShapeQueue::take`];
+    /// the caller compacts afterwards.
+    fn drain(
+        &mut self,
+        q: &mut ShapeQueue,
+        alloc: &mut Allocator,
+        ctx: &DrainCtx,
+        stats: &mut SchedStats,
+    ) -> Vec<ScheduledTask>;
+
+    /// Whether [`DrainCtx::running`] must be populated (building the
+    /// sorted projection costs O(in-flight log in-flight) per round, so
+    /// it is only done for policies that use it).
+    fn needs_projection(&self) -> bool {
+        false
+    }
+
+    /// A task of `tenant` started running (usage accounting hook).
+    fn task_started(&mut self, _tenant: usize, _req: &ResourceRequest) {}
+
+    /// A running task of `tenant` finished (usage accounting hook).
+    fn task_finished(&mut self, _tenant: usize, _req: &ResourceRequest) {}
+
+    /// Set a tenant's fair-share weight (no-op for unweighted policies).
+    fn set_weight(&mut self, _tenant: usize, _weight: f64) {}
+
+    /// Non-default `(tenant, weight)` pairs, ascending by tenant —
+    /// checkpoint capture: replaying them through
+    /// [`set_weight`](Self::set_weight) on a fresh discipline restores
+    /// the weighting exactly. Weightless policies report none.
+    fn weights(&self) -> Vec<(usize, f64)> {
+        Vec::new()
+    }
+}
+
+/// FIFO by submission time. With `strict = true` the queue head blocks
+/// everything behind it (no backfill); otherwise later tasks that fit
+/// are placed past a blocked head (RADICAL-Pilot-like aggressive
+/// backfill — the default discipline).
+#[derive(Debug, Clone, Copy)]
+pub struct Fifo {
+    pub strict: bool,
+}
+
+impl SchedPolicy for Fifo {
+    fn kind(&self) -> Policy {
+        if self.strict {
+            Policy::FifoStrict
+        } else {
+            Policy::FifoBackfill
+        }
+    }
+
+    fn key(&self, t: &QueuedTask, seq: u64) -> OrdKey {
+        OrdKey { major: 0, time: t.submitted_at, seq }
+    }
+
+    fn drain(
+        &mut self,
+        q: &mut ShapeQueue,
+        alloc: &mut Allocator,
+        _ctx: &DrainCtx,
+        stats: &mut SchedStats,
+    ) -> Vec<ScheduledTask> {
+        drain_greedy(q, alloc, self.strict, stats)
+    }
+}
+
+/// Order by `(priority, submit time)`; the engine sets priority =
+/// pipeline index, so older pipelines always win. Tempting, but it
+/// starves younger pipelines' stragglers — kept as an ablation.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineAge;
+
+impl SchedPolicy for PipelineAge {
+    fn kind(&self) -> Policy {
+        Policy::PipelineAge
+    }
+
+    fn key(&self, t: &QueuedTask, seq: u64) -> OrdKey {
+        OrdKey { major: t.priority, time: t.submitted_at, seq }
+    }
+
+    fn drain(
+        &mut self,
+        q: &mut ShapeQueue,
+        alloc: &mut Allocator,
+        _ctx: &DrainCtx,
+        stats: &mut SchedStats,
+    ) -> Vec<ScheduledTask> {
+        drain_greedy(q, alloc, false, stats)
+    }
+}
+
+/// Shortest-job-first by requested size (greedy packing ablation).
+#[derive(Debug, Clone, Copy)]
+pub struct SmallestFirst;
+
+impl SchedPolicy for SmallestFirst {
+    fn kind(&self) -> Policy {
+        Policy::SmallestFirst
+    }
+
+    fn key(&self, t: &QueuedTask, seq: u64) -> OrdKey {
+        OrdKey {
+            major: t.req.cpu_cores as u64 + 100 * t.req.gpus as u64,
+            time: 0.0,
+            seq,
+        }
+    }
+
+    fn drain(
+        &mut self,
+        q: &mut ShapeQueue,
+        alloc: &mut Allocator,
+        _ctx: &DrainCtx,
+        stats: &mut SchedStats,
+    ) -> Vec<ScheduledTask> {
+        drain_greedy(q, alloc, false, stats)
+    }
+}
+
+/// Conservative (EASY-style) backfill: FIFO order, but once the queue
+/// head is blocked the scheduler computes the head's *projected start*
+/// — the earliest instant the in-flight releases cover its request —
+/// and admits later tasks **only if they cannot delay it**: either they
+/// finish before the projected start, or they fit inside the spare
+/// resources the head will not need.
+///
+/// Two deliberate approximations keep the round O(shapes):
+///
+/// - projection is at free-vector granularity (node-local fragmentation
+///   is invisible to it), so a projected start is a lower bound;
+/// - per shape, only the FIFO-earliest task is a backfill candidate in
+///   a given round (later same-shape tasks wait their turn).
+///
+/// Both err toward *not* delaying the head, never toward starving it.
+/// A head that no in-flight release can ever satisfy (it needs a grow)
+/// yields an unbounded projection and the round degenerates to
+/// aggressive backfill — there is nothing to protect.
+#[derive(Debug, Clone, Copy)]
+pub struct Backfill;
+
+#[derive(Debug, Clone, Copy)]
+struct Reservation {
+    /// The blocked head's projected start.
+    at: f64,
+    /// Resources still free at `at` after the head hypothetically
+    /// starts — what long-running backfill may consume.
+    spare_cores: u64,
+    spare_gpus: u64,
+}
+
+impl Backfill {
+    fn reserve(head: &ResourceRequest, alloc: &Allocator, ctx: &DrainCtx) -> Reservation {
+        let need_c = head.cpu_cores as u64;
+        let need_g = head.gpus as u64;
+        let (mut fc, mut fg) = (alloc.free_cores(), alloc.free_gpus());
+        if fc >= need_c && fg >= need_g {
+            // Vector-level the head fits now (node-local fragmentation
+            // blocked it): projected start is "immediately", spare is
+            // whatever the vector says is left over.
+            return Reservation {
+                at: ctx.now,
+                spare_cores: fc - need_c,
+                spare_gpus: fg - need_g,
+            };
+        }
+        for r in ctx.running {
+            fc += r.req.cpu_cores as u64;
+            fg += r.req.gpus as u64;
+            if fc >= need_c && fg >= need_g {
+                return Reservation {
+                    at: r.end,
+                    spare_cores: fc - need_c,
+                    spare_gpus: fg - need_g,
+                };
+            }
+        }
+        // No release schedule ever satisfies the head (it waits for a
+        // grow): nothing to reserve against.
+        Reservation { at: f64::INFINITY, spare_cores: u64::MAX, spare_gpus: u64::MAX }
+    }
+}
+
+impl SchedPolicy for Backfill {
+    fn kind(&self) -> Policy {
+        Policy::Backfill
+    }
+
+    fn key(&self, t: &QueuedTask, seq: u64) -> OrdKey {
+        OrdKey { major: 0, time: t.submitted_at, seq }
+    }
+
+    fn needs_projection(&self) -> bool {
+        true
+    }
+
+    fn drain(
+        &mut self,
+        q: &mut ShapeQueue,
+        alloc: &mut Allocator,
+        ctx: &DrainCtx,
+        stats: &mut SchedStats,
+    ) -> Vec<ScheduledTask> {
+        // Seed with every bucket head: the *globally* first blocked
+        // task defines the reservation, so no bucket may be screened
+        // out before it is found.
+        let mut heap: BinaryHeap<Reverse<(OrdKey, usize, usize)>> = BinaryHeap::new();
+        for b in q.bucket_ids() {
+            let idx = q.first_live(b).expect("bucket_ids yields live buckets");
+            heap.push(Reverse((q.key_at(b, idx), b, idx)));
+        }
+        let mut placed = Vec::new();
+        let mut reservation: Option<Reservation> = None;
+        while let Some(Reverse((_, b, idx))) = heap.pop() {
+            stats.tasks_examined += 1;
+            let task = *q.task_at(b, idx);
+            let admitted = match &reservation {
+                None => true,
+                Some(res) => {
+                    ctx.now + task.est <= res.at + 1e-9
+                        || (task.req.cpu_cores as u64 <= res.spare_cores
+                            && task.req.gpus as u64 <= res.spare_gpus)
+                }
+            };
+            if !admitted {
+                // This shape's earliest task would delay the head;
+                // the whole bucket sits the round out.
+                stats.shape_probes += 1;
+                continue;
+            }
+            match alloc.try_alloc(&task.req) {
+                Some(placement) => {
+                    if let Some(res) = &mut reservation {
+                        // A backfill running past the projected start
+                        // consumes spare capacity the head must not
+                        // need; one finishing before it consumes none.
+                        if ctx.now + task.est > res.at + 1e-9 {
+                            res.spare_cores -= task.req.cpu_cores as u64;
+                            res.spare_gpus -= task.req.gpus as u64;
+                        }
+                    }
+                    q.take(b, idx);
+                    placed.push(ScheduledTask { uid: task.uid, placement, task });
+                    if let Some(n) = q.next_live(b, idx) {
+                        heap.push(Reverse((q.key_at(b, n), b, n)));
+                    }
+                }
+                None => {
+                    stats.shape_probes += 1;
+                    if reservation.is_none() {
+                        reservation = Some(Backfill::reserve(&task.req, alloc, ctx));
+                    }
+                    // Bucket blocked for the round (same shape cannot
+                    // fit later: the allocation only shrinks).
+                }
+            }
+        }
+        placed
+    }
+}
+
+/// Shared greedy walk: visit bucket heads in merge-key order, place
+/// everything that fits. `strict` stops the round at the first task
+/// that does not fit (head-of-line blocking); otherwise a failed shape
+/// blocks only its own bucket — the bucketed replacement for the old
+/// failed-shape memo, O(shapes) on a fully-blocked queue.
+pub(crate) fn drain_greedy(
+    q: &mut ShapeQueue,
+    alloc: &mut Allocator,
+    strict: bool,
+    stats: &mut SchedStats,
+) -> Vec<ScheduledTask> {
+    let mut heap: BinaryHeap<Reverse<(OrdKey, usize, usize)>> = BinaryHeap::new();
+    for b in q.bucket_ids() {
+        stats.shape_probes += 1;
+        // Cheap vector screen — except under strict ordering, where a
+        // screened-out *head* must still be discovered in merge order
+        // so it can stop the round.
+        if !strict && !alloc.may_fit(&q.shape(b)) {
+            continue;
+        }
+        let idx = q.first_live(b).expect("bucket_ids yields live buckets");
+        heap.push(Reverse((q.key_at(b, idx), b, idx)));
+    }
+    let mut placed = Vec::new();
+    while let Some(Reverse((_, b, idx))) = heap.pop() {
+        stats.tasks_examined += 1;
+        let task = *q.task_at(b, idx);
+        match alloc.try_alloc(&task.req) {
+            Some(placement) => {
+                q.take(b, idx);
+                placed.push(ScheduledTask { uid: task.uid, placement, task });
+                if let Some(n) = q.next_live(b, idx) {
+                    heap.push(Reverse((q.key_at(b, n), b, n)));
+                }
+            }
+            None => {
+                stats.shape_probes += 1;
+                if strict {
+                    break;
+                }
+                // Bucket blocked for the rest of the round.
+            }
+        }
+    }
+    placed
+}

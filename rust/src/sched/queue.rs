@@ -1,0 +1,387 @@
+//! Shape-bucketed ready queue: queued tasks indexed by resource shape.
+//!
+//! The old monolithic scheduler kept one flat vector and walked *every*
+//! queued task per drain round. Under sustained saturation (thousands
+//! of queued tasks, zero free resources) that round is pure waste: the
+//! paper's workloads queue large homogeneous task sets, so the whole
+//! walk collapses onto a handful of distinct `(cores, gpus)` shapes —
+//! and within one round the allocation only shrinks, so a shape that
+//! failed to place once can never place again.
+//!
+//! The [`ShapeQueue`] exploits that: tasks live in per-shape buckets,
+//! each bucket internally sorted by the policy's [`OrdKey`], and a
+//! drain round visits *bucket heads* through a k-way merge instead of
+//! tasks. A bucket whose shape cannot fit the current free vector is
+//! skipped wholesale, making a fully-blocked round O(shapes) instead of
+//! O(queue). The merge by `OrdKey` reproduces the flat queue's policy
+//! order bit-for-bit (see `tests/sched_equiv.rs`).
+//!
+//! ## Invariants
+//!
+//! - Every entry carries a monotone arrival `seq`; keys embed it, so
+//!   the merge order is total and deterministic.
+//! - Entries within a bucket are non-decreasing in key. Pushes with a
+//!   monotone clock append in O(1); a historical out-of-order push
+//!   binary-inserts instead of taxing every later drain with a sort.
+//! - Between drain rounds buckets are *clean*: no taken-but-uncompacted
+//!   entries. [`ShapeQueue::finish_round`] restores this after a round
+//!   that removed entries; a round that placed nothing touches nothing
+//!   (the no-op drain is allocation-free).
+//! - Aggregate queued demand `(cores, gpus)` is maintained
+//!   incrementally, so the autoscaler's backlog probe is O(1) instead
+//!   of O(queue).
+
+use std::collections::{HashMap, VecDeque};
+
+use super::QueuedTask;
+use crate::resources::ResourceRequest;
+
+/// Total, policy-defined merge order over queued tasks: compared as
+/// `(major, time, seq)` with `f64::total_cmp` on the time component.
+/// Policies map onto it as:
+///
+/// - FIFO-family: `major = 0`, `time = submitted_at`;
+/// - pipeline-age: `major = priority`, `time = submitted_at`;
+/// - smallest-first: `major = weighted size`, `time = 0`.
+///
+/// The arrival `seq` makes the order total (stable tie-breaks).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OrdKey {
+    pub major: u64,
+    pub time: f64,
+    pub seq: u64,
+}
+
+impl Eq for OrdKey {}
+
+impl Ord for OrdKey {
+    fn cmp(&self, other: &OrdKey) -> std::cmp::Ordering {
+        self.major
+            .cmp(&other.major)
+            .then(self.time.total_cmp(&other.time))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for OrdKey {
+    fn partial_cmp(&self, other: &OrdKey) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    key: OrdKey,
+    task: QueuedTask,
+    taken: bool,
+}
+
+#[derive(Debug, Clone)]
+struct Bucket {
+    shape: ResourceRequest,
+    /// Non-decreasing in `key`; may hold taken entries mid-round.
+    entries: VecDeque<Entry>,
+    /// Taken-but-uncompacted entries (nonzero only mid-round).
+    taken: usize,
+    /// Already queued for compaction this round.
+    dirty: bool,
+}
+
+impl Bucket {
+    fn live(&self) -> usize {
+        self.entries.len() - self.taken
+    }
+}
+
+/// The bucketed ready queue (see the module docs for the invariants).
+///
+/// # Examples
+///
+/// ```
+/// use asyncflow::resources::ResourceRequest;
+/// use asyncflow::sched::{OrdKey, QueuedTask, ShapeQueue};
+///
+/// let mut q = ShapeQueue::new();
+/// for uid in 0..4 {
+///     let req = ResourceRequest::new(if uid % 2 == 0 { 1 } else { 8 }, 0);
+///     let t = QueuedTask { uid, req, priority: 0, submitted_at: uid as f64, tenant: 0, est: 1.0 };
+///     q.push(t, |t, seq| OrdKey { major: 0, time: t.submitted_at, seq });
+/// }
+/// assert_eq!(q.len(), 4);
+/// assert_eq!(q.shape_count(), 2, "two distinct shapes, two buckets");
+/// assert_eq!(q.demand(), (2 * 1 + 2 * 8, 0));
+/// // Insertion order is recoverable for checkpoints.
+/// let uids: Vec<usize> = q.queued().iter().map(|t| t.uid).collect();
+/// assert_eq!(uids, vec![0, 1, 2, 3]);
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct ShapeQueue {
+    buckets: Vec<Bucket>,
+    index: HashMap<ResourceRequest, usize>,
+    live: usize,
+    next_seq: u64,
+    demand_cores: u64,
+    demand_gpus: u64,
+    /// Buckets with taken entries awaiting [`finish_round`](Self::finish_round).
+    compact: Vec<usize>,
+}
+
+impl ShapeQueue {
+    pub fn new() -> ShapeQueue {
+        ShapeQueue::default()
+    }
+
+    /// Live (queued, untaken) tasks across all buckets.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Total `(cores, gpus)` requested by the queued tasks — maintained
+    /// incrementally, O(1).
+    pub fn demand(&self) -> (u64, u64) {
+        (self.demand_cores, self.demand_gpus)
+    }
+
+    /// Number of bucket slots, including currently-empty ones (bucket
+    /// ids below this bound are valid for the accessors).
+    pub fn bucket_slots(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Number of distinct shapes with at least one live task.
+    pub fn shape_count(&self) -> usize {
+        self.buckets.iter().filter(|b| b.live() > 0).count()
+    }
+
+    /// Bucket ids with at least one live task.
+    pub fn bucket_ids(&self) -> impl Iterator<Item = usize> + '_ {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.live() > 0)
+            .map(|(i, _)| i)
+    }
+
+    /// The resource shape shared by every task in bucket `b`.
+    pub fn shape(&self, b: usize) -> ResourceRequest {
+        self.buckets[b].shape
+    }
+
+    /// Live tasks in bucket `b`.
+    pub fn live_in(&self, b: usize) -> usize {
+        self.buckets[b].live()
+    }
+
+    /// Physical index of the first live entry of bucket `b`.
+    pub fn first_live(&self, b: usize) -> Option<usize> {
+        self.buckets[b].entries.iter().position(|e| !e.taken)
+    }
+
+    /// Physical index of the next live entry after `idx` in bucket `b`.
+    pub fn next_live(&self, b: usize, idx: usize) -> Option<usize> {
+        self.buckets[b]
+            .entries
+            .iter()
+            .skip(idx + 1)
+            .position(|e| !e.taken)
+            .map(|off| idx + 1 + off)
+    }
+
+    /// The task at a physical index (must be live).
+    pub fn task_at(&self, b: usize, idx: usize) -> &QueuedTask {
+        let e = &self.buckets[b].entries[idx];
+        debug_assert!(!e.taken, "task_at on a taken entry");
+        &e.task
+    }
+
+    /// The merge key at a physical index.
+    pub fn key_at(&self, b: usize, idx: usize) -> OrdKey {
+        self.buckets[b].entries[idx].key
+    }
+
+    /// Live `(physical index, task, key)` triples of bucket `b`, in key
+    /// order.
+    pub fn iter_live(&self, b: usize) -> impl Iterator<Item = (usize, &QueuedTask, OrdKey)> {
+        self.buckets[b]
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| !e.taken)
+            .map(|(i, e)| (i, &e.task, e.key))
+    }
+
+    /// Enqueue a task; `key_of` maps `(task, arrival seq)` to the
+    /// policy's merge key. Appends in O(1) when keys arrive in order
+    /// (the monotone-clock common case); binary-inserts otherwise.
+    pub fn push(&mut self, task: QueuedTask, key_of: impl FnOnce(&QueuedTask, u64) -> OrdKey) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let key = key_of(&task, seq);
+        let b = match self.index.get(&task.req) {
+            Some(&b) => b,
+            None => {
+                let b = self.buckets.len();
+                self.buckets.push(Bucket {
+                    shape: task.req,
+                    entries: VecDeque::new(),
+                    taken: 0,
+                    dirty: false,
+                });
+                self.index.insert(task.req, b);
+                b
+            }
+        };
+        let bucket = &mut self.buckets[b];
+        debug_assert_eq!(bucket.taken, 0, "push mid-round (bucket not compacted)");
+        self.live += 1;
+        self.demand_cores += task.req.cpu_cores as u64;
+        self.demand_gpus += task.req.gpus as u64;
+        let entry = Entry { key, task, taken: false };
+        match bucket.entries.back() {
+            Some(last) if last.key > key => {
+                let pos = bucket.entries.partition_point(|e| e.key <= key);
+                bucket.entries.insert(pos, entry);
+            }
+            _ => bucket.entries.push_back(entry),
+        }
+    }
+
+    /// Remove (mark taken) the live entry at a physical index and
+    /// return its task. Physical indices of *other* entries stay valid
+    /// until [`finish_round`](Self::finish_round).
+    pub fn take(&mut self, b: usize, idx: usize) -> QueuedTask {
+        let bucket = &mut self.buckets[b];
+        let e = &mut bucket.entries[idx];
+        debug_assert!(!e.taken, "take on an already-taken entry");
+        e.taken = true;
+        let task = e.task;
+        bucket.taken += 1;
+        if !bucket.dirty {
+            bucket.dirty = true;
+            self.compact.push(b);
+        }
+        self.live -= 1;
+        self.demand_cores -= task.req.cpu_cores as u64;
+        self.demand_gpus -= task.req.gpus as u64;
+        task
+    }
+
+    /// Compact every bucket touched since the last call, restoring the
+    /// clean-between-rounds invariant. A round that took nothing is a
+    /// no-op (no allocation, no copying).
+    pub fn finish_round(&mut self) {
+        while let Some(b) = self.compact.pop() {
+            let bucket = &mut self.buckets[b];
+            bucket.entries.retain(|e| !e.taken);
+            bucket.taken = 0;
+            bucket.dirty = false;
+        }
+    }
+
+    /// The queued tasks in insertion (arrival `seq`) order — the
+    /// checkpoint representation: re-pushing them into a fresh queue in
+    /// this order reproduces every bucket and tie-break.
+    pub fn queued(&self) -> Vec<QueuedTask> {
+        let mut out: Vec<(u64, QueuedTask)> = Vec::with_capacity(self.live);
+        for b in &self.buckets {
+            for e in &b.entries {
+                if !e.taken {
+                    out.push((e.key.seq, e.task));
+                }
+            }
+        }
+        out.sort_by_key(|&(seq, _)| seq);
+        out.into_iter().map(|(_, t)| t).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fifo_key(t: &QueuedTask, seq: u64) -> OrdKey {
+        OrdKey { major: 0, time: t.submitted_at, seq }
+    }
+
+    fn qt(uid: usize, cores: u32, gpus: u32, at: f64) -> QueuedTask {
+        QueuedTask {
+            uid,
+            req: ResourceRequest::new(cores, gpus),
+            priority: 0,
+            submitted_at: at,
+            tenant: 0,
+            est: 1.0,
+        }
+    }
+
+    #[test]
+    fn buckets_group_by_shape_and_track_demand() {
+        let mut q = ShapeQueue::new();
+        q.push(qt(0, 4, 1, 0.0), fifo_key);
+        q.push(qt(1, 4, 1, 1.0), fifo_key);
+        q.push(qt(2, 8, 0, 2.0), fifo_key);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.shape_count(), 2);
+        assert_eq!(q.demand(), (16, 2));
+        let b = q.bucket_ids().next().unwrap();
+        assert_eq!(q.live_in(b), 2);
+        assert_eq!(q.shape(b), ResourceRequest::new(4, 1));
+    }
+
+    #[test]
+    fn out_of_order_push_binary_inserts() {
+        let mut q = ShapeQueue::new();
+        q.push(qt(0, 1, 0, 5.0), fifo_key);
+        q.push(qt(1, 1, 0, 1.0), fifo_key); // earlier, pushed later
+        q.push(qt(2, 1, 0, 3.0), fifo_key);
+        let b = q.bucket_ids().next().unwrap();
+        let order: Vec<usize> = q.iter_live(b).map(|(_, t, _)| t.uid).collect();
+        assert_eq!(order, vec![1, 2, 0], "bucket holds true FIFO order");
+        // Insertion order is still recoverable (checkpoints).
+        let uids: Vec<usize> = q.queued().iter().map(|t| t.uid).collect();
+        assert_eq!(uids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn take_and_finish_round_keep_counts_consistent() {
+        let mut q = ShapeQueue::new();
+        for uid in 0..4 {
+            q.push(qt(uid, 2, 0, uid as f64), fifo_key);
+        }
+        let b = q.bucket_ids().next().unwrap();
+        let head = q.first_live(b).unwrap();
+        let t = q.take(b, head);
+        assert_eq!(t.uid, 0);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.demand(), (6, 0));
+        // Mid-bucket take: indices of the rest stay stable.
+        let second = q.first_live(b).unwrap();
+        let third = q.next_live(b, second).unwrap();
+        let t = q.take(b, third);
+        assert_eq!(t.uid, 2);
+        assert_eq!(q.task_at(b, second).uid, 1);
+        q.finish_round();
+        let order: Vec<usize> = q.iter_live(b).map(|(_, t, _)| t.uid).collect();
+        assert_eq!(order, vec![1, 3]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn empty_bucket_is_skipped_but_reusable() {
+        let mut q = ShapeQueue::new();
+        q.push(qt(0, 1, 0, 0.0), fifo_key);
+        let b = q.bucket_ids().next().unwrap();
+        q.take(b, 0);
+        q.finish_round();
+        assert_eq!(q.shape_count(), 0);
+        assert_eq!(q.bucket_ids().count(), 0);
+        // Same shape returns to the same bucket slot.
+        q.push(qt(1, 1, 0, 1.0), fifo_key);
+        assert_eq!(q.bucket_slots(), 1);
+        assert_eq!(q.len(), 1);
+    }
+}

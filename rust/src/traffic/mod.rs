@@ -59,6 +59,7 @@
 //!     seed: 1,
 //!     plan: None,
 //!     checkpoint_at: None,
+//!     policy: None,
 //! };
 //! let report = run_traffic(
 //!     &spec,
@@ -82,6 +83,7 @@ use crate::entk::Workflow;
 use crate::error::{Error, Result};
 use crate::pilot::ResourcePlan;
 use crate::resources::ClusterSpec;
+use crate::sched::Policy;
 use crate::sim::VirtualExecutor;
 use crate::util::json::{from_u64, obj, FromJson, Json, ToJson};
 use crate::util::rng::Rng;
@@ -284,6 +286,11 @@ pub struct TrafficSpec {
     /// returns a [`TrafficCheckpoint`] instead of a report. `None`
     /// runs to completion.
     pub checkpoint_at: Option<f64>,
+    /// Scheduling discipline override (`--policy fifo|fair|backfill`):
+    /// `Some(p)` replaces [`EngineConfig::policy`] for this run, `None`
+    /// keeps it — so a spec fully describes its scenario. Checkpoints
+    /// carry the resolved policy; resumes replay it automatically.
+    pub policy: Option<Policy>,
 }
 
 /// Run one traffic scenario: sample arrivals, stream every workflow
@@ -308,6 +315,7 @@ pub struct TrafficSpec {
 ///     seed: 7,
 ///     plan: None,
 ///     checkpoint_at: None,
+///     policy: None,
 /// };
 /// let report = run_traffic(
 ///     &spec,
@@ -376,6 +384,13 @@ pub fn run_traffic_resumable(
             )));
         }
     }
+    // Per-spec policy override: the spec fully describes the scenario
+    // (sweeps and matrices vary the discipline without cloning configs).
+    let cfg = match spec.policy {
+        Some(p) => EngineConfig { policy: p, ..cfg.clone() },
+        None => cfg.clone(),
+    };
+    let cfg = &cfg;
     let mut root = Rng::new(spec.seed);
     let mut arrival_rng = root.fork(0x5452_4146); // "TRAF"
     let mut mix_rng = root.fork(0x4d49_5858); // "MIXX"

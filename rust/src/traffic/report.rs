@@ -3,7 +3,7 @@
 
 use crate::campaign::merge_member_reports;
 use crate::engine::RunReport;
-use crate::metrics::{BacklogTrace, CapacityTimeline};
+use crate::metrics::{jain_index, BacklogTrace, CapacityTimeline};
 use crate::resources::ClusterSpec;
 use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
@@ -72,6 +72,15 @@ pub struct TrafficReport {
     /// gracefully drained cores when released), and every utilization
     /// figure above integrates against it.
     pub capacity: CapacityTimeline,
+    /// Per-driver wait breakdown, grouped by catalog workload name
+    /// (sorted by name): how long each class of member waited for its
+    /// first placement. The starvation diagnostic — under FIFO one
+    /// greedy workload class pushes every other class's summary up.
+    pub wait_by_workload: Vec<(String, Summary)>,
+    /// Jain's fairness index over per-workflow waits (see
+    /// [`jain_index`]): 1 = every member waited equally, 1/n = one
+    /// member absorbed all the waiting.
+    pub fairness_index: f64,
 }
 
 impl TrafficReport {
@@ -115,6 +124,20 @@ impl TrafficReport {
         }
         let waits: Vec<f64> = workflows.iter().map(|w| w.wait).collect();
         let ttxs: Vec<f64> = workflows.iter().map(|w| w.ttx).collect();
+        let fairness_index = jain_index(&waits);
+        // Per-workload wait breakdown, deterministic (sorted by name).
+        let mut by_name: Vec<(String, Vec<f64>)> = Vec::new();
+        for w in &workflows {
+            match by_name.iter_mut().find(|(n, _)| *n == w.name) {
+                Some((_, xs)) => xs.push(w.wait),
+                None => by_name.push((w.name.clone(), vec![w.wait])),
+            }
+        }
+        by_name.sort_by(|a, b| a.0.cmp(&b.0));
+        let wait_by_workload: Vec<(String, Summary)> = by_name
+            .into_iter()
+            .map(|(n, xs)| (n, Summary::try_of(&xs).unwrap_or_else(Summary::empty)))
+            .collect();
 
         let merged = merge_member_reports("traffic", &members, cluster);
         let capacity = merged.capacity.clone();
@@ -149,6 +172,8 @@ impl TrafficReport {
             backlog_second_half,
             peak_live_tasks: merged.peak_live_tasks,
             capacity,
+            wait_by_workload,
+            fairness_index,
             workflows,
         }
     }
@@ -206,6 +231,18 @@ impl TrafficReport {
             "  peak live task state: {} (in-flight + queued; total streamed {})\n",
             self.peak_live_tasks, self.total_tasks,
         ));
+        s.push_str(&format!(
+            "  fairness: Jain {:.3} over per-workflow waits\n",
+            self.fairness_index
+        ));
+        if self.wait_by_workload.len() > 1 {
+            for (name, w) in &self.wait_by_workload {
+                s.push_str(&format!(
+                    "    wait[{name}] n {:<4} mean {:>8.1} s  p95 {:>8.1}  max {:>8.1}\n",
+                    w.n, w.mean, w.p95, w.max
+                ));
+            }
+        }
         if !self.capacity.is_constant() {
             let first = self.capacity.points.first().map_or((0, 0), |&(_, c, g)| (c, g));
             let last = self.capacity.final_capacity();
@@ -269,6 +306,20 @@ impl TrafficReport {
                 Json::Arr(vec![Json::from(t), Json::from(c as f64), Json::from(g as f64)])
             })
             .collect();
+        let wait_by_workload = self
+            .wait_by_workload
+            .iter()
+            .map(|(name, w)| {
+                obj([
+                    ("workload", Json::from(name.clone())),
+                    ("n", Json::from(w.n)),
+                    ("wait_mean", Json::from(w.mean)),
+                    ("wait_p50", Json::from(w.p50)),
+                    ("wait_p95", Json::from(w.p95)),
+                    ("wait_max", Json::from(w.max)),
+                ])
+            })
+            .collect();
         obj([
             ("arrival_window", Json::from(self.arrival_window)),
             ("workflows", Json::Arr(wfs)),
@@ -295,8 +346,50 @@ impl TrafficReport {
             ("peak_backlog_gpus", Json::from(self.peak_backlog.2 as f64)),
             ("peak_live_tasks", Json::from(self.peak_live_tasks)),
             ("saturated", Json::from(self.is_saturated())),
+            ("fairness_index", Json::from(self.fairness_index)),
+            ("wait_by_workload", Json::Arr(wait_by_workload)),
             ("backlog_trace", Json::Arr(backlog_points)),
             ("capacity_trace", Json::Arr(capacity_points)),
         ])
+    }
+
+    /// CSV rendering of the per-driver queueing lifecycle:
+    /// `index,workload,arrival_s,wait_s,ttx_s,tasks` — one row per
+    /// streamed workflow, in arrival order (companion of the backlog
+    /// and capacity traces the CLI writes alongside it).
+    pub fn waits_csv(&self) -> String {
+        let mut s = String::from("index,workload,arrival_s,wait_s,ttx_s,tasks\n");
+        for w in &self.workflows {
+            s.push_str(&format!(
+                "{},{},{:.3},{:.3},{:.3},{}\n",
+                w.index, w.name, w.arrival, w.wait, w.ttx, w.tasks
+            ));
+        }
+        s
+    }
+
+    /// CSV rendering of the fairness view: one row per workload class
+    /// with its wait summary, then an `__all__` row carrying the
+    /// cross-member Jain index.
+    pub fn fairness_csv(&self) -> String {
+        let mut s = String::from(
+            "workload,workflows,wait_mean_s,wait_p50_s,wait_p95_s,wait_max_s,jain_index\n",
+        );
+        for (name, w) in &self.wait_by_workload {
+            s.push_str(&format!(
+                "{},{},{:.3},{:.3},{:.3},{:.3},\n",
+                name, w.n, w.mean, w.p50, w.p95, w.max
+            ));
+        }
+        s.push_str(&format!(
+            "__all__,{},{:.3},{:.3},{:.3},{:.3},{:.6}\n",
+            self.wait.n,
+            self.wait.mean,
+            self.wait.p50,
+            self.wait.p95,
+            self.wait.max,
+            self.fairness_index
+        ));
+        s
     }
 }

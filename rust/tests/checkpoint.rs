@@ -61,41 +61,49 @@ fn straight_and_resumed(
 }
 
 #[test]
-fn resume_is_bit_identical_across_seeds_and_checkpoint_times() {
+fn resume_is_bit_identical_across_seeds_checkpoint_times_and_policies() {
     // Saturated Poisson stream over an allocation that loses a node
     // mid-window: checkpoints both before and after the drain, three
-    // seeds each. The resumed report must equal the uninterrupted one
-    // bit for bit (PartialEq over every f64, and the serialized JSON).
+    // seeds x all three headline scheduling policies. The resumed
+    // report must equal the uninterrupted one bit for bit (PartialEq
+    // over every f64, and the serialized JSON) — under weighted fair
+    // sharing that means the per-tenant usage ledger, and under
+    // conservative backfill the in-flight completion projections, are
+    // rebuilt exactly from the snapshot.
+    use asyncflow::sched::Policy;
     let cluster = ClusterSpec::uniform("t", 2, 2, 0);
     let cfg = EngineConfig::ideal();
-    for seed in [1, 2, 3] {
-        let spec = TrafficSpec {
-            process: ArrivalProcess::Poisson { rate: 1.0 },
-            mix: WorkloadMix::parse("solo").unwrap(),
-            duration: 30.0,
-            max_workflows: 100_000,
-            seed,
-            plan: Some(ResourcePlan::new().resize(15.0, -1)),
-            checkpoint_at: None,
-        };
-        for t_ck in [7.0, 21.0] {
-            let (straight, resumed, ck) =
-                straight_and_resumed(&spec, &catalog(), &cluster, &cfg, t_ck);
-            assert_eq!(
-                ck.sim.now, t_ck,
-                "snapshot clock must land exactly on the checkpoint time"
-            );
-            assert_eq!(
-                straight, resumed,
-                "seed {seed}, checkpoint {t_ck}: reports must be identical"
-            );
-            assert_eq!(
-                straight.to_json().to_string(),
-                resumed.to_json().to_string(),
-                "seed {seed}, checkpoint {t_ck}: serialized reports must be bit-identical"
-            );
-            assert_eq!(straight.total_tasks, resumed.total_tasks);
-            assert_eq!(straight.failed_tasks, 0);
+    for policy in [Policy::FifoBackfill, Policy::WeightedFair, Policy::Backfill] {
+        for seed in [1, 2, 3] {
+            let spec = TrafficSpec {
+                process: ArrivalProcess::Poisson { rate: 1.0 },
+                mix: WorkloadMix::parse("solo").unwrap(),
+                duration: 30.0,
+                max_workflows: 100_000,
+                seed,
+                plan: Some(ResourcePlan::new().resize(15.0, -1)),
+                checkpoint_at: None,
+                policy: Some(policy),
+            };
+            for t_ck in [7.0, 21.0] {
+                let (straight, resumed, ck) =
+                    straight_and_resumed(&spec, &catalog(), &cluster, &cfg, t_ck);
+                assert_eq!(
+                    ck.sim.now, t_ck,
+                    "snapshot clock must land exactly on the checkpoint time"
+                );
+                assert_eq!(
+                    straight, resumed,
+                    "{policy:?}, seed {seed}, checkpoint {t_ck}: reports must be identical"
+                );
+                assert_eq!(
+                    straight.to_json().to_string(),
+                    resumed.to_json().to_string(),
+                    "{policy:?}, seed {seed}, checkpoint {t_ck}: bit-identical JSON"
+                );
+                assert_eq!(straight.total_tasks, resumed.total_tasks);
+                assert_eq!(straight.failed_tasks, 0);
+            }
         }
     }
 }
@@ -118,6 +126,7 @@ fn checkpoint_mid_drain_of_a_draining_node_restores_exactly() {
         seed: 1,
         plan: Some(ResourcePlan::new().resize(5.0, -1)),
         checkpoint_at: None,
+        policy: None,
     };
     let (straight, resumed, ck) =
         straight_and_resumed(&spec, &catalog(), &cluster, &cfg, 7.0);
@@ -157,6 +166,7 @@ fn resume_with_jittered_builtin_workloads_is_bit_identical() {
         seed: 5,
         plan: None,
         checkpoint_at: None,
+        policy: None,
     };
     let (straight, resumed, ck) =
         straight_and_resumed(&spec, &Catalog::builtin(), &cluster, &cfg, 600.0);
@@ -185,6 +195,7 @@ fn resume_on_a_shrunken_pilot_completes_all_work_with_a_makespan_penalty() {
         seed: 1,
         plan: None,
         checkpoint_at: None,
+        policy: None,
     };
     let straight = run_traffic(&spec, &catalog(), &cluster, &cfg).unwrap();
     assert_eq!(straight.workflows.len(), 10);
@@ -238,6 +249,7 @@ fn resume_with_autoscaler_grows_the_follow_up_allocation() {
         seed: 1,
         plan: None,
         checkpoint_at: None,
+        policy: None,
     };
     let straight = run_traffic(&spec, &catalog(), &cluster, &cfg).unwrap();
     let preempted = TrafficSpec { checkpoint_at: Some(6.0), ..spec };
@@ -285,6 +297,7 @@ fn run_traffic_refuses_a_checkpoint_it_cannot_return() {
         seed: 1,
         plan: None,
         checkpoint_at: Some(5.0),
+        policy: None,
     };
     let err = run_traffic(&spec, &catalog(), &cluster, &EngineConfig::ideal());
     assert!(err.is_err(), "run_traffic must refuse to swallow a checkpoint");
@@ -310,6 +323,7 @@ fn corrupted_snapshots_are_rejected_not_restored() {
         seed: 1,
         plan: None,
         checkpoint_at: Some(5.0),
+        policy: None,
     };
     let TrafficOutcome::Checkpointed(ck) =
         run_traffic_resumable(&spec, &catalog(), &cluster, &EngineConfig::ideal()).unwrap()
@@ -319,8 +333,11 @@ fn corrupted_snapshots_are_rejected_not_restored() {
     let wire = ck.to_json().to_string();
     // Sanity: the uncorrupted wire restores.
     assert!(TrafficCheckpoint::from_json(&Json::parse(&wire).unwrap()).is_ok());
-    // Unsupported snapshot version.
-    let bumped = wire.replacen("\"version\":1", "\"version\":999", 2);
+    // Unsupported snapshot version (keyed off the current constant so
+    // a schema bump cannot silently neuter this check).
+    let tag = format!("\"version\":{}", asyncflow::checkpoint::SNAPSHOT_VERSION);
+    assert!(wire.contains(&tag), "wire must carry the version tag");
+    let bumped = wire.replacen(&tag, "\"version\":999", 2);
     assert!(TrafficCheckpoint::from_json(&Json::parse(&bumped).unwrap()).is_err());
     // Structural damage: a slab smaller than its live tasks + free list.
     let slab = ck.sim.slab_len;

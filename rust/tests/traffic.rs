@@ -47,6 +47,7 @@ fn spec(process: ArrivalProcess, duration: f64, seed: u64) -> TrafficSpec {
         seed,
         plan: None,
         checkpoint_at: None,
+        policy: None,
     }
 }
 
@@ -236,6 +237,7 @@ fn mix_ratio_shapes_the_sampled_stream() {
         seed: 11,
         plan: None,
         checkpoint_at: None,
+        policy: None,
     };
     let rep = run_traffic(&s, &cat, &cluster(), &EngineConfig::ideal()).unwrap();
     let fast = rep.workflows.iter().filter(|w| w.name == "fast").count();
@@ -425,6 +427,7 @@ fn unknown_workload_and_empty_windows_error() {
             seed: 1,
             plan: None,
             checkpoint_at: None,
+            policy: None,
         },
         &catalog(),
         &cluster(),
@@ -438,4 +441,178 @@ fn unknown_workload_and_empty_windows_error() {
         &EngineConfig::ideal(),
     );
     assert!(err.is_err(), "an empty arrival set must error");
+}
+
+// ----- pluggable scheduling policies ----------------------------------
+
+/// Single-set workflow with `tasks` parallel 1-core tasks of `tx` s.
+fn burst(tasks: u32, tx: f64) -> Workflow {
+    let mut dag = Dag::new();
+    dag.add_node("A");
+    Workflow {
+        name: "burst".into(),
+        sets: vec![TaskSetSpec::new("A", tasks, ResourceRequest::new(1, 0), tx).with_sigma(0.0)],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0])],
+        asynchronous: vec![Pipeline::new("a").stage(&[0])],
+    }
+}
+
+#[test]
+fn policy_matrix_is_deterministic_and_fifo_override_is_transparent() {
+    use asyncflow::sched::Policy;
+    // Each policy reproduces itself bit-for-bit; the explicit fifo
+    // override equals the config default (EngineConfig::ideal is
+    // FifoBackfill) — the pre-refactor report, untouched.
+    let base = spec(ArrivalProcess::Poisson { rate: 0.5 }, 300.0, 9);
+    let run = |policy: Option<Policy>| {
+        run_traffic(
+            &TrafficSpec { policy, ..base.clone() },
+            &catalog(),
+            &cluster(),
+            &EngineConfig::ideal(),
+        )
+        .unwrap()
+    };
+    let default = run(None);
+    let explicit = run(Some(Policy::FifoBackfill));
+    assert_eq!(
+        default.to_json().to_string(),
+        explicit.to_json().to_string(),
+        "--policy fifo must reproduce the default report bit-for-bit"
+    );
+    for policy in [Policy::FifoBackfill, Policy::WeightedFair, Policy::Backfill] {
+        let a = run(Some(policy));
+        let b = run(Some(policy));
+        assert_eq!(a, b, "{policy:?} must be deterministic");
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(a.failed_tasks, 0);
+        assert_eq!(a.backlog.final_tasks(), 0, "{policy:?} must drain the stream");
+    }
+}
+
+#[test]
+fn weighted_fair_bounds_solo_wait_below_the_fifo_starvation_case() {
+    use asyncflow::sched::Policy;
+    // One greedy member floods a 4-core pilot with 40 x 10 s tasks at
+    // t = 0; ten solo workflows arrive afterwards. Under FIFO the solos
+    // queue behind the whole flood (p95 wait near the ~100 s drain);
+    // weighted fair sharing hands each freed core to the starved
+    // tenant, bounding solo p95 wait near one service time.
+    let cat = Catalog::new()
+        .insert("greedy", burst(40, 10.0))
+        .insert("solo", solo(10.0));
+    let mut arrivals = vec![TraceArrival { at: 0.0, workload: Some("greedy".into()) }];
+    for k in 0..10 {
+        arrivals.push(TraceArrival {
+            at: 5.0 + 10.0 * k as f64,
+            workload: Some("solo".into()),
+        });
+    }
+    let run = |policy: Policy| {
+        run_traffic(
+            &TrafficSpec {
+                process: ArrivalProcess::Trace(arrivals.clone()),
+                mix: WorkloadMix::parse("solo").unwrap(),
+                duration: 200.0,
+                max_workflows: 100_000,
+                seed: 1,
+                plan: None,
+                checkpoint_at: None,
+                policy: Some(policy),
+            },
+            &cat,
+            &cluster(),
+            &EngineConfig::ideal(),
+        )
+        .unwrap()
+    };
+    let fifo = run(Policy::FifoBackfill);
+    let fair = run(Policy::WeightedFair);
+    let solo_waits = |rep: &asyncflow::traffic::TrafficReport| {
+        let mut xs: Vec<f64> = rep
+            .workflows
+            .iter()
+            .filter(|w| w.name == "solo")
+            .map(|w| w.wait)
+            .collect();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        xs
+    };
+    let fifo_waits = solo_waits(&fifo);
+    let fair_waits = solo_waits(&fair);
+    assert_eq!(fifo_waits.len(), 10);
+    let fifo_p95 = fifo_waits[fifo_waits.len() - 1];
+    let fair_p95 = fair_waits[fair_waits.len() - 1];
+    assert!(
+        fifo_p95 > 40.0,
+        "FIFO must starve the late solos behind the flood, got max wait {fifo_p95}"
+    );
+    assert!(
+        fair_p95 <= 15.0,
+        "fair sharing must bound solo wait near one service time, got {fair_p95}"
+    );
+    assert!(fair_p95 < fifo_p95 / 2.0);
+    // The report quantifies it: Jain over waits is higher under fair,
+    // and the per-workload breakdown carries both classes.
+    assert!(
+        fair.fairness_index > fifo.fairness_index,
+        "Jain {:.3} (fair) vs {:.3} (fifo)",
+        fair.fairness_index,
+        fifo.fairness_index
+    );
+    let names: Vec<&str> = fair.wait_by_workload.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(names, ["greedy", "solo"]);
+    // Everybody still finishes under both disciplines.
+    assert_eq!(fifo.failed_tasks, 0);
+    assert_eq!(fair.failed_tasks, 0);
+    assert_eq!(fair.total_tasks, fifo.total_tasks);
+}
+
+#[test]
+fn sweep_composes_with_autoscaler_and_shifts_the_knee() {
+    // The autoscaler knee sweep from the ROADMAP's elastic scenario
+    // family: the same mid rate saturates a fixed 1-core pilot but
+    // stays bounded once --autoscale may grow to 4 nodes, i.e. the
+    // saturation knee moves right; a low rate is bounded either way.
+    let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+    let policy = AutoscalePolicy {
+        interval: 5.0,
+        min_nodes: 1,
+        max_nodes: 4,
+        step: 1,
+        ..AutoscalePolicy::default()
+    };
+    let run = |rate: f64, autoscale: bool| {
+        run_traffic(
+            &TrafficSpec {
+                plan: autoscale.then(|| ResourcePlan::new().with_autoscale(policy.clone())),
+                ..spec(ArrivalProcess::Poisson { rate }, 400.0, 3)
+            },
+            &catalog(),
+            &cluster,
+            &EngineConfig::ideal(),
+        )
+        .unwrap()
+    };
+    // Capacity 0.1 wf/s fixed, 0.4 wf/s at full growth.
+    let low_fixed = run(0.02, false);
+    let low_scaled = run(0.02, true);
+    assert!(!low_fixed.is_saturated(), "20% load bounded on the fixed pilot");
+    assert!(!low_scaled.is_saturated());
+    let mid_fixed = run(0.2, false);
+    let mid_scaled = run(0.2, true);
+    assert!(
+        mid_fixed.is_saturated(),
+        "200% of fixed capacity must saturate (growth {:.2})",
+        mid_fixed.backlog_growth()
+    );
+    assert!(
+        !mid_scaled.is_saturated(),
+        "the autoscaled pilot must absorb the same rate (growth {:.2}, peak {:?})",
+        mid_scaled.backlog_growth(),
+        mid_scaled.capacity.peak()
+    );
+    assert!(mid_scaled.capacity.peak().0 > 1, "the knee shift comes from growth");
+    assert!(mid_scaled.wait.mean < mid_fixed.wait.mean);
 }
