@@ -264,6 +264,7 @@ pub(crate) fn merge_member_reports(
     );
     campaign.sched_rounds = members.first().map_or(0, |m| m.sched_rounds);
     campaign.sched_wall = members.first().map_or(Duration::ZERO, |m| m.sched_wall);
+    campaign.driver_steps = members.first().map_or(0, |m| m.driver_steps);
     campaign.peak_live_tasks = members.first().map_or(0, |m| m.peak_live_tasks);
     campaign
 }

@@ -159,7 +159,7 @@ impl MlExecutor {
 impl Executor for MlExecutor {
     fn launch(&mut self, task: &RunningTask) {
         let uid = task.uid;
-        let kind = task.kind.clone().unwrap_or(TaskKind::Stress);
+        let kind = task.kind.unwrap_or(TaskKind::Stress);
         let runtime = self.runtime.clone();
         let store = Arc::clone(&self.store);
         let chan = self.tx_chan.clone();

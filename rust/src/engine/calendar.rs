@@ -1,0 +1,349 @@
+//! Event calendar: the engine loop's indexed priority structure.
+//!
+//! The coordinator's legacy loop paid O(live drivers) on **every**
+//! iteration — step 2 clocked every live driver (a no-op for all but
+//! the due ones) and step 4 re-folded every driver's
+//! `next_activation()` from scratch. The calendar replaces both scans:
+//! it holds each live driver's next activation as a *wake*, plus the
+//! loop's four singleton timed events (next pending arrival, next
+//! timed resize, next autoscaler tick, the checkpoint deadline) as
+//! *lanes*, so an iteration touches only drivers whose wakes are due
+//! and the next-event horizon is a heap peek.
+//!
+//! ## Wakes: binary heap with lazy invalidation
+//!
+//! Wakes live in a binary min-heap of `(time, slot)` ordered by
+//! [`f64::total_cmp`] with ties broken toward the lower slot. A
+//! re-registration does not search the heap: it overwrites
+//! `registered[slot]` and pushes a fresh entry, leaving the old entry
+//! *stale*. An entry is authoritative iff its time equals
+//! `registered[slot]` **bit-for-bit**; stale entries are discarded
+//! whenever they surface at the top. Amortized cost per registration
+//! is O(log n); the heap never holds more entries than wake
+//! registrations performed, and pops reclaim the garbage.
+//!
+//! Invalidation rules (who re-registers, and when — see
+//! `EngineLoop::drive`):
+//! - a driver's wake is (re)registered whenever its deferred set can
+//!   have changed: at materialization (arrival), after it is stepped
+//!   with `ClockAdvanced`, and after each `TaskCompleted` routed to it;
+//! - a wake is cancelled when its driver finishes and is folded into
+//!   its report;
+//! - re-registering the *same* time is a no-op (no heap push), so
+//!   steady-state completions that do not move a driver's horizon cost
+//!   nothing.
+//!
+//! ## Lanes: singleton scalars
+//!
+//! Arrival / resize / autoscale / checkpoint are one-per-loop values
+//! that the coordinator already tracks as sorted cursors; the calendar
+//! carries them as plain scalars (set every iteration, O(1)) so
+//! [`next_event`](Calendar::next_event) is the single source of the
+//! loop's wake-up horizon. Gating (the autoscaler only ticks while
+//! work exists, the checkpoint only while the sim is active) stays in
+//! the coordinator — the lane holds the *effective* time or nothing.
+//!
+//! ## Snapshots
+//!
+//! The calendar is **not** captured in [`SimSnapshot`]: every wake is
+//! a pure function of its driver's deferred set
+//! (`WorkflowDriver::next_activation`), and every lane of loop state
+//! that *is* captured. Restore rebuilds it exactly — see
+//! `EngineLoop::from_snapshot` and the equivalence tests in
+//! `tests/loop_equiv.rs`.
+//!
+//! [`SimSnapshot`]: crate::checkpoint::SimSnapshot
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Due-time comparison slack, matching the engine loop's epsilon.
+const EPS: f64 = 1e-12;
+
+/// Which event-loop path computes due drivers and the wake-up horizon.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WakePolicy {
+    /// Event-calendar loop: step only drivers whose wake is due;
+    /// `next_deferred` is a heap peek. The default.
+    #[default]
+    Calendar,
+    /// Legacy loop: clock every live driver every iteration and fold
+    /// every `next_activation()`. Kept as the equivalence baseline and
+    /// for the scale bench's before/after comparison.
+    FullScan,
+}
+
+/// Singleton timed events owned by the loop itself (not by a driver).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Next pending workflow arrival.
+    Arrival,
+    /// Next unapplied timed resize event.
+    Resize,
+    /// Next autoscaler evaluation (already gated by the caller).
+    Autoscale,
+    /// Checkpoint deadline (already gated on sim activity).
+    Checkpoint,
+}
+
+const N_LANES: usize = 4;
+
+/// Min-heap entry; `BinaryHeap` is a max-heap, so the `Ord` impl is
+/// reversed. Ties break toward the lower slot so due wakes surface in
+/// the same slot order the legacy full scan used.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    time: f64,
+    slot: usize,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time) == Ordering::Equal && self.slot == other.slot
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: the heap's max is the earliest (time, slot).
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.slot.cmp(&self.slot))
+    }
+}
+
+/// Indexed priority structure over per-slot wakes + singleton lanes.
+#[derive(Debug, Default)]
+pub struct Calendar {
+    heap: BinaryHeap<Entry>,
+    /// `registered[slot]` is the slot's authoritative wake time; NaN
+    /// means no wake. Heap entries whose time is not bit-identical to
+    /// this are stale and skipped on pop.
+    registered: Vec<f64>,
+    /// Lane times (NaN = lane empty), indexed by `Lane as usize`.
+    lanes: [f64; N_LANES],
+}
+
+impl Calendar {
+    pub fn new() -> Calendar {
+        Calendar { heap: BinaryHeap::new(), registered: Vec::new(), lanes: [f64::NAN; N_LANES] }
+    }
+
+    /// Register (or move) slot's wake to time `t`. Re-registering the
+    /// current time is a no-op.
+    pub fn schedule_wake(&mut self, slot: usize, t: f64) {
+        debug_assert!(!t.is_nan(), "NaN wake time for slot {slot}");
+        if self.registered.len() <= slot {
+            self.registered.resize(slot + 1, f64::NAN);
+        }
+        if self.registered[slot].to_bits() == t.to_bits() {
+            return; // already registered at exactly this time
+        }
+        self.registered[slot] = t;
+        self.heap.push(Entry { time: t, slot });
+    }
+
+    /// Drop slot's wake (driver finished or has nothing deferred). The
+    /// heap entry, if any, becomes stale and is reclaimed lazily.
+    pub fn cancel_wake(&mut self, slot: usize) {
+        if let Some(r) = self.registered.get_mut(slot) {
+            *r = f64::NAN;
+        }
+    }
+
+    /// Convenience: wake at `Some(t)`, cancel at `None` (the shape of
+    /// `WorkflowDriver::next_activation`).
+    pub fn set_wake(&mut self, slot: usize, t: Option<f64>) {
+        match t {
+            Some(t) => self.schedule_wake(slot, t),
+            None => self.cancel_wake(slot),
+        }
+    }
+
+    /// Pop every wake due at `now` into `out` (slot order, matching the
+    /// legacy scan's iteration order) and consume their registrations.
+    /// `out` is cleared first; the caller re-registers after stepping.
+    pub fn due_wakes(&mut self, now: f64, out: &mut Vec<usize>) {
+        out.clear();
+        while let Some(top) = self.heap.peek() {
+            let Entry { time, slot } = *top;
+            if self.registered.get(slot).is_some_and(|r| r.to_bits() == time.to_bits()) {
+                if time > now + EPS {
+                    break; // earliest live wake is in the future
+                }
+                self.heap.pop();
+                self.registered[slot] = f64::NAN;
+                out.push(slot);
+            } else {
+                self.heap.pop(); // stale (re-registered or cancelled)
+            }
+        }
+        // (time, slot) heap order interleaves slots of different due
+        // times; the engine steps due drivers in slot order.
+        out.sort_unstable();
+    }
+
+    /// Earliest live wake, ignoring lanes (infinity when none).
+    /// Reclaims stale heap tops on the way.
+    pub fn next_wake(&mut self) -> f64 {
+        while let Some(top) = self.heap.peek() {
+            let Entry { time, slot } = *top;
+            if self.registered.get(slot).is_some_and(|r| r.to_bits() == time.to_bits()) {
+                return time;
+            }
+            self.heap.pop();
+        }
+        f64::INFINITY
+    }
+
+    /// Set (Some) or clear (None) a lane's next event time.
+    pub fn set_lane(&mut self, lane: Lane, t: Option<f64>) {
+        self.lanes[lane as usize] = t.unwrap_or(f64::NAN);
+    }
+
+    /// The loop's wake-up horizon: earliest of every live wake and
+    /// every set lane (infinity when nothing is pending anywhere).
+    pub fn next_event(&mut self) -> f64 {
+        let mut t = self.next_wake();
+        for &l in &self.lanes {
+            if !l.is_nan() {
+                t = t.min(l);
+            }
+        }
+        t
+    }
+
+    /// Number of live (registered) wakes — test/debug visibility.
+    pub fn live_wakes(&self) -> usize {
+        self.registered.iter().filter(|r| !r.is_nan()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn due(cal: &mut Calendar, now: f64) -> Vec<usize> {
+        let mut out = Vec::new();
+        cal.due_wakes(now, &mut out);
+        out
+    }
+
+    #[test]
+    fn wakes_surface_in_slot_order() {
+        let mut cal = Calendar::new();
+        cal.schedule_wake(7, 5.0);
+        cal.schedule_wake(2, 3.0);
+        cal.schedule_wake(4, 5.0);
+        assert_eq!(cal.next_wake(), 3.0);
+        assert_eq!(due(&mut cal, 5.0), vec![2, 4, 7]);
+        assert_eq!(cal.next_wake(), f64::INFINITY);
+        assert_eq!(cal.live_wakes(), 0);
+    }
+
+    #[test]
+    fn due_respects_epsilon_like_the_loop() {
+        let mut cal = Calendar::new();
+        cal.schedule_wake(0, 10.0);
+        assert!(due(&mut cal, 10.0 - 1e-9).is_empty());
+        // Within the loop's 1e-12 slack counts as due.
+        assert_eq!(due(&mut cal, 10.0 - 1e-13), vec![0]);
+    }
+
+    #[test]
+    fn reregistration_invalidates_the_old_entry() {
+        let mut cal = Calendar::new();
+        cal.schedule_wake(3, 8.0);
+        cal.schedule_wake(3, 2.0); // moved earlier
+        assert_eq!(cal.next_wake(), 2.0);
+        assert_eq!(due(&mut cal, 2.0), vec![3]);
+        // The stale 8.0 entry must not resurface.
+        assert!(due(&mut cal, 100.0).is_empty());
+    }
+
+    #[test]
+    fn moving_a_wake_later_works_via_staleness() {
+        let mut cal = Calendar::new();
+        cal.schedule_wake(1, 2.0);
+        cal.schedule_wake(1, 9.0);
+        assert!(due(&mut cal, 5.0).is_empty());
+        assert_eq!(cal.next_wake(), 9.0);
+        assert_eq!(due(&mut cal, 9.0), vec![1]);
+    }
+
+    #[test]
+    fn cancel_then_reschedule() {
+        let mut cal = Calendar::new();
+        cal.schedule_wake(0, 4.0);
+        cal.cancel_wake(0);
+        assert_eq!(cal.next_wake(), f64::INFINITY);
+        cal.schedule_wake(0, 4.0);
+        assert_eq!(due(&mut cal, 4.0), vec![0]);
+    }
+
+    #[test]
+    fn same_time_reregistration_is_a_noop() {
+        let mut cal = Calendar::new();
+        cal.schedule_wake(0, 4.0);
+        for _ in 0..100 {
+            cal.schedule_wake(0, 4.0);
+        }
+        assert_eq!(cal.heap.len(), 1, "bit-equal re-registrations must not grow the heap");
+    }
+
+    #[test]
+    fn lanes_fold_into_the_horizon() {
+        let mut cal = Calendar::new();
+        cal.schedule_wake(0, 12.0);
+        cal.set_lane(Lane::Arrival, Some(7.0));
+        cal.set_lane(Lane::Resize, Some(30.0));
+        cal.set_lane(Lane::Autoscale, None);
+        cal.set_lane(Lane::Checkpoint, Some(5.5));
+        assert_eq!(cal.next_event(), 5.5);
+        cal.set_lane(Lane::Checkpoint, None);
+        assert_eq!(cal.next_event(), 7.0);
+        cal.set_lane(Lane::Arrival, None);
+        assert_eq!(cal.next_event(), 12.0);
+        assert_eq!(cal.next_wake(), 12.0, "lanes must not disturb wakes");
+    }
+
+    #[test]
+    fn empty_calendar_horizon_is_infinite() {
+        let mut cal = Calendar::new();
+        assert_eq!(cal.next_event(), f64::INFINITY);
+        assert!(due(&mut cal, 1e18).is_empty());
+    }
+
+    #[test]
+    fn interleaved_register_step_register_stream() {
+        // Simulates the loop's steady state: wakes move forward as
+        // drivers are stepped; the heap stays consistent throughout.
+        let mut cal = Calendar::new();
+        for slot in 0..50 {
+            cal.schedule_wake(slot, slot as f64);
+        }
+        let mut seen = Vec::new();
+        let mut now = 0.0;
+        while cal.next_wake().is_finite() {
+            now = cal.next_wake();
+            let mut batch = Vec::new();
+            cal.due_wakes(now, &mut batch);
+            for &s in &batch {
+                seen.push(s);
+                // Every third slot defers again, 10 times each (its
+                // wakes land at s, s+10, …, s+100).
+                if s % 3 == 0 && now < s as f64 + 100.0 {
+                    cal.schedule_wake(s, now + 10.0);
+                }
+            }
+        }
+        assert!(now >= 100.0);
+        assert_eq!(seen.len(), 50 + 17 * 10); // 0,3,..,48 re-woken 10x
+    }
+}

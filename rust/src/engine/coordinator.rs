@@ -9,7 +9,9 @@
 //!    time has been reached (workflows are *streamed*: a member that
 //!    arrives at t = 10⁴ costs one pending spec until then, not live
 //!    driver state);
-//! 2. feed `ClockAdvanced` to every live driver and submit whatever
+//! 2. feed `ClockAdvanced` to every driver *due* at the current clock
+//!    — the event [`Calendar`] tracks each live driver's next
+//!    activation, so idle drivers cost nothing — and submit whatever
 //!    became ready;
 //! 3. invoke the continuous scheduler once per state change;
 //! 4. launch placements, then drain the executor's next completion
@@ -53,14 +55,15 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use super::driver::{EngineEvent, WorkflowDriver};
+use super::calendar::{Calendar, Lane, WakePolicy};
+use super::driver::{EngineEvent, Submission, WorkflowDriver};
 use super::{EngineConfig, ExecutionMode, RunReport};
 use crate::checkpoint::{
     DriverEntry, FinishedMember, LiveTask, PendingMember, RunningEntry, SimSnapshot,
 };
 use crate::entk::Workflow;
 use crate::error::{Error, Result};
-use crate::exec::{Executor, RunningTask};
+use crate::exec::{Completion, Executor, RunningTask};
 use crate::metrics::CapacityTimeline;
 use crate::pilot::{Agent, AutoscalePolicy, ResizeEvent, ResourcePlan, RunningMeta, Scheduler};
 use crate::resources::{Allocator, ClusterSpec, NodeSpec, ResourceRequest};
@@ -92,6 +95,10 @@ pub struct Coordinator {
     plan: Option<ResourcePlan>,
     /// Snapshot to resume from (set by [`Coordinator::restore`]).
     resume: Option<Box<SimSnapshot>>,
+    /// Event-loop strategy (calendar vs legacy full scan). Execution
+    /// strategy, not simulation state: it is never serialized, and
+    /// either policy resumes any snapshot bit-identically.
+    wake: WakePolicy,
 }
 
 impl Coordinator {
@@ -104,7 +111,17 @@ impl Coordinator {
             next_pipeline: 0,
             plan: None,
             resume: None,
+            wake: WakePolicy::default(),
         }
+    }
+
+    /// Select the event-loop strategy (default [`WakePolicy::Calendar`]).
+    /// [`WakePolicy::FullScan`] keeps the legacy O(live drivers)-per-
+    /// iteration loop: the equivalence-test baseline
+    /// (`tests/loop_equiv.rs`) and the scale bench's before/after
+    /// comparison (`benches/bench_scale.rs`).
+    pub fn set_wake_policy(&mut self, wake: WakePolicy) {
+        self.wake = wake;
     }
 
     /// Rebuild a runnable coordinator from a [`SimSnapshot`]. The next
@@ -125,6 +142,7 @@ impl Coordinator {
             next_pipeline: snapshot.next_pipeline,
             plan: None,
             resume: Some(Box::new(snapshot)),
+            wake: WakePolicy::default(),
         })
     }
 
@@ -229,9 +247,10 @@ impl Coordinator {
             }
         }
         let plan = self.plan.take();
+        let wake = self.wake;
         let state = match self.resume.take() {
-            Some(snap) => EngineLoop::from_snapshot(*snap, plan, executor)?,
-            None => EngineLoop::fresh(self, plan)?,
+            Some(snap) => EngineLoop::from_snapshot(*snap, plan, executor, wake)?,
+            None => EngineLoop::fresh(self, plan, wake)?,
         };
         state.drive(executor, checkpoint_at)
     }
@@ -296,6 +315,16 @@ struct EngineLoop {
     /// submissions or freed resources) — avoids O(queue) rescans on
     /// clock-advance iterations.
     sched_dirty: bool,
+    /// Event-loop strategy: calendar (step only due drivers) vs the
+    /// legacy full scan. See [`WakePolicy`].
+    wake: WakePolicy,
+    /// Per-driver wake times + singleton event lanes (calendar mode).
+    /// Never snapshotted: rebuilt from the drivers' deferred sets on
+    /// restore (see [`EngineLoop::from_snapshot`]).
+    calendar: Calendar,
+    /// `WorkflowDriver::step` invocations (perf accounting — the
+    /// scan-vs-calendar figure of merit; see `RunReport::driver_steps`).
+    driver_steps: u64,
 }
 
 /// Normalize an attached [`ResourcePlan`] into loop state: events
@@ -321,7 +350,11 @@ fn normalize_plan(
 
 impl EngineLoop {
     /// Fresh loop state over the coordinator's registered workflows.
-    fn fresh(coord: Coordinator, plan: Option<ResourcePlan>) -> Result<EngineLoop> {
+    fn fresh(
+        coord: Coordinator,
+        plan: Option<ResourcePlan>,
+        wake: WakePolicy,
+    ) -> Result<EngineLoop> {
         let agent = Agent::new(&coord.cluster, coord.cfg.policy, coord.cfg.task_overhead);
         let capacity = CapacityTimeline::of_cluster(&coord.cluster);
         let (resize_events, autoscale, grow_node) = match plan {
@@ -363,6 +396,10 @@ impl EngineLoop {
             sched_rounds: 0,
             sched_wall: Duration::ZERO,
             sched_dirty: true,
+            wake,
+            // Drivers register their wakes as they materialize.
+            calendar: Calendar::new(),
+            driver_steps: 0,
         })
     }
 
@@ -376,6 +413,7 @@ impl EngineLoop {
         s: SimSnapshot,
         plan: Option<ResourcePlan>,
         executor: &mut dyn Executor,
+        wake: WakePolicy,
     ) -> Result<EngineLoop> {
         let SimSnapshot {
             now,
@@ -521,7 +559,7 @@ impl EngineLoop {
                 uid: r.uid,
                 tx,
                 started_at: started,
-                kind: Some(specs[r.uid].kind.clone()),
+                kind: Some(specs[r.uid].kind),
             });
             sched.note_started(slot, &specs[r.uid].req);
             running_table[r.uid] = Some(RunningMeta {
@@ -546,6 +584,17 @@ impl EngineLoop {
                 }
                 None => (resize_events, autoscale, next_check, stalled_checks, grow_node),
             };
+
+        // The calendar is never captured in the snapshot: every wake
+        // is a pure function of its driver's deferred set, so restore
+        // rebuilds it exactly — the calendar-mode resume is
+        // bit-identical to the uninterrupted run (tests/loop_equiv.rs,
+        // tests/checkpoint.rs).
+        let mut calendar = Calendar::new();
+        for &slot in &live_slots {
+            let d = drivers[slot].as_ref().expect("live slot holds a driver");
+            calendar.set_wake(slot, d.next_activation());
+        }
 
         Ok(EngineLoop {
             cfg,
@@ -573,6 +622,9 @@ impl EngineLoop {
             sched_rounds,
             sched_wall: Duration::ZERO,
             sched_dirty,
+            wake,
+            calendar,
+            driver_steps: 0,
         })
     }
 
@@ -667,6 +719,12 @@ impl EngineLoop {
         executor: &mut dyn Executor,
         checkpoint_at: Option<f64>,
     ) -> Result<RunOutcome> {
+        // Hot-path scratch, reused across iterations: driver
+        // submissions, the due-slot working set, and the completion
+        // drain all borrow these instead of allocating per iteration.
+        let mut subs: Vec<Submission> = Vec::new();
+        let mut due_slots: Vec<usize> = Vec::new();
+        let mut completions: Vec<Completion> = Vec::new();
         loop {
             let now = executor.now();
 
@@ -692,6 +750,7 @@ impl EngineLoop {
             // releases (step 4) — so cores in use never exceed the
             // recorded capacity. Growth can unblock queued work, so it
             // re-arms the scheduler.
+            let mut resized = false;
             while self.next_resize < self.resize_events.len()
                 && self.resize_events[self.next_resize].at <= now + 1e-12
             {
@@ -704,6 +763,11 @@ impl EngineLoop {
                 } else {
                     self.agent.drain(ev.delta.unsigned_abs() as usize);
                 }
+                resized = true;
+            }
+            // Record once after the burst: N same-instant resizes yield
+            // one timeline point carrying their net effect, not N.
+            if resized {
                 record_offered(&mut self.capacity, &self.agent, now);
             }
             // Clone the policy only on iterations where a check is
@@ -758,17 +822,37 @@ impl EngineLoop {
                 if let Err(pos) = self.live_slots.binary_search(&slot) {
                     self.live_slots.insert(pos, slot);
                 }
+                // A fresh driver's roots are deferred to its arrival
+                // time (i.e. due now): register its wake so the
+                // calendar releases them this iteration.
+                if self.wake == WakePolicy::Calendar {
+                    let t = self.drivers[slot]
+                        .as_ref()
+                        .expect("just materialized")
+                        .next_activation();
+                    self.calendar.set_wake(slot, t);
+                }
             }
 
             // 2. Release activations that are due, in slot order (this
             // matches merged-DAG set ordering: member k's sets precede
-            // member k+1's).
-            for &di in &self.live_slots {
-                let subs = self.drivers[di]
+            // member k+1's). The calendar hands back exactly the slots
+            // whose wake is due; the legacy scan clocks everyone.
+            match self.wake {
+                WakePolicy::FullScan => {
+                    due_slots.clear();
+                    due_slots.extend(self.live_slots.iter().copied());
+                }
+                WakePolicy::Calendar => self.calendar.due_wakes(now, &mut due_slots),
+            }
+            for &di in &due_slots {
+                subs.clear();
+                self.driver_steps += 1;
+                self.drivers[di]
                     .as_mut()
-                    .expect("live slot holds a driver")
-                    .step(EngineEvent::ClockAdvanced { now });
-                for sub in subs {
+                    .expect("due slot holds a driver")
+                    .step_into(EngineEvent::ClockAdvanced { now }, &mut subs);
+                for sub in subs.drain(..) {
                     let local = sub.spec.uid;
                     let mut spec = sub.spec;
                     let gid = match self.free_uids.pop() {
@@ -795,6 +879,15 @@ impl EngineLoop {
                     // must get its chance before the deadlock check.
                     self.stalled_checks = 0;
                 }
+                // The step consumed this driver's wake; re-register its
+                // new horizon (or nothing, if its deferred set drained).
+                if self.wake == WakePolicy::Calendar {
+                    let t = self.drivers[di]
+                        .as_ref()
+                        .expect("due slot holds a driver")
+                        .next_activation();
+                    self.calendar.set_wake(di, t);
+                }
             }
 
             // 3. Schedule everything that fits.
@@ -819,53 +912,80 @@ impl EngineLoop {
                     uid: s.uid,
                     tx: spec.tx + self.cfg.task_overhead,
                     started_at: now,
-                    kind: Some(spec.kind.clone()),
+                    kind: Some(spec.kind),
                 });
                 self.in_flight += 1;
             }
 
-            // 4. Wait for progress.
-            let mut next_deferred = self
-                .live_slots
-                .iter()
-                .filter_map(|&di| {
-                    self.drivers[di]
-                        .as_ref()
-                        .expect("live slot holds a driver")
-                        .next_activation()
-                })
-                .fold(f64::INFINITY, f64::min);
-            if let Some(p) = self.pending.front() {
-                next_deferred = next_deferred.min(p.arrival);
-            }
-            // Unapplied timed resizes are wake-ups too (a future grow
-            // may be the only thing that can serve a starved queue).
-            if self.next_resize < self.resize_events.len() {
-                next_deferred = next_deferred.min(self.resize_events[self.next_resize].at);
-            }
-            // The autoscaler only ticks while there is work its decision
-            // could affect, and parks after repeated no-op evaluations
-            // with nothing running (see `stalled_checks`).
-            if let Some(t) = self.next_check {
-                if (self.in_flight > 0 || self.agent.queue_len() > 0)
+            // 4. Wait for progress. The next wake-up horizon is the
+            // earliest of: a driver's deferred activation, the next
+            // pending arrival, the next unapplied timed resize (a
+            // future grow may be the only thing that can serve a
+            // starved queue), the next autoscaler tick (only while
+            // there is work its decision could affect, parked after
+            // repeated no-op evaluations with nothing running — see
+            // `stalled_checks`), and the checkpoint deadline (the clock
+            // must land on it exactly so the snapshot's `now` is the
+            // requested one — but only while the simulation is still
+            // active: a run that drains before the checkpoint must
+            // complete normally, not idle forward to t_ck and snapshot
+            // a finished sim).
+            let autoscale_tick = self.next_check.filter(|_| {
+                (self.in_flight > 0 || self.agent.queue_len() > 0)
                     && self.stalled_checks < 3
-                {
-                    next_deferred = next_deferred.min(t);
+            });
+            let next_deferred = match self.wake {
+                WakePolicy::FullScan => {
+                    let mut nd = self
+                        .live_slots
+                        .iter()
+                        .filter_map(|&di| {
+                            self.drivers[di]
+                                .as_ref()
+                                .expect("live slot holds a driver")
+                                .next_activation()
+                        })
+                        .fold(f64::INFINITY, f64::min);
+                    if let Some(p) = self.pending.front() {
+                        nd = nd.min(p.arrival);
+                    }
+                    if self.next_resize < self.resize_events.len() {
+                        nd = nd.min(self.resize_events[self.next_resize].at);
+                    }
+                    if let Some(t) = autoscale_tick {
+                        nd = nd.min(t);
+                    }
+                    let sim_active = self.in_flight > 0
+                        || nd.is_finite()
+                        || self.agent.queue_len() > 0;
+                    if let Some(t_ck) = checkpoint_at {
+                        if sim_active {
+                            nd = nd.min(t_ck);
+                        }
+                    }
+                    nd
                 }
-            }
-            // The checkpoint time is a wake-up: the clock must land on
-            // it exactly so the snapshot's `now` is the requested one.
-            // Only while the simulation is still active, though — a run
-            // that drains before the checkpoint must complete normally,
-            // not idle forward to t_ck and snapshot a finished sim.
-            let sim_active = self.in_flight > 0
-                || next_deferred.is_finite()
-                || self.agent.queue_len() > 0;
-            if let Some(t_ck) = checkpoint_at {
-                if sim_active {
-                    next_deferred = next_deferred.min(t_ck);
+                WakePolicy::Calendar => {
+                    // Driver wakes are already registered; refresh the
+                    // four singleton lanes and peek. O(1) per lane, one
+                    // (amortized) heap peek for the wakes.
+                    self.calendar
+                        .set_lane(Lane::Arrival, self.pending.front().map(|p| p.arrival));
+                    self.calendar.set_lane(
+                        Lane::Resize,
+                        self.resize_events.get(self.next_resize).map(|e| e.at),
+                    );
+                    self.calendar.set_lane(Lane::Autoscale, autoscale_tick);
+                    self.calendar.set_lane(Lane::Checkpoint, None);
+                    let horizon = self.calendar.next_event();
+                    let sim_active = self.in_flight > 0
+                        || horizon.is_finite()
+                        || self.agent.queue_len() > 0;
+                    self.calendar
+                        .set_lane(Lane::Checkpoint, checkpoint_at.filter(|_| sim_active));
+                    self.calendar.next_event()
                 }
-            }
+            };
             if self.in_flight > 0 {
                 match executor.peek_next_completion() {
                     // An activation is due before the next completion:
@@ -886,11 +1006,11 @@ impl EngineLoop {
                         }
                     }
                 }
-                let completions = executor.drain_ready();
+                executor.drain_ready_into(&mut completions);
                 if completions.is_empty() {
                     return Err(Error::Engine("executor lost in-flight tasks".into()));
                 }
-                for c in completions {
+                for &c in &completions {
                     self.in_flight -= 1;
                     self.agent.complete(c.uid);
                     self.sched_dirty = true; // resources were freed
@@ -903,11 +1023,19 @@ impl EngineLoop {
                         let d = self.drivers[di]
                             .as_mut()
                             .expect("completion routed to a live driver");
-                        let _ = d.step(EngineEvent::TaskCompleted {
-                            uid: local,
-                            finished_at: c.finished_at,
-                            failed: c.failed,
-                        });
+                        // A completion never produces submissions
+                        // directly — it only defers children, released
+                        // by the next ClockAdvanced.
+                        subs.clear();
+                        d.step_into(
+                            EngineEvent::TaskCompleted {
+                                uid: local,
+                                finished_at: c.finished_at,
+                                failed: c.failed,
+                            },
+                            &mut subs,
+                        );
+                        debug_assert!(subs.is_empty());
                         if c.failed && self.cfg.abort_on_failure {
                             // Report the driver-local uid: that is the
                             // uid visible in the member's RunReport
@@ -929,6 +1057,16 @@ impl EngineLoop {
                         if let Ok(pos) = self.live_slots.binary_search(&di) {
                             self.live_slots.remove(pos);
                         }
+                        self.calendar.cancel_wake(di);
+                    } else if self.wake == WakePolicy::Calendar {
+                        // The completion may have deferred children
+                        // (possibly earlier than the registered wake):
+                        // refresh this driver's horizon.
+                        let t = self.drivers[di]
+                            .as_ref()
+                            .expect("not folded")
+                            .next_activation();
+                        self.calendar.set_wake(di, t);
                     }
                 }
                 // Graceful shrink: resources this batch released on
@@ -966,6 +1104,7 @@ impl EngineLoop {
         for r in &mut reports {
             r.sched_rounds = self.sched_rounds;
             r.sched_wall = self.sched_wall;
+            r.driver_steps = self.driver_steps;
             r.peak_live_tasks = self.peak_live;
             // The full (final) timeline replaces each member's
             // fold-time snapshot: member utilization was already

@@ -260,9 +260,19 @@ impl WorkflowDriver {
     }
 
     /// Consume one event; return the submissions it made ready.
+    /// Convenience wrapper over [`step_into`](Self::step_into).
     pub fn step(&mut self, ev: EngineEvent) -> Vec<Submission> {
+        let mut out = Vec::new();
+        self.step_into(ev, &mut out);
+        out
+    }
+
+    /// Consume one event, appending the submissions it made ready to
+    /// `out` (not cleared). The coordinator's hot path reuses one
+    /// buffer across iterations instead of allocating per step.
+    pub fn step_into(&mut self, ev: EngineEvent, out: &mut Vec<Submission>) {
         match ev {
-            EngineEvent::ClockAdvanced { now } => self.release_due(now),
+            EngineEvent::ClockAdvanced { now } => self.release_due(now, out),
             EngineEvent::TaskCompleted { uid, finished_at, failed } => {
                 self.records[uid].finished = finished_at;
                 self.records[uid].failed = failed;
@@ -283,18 +293,17 @@ impl WorkflowDriver {
                         }
                     }
                 }
-                Vec::new()
             }
         }
     }
 
     /// Release every deferred activation due at `now`, in deterministic
     /// (time, jobset index) order, expanding each into task submissions.
-    fn release_due(&mut self, now: f64) -> Vec<Submission> {
-        // Fast path: the coordinator clocks every driver on every loop
-        // iteration; skip the sort when nothing is due.
+    fn release_due(&mut self, now: f64, out: &mut Vec<Submission>) {
+        // Fast path: the legacy full-scan loop clocks every driver on
+        // every iteration; skip the sort when nothing is due.
         if self.deferred.iter().all(|d| d.0 > now + 1e-12) {
-            return Vec::new();
+            return;
         }
         self.deferred
             .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
@@ -302,12 +311,13 @@ impl WorkflowDriver {
         while k < self.deferred.len() && self.deferred[k].0 <= now + 1e-12 {
             k += 1;
         }
-        let due: Vec<(f64, usize)> = self.deferred.drain(..k).collect();
-        let mut out = Vec::new();
-        for (_, js) in due {
-            self.activate(js, now, &mut out);
+        // Activate by index (the tuples are Copy) so the due prefix
+        // never needs collecting into a temporary.
+        for i in 0..k {
+            let (_, js) = self.deferred[i];
+            self.activate(js, now, out);
         }
-        out
+        self.deferred.drain(..k);
     }
 
     /// Expand one jobset into its task specs/records/submissions.
@@ -328,7 +338,7 @@ impl WorkflowDriver {
                 ordinal,
                 tx,
                 req: set.req,
-                kind: set.kind.clone(),
+                kind: set.kind,
             };
             self.records.push(TaskRecord {
                 uid,

@@ -39,10 +39,12 @@
 //! assert!(asy.improvement_over(&seq) > 0.0);
 //! ```
 
+mod calendar;
 mod coordinator;
 mod driver;
 mod plan;
 
+pub use calendar::{Calendar, Lane, WakePolicy};
 pub use coordinator::{Coordinator, RunOutcome};
 pub use driver::{DriverState, EngineEvent, Submission, WorkflowDriver};
 pub use plan::{compile, ExecutionMode, JobSet};
@@ -142,6 +144,14 @@ pub struct RunReport {
     pub sched_rounds: usize,
     /// Wall-clock spent inside the scheduler (perf accounting).
     pub sched_wall: Duration,
+    /// `WorkflowDriver::step` invocations the event loop performed
+    /// (perf accounting, coordinator-global like `sched_rounds`). The
+    /// calendar loop touches only *due* drivers, so this is the
+    /// scan-vs-calendar figure of merit (`benches/bench_scale.rs`).
+    /// Like `sched_wall` it measures the execution strategy, not the
+    /// simulation: it is not part of snapshots or serialized reports,
+    /// and a resumed run counts only its post-restore steps.
+    pub driver_steps: u64,
     /// High-water mark of live per-task engine state (in-flight +
     /// queued) during the run. Coordinator-global (repeated on every
     /// member report, like `sched_rounds`); streamed campaigns keep
@@ -209,6 +219,7 @@ impl RunReport {
             failed_tasks,
             sched_rounds: 0,
             sched_wall: Duration::ZERO,
+            driver_steps: 0,
             peak_live_tasks: 0,
             capacity,
             records,

@@ -64,9 +64,21 @@ pub trait Executor {
     /// task completes, then hand back *every* completion sharing that
     /// instant (virtual time) or already waiting (real executors) in
     /// one call, instead of one-by-one wakeups. Returns an empty batch
-    /// only when nothing is in flight.
+    /// only when nothing is in flight. Convenience wrapper over
+    /// [`drain_ready_into`](Self::drain_ready_into).
     fn drain_ready(&mut self) -> Vec<Completion> {
-        self.wait_next().into_iter().collect()
+        let mut out = Vec::new();
+        self.drain_ready_into(&mut out);
+        out
+    }
+
+    /// [`drain_ready`](Self::drain_ready) into a caller-owned buffer
+    /// (cleared first): the engine loop drains once per wakeup and
+    /// reuses one buffer for the run instead of allocating a fresh
+    /// `Vec` every iteration.
+    fn drain_ready_into(&mut self, out: &mut Vec<Completion>) {
+        out.clear();
+        out.extend(self.wait_next());
     }
 
     /// Block until engine time reaches `t` or a completion becomes

@@ -107,8 +107,8 @@ impl Executor for StressExecutor {
         self.epoch.elapsed().as_secs_f64() / self.scale
     }
 
-    fn drain_ready(&mut self) -> Vec<Completion> {
-        let mut out = Vec::new();
+    fn drain_ready_into(&mut self, out: &mut Vec<Completion>) {
+        out.clear();
         // Anything buffered by wait_until drains without blocking ...
         while let Some(msg) = self.pending.pop_front() {
             self.in_flight -= 1;
@@ -118,7 +118,7 @@ impl Executor for StressExecutor {
         if out.is_empty() {
             match self.wait_next() {
                 Some(c) => out.push(c),
-                None => return out,
+                None => return,
             }
         }
         // ... then sweep up everything else that already landed.
@@ -131,7 +131,6 @@ impl Executor for StressExecutor {
                 Err(_) => break,
             }
         }
-        out
     }
 
     fn wait_until(&mut self, t: f64) -> bool {

@@ -70,14 +70,18 @@ subcommands:
            --mix ddmd:2,cdg2:1           one shared pilot: Poisson (or
            [--interval S] [--trace F]    fixed-interval / trace-driven)
            [--sweep 0.005,0.01,0.02]     arrivals drawn from a weighted
-           [--max-workflows N]           workload mix; reports wait/TTX
-           [--policy fifo|fair|backfill] percentiles, backlog, per-
-           [--resize T:+N,T:-N]          workload waits + Jain fairness,
-           [--autoscale]                 and the saturation verdict.
-           [--autoscale-min N]           --sweep runs several rates to
-           [--autoscale-max N]           find the knee (composes with
-           [--autoscale-interval S]      --autoscale*: the peak_c column
-           [--autoscale-step N]          shows how far each rate grew).
+           [--jobs N]                    workload mix; reports wait/TTX
+           [--max-workflows N]           percentiles, backlog, per-
+           [--policy fifo|fair|backfill] workload waits + Jain fairness,
+           [--resize T:+N,T:-N]          and the saturation verdict.
+           [--autoscale]                 --sweep runs several rates to
+           [--autoscale-min N]           find the knee (composes with
+           [--autoscale-max N]           --autoscale*: the peak_c column
+           [--autoscale-interval S]      shows how far each rate grew);
+           [--autoscale-step N]          --jobs N runs the sweep's
+                                         independent simulations on N
+                                         threads (0 = all cores) with
+                                         byte-identical output.
            [--checkpoint-at T]           --resize grows/drains pilot
            [--checkpoint-out F.json]     nodes at the given times
                                          (drains are graceful: running
@@ -362,8 +366,8 @@ fn emit_traffic_report(args: &Args, rep: &asyncflow::traffic::TrafficReport) -> 
 
 fn cmd_traffic(args: &Args) -> Result<()> {
     use asyncflow::traffic::{
-        load_trace_file, run_traffic, run_traffic_resumable, ArrivalProcess, Catalog,
-        TrafficOutcome, TrafficSpec, WorkloadMix,
+        load_trace_file, run_traffic_resumable, run_traffic_sweep, sweep_csv, sweep_json,
+        ArrivalProcess, Catalog, TrafficOutcome, TrafficSpec, WorkloadMix,
     };
     use asyncflow::util::json::ToJson;
     let cluster = pick_cluster(args)?;
@@ -424,23 +428,27 @@ fn cmd_traffic(args: &Args) -> Result<()> {
                 })
             })
             .collect::<Result<_>>()?;
+        // --jobs N shards the independent per-rate simulations across N
+        // threads (0 = one per core); the reports — and any CSV/JSON
+        // written below — are byte-identical to the serial runner's.
+        let jobs = args.get_usize("jobs", 1)?;
         println!(
-            "traffic sweep on {} (mix {}, window {:.0} s, seed {seed})\n",
+            "traffic sweep on {} (mix {}, window {:.0} s, seed {seed}, jobs {})\n",
             cluster.name,
             args.get_or("mix", "ddmd:2,cdg2:1"),
-            duration
+            duration,
+            if jobs == 0 { "auto".to_string() } else { jobs.to_string() },
         );
+        let specs: Vec<_> = rates
+            .iter()
+            .map(|&rate| spec_for(ArrivalProcess::Poisson { rate }))
+            .collect();
+        let reports = run_traffic_sweep(&specs, &catalog, &cluster, &cfg, jobs)?;
         println!(
             "{:>9} {:>6} {:>10} {:>10} {:>10} {:>12} {:>8} {:>7}  verdict",
             "rate/s", "wf", "wait_mean", "ttx_p50", "ttx_p95", "backlog_mean", "growth", "peak_c"
         );
-        for rate in rates {
-            let rep = run_traffic(
-                &spec_for(ArrivalProcess::Poisson { rate }),
-                &catalog,
-                &cluster,
-                &cfg,
-            )?;
+        for (rate, rep) in rates.iter().zip(&reports) {
             // peak_c exposes how far an --autoscale'd sweep actually
             // grew at each rate (constant for fixed-pilot sweeps).
             println!(
@@ -455,6 +463,15 @@ fn cmd_traffic(args: &Args) -> Result<()> {
                 rep.capacity.peak().0,
                 if rep.is_saturated() { "SATURATED" } else { "bounded" },
             );
+        }
+        if let Some(dir) = args.get("out") {
+            std::fs::create_dir_all(dir)?;
+            let base = std::path::Path::new(dir);
+            let cp = base.join("traffic_sweep.csv");
+            std::fs::write(&cp, sweep_csv(&rates, &reports))?;
+            let jp = base.join("traffic_sweep.json");
+            std::fs::write(&jp, sweep_json(&rates, &reports).to_string_pretty())?;
+            println!("\nwrote {}, {}", cp.display(), jp.display());
         }
         return Ok(());
     }

@@ -48,6 +48,11 @@ pub struct Agent {
     /// task's completion (must match what the engine launches with).
     task_overhead: f64,
     running: Vec<Option<RunningMeta>>, // uid -> running bookkeeping
+    /// Scratch for the in-flight projection built by [`schedule`]
+    /// (projection policies only): reused across rounds so the hot
+    /// path does not allocate two fresh `Vec`s per invocation.
+    proj_ends: Vec<(f64, usize)>,
+    proj_view: Vec<InFlight>,
 }
 
 impl Agent {
@@ -57,6 +62,8 @@ impl Agent {
             sched: Scheduler::new(policy),
             task_overhead,
             running: Vec::new(),
+            proj_ends: Vec::new(),
+            proj_view: Vec::new(),
         }
     }
 
@@ -70,7 +77,14 @@ impl Agent {
         running: Vec<Option<RunningMeta>>,
         task_overhead: f64,
     ) -> Agent {
-        Agent { alloc, sched, task_overhead, running }
+        Agent {
+            alloc,
+            sched,
+            task_overhead,
+            running,
+            proj_ends: Vec::new(),
+            proj_view: Vec::new(),
+        }
     }
 
     pub fn allocator(&self) -> &Allocator {
@@ -132,25 +146,27 @@ impl Agent {
     /// finish at `now + est`). Returns the placements of this round.
     pub fn schedule(&mut self, now: f64) -> Vec<ScheduledTask> {
         // The in-flight projection is only built for policies that
-        // consume it (conservative backfill) — it costs a sort.
-        let view: Vec<InFlight> = if self.sched.needs_projection() {
-            let mut v: Vec<(f64, usize)> = self
-                .running
-                .iter()
-                .enumerate()
-                .filter_map(|(uid, m)| m.as_ref().map(|m| (m.end, uid)))
-                .collect();
-            v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-            v.into_iter()
-                .map(|(end, uid)| {
-                    let m = self.running[uid].as_ref().expect("collected above");
-                    InFlight { end, req: self.releasable(&m.placement), tenant: m.tenant }
-                })
-                .collect()
-        } else {
-            Vec::new()
-        };
-        let ctx = DrainCtx { now, running: &view };
+        // consume it (conservative backfill) — it costs a sort. Both
+        // scratch buffers persist on the agent across rounds.
+        self.proj_ends.clear();
+        self.proj_view.clear();
+        if self.sched.needs_projection() {
+            self.proj_ends.extend(
+                self.running
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(uid, m)| m.as_ref().map(|m| (m.end, uid))),
+            );
+            self.proj_ends
+                .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for &(end, uid) in &self.proj_ends {
+                let m = self.running[uid].as_ref().expect("collected above");
+                let in_flight =
+                    InFlight { end, req: self.releasable(&m.placement), tenant: m.tenant };
+                self.proj_view.push(in_flight);
+            }
+        }
+        let ctx = DrainCtx { now, running: &self.proj_view };
         let placed = self.sched.drain_schedulable(&mut self.alloc, &ctx);
         for s in &placed {
             if self.running.len() <= s.uid {

@@ -128,12 +128,12 @@ impl Executor for VirtualExecutor {
         self.queue.advance_to(t);
     }
 
-    fn drain_ready(&mut self) -> Vec<Completion> {
+    fn drain_ready_into(&mut self, out: &mut Vec<Completion>) {
         // Pop the earliest event plus every event at exactly the same
         // virtual instant: one engine wakeup per time point, not per
         // task (the paper-scale workloads complete 96-task sets
         // simultaneously when sigma = 0).
-        let mut out = Vec::new();
+        out.clear();
         if let Some((t, uid)) = self.queue.pop() {
             out.push(Completion { uid, finished_at: t, failed: false });
             while self.queue.peek_time() == Some(t) {
@@ -141,7 +141,6 @@ impl Executor for VirtualExecutor {
                 out.push(Completion { uid: uid2, finished_at: t2, failed: false });
             }
         }
-        out
     }
 
     fn wait_until(&mut self, t: f64) -> bool {

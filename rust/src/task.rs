@@ -17,7 +17,7 @@ use crate::util::rng::Rng;
 /// The virtual (discrete-event) executor ignores this; the stress
 /// executor sleeps/spins; the ML executor dispatches to the PJRT
 /// runtime (DeepDriveMD task bodies).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum TaskKind {
     /// Synthetic task occupying resources for TX seconds (the paper's
     /// `stress` executable).

@@ -344,6 +344,98 @@ pub fn run_traffic(
     }
 }
 
+/// Run one [`run_traffic`] per spec, sharding the independent
+/// simulations across up to `jobs` OS threads (`jobs == 0` means one
+/// per available core). Each simulation is deterministic and fully
+/// independent — workers share nothing but the work index — so the
+/// returned reports are **byte-identical to the serial runner's**, in
+/// input order, for any `jobs` (the CLI's parallel `--sweep --jobs N`;
+/// see `tests/traffic.rs`).
+pub fn run_traffic_sweep(
+    specs: &[TrafficSpec],
+    catalog: &Catalog,
+    cluster: &ClusterSpec,
+    cfg: &EngineConfig,
+    jobs: usize,
+) -> Result<Vec<TrafficReport>> {
+    let jobs = match jobs {
+        0 => std::thread::available_parallelism().map_or(1, |n| n.get()),
+        n => n,
+    }
+    .min(specs.len().max(1));
+    if jobs <= 1 {
+        return specs
+            .iter()
+            .map(|s| run_traffic(s, catalog, cluster, cfg))
+            .collect();
+    }
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    // Self-scheduling work queue: each worker claims the next unclaimed
+    // spec index, so a slow (saturated) rate never blocks the others.
+    // Results land in their input slot — merge order is seed/input
+    // order by construction, independent of completion order.
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<TrafficReport>>>> =
+        specs.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= specs.len() {
+                    break;
+                }
+                let r = run_traffic(&specs[i], catalog, cluster, cfg);
+                *slots[i].lock().expect("sweep slot lock") = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("sweep slot lock")
+                .expect("every claimed spec stores a result")
+        })
+        .collect()
+}
+
+/// CSV of a rate sweep's per-rate headline metrics (the CLI table as
+/// data): one row per `(rate, report)` pair, input order.
+pub fn sweep_csv(rates: &[f64], reports: &[TrafficReport]) -> String {
+    let mut out = String::from(
+        "rate_per_s,workflows,wait_mean_s,ttx_p50_s,ttx_p95_s,\
+         backlog_mean_tasks,backlog_growth,peak_cores,verdict\n",
+    );
+    for (rate, rep) in rates.iter().zip(reports) {
+        out.push_str(&format!(
+            "{rate},{},{},{},{},{},{},{},{}\n",
+            rep.workflows.len(),
+            rep.wait.mean,
+            rep.ttx.p50,
+            rep.ttx.p95,
+            rep.mean_backlog_tasks,
+            rep.backlog_growth(),
+            rep.capacity.peak().0,
+            if rep.is_saturated() { "SATURATED" } else { "bounded" },
+        ));
+    }
+    out
+}
+
+/// JSON of a rate sweep: `[{rate, report}, ...]`, input order.
+pub fn sweep_json(rates: &[f64], reports: &[TrafficReport]) -> Json {
+    Json::Arr(
+        rates
+            .iter()
+            .zip(reports)
+            .map(|(rate, rep)| {
+                obj([("rate", Json::from(*rate)), ("report", rep.to_json())])
+            })
+            .collect(),
+    )
+}
+
 /// How a (possibly preempted) traffic run ended.
 #[derive(Debug)]
 pub enum TrafficOutcome {

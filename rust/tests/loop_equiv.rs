@@ -1,0 +1,241 @@
+//! Equivalence property test: the event-calendar engine loop
+//! ([`WakePolicy::Calendar`]) must reproduce the legacy full-scan loop
+//! ([`WakePolicy::FullScan`]) **bit-for-bit** — every task record,
+//! every report field, and every mid-run snapshot — across random
+//! workflow mixes, arrival patterns, scheduling policies, and elastic
+//! resizes (in the style of `tests/sched_equiv.rs`).
+//!
+//! The calendar is an execution strategy, not simulation state: wake
+//! times are derived from driver state (`next_activation`), never
+//! serialized. The cross-resume cases prove it — a snapshot taken
+//! under either loop resumes under the *other* to an identical run.
+
+use asyncflow::checkpoint::SimSnapshot;
+use asyncflow::dag::Dag;
+use asyncflow::engine::{
+    Coordinator, EngineConfig, ExecutionMode, RunOutcome, RunReport, WakePolicy,
+};
+use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::pilot::{AutoscalePolicy, Policy, ResourcePlan};
+use asyncflow::resources::{ClusterSpec, ResourceRequest};
+use asyncflow::sim::VirtualExecutor;
+use asyncflow::task::TaskSetSpec;
+use asyncflow::util::json::ToJson;
+use asyncflow::util::rng::Rng;
+use asyncflow::workflows::random_workflow;
+
+/// Build the seed's scenario from scratch: same seed, same coordinator
+/// — only the wake policy differs between the two runs under test.
+fn coordinator_for(seed: u64, wake: WakePolicy) -> Coordinator {
+    let mut rng = Rng::new(seed);
+    let policy = [Policy::FifoBackfill, Policy::WeightedFair, Policy::Backfill]
+        [rng.below(3) as usize];
+    let cfg = EngineConfig { policy, seed: seed ^ 0x5eed, ..EngineConfig::default() };
+    let cluster = ClusterSpec::uniform("t", 3, 8, 2);
+    let mut coord = Coordinator::new(&cluster, &cfg);
+    coord.set_wake_policy(wake);
+    let n = 2 + rng.below(5) as usize;
+    for _ in 0..n {
+        let wf = random_workflow(&mut rng, 3, 3);
+        let mode = if rng.f64() < 0.5 {
+            ExecutionMode::Asynchronous
+        } else {
+            ExecutionMode::Sequential
+        };
+        let arrival = rng.f64() * 120.0;
+        coord.add_workflow(wf, mode, arrival).unwrap();
+    }
+    // Most scenarios run elastic: a grow and a drain land while traffic
+    // is live, and half of those also run the backlog autoscaler — the
+    // resize/autoscale lanes of the calendar are then load-bearing.
+    if rng.f64() < 0.6 {
+        let mut plan = ResourcePlan::new()
+            .resize(20.0 + rng.f64() * 40.0, 1)
+            .resize(80.0 + rng.f64() * 40.0, -1);
+        if rng.f64() < 0.5 {
+            plan = plan.with_autoscale(AutoscalePolicy {
+                interval: 10.0,
+                min_nodes: 2,
+                max_nodes: 5,
+                step: 1,
+                ..Default::default()
+            });
+        }
+        coord.set_resource_plan(plan).unwrap();
+    }
+    coord
+}
+
+fn run_complete(seed: u64, wake: WakePolicy) -> Vec<RunReport> {
+    let mut ex = VirtualExecutor::new();
+    coordinator_for(seed, wake).run(&mut ex).unwrap()
+}
+
+/// Compare every simulation-derived report field at the bit level.
+/// `RunReport` deliberately has no `PartialEq` (it carries wall-clock
+/// accounting — `sched_wall` — and the strategy-dependent
+/// `driver_steps` counter, both excluded here); the record streams go
+/// through `Debug`, whose f64 formatting round-trips, so equal strings
+/// mean equal bits.
+fn assert_reports_identical(a: &[RunReport], b: &[RunReport], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: member count");
+    for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+        let tag = format!("{what}: member {i} ({})", ra.workflow);
+        assert_eq!(ra.workflow, rb.workflow, "{tag}: workflow");
+        assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits(), "{tag}: makespan");
+        assert_eq!(
+            format!("{:?}", ra.records),
+            format!("{:?}", rb.records),
+            "{tag}: task records"
+        );
+        assert_eq!(
+            format!("{:?}", ra.trace),
+            format!("{:?}", rb.trace),
+            "{tag}: utilization trace"
+        );
+        assert_eq!(
+            ra.cpu_utilization.to_bits(),
+            rb.cpu_utilization.to_bits(),
+            "{tag}: cpu utilization"
+        );
+        assert_eq!(
+            ra.gpu_utilization.to_bits(),
+            rb.gpu_utilization.to_bits(),
+            "{tag}: gpu utilization"
+        );
+        assert_eq!(ra.throughput.to_bits(), rb.throughput.to_bits(), "{tag}: throughput");
+        assert_eq!(ra.doa_res, rb.doa_res, "{tag}: doa_res");
+        assert_eq!(ra.failed_tasks, rb.failed_tasks, "{tag}: failed tasks");
+        assert_eq!(ra.sched_rounds, rb.sched_rounds, "{tag}: sched rounds");
+        assert_eq!(ra.peak_live_tasks, rb.peak_live_tasks, "{tag}: peak live tasks");
+        assert_eq!(ra.capacity, rb.capacity, "{tag}: capacity timeline");
+    }
+}
+
+#[test]
+fn calendar_loop_matches_full_scan_bit_for_bit() {
+    let mut scan_steps = 0u64;
+    let mut cal_steps = 0u64;
+    for seed in 0..24u64 {
+        let scan = run_complete(seed, WakePolicy::FullScan);
+        let cal = run_complete(seed, WakePolicy::Calendar);
+        assert_reports_identical(&scan, &cal, &format!("seed {seed}"));
+        // The whole point of the calendar: it never wakes a driver the
+        // scan would not have woken, and usually wakes far fewer.
+        let (ss, cs) = (scan[0].driver_steps, cal[0].driver_steps);
+        assert!(cs <= ss, "seed {seed}: calendar stepped more drivers ({cs} > {ss})");
+        scan_steps += ss;
+        cal_steps += cs;
+    }
+    assert!(
+        cal_steps < scan_steps,
+        "across all seeds the calendar must save wake-ups: {cal_steps} vs {scan_steps}"
+    );
+}
+
+#[test]
+fn snapshots_agree_and_cross_resume_is_bit_identical() {
+    // Checkpoint the same scenario at the same instant under both
+    // loops: the snapshots must serialize identically (the calendar
+    // leaves no trace in the wire format), and each snapshot must
+    // resume under the *opposite* policy to the same completed run as
+    // the uninterrupted baseline.
+    let t_ck = 40.0;
+    let snap_of = |seed: u64, wake: WakePolicy| -> Option<Box<SimSnapshot>> {
+        let mut ex = VirtualExecutor::new();
+        match coordinator_for(seed, wake).run_until(&mut ex, Some(t_ck)).unwrap() {
+            RunOutcome::Checkpointed(s) => Some(s),
+            RunOutcome::Completed(_) => None,
+        }
+    };
+    let resume = |snap: SimSnapshot, wake: WakePolicy| -> Vec<RunReport> {
+        let mut coord = Coordinator::restore(snap).unwrap();
+        coord.set_wake_policy(wake);
+        let mut ex = VirtualExecutor::new();
+        coord.run(&mut ex).unwrap()
+    };
+    let mut checkpointed = 0;
+    for seed in 0..12u64 {
+        let Some(s_scan) = snap_of(seed, WakePolicy::FullScan) else {
+            // Every workflow of this seed drained before t_ck — fine,
+            // the completed-run property above already covers it.
+            continue;
+        };
+        let s_cal = snap_of(seed, WakePolicy::Calendar)
+            .expect("both loops take the same trajectory, so both must checkpoint");
+        checkpointed += 1;
+        assert_eq!(
+            s_scan.to_json().to_string(),
+            s_cal.to_json().to_string(),
+            "seed {seed}: mid-run snapshots must serialize identically"
+        );
+        // Cross-resume, both directions.
+        let scan_then_cal = resume((*s_scan).clone(), WakePolicy::Calendar);
+        let cal_then_scan = resume((*s_cal).clone(), WakePolicy::FullScan);
+        assert_reports_identical(
+            &scan_then_cal,
+            &cal_then_scan,
+            &format!("seed {seed} cross-resume"),
+        );
+        // ... and the resumed trajectory is the uninterrupted one.
+        let baseline = run_complete(seed, WakePolicy::FullScan);
+        assert_eq!(baseline.len(), scan_then_cal.len(), "seed {seed}: member count");
+        for (i, (r, b)) in scan_then_cal.iter().zip(&baseline).enumerate() {
+            assert_eq!(
+                r.makespan.to_bits(),
+                b.makespan.to_bits(),
+                "seed {seed}: member {i} makespan after resume"
+            );
+            assert_eq!(
+                format!("{:?}", r.records),
+                format!("{:?}", b.records),
+                "seed {seed}: member {i} records after resume"
+            );
+            assert_eq!(r.capacity, b.capacity, "seed {seed}: member {i} capacity");
+        }
+    }
+    assert!(checkpointed >= 4, "too few scenarios reached t = {t_ck}: {checkpointed}");
+}
+
+/// Single-task workflow: 1 core for `tx` seconds, deterministic.
+fn solo(tx: f64) -> Workflow {
+    let mut dag = Dag::new();
+    dag.add_node("A");
+    Workflow {
+        name: "solo".into(),
+        sets: vec![TaskSetSpec::new("A", 1, ResourceRequest::new(1, 0), tx).with_sigma(0.0)],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0])],
+        asynchronous: vec![Pipeline::new("a").stage(&[0])],
+    }
+}
+
+#[test]
+fn calendar_saves_an_order_of_magnitude_of_wakeups_under_wide_traffic() {
+    // The perf contract behind the refactor (the acceptance bar of the
+    // scale bench, asserted here on a deterministic miniature): 100
+    // long-running workflows arrive one second apart, so the scan loop
+    // re-steps every live driver on every arrival — O(live²) wake-ups —
+    // while the calendar wakes each driver only when it has due work.
+    let run = |wake: WakePolicy| -> Vec<RunReport> {
+        let cluster = ClusterSpec::uniform("t", 25, 4, 0);
+        let cfg = EngineConfig::ideal();
+        let mut coord = Coordinator::new(&cluster, &cfg);
+        coord.set_wake_policy(wake);
+        for i in 0..100 {
+            coord
+                .add_workflow(solo(1000.0), ExecutionMode::Asynchronous, i as f64)
+                .unwrap();
+        }
+        let mut ex = VirtualExecutor::new();
+        coord.run(&mut ex).unwrap()
+    };
+    let scan = run(WakePolicy::FullScan);
+    let cal = run(WakePolicy::Calendar);
+    assert_reports_identical(&scan, &cal, "wide traffic");
+    let (ss, cs) = (scan[0].driver_steps, cal[0].driver_steps);
+    assert!(
+        ss >= 5 * cs,
+        "calendar must beat the scan by >= 5x on wide traffic: scan {ss}, calendar {cs}"
+    );
+}
