@@ -85,5 +85,5 @@ mod snapshot;
 
 pub use snapshot::{
     DriverEntry, FinishedMember, LiveTask, PendingMember, RunningEntry, SimSnapshot,
-    SNAPSHOT_VERSION,
+    SNAPSHOT_FIELDS_FINGERPRINT, SNAPSHOT_VERSION,
 };

@@ -18,6 +18,15 @@ use crate::util::json::{arr_of, from_u64, obj, parse_arr, FromJson, Json, ToJson
 /// and service estimate — the fair-share and backfill policy inputs.)
 pub const SNAPSHOT_VERSION: u64 = 2;
 
+/// Fingerprint of the snapshot-struct field lists, recorded by
+/// `asyncflow lint` (rule SER002): `"v{SNAPSHOT_VERSION}:{fnv1a64 of
+/// the canonical field-list string, 16 hex digits}"`. Editing any
+/// watched struct's fields changes the hash and fails lint until
+/// SNAPSHOT_VERSION is bumped and this constant is re-recorded — the
+/// lint finding prints the new expected value. Do not edit by hand
+/// except to paste that value.
+pub const SNAPSHOT_FIELDS_FINGERPRINT: &str = "v2:edabd102e4f9b1e7";
+
 /// A registered workflow whose driver has not materialized yet: until
 /// the engine clock reaches `arrival` it costs one workflow spec, no
 /// per-task state. This is also the coordinator's *internal* pending
@@ -595,7 +604,7 @@ impl SimSnapshot {
             )));
         }
         // Live tasks must route into live drivers.
-        let driver_slots: std::collections::HashSet<usize> =
+        let driver_slots: std::collections::BTreeSet<usize> =
             self.drivers.iter().map(|d| d.slot).collect();
         for lt in &self.live_tasks {
             if !driver_slots.contains(&lt.slot) {

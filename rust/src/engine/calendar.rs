@@ -57,8 +57,7 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-/// Due-time comparison slack, matching the engine loop's epsilon.
-const EPS: f64 = 1e-12;
+use super::EPS;
 
 /// Which event-loop path computes due drivers and the wake-up horizon.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

@@ -53,11 +53,11 @@
 //! code.
 
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::calendar::{Calendar, Lane, WakePolicy};
 use super::driver::{EngineEvent, Submission, WorkflowDriver};
-use super::{EngineConfig, ExecutionMode, RunReport};
+use super::{EngineConfig, ExecutionMode, RunReport, EPS};
 use crate::checkpoint::{
     DriverEntry, FinishedMember, LiveTask, PendingMember, RunningEntry, SimSnapshot,
 };
@@ -68,6 +68,7 @@ use crate::metrics::CapacityTimeline;
 use crate::pilot::{Agent, AutoscalePolicy, ResizeEvent, ResourcePlan, RunningMeta, Scheduler};
 use crate::resources::{Allocator, ClusterSpec, NodeSpec, ResourceRequest};
 use crate::task::{TaskKind, TaskSpec};
+use crate::util::bench::Stopwatch;
 
 /// How a (possibly checkpointed) coordinator run ended.
 #[derive(Debug)]
@@ -657,7 +658,7 @@ impl EngineLoop {
             }
         }
         let pending: Vec<PendingMember> = self.pending.into_iter().collect();
-        let free: std::collections::HashSet<usize> =
+        let free: std::collections::BTreeSet<usize> =
             self.free_uids.iter().copied().collect();
         let mut live_tasks = Vec::new();
         for uid in 0..self.specs.len() {
@@ -735,7 +736,7 @@ impl EngineLoop {
             // replays the same iteration the uninterrupted run would
             // have executed next.
             if let Some(t_ck) = checkpoint_at {
-                if now + 1e-12 >= t_ck {
+                if now + EPS >= t_ck {
                     return Ok(RunOutcome::Checkpointed(Box::new(
                         self.into_snapshot(now),
                     )));
@@ -752,7 +753,7 @@ impl EngineLoop {
             // re-arms the scheduler.
             let mut resized = false;
             while self.next_resize < self.resize_events.len()
-                && self.resize_events[self.next_resize].at <= now + 1e-12
+                && self.resize_events[self.next_resize].at <= now + EPS
             {
                 let ev = self.resize_events[self.next_resize];
                 self.next_resize += 1;
@@ -772,7 +773,7 @@ impl EngineLoop {
             }
             // Clone the policy only on iterations where a check is
             // actually due (this is the event loop's hot path).
-            if self.next_check.is_some_and(|t| t <= now + 1e-12) {
+            if self.next_check.is_some_and(|t| t <= now + EPS) {
                 if let (Some(p), Some(t)) = (self.autoscale.clone(), self.next_check) {
                     // One evaluation per wakeup; the next check lands on
                     // the first interval multiple strictly after `now`.
@@ -805,7 +806,7 @@ impl EngineLoop {
             while self
                 .pending
                 .front()
-                .is_some_and(|p| p.arrival <= now + 1e-12)
+                .is_some_and(|p| p.arrival <= now + EPS)
             {
                 let p = self.pending.pop_front().expect("peeked pending arrival");
                 // Validated at registration; compile only.
@@ -892,7 +893,7 @@ impl EngineLoop {
 
             // 3. Schedule everything that fits.
             let placed = if self.sched_dirty {
-                let t0 = Instant::now();
+                let t0 = Stopwatch::start();
                 let placed = self.agent.schedule(now);
                 self.sched_wall += t0.elapsed();
                 self.sched_rounds += 1;
@@ -999,7 +1000,7 @@ impl EngineLoop {
                     // activation; wake early if a completion lands.
                     None => {
                         if next_deferred.is_finite()
-                            && next_deferred > now + 1e-12
+                            && next_deferred > now + EPS
                             && !executor.wait_until(next_deferred)
                         {
                             continue; // deadline hit; release at loop top

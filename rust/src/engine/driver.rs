@@ -29,7 +29,7 @@
 //! statically merged-DAG campaign *exactly* (see `tests/coordinator.rs`).
 
 use super::plan::{compile, ExecutionMode, JobSet};
-use super::{EngineConfig, RunReport};
+use super::{EngineConfig, RunReport, EPS};
 use crate::entk::Workflow;
 use crate::error::{Error, Result};
 use crate::metrics::{CapacityTimeline, TaskRecord};
@@ -302,13 +302,13 @@ impl WorkflowDriver {
     fn release_due(&mut self, now: f64, out: &mut Vec<Submission>) {
         // Fast path: the legacy full-scan loop clocks every driver on
         // every iteration; skip the sort when nothing is due.
-        if self.deferred.iter().all(|d| d.0 > now + 1e-12) {
+        if self.deferred.iter().all(|d| d.0 > now + EPS) {
             return;
         }
         self.deferred
             .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let mut k = 0;
-        while k < self.deferred.len() && self.deferred[k].0 <= now + 1e-12 {
+        while k < self.deferred.len() && self.deferred[k].0 <= now + EPS {
             k += 1;
         }
         // Activate by index (the tuples are Copy) so the due prefix

@@ -44,6 +44,18 @@ mod coordinator;
 mod driver;
 mod plan;
 
+/// Clock-comparison slack shared by every due-time test in the stack:
+/// the event loop's arrival/resize/autoscale/checkpoint gates, driver
+/// activation release, the event calendar's due-wake test, executor
+/// deadline waits and the simulator's fast-forward assertion all
+/// compare the clock through this single epsilon. One constant means
+/// one rounding contract — a driver deemed due by the calendar is also
+/// due by the loop, bit-for-bit, which the checkpoint/resume and
+/// calendar-vs-scan equivalence tests rely on. `asyncflow lint`
+/// (DET001) rejects raw `1e-12` literals anywhere else in the
+/// clock-handling modules.
+pub const EPS: f64 = 1e-12;
+
 pub use calendar::{Calendar, Lane, WakePolicy};
 pub use coordinator::{Coordinator, RunOutcome};
 pub use driver::{DriverState, EngineEvent, Submission, WorkflowDriver};

@@ -90,7 +90,7 @@ pub trait Executor {
     /// drain must not be starved until the deadline.
     fn wait_until(&mut self, t: f64) -> bool {
         self.advance_to(t);
-        if self.now() + 1e-12 < t {
+        if self.now() + crate::engine::EPS < t {
             std::thread::sleep(Duration::from_millis(1));
             return true;
         }

@@ -2,7 +2,7 @@
 //! (or spinning) for TX × scale wall-clock seconds — the moral
 //! equivalent of the paper's `stress` synthetic executable.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{BTreeSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
 
@@ -34,7 +34,7 @@ pub struct StressExecutor {
     /// Injected failures: 0-based *launch ordinals* that should report
     /// failure (tests). Keyed on launch order, not uid: the engine
     /// recycles global uids, so a uid no longer names one task.
-    fail_launches: HashSet<usize>,
+    fail_launches: BTreeSet<usize>,
     /// Tasks launched so far (the next launch's ordinal).
     launches: usize,
 }
@@ -50,7 +50,7 @@ impl StressExecutor {
             rx_chan,
             in_flight: 0,
             pending: VecDeque::new(),
-            fail_launches: HashSet::new(),
+            fail_launches: BTreeSet::new(),
             launches: 0,
         }
     }

@@ -1,0 +1,223 @@
+//! Lint configuration: rule scopes, allowlists, watched snapshot
+//! structs, and panic budgets.
+//!
+//! Defaults encode this repo's determinism contract; a `lint.conf`
+//! file (plain `key = value` lines) overrides individual keys so the
+//! fixture harness and future modules can re-scope rules without
+//! recompiling. Unknown keys are rejected — a typo in a lint config
+//! must not silently disable a rule.
+
+use crate::error::{Error, Result};
+
+/// Parsed lint configuration. See [`LintConfig::default`] for the
+/// repo contract and [`LintConfig::apply`] for the file syntax.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// DET001: module prefixes in which raw clock-epsilon literals are
+    /// forbidden.
+    pub det001_scope: Vec<String>,
+    /// DET001: path suffixes exempt from the rule — the single file
+    /// that *defines* the exported epsilon constant.
+    pub det001_allow_files: Vec<String>,
+    /// DET002: module prefixes in which `HashMap`/`HashSet` are
+    /// forbidden (iteration order feeds replay state).
+    pub det002_scope: Vec<String>,
+    /// DET003: module prefixes allowed to touch the wall clock.
+    pub det003_allow: Vec<String>,
+    /// SER001: type names exempt from the paired-impl requirement.
+    pub ser001_allow: Vec<String>,
+    /// SER002: path suffix of the file holding `SNAPSHOT_VERSION` and
+    /// the recorded field-list fingerprint. Empty disables the rule.
+    pub ser002_file: String,
+    /// SER002: `(path suffix, struct name)` pairs whose field lists
+    /// feed the fingerprint.
+    pub ser002_watch: Vec<(String, String)>,
+    /// PANIC001: `(module prefix, allowed count)` ratchet budgets for
+    /// non-test `unwrap()`/`expect()` calls.
+    pub panic_budgets: Vec<(String, usize)>,
+}
+
+impl Default for LintConfig {
+    /// The asyncflow determinism contract, as enforced on `rust/src`.
+    fn default() -> LintConfig {
+        fn strs(xs: &[&str]) -> Vec<String> {
+            xs.iter().map(|s| s.to_string()).collect()
+        }
+        LintConfig {
+            det001_scope: strs(&["engine", "exec", "sim", "sched", "checkpoint"]),
+            det001_allow_files: strs(&["engine/mod.rs"]),
+            det002_scope: strs(&["engine", "checkpoint", "sched", "metrics", "exec", "sim"]),
+            det003_allow: strs(&["util::bench", "exec::stress", "ddmd::mlexec"]),
+            ser001_allow: Vec::new(),
+            ser002_file: "checkpoint/snapshot.rs".to_string(),
+            ser002_watch: vec![
+                ("checkpoint/snapshot.rs".to_string(), "PendingMember".to_string()),
+                ("checkpoint/snapshot.rs".to_string(), "DriverEntry".to_string()),
+                ("checkpoint/snapshot.rs".to_string(), "FinishedMember".to_string()),
+                ("checkpoint/snapshot.rs".to_string(), "LiveTask".to_string()),
+                ("checkpoint/snapshot.rs".to_string(), "RunningEntry".to_string()),
+                ("checkpoint/snapshot.rs".to_string(), "SimSnapshot".to_string()),
+                ("engine/driver.rs".to_string(), "DriverState".to_string()),
+            ],
+            panic_budgets: Vec::new(),
+        }
+    }
+}
+
+impl LintConfig {
+    /// Default contract with the overrides from a config file applied.
+    pub fn load(path: &std::path::Path) -> Result<LintConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("lint config {}: {e}", path.display())))?;
+        let mut cfg = LintConfig::default();
+        cfg.apply(&text)?;
+        Ok(cfg)
+    }
+
+    /// Apply `key = value` overrides. Syntax:
+    ///
+    /// ```text
+    /// # comment
+    /// det001.scope       = engine, exec, sim, sched, checkpoint
+    /// det001.allow_files = engine/mod.rs
+    /// det002.scope       = engine, checkpoint, sched, metrics
+    /// det003.allow       = util::bench, exec::stress
+    /// ser001.allow       = ScratchOnly
+    /// ser002.file        = checkpoint/snapshot.rs
+    /// ser002.watch       = checkpoint/snapshot.rs#SimSnapshot, engine/driver.rs#DriverState
+    /// panic.budget       = engine:4, checkpoint:2
+    /// ```
+    ///
+    /// Each key *replaces* its default list entirely; an empty value
+    /// clears it (e.g. `ser002.file =` disables SER002).
+    pub fn apply(&mut self, text: &str) -> Result<()> {
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("lint config line {}: expected key = value", lineno + 1))
+            })?;
+            let key = key.trim();
+            let items: Vec<String> = value
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            match key {
+                "det001.scope" => self.det001_scope = items,
+                "det001.allow_files" => self.det001_allow_files = items,
+                "det002.scope" => self.det002_scope = items,
+                "det003.allow" => self.det003_allow = items,
+                "ser001.allow" => self.ser001_allow = items,
+                "ser002.file" => {
+                    self.ser002_file = items.first().cloned().unwrap_or_default();
+                }
+                "ser002.watch" => {
+                    let mut watch = Vec::new();
+                    for it in &items {
+                        let (file, name) = it.split_once('#').ok_or_else(|| {
+                            Error::Config(format!(
+                                "lint config line {}: ser002.watch entry '{it}' \
+                                 must be file#Struct",
+                                lineno + 1
+                            ))
+                        })?;
+                        watch.push((file.trim().to_string(), name.trim().to_string()));
+                    }
+                    self.ser002_watch = watch;
+                }
+                "panic.budget" => {
+                    let mut budgets = Vec::new();
+                    for it in &items {
+                        let (module, n) = it.split_once(':').ok_or_else(|| {
+                            Error::Config(format!(
+                                "lint config line {}: panic.budget entry '{it}' \
+                                 must be module:count",
+                                lineno + 1
+                            ))
+                        })?;
+                        let n: usize = n.trim().parse().map_err(|_| {
+                            Error::Config(format!(
+                                "lint config line {}: bad budget count in '{it}'",
+                                lineno + 1
+                            ))
+                        })?;
+                        budgets.push((module.trim().to_string(), n));
+                    }
+                    self.panic_budgets = budgets;
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "lint config line {}: unknown key '{other}'",
+                        lineno + 1
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether `module` is `prefix` or a descendant (`prefix::…`).
+    pub fn module_in(scopes: &[String], module: &str) -> bool {
+        scopes.iter().any(|s| {
+            module == s || (module.len() > s.len() && module.starts_with(s) && module.as_bytes()[s.len()] == b':')
+        })
+    }
+
+    /// Whether `path` ends with one of the `/`-separated suffixes in
+    /// `entries` (on a component boundary).
+    pub fn path_matches(entries: &[String], path: &str) -> bool {
+        let norm = path.replace('\\', "/");
+        entries.iter().any(|e| {
+            norm == *e
+                || norm
+                    .strip_suffix(e.as_str())
+                    .is_some_and(|head| head.ends_with('/'))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_encode_the_contract() {
+        let c = LintConfig::default();
+        assert!(LintConfig::module_in(&c.det001_scope, "engine::coordinator"));
+        assert!(LintConfig::module_in(&c.det001_scope, "engine"));
+        assert!(!LintConfig::module_in(&c.det001_scope, "util::stats"));
+        // Prefix match is per-component: `engine2` is not `engine`.
+        assert!(!LintConfig::module_in(&c.det001_scope, "engine2"));
+        assert!(LintConfig::path_matches(&c.det001_allow_files, "src/engine/mod.rs"));
+        assert!(!LintConfig::path_matches(&c.det001_allow_files, "src/fengine/mod.rs"));
+    }
+
+    #[test]
+    fn apply_overrides_and_clears() {
+        let mut c = LintConfig::default();
+        c.apply(
+            "# comment\n\
+             det003.allow = util::bench\n\
+             ser002.file =\n\
+             panic.budget = engine:3, sched:0\n",
+        )
+        .unwrap();
+        assert_eq!(c.det003_allow, vec!["util::bench".to_string()]);
+        assert!(c.ser002_file.is_empty());
+        assert_eq!(c.panic_budgets, vec![("engine".to_string(), 3), ("sched".to_string(), 0)]);
+        // Untouched keys keep their defaults.
+        assert!(!c.det001_scope.is_empty());
+    }
+
+    #[test]
+    fn apply_rejects_unknown_keys_and_bad_entries() {
+        let mut c = LintConfig::default();
+        assert!(c.apply("nope.key = 1\n").is_err());
+        assert!(c.apply("panic.budget = engine\n").is_err());
+        assert!(c.apply("ser002.watch = missing-hash\n").is_err());
+        assert!(c.apply("just a line\n").is_err());
+    }
+}

@@ -1,0 +1,680 @@
+//! Comment- and string-aware Rust tokenizer for `asyncflow lint`.
+//!
+//! A real parse is unnecessary for the determinism contract: every rule
+//! keys off token *streams* (identifiers, literals, punctuation with
+//! line/column spans), so the lexer only has to get the hard lexical
+//! cases right — nested block comments, string/char/raw-string
+//! literals, lifetimes vs char literals, float exponents — and never
+//! report a match from inside a comment or a string.
+//!
+//! Beyond tokens, lexing extracts the two structural facts rules need:
+//!
+//! - **suppressions** — `// lint:allow(RULE_ID): reason` comments,
+//!   bound to the code line they cover (their own line for trailing
+//!   comments, the next code line otherwise);
+//! - **test regions** — the line spans of `#[cfg(test)] mod … { … }`
+//!   items, so rules can exempt test code (an `assert!` tolerance of
+//!   `1e-12` is not a clock epsilon).
+
+/// Lexical class of one token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`HashMap`, `impl`, `unwrap`).
+    Ident,
+    /// Numeric literal, including any type suffix (`1e-12`, `0xff`,
+    /// `10f64`).
+    Num,
+    /// String literal of any flavor (`"…"`, `r#"…"#`, `b"…"`).
+    Str,
+    /// Char or byte-char literal (`'a'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Single punctuation character.
+    Punct,
+}
+
+/// One source token with its 1-based position.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// An inline suppression: `// lint:allow(RULE_ID): reason`.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    /// The rule id inside the parentheses, verbatim.
+    pub rule: String,
+    /// The mandatory justification after the closing `):`. Empty when
+    /// the author omitted it — which is itself a finding (LINT001).
+    pub reason: String,
+    /// Line the comment sits on.
+    pub line: u32,
+    /// The code line this suppression covers: its own line when the
+    /// comment trails code, otherwise the next line holding a token.
+    /// `None` when nothing follows (dangling suppression).
+    pub target: Option<u32>,
+}
+
+/// A lexed source file plus the derived structural facts.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path as given to the linter (used in findings).
+    pub path: String,
+    /// Module path relative to the crate root, e.g.
+    /// `engine::coordinator` (see [`module_of`](crate::lint::module_of)).
+    pub module: String,
+    pub tokens: Vec<Tok>,
+    pub suppressions: Vec<Suppression>,
+    /// Line spans (inclusive) of `#[cfg(test)] mod … { … }` items.
+    test_regions: Vec<(u32, u32)>,
+}
+
+impl SourceFile {
+    /// Tokenize `text`, extracting suppressions and test regions.
+    pub fn lex(path: impl Into<String>, module: impl Into<String>, text: &str) -> SourceFile {
+        let mut cur = Cur { chars: text.chars().collect(), i: 0, line: 1, col: 1 };
+        let mut tokens: Vec<Tok> = Vec::new();
+        let mut suppressions: Vec<Suppression> = Vec::new();
+
+        while let Some(c) = cur.peek() {
+            let (tline, tcol) = (cur.line, cur.col);
+            if c.is_whitespace() {
+                cur.bump();
+                continue;
+            }
+            // Line comment (also covers `///` and `//!` doc comments).
+            if c == '/' && cur.peek_at(1) == Some('/') {
+                let mut body = String::new();
+                while let Some(ch) = cur.peek() {
+                    if ch == '\n' {
+                        break;
+                    }
+                    body.push(ch);
+                    cur.bump();
+                }
+                // Doc comments (`///`, `//!`) are documentation — text
+                // *about* the suppression syntax must not act as a
+                // suppression. Only plain `//` comments count.
+                let doc = body.starts_with("///") || body.starts_with("//!");
+                if !doc {
+                    if let Some(s) = parse_suppression(&body, tline) {
+                        suppressions.push(s);
+                    }
+                }
+                continue;
+            }
+            // Block comment, nested.
+            if c == '/' && cur.peek_at(1) == Some('*') {
+                cur.bump();
+                cur.bump();
+                let mut depth = 1usize;
+                while depth > 0 {
+                    match (cur.peek(), cur.peek_at(1)) {
+                        (Some('*'), Some('/')) => {
+                            cur.bump();
+                            cur.bump();
+                            depth -= 1;
+                        }
+                        (Some('/'), Some('*')) => {
+                            cur.bump();
+                            cur.bump();
+                            depth += 1;
+                        }
+                        (Some(_), _) => {
+                            cur.bump();
+                        }
+                        (None, _) => break,
+                    }
+                }
+                continue;
+            }
+            // Plain string literal.
+            if c == '"' {
+                let text = lex_plain_string(&mut cur);
+                tokens.push(Tok { kind: TokKind::Str, text, line: tline, col: tcol });
+                continue;
+            }
+            // Raw strings, byte strings, raw identifiers: r"…", r#"…"#,
+            // b"…", b'…', br#"…"#, r#ident.
+            if c == 'r' || c == 'b' {
+                if let Some(tok) = lex_r_or_b(&mut cur, tline, tcol) {
+                    tokens.push(tok);
+                    continue;
+                }
+                // Fall through: ordinary identifier starting with r/b.
+            }
+            // Lifetime or char literal.
+            if c == '\'' {
+                tokens.push(lex_quote(&mut cur, tline, tcol));
+                continue;
+            }
+            // Number.
+            if c.is_ascii_digit() {
+                let text = lex_number(&mut cur);
+                tokens.push(Tok { kind: TokKind::Num, text, line: tline, col: tcol });
+                continue;
+            }
+            // Identifier / keyword.
+            if c == '_' || c.is_alphabetic() {
+                let text = lex_ident(&mut cur);
+                tokens.push(Tok { kind: TokKind::Ident, text, line: tline, col: tcol });
+                continue;
+            }
+            // Single punctuation character.
+            cur.bump();
+            tokens.push(Tok {
+                kind: TokKind::Punct,
+                text: c.to_string(),
+                line: tline,
+                col: tcol,
+            });
+        }
+
+        // Bind each suppression to the code line it covers.
+        for s in &mut suppressions {
+            let trailing = tokens.iter().any(|t| t.line == s.line);
+            s.target = if trailing {
+                Some(s.line)
+            } else {
+                tokens.iter().map(|t| t.line).find(|&l| l > s.line)
+            };
+        }
+
+        let test_regions = find_test_regions(&tokens);
+        SourceFile {
+            path: path.into(),
+            module: module.into(),
+            tokens,
+            suppressions,
+            test_regions,
+        }
+    }
+
+    /// Whether `line` falls inside a `#[cfg(test)] mod … { … }` item.
+    pub fn in_test_code(&self, line: u32) -> bool {
+        self.test_regions
+            .iter()
+            .any(|&(start, end)| start <= line && line <= end)
+    }
+}
+
+/// Character cursor tracking 1-based line/column.
+struct Cur {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cur {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.i).copied()
+    }
+
+    fn peek_at(&self, off: usize) -> Option<char> {
+        self.chars.get(self.i + off).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+}
+
+/// `"…"` with backslash escapes; the opening quote is at the cursor.
+fn lex_plain_string(cur: &mut Cur) -> String {
+    let mut out = String::new();
+    if let Some(q) = cur.bump() {
+        out.push(q);
+    }
+    while let Some(ch) = cur.bump() {
+        out.push(ch);
+        if ch == '\\' {
+            if let Some(e) = cur.bump() {
+                out.push(e);
+            }
+            continue;
+        }
+        if ch == '"' {
+            break;
+        }
+    }
+    out
+}
+
+/// Literals and raw identifiers introduced by `r` or `b`. Returns
+/// `None` when the cursor is actually at an ordinary identifier.
+fn lex_r_or_b(cur: &mut Cur, line: u32, col: u32) -> Option<Tok> {
+    let c = cur.peek()?;
+    // Byte char: b'…'
+    if c == 'b' && cur.peek_at(1) == Some('\'') {
+        let mut text = String::new();
+        if let Some(b) = cur.bump() {
+            text.push(b);
+        }
+        let t = lex_quote(cur, line, col);
+        text.push_str(&t.text);
+        return Some(Tok { kind: TokKind::Char, text, line, col });
+    }
+    // Byte string: b"…"
+    if c == 'b' && cur.peek_at(1) == Some('"') {
+        let mut text = String::new();
+        if let Some(b) = cur.bump() {
+            text.push(b);
+        }
+        text.push_str(&lex_plain_string(cur));
+        return Some(Tok { kind: TokKind::Str, text, line, col });
+    }
+    // Raw (byte) string: r"…", r#"…"#, br#"…"#, rb is not Rust.
+    let raw_start = match c {
+        'r' => 1,
+        'b' if cur.peek_at(1) == Some('r') => 2,
+        _ => return None,
+    };
+    let mut hashes = 0usize;
+    while cur.peek_at(raw_start + hashes) == Some('#') {
+        hashes += 1;
+    }
+    if cur.peek_at(raw_start + hashes) == Some('"') {
+        let mut text = String::new();
+        for _ in 0..raw_start + hashes + 1 {
+            if let Some(ch) = cur.bump() {
+                text.push(ch);
+            }
+        }
+        // Scan for `"` followed by `hashes` hash marks.
+        loop {
+            match cur.bump() {
+                None => break,
+                Some('"') => {
+                    text.push('"');
+                    let mut n = 0usize;
+                    while n < hashes && cur.peek() == Some('#') {
+                        cur.bump();
+                        text.push('#');
+                        n += 1;
+                    }
+                    if n == hashes {
+                        break;
+                    }
+                }
+                Some(ch) => text.push(ch),
+            }
+        }
+        return Some(Tok { kind: TokKind::Str, text, line, col });
+    }
+    // Raw identifier: r#ident.
+    if c == 'r' && cur.peek_at(1) == Some('#') {
+        let after = cur.peek_at(2);
+        if after.is_some_and(|a| a == '_' || a.is_alphabetic()) {
+            let mut text = String::new();
+            cur.bump();
+            cur.bump();
+            text.push_str("r#");
+            text.push_str(&lex_ident(cur));
+            return Some(Tok { kind: TokKind::Ident, text, line, col });
+        }
+    }
+    None
+}
+
+/// `'` at the cursor: lifetime (`'a`) or char literal (`'a'`, `'\n'`).
+fn lex_quote(cur: &mut Cur, line: u32, col: u32) -> Tok {
+    let next = cur.peek_at(1);
+    let after = cur.peek_at(2);
+    let is_lifetime = match next {
+        Some(a) if a == '_' || a.is_alphabetic() => after != Some('\''),
+        _ => false,
+    };
+    let mut text = String::from("'");
+    cur.bump();
+    if is_lifetime {
+        while let Some(a) = cur.peek() {
+            if a == '_' || a.is_alphanumeric() {
+                text.push(a);
+                cur.bump();
+            } else {
+                break;
+            }
+        }
+        return Tok { kind: TokKind::Lifetime, text, line, col };
+    }
+    while let Some(a) = cur.bump() {
+        text.push(a);
+        if a == '\\' {
+            if let Some(e) = cur.bump() {
+                text.push(e);
+            }
+            continue;
+        }
+        if a == '\'' {
+            break;
+        }
+    }
+    Tok { kind: TokKind::Char, text, line, col }
+}
+
+/// Numeric literal starting at the cursor (first char is a digit).
+fn lex_number(cur: &mut Cur) -> String {
+    let mut text = String::new();
+    if let Some(d) = cur.bump() {
+        text.push(d);
+    }
+    // Radix literal: consume the alphanumeric tail wholesale.
+    if text == "0" && matches!(cur.peek(), Some('x' | 'X' | 'o' | 'b')) {
+        while let Some(a) = cur.peek() {
+            if a.is_ascii_alphanumeric() || a == '_' {
+                text.push(a);
+                cur.bump();
+            } else {
+                break;
+            }
+        }
+        return text;
+    }
+    // Integer part.
+    while let Some(a) = cur.peek() {
+        if a.is_ascii_digit() || a == '_' {
+            text.push(a);
+            cur.bump();
+        } else {
+            break;
+        }
+    }
+    // Fraction: `.` followed by a digit (never `..` or a method call).
+    if cur.peek() == Some('.') && cur.peek_at(1).is_some_and(|d| d.is_ascii_digit()) {
+        text.push('.');
+        cur.bump();
+        while let Some(a) = cur.peek() {
+            if a.is_ascii_digit() || a == '_' {
+                text.push(a);
+                cur.bump();
+            } else {
+                break;
+            }
+        }
+    }
+    // Exponent: e/E, optional sign, at least one digit.
+    if matches!(cur.peek(), Some('e' | 'E')) {
+        let exp_ok = match cur.peek_at(1) {
+            Some('+') | Some('-') => cur.peek_at(2).is_some_and(|d| d.is_ascii_digit()),
+            Some(d) => d.is_ascii_digit(),
+            None => false,
+        };
+        if exp_ok {
+            if let Some(e) = cur.bump() {
+                text.push(e);
+            }
+            if matches!(cur.peek(), Some('+' | '-')) {
+                if let Some(s) = cur.bump() {
+                    text.push(s);
+                }
+            }
+            while let Some(a) = cur.peek() {
+                if a.is_ascii_digit() || a == '_' {
+                    text.push(a);
+                    cur.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+    // Type suffix (`f64`, `u32`, `usize` …).
+    while let Some(a) = cur.peek() {
+        if a.is_ascii_alphanumeric() || a == '_' {
+            text.push(a);
+            cur.bump();
+        } else {
+            break;
+        }
+    }
+    text
+}
+
+fn lex_ident(cur: &mut Cur) -> String {
+    let mut text = String::new();
+    while let Some(a) = cur.peek() {
+        if a == '_' || a.is_alphanumeric() {
+            text.push(a);
+            cur.bump();
+        } else {
+            break;
+        }
+    }
+    text
+}
+
+/// Parse `lint:allow(RULE_ID): reason` out of a line comment body.
+fn parse_suppression(comment: &str, line: u32) -> Option<Suppression> {
+    let idx = comment.find("lint:allow(")?;
+    let rest = &comment[idx + "lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let after = rest[close + 1..].trim_start();
+    let reason = match after.strip_prefix(':') {
+        Some(r) => r.trim().to_string(),
+        None => String::new(),
+    };
+    Some(Suppression { rule, reason, line, target: None })
+}
+
+fn is_punct(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i)
+        .is_some_and(|t| t.kind == TokKind::Punct && t.text == text)
+}
+
+fn is_ident(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i)
+        .is_some_and(|t| t.kind == TokKind::Ident && t.text == text)
+}
+
+/// Line spans of `#[cfg(test)] mod … { … }` items.
+fn find_test_regions(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(is_punct(toks, i, "#")
+            && is_punct(toks, i + 1, "[")
+            && is_ident(toks, i + 2, "cfg")
+            && is_punct(toks, i + 3, "(")
+            && is_ident(toks, i + 4, "test")
+            && is_punct(toks, i + 5, ")")
+            && is_punct(toks, i + 6, "]"))
+        {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        let mut j = i + 7;
+        // Skip any further attribute groups before the item.
+        while is_punct(toks, j, "#") && is_punct(toks, j + 1, "[") {
+            let mut depth = 0usize;
+            j += 1;
+            while j < toks.len() {
+                if is_punct(toks, j, "[") {
+                    depth += 1;
+                } else if is_punct(toks, j, "]") {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        if !is_ident(toks, j, "mod") {
+            i += 1;
+            continue;
+        }
+        // Find the opening brace of the mod body (a `mod x;` has none).
+        let mut k = j;
+        while k < toks.len() && !is_punct(toks, k, "{") && !is_punct(toks, k, ";") {
+            k += 1;
+        }
+        if !is_punct(toks, k, "{") {
+            i = k;
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut end_line = u32::MAX; // unterminated: rest of file
+        while k < toks.len() {
+            if is_punct(toks, k, "{") {
+                depth += 1;
+            } else if is_punct(toks, k, "}") {
+                depth -= 1;
+                if depth == 0 {
+                    end_line = toks[k].line;
+                    break;
+                }
+            }
+            k += 1;
+        }
+        out.push((start_line, end_line));
+        i = k + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lex(src: &str) -> SourceFile {
+        SourceFile::lex("test.rs", "test", src)
+    }
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .map(|t| (t.kind, t.text))
+            .collect()
+    }
+
+    #[test]
+    fn idents_numbers_puncts() {
+        let ts = kinds("let x = 1e-12;");
+        assert_eq!(
+            ts,
+            vec![
+                (TokKind::Ident, "let".into()),
+                (TokKind::Ident, "x".into()),
+                (TokKind::Punct, "=".into()),
+                (TokKind::Num, "1e-12".into()),
+                (TokKind::Punct, ";".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn number_forms() {
+        let ts = kinds("0xff_u32 1_000 2.5 1.0e-12 7f64 1..3 4.max(5)");
+        let texts: Vec<&str> = ts.iter().map(|(_, s)| s.as_str()).collect();
+        assert!(texts.contains(&"0xff_u32"));
+        assert!(texts.contains(&"1_000"));
+        assert!(texts.contains(&"2.5"));
+        assert!(texts.contains(&"1.0e-12"));
+        assert!(texts.contains(&"7f64"));
+        // Ranges and method calls do not swallow the dot.
+        assert!(texts.contains(&"1") && texts.contains(&"3"));
+        assert!(texts.contains(&"4") && texts.contains(&"max"));
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let ts = kinds(r#"let s = "HashMap Instant::now 1e-12"; x"#);
+        assert!(ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .all(|(_, s)| s != "HashMap" && s != "Instant"));
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Str && s.contains("HashMap")));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let ts = kinds("r#\"a \" b\"# \"esc\\\"aped\" b\"bytes\" x");
+        let strs: Vec<&str> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Str)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(strs.len(), 3, "{strs:?}");
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Ident && s == "x"));
+    }
+
+    #[test]
+    fn comments_are_not_tokens() {
+        let ts = kinds("a // HashMap\n/* Instant /* nested */ */ b");
+        let idents: Vec<&str> = ts.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(idents, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let ts = kinds("&'a str 'x' '\\n' b'z' 'static");
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Lifetime && s == "'a"));
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Char && s == "'x'"));
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Char && s == "'\\n'"));
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Char && s == "b'z'"));
+        assert!(ts
+            .iter()
+            .any(|(k, s)| *k == TokKind::Lifetime && s == "'static"));
+    }
+
+    #[test]
+    fn suppression_binds_to_next_code_line() {
+        let f = lex("// lint:allow(DET001): epsilon docs\nlet x = 1;\n");
+        assert_eq!(f.suppressions.len(), 1);
+        let s = &f.suppressions[0];
+        assert_eq!(s.rule, "DET001");
+        assert_eq!(s.reason, "epsilon docs");
+        assert_eq!(s.target, Some(2));
+    }
+
+    #[test]
+    fn trailing_suppression_binds_to_its_own_line() {
+        let f = lex("let x = 1; // lint:allow(DET002): audited\n");
+        assert_eq!(f.suppressions[0].target, Some(1));
+    }
+
+    #[test]
+    fn doc_comments_never_suppress() {
+        let f = lex("/// Use `lint:allow(DET001): reason` to suppress.\n//! lint:allow(DET002): nope\nfn f() {}\n");
+        assert!(f.suppressions.is_empty());
+    }
+
+    #[test]
+    fn suppression_without_reason_is_kept_but_empty() {
+        let f = lex("// lint:allow(DET003)\nfn f() {}\n");
+        assert_eq!(f.suppressions[0].reason, "");
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_mods() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let f = lex(src);
+        assert!(!f.in_test_code(1));
+        assert!(f.in_test_code(3));
+        assert!(f.in_test_code(4));
+        assert!(!f.in_test_code(6));
+    }
+
+    #[test]
+    fn cfg_test_on_non_mod_items_is_ignored() {
+        let f = lex("#[cfg(test)]\nuse std::fmt;\nfn x() {}\n");
+        assert!(!f.in_test_code(3));
+    }
+}

@@ -1,0 +1,415 @@
+//! `asyncflow lint` — a zero-dependency determinism-contract linter
+//! for this repo's own sources.
+//!
+//! The engine's headline guarantee is bit-for-bit replay: the same
+//! workload produces the same event trace, the same snapshots, the
+//! same metrics, on any host, any number of times. That guarantee is
+//! easy to break with one innocent-looking line — a stray `1e-12`, a
+//! `HashMap` iterated into a snapshot, an `Instant::now()` in the
+//! simulation path — and none of those break a unit test the day they
+//! land. This module encodes the contract as six mechanical rules
+//! (see [`rules`]) and runs them over the token stream of every
+//! source file, so violations fail CI instead of surfacing weeks
+//! later as an unreproducible trace divergence.
+//!
+//! Design choices:
+//!
+//! - **Token-level, not AST-level.** A hand-rolled lexer
+//!   ([`lexer::SourceFile`]) understands comments, strings, char
+//!   literals and `#[cfg(test)]` regions — enough to never report a
+//!   match inside a comment or test helper, without dragging in a
+//!   parser dependency (the crate builds with zero external deps).
+//! - **Suppressions carry evidence.** `// lint:allow(RULE): reason`
+//!   silences one finding on the line it covers; the reason is
+//!   mandatory (LINT001) and unused suppressions are themselves
+//!   findings (LINT002), so the suppression inventory stays an
+//!   auditable list of known, justified exceptions.
+//! - **Findings are data.** `--format ndjson` emits one JSON object
+//!   per finding for CI artifacts; the human format renders
+//!   `file:line:col`, the message, and a concrete fix suggestion.
+
+mod config;
+mod lexer;
+mod rules;
+
+pub use config::LintConfig;
+pub use lexer::{SourceFile, Suppression, Tok, TokKind};
+pub use rules::{all_rules, expected_fingerprint, fnv1a64, Rule};
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+
+/// Finding severity. `--deny` fails on *any* finding; severity only
+/// affects presentation and lets downstream tooling triage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One lint finding with a span and a concrete fix suggestion.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: String,
+    pub severity: Severity,
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+    pub suggestion: String,
+}
+
+impl Finding {
+    /// `file:line:col severity[RULE]: message` + an indented help line.
+    pub fn render_human(&self) -> String {
+        let mut s = format!(
+            "{}:{}:{} {}[{}]: {}",
+            self.file,
+            self.line,
+            self.col,
+            self.severity.label(),
+            self.rule,
+            self.message
+        );
+        if !self.suggestion.is_empty() {
+            s.push_str("\n    help: ");
+            s.push_str(&self.suggestion);
+        }
+        s
+    }
+
+    /// One NDJSON record (compact JSON, one line).
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("rule", Json::from(self.rule.clone())),
+            ("severity", Json::from(self.severity.label())),
+            ("file", Json::from(self.file.clone())),
+            ("line", Json::from(self.line as usize)),
+            ("col", Json::from(self.col as usize)),
+            ("message", Json::from(self.message.clone())),
+            ("suggestion", Json::from(self.suggestion.clone())),
+        ])
+    }
+}
+
+/// Shared rule context: accumulates findings and tracks which
+/// suppressions actually fired.
+pub struct Ctx {
+    findings: Vec<Finding>,
+    /// `(file path, suppression index)` pairs that suppressed (or
+    /// excluded from a count) at least one site.
+    used: BTreeSet<(String, usize)>,
+}
+
+impl Ctx {
+    fn new() -> Ctx {
+        Ctx { findings: Vec::new(), used: BTreeSet::new() }
+    }
+
+    /// Record a finding unless a valid suppression covers `line`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn emit(
+        &mut self,
+        file: &SourceFile,
+        rule: &str,
+        severity: Severity,
+        line: u32,
+        col: u32,
+        message: String,
+        suggestion: String,
+    ) {
+        if self.site_allowed(file, rule, line) {
+            return;
+        }
+        self.emit_unsuppressable(file, rule, severity, line, col, message, suggestion);
+    }
+
+    /// Record a finding that inline suppressions cannot silence
+    /// (aggregate findings like PANIC001, whose *sites* are the
+    /// suppressable unit).
+    #[allow(clippy::too_many_arguments)]
+    pub fn emit_unsuppressable(
+        &mut self,
+        file: &SourceFile,
+        rule: &str,
+        severity: Severity,
+        line: u32,
+        col: u32,
+        message: String,
+        suggestion: String,
+    ) {
+        self.findings.push(Finding {
+            rule: rule.to_string(),
+            severity,
+            file: file.path.clone(),
+            line,
+            col,
+            message,
+            suggestion,
+        });
+    }
+
+    /// Whether a valid (reason-carrying) suppression for `rule` covers
+    /// `line`; marks it used. Rules that count sites (PANIC001) call
+    /// this directly to exclude audited sites.
+    pub fn site_allowed(&mut self, file: &SourceFile, rule: &str, line: u32) -> bool {
+        for (i, s) in file.suppressions.iter().enumerate() {
+            if s.rule == rule && s.target == Some(line) && !s.reason.is_empty() {
+                self.used.insert((file.path.clone(), i));
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Crate-relative module path for a source file: components after the
+/// last `src` (or `lint_fixtures`, for the test corpus) marker, with
+/// `mod.rs`/`lib.rs`/`main.rs` collapsing into their parent.
+///
+/// `src/engine/coordinator.rs` → `engine::coordinator`;
+/// `src/engine/mod.rs` → `engine`; `src/lib.rs` → `` (crate root).
+pub fn module_of(path: &str) -> String {
+    let norm = path.replace('\\', "/");
+    let comps: Vec<&str> = norm.split('/').filter(|c| !c.is_empty()).collect();
+    let start = comps
+        .iter()
+        .rposition(|c| *c == "src" || *c == "lint_fixtures")
+        .map(|i| i + 1)
+        .unwrap_or(comps.len().saturating_sub(1));
+    let mut parts: Vec<&str> = comps[start..].to_vec();
+    if let Some(last) = parts.last_mut() {
+        *last = last.strip_suffix(".rs").unwrap_or(last);
+    }
+    if matches!(parts.last().copied(), Some("mod") | Some("lib") | Some("main")) {
+        parts.pop();
+    }
+    parts.join("::")
+}
+
+/// Run every rule over `files`, then audit the suppression inventory.
+/// Findings come back sorted by `(file, line, col, rule)`.
+pub fn lint_files(files: &[SourceFile], cfg: &LintConfig) -> Vec<Finding> {
+    let mut ctx = Ctx::new();
+    let rules = all_rules();
+    for rule in &rules {
+        for f in files {
+            rule.check_file(f, cfg, &mut ctx);
+        }
+        rule.finish(files, cfg, &mut ctx);
+    }
+    // Suppression hygiene: every `lint:allow` must name a real rule,
+    // carry a reason, attach to code, and actually fire.
+    for f in files {
+        for (i, s) in f.suppressions.iter().enumerate() {
+            let known = rules.iter().any(|r| r.id() == s.rule);
+            let (rule, severity, message, suggestion) = if s.reason.is_empty() {
+                (
+                    "LINT001",
+                    Severity::Error,
+                    format!(
+                        "suppression for {} has no reason: write \
+                         `lint:allow({}): <why this site is safe>`",
+                        s.rule, s.rule
+                    ),
+                    "every suppression must explain itself; the inventory of \
+                     exceptions is part of the determinism contract"
+                        .to_string(),
+                )
+            } else if !known {
+                (
+                    "LINT001",
+                    Severity::Error,
+                    format!("suppression names unknown rule `{}`", s.rule),
+                    "valid rule ids: DET001, DET002, DET003, SER001, SER002, PANIC001"
+                        .to_string(),
+                )
+            } else if s.target.is_none() {
+                (
+                    "LINT001",
+                    Severity::Error,
+                    format!("suppression for {} attaches to no code line", s.rule),
+                    "place it on, or directly above, the line it covers".to_string(),
+                )
+            } else if !ctx.used.contains(&(f.path.clone(), i)) {
+                (
+                    "LINT002",
+                    Severity::Warning,
+                    format!("unused suppression for {}: nothing fires here", s.rule),
+                    "delete it (stale suppressions hide future regressions)".to_string(),
+                )
+            } else {
+                continue;
+            };
+            ctx.findings.push(Finding {
+                rule: rule.to_string(),
+                severity,
+                file: f.path.clone(),
+                line: s.line,
+                col: 1,
+                message,
+                suggestion,
+            });
+        }
+    }
+    let mut out = ctx.findings;
+    out.sort_by(|a, b| {
+        (&a.file, a.line, a.col, &a.rule).cmp(&(&b.file, b.line, b.col, &b.rule))
+    });
+    out
+}
+
+/// Lex one file from disk (path recorded as given).
+pub fn lex_path(path: &Path) -> Result<SourceFile> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("lint: cannot read {}: {e}", path.display())))?;
+    let p = path.to_string_lossy().replace('\\', "/");
+    let module = module_of(&p);
+    Ok(SourceFile::lex(p, module, &text))
+}
+
+/// Lint files and/or directories (recursing into directories for
+/// `.rs` files, in sorted order so output is stable).
+pub fn lint_paths(paths: &[String], cfg: &LintConfig) -> Result<Vec<Finding>> {
+    let mut rs_files: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        let path = PathBuf::from(p);
+        if path.is_dir() {
+            collect_rs(&path, &mut rs_files)?;
+        } else {
+            rs_files.push(path);
+        }
+    }
+    rs_files.sort();
+    rs_files.dedup();
+    let mut files = Vec::with_capacity(rs_files.len());
+    for p in &rs_files {
+        files.push(lex_path(p)?);
+    }
+    Ok(lint_files(&files, cfg))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| Error::Config(format!("lint: cannot read dir {}: {e}", dir.display())))?;
+    for entry in entries {
+        let entry = entry.map_err(Error::Io)?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str, module: &str, cfg: &LintConfig) -> Vec<Finding> {
+        let f = SourceFile::lex(format!("src/{}.rs", module.replace("::", "/")), module, src);
+        lint_files(&[f], cfg)
+    }
+
+    #[test]
+    fn module_of_maps_paths() {
+        assert_eq!(module_of("rust/src/engine/coordinator.rs"), "engine::coordinator");
+        assert_eq!(module_of("src/engine/mod.rs"), "engine");
+        assert_eq!(module_of("src/lib.rs"), "");
+        assert_eq!(module_of("src/main.rs"), "");
+        assert_eq!(module_of("tests/lint_fixtures/engine/det001_bad.rs"), "engine::det001_bad");
+        assert_eq!(module_of("standalone.rs"), "standalone");
+    }
+
+    #[test]
+    fn det001_fires_and_suppression_silences() {
+        let cfg = LintConfig::default();
+        let bad = run("fn f(a: f64, b: f64) -> bool { a + 1e-12 > b }", "engine::x", &cfg);
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert_eq!(bad[0].rule, "DET001");
+
+        let ok = run(
+            "// lint:allow(DET001): doc example, not a comparison\n\
+             fn f(a: f64, b: f64) -> bool { a + 1e-12 > b }",
+            "engine::x",
+            &cfg,
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn suppression_without_reason_is_lint001_and_does_not_silence() {
+        let cfg = LintConfig::default();
+        let out = run(
+            "// lint:allow(DET001)\nfn f(a: f64) -> bool { a > 1e-12 }",
+            "engine::x",
+            &cfg,
+        );
+        let rules: Vec<&str> = out.iter().map(|f| f.rule.as_str()).collect();
+        assert!(rules.contains(&"DET001"), "{out:?}");
+        assert!(rules.contains(&"LINT001"), "{out:?}");
+    }
+
+    #[test]
+    fn unused_suppression_is_lint002() {
+        let cfg = LintConfig::default();
+        let out = run("// lint:allow(DET002): just in case\nfn f() {}", "engine::x", &cfg);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "LINT002");
+        assert_eq!(out[0].severity, Severity::Warning);
+    }
+
+    #[test]
+    fn unknown_rule_id_is_lint001() {
+        let cfg = LintConfig::default();
+        let out = run("// lint:allow(DET999): nope\nfn f() {}", "engine::x", &cfg);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "LINT001");
+    }
+
+    #[test]
+    fn findings_render_and_serialize() {
+        let f = Finding {
+            rule: "DET001".into(),
+            severity: Severity::Error,
+            file: "src/engine/x.rs".into(),
+            line: 3,
+            col: 7,
+            message: "raw epsilon".into(),
+            suggestion: "use EPS".into(),
+        };
+        assert_eq!(
+            f.render_human(),
+            "src/engine/x.rs:3:7 error[DET001]: raw epsilon\n    help: use EPS"
+        );
+        let j = f.to_json().to_string();
+        assert!(j.contains("\"rule\":\"DET001\""), "{j}");
+        assert!(j.contains("\"line\":3"), "{j}");
+        assert!(!j.contains('\n'), "NDJSON records must be single-line: {j}");
+    }
+
+    #[test]
+    fn out_of_scope_modules_are_untouched() {
+        let cfg = LintConfig::default();
+        let out = run(
+            "use std::collections::HashMap;\nfn f() -> f64 { 1e-12 }",
+            "util::stats",
+            &cfg,
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

@@ -1,0 +1,742 @@
+//! The six determinism-contract rules.
+//!
+//! | id       | guards against                                              |
+//! |----------|-------------------------------------------------------------|
+//! | DET001   | raw clock-epsilon literals drifting out of sync             |
+//! | DET002   | hash-order nondeterminism feeding replay state              |
+//! | DET003   | wall-clock reads outside the sanctioned timing modules      |
+//! | SER001   | one-way (`ToJson`-only / `FromJson`-only) snapshot types    |
+//! | SER002   | snapshot schema edits without a `SNAPSHOT_VERSION` bump     |
+//! | PANIC001 | the non-test `unwrap()`/`expect()` count creeping upward    |
+//!
+//! Per-file rules implement [`Rule::check_file`]; corpus rules
+//! (pairing, fingerprints, budgets) implement [`Rule::finish`] over
+//! the whole file set.
+
+use super::config::LintConfig;
+use super::lexer::{SourceFile, Tok, TokKind};
+use super::{Ctx, Severity};
+
+/// One lint rule. Stateless; all context flows through [`Ctx`].
+pub trait Rule {
+    /// Stable rule id (`DET001`, …) — what suppressions name.
+    fn id(&self) -> &'static str;
+    /// One-line description for `--explain`-style output and docs.
+    fn describe(&self) -> &'static str;
+    /// Per-file pass.
+    fn check_file(&self, _file: &SourceFile, _cfg: &LintConfig, _ctx: &mut Ctx) {}
+    /// Corpus pass, after every file has been lexed.
+    fn finish(&self, _files: &[SourceFile], _cfg: &LintConfig, _ctx: &mut Ctx) {}
+}
+
+/// Every rule, in the order findings are documented.
+pub fn all_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(Det001),
+        Box::new(Det002),
+        Box::new(Det003),
+        Box::new(Ser001),
+        Box::new(Ser002),
+        Box::new(Panic001),
+    ]
+}
+
+fn is_punct(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i)
+        .is_some_and(|t| t.kind == TokKind::Punct && t.text == text)
+}
+
+fn is_ident(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i)
+        .is_some_and(|t| t.kind == TokKind::Ident && t.text == text)
+}
+
+// ---------------------------------------------------------------- DET001
+
+/// The one admissible clock-epsilon value; must match
+/// [`crate::engine::EPS`]. Cross-checked by a unit test below so the
+/// rule and the constant cannot drift apart.
+const EPS_VALUE: f64 = 1e-12;
+
+pub struct Det001;
+
+impl Rule for Det001 {
+    fn id(&self) -> &'static str {
+        "DET001"
+    }
+
+    fn describe(&self) -> &'static str {
+        "raw clock-epsilon literal outside the exported engine::EPS constant"
+    }
+
+    fn check_file(&self, file: &SourceFile, cfg: &LintConfig, ctx: &mut Ctx) {
+        if !LintConfig::module_in(&cfg.det001_scope, &file.module)
+            || LintConfig::path_matches(&cfg.det001_allow_files, &file.path)
+        {
+            return;
+        }
+        for t in &file.tokens {
+            if t.kind != TokKind::Num || file.in_test_code(t.line) {
+                continue;
+            }
+            let cleaned: String = t
+                .text
+                .chars()
+                .filter(|c| *c != '_')
+                .collect::<String>()
+                .to_ascii_lowercase();
+            let cleaned = cleaned.trim_end_matches("f64").trim_end_matches("f32");
+            if cleaned.parse::<f64>().is_ok_and(|v| v == EPS_VALUE) {
+                ctx.emit(
+                    file,
+                    "DET001",
+                    Severity::Error,
+                    t.line,
+                    t.col,
+                    format!(
+                        "raw clock-epsilon literal `{}`: every due-time comparison \
+                         must share one rounding contract",
+                        t.text
+                    ),
+                    "use crate::engine::EPS instead of repeating the literal".to_string(),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- DET002
+
+pub struct Det002;
+
+impl Rule for Det002 {
+    fn id(&self) -> &'static str {
+        "DET002"
+    }
+
+    fn describe(&self) -> &'static str {
+        "hash-ordered collection in a replay-critical module"
+    }
+
+    fn check_file(&self, file: &SourceFile, cfg: &LintConfig, ctx: &mut Ctx) {
+        if !LintConfig::module_in(&cfg.det002_scope, &file.module) {
+            return;
+        }
+        for t in &file.tokens {
+            if t.kind == TokKind::Ident
+                && (t.text == "HashMap" || t.text == "HashSet")
+                && !file.in_test_code(t.line)
+            {
+                ctx.emit(
+                    file,
+                    "DET002",
+                    Severity::Error,
+                    t.line,
+                    t.col,
+                    format!(
+                        "`{}` in module `{}`: iteration order is randomized per \
+                         process and can leak into replay state or snapshots",
+                        t.text, file.module
+                    ),
+                    format!(
+                        "use BTree{} (ordered), or sort at the iteration boundary \
+                         and suppress with a reason",
+                        &t.text[4..]
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- DET003
+
+pub struct Det003;
+
+impl Rule for Det003 {
+    fn id(&self) -> &'static str {
+        "DET003"
+    }
+
+    fn describe(&self) -> &'static str {
+        "wall-clock read outside the sanctioned timing modules"
+    }
+
+    fn check_file(&self, file: &SourceFile, cfg: &LintConfig, ctx: &mut Ctx) {
+        if LintConfig::module_in(&cfg.det003_allow, &file.module) {
+            return;
+        }
+        for t in &file.tokens {
+            if t.kind == TokKind::Ident
+                && (t.text == "Instant" || t.text == "SystemTime")
+                && !file.in_test_code(t.line)
+            {
+                ctx.emit(
+                    file,
+                    "DET003",
+                    Severity::Error,
+                    t.line,
+                    t.col,
+                    format!(
+                        "wall-clock type `{}` in module `{}`: simulated runs must \
+                         be bit-identical across hosts and reruns",
+                        t.text, file.module
+                    ),
+                    "route timing through util::bench::Stopwatch, or add the module \
+                     to det003.allow if it legitimately owns wall-clock execution"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- SER001
+
+pub struct Ser001;
+
+/// `(type name, file index, line, col)` of one trait impl.
+type ImplSite = (String, usize, u32, u32);
+
+fn collect_impls(files: &[SourceFile], trait_name: &str) -> Vec<ImplSite> {
+    let mut out = Vec::new();
+    for (fi, file) in files.iter().enumerate() {
+        let toks = &file.tokens;
+        let mut i = 0usize;
+        while i < toks.len() {
+            if !is_ident(toks, i, "impl") || file.in_test_code(toks[i].line) {
+                i += 1;
+                continue;
+            }
+            let mut j = i + 1;
+            if is_punct(toks, j, "<") {
+                j = skip_angles(toks, j);
+            }
+            if !is_ident(toks, j, trait_name) || !is_ident(toks, j + 1, "for") {
+                i += 1;
+                continue;
+            }
+            // Type path after `for`: keep the last identifier of
+            // `crate::foo::Bar`, ignore generic arguments.
+            let mut k = j + 2;
+            let mut name: Option<(String, u32, u32)> = None;
+            while k < toks.len() {
+                if toks[k].kind == TokKind::Ident {
+                    name = Some((toks[k].text.clone(), toks[k].line, toks[k].col));
+                    k += 1;
+                    if is_punct(toks, k, ":") && is_punct(toks, k + 1, ":") {
+                        k += 2;
+                        continue;
+                    }
+                }
+                break;
+            }
+            if let Some((n, line, col)) = name {
+                out.push((n, fi, line, col));
+            }
+            i = k;
+        }
+    }
+    out
+}
+
+/// Skip a balanced `< … >` group; `i` points at the opening `<`.
+fn skip_angles(toks: &[Tok], i: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < toks.len() {
+        if is_punct(toks, j, "<") {
+            depth += 1;
+        } else if is_punct(toks, j, ">") {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+impl Rule for Ser001 {
+    fn id(&self) -> &'static str {
+        "SER001"
+    }
+
+    fn describe(&self) -> &'static str {
+        "ToJson without a paired FromJson (or vice versa)"
+    }
+
+    fn finish(&self, files: &[SourceFile], cfg: &LintConfig, ctx: &mut Ctx) {
+        let to = collect_impls(files, "ToJson");
+        let from = collect_impls(files, "FromJson");
+        let has_to: std::collections::BTreeSet<&str> =
+            to.iter().map(|(n, ..)| n.as_str()).collect();
+        let has_from: std::collections::BTreeSet<&str> =
+            from.iter().map(|(n, ..)| n.as_str()).collect();
+        let orphan = |sites: &[ImplSite],
+                          other: &std::collections::BTreeSet<&str>,
+                          present: &str,
+                          missing: &str,
+                          ctx: &mut Ctx| {
+            for (name, fi, line, col) in sites {
+                if other.contains(name.as_str())
+                    || cfg.ser001_allow.iter().any(|a| a == name)
+                {
+                    continue;
+                }
+                ctx.emit(
+                    &files[*fi],
+                    "SER001",
+                    Severity::Error,
+                    *line,
+                    *col,
+                    format!(
+                        "`{name}` implements {present} but not {missing}: \
+                         snapshots containing it cannot round-trip"
+                    ),
+                    format!(
+                        "add `impl {missing} for {name}`, or suppress with a reason \
+                         if one-way serialization is intended"
+                    ),
+                );
+            }
+        };
+        orphan(&to, &has_from, "ToJson", "FromJson", ctx);
+        orphan(&from, &has_to, "FromJson", "ToJson", ctx);
+    }
+}
+
+// ---------------------------------------------------------------- SER002
+
+pub struct Ser002;
+
+/// FNV-1a 64-bit over `bytes`. Chosen because it is trivial to
+/// re-implement anywhere (CI scripts, other languages) and stable
+/// forever — this hash is persisted in source as the schema
+/// fingerprint, so it must never change.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Extract `struct name { … }` field lists as `(field, type)` pairs,
+/// with type tokens space-joined. `None` when the struct is missing
+/// or not a braced struct.
+fn struct_fields(file: &SourceFile, name: &str) -> Option<Vec<(String, String)>> {
+    let t = &file.tokens;
+    let mut i = 0usize;
+    while i + 1 < t.len() {
+        if !(is_ident(t, i, "struct") && is_ident(t, i + 1, name) && !file.in_test_code(t[i].line))
+        {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        if is_punct(t, j, "<") {
+            j = skip_angles(t, j);
+        }
+        if !is_punct(t, j, "{") {
+            return None; // tuple or unit struct: not snapshot material
+        }
+        j += 1;
+        let mut fields = Vec::new();
+        loop {
+            // Skip field attributes.
+            while is_punct(t, j, "#") && is_punct(t, j + 1, "[") {
+                let mut depth = 0i32;
+                j += 1;
+                while j < t.len() {
+                    if is_punct(t, j, "[") {
+                        depth += 1;
+                    } else if is_punct(t, j, "]") {
+                        depth -= 1;
+                        if depth == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+            }
+            if j >= t.len() || is_punct(t, j, "}") {
+                break;
+            }
+            // Skip visibility (`pub`, `pub(crate)`).
+            if is_ident(t, j, "pub") {
+                j += 1;
+                if is_punct(t, j, "(") {
+                    let mut depth = 0i32;
+                    while j < t.len() {
+                        if is_punct(t, j, "(") {
+                            depth += 1;
+                        } else if is_punct(t, j, ")") {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                }
+            }
+            if t.get(j).map(|x| x.kind) != Some(TokKind::Ident) {
+                return None;
+            }
+            let fname = t[j].text.clone();
+            j += 1;
+            if !is_punct(t, j, ":") {
+                return None;
+            }
+            j += 1;
+            // Type tokens until a top-level `,` or the closing `}`.
+            let mut ty: Vec<&str> = Vec::new();
+            let mut depth = 0i32;
+            let mut angle = 0i32;
+            while j < t.len() {
+                let tok = &t[j];
+                if tok.kind == TokKind::Punct {
+                    match tok.text.as_str() {
+                        "(" | "[" | "{" => depth += 1,
+                        ")" | "]" => depth -= 1,
+                        "}" => {
+                            if depth == 0 {
+                                break;
+                            }
+                            depth -= 1;
+                        }
+                        "<" => angle += 1,
+                        ">" => angle = (angle - 1).max(0),
+                        "," => {
+                            if depth == 0 && angle == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                ty.push(tok.text.as_str());
+                j += 1;
+            }
+            fields.push((fname, ty.join(" ")));
+            if is_punct(t, j, ",") {
+                j += 1;
+            }
+        }
+        return Some(fields);
+    }
+    None
+}
+
+/// Canonical schema string for the watched structs, in watch order:
+/// one `Name{field:type;field:type}` line per struct, `\n`-joined.
+/// Returns `Err(struct name)` for the first watched struct that
+/// cannot be extracted.
+fn canonical_schema(
+    files: &[SourceFile],
+    cfg: &LintConfig,
+) -> std::result::Result<String, (String, String)> {
+    let mut parts = Vec::new();
+    for (suffix, name) in &cfg.ser002_watch {
+        let entry = [suffix.clone()];
+        let file = files
+            .iter()
+            .find(|f| LintConfig::path_matches(&entry, &f.path))
+            .ok_or_else(|| (suffix.clone(), name.clone()))?;
+        let fields =
+            struct_fields(file, name).ok_or_else(|| (file.path.clone(), name.clone()))?;
+        let body: Vec<String> = fields
+            .into_iter()
+            .map(|(f, ty)| format!("{f}:{ty}"))
+            .collect();
+        parts.push(format!("{name}{{{}}}", body.join(";")));
+    }
+    Ok(parts.join("\n"))
+}
+
+/// The expected fingerprint constant value for the current sources,
+/// `"v{SNAPSHOT_VERSION}:{fnv1a64 hex}"`. Public so the fixture
+/// harness (and a re-record helper) can compute it the same way the
+/// rule does. `None` when the schema file or version const is absent
+/// from `files`.
+pub fn expected_fingerprint(files: &[SourceFile], cfg: &LintConfig) -> Option<String> {
+    if cfg.ser002_file.is_empty() {
+        return None;
+    }
+    let entry = [cfg.ser002_file.clone()];
+    let schema = files
+        .iter()
+        .find(|f| LintConfig::path_matches(&entry, &f.path))?;
+    let version = find_const_num(schema, "SNAPSHOT_VERSION")?;
+    let canon = canonical_schema(files, cfg).ok()?;
+    Some(format!("v{version}:{:016x}", fnv1a64(canon.as_bytes())))
+}
+
+/// First `NAME … = <number>` token sequence; returns the literal's
+/// integer value.
+fn find_const_num(file: &SourceFile, name: &str) -> Option<u64> {
+    let t = &file.tokens;
+    for i in 0..t.len() {
+        if !is_ident(t, i, name) {
+            continue;
+        }
+        for j in i + 1..(i + 6).min(t.len()) {
+            if is_punct(t, j, "=") {
+                let lit = t.get(j + 1)?;
+                if lit.kind == TokKind::Num {
+                    let digits: String =
+                        lit.text.chars().take_while(|c| c.is_ascii_digit()).collect();
+                    return digits.parse().ok();
+                }
+                return None;
+            }
+        }
+        return None;
+    }
+    None
+}
+
+/// First `NAME … = "string"` token sequence; returns the unquoted
+/// value and its position.
+fn find_const_str(file: &SourceFile, name: &str) -> Option<(String, u32, u32)> {
+    let t = &file.tokens;
+    for i in 0..t.len() {
+        if !is_ident(t, i, name) {
+            continue;
+        }
+        for j in i + 1..(i + 8).min(t.len()) {
+            if is_punct(t, j, "=") {
+                let lit = t.get(j + 1)?;
+                if lit.kind == TokKind::Str && lit.text.len() >= 2 {
+                    let inner = lit.text[1..lit.text.len() - 1].to_string();
+                    return Some((inner, lit.line, lit.col));
+                }
+                return None;
+            }
+        }
+        return None;
+    }
+    None
+}
+
+impl Rule for Ser002 {
+    fn id(&self) -> &'static str {
+        "SER002"
+    }
+
+    fn describe(&self) -> &'static str {
+        "snapshot field lists changed without a SNAPSHOT_VERSION bump"
+    }
+
+    fn finish(&self, files: &[SourceFile], cfg: &LintConfig, ctx: &mut Ctx) {
+        if cfg.ser002_file.is_empty() {
+            return;
+        }
+        let entry = [cfg.ser002_file.clone()];
+        let Some(schema) = files
+            .iter()
+            .find(|f| LintConfig::path_matches(&entry, &f.path))
+        else {
+            // Partial lint run that does not include the schema file:
+            // nothing to check against.
+            return;
+        };
+        let Some(version) = find_const_num(schema, "SNAPSHOT_VERSION") else {
+            ctx.emit(
+                schema,
+                "SER002",
+                Severity::Error,
+                1,
+                1,
+                format!("`SNAPSHOT_VERSION` const not found in {}", schema.path),
+                "declare `pub const SNAPSHOT_VERSION: u64 = …;` next to the snapshot \
+                 structs"
+                    .to_string(),
+            );
+            return;
+        };
+        let canon = match canonical_schema(files, cfg) {
+            Ok(c) => c,
+            Err((where_, name)) => {
+                // A watched file missing from a partial lint run is not
+                // an error; a watched struct missing from its file is.
+                if files.iter().any(|f| {
+                    LintConfig::path_matches(&[where_.clone()], &f.path) || f.path == where_
+                }) {
+                    ctx.emit(
+                        schema,
+                        "SER002",
+                        Severity::Error,
+                        1,
+                        1,
+                        format!("watched snapshot struct `{name}` not found in {where_}"),
+                        "fix ser002.watch in lint.conf or restore the struct".to_string(),
+                    );
+                }
+                return;
+            }
+        };
+        let expected = format!("v{version}:{:016x}", fnv1a64(canon.as_bytes()));
+        match find_const_str(schema, "SNAPSHOT_FIELDS_FINGERPRINT") {
+            None => ctx.emit(
+                schema,
+                "SER002",
+                Severity::Error,
+                1,
+                1,
+                "snapshot schema fingerprint is not recorded: field-list edits would \
+                 go unnoticed"
+                    .to_string(),
+                format!(
+                    "declare `pub const SNAPSHOT_FIELDS_FINGERPRINT: &str = \
+                     \"{expected}\";` next to SNAPSHOT_VERSION"
+                ),
+            ),
+            Some((recorded, line, col)) => {
+                if recorded != expected {
+                    ctx.emit(
+                        schema,
+                        "SER002",
+                        Severity::Error,
+                        line,
+                        col,
+                        format!(
+                            "snapshot field lists changed: fingerprint is \"{recorded}\" \
+                             but sources hash to \"{expected}\""
+                        ),
+                        format!(
+                            "bump SNAPSHOT_VERSION (with a migration note) if the schema \
+                             really changed, then set SNAPSHOT_FIELDS_FINGERPRINT to \
+                             \"{expected}\""
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- PANIC001
+
+pub struct Panic001;
+
+impl Rule for Panic001 {
+    fn id(&self) -> &'static str {
+        "PANIC001"
+    }
+
+    fn describe(&self) -> &'static str {
+        "non-test unwrap()/expect() count above the ratcheted budget"
+    }
+
+    fn finish(&self, files: &[SourceFile], cfg: &LintConfig, ctx: &mut Ctx) {
+        for (scope, budget) in &cfg.panic_budgets {
+            let scope_vec = [scope.clone()];
+            let mut count = 0usize;
+            let mut last: Option<(usize, u32, u32)> = None;
+            for (fi, file) in files.iter().enumerate() {
+                if !LintConfig::module_in(&scope_vec, &file.module) {
+                    continue;
+                }
+                let toks = &file.tokens;
+                for i in 0..toks.len() {
+                    let hit = is_punct(toks, i, ".")
+                        && (is_ident(toks, i + 1, "unwrap") || is_ident(toks, i + 1, "expect"))
+                        && is_punct(toks, i + 2, "(");
+                    if !hit {
+                        continue;
+                    }
+                    let site = &toks[i + 1];
+                    if file.in_test_code(site.line) {
+                        continue;
+                    }
+                    // A suppressed site is excluded from the count (and
+                    // the suppression registers as used).
+                    if ctx.site_allowed(file, "PANIC001", site.line) {
+                        continue;
+                    }
+                    count += 1;
+                    last = Some((fi, site.line, site.col));
+                }
+            }
+            if count > *budget {
+                if let Some((fi, line, col)) = last {
+                    ctx.emit_unsuppressable(
+                        &files[fi],
+                        "PANIC001",
+                        Severity::Error,
+                        line,
+                        col,
+                        format!(
+                            "module `{scope}` has {count} non-test unwrap()/expect() \
+                             call(s); the ratcheted budget is {budget}"
+                        ),
+                        "convert new sites to `?`/match, suppress individual audited \
+                         sites with a reason, or raise panic.budget in lint.conf when \
+                         the ratchet legitimately moves"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_epsilon_matches_engine_eps() {
+        // DET001 exists to keep every epsilon equal to engine::EPS; the
+        // rule's own notion of the value must therefore match it.
+        assert_eq!(EPS_VALUE, crate::engine::EPS);
+    }
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // Published FNV-1a test vectors: the fingerprint format is
+        // persisted in source, so the hash must never drift.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn struct_fields_extracts_types_verbatim() {
+        let src = "pub struct S {\n    pub a: f64,\n    #[allow(dead_code)]\n    b: Vec<(usize, String)>,\n    pub(crate) c: Option<Box<S>>,\n}\n";
+        let f = SourceFile::lex("x.rs", "x", src);
+        let fields = struct_fields(&f, "S").unwrap();
+        assert_eq!(
+            fields,
+            vec![
+                ("a".to_string(), "f64".to_string()),
+                ("b".to_string(), "Vec < ( usize , String ) >".to_string()),
+                ("c".to_string(), "Option < Box < S > >".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn struct_fields_ignores_test_doubles_and_other_structs() {
+        let src = "struct Other { x: u8 }\n#[cfg(test)]\nmod tests {\n    struct S { y: u8 }\n}\nstruct S { z: u16 }\n";
+        let f = SourceFile::lex("x.rs", "x", src);
+        let fields = struct_fields(&f, "S").unwrap();
+        assert_eq!(fields, vec![("z".to_string(), "u16".to_string())]);
+    }
+
+    #[test]
+    fn const_extractors() {
+        let src = "pub const SNAPSHOT_VERSION: u64 = 2;\npub const SNAPSHOT_FIELDS_FINGERPRINT: &str = \"v2:dead\";\n";
+        let f = SourceFile::lex("x.rs", "x", src);
+        assert_eq!(find_const_num(&f, "SNAPSHOT_VERSION"), Some(2));
+        let (s, line, _) = find_const_str(&f, "SNAPSHOT_FIELDS_FINGERPRINT").unwrap();
+        assert_eq!(s, "v2:dead");
+        assert_eq!(line, 2);
+    }
+}

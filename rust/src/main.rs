@@ -25,7 +25,7 @@ use asyncflow::util::cli::Args;
 use asyncflow::workflows::{cdg1, cdg2};
 
 fn main() {
-    let args = match Args::from_env(&["verbose", "ascii", "autoscale"]) {
+    let args = match Args::from_env(&["verbose", "ascii", "autoscale", "deny"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -47,6 +47,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("campaign") => cmd_campaign(args),
         Some("traffic") => cmd_traffic(args),
         Some("resume") => cmd_resume(args),
+        Some("lint") => cmd_lint(args),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -98,6 +99,20 @@ subcommands:
                                          preemption) to --checkpoint-out.
                                          Catalog: ddmd ddmd-small cdg1
                                          cdg2 cdg1-small cdg2-small
+  lint     [paths...]                    determinism-contract linter over
+           [--deny]                      the crate's own sources (default
+           [--format human|ndjson]       path: src). --deny exits non-zero
+           [--config lint.conf]          on any finding; ndjson emits one
+                                         JSON record per finding for CI
+                                         artifacts. Rules: DET001 raw
+                                         clock epsilons, DET002 hash-
+                                         ordered collections, DET003
+                                         wall-clock reads, SER001 one-way
+                                         To/FromJson, SER002 snapshot
+                                         schema fingerprint, PANIC001
+                                         unwrap/expect budget. Suppress
+                                         one line with
+                                         `// lint:allow(RULE): reason`.
   resume   ckpt.json                     resume a preempted traffic run
            [--resize T:+N,T:-N]          from its checkpoint file; the
            [--autoscale ...]             optional plan reshapes the new
@@ -535,6 +550,58 @@ fn cmd_resume(args: &Args) -> Result<()> {
     );
     let rep = ck.resume(plan)?;
     emit_traffic_report(args, &rep)
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    use asyncflow::lint::{lint_paths, LintConfig};
+    // Config: --config FILE wins; otherwise ./lint.conf when present
+    // (the repo's budgets live there); otherwise built-in defaults.
+    let cfg = match args.get("config") {
+        Some(p) => LintConfig::load(std::path::Path::new(p))?,
+        None => {
+            let default = std::path::Path::new("lint.conf");
+            if default.exists() {
+                LintConfig::load(default)?
+            } else {
+                LintConfig::default()
+            }
+        }
+    };
+    let paths: Vec<String> = if args.positional.len() > 1 {
+        args.positional[1..].to_vec()
+    } else {
+        vec!["src".to_string()]
+    };
+    let findings = lint_paths(&paths, &cfg)?;
+    match args.get_or("format", "human") {
+        "ndjson" => {
+            for f in &findings {
+                println!("{}", f.to_json());
+            }
+        }
+        "human" => {
+            for f in &findings {
+                println!("{}", f.render_human());
+            }
+            if findings.is_empty() {
+                println!("lint: clean");
+            } else {
+                println!("lint: {} finding(s)", findings.len());
+            }
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "lint: unknown --format '{other}' (human|ndjson)"
+            )))
+        }
+    }
+    if args.flag("deny") && !findings.is_empty() {
+        return Err(Error::Config(format!(
+            "lint: {} finding(s) (--deny)",
+            findings.len()
+        )));
+    }
+    Ok(())
 }
 
 fn cmd_masking(args: &Args) -> Result<()> {

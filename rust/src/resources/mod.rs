@@ -20,7 +20,7 @@ use crate::util::json::{arr_of, obj, parse_arr, FromJson, Json, ToJson};
 
 /// Per-task resource requirement (Tables 1–2: "CPU cores/Task",
 /// "GPUs/Task").
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct ResourceRequest {
     pub cpu_cores: u32,
     pub gpus: u32,

@@ -31,7 +31,7 @@
 //!   incrementally, so the autoscaler's backlog probe is O(1) instead
 //!   of O(queue).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use super::QueuedTask;
 use crate::resources::ResourceRequest;
@@ -117,7 +117,11 @@ impl Bucket {
 #[derive(Debug, Clone, Default)]
 pub struct ShapeQueue {
     buckets: Vec<Bucket>,
-    index: HashMap<ResourceRequest, usize>,
+    /// Shape → bucket id. Bucket ids are assigned in first-seen order
+    /// (never from map iteration); the map is ordered anyway (BTree,
+    /// not hash) so *no* traversal of it can introduce
+    /// order-nondeterminism into drains or snapshots (lint DET002).
+    index: BTreeMap<ResourceRequest, usize>,
     live: usize,
     next_seq: u64,
     demand_cores: u64,

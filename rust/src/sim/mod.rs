@@ -85,7 +85,7 @@ impl EventQueue {
     /// Fast-forward the clock (never backwards).
     pub fn advance_to(&mut self, t: f64) {
         if t > self.now {
-            debug_assert!(!self.peek_time().is_some_and(|p| t > p + 1e-12));
+            debug_assert!(!self.peek_time().is_some_and(|p| t > p + crate::engine::EPS));
             self.now = t;
         }
     }

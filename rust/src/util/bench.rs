@@ -4,9 +4,31 @@
 //! table printer shared by the `benches/` binaries so every paper
 //! table/figure regenerator reports in a consistent format.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::util::stats::Summary;
+
+/// Wall-clock stopwatch for perf *accounting* (e.g. the coordinator's
+/// `sched_wall`). This is the sanctioned wall-clock read for engine
+/// code: simulation state must never depend on the host clock
+/// (`asyncflow lint` DET003 rejects `Instant`/`SystemTime` outside the
+/// timing allowlist), so engine modules measure themselves through
+/// this type instead of touching `Instant` directly — the elapsed time
+/// may only flow into reporting fields, never into the event loop.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Stopwatch {
+        Stopwatch(Instant::now())
+    }
+
+    /// Wall-clock time elapsed since [`start`](Stopwatch::start).
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
 
 /// Result of a timed benchmark.
 #[derive(Debug, Clone)]

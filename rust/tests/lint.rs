@@ -1,0 +1,241 @@
+//! Fixture-corpus harness for `asyncflow lint`, plus the self-check:
+//! every rule must fire on its violating fixture, stay quiet on the
+//! suppressed and clean ones, and the repo's own `src/` must lint
+//! green under the shipped `lint.conf`.
+//!
+//! The fixtures live under `tests/lint_fixtures/<module>/…` — the
+//! `lint_fixtures` path component is a module marker (like `src`), so
+//! `engine/det001_violation.rs` classifies as module
+//! `engine::det001_violation` and falls inside the engine rule scopes.
+//! Cargo does not compile `.rs` files in test subdirectories; the
+//! linter only lexes them.
+
+use std::path::PathBuf;
+
+use asyncflow::lint::{lint_files, lint_paths, module_of, Finding, LintConfig, SourceFile};
+
+fn fixture_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(rel)
+}
+
+/// Lint one fixture file with optional config overrides.
+fn lint_fixture(rel: &str, overrides: &str) -> Vec<Finding> {
+    let mut cfg = LintConfig::default();
+    cfg.apply(overrides).expect("fixture config overrides parse");
+    let p = fixture_path(rel);
+    lint_paths(&[p.to_string_lossy().into_owned()], &cfg).expect("fixture lints")
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+#[test]
+fn det001_fires_on_violation_quiet_on_suppressed_and_clean() {
+    let bad = lint_fixture("engine/det001_violation.rs", "");
+    assert_eq!(rules_of(&bad), vec!["DET001"], "{bad:?}");
+    assert!(bad[0].message.contains("1e-12"));
+    assert!(bad[0].suggestion.contains("engine::EPS"));
+
+    let sup = lint_fixture("engine/det001_suppressed.rs", "");
+    assert!(sup.is_empty(), "{sup:?}");
+    let clean = lint_fixture("engine/det001_clean.rs", "");
+    assert!(clean.is_empty(), "{clean:?}");
+}
+
+#[test]
+fn det002_fires_on_violation_quiet_on_suppressed_and_clean() {
+    let bad = lint_fixture("engine/det002_violation.rs", "");
+    // Two findings: the `use` and the field type.
+    assert_eq!(rules_of(&bad), vec!["DET002", "DET002"], "{bad:?}");
+
+    let sup = lint_fixture("engine/det002_suppressed.rs", "");
+    assert!(sup.is_empty(), "{sup:?}");
+    let clean = lint_fixture("engine/det002_clean.rs", "");
+    assert!(clean.is_empty(), "{clean:?}");
+}
+
+#[test]
+fn det003_fires_on_violation_quiet_on_suppressed_and_clean() {
+    let bad = lint_fixture("engine/det003_violation.rs", "");
+    assert_eq!(rules_of(&bad), vec!["DET003", "DET003"], "{bad:?}");
+    assert!(bad[0].suggestion.contains("Stopwatch"));
+
+    let sup = lint_fixture("engine/det003_suppressed.rs", "");
+    assert!(sup.is_empty(), "{sup:?}");
+    let clean = lint_fixture("engine/det003_clean.rs", "");
+    assert!(clean.is_empty(), "{clean:?}");
+}
+
+#[test]
+fn det003_allowlisted_module_is_exempt() {
+    // The same wall-clock fixture, re-scoped as if it lived in an
+    // allowlisted timing module.
+    let mut cfg = LintConfig::default();
+    cfg.apply("det003.allow = engine::det003_violation\n").unwrap();
+    let p = fixture_path("engine/det003_violation.rs");
+    let out = lint_paths(&[p.to_string_lossy().into_owned()], &cfg).unwrap();
+    assert!(out.is_empty(), "{out:?}");
+}
+
+#[test]
+fn ser001_fires_on_orphan_quiet_on_suppressed_and_paired() {
+    let bad = lint_fixture("ser/ser001_violation.rs", "");
+    assert_eq!(rules_of(&bad), vec!["SER001"], "{bad:?}");
+    assert!(bad[0].message.contains("OneWay"));
+    assert!(bad[0].message.contains("FromJson"));
+
+    let sup = lint_fixture("ser/ser001_suppressed.rs", "");
+    assert!(sup.is_empty(), "{sup:?}");
+    let clean = lint_fixture("ser/ser001_clean.rs", "");
+    assert!(clean.is_empty(), "{clean:?}");
+}
+
+#[test]
+fn ser001_allowlist_exempts_named_types() {
+    let out = lint_fixture("ser/ser001_violation.rs", "ser001.allow = OneWay\n");
+    assert!(out.is_empty(), "{out:?}");
+}
+
+/// Config overrides pointing SER002 at one fixture file.
+fn ser002_overrides(rel_file: &str) -> String {
+    format!("ser002.file = {rel_file}\nser002.watch = {rel_file}#Snap\n")
+}
+
+#[test]
+fn ser002_fires_on_stale_fingerprint_and_suggestion_round_trips() {
+    let rel = "ser/ser002_violation.rs";
+    let bad = lint_fixture(rel, &ser002_overrides("ser002_violation.rs"));
+    assert_eq!(rules_of(&bad), vec!["SER002"], "{bad:?}");
+    assert!(bad[0].message.contains("v1:0000000000000000"));
+
+    // The suggestion carries the correct expected value: splicing it
+    // into the source must make the rule go quiet (this is exactly the
+    // re-record workflow the finding prescribes).
+    let expected = bad[0]
+        .suggestion
+        .split('"')
+        .find(|s| s.starts_with('v') && s.contains(':'))
+        .expect("suggestion quotes the expected fingerprint")
+        .to_string();
+    let p = fixture_path(rel);
+    let src = std::fs::read_to_string(&p).unwrap();
+    let fixed = src.replace("v1:0000000000000000", &expected);
+    assert_ne!(src, fixed, "placeholder fingerprint present in fixture");
+    let path_str = p.to_string_lossy().into_owned();
+    let file = SourceFile::lex(path_str.clone(), module_of(&path_str), &fixed);
+    let mut cfg = LintConfig::default();
+    cfg.apply(&ser002_overrides("ser002_violation.rs")).unwrap();
+    let out = lint_files(&[file], &cfg);
+    assert!(out.is_empty(), "re-recorded fingerprint still flagged: {out:?}");
+}
+
+#[test]
+fn ser002_quiet_on_suppressed_and_clean() {
+    let sup = lint_fixture(
+        "ser/ser002_suppressed.rs",
+        &ser002_overrides("ser002_suppressed.rs"),
+    );
+    assert!(sup.is_empty(), "{sup:?}");
+    let clean = lint_fixture("ser/ser002_clean.rs", &ser002_overrides("ser002_clean.rs"));
+    assert!(clean.is_empty(), "{clean:?}");
+}
+
+#[test]
+fn ser002_missing_fingerprint_const_is_reported_with_recipe() {
+    // Strip the recorded const entirely: the rule must demand one and
+    // hand over the exact declaration to paste.
+    let rel = "ser/ser002_violation.rs";
+    let p = fixture_path(rel);
+    let src = std::fs::read_to_string(&p).unwrap();
+    let stripped: String = src
+        .lines()
+        .filter(|l| !l.contains("SNAPSHOT_FIELDS_FINGERPRINT"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    let path_str = p.to_string_lossy().into_owned();
+    let file = SourceFile::lex(path_str.clone(), module_of(&path_str), &stripped);
+    let mut cfg = LintConfig::default();
+    cfg.apply(&ser002_overrides("ser002_violation.rs")).unwrap();
+    let out = lint_files(&[file], &cfg);
+    assert_eq!(rules_of(&out), vec!["SER002"], "{out:?}");
+    assert!(out[0].suggestion.contains("SNAPSHOT_FIELDS_FINGERPRINT"));
+    assert!(out[0].suggestion.contains("v1:"), "{}", out[0].suggestion);
+}
+
+#[test]
+fn panic001_ratchet_fires_over_budget_quiet_at_or_under() {
+    let over = "panic.budget = panic:2\n";
+    let bad = lint_fixture("panic/panic001_violation.rs", over);
+    assert_eq!(rules_of(&bad), vec!["PANIC001"], "{bad:?}");
+    assert!(bad[0].message.contains("3"), "{}", bad[0].message);
+    assert!(bad[0].message.contains("budget is 2"), "{}", bad[0].message);
+
+    // A suppressed (audited) site drops out of the count.
+    let sup = lint_fixture("panic/panic001_suppressed.rs", over);
+    assert!(sup.is_empty(), "{sup:?}");
+    // At budget, and test-code unwraps never count.
+    let clean = lint_fixture("panic/panic001_clean.rs", over);
+    assert!(clean.is_empty(), "{clean:?}");
+    // Tighten the ratchet: the clean fixture trips at budget 1.
+    let tightened = lint_fixture("panic/panic001_clean.rs", "panic.budget = panic:1\n");
+    assert_eq!(rules_of(&tightened), vec!["PANIC001"], "{tightened:?}");
+}
+
+#[test]
+fn ndjson_records_are_single_line_json() {
+    let bad = lint_fixture("engine/det001_violation.rs", "");
+    let line = bad[0].to_json().to_string();
+    assert!(!line.contains('\n'));
+    for key in ["\"rule\"", "\"severity\"", "\"file\"", "\"line\"", "\"col\"", "\"message\"", "\"suggestion\""] {
+        assert!(line.contains(key), "missing {key} in {line}");
+    }
+}
+
+/// The acceptance gate: the repo's own sources lint green under the
+/// shipped configuration — zero findings, which also means zero
+/// unexplained (reasonless, unknown-rule, or unused) suppressions,
+/// and a SNAPSHOT_FIELDS_FINGERPRINT that matches the sources.
+#[test]
+fn self_check_repo_src_is_clean_under_shipped_config() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let cfg = LintConfig::load(&root.join("lint.conf")).expect("lint.conf parses");
+    let src = root.join("src");
+    let findings = lint_paths(&[src.to_string_lossy().into_owned()], &cfg).unwrap();
+    assert!(
+        findings.is_empty(),
+        "repo sources must lint clean; findings:\n{}",
+        findings
+            .iter()
+            .map(|f| f.render_human())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+/// Editing a snapshot field without bumping the version must fail —
+/// demonstrated against the real `src/checkpoint/snapshot.rs` by
+/// renaming a field in-memory.
+#[test]
+fn editing_a_real_snapshot_field_without_version_bump_fails_lint() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let cfg = LintConfig::load(&root.join("lint.conf")).expect("lint.conf parses");
+    let mut files = Vec::new();
+    for rel in ["src/checkpoint/snapshot.rs", "src/engine/driver.rs"] {
+        let p = root.join(rel);
+        let mut text = std::fs::read_to_string(&p).unwrap();
+        if rel.ends_with("snapshot.rs") {
+            assert!(text.contains("pub peak_live: usize"), "field moved? update this test");
+            text = text.replace("pub peak_live: usize", "pub peak_live_tasks: usize");
+        }
+        let path_str = p.to_string_lossy().into_owned();
+        files.push(SourceFile::lex(path_str.clone(), module_of(&path_str), &text));
+    }
+    let findings = lint_files(&files, &cfg);
+    assert!(
+        findings.iter().any(|f| f.rule == "SER002"),
+        "renamed snapshot field must trip SER002: {findings:?}"
+    );
+}

@@ -1,0 +1,14 @@
+// Fixture: epsilon comparisons through the shared constant are clean,
+// and test code may use raw tolerances freely.
+
+pub fn due(now: f64, t: f64, eps: f64) -> bool {
+    now + eps >= t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tolerances_in_tests_are_fine() {
+        assert!((0.1_f64 + 0.2).abs() - 0.3 < 1e-12);
+    }
+}

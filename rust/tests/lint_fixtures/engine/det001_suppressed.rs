@@ -1,0 +1,6 @@
+// Fixture: a reasoned suppression silences DET001 on the line below.
+
+pub fn due(now: f64, t: f64) -> bool {
+    // lint:allow(DET001): fixture — demonstrating a documented exception
+    now + 1e-12 >= t
+}

@@ -1,0 +1,6 @@
+// Fixture: DET001 must fire on a raw clock-epsilon literal in an
+// engine-scoped module. (Not compiled; lexed by tests/lint.rs.)
+
+pub fn due(now: f64, t: f64) -> bool {
+    now + 1e-12 >= t
+}

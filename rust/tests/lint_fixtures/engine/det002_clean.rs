@@ -1,0 +1,7 @@
+// Fixture: ordered collections are the sanctioned choice.
+
+use std::collections::BTreeMap;
+
+pub struct Index {
+    by_shape: BTreeMap<u32, usize>,
+}

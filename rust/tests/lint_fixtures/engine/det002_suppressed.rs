@@ -1,0 +1,7 @@
+// Fixture: per-line suppressions with reasons silence DET002.
+
+use std::collections::HashMap; // lint:allow(DET002): fixture — never iterated
+pub struct Index {
+    // lint:allow(DET002): fixture — lookup-only, order cannot leak
+    by_shape: HashMap<u32, usize>,
+}

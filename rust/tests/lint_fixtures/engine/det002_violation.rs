@@ -1,0 +1,8 @@
+// Fixture: DET002 must fire on hash-ordered collections in
+// replay-critical modules (two findings: the import and the field).
+
+use std::collections::HashMap;
+
+pub struct Index {
+    by_shape: HashMap<u32, usize>,
+}

@@ -1,0 +1,7 @@
+// Fixture: wall-clock timing through the sanctioned Stopwatch wrapper
+// is clean (the wrapper lives in an allowlisted module).
+
+pub fn timed_len(xs: &[f64]) -> (usize, std::time::Duration) {
+    let sw = crate::util::bench::Stopwatch::start();
+    (xs.len(), sw.elapsed())
+}

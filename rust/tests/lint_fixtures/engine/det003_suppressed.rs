@@ -1,0 +1,7 @@
+// Fixture: a reasoned per-line suppression silences DET003.
+
+pub fn stamp() -> u64 {
+    // lint:allow(DET003): fixture — perf counter only, value never reaches state
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos() as u64
+}

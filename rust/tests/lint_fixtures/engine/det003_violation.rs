@@ -1,0 +1,6 @@
+// Fixture: DET003 must fire on wall-clock reads outside the timing
+// allowlist (one finding per Instant/SystemTime token).
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,18 @@
+// Fixture: at or under the budget (two sites, budget two) the ratchet
+// stays quiet; test code never counts.
+
+pub fn f(xs: &[u32]) -> u32 {
+    let a = xs.first().unwrap();
+    let b = xs.last().expect("non-empty");
+    a + b
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwraps_in_tests_are_free() {
+        let xs = [1u32, 2];
+        assert_eq!(super::f(&xs), 3);
+        assert_eq!(*xs.first().unwrap(), 1);
+    }
+}

@@ -1,0 +1,10 @@
+// Fixture: a suppressed (audited) site does not count toward the
+// PANIC001 budget — three sites minus one suppression fits budget 2.
+
+pub fn f(xs: &[u32]) -> u32 {
+    let a = xs.first().unwrap();
+    let b = xs.last().expect("non-empty");
+    // lint:allow(PANIC001): fixture — index 1 checked by the caller
+    let c = xs.get(1).unwrap();
+    a + b + c
+}

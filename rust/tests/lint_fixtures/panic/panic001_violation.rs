@@ -1,0 +1,9 @@
+// Fixture: three non-test unwrap/expect sites against a budget of two
+// must trip the PANIC001 ratchet (one aggregate finding).
+
+pub fn f(xs: &[u32]) -> u32 {
+    let a = xs.first().unwrap();
+    let b = xs.last().expect("non-empty");
+    let c = xs.get(1).unwrap();
+    a + b + c
+}

@@ -1,0 +1,17 @@
+// Fixture: paired ToJson/FromJson impls round-trip and are clean.
+
+pub struct Pair {
+    pub x: f64,
+}
+
+impl ToJson for Pair {
+    fn to_json(&self) -> Json {
+        obj([("x", Json::from(self.x))])
+    }
+}
+
+impl FromJson for Pair {
+    fn from_json(v: &Json) -> Result<Pair> {
+        Ok(Pair { x: v.req_f64("x")? })
+    }
+}

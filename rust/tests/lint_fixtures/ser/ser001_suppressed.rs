@@ -1,0 +1,12 @@
+// Fixture: a reasoned suppression on the impl line silences SER001.
+
+pub struct ExportOnly {
+    pub x: f64,
+}
+
+// lint:allow(SER001): fixture — write-only metrics export, never restored
+impl ToJson for ExportOnly {
+    fn to_json(&self) -> Json {
+        obj([("x", Json::from(self.x))])
+    }
+}

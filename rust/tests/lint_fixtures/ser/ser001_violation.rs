@@ -1,0 +1,11 @@
+// Fixture: SER001 must fire on a ToJson impl with no FromJson pair.
+
+pub struct OneWay {
+    pub x: f64,
+}
+
+impl ToJson for OneWay {
+    fn to_json(&self) -> Json {
+        obj([("x", Json::from(self.x))])
+    }
+}

@@ -1,0 +1,11 @@
+// Fixture: the recorded fingerprint matches the struct's field list,
+// so SER002 stays quiet. The constant below is fnv1a64 of
+// `Snap{a:f64;b:Vec < usize >}` under schema version 1.
+
+pub const SNAPSHOT_VERSION: u64 = 1;
+pub const SNAPSHOT_FIELDS_FINGERPRINT: &str = "v1:03141af8a738c3b1";
+
+pub struct Snap {
+    pub a: f64,
+    pub b: Vec<usize>,
+}

@@ -1,0 +1,11 @@
+// Fixture: a reasoned suppression on the fingerprint line silences
+// SER002 (e.g. mid-migration, with the follow-up tracked elsewhere).
+
+pub const SNAPSHOT_VERSION: u64 = 1;
+// lint:allow(SER002): fixture — migration in flight, re-record before merge
+pub const SNAPSHOT_FIELDS_FINGERPRINT: &str = "v1:0000000000000000";
+
+pub struct Snap {
+    pub a: f64,
+    pub b: Vec<usize>,
+}

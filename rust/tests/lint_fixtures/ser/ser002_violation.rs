@@ -1,0 +1,11 @@
+// Fixture: SER002 must fire when the watched struct's fields no
+// longer hash to the recorded fingerprint (i.e. someone edited the
+// snapshot schema without bumping SNAPSHOT_VERSION and re-recording).
+
+pub const SNAPSHOT_VERSION: u64 = 1;
+pub const SNAPSHOT_FIELDS_FINGERPRINT: &str = "v1:0000000000000000";
+
+pub struct Snap {
+    pub a: f64,
+    pub b: Vec<usize>,
+}

@@ -309,3 +309,46 @@ fn saturated_drain_is_shape_bounded_not_queue_bounded() {
     assert_eq!(after.shape_probes - before.shape_probes, 5);
     assert_eq!(s.queue_len(), 5_000);
 }
+
+#[test]
+fn bucket_identity_is_first_seen_order_never_map_order() {
+    // Regression guard for the DET002 fix (hash map -> ordered map in
+    // ShapeQueue::index): bucket ids, queued() order, and demand must
+    // be pure functions of the push sequence. Two queues fed the same
+    // interleaved shape stream must agree exactly, and the ids must be
+    // the first-seen ordinals — shapes are deliberately pushed in
+    // non-sorted order so any map-traversal-derived assignment (sorted
+    // by shape, or hash order) would misnumber them.
+    use asyncflow::sched::{OrdKey, ShapeQueue};
+    let shapes = [(8, 1), (1, 0), (4, 4), (1, 0), (8, 1), (2, 0), (4, 4), (2, 0)];
+    let build = || {
+        let mut q = ShapeQueue::new();
+        for (uid, &(c, g)) in shapes.iter().enumerate() {
+            let t = QueuedTask {
+                uid,
+                req: ResourceRequest::new(c, g),
+                priority: 0,
+                submitted_at: uid as f64,
+                tenant: 0,
+                est: 1.0,
+            };
+            q.push(t, |t, seq| OrdKey { major: 0, time: t.submitted_at, seq });
+        }
+        q
+    };
+    let (a, b) = (build(), build());
+    // First-seen ordinals: (8,1)=0, (1,0)=1, (4,4)=2, (2,0)=3.
+    let expect = [(8, 1), (1, 0), (4, 4), (2, 0)];
+    for (id, &(c, g)) in expect.iter().enumerate() {
+        assert_eq!(a.shape(id), ResourceRequest::new(c, g), "bucket {id}");
+    }
+    assert_eq!(
+        a.bucket_ids().collect::<Vec<_>>(),
+        b.bucket_ids().collect::<Vec<_>>()
+    );
+    assert_eq!(a.demand(), b.demand());
+    let uids = |q: &ShapeQueue| q.queued().iter().map(|t| t.uid).collect::<Vec<_>>();
+    assert_eq!(uids(&a), uids(&b));
+    // queued() recovers the exact push order (checkpoint contract).
+    assert_eq!(uids(&a), (0..shapes.len()).collect::<Vec<_>>());
+}
