@@ -47,6 +47,7 @@ fn main() {
         plan: None,
         checkpoint_at: None,
         policy: None,
+        failure: None,
     };
 
     // Probe: where is mid-stream, and what does the snapshot carry?

@@ -1,0 +1,130 @@
+//! Failure-injection overhead and cadence-sweep cost: a streamed
+//! traffic run with a live MTBF fault process + retry pipeline versus
+//! the identical fault-free run (the price of the failure lane), the
+//! chained periodic-checkpoint runner (snapshot + JSON round-trip +
+//! restore every `T` simulated seconds), and a checkpoint-cadence
+//! sweep over a Young/Daly-style grid.
+//!
+//! `cargo bench --bench bench_resilience` — flags after `--`:
+//!   `--smoke`  CI mode: tiny stream, one timed iteration
+//!   `--n N`    workflows to stream (default 2000)
+
+use asyncflow::dag::Dag;
+use asyncflow::engine::EngineConfig;
+use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::failure::cadence::{cluster_fault_rate, run_chained, sweep_cadence};
+use asyncflow::failure::{FailureSpec, RetryPolicy};
+use asyncflow::resources::{ClusterSpec, ResourceRequest};
+use asyncflow::task::TaskSetSpec;
+use asyncflow::traffic::{run_traffic, ArrivalProcess, Catalog, TrafficSpec, WorkloadMix};
+use asyncflow::util::bench::{bench, report, report_header};
+use asyncflow::util::cli::Args;
+use asyncflow::util::json::ToJson;
+
+/// Single-task workflow: 1 core for 30 s, deterministic — small enough
+/// that faults regularly catch tasks mid-flight.
+fn solo() -> Workflow {
+    let mut dag = Dag::new();
+    dag.add_node("A");
+    Workflow {
+        name: "solo".into(),
+        sets: vec![TaskSetSpec::new("A", 1, ResourceRequest::new(1, 0), 30.0).with_sigma(0.0)],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0])],
+        asynchronous: vec![Pipeline::new("a").stage(&[0])],
+    }
+}
+
+fn main() {
+    let args = Args::from_env(&["smoke"]).unwrap();
+    let smoke = args.flag("smoke");
+    let n = args.get_usize("n", if smoke { 200 } else { 2_000 }).unwrap();
+    let iters = if smoke { 1 } else { 10 };
+
+    report_header();
+    println!(
+        "bench_resilience: {n} streamed solo workflows ({} mode)\n",
+        if smoke { "smoke" } else { "full" }
+    );
+
+    let catalog = Catalog::new().insert("solo", solo());
+    let cluster = ClusterSpec::uniform("bench", 8, 8, 0);
+    let cfg = EngineConfig::ideal();
+    let failure = FailureSpec {
+        retry: RetryPolicy { max_attempts: 0, base: 5.0, factor: 2.0, jitter: 0.25 },
+        ..FailureSpec::mtbf(500.0)
+    };
+    let base_spec = TrafficSpec {
+        process: ArrivalProcess::Poisson { rate: 1.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 1e9, // the cap, not the window, bounds this run
+        max_workflows: n,
+        seed: 1,
+        plan: None,
+        checkpoint_at: None,
+        policy: None,
+        failure: None,
+    };
+    let faulty_spec = TrafficSpec { failure: Some(failure.clone()), ..base_spec.clone() };
+
+    // Probe once for workload shape + determinism: two fault-injected
+    // runs must be bit-identical.
+    let probe = run_traffic(&faulty_spec, &catalog, &cluster, &cfg).unwrap();
+    let again = run_traffic(&faulty_spec, &catalog, &cluster, &cfg).unwrap();
+    assert_eq!(
+        probe.to_json().to_string(),
+        again.to_json().to_string(),
+        "fault-injected runs must be bit-identical per seed"
+    );
+    let stats = probe.resilience.expect("failure-enabled run reports resilience");
+    println!(
+        "workload: {} workflows, {} faults injected, {} tasks killed, {} retries\n",
+        probe.workflows.len(),
+        stats.failures_injected,
+        stats.tasks_killed,
+        stats.retries_scheduled,
+    );
+
+    let clean = bench("traffic: fault-free baseline", 1, iters, || {
+        let rep = run_traffic(&base_spec, &catalog, &cluster, &cfg).unwrap();
+        std::hint::black_box(rep.makespan);
+    });
+    report(&clean);
+
+    let faulty = bench("traffic: MTBF faults + retry pipeline", 1, iters, || {
+        let rep = run_traffic(&faulty_spec, &catalog, &cluster, &cfg).unwrap();
+        std::hint::black_box(rep.makespan);
+    });
+    report(&faulty);
+    println!(
+        "    -> failure-lane overhead {:.2}x over the fault-free loop",
+        faulty.secs.mean / clean.secs.mean
+    );
+
+    // Chained periodic checkpointing: every leg serializes, parses and
+    // restores the full simulation. Cadence chosen to take a handful
+    // of legs at either scale.
+    let every = probe.makespan / 8.0;
+    let chained = bench("traffic: chained checkpoints (8 legs)", 0, iters.min(3), || {
+        let (rep, legs) = run_chained(&faulty_spec, &catalog, &cluster, &cfg, every).unwrap();
+        std::hint::black_box((rep.makespan, legs));
+    });
+    report(&chained);
+    println!(
+        "    -> checkpoint-cycle overhead {:.2}x over the straight faulty run",
+        chained.secs.mean / faulty.secs.mean
+    );
+
+    // Cadence sweep: closed-form expectation + sampled fault walk over
+    // a log-ish grid (the `asyncflow resilience --sweep-cadence` core).
+    let rate = cluster_fault_rate(&cluster, &failure);
+    let grid: Vec<f64> = (0..if smoke { 8 } else { 24 })
+        .map(|i| 50.0 * 1.5f64.powi(i))
+        .collect();
+    let work = probe.makespan;
+    let sweep = bench("cadence sweep: expectation + fault walk", 1, iters, || {
+        let sw = sweep_cadence(work, rate, 60.0, &grid, 1).unwrap();
+        std::hint::black_box(sw.best);
+    });
+    report(&sweep);
+}

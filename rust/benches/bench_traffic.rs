@@ -44,6 +44,7 @@ fn main() {
         plan: None,
         checkpoint_at: None,
         policy: None,
+        failure: None,
     };
     let probe = run_traffic(&spec, &catalog, &cluster, &cfg).unwrap();
     let n_wf = probe.workflows.len();

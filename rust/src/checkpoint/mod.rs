@@ -47,11 +47,16 @@
 //! ## What is *not* captured
 //!
 //! Wall-clock scheduler accounting (`sched_wall`) restarts at zero —
-//! it measures this process, not the simulation. No live RNG state
-//! exists mid-run (TX streams are keyed per set, arrival/mix streams
-//! are drawn up front), but [`Rng::state`](crate::util::rng::Rng::state)
-//! / [`from_state`](crate::util::rng::Rng::from_state) provide the
-//! same capture/restore property for future stateful streams.
+//! it measures this process, not the simulation. The only live RNG
+//! stream mid-run is the failure process's fault stream (TX streams
+//! are keyed per set, arrival/mix streams are drawn up front, retry
+//! jitter is keyed per `(seed, uid, attempt)`); its position rides in
+//! the snapshot's `failure` state via
+//! [`Rng::state`](crate::util::rng::Rng::state) /
+//! [`from_state`](crate::util::rng::Rng::from_state), together with
+//! the pending retry-backoff entries and per-task attempt counts — so
+//! a resumed run replays the exact fault schedule the uninterrupted
+//! one would have seen.
 //!
 //! ```
 //! use asyncflow::engine::{Coordinator, EngineConfig, ExecutionMode, RunOutcome};

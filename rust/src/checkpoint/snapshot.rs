@@ -5,6 +5,7 @@
 use crate::engine::{DriverState, EngineConfig, ExecutionMode};
 use crate::entk::Workflow;
 use crate::error::{Error, Result};
+use crate::failure::{FailureState, RetryEntry};
 use crate::metrics::{CapacityTimeline, TaskRecord};
 use crate::pilot::{AutoscalePolicy, ResizeEvent};
 use crate::resources::{ClusterSpec, NodeSpec, Placement};
@@ -15,8 +16,11 @@ use crate::util::json::{arr_of, from_u64, obj, parse_arr, FromJson, Json, ToJson
 /// Schema version stamped into every snapshot; bumped on breaking
 /// layout changes so a stale checkpoint fails loudly instead of
 /// restoring garbage. (v2: queued tasks carry the owning driver slot
-/// and service estimate — the fair-share and backfill policy inputs.)
-pub const SNAPSHOT_VERSION: u64 = 2;
+/// and service estimate — the fair-share and backfill policy inputs.
+/// v3: failure-injection state — the fault process' RNG position and
+/// pending fault, killed tasks waiting out retry backoff, and per-uid
+/// attempt counts.)
+pub const SNAPSHOT_VERSION: u64 = 3;
 
 /// Fingerprint of the snapshot-struct field lists, recorded by
 /// `asyncflow lint` (rule SER002): `"v{SNAPSHOT_VERSION}:{fnv1a64 of
@@ -25,7 +29,7 @@ pub const SNAPSHOT_VERSION: u64 = 2;
 /// SNAPSHOT_VERSION is bumped and this constant is re-recorded — the
 /// lint finding prints the new expected value. Do not edit by hand
 /// except to paste that value.
-pub const SNAPSHOT_FIELDS_FINGERPRINT: &str = "v2:edabd102e4f9b1e7";
+pub const SNAPSHOT_FIELDS_FINGERPRINT: &str = "v3:443aef07ad96b5bf";
 
 /// A registered workflow whose driver has not materialized yet: until
 /// the engine clock reaches `arrival` it costs one workflow spec, no
@@ -141,6 +145,18 @@ pub struct SimSnapshot {
     pub grow_node: Option<NodeSpec>,
     pub sched_rounds: usize,
     pub sched_dirty: bool,
+    /// Failure-injection process state when failure injection was
+    /// active (`None` otherwise): spec, RNG position, pending fault
+    /// time, trace cursor and cumulative resilience stats — the resumed
+    /// fault sequence is bit-identical to the uninterrupted one.
+    pub failure: Option<FailureState>,
+    /// Killed tasks waiting out their retry backoff. Their uids are
+    /// *live* (spec and route survive the backoff) but neither running
+    /// nor queued.
+    pub retries: Vec<RetryEntry>,
+    /// Sparse per-uid attempt counts: `(uid, times killed)` for every
+    /// uid with a nonzero count.
+    pub attempts: Vec<(usize, u32)>,
 }
 
 fn usize_arr(xs: &[usize]) -> Json {
@@ -399,6 +415,25 @@ impl ToJson for SimSnapshot {
             ),
             ("sched_rounds", Json::from(self.sched_rounds)),
             ("sched_dirty", Json::from(self.sched_dirty)),
+            (
+                "failure",
+                match &self.failure {
+                    Some(f) => f.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            ("retries", arr_of(&self.retries)),
+            (
+                "attempts",
+                Json::Arr(
+                    self.attempts
+                        .iter()
+                        .map(|&(uid, n)| {
+                            Json::Arr(vec![Json::from(uid), Json::from(n as usize)])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -477,6 +512,29 @@ impl FromJson for SimSnapshot {
             },
             sched_rounds: v.req_u64("sched_rounds")? as usize,
             sched_dirty: v.req_bool("sched_dirty")?,
+            failure: match v.get("failure") {
+                Json::Null => None,
+                f => Some(FailureState::from_json(f)?),
+            },
+            retries: parse_arr(v, "retries")?,
+            attempts: {
+                let mut out = Vec::new();
+                for p in v.req_arr("attempts")? {
+                    let pair = p.as_arr().filter(|x| x.len() == 2).ok_or_else(|| {
+                        Error::Config(
+                            "snapshot: attempts entries must be [uid, count]".into(),
+                        )
+                    })?;
+                    let uid = pair[0].as_u64().ok_or_else(|| {
+                        Error::Config("snapshot: bad uid in attempts".into())
+                    })?;
+                    let n = pair[1].as_u64().ok_or_else(|| {
+                        Error::Config("snapshot: bad count in attempts".into())
+                    })?;
+                    out.push((uid as usize, n as u32));
+                }
+                out
+            },
         };
         snapshot.validate()?;
         Ok(snapshot)
@@ -565,7 +623,9 @@ impl SimSnapshot {
                 self.slab_len
             )));
         }
-        // Running + queued must partition the live uids.
+        // Running + queued + retry-pending must partition the live
+        // uids: a killed task's uid stays live across its backoff even
+        // though it is neither placed nor queued.
         let mut uid_placed = vec![false; self.slab_len];
         for r in &self.running {
             if r.uid >= self.slab_len || !uid_live[r.uid] {
@@ -595,13 +655,61 @@ impl SimSnapshot {
                 )));
             }
         }
-        if self.running.len() + self.queue.len() != self.live_tasks.len() {
+        for r in &self.retries {
+            if r.uid >= self.slab_len || !uid_live[r.uid] {
+                return Err(Error::Config(format!(
+                    "snapshot: retry-pending uid {} is not live",
+                    r.uid
+                )));
+            }
+            if std::mem::replace(&mut uid_placed[r.uid], true) {
+                return Err(Error::Config(format!(
+                    "snapshot: retry-pending uid {} is also running/queued",
+                    r.uid
+                )));
+            }
+            if !r.due.is_finite() || r.due < 0.0 {
+                return Err(Error::Config(format!(
+                    "snapshot: retry-pending uid {} has invalid due time {}",
+                    r.uid, r.due
+                )));
+            }
+        }
+        if self.running.len() + self.queue.len() + self.retries.len()
+            != self.live_tasks.len()
+        {
             return Err(Error::Config(format!(
-                "snapshot: {} running + {} queued does not match {} live tasks",
+                "snapshot: {} running + {} queued + {} retry-pending does not \
+                 match {} live tasks",
                 self.running.len(),
                 self.queue.len(),
+                self.retries.len(),
                 self.live_tasks.len()
             )));
+        }
+        if !self.retries.is_empty() && self.failure.is_none() {
+            return Err(Error::Config(
+                "snapshot: retry-pending tasks without a failure process".into(),
+            ));
+        }
+        let mut attempt_seen = vec![false; self.slab_len];
+        for &(uid, n) in &self.attempts {
+            if uid >= self.slab_len {
+                return Err(Error::Config(format!(
+                    "snapshot: attempt count for uid {uid} outside the slab"
+                )));
+            }
+            if n == 0 {
+                return Err(Error::Config(format!(
+                    "snapshot: zero attempt count for uid {uid} (sparse form \
+                     carries only nonzero counts)"
+                )));
+            }
+            if std::mem::replace(&mut attempt_seen[uid], true) {
+                return Err(Error::Config(format!(
+                    "snapshot: attempt count for uid {uid} appears twice"
+                )));
+            }
         }
         // Live tasks must route into live drivers.
         let driver_slots: std::collections::BTreeSet<usize> =

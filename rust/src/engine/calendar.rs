@@ -5,10 +5,11 @@
 //! the due ones) and step 4 re-folded every driver's
 //! `next_activation()` from scratch. The calendar replaces both scans:
 //! it holds each live driver's next activation as a *wake*, plus the
-//! loop's four singleton timed events (next pending arrival, next
-//! timed resize, next autoscaler tick, the checkpoint deadline) as
-//! *lanes*, so an iteration touches only drivers whose wakes are due
-//! and the next-event horizon is a heap peek.
+//! loop's singleton timed events (next pending arrival, next timed
+//! resize, next autoscaler tick, the checkpoint deadline, the next
+//! injected node failure, the earliest due retry) as *lanes*, so an
+//! iteration touches only drivers whose wakes are due and the
+//! next-event horizon is a heap peek.
 //!
 //! ## Wakes: binary heap with lazy invalidation
 //!
@@ -83,9 +84,14 @@ pub enum Lane {
     Autoscale,
     /// Checkpoint deadline (already gated on sim activity).
     Checkpoint,
+    /// Next injected node failure — MTBF fire or trace replay (already
+    /// gated on sim activity).
+    Failure,
+    /// Earliest due retry of a killed task waiting out its backoff.
+    Retry,
 }
 
-const N_LANES: usize = 4;
+const N_LANES: usize = 6;
 
 /// Min-heap entry; `BinaryHeap` is a max-heap, so the `Ord` impl is
 /// reversed. Ties break toward the lower slot so due wakes surface in

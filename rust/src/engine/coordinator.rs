@@ -64,6 +64,7 @@ use crate::checkpoint::{
 use crate::entk::Workflow;
 use crate::error::{Error, Result};
 use crate::exec::{Completion, Executor, RunningTask};
+use crate::failure::{FailureProcess, FailureSpec, RetryEntry};
 use crate::metrics::CapacityTimeline;
 use crate::pilot::{Agent, AutoscalePolicy, ResizeEvent, ResourcePlan, RunningMeta, Scheduler};
 use crate::resources::{Allocator, ClusterSpec, NodeSpec, ResourceRequest};
@@ -94,6 +95,11 @@ pub struct Coordinator {
     /// Elastic allocation plan (timed resizes + autoscaler), applied
     /// inside the event loop.
     plan: Option<ResourcePlan>,
+    /// Failure-injection spec (MTBF process / preemption trace +
+    /// retry policy), applied inside the event loop. On a restored
+    /// coordinator the snapshot's failure-process state wins; setting
+    /// a spec there is rejected.
+    failure: Option<FailureSpec>,
     /// Snapshot to resume from (set by [`Coordinator::restore`]).
     resume: Option<Box<SimSnapshot>>,
     /// Event-loop strategy (calendar vs legacy full scan). Execution
@@ -111,6 +117,7 @@ impl Coordinator {
             next_set_stream: 0,
             next_pipeline: 0,
             plan: None,
+            failure: None,
             resume: None,
             wake: WakePolicy::default(),
         }
@@ -142,6 +149,7 @@ impl Coordinator {
             next_set_stream: snapshot.next_set_stream,
             next_pipeline: snapshot.next_pipeline,
             plan: None,
+            failure: None,
             resume: Some(Box::new(snapshot)),
             wake: WakePolicy::default(),
         })
@@ -161,6 +169,28 @@ impl Coordinator {
     pub fn set_resource_plan(&mut self, plan: ResourcePlan) -> Result<()> {
         plan.validate()?;
         self.plan = Some(plan);
+        Ok(())
+    }
+
+    /// Attach a failure-injection spec: a seed-driven MTBF process
+    /// and/or a trace of timed node preemptions, plus the retry policy
+    /// applied to tasks the resulting node kills take down. A node
+    /// failure is a *hard kill* — in-flight work on the node is lost
+    /// (unlike a graceful drain, which lets running tasks finish) and
+    /// each victim re-enters the scheduler after its per-attempt
+    /// backoff. Rejected on a restored coordinator: the failure
+    /// process' state (RNG position, pending retries, attempt counts)
+    /// is part of the checkpoint and resumes from there.
+    pub fn set_failure_spec(&mut self, spec: FailureSpec) -> Result<()> {
+        if self.resume.is_some() {
+            return Err(Error::Config(
+                "failure: cannot attach a failure spec to a restored \
+                 coordinator (the failure process is part of the checkpoint)"
+                    .into(),
+            ));
+        }
+        spec.validate()?;
+        self.failure = Some(spec);
         Ok(())
     }
 
@@ -319,6 +349,19 @@ struct EngineLoop {
     /// Event-loop strategy: calendar (step only due drivers) vs the
     /// legacy full scan. See [`WakePolicy`].
     wake: WakePolicy,
+    /// Failure-injection process (MTBF draws + trace replay + resilience
+    /// stats). `None` when failure injection is off — the loop then
+    /// pays nothing for the feature.
+    failure: Option<FailureProcess>,
+    /// Killed tasks waiting out their retry backoff. Small (bounded by
+    /// tasks killed and not yet resubmitted), scanned for the min due
+    /// time; entries re-enter the scheduler through the ordinary
+    /// submission path when due.
+    retries: Vec<RetryEntry>,
+    /// Per-uid attempt counts (uid-indexed, sparse in practice):
+    /// `attempts[uid]` = times the task was killed so far. Reset when
+    /// the uid completes and is recycled.
+    attempts: Vec<u32>,
     /// Per-driver wake times + singleton event lanes (calendar mode).
     /// Never snapshotted: rebuilt from the drivers' deferred sets on
     /// restore (see [`EngineLoop::from_snapshot`]).
@@ -363,6 +406,17 @@ impl EngineLoop {
             None => (Vec::new(), None, None),
         };
         let next_check = autoscale.as_ref().map(|p| p.interval);
+        // Arm the stochastic fault process at t = 0 against the initial
+        // capacity (validated in `set_failure_spec`). Trace events need
+        // no arming — they replay from the sorted list.
+        let failure = coord.failure.map(|spec| {
+            let mut fp = FailureProcess::new(spec, coord.cfg.seed);
+            let mut weights = Vec::new();
+            fault_weights(&agent, &fp.spec, &mut weights);
+            let rate: f64 = weights.iter().map(|&(_, w)| w).sum();
+            fp.draw_next(0.0, rate);
+            fp
+        });
         let n_members = coord.pending.len();
         let mut drivers: Vec<Option<WorkflowDriver>> = Vec::new();
         drivers.resize_with(n_members, || None);
@@ -398,6 +452,9 @@ impl EngineLoop {
             sched_wall: Duration::ZERO,
             sched_dirty: true,
             wake,
+            failure,
+            retries: Vec::new(),
+            attempts: Vec::new(),
             // Drivers register their wakes as they materialize.
             calendar: Calendar::new(),
             driver_steps: 0,
@@ -445,6 +502,9 @@ impl EngineLoop {
             grow_node,
             sched_rounds,
             sched_dirty,
+            failure,
+            retries,
+            attempts,
         } = s;
 
         // Members: live drivers, finished reports, not-yet-arrived.
@@ -597,6 +657,21 @@ impl EngineLoop {
             calendar.set_wake(slot, d.next_activation());
         }
 
+        // Failure process: RNG position, pending fault, trace cursor and
+        // cumulative stats restore verbatim — the resumed fault sequence
+        // is bit-identical to the uninterrupted one. Attempt counts
+        // rebuild from their sparse form.
+        let failure = failure.as_ref().map(FailureProcess::from_state);
+        let mut attempt_counts = vec![0u32; slab_len];
+        for &(uid, n) in &attempts {
+            if uid >= slab_len {
+                return Err(Error::Config(format!(
+                    "snapshot: attempt count for uid {uid} outside the slab"
+                )));
+            }
+            attempt_counts[uid] = n;
+        }
+
         Ok(EngineLoop {
             cfg,
             cluster,
@@ -624,6 +699,9 @@ impl EngineLoop {
             sched_wall: Duration::ZERO,
             sched_dirty,
             wake,
+            failure,
+            retries,
+            attempts: attempt_counts,
             calendar,
             driver_steps: 0,
         })
@@ -682,6 +760,15 @@ impl EngineLoop {
             (0..alloc.node_count()).map(|i| alloc.is_draining(i)).collect();
         let cursor = alloc.cursor();
         let span_order = alloc.span_order_state().map(|o| o.to_vec());
+        // Attempt counts serialize sparsely: only uids that were
+        // actually killed carry a nonzero count.
+        let attempts: Vec<(usize, u32)> = self
+            .attempts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &n)| n > 0)
+            .map(|(uid, &n)| (uid, n))
+            .collect();
         SimSnapshot {
             now,
             cfg: self.cfg,
@@ -711,6 +798,9 @@ impl EngineLoop {
             grow_node: self.grow_node,
             sched_rounds: self.sched_rounds,
             sched_dirty: self.sched_dirty,
+            failure: self.failure.as_ref().map(FailureProcess::state),
+            retries: self.retries,
+            attempts,
         }
     }
 
@@ -835,6 +925,68 @@ impl EngineLoop {
                 }
             }
 
+            // 1.5. Failure injection: fire every due node fault — trace
+            // replays first, then the stochastic MTBF process — and
+            // resubmit every killed task whose retry backoff has
+            // elapsed. Ordering matters at a shared instant: kills
+            // precede the scheduler round (step 3), so a task placed at
+            // the same instant a node dies is never a victim, and
+            // completions at exactly the fault time were drained on the
+            // way here (the task finished; the fault just missed it).
+            if let Some(mut fp) = self.failure.take() {
+                while let Some(ev) = fp.trace_due(now, EPS) {
+                    self.process_kill(ev.node, now, executor, &mut fp)?;
+                }
+                while !fp.next_fault.is_nan() && fp.next_fault <= now + EPS {
+                    // One victim-pick draw per fire (consumed even when
+                    // nothing is schedulable, so the RNG stream is a
+                    // pure function of the fault count), then re-arm
+                    // against the post-kill capacity.
+                    let mut weights = Vec::new();
+                    fault_weights(&self.agent, &fp.spec, &mut weights);
+                    match fp.pick_victim(&weights) {
+                        Some(node) => {
+                            self.process_kill(node, now, executor, &mut fp)?
+                        }
+                        None => fp.stats.failures_injected += 1,
+                    }
+                    fault_weights(&self.agent, &fp.spec, &mut weights);
+                    let rate: f64 = weights.iter().map(|&(_, w)| w).sum();
+                    fp.draw_next(now, rate);
+                }
+                self.failure = Some(fp);
+            }
+            if !self.retries.is_empty() {
+                // Deterministic resubmission order at a shared instant:
+                // (due, uid). Retries re-enter the scheduler as ordinary
+                // submissions — fair-share and backfill disciplines see
+                // them exactly like fresh work.
+                self.retries.sort_by(|a, b| {
+                    a.due.total_cmp(&b.due).then(a.uid.cmp(&b.uid))
+                });
+                let due = self
+                    .retries
+                    .iter()
+                    .take_while(|r| r.due <= now + EPS)
+                    .count();
+                for r in self.retries.drain(..due) {
+                    let (di, local) = self.route[r.uid];
+                    let prio = match self.drivers[di].as_ref() {
+                        Some(d) => d.priority_of(local),
+                        None => {
+                            return Err(Error::Engine(format!(
+                                "retry for task {} routed to slot {di} with no \
+                                 live driver",
+                                r.uid
+                            )))
+                        }
+                    };
+                    self.agent.submit(&self.specs[r.uid], prio, di, now);
+                    self.sched_dirty = true;
+                    self.stalled_checks = 0;
+                }
+            }
+
             // 2. Release activations that are due, in slot order (this
             // matches merged-DAG set ordering: member k's sets precede
             // member k+1's). The calendar hands back exactly the slots
@@ -956,9 +1108,26 @@ impl EngineLoop {
                     if let Some(t) = autoscale_tick {
                         nd = nd.min(t);
                     }
+                    // A pending retry is real future work: it keeps the
+                    // sim active (and prevents the deadlock error /
+                    // premature drain below) until it resubmits.
+                    if let Some(t) = self.next_retry() {
+                        nd = nd.min(t);
+                    }
                     let sim_active = self.in_flight > 0
                         || nd.is_finite()
                         || self.agent.queue_len() > 0;
+                    // The next injected fault only matters while the
+                    // sim is active — like the checkpoint deadline, it
+                    // must not keep a drained run idling forward.
+                    if sim_active {
+                        if let Some(fp) = &self.failure {
+                            let t = fp.next_event();
+                            if !t.is_nan() {
+                                nd = nd.min(t);
+                            }
+                        }
+                    }
                     if let Some(t_ck) = checkpoint_at {
                         if sim_active {
                             nd = nd.min(t_ck);
@@ -977,11 +1146,28 @@ impl EngineLoop {
                         self.resize_events.get(self.next_resize).map(|e| e.at),
                     );
                     self.calendar.set_lane(Lane::Autoscale, autoscale_tick);
+                    // Retries count toward activity (pending future
+                    // work); the fault and checkpoint lanes are cleared
+                    // first so a stale value never inflates the
+                    // activity check, then re-set only while active —
+                    // a drained run must complete, not idle forward to
+                    // the next would-be fault.
+                    self.calendar.set_lane(Lane::Retry, self.next_retry());
+                    self.calendar.set_lane(Lane::Failure, None);
                     self.calendar.set_lane(Lane::Checkpoint, None);
                     let horizon = self.calendar.next_event();
                     let sim_active = self.in_flight > 0
                         || horizon.is_finite()
                         || self.agent.queue_len() > 0;
+                    if sim_active {
+                        self.calendar.set_lane(
+                            Lane::Failure,
+                            self.failure
+                                .as_ref()
+                                .map(|fp| fp.next_event())
+                                .filter(|t| !t.is_nan()),
+                        );
+                    }
                     self.calendar
                         .set_lane(Lane::Checkpoint, checkpoint_at.filter(|_| sim_active));
                     self.calendar.next_event()
@@ -1016,10 +1202,24 @@ impl EngineLoop {
                     self.agent.complete(c.uid);
                     self.sched_dirty = true; // resources were freed
                     let (di, local) = self.route[c.uid];
+                    // Goodput: a completion's full residency is work
+                    // that *counted* — unlike the lost core-hours a
+                    // kill discards (see `process_kill`).
+                    if let Some(fp) = self.failure.as_mut() {
+                        if let Some(d) = self.drivers[di].as_ref() {
+                            let dt = c.finished_at - d.record(local).started;
+                            let req = &self.specs[c.uid].req;
+                            fp.stats.goodput_core_s += dt * req.cpu_cores as f64;
+                            fp.stats.goodput_gpu_s += dt * req.gpus as f64;
+                        }
+                    }
                     // Recycle the global uid: its spec/route slot (and
                     // the agent's placement entry) are now reusable.
                     self.free_uids.push(c.uid);
                     self.live_uids -= 1;
+                    if c.uid < self.attempts.len() {
+                        self.attempts[c.uid] = 0;
+                    }
                     {
                         let d = self.drivers[di]
                             .as_mut()
@@ -1107,6 +1307,10 @@ impl EngineLoop {
             r.sched_wall = self.sched_wall;
             r.driver_steps = self.driver_steps;
             r.peak_live_tasks = self.peak_live;
+            // Resilience stats are coordinator-global (the failure
+            // process spans members), repeated on every report like
+            // the scheduler accounting above.
+            r.resilience = self.failure.as_ref().map(|fp| fp.stats);
             // The full (final) timeline replaces each member's
             // fold-time snapshot: member utilization was already
             // integrated over the member's own window, for which the
@@ -1115,6 +1319,90 @@ impl EngineLoop {
             r.capacity = self.capacity.clone();
         }
         Ok(RunOutcome::Completed(reports))
+    }
+
+    /// Earliest pending retry due time (linear scan — the retry set is
+    /// bounded by killed-and-not-yet-resubmitted tasks, typically tiny).
+    fn next_retry(&self) -> Option<f64> {
+        self.retries.iter().map(|r| r.due).reduce(f64::min)
+    }
+
+    /// Hard-kill node `node` at `now`: every placement touching it is
+    /// torn down ([`Agent::kill_node`] — capacity released, fair-share
+    /// ledger retired), its in-flight completion is cancelled in the
+    /// executor, the partial work is booked as lost core/GPU-seconds,
+    /// and each victim either enters retry backoff or — with the
+    /// attempt budget exhausted — fails the run with the typed
+    /// [`Error::RetriesExhausted`]. The victim's uid stays live across
+    /// the backoff (its spec and route must survive until the retry
+    /// resubmits), and the driver is *not* stepped: the task did not
+    /// complete, so its countdowns must not move.
+    fn process_kill(
+        &mut self,
+        node: usize,
+        now: f64,
+        executor: &mut dyn Executor,
+        fp: &mut FailureProcess,
+    ) -> Result<()> {
+        fp.stats.failures_injected += 1;
+        let victims = self.agent.kill_node(node);
+        if victims.is_empty() {
+            return Ok(());
+        }
+        self.sched_dirty = true; // capacity returned / queue changed
+        for (uid, meta) in victims {
+            executor.cancel(uid);
+            self.in_flight -= 1;
+            let (di, local) = self.route[uid];
+            let d = self.drivers[di].as_ref().ok_or_else(|| {
+                Error::Engine(format!(
+                    "killed task {uid} routed to slot {di} with no live driver"
+                ))
+            })?;
+            let dt = (now - d.record(local).started).max(0.0);
+            fp.stats.lost_core_s += dt * meta.req.cpu_cores as f64;
+            fp.stats.lost_gpu_s += dt * meta.req.gpus as f64;
+            fp.stats.tasks_killed += 1;
+            if self.attempts.len() <= uid {
+                self.attempts.resize(uid + 1, 0);
+            }
+            self.attempts[uid] += 1;
+            let attempt = self.attempts[uid];
+            if fp.spec.retry.allows(attempt) {
+                let delay = fp.spec.retry.delay(self.cfg.seed, uid, attempt);
+                self.retries.push(RetryEntry { uid, due: now + delay, attempt });
+                fp.stats.retries_scheduled += 1;
+            } else {
+                fp.stats.retries_exhausted += 1;
+                return Err(Error::RetriesExhausted {
+                    workflow: d.workflow_name().to_string(),
+                    uid,
+                    attempts: attempt,
+                });
+            }
+        }
+        // Kills on a draining node shed offered capacity at this
+        // instant; a no-op compare otherwise.
+        record_offered(&mut self.capacity, &self.agent, now);
+        Ok(())
+    }
+}
+
+/// Per-node fault weights (failures per second) for the stochastic
+/// process: every schedulable node fails at rate `1/mtbf`, scaled by
+/// `gpu_factor` on GPU nodes (accelerator hardware fails more often in
+/// practice). Draining nodes are excluded — they are already leaving.
+fn fault_weights(agent: &Agent, spec: &FailureSpec, out: &mut Vec<(usize, f64)>) {
+    out.clear();
+    let Some(mtbf) = spec.mtbf else { return };
+    let alloc = agent.allocator();
+    let nodes = &alloc.spec().nodes;
+    for (i, n) in nodes.iter().enumerate() {
+        if alloc.is_draining(i) {
+            continue;
+        }
+        let w = (1.0 / mtbf) * if n.gpus > 0 { spec.gpu_factor } else { 1.0 };
+        out.push((i, w));
     }
 }
 

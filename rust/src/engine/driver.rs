@@ -366,6 +366,14 @@ impl WorkflowDriver {
         self.records[uid].started = now;
     }
 
+    /// Scheduling priority of an already-activated task (local uid): a
+    /// pure function of driver state, recomputed when failure injection
+    /// resubmits a killed task — the retry enters the scheduler with
+    /// the same priority an ordinary submission would carry.
+    pub fn priority_of(&self, uid: usize) -> u64 {
+        self.pipeline_offset + self.jobsets[self.jobset_of[uid]].pipeline as u64
+    }
+
     /// Earliest pending deferred activation, if any.
     pub fn next_activation(&self) -> Option<f64> {
         self.deferred.iter().map(|d| d.0).reduce(f64::min)

@@ -177,6 +177,12 @@ pub struct RunReport {
     /// coordinator-global and repeated on every member report;
     /// utilization figures integrate against it.
     pub capacity: CapacityTimeline,
+    /// Resilience accounting when failure injection was active
+    /// (`None` otherwise): faults fired, tasks killed, retries, and
+    /// the goodput / lost-work core-second split. Coordinator-global
+    /// (the failure process spans members), repeated on every report
+    /// like `sched_rounds`.
+    pub resilience: Option<crate::failure::ResilienceStats>,
 }
 
 impl RunReport {
@@ -234,6 +240,7 @@ impl RunReport {
             driver_steps: 0,
             peak_live_tasks: 0,
             capacity,
+            resilience: None,
             records,
             trace,
         }

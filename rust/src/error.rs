@@ -27,6 +27,18 @@ pub enum Error {
     /// Engine / executor invariant violation.
     Engine(String),
 
+    /// A task killed by failure injection ran out of retry attempts
+    /// (see [`crate::failure::RetryPolicy`]). Typed so callers can
+    /// tell an exhausted retry budget from a wedged run.
+    RetriesExhausted {
+        /// Workflow the task belongs to.
+        workflow: String,
+        /// Coordinator-global task uid.
+        uid: usize,
+        /// Attempts consumed (initial run + retries).
+        attempts: u32,
+    },
+
     Io(std::io::Error),
 
     /// Underlying XLA / PJRT error (`pjrt` feature).
@@ -45,6 +57,11 @@ impl fmt::Display for Error {
             }
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Engine(m) => write!(f, "engine error: {m}"),
+            Error::RetriesExhausted { workflow, uid, attempts } => write!(
+                f,
+                "retries exhausted: task uid {uid} of workflow '{workflow}' \
+                 failed {attempts} times"
+            ),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
         }
@@ -88,5 +105,9 @@ mod tests {
         );
         let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "nope").into();
         assert!(io.to_string().starts_with("io error: "));
+        assert_eq!(
+            Error::RetriesExhausted { workflow: "ddmd".into(), uid: 9, attempts: 4 }.to_string(),
+            "retries exhausted: task uid 9 of workflow 'ddmd' failed 4 times"
+        );
     }
 }

@@ -50,6 +50,13 @@ pub trait Executor {
     /// Current engine time (virtual seconds, or scaled wall-clock).
     fn now(&self) -> f64;
 
+    /// Abort a running task: its completion must never be delivered.
+    /// Virtual executors drop the pending completion event; the
+    /// default is a no-op for executors that cannot revoke work
+    /// already handed to a real thread (the engine then ignores the
+    /// stale completion by uid).
+    fn cancel(&mut self, _uid: usize) {}
+
     /// Earliest pending completion time, when the executor can know it
     /// (virtual time). Real executors return `None`.
     fn peek_next_completion(&self) -> Option<f64> {

@@ -1,0 +1,521 @@
+//! Checkpoint-cadence layer: periodic snapshot chaining and the
+//! cadence-vs-failure-rate sweep.
+//!
+//! Two tools share this module:
+//!
+//! - [`run_chained`] — the *real* thing: run a traffic scenario under
+//!   `--checkpoint-every T`, snapshotting the whole simulation at every
+//!   cadence multiple and resuming it from the serialized form. Every
+//!   leg crosses the JSON wire format, so one chained run exercises the
+//!   snapshot schema as hard as `T/makespan` separate crash/resume
+//!   tests — and must still produce the bit-identical final report.
+//!
+//! - [`sweep_cadence`] — the *model*: for each candidate cadence,
+//!   the expected wall-clock of a run of `work` seconds under an
+//!   exponential fault process (rate λ, checkpoint cost C), using the
+//!   classic renewal argument behind the Young/Daly optimum: a segment
+//!   needing `u` uninterrupted seconds costs `(e^{λu} − 1)/λ` in
+//!   expectation, so short cadences drown in checkpoint overhead and
+//!   long ones in lost rework, with the minimum near
+//!   `T* = sqrt(2·C·MTBF)`. A seeded fault-walk (one sampled path per
+//!   cadence, same fault sequence for every cadence) rides along so the
+//!   table shows a concrete draw next to the expectation — bit-identical
+//!   for a given seed.
+
+use crate::engine::{EngineConfig, EPS};
+use crate::error::{Error, Result};
+use crate::resources::ClusterSpec;
+use crate::traffic::{
+    run_traffic_resumable, Catalog, TrafficCheckpoint, TrafficOutcome, TrafficReport,
+    TrafficSpec,
+};
+use crate::util::json::{obj, FromJson, Json, ToJson};
+use crate::util::rng::Rng;
+
+use super::FailureSpec;
+
+/// Stream tag for the cadence-sweep fault walk (`"CADE"`).
+const CADENCE_TAG: u64 = 0x4341_4445;
+
+/// Sampled-path safety valve: a cadence whose segments essentially
+/// never fit between faults would walk forever; past this many faults
+/// the sampled path is reported as unbounded.
+const MAX_WALK_FAULTS: u64 = 100_000;
+
+/// Superposed stochastic fault rate (failures/second) the spec induces
+/// on a cluster: `1/mtbf` per schedulable node, GPU nodes scaled by
+/// [`FailureSpec::gpu_factor`]. Zero when the spec has no MTBF process.
+pub fn cluster_fault_rate(cluster: &ClusterSpec, spec: &FailureSpec) -> f64 {
+    let Some(mtbf) = spec.mtbf else { return 0.0 };
+    cluster
+        .nodes
+        .iter()
+        .map(|n| (1.0 / mtbf) * if n.gpus > 0 { spec.gpu_factor } else { 1.0 })
+        .sum()
+}
+
+/// Young/Daly first-order optimal checkpoint interval
+/// `T* = sqrt(2·C·MTBF)` for checkpoint cost `cost` and *system* mean
+/// time between failures `1/rate`.
+pub fn young_daly(cost: f64, rate: f64) -> f64 {
+    if rate > 0.0 {
+        (2.0 * cost / rate).sqrt()
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// One cadence's outcome in a [`CadenceSweep`]: the expectation model
+/// and the sampled fault-walk, side by side.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CadencePoint {
+    /// Checkpoint interval (engine seconds of committed work).
+    pub cadence: f64,
+    /// Expected wall-clock to finish the work (the ranking metric).
+    pub expected_wall: f64,
+    /// Expected fault count over the run.
+    pub expected_faults: f64,
+    /// Expected wall-clock lost to rework (progress destroyed by
+    /// faults, checkpoint-write time of failed attempts included).
+    pub expected_lost: f64,
+    /// Deterministic checkpoint-write overhead: one write per
+    /// completed segment except the last.
+    pub checkpoint_overhead: f64,
+    /// Wall-clock of the seeded sampled path (`inf` if the walk hit
+    /// the fault cap without finishing).
+    pub walk_wall: f64,
+    /// Faults the sampled path absorbed.
+    pub walk_faults: u64,
+    /// Rework the sampled path lost.
+    pub walk_lost: f64,
+}
+
+/// Result of [`sweep_cadence`]: per-cadence costs plus the located
+/// optimum and the Young/Daly reference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CadenceSweep {
+    /// Uninterrupted work being protected (seconds).
+    pub work: f64,
+    /// System fault rate λ (failures/second).
+    pub rate: f64,
+    /// Checkpoint write cost (seconds).
+    pub cost: f64,
+    /// Per-cadence outcomes, in input order.
+    pub points: Vec<CadencePoint>,
+    /// Index into [`points`](Self::points) of the minimal expected
+    /// wall-clock (`None` if every cadence diverged).
+    pub best: Option<usize>,
+    /// Young/Daly `T* = sqrt(2·C/λ)` reference interval.
+    pub young_daly: f64,
+}
+
+/// Lazily-extended cumulative fault times of one seeded exponential
+/// process: the *same* sequence is replayed against every cadence, so
+/// differences between cadences come from the cadence alone.
+#[derive(Debug)]
+pub struct FaultWalk {
+    times: Vec<f64>,
+    rng: Rng,
+    rate: f64,
+}
+
+impl FaultWalk {
+    /// Walk for fault rate `rate` (> 0), forked from `seed` on a
+    /// dedicated stream tag.
+    pub fn new(rate: f64, seed: u64) -> Result<FaultWalk> {
+        if !rate.is_finite() || rate <= 0.0 {
+            return Err(Error::Config(format!(
+                "cadence sweep: fault rate must be positive and finite, got {rate}"
+            )));
+        }
+        Ok(FaultWalk { times: Vec::new(), rng: Rng::new(seed).fork(CADENCE_TAG), rate })
+    }
+
+    /// Absolute time of the `i`-th fault (0-based), drawing further
+    /// inter-arrival gaps on demand.
+    pub fn time(&mut self, i: usize) -> f64 {
+        while self.times.len() <= i {
+            let prev = self.times.last().copied().unwrap_or(0.0);
+            self.times.push(prev + self.rng.exp(self.rate));
+        }
+        self.times[i]
+    }
+}
+
+/// Sweep checkpoint cadences against an exponential fault process.
+///
+/// `work` is the uninterrupted wall-clock being protected (typically a
+/// failure-free traffic run's makespan), `rate` the system fault rate
+/// (see [`cluster_fault_rate`]), `cost` the checkpoint write cost.
+/// Each candidate cadence is scored by its expected wall-clock under
+/// the renewal model (deterministic) and walked once against a seeded
+/// fault sequence shared across cadences (bit-identical per seed).
+pub fn sweep_cadence(
+    work: f64,
+    rate: f64,
+    cost: f64,
+    cadences: &[f64],
+    seed: u64,
+) -> Result<CadenceSweep> {
+    if !work.is_finite() || work <= 0.0 {
+        return Err(Error::Config(format!(
+            "cadence sweep: work must be positive and finite, got {work}"
+        )));
+    }
+    if !cost.is_finite() || cost < 0.0 {
+        return Err(Error::Config(format!(
+            "cadence sweep: checkpoint cost must be finite and >= 0, got {cost}"
+        )));
+    }
+    if cadences.is_empty() {
+        return Err(Error::Config("cadence sweep: no cadences given".into()));
+    }
+    for &t in cadences {
+        if !t.is_finite() || t <= 0.0 {
+            return Err(Error::Config(format!(
+                "cadence sweep: cadences must be positive and finite, got {t}"
+            )));
+        }
+    }
+    let mut walk = FaultWalk::new(rate, seed)?;
+    let mut points = Vec::with_capacity(cadences.len());
+    for &cadence in cadences {
+        points.push(score_cadence(work, rate, cost, cadence, &mut walk));
+    }
+    let mut best: Option<usize> = None;
+    for (i, p) in points.iter().enumerate() {
+        if p.expected_wall.is_finite()
+            && best.is_none_or(|b| p.expected_wall < points[b].expected_wall)
+        {
+            best = Some(i);
+        }
+    }
+    Ok(CadenceSweep { work, rate, cost, points, best, young_daly: young_daly(cost, rate) })
+}
+
+/// Score one cadence: closed-form expectation plus one sampled path.
+fn score_cadence(
+    work: f64,
+    rate: f64,
+    cost: f64,
+    cadence: f64,
+    walk: &mut FaultWalk,
+) -> CadencePoint {
+    // Segment layout: full `cadence`-sized segments, a (possibly
+    // shorter) tail, a checkpoint write after every segment but the
+    // last. `u` below is the uninterrupted time a segment needs.
+    let full = (work / cadence).floor() as u64;
+    let tail = work - full as f64 * cadence;
+    let n_segments = full + u64::from(tail > 0.0);
+    let checkpoint_overhead = n_segments.saturating_sub(1) as f64 * cost;
+
+    // Expectation: a run needing `u` uninterrupted seconds under
+    // exponential faults takes (e^{λu} − 1)/λ expected seconds and
+    // absorbs e^{λu} − 1 expected faults (renewal argument).
+    let mut expected_wall = 0.0;
+    let mut expected_faults = 0.0;
+    let mut expected_lost = 0.0;
+    // Sampled path: replay the shared fault sequence, rewinding to the
+    // last checkpoint on every hit.
+    let mut walk_wall = 0.0;
+    let mut walk_faults = 0u64;
+    let mut walk_lost = 0.0;
+    let mut committed = 0.0;
+    let mut fault_idx = 0usize;
+    for seg in 0..n_segments {
+        let seg_work = if seg + 1 == n_segments && tail > 0.0 { tail } else { cadence };
+        let u = seg_work + if seg + 1 == n_segments { 0.0 } else { cost };
+        let e_faults = (rate * u).exp() - 1.0;
+        expected_faults += e_faults;
+        expected_wall += if rate > 0.0 { e_faults / rate } else { u };
+        expected_lost += if rate > 0.0 { e_faults / rate - u } else { 0.0 };
+
+        if walk_wall.is_finite() {
+            loop {
+                let fault_at = walk.time(fault_idx);
+                if fault_at >= walk_wall + u {
+                    // The segment (and its checkpoint write) fits
+                    // before the next fault: commit and move on.
+                    walk_wall += u;
+                    committed += seg_work;
+                    break;
+                }
+                // Fault mid-attempt: everything since the last
+                // checkpoint is rework. Fail-stop-restart, no extra
+                // recovery cost (matching the engine's kill model).
+                walk_faults += 1;
+                fault_idx += 1;
+                walk_lost += fault_at - walk_wall;
+                walk_wall = fault_at;
+                if walk_faults >= MAX_WALK_FAULTS {
+                    walk_wall = f64::INFINITY;
+                    break;
+                }
+            }
+        }
+    }
+    // `committed` is only consumed by the debug invariant below; the
+    // name keeps the walk readable.
+    debug_assert!(!walk_wall.is_finite() || (committed - work).abs() < EPS.max(work * EPS));
+    CadencePoint {
+        cadence,
+        expected_wall,
+        expected_faults,
+        expected_lost,
+        checkpoint_overhead,
+        walk_wall,
+        walk_faults,
+        walk_lost,
+    }
+}
+
+impl CadenceSweep {
+    /// Human-readable sweep table plus the located optimum and the
+    /// Young/Daly reference.
+    pub fn render(&self) -> String {
+        let mtbf = if self.rate > 0.0 { 1.0 / self.rate } else { f64::INFINITY };
+        let mut s = format!(
+            "cadence sweep: work {:.0} s, checkpoint cost {:.1} s, system MTBF {:.0} s (rate {:.3e}/s)\n",
+            self.work, self.cost, mtbf, self.rate,
+        );
+        s.push_str(&format!(
+            "{:>10} {:>13} {:>10} {:>10} {:>10} {:>12} {:>7} {:>10}\n",
+            "cadence_s", "expected_wall", "e_faults", "e_lost", "ckpt_ovh", "walk_wall", "faults", "walk_lost",
+        ));
+        for (i, p) in self.points.iter().enumerate() {
+            s.push_str(&format!(
+                "{:>10.1} {:>13.1} {:>10.2} {:>10.1} {:>10.1} {:>12.1} {:>7} {:>10.1}{}\n",
+                p.cadence,
+                p.expected_wall,
+                p.expected_faults,
+                p.expected_lost,
+                p.checkpoint_overhead,
+                p.walk_wall,
+                p.walk_faults,
+                p.walk_lost,
+                if Some(i) == self.best { "  <- optimal" } else { "" },
+            ));
+        }
+        match self.best {
+            Some(b) => s.push_str(&format!(
+                "optimal cadence {:.1} s (expected wall {:.1} s, {:.2}x the failure-free run); Young/Daly T* = sqrt(2*C*MTBF) = {:.1} s\n",
+                self.points[b].cadence,
+                self.points[b].expected_wall,
+                self.points[b].expected_wall / self.work,
+                self.young_daly,
+            )),
+            None => s.push_str(
+                "no cadence makes progress under this failure rate (expected wall diverged)\n",
+            ),
+        }
+        s
+    }
+
+    /// CSV rendering: one row per cadence, `optimal` marking the
+    /// minimum-expected-wall row.
+    pub fn csv(&self) -> String {
+        let mut s = String::from(
+            "cadence_s,expected_wall_s,expected_faults,expected_lost_s,\
+             checkpoint_overhead_s,walk_wall_s,walk_faults,walk_lost_s,optimal\n",
+        );
+        for (i, p) in self.points.iter().enumerate() {
+            s.push_str(&format!(
+                "{:.3},{:.3},{:.6},{:.3},{:.3},{:.3},{},{:.3},{}\n",
+                p.cadence,
+                p.expected_wall,
+                p.expected_faults,
+                p.expected_lost,
+                p.checkpoint_overhead,
+                p.walk_wall,
+                p.walk_faults,
+                p.walk_lost,
+                if Some(i) == self.best { 1 } else { 0 },
+            ));
+        }
+        s
+    }
+
+    /// Structured export (deterministic field order).
+    pub fn to_json(&self) -> Json {
+        let points = self
+            .points
+            .iter()
+            .map(|p| {
+                obj([
+                    ("cadence_s", Json::from(p.cadence)),
+                    ("expected_wall_s", Json::from(p.expected_wall)),
+                    ("expected_faults", Json::from(p.expected_faults)),
+                    ("expected_lost_s", Json::from(p.expected_lost)),
+                    ("checkpoint_overhead_s", Json::from(p.checkpoint_overhead)),
+                    ("walk_wall_s", Json::from(p.walk_wall)),
+                    ("walk_faults", Json::from(p.walk_faults as f64)),
+                    ("walk_lost_s", Json::from(p.walk_lost)),
+                ])
+            })
+            .collect();
+        obj([
+            ("work_s", Json::from(self.work)),
+            ("rate_per_s", Json::from(self.rate)),
+            ("checkpoint_cost_s", Json::from(self.cost)),
+            ("young_daly_s", Json::from(self.young_daly)),
+            (
+                "optimal_cadence_s",
+                match self.best {
+                    Some(b) => Json::from(self.points[b].cadence),
+                    None => Json::Null,
+                },
+            ),
+            ("points", Json::Arr(points)),
+        ])
+    }
+}
+
+/// Run a traffic scenario with periodic checkpointing: snapshot the
+/// whole simulation at every multiple of `every` engine seconds,
+/// round-trip each snapshot through its JSON wire format, and resume
+/// it — until the stream drains. Returns the final report (bit-identical
+/// to the uninterrupted run's) and the number of snapshot legs taken.
+pub fn run_chained(
+    spec: &TrafficSpec,
+    catalog: &Catalog,
+    cluster: &ClusterSpec,
+    cfg: &EngineConfig,
+    every: f64,
+) -> Result<(TrafficReport, usize)> {
+    if !every.is_finite() || every <= 0.0 {
+        return Err(Error::Config(format!(
+            "checkpoint-every: cadence must be positive and finite, got {every}"
+        )));
+    }
+    let mut spec = spec.clone();
+    spec.checkpoint_at = Some(every);
+    let mut outcome = run_traffic_resumable(&spec, catalog, cluster, cfg)?;
+    let mut legs = 0usize;
+    loop {
+        match outcome {
+            TrafficOutcome::Completed(rep) => return Ok((*rep, legs)),
+            TrafficOutcome::Checkpointed(ck) => {
+                legs += 1;
+                // Every leg crosses the wire format: serialize, parse,
+                // rebuild. A schema bug surfaces here, not in some
+                // later real preemption.
+                let wire = ck.to_json().to_string();
+                let ck = TrafficCheckpoint::from_json(&Json::parse(&wire)?)?;
+                // Next cadence multiple strictly past the snapshot
+                // instant (the engine pauses within EPS of the target,
+                // so a naive `every * (legs + 1)` could re-checkpoint
+                // without progress).
+                let mut k = (ck.sim.now / every).floor() + 1.0;
+                while every * k <= ck.sim.now + EPS {
+                    k += 1.0;
+                }
+                outcome = ck.resume_until(None, Some(every * k))?;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_walk_is_deterministic_and_increasing() {
+        let mut a = FaultWalk::new(0.001, 42).unwrap();
+        let mut b = FaultWalk::new(0.001, 42).unwrap();
+        // Out-of-order access extends the same sequence.
+        let t5 = a.time(5);
+        assert_eq!(b.time(5), t5);
+        assert_eq!(a.time(2), b.time(2));
+        for i in 1..=5 {
+            assert!(a.time(i) > a.time(i - 1));
+        }
+        let mut c = FaultWalk::new(0.001, 43).unwrap();
+        assert_ne!(c.time(0), a.time(0));
+        assert!(FaultWalk::new(0.0, 1).is_err());
+    }
+
+    #[test]
+    fn sweep_is_bit_identical_per_seed() {
+        let cadences = [100.0, 300.0, 1000.0, 3000.0];
+        let a = sweep_cadence(20_000.0, 1e-3, 30.0, &cadences, 7).unwrap();
+        let b = sweep_cadence(20_000.0, 1e-3, 30.0, &cadences, 7).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        // A different seed changes only the sampled-walk columns.
+        let c = sweep_cadence(20_000.0, 1e-3, 30.0, &cadences, 8).unwrap();
+        for (pa, pc) in a.points.iter().zip(&c.points) {
+            assert_eq!(pa.expected_wall, pc.expected_wall);
+            assert_eq!(pa.checkpoint_overhead, pc.checkpoint_overhead);
+        }
+        assert_eq!(a.best, c.best, "the optimum ranks on the expectation, not the draw");
+    }
+
+    #[test]
+    fn expectation_model_matches_closed_form() {
+        // One full segment + tail, hand-checked numbers: work 250,
+        // cadence 100 -> segments of u = 100+C, 100+C, 50.
+        let (rate, cost) = (1e-3, 20.0);
+        let sw = sweep_cadence(250.0, rate, cost, &[100.0], 1).unwrap();
+        let p = &sw.points[0];
+        let e = |u: f64| ((rate * u).exp() - 1.0) / rate;
+        let want_wall = e(120.0) + e(120.0) + e(50.0);
+        assert!((p.expected_wall - want_wall).abs() < 1e-9, "{} vs {want_wall}", p.expected_wall);
+        assert_eq!(p.checkpoint_overhead, 2.0 * cost);
+        // Conservation: expected wall = work + checkpoint writes in
+        // successful attempts + expected rework. The model folds the
+        // successful writes into `u`, so wall - lost covers work plus
+        // the two writes exactly.
+        assert!((p.expected_wall - p.expected_lost - (250.0 + 2.0 * cost)).abs() < 1e-9);
+        assert!((sw.young_daly - (2.0 * cost / rate).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimum_shifts_with_mtbf() {
+        // Denser grid around the Young/Daly scale: with C = 30 s,
+        // T*(MTBF 1e3) ~ 245 s and T*(MTBF 1e5) ~ 2449 s, so the
+        // optimum must move right as the machine gets healthier.
+        let cadences = [60.0, 250.0, 1000.0, 2500.0, 10_000.0];
+        let fragile = sweep_cadence(50_000.0, 1e-3, 30.0, &cadences, 5).unwrap();
+        let sturdy = sweep_cadence(50_000.0, 1e-5, 30.0, &cadences, 5).unwrap();
+        let (bf, bs) = (fragile.best.unwrap(), sturdy.best.unwrap());
+        assert!(
+            cadences[bf] < cadences[bs],
+            "fragile machine optimum {} should be shorter than sturdy {}",
+            cadences[bf],
+            cadences[bs]
+        );
+        assert!(fragile.young_daly < sturdy.young_daly);
+        // The optimum is interior on this grid for the fragile case:
+        // neither drowning in checkpoints nor in rework.
+        assert!(bf != 0 && bf + 1 != cadences.len(), "optimum index {bf} is an extreme");
+    }
+
+    #[test]
+    fn sampled_walk_conserves_time() {
+        let sw = sweep_cadence(30_000.0, 2e-4, 25.0, &[500.0, 2000.0], 11).unwrap();
+        for p in &sw.points {
+            assert!(p.walk_wall.is_finite());
+            // Sampled path: wall = work + checkpoint writes + rework.
+            let writes = p.checkpoint_overhead;
+            let got = p.walk_wall - p.walk_lost - writes;
+            assert!(
+                (got - 30_000.0).abs() < 1e-6,
+                "cadence {}: wall {} lost {} writes {}",
+                p.cadence,
+                p.walk_wall,
+                p.walk_lost,
+                writes
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_rejects_garbage() {
+        assert!(sweep_cadence(0.0, 1e-3, 1.0, &[10.0], 1).is_err());
+        assert!(sweep_cadence(100.0, 0.0, 1.0, &[10.0], 1).is_err());
+        assert!(sweep_cadence(100.0, 1e-3, -1.0, &[10.0], 1).is_err());
+        assert!(sweep_cadence(100.0, 1e-3, 1.0, &[], 1).is_err());
+        assert!(sweep_cadence(100.0, 1e-3, 1.0, &[0.0], 1).is_err());
+    }
+}

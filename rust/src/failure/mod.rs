@@ -1,0 +1,735 @@
+//! Failure injection & resilience: node faults, retry/backoff, and
+//! the bookkeeping behind the resilience report.
+//!
+//! HPC allocations fail: Summit-class machines lose nodes to hardware
+//! faults mid-job, and preemptible/backfill allocations are revoked
+//! with no drain window. The RADICAL-Pilot leadership-platform
+//! characterization treats partial resource failure as a first-class
+//! pilot concern; this module gives the simulator that failure model,
+//! deterministically.
+//!
+//! Two fault sources compose in a [`FailureSpec`]:
+//!
+//! - **MTBF process** — each schedulable node fails with rate
+//!   `1/mtbf`, GPU nodes scaled by
+//!   [`gpu_factor`](FailureSpec::gpu_factor) (accelerator boards
+//!   dominate leadership-class fault logs). The superposed process is
+//!   sampled with the crate [`Rng`]'s exponential draws from a
+//!   dedicated forked stream, so the fault schedule is a pure function
+//!   of the engine seed.
+//! - **Trace replay** — explicit `t:node` preemption events (CLI
+//!   `--trace 3600:0,7200:5`), replayed verbatim. The deterministic
+//!   backbone of the kill-path tests.
+//!
+//! A node failure is a **hard kill**, distinct from the graceful drain
+//! of [`Allocator::drain_node`](crate::resources::Allocator::drain_node):
+//! in-flight tasks on the node are lost, their partial work is
+//! discounted as `lost_*` in [`ResilienceStats`], and the node returns
+//! to service immediately (fail-stop-restart). Killed tasks flow into
+//! the per-workflow [`RetryPolicy`]: bounded attempts, exponential
+//! backoff with jitter drawn from the task's own stateless RNG stream,
+//! and requeue *through the scheduler* — fair-share and backfill
+//! policies see a retry as an ordinary submission.
+//!
+//! Everything here is plain data (`Clone + PartialEq`) with paired
+//! [`ToJson`]/[`FromJson`] impls: the live process state
+//! ([`FailureState`]) rides inside the simulation snapshot, so
+//! checkpoint/resume reproduces the fault schedule bit-identically.
+
+pub mod cadence;
+
+use crate::error::{Error, Result};
+use crate::util::json::{arr_of, f64_or_nan, from_f64_nan, obj, parse_arr, FromJson, Json, ToJson};
+use crate::util::rng::{Rng, RngState};
+
+/// Stream tag for the fault-process RNG fork (`"FAIL"`).
+const FAULT_TAG: u64 = 0x4641_494c;
+/// Seed salt for the per-(task, attempt) backoff-jitter streams
+/// (`"JITT"`).
+const JITTER_TAG: u64 = 0x4a49_5454;
+
+/// One trace-driven preemption: node `node` fails at engine time `at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureEvent {
+    /// Engine time (seconds, >= 0) of the failure.
+    pub at: f64,
+    /// Cluster node index to kill.
+    pub node: usize,
+}
+
+impl ToJson for FailureEvent {
+    fn to_json(&self) -> Json {
+        obj([("at", Json::from(self.at)), ("node", Json::from(self.node))])
+    }
+}
+
+impl FromJson for FailureEvent {
+    fn from_json(v: &Json) -> Result<FailureEvent> {
+        Ok(FailureEvent { at: v.req_f64("at")?, node: v.req_u64("node")? as usize })
+    }
+}
+
+/// Retry discipline for tasks killed by a node failure.
+///
+/// Attempt `k` (1-based) of a killed task is requeued after
+/// `base * factor^(k-1) * (1 + jitter * u)` seconds, where `u` is a
+/// uniform draw from a stateless stream keyed by `(seed, uid, k)` —
+/// nothing to snapshot, and two tasks killed by the same fault do not
+/// thunder back in lock-step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Maximum retry attempts per task; `0` means unlimited.
+    pub max_attempts: u32,
+    /// First-retry backoff in engine seconds (>= 0).
+    pub base: f64,
+    /// Multiplicative backoff growth per attempt (>= 1).
+    pub factor: f64,
+    /// Jitter fraction in `[0, 1]`: the delay is stretched by up to
+    /// this fraction, never shrunk below the deterministic backoff.
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_attempts: 3, base: 30.0, factor: 2.0, jitter: 0.1 }
+    }
+}
+
+impl RetryPolicy {
+    /// Parse the CLI retry spec `"max:4,base:30,factor:2,jitter:0.25"`.
+    /// Unlisted keys keep their [`Default`] values.
+    pub fn parse(spec: &str) -> Result<RetryPolicy> {
+        let mut p = RetryPolicy::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part.split_once(':').ok_or_else(|| {
+                Error::Config(format!("--retry: expected key:value, got '{part}'"))
+            })?;
+            let v = v.trim();
+            match k.trim() {
+                "max" => {
+                    p.max_attempts = v.parse().map_err(|_| {
+                        Error::Config(format!("--retry: bad max attempts in '{part}'"))
+                    })?;
+                }
+                "base" => {
+                    p.base = v.parse().map_err(|_| {
+                        Error::Config(format!("--retry: bad base delay in '{part}'"))
+                    })?;
+                }
+                "factor" => {
+                    p.factor = v.parse().map_err(|_| {
+                        Error::Config(format!("--retry: bad factor in '{part}'"))
+                    })?;
+                }
+                "jitter" => {
+                    p.jitter = v.parse().map_err(|_| {
+                        Error::Config(format!("--retry: bad jitter in '{part}'"))
+                    })?;
+                }
+                other => {
+                    return Err(Error::Config(format!("--retry: unknown key '{other}'")));
+                }
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !self.base.is_finite() || self.base < 0.0 {
+            return Err(Error::Config(format!(
+                "retry policy: base delay must be finite and >= 0, got {}",
+                self.base
+            )));
+        }
+        if !self.factor.is_finite() || self.factor < 1.0 {
+            return Err(Error::Config(format!(
+                "retry policy: factor must be >= 1, got {}",
+                self.factor
+            )));
+        }
+        if !self.jitter.is_finite() || !(0.0..=1.0).contains(&self.jitter) {
+            return Err(Error::Config(format!(
+                "retry policy: jitter must be in [0, 1], got {}",
+                self.jitter
+            )));
+        }
+        Ok(())
+    }
+
+    /// Whether retry attempt `attempt` (1-based) is still allowed.
+    pub fn allows(&self, attempt: u32) -> bool {
+        self.max_attempts == 0 || attempt <= self.max_attempts
+    }
+
+    /// Backoff delay for retry `attempt` (1-based) of task `uid`.
+    ///
+    /// The jitter draw comes from a stream keyed by
+    /// `(engine seed, uid, attempt)` — a pure function, so a snapshot
+    /// taken mid-backoff needs only the already-computed due time.
+    pub fn delay(&self, seed: u64, uid: usize, attempt: u32) -> f64 {
+        let mut rng = Rng::new(seed ^ JITTER_TAG).fork(uid as u64).fork(attempt as u64);
+        let exp = attempt.saturating_sub(1).min(i32::MAX as u32) as i32;
+        let scale = self.base * self.factor.powi(exp);
+        scale * (1.0 + self.jitter * rng.f64())
+    }
+}
+
+impl ToJson for RetryPolicy {
+    fn to_json(&self) -> Json {
+        obj([
+            ("max_attempts", Json::from(self.max_attempts as u64)),
+            ("base", Json::from(self.base)),
+            ("factor", Json::from(self.factor)),
+            ("jitter", Json::from(self.jitter)),
+        ])
+    }
+}
+
+impl FromJson for RetryPolicy {
+    fn from_json(v: &Json) -> Result<RetryPolicy> {
+        let p = RetryPolicy {
+            max_attempts: v.req_u64("max_attempts")? as u32,
+            base: v.req_f64("base")?,
+            factor: v.req_f64("factor")?,
+            jitter: v.req_f64("jitter")?,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+/// Failure-injection scenario: fault sources plus the retry discipline
+/// applied to their victims. Part of a traffic scenario's identity —
+/// the same seed and spec reproduce a bit-identical run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureSpec {
+    /// Per-node mean time between failures in engine seconds; `None`
+    /// disables the stochastic process (trace replay still applies).
+    pub mtbf: Option<f64>,
+    /// Fault-rate multiplier for nodes with GPUs (>= 0; 1 = no bias).
+    pub gpu_factor: f64,
+    /// Trace-driven preemptions, replayed in time order.
+    pub trace: Vec<FailureEvent>,
+    /// Retry discipline for killed tasks.
+    pub retry: RetryPolicy,
+}
+
+impl Default for FailureSpec {
+    fn default() -> FailureSpec {
+        FailureSpec {
+            mtbf: None,
+            gpu_factor: 1.0,
+            trace: Vec::new(),
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+impl FailureSpec {
+    /// Spec with only the stochastic MTBF process enabled.
+    pub fn mtbf(mtbf: f64) -> FailureSpec {
+        FailureSpec { mtbf: Some(mtbf), ..FailureSpec::default() }
+    }
+
+    /// Parse the CLI trace spec `"t:node,t:node,..."` into a spec with
+    /// only trace replay enabled.
+    pub fn parse_trace(spec: &str) -> Result<FailureSpec> {
+        let mut trace = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (t, n) = part.split_once(':').ok_or_else(|| {
+                Error::Config(format!("--trace: expected t:node, got '{part}'"))
+            })?;
+            let at: f64 = t
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("--trace: bad time in '{part}'")))?;
+            let node: usize = n
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("--trace: bad node index in '{part}'")))?;
+            trace.push(FailureEvent { at, node });
+        }
+        if trace.is_empty() {
+            return Err(Error::Config(format!("--trace: no events in '{spec}'")));
+        }
+        let spec = FailureSpec { trace, ..FailureSpec::default() };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Whether any fault source is configured.
+    pub fn is_active(&self) -> bool {
+        self.mtbf.is_some() || !self.trace.is_empty()
+    }
+
+    /// Check the spec is well-formed (positive finite MTBF, finite
+    /// non-negative trace times, sane retry policy).
+    pub fn validate(&self) -> Result<()> {
+        if let Some(m) = self.mtbf {
+            if !m.is_finite() || m <= 0.0 {
+                return Err(Error::Config(format!(
+                    "failure spec: MTBF must be positive and finite, got {m}"
+                )));
+            }
+        }
+        if !self.gpu_factor.is_finite() || self.gpu_factor < 0.0 {
+            return Err(Error::Config(format!(
+                "failure spec: gpu_factor must be finite and >= 0, got {}",
+                self.gpu_factor
+            )));
+        }
+        for e in &self.trace {
+            if !e.at.is_finite() || e.at < 0.0 {
+                return Err(Error::Config(format!(
+                    "failure spec: invalid trace event time {}",
+                    e.at
+                )));
+            }
+        }
+        self.retry.validate()
+    }
+}
+
+impl ToJson for FailureSpec {
+    fn to_json(&self) -> Json {
+        obj([
+            (
+                "mtbf",
+                match self.mtbf {
+                    Some(m) => Json::from(m),
+                    None => Json::Null,
+                },
+            ),
+            ("gpu_factor", Json::from(self.gpu_factor)),
+            ("trace", arr_of(&self.trace)),
+            ("retry", self.retry.to_json()),
+        ])
+    }
+}
+
+impl FromJson for FailureSpec {
+    fn from_json(v: &Json) -> Result<FailureSpec> {
+        let mtbf = match v.get("mtbf") {
+            Json::Null => None,
+            m => Some(m.as_f64().ok_or_else(|| Error::Config("failure spec: bad mtbf".into()))?),
+        };
+        let spec = FailureSpec {
+            mtbf,
+            gpu_factor: v.req_f64("gpu_factor")?,
+            trace: parse_arr(v, "trace")?,
+            retry: RetryPolicy::from_json(v.get("retry"))?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// One killed task waiting out its retry backoff: resubmitted through
+/// the scheduler at `due`. Snapshot-visible — a checkpoint taken
+/// mid-backoff carries these verbatim.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryEntry {
+    /// Coordinator-global task uid (stays live while waiting).
+    pub uid: usize,
+    /// Engine time at which the task is resubmitted.
+    pub due: f64,
+    /// Which retry attempt this is (1-based).
+    pub attempt: u32,
+}
+
+impl ToJson for RetryEntry {
+    fn to_json(&self) -> Json {
+        obj([
+            ("uid", Json::from(self.uid)),
+            ("due", Json::from(self.due)),
+            ("attempt", Json::from(self.attempt as u64)),
+        ])
+    }
+}
+
+impl FromJson for RetryEntry {
+    fn from_json(v: &Json) -> Result<RetryEntry> {
+        Ok(RetryEntry {
+            uid: v.req_u64("uid")? as usize,
+            due: v.req_f64("due")?,
+            attempt: v.req_u64("attempt")? as u32,
+        })
+    }
+}
+
+/// Resilience accounting for one run: what the failures cost and what
+/// survived them. `goodput + lost` equals the busy resource-time the
+/// cluster actually delivered (the conservation invariant enforced by
+/// `tests/resilience.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResilienceStats {
+    /// Node-failure events injected (MTBF fires + trace replays).
+    pub failures_injected: u64,
+    /// Running tasks hard-killed by those failures.
+    pub tasks_killed: u64,
+    /// Retries scheduled (killed tasks granted another attempt).
+    pub retries_scheduled: u64,
+    /// Tasks whose retry budget ran out.
+    pub retries_exhausted: u64,
+    /// Core-seconds of partial work destroyed by kills.
+    pub lost_core_s: f64,
+    /// GPU-seconds of partial work destroyed by kills.
+    pub lost_gpu_s: f64,
+    /// Core-seconds of work that completed (survived to a finish).
+    pub goodput_core_s: f64,
+    /// GPU-seconds of work that completed.
+    pub goodput_gpu_s: f64,
+}
+
+impl ToJson for ResilienceStats {
+    fn to_json(&self) -> Json {
+        obj([
+            ("failures_injected", Json::from(self.failures_injected as f64)),
+            ("tasks_killed", Json::from(self.tasks_killed as f64)),
+            ("retries_scheduled", Json::from(self.retries_scheduled as f64)),
+            ("retries_exhausted", Json::from(self.retries_exhausted as f64)),
+            ("lost_core_s", Json::from(self.lost_core_s)),
+            ("lost_gpu_s", Json::from(self.lost_gpu_s)),
+            ("goodput_core_s", Json::from(self.goodput_core_s)),
+            ("goodput_gpu_s", Json::from(self.goodput_gpu_s)),
+        ])
+    }
+}
+
+impl FromJson for ResilienceStats {
+    fn from_json(v: &Json) -> Result<ResilienceStats> {
+        Ok(ResilienceStats {
+            failures_injected: v.req_u64("failures_injected")?,
+            tasks_killed: v.req_u64("tasks_killed")?,
+            retries_scheduled: v.req_u64("retries_scheduled")?,
+            retries_exhausted: v.req_u64("retries_exhausted")?,
+            lost_core_s: v.req_f64("lost_core_s")?,
+            lost_gpu_s: v.req_f64("lost_gpu_s")?,
+            goodput_core_s: v.req_f64("goodput_core_s")?,
+            goodput_gpu_s: v.req_f64("goodput_gpu_s")?,
+        })
+    }
+}
+
+/// Live fault-injection state: the spec, the forked RNG stream, the
+/// pre-drawn next stochastic fault, the trace replay cursor, and the
+/// running [`ResilienceStats`]. Owned by the engine loop; serialized
+/// as [`FailureState`] inside the simulation snapshot.
+#[derive(Debug, Clone)]
+pub struct FailureProcess {
+    /// The scenario being injected.
+    pub spec: FailureSpec,
+    rng: Rng,
+    /// Engine time of the next stochastic fault (`NaN` = none armed).
+    pub next_fault: f64,
+    trace_cursor: usize,
+    /// Running resilience accounting for this run.
+    pub stats: ResilienceStats,
+}
+
+impl FailureProcess {
+    /// Build the process for one run. The RNG is forked from the
+    /// engine seed with a dedicated tag, so the fault schedule is
+    /// independent of every other stream; the trace is sorted by time
+    /// (ties by node index) for replay.
+    pub fn new(mut spec: FailureSpec, seed: u64) -> FailureProcess {
+        spec.trace
+            .sort_by(|a, b| a.at.total_cmp(&b.at).then(a.node.cmp(&b.node)));
+        FailureProcess {
+            spec,
+            rng: Rng::new(seed).fork(FAULT_TAG),
+            next_fault: f64::NAN,
+            trace_cursor: 0,
+            stats: ResilienceStats::default(),
+        }
+    }
+
+    /// Draw the next stochastic fault time from `now` given the
+    /// current superposed fault rate (sum of per-node rates). A zero
+    /// rate (or no MTBF configured) disarms the process.
+    ///
+    /// The rate is sampled at draw time; capacity changes between
+    /// draws do not reshuffle an already-drawn fault (the exponential
+    /// is memoryless, and redrawing on every resize would make the
+    /// schedule depend on loop internals instead of the seed).
+    pub fn draw_next(&mut self, now: f64, total_rate: f64) {
+        self.next_fault = if self.spec.mtbf.is_some() && total_rate > 0.0 {
+            now + self.rng.exp(total_rate)
+        } else {
+            f64::NAN
+        };
+    }
+
+    /// Pick the node the due fault lands on: a weighted draw over
+    /// `(node, rate)` pairs. Exactly one uniform variate is consumed
+    /// per call, victims or not, so RNG consumption is a pure function
+    /// of the fault count.
+    pub fn pick_victim(&mut self, weights: &[(usize, f64)]) -> Option<usize> {
+        let total: f64 = weights.iter().map(|w| w.1).sum();
+        let u = self.rng.f64() * total;
+        if !(total > 0.0) {
+            return None;
+        }
+        let mut acc = 0.0;
+        for &(node, w) in weights {
+            acc += w;
+            if u < acc {
+                return Some(node);
+            }
+        }
+        weights.last().map(|w| w.0)
+    }
+
+    /// Pop the next trace preemption due at or before `now + eps`, if
+    /// any, advancing the replay cursor.
+    pub fn trace_due(&mut self, now: f64, eps: f64) -> Option<FailureEvent> {
+        let ev = *self.spec.trace.get(self.trace_cursor)?;
+        if ev.at <= now + eps {
+            self.trace_cursor += 1;
+            Some(ev)
+        } else {
+            None
+        }
+    }
+
+    /// Engine time of the next failure from either source (`NaN` if
+    /// neither is pending) — the value the engine loop folds into its
+    /// horizon / `Failure` calendar lane.
+    pub fn next_event(&self) -> f64 {
+        let trace_next = self.spec.trace.get(self.trace_cursor).map_or(f64::NAN, |e| e.at);
+        match (self.next_fault.is_nan(), trace_next.is_nan()) {
+            (true, true) => f64::NAN,
+            (true, false) => trace_next,
+            (false, true) => self.next_fault,
+            (false, false) => self.next_fault.min(trace_next),
+        }
+    }
+
+    /// Snapshot the live state (RNG position included).
+    pub fn state(&self) -> FailureState {
+        FailureState {
+            spec: self.spec.clone(),
+            rng: self.rng.state(),
+            next_fault: self.next_fault,
+            trace_cursor: self.trace_cursor,
+            stats: self.stats,
+        }
+    }
+
+    /// Rebuild the process from a snapshot, mid-stream.
+    pub fn from_state(s: &FailureState) -> FailureProcess {
+        FailureProcess {
+            spec: s.spec.clone(),
+            rng: Rng::from_state(&s.rng),
+            next_fault: s.next_fault,
+            trace_cursor: s.trace_cursor,
+            stats: s.stats,
+        }
+    }
+}
+
+/// Serialized [`FailureProcess`]: everything needed to resume the
+/// fault schedule bit-identically — the spec, the RNG stream position,
+/// the pre-drawn next fault, the trace cursor, and the cumulative
+/// stats. Carried by the simulation snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureState {
+    /// The injected scenario.
+    pub spec: FailureSpec,
+    /// Fault-stream RNG position.
+    pub rng: RngState,
+    /// Pre-drawn next stochastic fault time (`NaN` = disarmed).
+    pub next_fault: f64,
+    /// Trace replay position.
+    pub trace_cursor: usize,
+    /// Cumulative resilience accounting up to the snapshot instant.
+    pub stats: ResilienceStats,
+}
+
+impl ToJson for FailureState {
+    fn to_json(&self) -> Json {
+        obj([
+            ("spec", self.spec.to_json()),
+            ("rng", self.rng.to_json()),
+            ("next_fault", from_f64_nan(self.next_fault)),
+            ("trace_cursor", Json::from(self.trace_cursor)),
+            ("stats", self.stats.to_json()),
+        ])
+    }
+}
+
+impl FromJson for FailureState {
+    fn from_json(v: &Json) -> Result<FailureState> {
+        Ok(FailureState {
+            spec: FailureSpec::from_json(v.get("spec"))?,
+            rng: RngState::from_json(v.get("rng"))?,
+            next_fault: f64_or_nan(v.get("next_fault"))?,
+            trace_cursor: v.req_u64("trace_cursor")? as usize,
+            stats: ResilienceStats::from_json(v.get("stats"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_parse_accepts_partial_specs() {
+        let p = RetryPolicy::parse("max:4,base:30,factor:2,jitter:0.25").unwrap();
+        assert_eq!(p.max_attempts, 4);
+        assert_eq!(p.base, 30.0);
+        assert_eq!(p.factor, 2.0);
+        assert_eq!(p.jitter, 0.25);
+        // Unlisted keys keep their defaults.
+        let p = RetryPolicy::parse("max:0").unwrap();
+        assert_eq!(p.max_attempts, 0);
+        assert_eq!(p.base, RetryPolicy::default().base);
+    }
+
+    #[test]
+    fn retry_parse_rejects_garbage() {
+        assert!(RetryPolicy::parse("max").is_err());
+        assert!(RetryPolicy::parse("max:x").is_err());
+        assert!(RetryPolicy::parse("nope:1").is_err());
+        assert!(RetryPolicy::parse("factor:0.5").is_err());
+        assert!(RetryPolicy::parse("jitter:2").is_err());
+        assert!(RetryPolicy::parse("base:-1").is_err());
+    }
+
+    #[test]
+    fn retry_delay_is_deterministic_and_grows() {
+        let p = RetryPolicy { max_attempts: 0, base: 10.0, factor: 2.0, jitter: 0.5 };
+        let d1 = p.delay(42, 7, 1);
+        assert_eq!(d1, p.delay(42, 7, 1), "same key, same delay");
+        // Jitter only stretches: delay stays within [scale, scale*(1+j)].
+        assert!((10.0..=15.0).contains(&d1), "got {d1}");
+        let d2 = p.delay(42, 7, 2);
+        assert!((20.0..=30.0).contains(&d2), "got {d2}");
+        // Different uid / attempt / seed give different jitter.
+        assert_ne!(p.delay(42, 8, 1), d1);
+        assert_ne!(p.delay(43, 7, 1), d1);
+    }
+
+    #[test]
+    fn retry_allows_caps_and_unlimited() {
+        let capped = RetryPolicy { max_attempts: 2, ..RetryPolicy::default() };
+        assert!(capped.allows(1) && capped.allows(2) && !capped.allows(3));
+        let unlimited = RetryPolicy { max_attempts: 0, ..RetryPolicy::default() };
+        assert!(unlimited.allows(1_000_000));
+    }
+
+    #[test]
+    fn trace_parse_and_replay_order() {
+        let spec = FailureSpec::parse_trace("7200:5, 3600:0").unwrap();
+        assert_eq!(spec.trace.len(), 2);
+        assert!(spec.is_active());
+        // The process replays in time order regardless of spec order.
+        let mut fp = FailureProcess::new(spec, 1);
+        assert_eq!(fp.next_event(), 3600.0);
+        let e = fp.trace_due(3600.0, 1e-9).unwrap();
+        assert_eq!((e.at, e.node), (3600.0, 0));
+        assert!(fp.trace_due(3600.0, 1e-9).is_none(), "next event not due yet");
+        assert_eq!(fp.next_event(), 7200.0);
+    }
+
+    #[test]
+    fn trace_parse_rejects_garbage() {
+        assert!(FailureSpec::parse_trace("").is_err());
+        assert!(FailureSpec::parse_trace("3600").is_err());
+        assert!(FailureSpec::parse_trace("x:0").is_err());
+        assert!(FailureSpec::parse_trace("3600:gpu").is_err());
+        assert!(FailureSpec::parse_trace("-5:0").is_err());
+    }
+
+    #[test]
+    fn mtbf_process_draws_deterministically() {
+        let mut a = FailureProcess::new(FailureSpec::mtbf(1000.0), 42);
+        let mut b = FailureProcess::new(FailureSpec::mtbf(1000.0), 42);
+        a.draw_next(0.0, 0.01);
+        b.draw_next(0.0, 0.01);
+        assert_eq!(a.next_fault, b.next_fault);
+        assert!(a.next_fault > 0.0 && a.next_fault.is_finite());
+        // A different seed gives a different schedule.
+        let mut c = FailureProcess::new(FailureSpec::mtbf(1000.0), 43);
+        c.draw_next(0.0, 0.01);
+        assert_ne!(c.next_fault, a.next_fault);
+        // Zero rate disarms.
+        a.draw_next(0.0, 0.0);
+        assert!(a.next_fault.is_nan());
+        assert!(a.next_event().is_nan());
+    }
+
+    #[test]
+    fn pick_victim_is_weighted_and_consumes_one_draw() {
+        let mut fp = FailureProcess::new(FailureSpec::mtbf(100.0), 7);
+        // All the weight on node 3: it is always picked.
+        for _ in 0..16 {
+            assert_eq!(fp.pick_victim(&[(1, 0.0), (3, 5.0)]), Some(3));
+        }
+        // Empty / zero-weight sets pick nothing but still consume a
+        // draw — RNG use is a pure function of the fault count.
+        let s0 = fp.state();
+        assert_eq!(fp.pick_victim(&[]), None);
+        assert_ne!(fp.state().rng, s0.rng);
+        assert_eq!(fp.pick_victim(&[(0, 0.0)]), None);
+    }
+
+    #[test]
+    fn state_round_trips_through_json() {
+        let mut spec = FailureSpec::mtbf(500.0);
+        spec.gpu_factor = 2.5;
+        spec.trace.push(FailureEvent { at: 100.0, node: 1 });
+        spec.retry = RetryPolicy { max_attempts: 5, base: 12.0, factor: 1.5, jitter: 0.3 };
+        let mut fp = FailureProcess::new(spec, 99);
+        fp.draw_next(0.0, 0.02);
+        let _ = fp.trace_due(100.0, 1e-9);
+        fp.stats.failures_injected = 3;
+        fp.stats.lost_core_s = 1234.5;
+        let state = fp.state();
+        let wire = state.to_json().to_string();
+        let back = FailureState::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, state);
+        // The rebuilt process continues the same RNG stream.
+        let mut resumed = FailureProcess::from_state(&back);
+        let mut straight = fp.clone();
+        straight.draw_next(50.0, 0.02);
+        resumed.draw_next(50.0, 0.02);
+        assert_eq!(straight.next_fault, resumed.next_fault);
+        // NaN next_fault survives the wire format too.
+        let mut disarmed = FailureProcess::new(FailureSpec::default(), 1);
+        disarmed.draw_next(0.0, 0.0);
+        let s = disarmed.state();
+        let back =
+            FailureState::from_json(&Json::parse(&s.to_json().to_string()).unwrap()).unwrap();
+        assert!(back.next_fault.is_nan());
+    }
+
+    #[test]
+    fn spec_validation_bites() {
+        assert!(FailureSpec { mtbf: Some(0.0), ..FailureSpec::default() }.validate().is_err());
+        assert!(FailureSpec { mtbf: Some(f64::NAN), ..FailureSpec::default() }
+            .validate()
+            .is_err());
+        assert!(FailureSpec { gpu_factor: -1.0, ..FailureSpec::default() }.validate().is_err());
+        assert!(FailureSpec::default().validate().is_ok());
+        assert!(!FailureSpec::default().is_active());
+    }
+
+    #[test]
+    fn retry_entry_round_trips() {
+        let e = RetryEntry { uid: 17, due: 345.25, attempt: 2 };
+        let back =
+            RetryEntry::from_json(&Json::parse(&e.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, e);
+    }
+}

@@ -14,8 +14,10 @@
 //!   ([`exec`]) behind one engine ([`engine`]), a streaming-traffic
 //!   load generator with queueing metrics ([`traffic`]), and
 //!   whole-simulation checkpoint/resume for preemptible allocations
-//!   ([`checkpoint`]), and a determinism-contract linter over the
-//!   crate's own sources ([`lint`]).
+//!   ([`checkpoint`]), deterministic failure injection with
+//!   retry/backoff resilience ([`failure`]), and a
+//!   determinism-contract linter over the crate's own sources
+//!   ([`lint`]).
 //! - **Layer 2**: JAX compute graphs (autoencoder training/inference, MD)
 //!   AOT-lowered to HLO text at build time (`python/compile/`).
 //! - **Layer 1**: Pallas kernels (blocked matmul, pairwise distances,
@@ -55,6 +57,7 @@ pub mod entk;
 pub mod error;
 pub mod exec;
 pub mod experiments;
+pub mod failure;
 pub mod lint;
 pub mod metrics;
 pub mod model;

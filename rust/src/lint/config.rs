@@ -44,9 +44,17 @@ impl Default for LintConfig {
             xs.iter().map(|s| s.to_string()).collect()
         }
         LintConfig {
-            det001_scope: strs(&["engine", "exec", "sim", "sched", "checkpoint"]),
+            det001_scope: strs(&["engine", "exec", "sim", "sched", "checkpoint", "failure"]),
             det001_allow_files: strs(&["engine/mod.rs"]),
-            det002_scope: strs(&["engine", "checkpoint", "sched", "metrics", "exec", "sim"]),
+            det002_scope: strs(&[
+                "engine",
+                "checkpoint",
+                "sched",
+                "metrics",
+                "exec",
+                "sim",
+                "failure",
+            ]),
             det003_allow: strs(&["util::bench", "exec::stress", "ddmd::mlexec"]),
             ser001_allow: Vec::new(),
             ser002_file: "checkpoint/snapshot.rs".to_string(),
@@ -58,6 +66,14 @@ impl Default for LintConfig {
                 ("checkpoint/snapshot.rs".to_string(), "RunningEntry".to_string()),
                 ("checkpoint/snapshot.rs".to_string(), "SimSnapshot".to_string()),
                 ("engine/driver.rs".to_string(), "DriverState".to_string()),
+                // Failure-injection state rides inside SimSnapshot (v3):
+                // every struct on that wire path is schema-watched.
+                ("failure/mod.rs".to_string(), "FailureEvent".to_string()),
+                ("failure/mod.rs".to_string(), "RetryPolicy".to_string()),
+                ("failure/mod.rs".to_string(), "FailureSpec".to_string()),
+                ("failure/mod.rs".to_string(), "RetryEntry".to_string()),
+                ("failure/mod.rs".to_string(), "ResilienceStats".to_string()),
+                ("failure/mod.rs".to_string(), "FailureState".to_string()),
             ],
             panic_budgets: Vec::new(),
         }

@@ -46,6 +46,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("masking") => cmd_masking(args),
         Some("campaign") => cmd_campaign(args),
         Some("traffic") => cmd_traffic(args),
+        Some("resilience") => cmd_resilience(args),
         Some("resume") => cmd_resume(args),
         Some("lint") => cmd_lint(args),
         _ => {
@@ -99,6 +100,36 @@ subcommands:
                                          preemption) to --checkpoint-out.
                                          Catalog: ddmd ddmd-small cdg1
                                          cdg2 cdg1-small cdg2-small
+                                         Failure injection (see the
+                                         resilience subcommand) composes:
+                                         --mtbf/--fail-trace/--retry add
+                                         node faults to any traffic run.
+  resilience --mtbf 50000               traffic under failure injection:
+           [--gpu-factor 2]             each schedulable node fails with
+           [--fail-trace 3600:0,7200:5] rate 1/MTBF (GPU nodes scaled by
+           [--retry max:3,base:30,      --gpu-factor), --fail-trace
+              factor:2,jitter:0.1]      replays explicit t:node
+           [--rate/--interval/--trace   preemptions. A failure hard-kills
+              /--duration/--mix/...]    the node's running tasks (partial
+           [--checkpoint-every T]       work lost, vs the graceful
+           [--sweep-cadence 300,1200,   --resize drain); victims retry
+              3600]                     through the scheduler after
+           [--checkpoint-cost C]        exponential backoff. The report
+                                        gains a resilience ledger
+                                        (failures, kills, retries,
+                                        goodput vs lost core/GPU-time).
+                                        --checkpoint-every T snapshots
+                                        the whole simulation every T
+                                        engine seconds, round-trips each
+                                        snapshot through JSON and
+                                        resumes it (the crash/resume
+                                        soak). --sweep-cadence models
+                                        checkpoint intervals against the
+                                        failure rate (write cost
+                                        --checkpoint-cost, default 60 s)
+                                        and locates the optimum next to
+                                        the Young/Daly sqrt(2*C*MTBF)
+                                        reference.
   lint     [paths...]                    determinism-contract linter over
            [--deny]                      the crate's own sources (default
            [--format human|ndjson]       path: src). --deny exits non-zero
@@ -349,8 +380,37 @@ fn plan_from_args(
     Ok(plan)
 }
 
+/// Failure-injection spec from the shared CLI flags (`--mtbf`,
+/// `--gpu-factor`, `--fail-trace`, `--retry`), shared by `traffic` and
+/// `resilience`; `None` when no fault source is configured.
+fn failure_from_args(args: &Args) -> Result<Option<asyncflow::failure::FailureSpec>> {
+    use asyncflow::failure::{FailureSpec, RetryPolicy};
+    let mut spec = FailureSpec::default();
+    if let Some(t) = args.get("fail-trace") {
+        spec.trace = FailureSpec::parse_trace(t)?.trace;
+    }
+    if args.get("mtbf").is_some() {
+        spec.mtbf = Some(args.get_f64("mtbf", 0.0)?);
+    }
+    if !spec.is_active() {
+        if args.get("retry").is_some() || args.get("gpu-factor").is_some() {
+            return Err(Error::Config(
+                "--retry/--gpu-factor need a fault source (--mtbf S or --fail-trace t:node,...)"
+                    .into(),
+            ));
+        }
+        return Ok(None);
+    }
+    spec.gpu_factor = args.get_f64("gpu-factor", spec.gpu_factor)?;
+    if let Some(r) = args.get("retry") {
+        spec.retry = RetryPolicy::parse(r)?;
+    }
+    spec.validate()?;
+    Ok(Some(spec))
+}
+
 /// Print a finished traffic report and write the optional `--out`
-/// artifacts (shared by `traffic` and `resume`).
+/// artifacts (shared by `traffic`, `resilience`, and `resume`).
 fn emit_traffic_report(args: &Args, rep: &asyncflow::traffic::TrafficReport) -> Result<()> {
     print!("{}", rep.render(args.flag("verbose")));
     if let Some(dir) = args.get("out") {
@@ -369,6 +429,11 @@ fn emit_traffic_report(args: &Args, rep: &asyncflow::traffic::TrafficReport) -> 
         let jp = base.join("traffic_report.json");
         std::fs::write(&jp, rep.to_json().to_string_pretty())?;
         wrote.push(jp.display().to_string());
+        if rep.resilience.is_some() {
+            let rp = base.join("traffic_resilience.csv");
+            std::fs::write(&rp, rep.resilience_csv())?;
+            wrote.push(rp.display().to_string());
+        }
         if !rep.capacity.is_constant() {
             let cp = base.join("traffic_capacity.csv");
             std::fs::write(&cp, rep.capacity.to_csv())?;
@@ -415,6 +480,7 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         Some(p) => Some(p.parse::<asyncflow::sched::Policy>()?),
         None => None,
     };
+    let failure = failure_from_args(args)?;
     let spec_for = |process: ArrivalProcess| TrafficSpec {
         process,
         mix: mix.clone(),
@@ -424,6 +490,7 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         plan: plan.clone(),
         checkpoint_at,
         policy,
+        failure: failure.clone(),
     };
 
     // Rate sweep: one run per rate, tabulated to expose the saturation
@@ -524,6 +591,119 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn cmd_resilience(args: &Args) -> Result<()> {
+    use asyncflow::failure::cadence::{cluster_fault_rate, run_chained, sweep_cadence};
+    use asyncflow::traffic::{
+        load_trace_file, run_traffic_resumable, ArrivalProcess, Catalog, TrafficOutcome,
+        TrafficSpec, WorkloadMix,
+    };
+    let cluster = pick_cluster(args)?;
+    let cfg = pick_engine(args)?;
+    let seed = args.get_u64("seed", 42)?;
+    let duration = args.get_f64("duration", 20000.0)?;
+    let mix = WorkloadMix::parse(args.get_or("mix", "ddmd:2,cdg2:1"))?;
+    let max_workflows = args.get_usize("max-workflows", 10_000)?;
+    let catalog = Catalog::builtin();
+    let plan = plan_from_args(args, cluster.nodes.len().max(1) * 2)?;
+    let failure = failure_from_args(args)?.ok_or_else(|| {
+        Error::Config(
+            "resilience: provide a fault source (--mtbf S and/or --fail-trace t:node,...)"
+                .into(),
+        )
+    })?;
+    let policy = match args.get("policy") {
+        Some(p) => Some(p.parse::<asyncflow::sched::Policy>()?),
+        None => None,
+    };
+    let process = if let Some(path) = args.get("trace") {
+        load_trace_file(path)?
+    } else if args.get("interval").is_some() {
+        ArrivalProcess::Deterministic { interval: args.get_f64("interval", 0.0)? }
+    } else {
+        ArrivalProcess::Poisson { rate: args.get_f64("rate", 0.02)? }
+    };
+    let spec = TrafficSpec {
+        process,
+        mix,
+        duration,
+        max_workflows,
+        seed,
+        plan,
+        checkpoint_at: None,
+        policy,
+        failure: Some(failure.clone()),
+    };
+
+    let every = match args.get("checkpoint-every") {
+        Some(_) => Some(args.get_f64("checkpoint-every", 0.0)?),
+        None => None,
+    };
+    if every.is_some() && args.get("sweep-cadence").is_some() {
+        return Err(Error::Config(
+            "--checkpoint-every and --sweep-cadence are exclusive (chain real \
+             snapshots, or model the cadence — not both)"
+                .into(),
+        ));
+    }
+
+    // Cadence sweep: a failure-free baseline run supplies the work to
+    // protect; the analytic overlay injects the faults per cadence.
+    if let Some(list) = args.get("sweep-cadence") {
+        let cadences: Vec<f64> = list
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<f64>().map_err(|_| {
+                    Error::Config(format!("--sweep-cadence: expected a number, got '{s}'"))
+                })
+            })
+            .collect::<Result<_>>()?;
+        let rate = cluster_fault_rate(&cluster, &failure);
+        if rate <= 0.0 {
+            return Err(Error::Config(
+                "--sweep-cadence needs the stochastic fault process: set --mtbf".into(),
+            ));
+        }
+        let cost = args.get_f64("checkpoint-cost", 60.0)?;
+        let baseline = TrafficSpec { failure: None, ..spec };
+        let rep = match run_traffic_resumable(&baseline, &catalog, &cluster, &cfg)? {
+            TrafficOutcome::Completed(rep) => rep,
+            TrafficOutcome::Checkpointed(_) => {
+                return Err(Error::Engine(
+                    "resilience sweep: baseline run cannot checkpoint".into(),
+                ))
+            }
+        };
+        let sw = sweep_cadence(rep.makespan, rate, cost, &cadences, seed)?;
+        print!("{}", sw.render());
+        if let Some(dir) = args.get("out") {
+            std::fs::create_dir_all(dir)?;
+            let base = std::path::Path::new(dir);
+            let cp = base.join("resilience_cadence.csv");
+            std::fs::write(&cp, sw.csv())?;
+            let jp = base.join("resilience_cadence.json");
+            std::fs::write(&jp, sw.to_json().to_string_pretty())?;
+            println!("wrote {}, {}", cp.display(), jp.display());
+        }
+        return Ok(());
+    }
+
+    if let Some(every) = every {
+        let (rep, legs) = run_chained(&spec, &catalog, &cluster, &cfg, every)?;
+        println!(
+            "resilience: chained {legs} checkpoint legs (every {every:.0} s, each leg \
+             resumed from its JSON snapshot)"
+        );
+        return emit_traffic_report(args, &rep);
+    }
+
+    match run_traffic_resumable(&spec, &catalog, &cluster, &cfg)? {
+        TrafficOutcome::Completed(rep) => emit_traffic_report(args, &rep),
+        TrafficOutcome::Checkpointed(_) => Err(Error::Engine(
+            "resilience: run without a checkpoint time cannot checkpoint".into(),
+        )),
+    }
 }
 
 fn cmd_resume(args: &Args) -> Result<()> {

@@ -205,6 +205,42 @@ impl Agent {
         self.sched.note_finished(m.tenant, &m.req);
     }
 
+    /// Hard-kill a node: every running task with a slice on it dies
+    /// *now*, its partial work lost. The graceful-drain contrast
+    /// ([`drain`](Self::drain)): a drained node finishes its running
+    /// tasks; a killed node does not.
+    ///
+    /// Resources follow [`Allocator::release`] semantics per victim —
+    /// slices on non-draining nodes (the killed node included, which
+    /// restarts fail-stop and returns to service immediately) go back
+    /// to the free pool; slices a victim held on *draining* nodes
+    /// vanish with the drain. Killing a node that is itself mid-drain
+    /// therefore drops its busy share from the offered capacity at
+    /// once instead of at task completion, and the node stays
+    /// draining. Each victim is also retired from the fair-share
+    /// ledger (`note_finished`), so started−finished accounting does
+    /// not leak.
+    ///
+    /// Returns the victims as `(uid, meta)`, ascending by uid; the
+    /// engine decides their retry fate. Out-of-range or idle nodes
+    /// yield no victims.
+    pub fn kill_node(&mut self, node: usize) -> Vec<(usize, RunningMeta)> {
+        let mut victims = Vec::new();
+        for uid in 0..self.running.len() {
+            let touches = self.running[uid]
+                .as_ref()
+                .is_some_and(|m| m.placement.slots.iter().any(|&(n, _, _)| n == node));
+            if touches {
+                if let Some(m) = self.running[uid].take() {
+                    self.alloc.release(&m.placement);
+                    self.sched.note_finished(m.tenant, &m.req);
+                    victims.push((uid, m));
+                }
+            }
+        }
+        victims
+    }
+
     /// Number of currently running (placed) tasks.
     pub fn running_count(&self) -> usize {
         self.running.iter().filter(|m| m.is_some()).count()
@@ -424,5 +460,129 @@ mod tests {
         agent.grow(1, crate::resources::NodeSpec { cores: 16, gpus: 2 });
         assert_eq!(agent.allocator().node_count(), 4);
         assert_eq!(agent.schedulable_nodes(), 3);
+    }
+
+    #[test]
+    fn kill_frees_resources_and_node_returns_to_service() {
+        let cluster = ClusterSpec::uniform("t", 1, 4, 0);
+        let mut agent = agent(&cluster);
+        agent.submit(&task(0, 2, 0), 0, 0, 0.0);
+        agent.submit(&task(1, 2, 0), 0, 0, 0.0);
+        assert_eq!(agent.schedule(0.0).len(), 2);
+        assert_eq!(agent.free(), (0, 0));
+        // Fail-stop: both running tasks die now, resources return.
+        let victims = agent.kill_node(0);
+        let uids: Vec<usize> = victims.iter().map(|&(uid, _)| uid).collect();
+        assert_eq!(uids, vec![0, 1], "victims ascending by uid");
+        assert_eq!(agent.running_count(), 0);
+        assert_eq!(agent.free(), (4, 0));
+        assert_eq!(agent.offered(), (4, 0), "kill on a schedulable node keeps offered capacity");
+        assert!(agent.allocator().node_idle(0));
+        // The node restarted and takes new work immediately.
+        agent.submit(&task(2, 4, 0), 0, 0, 1.0);
+        let placed = agent.schedule(1.0);
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].placement.slots[0].0, 0);
+        // Idle and out-of-range nodes yield no victims.
+        agent.complete(2);
+        assert!(agent.kill_node(0).is_empty());
+        assert!(agent.kill_node(7).is_empty());
+    }
+
+    #[test]
+    fn kill_mid_drain_drops_offered_capacity_immediately() {
+        let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+        let mut agent = agent(&cluster);
+        agent.submit(&task(0, 2, 0), 0, 0, 0.0);
+        agent.submit(&task(1, 2, 0), 0, 0, 0.0);
+        assert_eq!(agent.schedule(0.0).len(), 2);
+        assert_eq!(agent.drain(1), 1);
+        let dn = (0..2)
+            .find(|&i| agent.allocator().is_draining(i))
+            .expect("one node is draining");
+        // Graceful contract: the draining node's busy share is still
+        // offered until its work finishes...
+        assert_eq!(agent.capacity(), (2, 0));
+        assert_eq!(agent.offered(), (4, 0));
+        // ...but a kill pre-empts the graceful hand-back: the share
+        // leaves the allocation at the kill instant.
+        let victims = agent.kill_node(dn);
+        assert_eq!(victims.len(), 1);
+        assert!(victims[0].1.placement.slots.iter().all(|&(n, _, _)| n == dn));
+        assert_eq!(agent.offered(), (2, 0), "killed drain share vanishes now, not at completion");
+        assert_eq!(agent.capacity(), (2, 0));
+        assert!(agent.allocator().is_draining(dn), "kill does not cancel the drain");
+        assert!(agent.allocator().node_idle(dn));
+        // Killing the surviving schedulable node contrasts: its share
+        // returns to the free pool and it stays in service.
+        let other = 1 - dn;
+        assert_eq!(agent.kill_node(other).len(), 1);
+        assert_eq!(agent.offered(), (2, 0));
+        assert_eq!(agent.free(), (2, 0));
+        assert!(!agent.allocator().is_draining(other));
+        agent.submit(&task(2, 2, 0), 0, 0, 1.0);
+        let placed = agent.schedule(1.0);
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].placement.slots[0].0, other, "drained node must not be re-granted");
+    }
+
+    #[test]
+    fn kill_rebuilds_backfill_projection() {
+        // Same shape as conservative_backfill_threads_the_projection_
+        // through, but the node hosting the projected completion dies:
+        // the head must unblock at the next round instead of waiting
+        // for a completion that will never come.
+        let cluster = ClusterSpec::uniform("t", 1, 4, 0);
+        let mut agent = Agent::new(&cluster, Policy::Backfill, 0.0);
+        let mut blocker = task(0, 2, 0);
+        blocker.tx = 100.0;
+        agent.submit(&blocker, 0, 0, 0.0);
+        assert_eq!(agent.schedule(0.0).len(), 1);
+        let mut head = task(1, 4, 0);
+        head.tx = 10.0;
+        agent.submit(&head, 0, 0, 1.0);
+        let mut long_small = task(2, 1, 0);
+        long_small.tx = 500.0;
+        agent.submit(&long_small, 0, 0, 2.0);
+        assert!(agent.schedule(3.0).is_empty(), "head blocked, long task held");
+        let victims = agent.kill_node(0);
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].0, 0);
+        let placed = agent.schedule(4.0);
+        let uids: Vec<usize> = placed.iter().map(|p| p.uid).collect();
+        assert_eq!(uids, vec![1], "head starts once the dead blocker leaves the projection");
+        agent.complete(1);
+        let placed = agent.schedule(15.0);
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].uid, 2);
+    }
+
+    #[test]
+    fn kill_releases_fair_share_ledger() {
+        // A killed task must be retired from the fair-share ledger
+        // exactly like a completed one; otherwise the victim tenant
+        // carries phantom usage forever.
+        let cluster = ClusterSpec::uniform("t", 1, 4, 0);
+        let mut agent = Agent::new(&cluster, Policy::WeightedFair, 0.0);
+        agent.submit(&task(0, 2, 0), 0, 0, 0.0);
+        agent.submit(&task(1, 2, 0), 0, 0, 0.0);
+        assert_eq!(agent.schedule(0.0).len(), 2, "tenant 0 fills node 0");
+        let shape = cluster.nodes[0];
+        agent.grow(1, shape);
+        agent.submit(&task(2, 2, 0), 0, 1, 1.0);
+        let placed = agent.schedule(1.0);
+        assert_eq!(placed.len(), 1, "tenant 1 lands on the grown node");
+        // Usage now: tenant 0 -> 4 cores, tenant 1 -> 2 cores. Kill
+        // tenant 0's node; its 4 cores must leave the ledger.
+        assert_eq!(agent.kill_node(0).len(), 2);
+        // Tenant 1's task submitted first: if the drain fell back to
+        // FIFO — or if the kill leaked usage (0-vs-4 beats 1-vs-2) —
+        // uid 3 would go first. Fair share with a clean ledger picks
+        // tenant 0 (usage 0 < 2).
+        agent.submit(&task(3, 2, 0), 0, 1, 2.0);
+        agent.submit(&task(4, 2, 0), 0, 0, 2.5);
+        let placed = agent.schedule(3.0);
+        assert_eq!(placed.len(), 2);
+        assert_eq!(placed[0].uid, 4, "killed tenant's usage was released, it goes first");
     }
 }

@@ -82,6 +82,14 @@ impl EventQueue {
         self.heap.peek().map(|e| e.time)
     }
 
+    /// Remove every pending event for `uid` (a killed task's
+    /// completion must never fire). `retain` preserves the surviving
+    /// events' sequence numbers, so simultaneous-event ordering among
+    /// survivors is unchanged.
+    pub fn cancel(&mut self, uid: usize) {
+        self.heap.retain(|e| e.uid != uid);
+    }
+
     /// Fast-forward the clock (never backwards).
     pub fn advance_to(&mut self, t: f64) {
         if t > self.now {
@@ -126,6 +134,10 @@ impl Executor for VirtualExecutor {
 
     fn advance_to(&mut self, t: f64) {
         self.queue.advance_to(t);
+    }
+
+    fn cancel(&mut self, uid: usize) {
+        self.queue.cancel(uid);
     }
 
     fn drain_ready_into(&mut self, out: &mut Vec<Completion>) {

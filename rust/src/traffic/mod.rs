@@ -60,6 +60,7 @@
 //!     plan: None,
 //!     checkpoint_at: None,
 //!     policy: None,
+//!     failure: None,
 //! };
 //! let report = run_traffic(
 //!     &spec,
@@ -81,6 +82,7 @@ use crate::ddmd::{ddmd_workflow, DdmdConfig};
 use crate::engine::{Coordinator, EngineConfig, ExecutionMode, RunOutcome};
 use crate::entk::Workflow;
 use crate::error::{Error, Result};
+use crate::failure::FailureSpec;
 use crate::pilot::ResourcePlan;
 use crate::resources::ClusterSpec;
 use crate::sched::Policy;
@@ -291,6 +293,12 @@ pub struct TrafficSpec {
     /// keeps it — so a spec fully describes its scenario. Checkpoints
     /// carry the resolved policy; resumes replay it automatically.
     pub policy: Option<Policy>,
+    /// Failure injection (`--mtbf` / `--fail-trace` / `--retry`): node
+    /// faults hard-kill running tasks, which re-enter the scheduler
+    /// under the spec's retry policy. `None` injects nothing.
+    /// Checkpoints carry the live failure-process state; resumes
+    /// continue the fault sequence bit-identically.
+    pub failure: Option<FailureSpec>,
 }
 
 /// Run one traffic scenario: sample arrivals, stream every workflow
@@ -316,6 +324,7 @@ pub struct TrafficSpec {
 ///     plan: None,
 ///     checkpoint_at: None,
 ///     policy: None,
+///     failure: None,
 /// };
 /// let report = run_traffic(
 ///     &spec,
@@ -514,6 +523,9 @@ pub fn run_traffic_resumable(
     if let Some(plan) = &spec.plan {
         coord.set_resource_plan(plan.clone())?;
     }
+    if let Some(failure) = &spec.failure {
+        coord.set_failure_spec(failure.clone())?;
+    }
     let mut names = Vec::with_capacity(arrivals.len());
     let mut times = Vec::with_capacity(arrivals.len());
     for a in &arrivals {
@@ -573,6 +585,26 @@ impl TrafficCheckpoint {
     /// instant applies immediately), so a preempted run can restart on
     /// a smaller or growing allocation.
     pub fn resume(self, plan: Option<ResourcePlan>) -> Result<TrafficReport> {
+        match self.resume_until(plan, None)? {
+            TrafficOutcome::Completed(rep) => Ok(*rep),
+            TrafficOutcome::Checkpointed(_) => Err(Error::Engine(
+                "traffic resume: run without a checkpoint time cannot re-checkpoint".into(),
+            )),
+        }
+    }
+
+    /// [`resume`](Self::resume) with re-preemption support: run until
+    /// `checkpoint_at` (an absolute engine time past the snapshot
+    /// instant) and hand back a fresh [`TrafficCheckpoint`] if the
+    /// clock gets there before the stream drains. The building block
+    /// of the periodic `--checkpoint-every` chain: each leg resumes
+    /// the previous leg's snapshot and checkpoints again one cadence
+    /// later.
+    pub fn resume_until(
+        self,
+        plan: Option<ResourcePlan>,
+        checkpoint_at: Option<f64>,
+    ) -> Result<TrafficOutcome> {
         let TrafficCheckpoint { arrival_window, names, arrivals, sim } = self;
         if names.len() != sim.n_members || arrivals.len() != sim.n_members {
             return Err(Error::Config(format!(
@@ -588,8 +620,19 @@ impl TrafficCheckpoint {
             coord.set_resource_plan(p)?;
         }
         let mut ex = VirtualExecutor::new();
-        let members = coord.run(&mut ex)?;
-        Ok(TrafficReport::build(arrival_window, names, arrivals, members, &cluster))
+        match coord.run_until(&mut ex, checkpoint_at)? {
+            RunOutcome::Completed(members) => Ok(TrafficOutcome::Completed(Box::new(
+                TrafficReport::build(arrival_window, names, arrivals, members, &cluster),
+            ))),
+            RunOutcome::Checkpointed(sim) => {
+                Ok(TrafficOutcome::Checkpointed(Box::new(TrafficCheckpoint {
+                    arrival_window,
+                    names,
+                    arrivals,
+                    sim: *sim,
+                })))
+            }
+        }
     }
 }
 

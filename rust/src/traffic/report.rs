@@ -3,6 +3,7 @@
 
 use crate::campaign::merge_member_reports;
 use crate::engine::RunReport;
+use crate::failure::ResilienceStats;
 use crate::metrics::{jain_index, BacklogTrace, CapacityTimeline};
 use crate::resources::ClusterSpec;
 use crate::util::json::{obj, Json};
@@ -81,6 +82,11 @@ pub struct TrafficReport {
     /// [`jain_index`]): 1 = every member waited equally, 1/n = one
     /// member absorbed all the waiting.
     pub fairness_index: f64,
+    /// Resilience accounting (failures, kills, retries, lost vs
+    /// completed resource-time) when the run injected faults; `None`
+    /// for a failure-free run. Coordinator-global: every member report
+    /// carries the same stats, reduced here once.
+    pub resilience: Option<ResilienceStats>,
 }
 
 impl TrafficReport {
@@ -154,6 +160,8 @@ impl TrafficReport {
             0.0
         };
 
+        let resilience = members.first().and_then(|m| m.resilience);
+
         TrafficReport {
             arrival_window,
             wait: Summary::try_of(&waits).unwrap_or_else(Summary::empty),
@@ -174,6 +182,7 @@ impl TrafficReport {
             capacity,
             wait_by_workload,
             fairness_index,
+            resilience,
             workflows,
         }
     }
@@ -242,6 +251,21 @@ impl TrafficReport {
                     w.n, w.mean, w.p95, w.max
                 ));
             }
+        }
+        if let Some(r) = &self.resilience {
+            s.push_str(&format!(
+                "  resilience: {} node failures, {} tasks killed, {} retries ({} exhausted)\n",
+                r.failures_injected, r.tasks_killed, r.retries_scheduled, r.retries_exhausted,
+            ));
+            let delivered = r.goodput_core_s + r.lost_core_s;
+            s.push_str(&format!(
+                "    goodput {:.0} core-s / {:.0} gpu-s; lost {:.0} core-s / {:.0} gpu-s ({:.1}% of delivered core-time wasted)\n",
+                r.goodput_core_s,
+                r.goodput_gpu_s,
+                r.lost_core_s,
+                r.lost_gpu_s,
+                if delivered > 0.0 { r.lost_core_s / delivered * 100.0 } else { 0.0 },
+            ));
         }
         if !self.capacity.is_constant() {
             let first = self.capacity.points.first().map_or((0, 0), |&(_, c, g)| (c, g));
@@ -347,6 +371,13 @@ impl TrafficReport {
             ("peak_live_tasks", Json::from(self.peak_live_tasks)),
             ("saturated", Json::from(self.is_saturated())),
             ("fairness_index", Json::from(self.fairness_index)),
+            (
+                "resilience",
+                match &self.resilience {
+                    Some(r) => crate::util::json::ToJson::to_json(r),
+                    None => Json::Null,
+                },
+            ),
             ("wait_by_workload", Json::Arr(wait_by_workload)),
             ("backlog_trace", Json::Arr(backlog_points)),
             ("capacity_trace", Json::Arr(capacity_points)),
@@ -391,5 +422,27 @@ impl TrafficReport {
             self.fairness_index
         ));
         s
+    }
+
+    /// CSV rendering of the resilience ledger: one row of counters and
+    /// resource-time totals (empty string when the run injected no
+    /// faults — the CLI skips the file).
+    pub fn resilience_csv(&self) -> String {
+        let Some(r) = &self.resilience else {
+            return String::new();
+        };
+        format!(
+            "failures_injected,tasks_killed,retries_scheduled,retries_exhausted,\
+             lost_core_s,lost_gpu_s,goodput_core_s,goodput_gpu_s\n\
+             {},{},{},{},{:.3},{:.3},{:.3},{:.3}\n",
+            r.failures_injected,
+            r.tasks_killed,
+            r.retries_scheduled,
+            r.retries_exhausted,
+            r.lost_core_s,
+            r.lost_gpu_s,
+            r.goodput_core_s,
+            r.goodput_gpu_s,
+        )
     }
 }

@@ -84,6 +84,7 @@ fn resume_is_bit_identical_across_seeds_checkpoint_times_and_policies() {
                 plan: Some(ResourcePlan::new().resize(15.0, -1)),
                 checkpoint_at: None,
                 policy: Some(policy),
+                failure: None,
             };
             for t_ck in [7.0, 21.0] {
                 let (straight, resumed, ck) =
@@ -127,6 +128,7 @@ fn checkpoint_mid_drain_of_a_draining_node_restores_exactly() {
         plan: Some(ResourcePlan::new().resize(5.0, -1)),
         checkpoint_at: None,
         policy: None,
+        failure: None,
     };
     let (straight, resumed, ck) =
         straight_and_resumed(&spec, &catalog(), &cluster, &cfg, 7.0);
@@ -167,6 +169,7 @@ fn resume_with_jittered_builtin_workloads_is_bit_identical() {
         plan: None,
         checkpoint_at: None,
         policy: None,
+        failure: None,
     };
     let (straight, resumed, ck) =
         straight_and_resumed(&spec, &Catalog::builtin(), &cluster, &cfg, 600.0);
@@ -196,6 +199,7 @@ fn resume_on_a_shrunken_pilot_completes_all_work_with_a_makespan_penalty() {
         plan: None,
         checkpoint_at: None,
         policy: None,
+        failure: None,
     };
     let straight = run_traffic(&spec, &catalog(), &cluster, &cfg).unwrap();
     assert_eq!(straight.workflows.len(), 10);
@@ -250,6 +254,7 @@ fn resume_with_autoscaler_grows_the_follow_up_allocation() {
         plan: None,
         checkpoint_at: None,
         policy: None,
+        failure: None,
     };
     let straight = run_traffic(&spec, &catalog(), &cluster, &cfg).unwrap();
     let preempted = TrafficSpec { checkpoint_at: Some(6.0), ..spec };
@@ -298,6 +303,7 @@ fn run_traffic_refuses_a_checkpoint_it_cannot_return() {
         plan: None,
         checkpoint_at: Some(5.0),
         policy: None,
+        failure: None,
     };
     let err = run_traffic(&spec, &catalog(), &cluster, &EngineConfig::ideal());
     assert!(err.is_err(), "run_traffic must refuse to swallow a checkpoint");
@@ -324,6 +330,7 @@ fn corrupted_snapshots_are_rejected_not_restored() {
         plan: None,
         checkpoint_at: Some(5.0),
         policy: None,
+        failure: None,
     };
     let TrafficOutcome::Checkpointed(ck) =
         run_traffic_resumable(&spec, &catalog(), &cluster, &EngineConfig::ideal()).unwrap()

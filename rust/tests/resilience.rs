@@ -1,0 +1,379 @@
+//! Integration tests for failure injection and resilience.
+//!
+//! The headline invariants:
+//!
+//! 1. **Crash/resume determinism under faults** — for any seed, MTBF
+//!    and scheduling policy, checkpoint-at-T + JSON round-trip +
+//!    resume is bit-identical to the uninterrupted run, including
+//!    snapshots taken while a killed task sits in retry backoff and
+//!    snapshots taken just before a fault fires.
+//! 2. **Progress under unlimited retries** — with a finite fault rate
+//!    and an unbounded retry budget every workflow completes, and the
+//!    resilience ledger conserves: completed goodput is exactly the
+//!    work the tasks carried, lost work is what the kills destroyed.
+//! 3. **Typed exhaustion** — a capped retry budget surfaces
+//!    `Error::RetriesExhausted`, never a hang or a silent drop.
+
+use asyncflow::dag::Dag;
+use asyncflow::engine::EngineConfig;
+use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::failure::cadence::run_chained;
+use asyncflow::failure::{FailureSpec, RetryPolicy};
+use asyncflow::pilot::ResourcePlan;
+use asyncflow::resources::{ClusterSpec, ResourceRequest};
+use asyncflow::task::TaskSetSpec;
+use asyncflow::traffic::{
+    run_traffic, run_traffic_resumable, ArrivalProcess, Catalog, TrafficCheckpoint,
+    TrafficOutcome, TrafficReport, TrafficSpec, WorkloadMix,
+};
+use asyncflow::util::json::{FromJson, Json, ToJson};
+use asyncflow::Error;
+
+/// Single-task workflow: 1 core for `tx` seconds, deterministic.
+fn solo(tx: f64) -> Workflow {
+    let mut dag = Dag::new();
+    dag.add_node("A");
+    Workflow {
+        name: "solo".into(),
+        sets: vec![TaskSetSpec::new("A", 1, ResourceRequest::new(1, 0), tx).with_sigma(0.0)],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0])],
+        asynchronous: vec![Pipeline::new("a").stage(&[0])],
+    }
+}
+
+fn catalog(tx: f64) -> Catalog {
+    Catalog::new().insert("solo", solo(tx))
+}
+
+/// Unlimited retries with the given first backoff.
+fn unlimited(base: f64) -> RetryPolicy {
+    RetryPolicy { max_attempts: 0, base, factor: 2.0, jitter: 0.25 }
+}
+
+/// Run `spec` uninterrupted, then again preempted at `t_ck` with a
+/// full JSON round-trip of the checkpoint before resuming; returns
+/// both reports (panics if the run finishes before the checkpoint).
+fn straight_and_resumed(
+    spec: &TrafficSpec,
+    cat: &Catalog,
+    cluster: &ClusterSpec,
+    cfg: &EngineConfig,
+    t_ck: f64,
+) -> (TrafficReport, TrafficReport, TrafficCheckpoint) {
+    let straight = run_traffic(spec, cat, cluster, cfg).unwrap();
+    let preempted = TrafficSpec { checkpoint_at: Some(t_ck), ..spec.clone() };
+    let outcome = run_traffic_resumable(&preempted, cat, cluster, cfg).unwrap();
+    let TrafficOutcome::Checkpointed(ck) = outcome else {
+        panic!("run finished before the t = {t_ck} checkpoint")
+    };
+    let wire = ck.to_json().to_string();
+    let parsed = TrafficCheckpoint::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    let ck_copy = TrafficCheckpoint::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    let resumed = parsed.resume(None).unwrap();
+    (straight, resumed, ck_copy)
+}
+
+#[test]
+fn faulty_resume_is_bit_identical_across_seeds_rates_and_policies() {
+    // The checkpoint.rs headline matrix, now with a live stochastic
+    // fault process and retry pipeline layered on top: a Poisson
+    // stream over an allocation that also loses a node gracefully at
+    // t = 15, killed by MTBF faults at two intensities, three seeds x
+    // all three scheduling policies x checkpoints on both sides of the
+    // drain. Resuming must replay the exact fault schedule (the fault
+    // RNG position rides in the snapshot), the retry backoffs and the
+    // attempt counters — bit for bit.
+    use asyncflow::sched::Policy;
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let cfg = EngineConfig::ideal();
+    for policy in [Policy::FifoBackfill, Policy::WeightedFair, Policy::Backfill] {
+        for seed in [1, 2, 3] {
+            for mtbf in [8.0, 25.0] {
+                let failure = FailureSpec {
+                    retry: unlimited(2.0),
+                    ..FailureSpec::mtbf(mtbf)
+                };
+                let spec = TrafficSpec {
+                    process: ArrivalProcess::Poisson { rate: 1.0 },
+                    mix: WorkloadMix::parse("solo").unwrap(),
+                    duration: 30.0,
+                    max_workflows: 100_000,
+                    seed,
+                    plan: Some(ResourcePlan::new().resize(15.0, -1)),
+                    checkpoint_at: None,
+                    policy: Some(policy),
+                    failure: Some(failure),
+                };
+                for t_ck in [7.0, 21.0] {
+                    let (straight, resumed, ck) =
+                        straight_and_resumed(&spec, &catalog(4.0), &cluster, &cfg, t_ck);
+                    assert!(
+                        ck.sim.failure.is_some(),
+                        "snapshot must carry the fault-process state"
+                    );
+                    assert_eq!(
+                        straight, resumed,
+                        "{policy:?}, seed {seed}, mtbf {mtbf}, ck {t_ck}: \
+                         reports must be identical"
+                    );
+                    assert_eq!(
+                        straight.to_json().to_string(),
+                        resumed.to_json().to_string(),
+                        "{policy:?}, seed {seed}, mtbf {mtbf}, ck {t_ck}: \
+                         bit-identical JSON"
+                    );
+                    assert_eq!(straight.failed_tasks, 0, "unlimited retries drop nothing");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn snapshot_mid_retry_backoff_restores_exactly() {
+    // Deterministic construction of the juiciest snapshot state: a
+    // trace fault kills the only running task at t = 5, its retry is
+    // due at t = 15 (base 10, no jitter), and the checkpoint lands at
+    // t = 8 — squarely inside the backoff window. The killed-but-live
+    // task must ride the snapshot through the retry queue, not the run
+    // queue and not the free list.
+    let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+    let cfg = EngineConfig::ideal();
+    let mut failure = FailureSpec::parse_trace("5:0").unwrap();
+    failure.retry = RetryPolicy { max_attempts: 0, base: 10.0, factor: 1.0, jitter: 0.0 };
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Deterministic { interval: 4.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 12.0,
+        max_workflows: 100_000,
+        seed: 1,
+        plan: None,
+        checkpoint_at: None,
+        policy: None,
+        failure: Some(failure),
+    };
+    let (straight, resumed, ck) =
+        straight_and_resumed(&spec, &catalog(10.0), &cluster, &cfg, 8.0);
+
+    // The snapshot really is mid-backoff.
+    assert_eq!(ck.sim.retries.len(), 1, "one task waiting out its backoff at t = 8");
+    assert_eq!(ck.sim.retries[0].uid, 0, "the first task is the victim");
+    assert!((ck.sim.retries[0].due - 15.0).abs() < 1e-9, "due = kill + base backoff");
+    assert_eq!(ck.sim.retries[0].attempt, 1);
+    assert_eq!(ck.sim.attempts, vec![(0, 1)], "attempt counter rides the snapshot");
+    assert!(ck.sim.failure.is_some());
+
+    assert_eq!(straight, resumed);
+    assert_eq!(straight.to_json().to_string(), resumed.to_json().to_string());
+    // The fault accounting is exact: one fault, one victim killed 5 s
+    // into a 10 s task, retried once, nothing exhausted.
+    let r = straight.resilience.expect("failure-enabled run must report resilience");
+    assert_eq!(r.failures_injected, 1);
+    assert_eq!(r.tasks_killed, 1);
+    assert_eq!(r.retries_scheduled, 1);
+    assert_eq!(r.retries_exhausted, 0);
+    assert!((r.lost_core_s - 5.0).abs() < 1e-9, "5 core-seconds died with the kill");
+    assert_eq!(r.lost_gpu_s, 0.0);
+    // All three arrivals complete; goodput is their full carried work.
+    assert_eq!(straight.workflows.len(), 3);
+    assert_eq!(straight.failed_tasks, 0);
+    assert!((r.goodput_core_s - 30.0).abs() < 1e-6);
+}
+
+#[test]
+fn checkpoint_just_before_a_kill_replays_the_fault_on_resume() {
+    // The fault fires at t = 9.5, the checkpoint at t = 9.0: the kill,
+    // the lost-work accounting and the retry all happen in the
+    // *resumed* leg, off the snapshotted trace cursor.
+    let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+    let cfg = EngineConfig::ideal();
+    let mut failure = FailureSpec::parse_trace("9.5:0").unwrap();
+    failure.retry = RetryPolicy { max_attempts: 0, base: 2.0, factor: 1.0, jitter: 0.0 };
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Deterministic { interval: 4.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 12.0,
+        max_workflows: 100_000,
+        seed: 1,
+        plan: None,
+        checkpoint_at: None,
+        policy: None,
+        failure: Some(failure),
+    };
+    let (straight, resumed, ck) =
+        straight_and_resumed(&spec, &catalog(10.0), &cluster, &cfg, 9.0);
+    assert!(ck.sim.retries.is_empty(), "nothing killed yet at t = 9");
+    assert_eq!(straight, resumed);
+    assert_eq!(straight.to_json().to_string(), resumed.to_json().to_string());
+    let r = straight.resilience.unwrap();
+    assert_eq!(r.tasks_killed, 1, "the t = 9.5 fault kills the 10 s task");
+    assert!((r.lost_core_s - 9.5).abs() < 1e-9);
+    assert_eq!(straight.workflows.len(), 3);
+    assert_eq!(straight.failed_tasks, 0, "the victim retries and finishes");
+}
+
+#[test]
+fn unlimited_retries_complete_everything_and_conserve_the_ledger() {
+    // Aggressive fault rate (per-node MTBF 3 s against 3 s tasks) with
+    // an unbounded retry budget: progress is guaranteed, and the
+    // resilience ledger must conserve — every completed task carried
+    // exactly tx core-seconds of goodput, every kill destroyed only
+    // partial work, every kill got a retry, nothing was exhausted.
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let cfg = EngineConfig::ideal();
+    let failure = FailureSpec { retry: unlimited(1.0), ..FailureSpec::mtbf(3.0) };
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Poisson { rate: 1.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 30.0,
+        max_workflows: 100_000,
+        seed: 7,
+        plan: None,
+        checkpoint_at: None,
+        policy: None,
+        failure: Some(failure),
+    };
+    let rep = run_traffic(&spec, &catalog(3.0), &cluster, &cfg).unwrap();
+    let n = rep.workflows.len();
+    assert!(n > 10, "a 30 s Poisson(1) window must admit a real stream, got {n}");
+    assert_eq!(rep.total_tasks, n, "solo: one task per workflow");
+    assert_eq!(rep.failed_tasks, 0, "unlimited retries never drop a task");
+    assert_eq!(rep.backlog.final_tasks(), 0, "stream fully drained");
+
+    let r = rep.resilience.expect("failure-enabled run must report resilience");
+    assert!(r.failures_injected > 0, "MTBF 3 s over 2 nodes must fire within the run");
+    assert!(r.tasks_killed > 0, "a saturated stream must lose tasks to those faults");
+    assert_eq!(
+        r.tasks_killed, r.retries_scheduled,
+        "unlimited budget: every kill is granted a retry"
+    );
+    assert_eq!(r.retries_exhausted, 0);
+    // Conservation: completed goodput is exactly the carried work (tx
+    // = 3 s x 1 core per task, zero overhead, sigma 0), and lost work
+    // is strictly positive partial progress.
+    assert!(
+        (r.goodput_core_s - 3.0 * n as f64).abs() < 1e-6,
+        "goodput {} != 3 x {n} tasks",
+        r.goodput_core_s
+    );
+    assert_eq!(r.goodput_gpu_s, 0.0);
+    assert!(r.lost_core_s > 0.0, "kills destroy partial work");
+    assert!(
+        r.lost_core_s < r.tasks_killed as f64 * 3.0 + 1e-9,
+        "a kill cannot destroy more than one full task's work"
+    );
+}
+
+#[test]
+fn capped_retries_surface_a_typed_error_not_a_hang() {
+    // Two trace faults aimed at the same task: attempt 1 is granted
+    // (max = 1), attempt 2 exhausts the budget mid-run. The engine
+    // must abort with the typed error naming the workflow, the task
+    // and the attempt count.
+    let cluster = ClusterSpec::uniform("t", 1, 1, 0);
+    let mut failure = FailureSpec::parse_trace("5:0,20:0").unwrap();
+    failure.retry = RetryPolicy { max_attempts: 1, base: 10.0, factor: 1.0, jitter: 0.0 };
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Deterministic { interval: 1000.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 10.0,
+        max_workflows: 100_000,
+        seed: 1,
+        plan: None,
+        checkpoint_at: None,
+        policy: None,
+        failure: Some(failure),
+    };
+    // Timeline: the 10 s task runs [0, 10), dies at 5, retries at 15
+    // (base backoff 10), runs [15, 25), dies again at 20 — budget gone.
+    let err = run_traffic(&spec, &catalog(10.0), &cluster, &EngineConfig::ideal())
+        .expect_err("the second kill must exhaust the retry budget");
+    match err {
+        Error::RetriesExhausted { workflow, uid, attempts } => {
+            assert_eq!(workflow, "solo");
+            assert_eq!(uid, 0);
+            assert_eq!(attempts, 2);
+        }
+        other => panic!("expected RetriesExhausted, got {other:?}"),
+    }
+}
+
+#[test]
+fn kills_on_a_draining_node_shed_capacity_and_the_run_recovers() {
+    // Kill-vs-drain at engine scale: one node starts a graceful drain
+    // at t = 5, then a trace fault at t = 7 hard-kills both nodes.
+    // The drained node's busy share must leave the offered-capacity
+    // timeline at the kill instant (not at the task's would-have-been
+    // completion), the victims must retry on the survivor, and the
+    // whole thing must still be checkpoint-exact mid-recovery.
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let cfg = EngineConfig::ideal();
+    let mut failure = FailureSpec::parse_trace("7:0,7:1").unwrap();
+    failure.retry = RetryPolicy { max_attempts: 0, base: 1.0, factor: 1.0, jitter: 0.0 };
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Deterministic { interval: 2.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 12.0,
+        max_workflows: 100_000,
+        seed: 1,
+        plan: Some(ResourcePlan::new().resize(5.0, -1)),
+        checkpoint_at: None,
+        policy: None,
+        failure: Some(failure),
+    };
+    // t_ck = 7.5: post-kill, mid-drain, with retries due at t = 8
+    // still pending in the snapshot.
+    let (straight, resumed, ck) =
+        straight_and_resumed(&spec, &catalog(10.0), &cluster, &cfg, 7.5);
+    assert!(!ck.sim.retries.is_empty(), "t = 7 victims are waiting out backoff at 7.5");
+    assert!(ck.sim.draining.iter().any(|&d| d), "the t = 5 drain is still in force");
+    assert_eq!(straight, resumed);
+    assert_eq!(straight.to_json().to_string(), resumed.to_json().to_string());
+
+    let r = straight.resilience.unwrap();
+    assert!(r.tasks_killed >= 1, "the t = 7 sweep catches running work");
+    assert_eq!(straight.failed_tasks, 0);
+    assert_eq!(straight.workflows.len(), 6, "every arrival completes on the survivor");
+    assert_eq!(
+        straight.capacity.final_capacity(),
+        (2, 0),
+        "the drained node never returns; the killed survivor does"
+    );
+    // The drained node's share left at the kill (t = 7), not at its
+    // task's original completion (t = 10).
+    assert!(
+        straight.capacity.points.iter().any(|&(t, c, _)| (t - 7.0).abs() < 1e-9 && c == 2),
+        "offered capacity must step to 2 cores at the kill instant: {:?}",
+        straight.capacity.points
+    );
+}
+
+#[test]
+fn chained_periodic_checkpoints_match_the_uninterrupted_run() {
+    // The --checkpoint-every machinery: snapshot every 5 s, JSON
+    // round-trip every leg, resume — under live faults and retries —
+    // and the final report must still be bit-identical to the run
+    // that never stopped.
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let cfg = EngineConfig::ideal();
+    let failure = FailureSpec { retry: unlimited(2.0), ..FailureSpec::mtbf(8.0) };
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Poisson { rate: 1.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 30.0,
+        max_workflows: 100_000,
+        seed: 2,
+        plan: None,
+        checkpoint_at: None,
+        policy: None,
+        failure: Some(failure),
+    };
+    let cat = catalog(4.0);
+    let straight = run_traffic(&spec, &cat, &cluster, &cfg).unwrap();
+    let (chained, legs) = run_chained(&spec, &cat, &cluster, &cfg, 5.0).unwrap();
+    assert!(legs >= 3, "a 30+ s run at a 5 s cadence must take several legs, got {legs}");
+    assert_eq!(straight, chained, "periodic checkpointing must not perturb the run");
+    assert_eq!(straight.to_json().to_string(), chained.to_json().to_string());
+    assert_eq!(straight.resilience, chained.resilience);
+}

@@ -48,6 +48,7 @@ fn spec(process: ArrivalProcess, duration: f64, seed: u64) -> TrafficSpec {
         plan: None,
         checkpoint_at: None,
         policy: None,
+        failure: None,
     }
 }
 
@@ -238,6 +239,7 @@ fn mix_ratio_shapes_the_sampled_stream() {
         plan: None,
         checkpoint_at: None,
         policy: None,
+        failure: None,
     };
     let rep = run_traffic(&s, &cat, &cluster(), &EngineConfig::ideal()).unwrap();
     let fast = rep.workflows.iter().filter(|w| w.name == "fast").count();
@@ -428,6 +430,7 @@ fn unknown_workload_and_empty_windows_error() {
             plan: None,
             checkpoint_at: None,
             policy: None,
+            failure: None,
         },
         &catalog(),
         &cluster(),
@@ -520,6 +523,7 @@ fn weighted_fair_bounds_solo_wait_below_the_fifo_starvation_case() {
                 plan: None,
                 checkpoint_at: None,
                 policy: Some(policy),
+                failure: None,
             },
             &cat,
             &cluster(),
