@@ -1,0 +1,184 @@
+//! Observability overhead: the same streamed-traffic run with no
+//! attachments, with an explicit `NullSink`, and with a real
+//! `FileSink` writing the NDJSON event stream.
+//!
+//! `cargo bench --bench bench_obs` — flags after `--`:
+//!   `--n N`       workflows to stream (default 1000)
+//!   `--smoke`     CI mode: tiny stream, one timed iteration
+//!   `--json PATH` write the machine-readable result
+//!
+//! The acceptance bar: the disabled path (`NullSink`) costs at most 2%
+//! over a run with no sink at all — emission sites must vanish behind
+//! the single `enabled()` check. All three variants must simulate the
+//! identical trajectory (the sink is write-only telemetry).
+
+use asyncflow::dag::Dag;
+use asyncflow::engine::EngineConfig;
+use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::obs::{FileSink, NullSink};
+use asyncflow::resources::{ClusterSpec, ResourceRequest};
+use asyncflow::task::TaskSetSpec;
+use asyncflow::traffic::{
+    run_traffic_resumable_obs, ArrivalProcess, Catalog, TrafficObs, TrafficOutcome,
+    TrafficReport, TrafficSpec, WorkloadMix,
+};
+use asyncflow::util::bench::fmt_time;
+use asyncflow::util::cli::Args;
+use asyncflow::util::json::{obj, Json};
+
+/// Two-stage chain (4 + 1 tasks): enough task volume that the per-event
+/// emission sites dominate any fixed setup cost.
+fn chain() -> Workflow {
+    let mut dag = Dag::new();
+    let a = dag.add_node("A");
+    let b = dag.add_node("B");
+    dag.add_edge(a, b).unwrap();
+    Workflow {
+        name: "chain".into(),
+        sets: vec![
+            TaskSetSpec::new("A", 4, ResourceRequest::new(2, 0), 20.0).with_sigma(0.05),
+            TaskSetSpec::new("B", 1, ResourceRequest::new(4, 0), 10.0).with_sigma(0.05),
+        ],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0]).stage(&[1])],
+        asynchronous: vec![Pipeline::new("p").stage(&[0]).stage(&[1])],
+    }
+}
+
+/// Cheap trajectory digest — any simulation divergence between the
+/// variants shows up here (bit-for-bit stream equality is
+/// property-tested in `tests/obs_stream.rs`).
+fn digest(rep: &TrafficReport) -> u64 {
+    let mut d = 0xcbf2_9ce4_8422_2325u64;
+    for bits in [
+        rep.makespan.to_bits(),
+        rep.wait.mean.to_bits(),
+        rep.ttx.p95.to_bits(),
+        rep.total_tasks as u64,
+    ] {
+        d = (d ^ bits).wrapping_mul(0x1000_0000_01b3);
+    }
+    d
+}
+
+fn run_once(
+    spec: &TrafficSpec,
+    catalog: &Catalog,
+    cluster: &ClusterSpec,
+    cfg: &EngineConfig,
+    obs: TrafficObs,
+) -> (f64, u64) {
+    let t0 = std::time::Instant::now();
+    let rep = match run_traffic_resumable_obs(spec, catalog, cluster, cfg, obs).unwrap() {
+        TrafficOutcome::Completed(rep) => rep,
+        TrafficOutcome::Checkpointed(_) => unreachable!("spec has no checkpoint time"),
+    };
+    (t0.elapsed().as_secs_f64(), digest(&rep))
+}
+
+fn main() {
+    let args = Args::from_env(&["smoke"]).unwrap();
+    let smoke = args.flag("smoke");
+    let default_n = if smoke { 200 } else { 1_000 };
+    let n = args.get_usize("n", default_n).unwrap();
+    let iters = if smoke { 1 } else { 5 };
+
+    let catalog = Catalog::new().insert("chain", chain());
+    let cluster = ClusterSpec::uniform("bench", 4, 16, 2);
+    let cfg = EngineConfig::ideal();
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Poisson { rate: 0.5 },
+        mix: WorkloadMix::parse("chain").unwrap(),
+        duration: 1e9, // the cap, not the window, bounds this run
+        max_workflows: n,
+        seed: 1,
+        plan: None,
+        checkpoint_at: None,
+        policy: None,
+        failure: None,
+    };
+    let stream_path = std::env::temp_dir().join("bench_obs_events.ndjson");
+
+    println!(
+        "bench_obs: {n} streamed workflows x {iters} iterations ({} mode)",
+        if smoke { "smoke" } else { "full" }
+    );
+
+    // Warm-up off the clock, then interleave the variants so drift in
+    // machine load hits all three equally; keep each variant's best.
+    run_once(&spec, &catalog, &cluster, &cfg, TrafficObs::default());
+    let mut best = [f64::INFINITY; 3];
+    let mut digests = [0u64; 3];
+    for _ in 0..iters {
+        let runs: [(f64, u64); 3] = [
+            run_once(&spec, &catalog, &cluster, &cfg, TrafficObs::default()),
+            run_once(
+                &spec,
+                &catalog,
+                &cluster,
+                &cfg,
+                TrafficObs { sink: Some(Box::new(NullSink)), profile: None },
+            ),
+            run_once(
+                &spec,
+                &catalog,
+                &cluster,
+                &cfg,
+                TrafficObs {
+                    sink: Some(Box::new(FileSink::create(&stream_path).unwrap())),
+                    profile: None,
+                },
+            ),
+        ];
+        for (i, (wall, d)) in runs.into_iter().enumerate() {
+            best[i] = best[i].min(wall);
+            digests[i] = d;
+        }
+    }
+    assert!(
+        digests[0] == digests[1] && digests[0] == digests[2],
+        "an attached sink must never change the simulated trajectory"
+    );
+    let events = std::fs::read_to_string(&stream_path)
+        .map(|s| s.lines().count())
+        .unwrap_or(0);
+    let _ = std::fs::remove_file(&stream_path);
+
+    let null_overhead = best[1] / best[0] - 1.0;
+    let file_overhead = best[2] / best[0] - 1.0;
+    for (name, wall, overhead) in [
+        ("no-obs", best[0], 0.0),
+        ("null-sink", best[1], null_overhead),
+        ("file-sink", best[2], file_overhead),
+    ] {
+        println!("  {name:<10} {:>10}  {:>+7.2}%", fmt_time(wall), overhead * 100.0);
+    }
+    println!("  stream: {events} events/run");
+
+    // The 2% bar needs a baseline large enough that timer noise cannot
+    // fake a regression; the smoke run just proves the bench runs.
+    if !smoke && best[0] >= 0.05 {
+        assert!(
+            null_overhead <= 0.02,
+            "NullSink must cost <= 2% over no sink (got {:+.2}%)",
+            null_overhead * 100.0
+        );
+    }
+
+    if let Some(path) = args.get("json") {
+        let out = obj([
+            ("bench", Json::Str("bench_obs".into())),
+            ("measured", Json::Bool(true)),
+            ("smoke", Json::Bool(smoke)),
+            ("n_workflows", Json::Num(n as f64)),
+            ("events_per_run", Json::Num(events as f64)),
+            ("no_obs_wall_s", Json::Num(best[0])),
+            ("null_sink_wall_s", Json::Num(best[1])),
+            ("file_sink_wall_s", Json::Num(best[2])),
+            ("null_sink_overhead", Json::Num(null_overhead)),
+            ("file_sink_overhead", Json::Num(file_overhead)),
+        ]);
+        std::fs::write(path, out.to_string_pretty() + "\n").unwrap();
+        println!("  wrote {path}");
+    }
+}

@@ -52,7 +52,9 @@
 //! single-workflow path and the concurrent-campaign path are the same
 //! code.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
+use std::rc::Rc;
 use std::time::Duration;
 
 use super::calendar::{Calendar, Lane, WakePolicy};
@@ -66,6 +68,8 @@ use crate::error::{Error, Result};
 use crate::exec::{Completion, Executor, RunningTask};
 use crate::failure::{FailureProcess, FailureSpec, RetryEntry};
 use crate::metrics::CapacityTimeline;
+use crate::obs::profile::EngineProfile;
+use crate::obs::{EventSink, NullSink, ObsEvent};
 use crate::pilot::{Agent, AutoscalePolicy, ResizeEvent, ResourcePlan, RunningMeta, Scheduler};
 use crate::resources::{Allocator, ClusterSpec, NodeSpec, ResourceRequest};
 use crate::task::{TaskKind, TaskSpec};
@@ -106,6 +110,14 @@ pub struct Coordinator {
     /// strategy, not simulation state: it is never serialized, and
     /// either policy resumes any snapshot bit-identically.
     wake: WakePolicy,
+    /// Event sink for the next run (`--emit-events`). Like the wake
+    /// policy this is observation strategy, not simulation state: it is
+    /// never serialized, and a restored coordinator accepts a fresh
+    /// sink to continue the stream.
+    sink: Option<Box<dyn EventSink>>,
+    /// Self-profiling handle (`--profile`), shared with the caller so
+    /// the counters stay readable after the run consumes `self`.
+    profile: Option<Rc<RefCell<EngineProfile>>>,
 }
 
 impl Coordinator {
@@ -120,6 +132,8 @@ impl Coordinator {
             failure: None,
             resume: None,
             wake: WakePolicy::default(),
+            sink: None,
+            profile: None,
         }
     }
 
@@ -152,7 +166,38 @@ impl Coordinator {
             failure: None,
             resume: Some(Box::new(snapshot)),
             wake: WakePolicy::default(),
+            sink: None,
+            profile: None,
         })
+    }
+
+    /// Attach an [`EventSink`]: every engine occurrence of the next run
+    /// is emitted to it as a typed [`ObsEvent`] (see [`crate::obs`]).
+    /// The stream is a pure function of the deterministic simulation —
+    /// bit-identical per seed and across wake policies — and is *not*
+    /// part of a checkpoint: attach a fresh sink after
+    /// [`restore`](Self::restore) and the resumed run's stream,
+    /// concatenated after the pre-checkpoint prefix, equals the
+    /// uninterrupted run's stream.
+    pub fn set_event_sink(&mut self, sink: Box<dyn EventSink>) {
+        self.sink = Some(sink);
+    }
+
+    /// Enable wall-clock self-profiling for the next run and return the
+    /// shared handle the counters accumulate into (see
+    /// [`EngineProfile`]). Profiling observes host time only — it never
+    /// changes the simulation trajectory or the event stream.
+    pub fn enable_profiling(&mut self) -> Rc<RefCell<EngineProfile>> {
+        let p = Rc::new(RefCell::new(EngineProfile::new()));
+        self.profile = Some(Rc::clone(&p));
+        p
+    }
+
+    /// Attach an *existing* profiling handle instead of a fresh one, so
+    /// counters accumulate across chained runs (checkpoint/resume
+    /// legs). See [`enable_profiling`](Self::enable_profiling).
+    pub fn set_profile_handle(&mut self, profile: Rc<RefCell<EngineProfile>>) {
+        self.profile = Some(profile);
     }
 
     /// Attach an elastic [`ResourcePlan`]: timed grow/drain events and
@@ -279,9 +324,13 @@ impl Coordinator {
         }
         let plan = self.plan.take();
         let wake = self.wake;
+        let sink = self.sink.take().unwrap_or_else(|| Box::new(NullSink));
+        let profile = self.profile.take();
         let state = match self.resume.take() {
-            Some(snap) => EngineLoop::from_snapshot(*snap, plan, executor, wake)?,
-            None => EngineLoop::fresh(self, plan, wake)?,
+            Some(snap) => {
+                EngineLoop::from_snapshot(*snap, plan, executor, wake, sink, profile)?
+            }
+            None => EngineLoop::fresh(self, plan, wake, sink, profile)?,
         };
         state.drive(executor, checkpoint_at)
     }
@@ -369,6 +418,13 @@ struct EngineLoop {
     /// `WorkflowDriver::step` invocations (perf accounting — the
     /// scan-vs-calendar figure of merit; see `RunReport::driver_steps`).
     driver_steps: u64,
+    /// Where engine events go (see [`crate::obs`]). `obs` caches
+    /// `sink.enabled()` so a disabled sink costs one branch per
+    /// emission site and no event construction.
+    sink: Box<dyn EventSink>,
+    obs: bool,
+    /// Wall-clock self-profiling (shared handle; see [`EngineProfile`]).
+    profile: Option<Rc<RefCell<EngineProfile>>>,
 }
 
 /// Normalize an attached [`ResourcePlan`] into loop state: events
@@ -398,6 +454,8 @@ impl EngineLoop {
         coord: Coordinator,
         plan: Option<ResourcePlan>,
         wake: WakePolicy,
+        sink: Box<dyn EventSink>,
+        profile: Option<Rc<RefCell<EngineProfile>>>,
     ) -> Result<EngineLoop> {
         let agent = Agent::new(&coord.cluster, coord.cfg.policy, coord.cfg.task_overhead);
         let capacity = CapacityTimeline::of_cluster(&coord.cluster);
@@ -425,7 +483,8 @@ impl EngineLoop {
         let mut pending_list = coord.pending;
         pending_list
             .sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.slot.cmp(&b.slot)));
-        Ok(EngineLoop {
+        let obs = sink.enabled();
+        let mut el = EngineLoop {
             cfg: coord.cfg,
             cluster: coord.cluster,
             next_set_stream: coord.next_set_stream,
@@ -458,7 +517,19 @@ impl EngineLoop {
             // Drivers register their wakes as they materialize.
             calendar: Calendar::new(),
             driver_steps: 0,
-        })
+            sink,
+            obs,
+            profile,
+        };
+        // The stream opens with the initial offered capacity so a
+        // replay can seed its timeline exactly; a *resumed* run emits
+        // no such point (the pre-checkpoint prefix already carries it).
+        if el.obs {
+            let (c, g) = el.capacity.final_capacity();
+            el.sink
+                .emit(&ObsEvent::CapacityOffered { t: 0.0, cores: c, gpus: g });
+        }
+        Ok(el)
     }
 
     /// Rebuild loop state from a checkpoint. Re-launches every
@@ -472,6 +543,8 @@ impl EngineLoop {
         plan: Option<ResourcePlan>,
         executor: &mut dyn Executor,
         wake: WakePolicy,
+        sink: Box<dyn EventSink>,
+        profile: Option<Rc<RefCell<EngineProfile>>>,
     ) -> Result<EngineLoop> {
         let SimSnapshot {
             now,
@@ -704,6 +777,14 @@ impl EngineLoop {
             attempts: attempt_counts,
             calendar,
             driver_steps: 0,
+            // Restore emits nothing — not even re-launches of in-flight
+            // work (their original `task_started` events are in the
+            // pre-checkpoint prefix). The first resumed event is the
+            // first *new* state transition, which is exactly what makes
+            // prefix + resumed stream equal the uninterrupted stream.
+            obs: sink.enabled(),
+            sink,
+            profile,
         })
     }
 
@@ -827,10 +908,23 @@ impl EngineLoop {
             // have executed next.
             if let Some(t_ck) = checkpoint_at {
                 if now + EPS >= t_ck {
+                    if self.obs {
+                        self.sink.emit(&ObsEvent::CheckpointTaken { t: now });
+                        // The sink outlives the snapshot (it is derived
+                        // state, never captured); push the prefix to its
+                        // destination before the loop state is consumed.
+                        self.sink.flush()?;
+                    }
+                    if let Some(p) = &self.profile {
+                        p.borrow_mut().checkpoints += 1;
+                    }
                     return Ok(RunOutcome::Checkpointed(Box::new(
                         self.into_snapshot(now),
                     )));
                 }
+            }
+            if let Some(p) = &self.profile {
+                p.borrow_mut().loop_iterations += 1;
             }
 
             // 0. Elasticity: apply every timed resize that is due, then
@@ -855,11 +949,18 @@ impl EngineLoop {
                     self.agent.drain(ev.delta.unsigned_abs() as usize);
                 }
                 resized = true;
+                if self.obs {
+                    self.sink
+                        .emit(&ObsEvent::PilotResized { t: now, delta: ev.delta });
+                }
+                if let Some(p) = &self.profile {
+                    p.borrow_mut().resizes += 1;
+                }
             }
             // Record once after the burst: N same-instant resizes yield
             // one timeline point carrying their net effect, not N.
             if resized {
-                record_offered(&mut self.capacity, &self.agent, now);
+                self.note_offered(now);
             }
             // Clone the policy only on iterations where a check is
             // actually due (this is the event loop's hot path).
@@ -880,8 +981,18 @@ impl EngineLoop {
                     } else {
                         false
                     };
+                    if self.obs {
+                        self.sink.emit(&ObsEvent::AutoscaleDecision {
+                            t: now,
+                            delta,
+                            acted,
+                        });
+                    }
+                    if let Some(p) = &self.profile {
+                        p.borrow_mut().autoscale_evals += 1;
+                    }
                     if acted {
-                        record_offered(&mut self.capacity, &self.agent, now);
+                        self.note_offered(now);
                     }
                     if acted || self.in_flight > 0 {
                         self.stalled_checks = 0;
@@ -901,6 +1012,17 @@ impl EngineLoop {
                 let p = self.pending.pop_front().expect("peeked pending arrival");
                 // Validated at registration; compile only.
                 let slot = p.slot;
+                if self.obs {
+                    self.sink.emit(&ObsEvent::WorkflowArrived {
+                        t: now,
+                        slot,
+                        workflow: p.wf.name.clone(),
+                        arrival: p.arrival,
+                    });
+                }
+                if let Some(prof) = &self.profile {
+                    prof.borrow_mut().arrivals += 1;
+                }
                 let d = WorkflowDriver::compile_prevalidated(
                     p.wf,
                     p.mode,
@@ -984,6 +1106,23 @@ impl EngineLoop {
                     self.agent.submit(&self.specs[r.uid], prio, di, now);
                     self.sched_dirty = true;
                     self.stalled_checks = 0;
+                    if self.obs {
+                        let spec = &self.specs[r.uid];
+                        self.sink.emit(&ObsEvent::TaskSubmitted {
+                            t: now,
+                            uid: r.uid,
+                            slot: di,
+                            local,
+                            kind: spec.kind.label().to_string(),
+                            cores: spec.req.cpu_cores as u64,
+                            gpus: spec.req.gpus as u64,
+                            tx: spec.tx,
+                            attempt: r.attempt,
+                        });
+                    }
+                    if let Some(p) = &self.profile {
+                        p.borrow_mut().retries_resubmitted += 1;
+                    }
                 }
             }
 
@@ -1001,6 +1140,9 @@ impl EngineLoop {
             for &di in &due_slots {
                 subs.clear();
                 self.driver_steps += 1;
+                if let Some(p) = &self.profile {
+                    p.borrow_mut().driver_wakes += 1;
+                }
                 self.drivers[di]
                     .as_mut()
                     .expect("due slot holds a driver")
@@ -1024,6 +1166,23 @@ impl EngineLoop {
                         }
                     };
                     self.agent.submit(&self.specs[gid], sub.priority, di, now);
+                    if self.obs {
+                        let spec = &self.specs[gid];
+                        self.sink.emit(&ObsEvent::TaskSubmitted {
+                            t: now,
+                            uid: gid,
+                            slot: di,
+                            local,
+                            kind: spec.kind.label().to_string(),
+                            cores: spec.req.cpu_cores as u64,
+                            gpus: spec.req.gpus as u64,
+                            tx: spec.tx,
+                            attempt: 0,
+                        });
+                    }
+                    if let Some(p) = &self.profile {
+                        p.borrow_mut().submissions += 1;
+                    }
                     self.live_uids += 1;
                     self.peak_live = self.peak_live.max(self.live_uids);
                     self.sched_dirty = true;
@@ -1047,9 +1206,13 @@ impl EngineLoop {
             let placed = if self.sched_dirty {
                 let t0 = Stopwatch::start();
                 let placed = self.agent.schedule(now);
-                self.sched_wall += t0.elapsed();
+                let dt = t0.elapsed();
+                self.sched_wall += dt;
                 self.sched_rounds += 1;
                 self.sched_dirty = false;
+                if let Some(p) = &self.profile {
+                    p.borrow_mut().sched_rounds.record(dt);
+                }
                 placed
             } else {
                 Vec::new()
@@ -1068,6 +1231,20 @@ impl EngineLoop {
                     kind: Some(spec.kind),
                 });
                 self.in_flight += 1;
+                if self.obs {
+                    self.sink.emit(&ObsEvent::TaskStarted {
+                        t: now,
+                        uid: s.uid,
+                        slot: di,
+                        local,
+                        node: s.placement.slots.first().map_or(0, |&(n, _, _)| n),
+                        cores: s.placement.total_cores(),
+                        gpus: s.placement.total_gpus(),
+                    });
+                }
+                if let Some(p) = &self.profile {
+                    p.borrow_mut().tasks_started += 1;
+                }
             }
 
             // 4. Wait for progress. The next wake-up horizon is the
@@ -1193,6 +1370,7 @@ impl EngineLoop {
                         }
                     }
                 }
+                let drain_t0 = self.profile.as_ref().map(|_| Stopwatch::start());
                 executor.drain_ready_into(&mut completions);
                 if completions.is_empty() {
                     return Err(Error::Engine("executor lost in-flight tasks".into()));
@@ -1202,6 +1380,15 @@ impl EngineLoop {
                     self.agent.complete(c.uid);
                     self.sched_dirty = true; // resources were freed
                     let (di, local) = self.route[c.uid];
+                    if self.obs {
+                        self.sink.emit(&ObsEvent::TaskCompleted {
+                            t: c.finished_at,
+                            uid: c.uid,
+                            slot: di,
+                            local,
+                            failed: c.failed,
+                        });
+                    }
                     // Goodput: a completion's full residency is work
                     // that *counted* — unlike the lost core-hours a
                     // kill discards (see `process_kill`).
@@ -1254,6 +1441,13 @@ impl EngineLoop {
                     // state.
                     if self.drivers[di].as_ref().is_some_and(|d| d.is_done()) {
                         let d = self.drivers[di].take().expect("checked is_some");
+                        if self.obs {
+                            self.sink.emit(&ObsEvent::WorkflowCompleted {
+                                t: c.finished_at,
+                                slot: di,
+                                workflow: d.workflow_name().to_string(),
+                            });
+                        }
                         self.done[di] = Some(d.into_report(&self.capacity));
                         if let Ok(pos) = self.live_slots.binary_search(&di) {
                             self.live_slots.remove(pos);
@@ -1273,7 +1467,12 @@ impl EngineLoop {
                 // Graceful shrink: resources this batch released on
                 // draining nodes left the allocation at this instant —
                 // a no-op compare for ordinary completions.
-                record_offered(&mut self.capacity, &self.agent, executor.now());
+                self.note_offered(executor.now());
+                if let (Some(p), Some(t0)) = (&self.profile, drain_t0) {
+                    let mut p = p.borrow_mut();
+                    p.drain_rounds.record(t0.elapsed());
+                    p.completions += completions.len() as u64;
+                }
             } else if next_deferred.is_finite() {
                 // Nothing running; sleep (real) or fast-forward (virtual)
                 // to the next activation — e.g. a workflow yet to arrive.
@@ -1294,9 +1493,17 @@ impl EngineLoop {
         for (di, slot) in drained.into_iter().enumerate() {
             if let Some(d) = slot {
                 debug_assert!(d.is_done());
+                if self.obs {
+                    self.sink.emit(&ObsEvent::WorkflowCompleted {
+                        t: executor.now(),
+                        slot: di,
+                        workflow: d.workflow_name().to_string(),
+                    });
+                }
                 self.done[di] = Some(d.into_report(&self.capacity));
             }
         }
+        self.sink.flush()?;
         let n_members = self.done.len();
         let mut reports: Vec<RunReport> = Vec::with_capacity(n_members);
         for slot in self.done {
@@ -1327,6 +1534,22 @@ impl EngineLoop {
         self.retries.iter().map(|r| r.due).reduce(f64::min)
     }
 
+    /// Append a point to the offered-capacity timeline iff the agent's
+    /// offered capacity (free + busy; see [`Agent::offered`]) moved
+    /// since the last recorded point — and mirror every appended point
+    /// onto the event stream, so a replay rebuilds the timeline
+    /// point-for-point.
+    fn note_offered(&mut self, now: f64) {
+        let (c, g) = self.agent.offered();
+        if (c, g) != self.capacity.final_capacity() {
+            self.capacity.record(now, c, g);
+            if self.obs {
+                self.sink
+                    .emit(&ObsEvent::CapacityOffered { t: now, cores: c, gpus: g });
+            }
+        }
+    }
+
     /// Hard-kill node `node` at `now`: every placement touching it is
     /// torn down ([`Agent::kill_node`] — capacity released, fair-share
     /// ledger retired), its in-flight completion is cancelled in the
@@ -1345,9 +1568,21 @@ impl EngineLoop {
         fp: &mut FailureProcess,
     ) -> Result<()> {
         fp.stats.failures_injected += 1;
+        if let Some(p) = &self.profile {
+            p.borrow_mut().faults += 1;
+        }
         let victims = self.agent.kill_node(node);
         if victims.is_empty() {
             return Ok(());
+        }
+        // A victimless fault changes no engine state; only faults that
+        // kill work appear on the stream.
+        if self.obs {
+            self.sink.emit(&ObsEvent::NodeFault {
+                t: now,
+                node,
+                victims: victims.len(),
+            });
         }
         self.sched_dirty = true; // capacity returned / queue changed
         for (uid, meta) in victims {
@@ -1368,12 +1603,39 @@ impl EngineLoop {
             }
             self.attempts[uid] += 1;
             let attempt = self.attempts[uid];
+            if self.obs {
+                self.sink.emit(&ObsEvent::TaskKilled {
+                    t: now,
+                    uid,
+                    slot: di,
+                    local,
+                    node,
+                    attempt,
+                    lost_core_s: dt * meta.req.cpu_cores as f64,
+                });
+            }
             if fp.spec.retry.allows(attempt) {
                 let delay = fp.spec.retry.delay(self.cfg.seed, uid, attempt);
-                self.retries.push(RetryEntry { uid, due: now + delay, attempt });
+                let due = now + delay;
+                self.retries.push(RetryEntry { uid, due, attempt });
                 fp.stats.retries_scheduled += 1;
+                if self.obs {
+                    self.sink
+                        .emit(&ObsEvent::RetryScheduled { t: now, uid, due, attempt });
+                }
             } else {
                 fp.stats.retries_exhausted += 1;
+                if self.obs {
+                    self.sink.emit(&ObsEvent::RetriesExhausted {
+                        t: now,
+                        uid,
+                        slot: di,
+                        attempts: attempt,
+                    });
+                    // Best-effort: the run is about to abort with the
+                    // typed error; keep the stream's tail on disk.
+                    let _ = self.sink.flush();
+                }
                 return Err(Error::RetriesExhausted {
                     workflow: d.workflow_name().to_string(),
                     uid,
@@ -1383,7 +1645,7 @@ impl EngineLoop {
         }
         // Kills on a draining node shed offered capacity at this
         // instant; a no-op compare otherwise.
-        record_offered(&mut self.capacity, &self.agent, now);
+        self.note_offered(now);
         Ok(())
     }
 }
@@ -1403,16 +1665,6 @@ fn fault_weights(agent: &Agent, spec: &FailureSpec, out: &mut Vec<(usize, f64)>)
         }
         let w = (1.0 / mtbf) * if n.gpus > 0 { spec.gpu_factor } else { 1.0 };
         out.push((i, w));
-    }
-}
-
-/// Append a point to the offered-capacity timeline iff the agent's
-/// offered capacity (free + busy; see [`Agent::offered`]) moved since
-/// the last recorded point.
-fn record_offered(capacity: &mut CapacityTimeline, agent: &Agent, now: f64) {
-    let (c, g) = agent.offered();
-    if (c, g) != capacity.final_capacity() {
-        capacity.record(now, c, g);
     }
 }
 

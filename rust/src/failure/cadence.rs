@@ -26,8 +26,8 @@ use crate::engine::{EngineConfig, EPS};
 use crate::error::{Error, Result};
 use crate::resources::ClusterSpec;
 use crate::traffic::{
-    run_traffic_resumable, Catalog, TrafficCheckpoint, TrafficOutcome, TrafficReport,
-    TrafficSpec,
+    run_traffic_resumable_obs, Catalog, TrafficCheckpoint, TrafficObs, TrafficOutcome,
+    TrafficReport, TrafficSpec,
 };
 use crate::util::json::{obj, FromJson, Json, ToJson};
 use crate::util::rng::Rng;
@@ -382,6 +382,27 @@ pub fn run_chained(
     cfg: &EngineConfig,
     every: f64,
 ) -> Result<(TrafficReport, usize)> {
+    run_chained_obs(spec, catalog, cluster, cfg, every, TrafficObs::default)
+}
+
+/// [`run_chained`] with observability attached to every leg.
+///
+/// `obs` is called once per leg (the initial run, then each resume) and
+/// its attachments are installed on that leg's coordinator. Callers
+/// that want one event stream spanning the whole chained run pass
+/// shared handles — e.g. clone the same `Rc<RefCell<FileSink>>` and
+/// `Rc<RefCell<EngineProfile>>` into each [`TrafficObs`] — so the
+/// concatenated stream (modulo `checkpoint` seam markers) is
+/// bit-identical to the uninterrupted run's, and lane counters
+/// accumulate across legs.
+pub fn run_chained_obs(
+    spec: &TrafficSpec,
+    catalog: &Catalog,
+    cluster: &ClusterSpec,
+    cfg: &EngineConfig,
+    every: f64,
+    mut obs: impl FnMut() -> TrafficObs,
+) -> Result<(TrafficReport, usize)> {
     if !every.is_finite() || every <= 0.0 {
         return Err(Error::Config(format!(
             "checkpoint-every: cadence must be positive and finite, got {every}"
@@ -389,7 +410,7 @@ pub fn run_chained(
     }
     let mut spec = spec.clone();
     spec.checkpoint_at = Some(every);
-    let mut outcome = run_traffic_resumable(&spec, catalog, cluster, cfg)?;
+    let mut outcome = run_traffic_resumable_obs(&spec, catalog, cluster, cfg, obs())?;
     let mut legs = 0usize;
     loop {
         match outcome {
@@ -409,7 +430,7 @@ pub fn run_chained(
                 while every * k <= ck.sim.now + EPS {
                     k += 1.0;
                 }
-                outcome = ck.resume_until(None, Some(every * k))?;
+                outcome = ck.resume_until_obs(None, Some(every * k), obs())?;
             }
         }
     }

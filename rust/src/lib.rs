@@ -61,6 +61,7 @@ pub mod failure;
 pub mod lint;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod pilot;
 pub mod resources;
 #[cfg(feature = "pjrt")]

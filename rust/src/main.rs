@@ -19,13 +19,19 @@ use asyncflow::error::{Error, Result};
 use asyncflow::experiments;
 use asyncflow::metrics::ascii_timeline;
 use asyncflow::model;
+use asyncflow::obs::profile::EngineProfile;
+use asyncflow::obs::{EventSink, FileSink};
 use asyncflow::pilot::Policy;
 use asyncflow::resources::ClusterSpec;
+use asyncflow::traffic::TrafficObs;
 use asyncflow::util::cli::Args;
 use asyncflow::workflows::{cdg1, cdg2};
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 fn main() {
-    let args = match Args::from_env(&["verbose", "ascii", "autoscale", "deny"]) {
+    let args = match Args::from_env(&["verbose", "ascii", "autoscale", "deny", "profile"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -48,6 +54,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("traffic") => cmd_traffic(args),
         Some("resilience") => cmd_resilience(args),
         Some("resume") => cmd_resume(args),
+        Some("trace") => cmd_trace(args),
         Some("lint") => cmd_lint(args),
         _ => {
             println!("{}", HELP);
@@ -152,12 +159,29 @@ subcommands:
                                          instant) and the finished run
                                          prints the same report the
                                          uninterrupted one would have
+  trace    events.ndjson                 asynchronicity analyzer over a
+           [--format human|json]         --emit-events stream: replays
+           [--out DIR]                   the typed events into per-kind
+                                         concurrency timelines, the
+                                         pairwise overlap matrix, the
+                                         degree of asynchronicity vs the
+                                         sequential-stage baseline, and
+                                         utilization + wait/TTX
+                                         percentiles reconstructed
+                                         purely from the stream. --out
+                                         writes trace_analysis.json plus
+                                         trace_kinds.csv /
+                                         trace_overlap.csv.
 
 common options:
   --cluster summit_paper|summit_706|summit_8gpu|local_small
   --seed N
   --policy pipeline_age|fifo|fifo_strict|smallest_first|fair|backfill
-  --out DIR (figures)  --ascii (timeline art)";
+  --out DIR (figures)  --ascii (timeline art)
+  --emit-events F.ndjson (traffic/resilience/resume: stream typed engine
+    events as NDJSON — bit-identical per seed; analyze with trace)
+  --profile (traffic/resilience/resume: engine lane counters + drain/
+    scheduler wall-time histograms after the report)";
 
 fn pick_workflow(args: &Args) -> Result<Workflow> {
     match args.get_or("workflow", "ddmd") {
@@ -409,6 +433,62 @@ fn failure_from_args(args: &Args) -> Result<Option<asyncflow::failure::FailureSp
     Ok(Some(spec))
 }
 
+/// Observability attachments from the shared CLI flags:
+/// `--emit-events PATH` streams typed engine events to PATH as NDJSON,
+/// `--profile` accumulates lane counters and hot-round wall-time
+/// histograms. The handles are shared (`Rc`), so one stream and one
+/// profile span every leg of a chained checkpoint/resume run; call
+/// [`ObsCli::finish`] once the run ends to flush the stream (surfacing
+/// any deferred I/O error) and print the profile.
+struct ObsCli {
+    path: Option<String>,
+    sink: Option<Rc<RefCell<FileSink>>>,
+    profile: Option<Rc<RefCell<EngineProfile>>>,
+}
+
+impl ObsCli {
+    fn from_args(args: &Args) -> Result<ObsCli> {
+        let path = args.get("emit-events").map(str::to_string);
+        let sink = match &path {
+            Some(p) => Some(Rc::new(RefCell::new(FileSink::create(p)?))),
+            None => None,
+        };
+        let profile = args
+            .flag("profile")
+            .then(|| Rc::new(RefCell::new(EngineProfile::new())));
+        Ok(ObsCli { path, sink, profile })
+    }
+
+    /// Whether any attachment is active (sweeps reject them: many runs,
+    /// one stream/profile would interleave meaninglessly).
+    fn active(&self) -> bool {
+        self.sink.is_some() || self.profile.is_some()
+    }
+
+    /// Fresh per-leg attachments sharing this CLI's handles.
+    fn leg(&self) -> TrafficObs {
+        TrafficObs {
+            sink: self
+                .sink
+                .as_ref()
+                .map(|h| Box::new(Rc::clone(h)) as Box<dyn EventSink>),
+            profile: self.profile.as_ref().map(Rc::clone),
+        }
+    }
+
+    /// Flush the stream and print the profile, after the run.
+    fn finish(&self) -> Result<()> {
+        if let (Some(h), Some(p)) = (&self.sink, &self.path) {
+            h.borrow_mut().flush()?;
+            println!("wrote {p} (event stream; analyze with: asyncflow trace {p})");
+        }
+        if let Some(p) = &self.profile {
+            print!("{}", p.borrow().render());
+        }
+        Ok(())
+    }
+}
+
 /// Print a finished traffic report and write the optional `--out`
 /// artifacts (shared by `traffic`, `resilience`, and `resume`).
 fn emit_traffic_report(args: &Args, rep: &asyncflow::traffic::TrafficReport) -> Result<()> {
@@ -446,12 +526,13 @@ fn emit_traffic_report(args: &Args, rep: &asyncflow::traffic::TrafficReport) -> 
 
 fn cmd_traffic(args: &Args) -> Result<()> {
     use asyncflow::traffic::{
-        load_trace_file, run_traffic_resumable, run_traffic_sweep, sweep_csv, sweep_json,
+        load_trace_file, run_traffic_resumable_obs, run_traffic_sweep, sweep_csv, sweep_json,
         ArrivalProcess, Catalog, TrafficOutcome, TrafficSpec, WorkloadMix,
     };
     use asyncflow::util::json::ToJson;
     let cluster = pick_cluster(args)?;
     let cfg = pick_engine(args)?;
+    let obs = ObsCli::from_args(args)?;
     let seed = args.get_u64("seed", 42)?;
     let duration = args.get_f64("duration", 20000.0)?;
     let mix = WorkloadMix::parse(args.get_or("mix", "ddmd:2,cdg2:1"))?;
@@ -499,6 +580,12 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         if checkpoint_at.is_some() {
             return Err(Error::Config(
                 "--checkpoint-at does not combine with --sweep (one checkpoint, one run)"
+                    .into(),
+            ));
+        }
+        if obs.active() {
+            return Err(Error::Config(
+                "--emit-events/--profile do not combine with --sweep (one stream, one run)"
                     .into(),
             ));
         }
@@ -565,7 +652,7 @@ fn cmd_traffic(args: &Args) -> Result<()> {
     } else {
         ArrivalProcess::Poisson { rate: args.get_f64("rate", 0.02)? }
     };
-    match run_traffic_resumable(&spec_for(process), &catalog, &cluster, &cfg)? {
+    match run_traffic_resumable_obs(&spec_for(process), &catalog, &cluster, &cfg, obs.leg())? {
         TrafficOutcome::Completed(rep) => {
             if checkpoint_at.is_some() {
                 println!(
@@ -590,17 +677,18 @@ fn cmd_traffic(args: &Args) -> Result<()> {
             println!("wrote {path} — resume with: asyncflow resume {path}");
         }
     }
-    Ok(())
+    obs.finish()
 }
 
 fn cmd_resilience(args: &Args) -> Result<()> {
-    use asyncflow::failure::cadence::{cluster_fault_rate, run_chained, sweep_cadence};
+    use asyncflow::failure::cadence::{cluster_fault_rate, run_chained_obs, sweep_cadence};
     use asyncflow::traffic::{
-        load_trace_file, run_traffic_resumable, ArrivalProcess, Catalog, TrafficOutcome,
-        TrafficSpec, WorkloadMix,
+        load_trace_file, run_traffic_resumable, run_traffic_resumable_obs, ArrivalProcess,
+        Catalog, TrafficOutcome, TrafficSpec, WorkloadMix,
     };
     let cluster = pick_cluster(args)?;
     let cfg = pick_engine(args)?;
+    let obs = ObsCli::from_args(args)?;
     let seed = args.get_u64("seed", 42)?;
     let duration = args.get_f64("duration", 20000.0)?;
     let mix = WorkloadMix::parse(args.get_or("mix", "ddmd:2,cdg2:1"))?;
@@ -651,6 +739,13 @@ fn cmd_resilience(args: &Args) -> Result<()> {
     // Cadence sweep: a failure-free baseline run supplies the work to
     // protect; the analytic overlay injects the faults per cadence.
     if let Some(list) = args.get("sweep-cadence") {
+        if obs.active() {
+            return Err(Error::Config(
+                "--emit-events/--profile do not combine with --sweep-cadence (the \
+                 sweep is analytic; its baseline run is not the observed scenario)"
+                    .into(),
+            ));
+        }
         let cadences: Vec<f64> = list
             .split(',')
             .map(|s| {
@@ -690,16 +785,23 @@ fn cmd_resilience(args: &Args) -> Result<()> {
     }
 
     if let Some(every) = every {
-        let (rep, legs) = run_chained(&spec, &catalog, &cluster, &cfg, every)?;
+        // Every leg re-attaches the same shared sink/profile handles,
+        // so the emitted stream spans the whole chained run.
+        let (rep, legs) =
+            run_chained_obs(&spec, &catalog, &cluster, &cfg, every, || obs.leg())?;
         println!(
             "resilience: chained {legs} checkpoint legs (every {every:.0} s, each leg \
              resumed from its JSON snapshot)"
         );
-        return emit_traffic_report(args, &rep);
+        emit_traffic_report(args, &rep)?;
+        return obs.finish();
     }
 
-    match run_traffic_resumable(&spec, &catalog, &cluster, &cfg)? {
-        TrafficOutcome::Completed(rep) => emit_traffic_report(args, &rep),
+    match run_traffic_resumable_obs(&spec, &catalog, &cluster, &cfg, obs.leg())? {
+        TrafficOutcome::Completed(rep) => {
+            emit_traffic_report(args, &rep)?;
+            obs.finish()
+        }
         TrafficOutcome::Checkpointed(_) => Err(Error::Engine(
             "resilience: run without a checkpoint time cannot checkpoint".into(),
         )),
@@ -707,8 +809,9 @@ fn cmd_resilience(args: &Args) -> Result<()> {
 }
 
 fn cmd_resume(args: &Args) -> Result<()> {
-    use asyncflow::traffic::TrafficCheckpoint;
+    use asyncflow::traffic::{TrafficCheckpoint, TrafficOutcome};
     use asyncflow::util::json::{FromJson, Json};
+    let obs = ObsCli::from_args(args)?;
     let path = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
         Error::Config("resume: expected a checkpoint file (asyncflow resume ckpt.json)".into())
     })?;
@@ -728,8 +831,53 @@ fn cmd_resume(args: &Args) -> Result<()> {
         ck.sim.queue.len(),
         if plan.is_some() { ", new resource plan attached" } else { "" },
     );
-    let rep = ck.resume(plan)?;
-    emit_traffic_report(args, &rep)
+    // Resumed streams intentionally start without a fresh capacity
+    // record: the pre-checkpoint stream already carries it, so the
+    // concatenation equals the uninterrupted run's stream.
+    let rep = match ck.resume_until_obs(plan, None, obs.leg())? {
+        TrafficOutcome::Completed(rep) => *rep,
+        TrafficOutcome::Checkpointed(_) => {
+            return Err(Error::Engine(
+                "traffic resume: run without a checkpoint time cannot re-checkpoint".into(),
+            ))
+        }
+    };
+    emit_traffic_report(args, &rep)?;
+    obs.finish()
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    use asyncflow::obs::trace::{analyze, parse_stream};
+    let path = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
+        Error::Config(
+            "trace: expected an event stream (asyncflow trace events.ndjson)".into(),
+        )
+    })?;
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("trace: cannot read '{path}': {e}")))?;
+    let events = parse_stream(&src)?;
+    let analysis = analyze(&events)?;
+    match args.get_or("format", "human") {
+        "human" => print!("{}", analysis.render()),
+        "json" => println!("{}", analysis.to_json().to_string_pretty()),
+        other => {
+            return Err(Error::Config(format!(
+                "trace: unknown --format '{other}' (human|json)"
+            )))
+        }
+    }
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        let base = std::path::Path::new(dir);
+        let jp = base.join("trace_analysis.json");
+        std::fs::write(&jp, analysis.to_json().to_string_pretty())?;
+        let kp = base.join("trace_kinds.csv");
+        std::fs::write(&kp, analysis.kinds_csv())?;
+        let op = base.join("trace_overlap.csv");
+        std::fs::write(&op, analysis.overlap_csv())?;
+        println!("wrote {}, {}, {}", jp.display(), kp.display(), op.display());
+    }
+    Ok(())
 }
 
 fn cmd_lint(args: &Args) -> Result<()> {

@@ -1,0 +1,277 @@
+//! Engine self-profiling (`--profile`): per-lane event counters and
+//! wall-clock histograms of the hot loop's drain and scheduler rounds.
+//!
+//! This is the one observability surface that deliberately measures
+//! **host wall time**, not engine time — calendar-lane cost regressions
+//! (a scheduler round suddenly scanning the whole queue, a completion
+//! drain touching too many drivers) are invisible in simulation seconds.
+//! It is therefore the only `obs` module on the linter's DET003 timing
+//! allowlist (`rust/lint.conf`); everything counted here is strictly
+//! *outside* the deterministic simulation: enabling the profiler never
+//! changes a trajectory, a report, or the event stream.
+//!
+//! The coordinator updates an [`EngineProfile`] through a shared
+//! `Rc<RefCell<_>>` handle obtained from
+//! [`Coordinator::enable_profiling`](crate::engine::Coordinator::enable_profiling),
+//! so the numbers remain readable after the run consumes the
+//! coordinator.
+
+use std::time::{Duration, Instant};
+
+use crate::util::bench::fmt_time;
+use crate::util::json::{obj, Json};
+
+/// Power-of-two-bucketed wall-time histogram: bucket `k` counts
+/// durations in `[2^k, 2^(k+1))` nanoseconds (bucket 0 additionally
+/// holds sub-nanosecond samples). 40 buckets cover ~18 minutes.
+#[derive(Debug, Clone)]
+pub struct WallHist {
+    buckets: [u64; 40],
+    count: u64,
+    total_ns: u128,
+    max_ns: u64,
+}
+
+impl Default for WallHist {
+    fn default() -> WallHist {
+        WallHist { buckets: [0; 40], count: 0, total_ns: 0, max_ns: 0 }
+    }
+}
+
+impl WallHist {
+    /// Record one sample.
+    pub fn record(&mut self, d: Duration) {
+        let ns = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        let idx = if ns <= 1 {
+            0
+        } else {
+            ((63 - ns.leading_zeros()) as usize).min(self.buckets.len() - 1)
+        };
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.total_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean sample in seconds (0 when empty).
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.count as f64 / 1e9
+        }
+    }
+
+    /// Largest sample in seconds.
+    pub fn max_s(&self) -> f64 {
+        self.max_ns as f64 / 1e9
+    }
+
+    /// Human rendering: one `[lo, hi)` row per non-empty bucket with a
+    /// proportional bar.
+    pub fn render(&self, label: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(
+            out,
+            "  {label}: {} samples, mean {}, max {}",
+            self.count,
+            fmt_time(self.mean_s()),
+            fmt_time(self.max_s()),
+        );
+        let peak = self.buckets.iter().copied().max().unwrap_or(0);
+        for (k, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let lo = if k == 0 { 0.0 } else { (1u64 << k) as f64 / 1e9 };
+            let hi = (1u64 << (k + 1)) as f64 / 1e9;
+            let width = ((n as f64 / peak as f64) * 40.0).ceil() as usize;
+            let _ = writeln!(
+                out,
+                "    [{:>9} .. {:>9})  {:>8}  {}",
+                fmt_time(lo),
+                fmt_time(hi),
+                n,
+                "#".repeat(width),
+            );
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|&(_, &n)| n > 0)
+            .map(|(k, &n)| {
+                obj([
+                    ("bucket_log2_ns", Json::from(k)),
+                    ("count", crate::util::json::from_u64(n)),
+                ])
+            })
+            .collect();
+        obj([
+            ("count", crate::util::json::from_u64(self.count)),
+            ("mean_s", Json::from(self.mean_s())),
+            ("max_s", Json::from(self.max_s())),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// Per-lane counters + hot-round timing for one engine run. Counter
+/// names mirror the calendar lanes (arrival / resize / autoscale /
+/// failure / retry / checkpoint) plus the driver-wake and
+/// submit/start/complete flow the lanes feed.
+#[derive(Debug, Clone)]
+pub struct EngineProfile {
+    /// Event-loop iterations driven.
+    pub loop_iterations: u64,
+    /// Arrival lane: workflows materialized.
+    pub arrivals: u64,
+    /// Resize lane: timed resizes applied.
+    pub resizes: u64,
+    /// Autoscale lane: evaluations performed (acted or not).
+    pub autoscale_evals: u64,
+    /// Failure lane: node faults fired (trace + MTBF).
+    pub faults: u64,
+    /// Retry lane: backoffs that elapsed and resubmitted.
+    pub retries_resubmitted: u64,
+    /// Checkpoint lane: snapshots taken.
+    pub checkpoints: u64,
+    /// Driver wakes released (calendar pops / full-scan steps).
+    pub driver_wakes: u64,
+    /// Tasks submitted to the scheduler (first submissions only).
+    pub submissions: u64,
+    /// Tasks launched onto the executor.
+    pub tasks_started: u64,
+    /// Completions drained.
+    pub completions: u64,
+    /// Scheduler rounds, wall-time histogram.
+    pub sched_rounds: WallHist,
+    /// Completion-drain rounds (drain + routing + folds), wall-time
+    /// histogram.
+    pub drain_rounds: WallHist,
+    /// Host instant profiling was enabled (total-wall denominator).
+    started: Instant,
+}
+
+impl Default for EngineProfile {
+    fn default() -> EngineProfile {
+        EngineProfile::new()
+    }
+}
+
+impl EngineProfile {
+    /// Fresh profile; stamps the wall-clock start.
+    pub fn new() -> EngineProfile {
+        EngineProfile {
+            loop_iterations: 0,
+            arrivals: 0,
+            resizes: 0,
+            autoscale_evals: 0,
+            faults: 0,
+            retries_resubmitted: 0,
+            checkpoints: 0,
+            driver_wakes: 0,
+            submissions: 0,
+            tasks_started: 0,
+            completions: 0,
+            sched_rounds: WallHist::default(),
+            drain_rounds: WallHist::default(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Wall seconds since the profile was created.
+    pub fn wall_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Human table (the `--profile` output).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "engine profile ({} wall)", fmt_time(self.wall_s()));
+        let _ = writeln!(out, "  lane counters:");
+        for (name, n) in [
+            ("loop iterations", self.loop_iterations),
+            ("arrivals", self.arrivals),
+            ("resizes", self.resizes),
+            ("autoscale evals", self.autoscale_evals),
+            ("faults", self.faults),
+            ("retries resubmitted", self.retries_resubmitted),
+            ("checkpoints", self.checkpoints),
+            ("driver wakes", self.driver_wakes),
+            ("submissions", self.submissions),
+            ("tasks started", self.tasks_started),
+            ("completions", self.completions),
+        ] {
+            let _ = writeln!(out, "    {name:<22} {n:>12}");
+        }
+        self.sched_rounds.render("scheduler rounds", &mut out);
+        self.drain_rounds.render("drain rounds", &mut out);
+        out
+    }
+
+    /// Machine-readable profile (output-only; the profile is wall-clock
+    /// telemetry, never simulation state, so it has no parse path).
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::from_u64;
+        obj([
+            ("wall_s", Json::from(self.wall_s())),
+            ("loop_iterations", from_u64(self.loop_iterations)),
+            ("arrivals", from_u64(self.arrivals)),
+            ("resizes", from_u64(self.resizes)),
+            ("autoscale_evals", from_u64(self.autoscale_evals)),
+            ("faults", from_u64(self.faults)),
+            ("retries_resubmitted", from_u64(self.retries_resubmitted)),
+            ("checkpoints", from_u64(self.checkpoints)),
+            ("driver_wakes", from_u64(self.driver_wakes)),
+            ("submissions", from_u64(self.submissions)),
+            ("tasks_started", from_u64(self.tasks_started)),
+            ("completions", from_u64(self.completions)),
+            ("sched_rounds", self.sched_rounds.to_json()),
+            ("drain_rounds", self.drain_rounds.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_by_power_of_two() {
+        let mut h = WallHist::default();
+        h.record(Duration::from_nanos(1)); // bucket 0
+        h.record(Duration::from_nanos(3)); // bucket 1: [2, 4)
+        h.record(Duration::from_nanos(1024)); // bucket 10
+        h.record(Duration::from_secs(2)); // ~2^31 ns
+        assert_eq!(h.count(), 4);
+        assert!(h.mean_s() > 0.0);
+        assert!(h.max_s() >= 2.0);
+        let mut out = String::new();
+        h.render("x", &mut out);
+        assert!(out.contains("4 samples"));
+    }
+
+    #[test]
+    fn profile_renders_and_serializes() {
+        let mut p = EngineProfile::new();
+        p.loop_iterations = 7;
+        p.completions = 3;
+        p.sched_rounds.record(Duration::from_micros(5));
+        let text = p.render();
+        assert!(text.contains("loop iterations"));
+        assert!(text.contains("scheduler rounds"));
+        let j = p.to_json();
+        assert_eq!(j.req_u64("loop_iterations").unwrap(), 7);
+        assert_eq!(j.get("sched_rounds").req_u64("count").unwrap(), 1);
+    }
+}

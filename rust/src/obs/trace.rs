@@ -1,0 +1,916 @@
+//! Post-hoc event-stream analyzer (`asyncflow trace <events.ndjson>`).
+//!
+//! Replays an NDJSON stream written by `--emit-events` and computes the
+//! paper's asynchronicity metrics **from events alone** — no access to
+//! the live engine state:
+//!
+//! - per-task-kind concurrency timelines (busy seconds, peak
+//!   concurrency);
+//! - the pairwise **overlap matrix**: how long each pair of task kinds
+//!   actually ran concurrently (the paper's core question — did
+//!   simulation and training overlap, or degenerate to stages?);
+//! - the **degree of asynchronicity**: seconds with ≥ 2 distinct kinds
+//!   active over seconds with any kind active, plus the improvement the
+//!   measured schedule achieves over the sequential-stage baseline
+//!   (Σ per-kind busy time run back-to-back);
+//! - utilization reconstructed purely from events and cross-checked
+//!   against the capacity timeline rebuilt from
+//!   [`ObsEvent::CapacityOffered`] points;
+//! - wait / TTX distributions per workflow.
+//!
+//! ## Reconstruction is exact, not advisory
+//!
+//! [`replay`] rebuilds the run's `TaskRecord`s (last-attempt start
+//! wins, exactly like the live driver's bookkeeping under retries), the
+//! capacity timeline, and per-member wait/TTX samples in the same
+//! orders the live reporting pipeline uses — so utilization and wait
+//! percentiles computed from a replayed stream are **bit-identical** to
+//! the live `TrafficReport`'s (asserted in `tests/obs_trace.rs`). That
+//! property is what makes the stream trustworthy: if an event were
+//! missing or mis-timed, the reconstruction would drift.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::metrics::{CapacityTimeline, TaskRecord, UtilizationTrace};
+use crate::util::json::{from_u64, obj, FromJson, Json};
+use crate::util::stats::Summary;
+
+use super::ObsEvent;
+
+/// Parse an NDJSON stream (one event per non-blank line).
+pub fn parse_stream(src: &str) -> Result<Vec<ObsEvent>> {
+    let mut out = Vec::new();
+    for (i, line) in src.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| Error::Config(format!("events line {}: {e}", i + 1)))?;
+        out.push(
+            ObsEvent::from_json(&v)
+                .map_err(|e| Error::Config(format!("events line {}: {e}", i + 1)))?,
+        );
+    }
+    Ok(out)
+}
+
+/// One execution attempt: a `task_started` closed by `task_completed`
+/// or `task_killed`. Killed attempts occupy resources too, so overlap
+/// and concurrency metrics are computed over attempts, while records
+/// (and utilization, mirroring the live report) keep only the final
+/// completed attempt.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecInterval {
+    /// Task kind label.
+    pub kind: String,
+    /// Launch time.
+    pub start: f64,
+    /// Completion or kill time.
+    pub end: f64,
+    /// Placed cores.
+    pub cores: u64,
+    /// Placed GPUs.
+    pub gpus: u64,
+}
+
+/// Everything [`replay`] reconstructs from a stream.
+#[derive(Debug, Clone)]
+pub struct ReplayedRun {
+    /// Completed task records in merged-report order (workflow slot
+    /// ascending, then driver-local uid ascending — the exact order the
+    /// live merge produces), with last-attempt start times.
+    pub records: Vec<TaskRecord>,
+    /// Task kind per record (parallel to `records`; records carry no
+    /// kind themselves).
+    pub record_kinds: Vec<String>,
+    /// Offered-capacity timeline rebuilt from `capacity` events.
+    pub capacity: CapacityTimeline,
+    /// `(slot, arrival)` per workflow, slot-ascending.
+    pub arrivals: Vec<(usize, f64)>,
+    /// Per-workflow wait (first task start − arrival), in slot order.
+    pub waits: Vec<f64>,
+    /// Per-workflow TTX (last completion − arrival), in slot order.
+    pub ttxs: Vec<f64>,
+    /// Every execution attempt (completed + killed).
+    pub intervals: Vec<ExecInterval>,
+    /// Events consumed.
+    pub n_events: usize,
+    /// Tasks submitted but not completed by stream end (0 for a
+    /// completed run's stream).
+    pub n_unfinished: usize,
+    /// Workflows that completed.
+    pub workflows_completed: usize,
+    /// Node faults observed.
+    pub faults: usize,
+    /// Task kills observed.
+    pub kills: usize,
+    /// Retry resubmissions observed.
+    pub retries: usize,
+    /// Checkpoint markers observed.
+    pub checkpoints: usize,
+}
+
+/// Per-(slot, local) record state while replaying.
+#[derive(Debug, Clone)]
+struct RecState {
+    kind: String,
+    cores: u64,
+    gpus: u64,
+    submitted: f64,
+    started: f64,
+    finished: f64,
+    failed: bool,
+}
+
+/// Replay `events` into the run's reconstructed state. Errors on a
+/// stream with no capacity point (not produced by `--emit-events`) or
+/// events referencing tasks never submitted.
+pub fn replay(events: &[ObsEvent]) -> Result<ReplayedRun> {
+    let mut capacity: Option<CapacityTimeline> = None;
+    // uid -> (slot, local): uids recycle, the latest submission wins.
+    let mut open: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+    // uid -> in-flight execution attempt (start time).
+    let mut exec_open: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut recs: BTreeMap<(usize, usize), RecState> = BTreeMap::new();
+    let mut arrivals: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut intervals: Vec<ExecInterval> = Vec::new();
+    let (mut faults, mut kills, mut retries, mut checkpoints) = (0, 0, 0, 0);
+    let mut workflows_completed = 0usize;
+
+    let route_of = |open: &BTreeMap<usize, (usize, usize)>, uid: usize| {
+        open.get(&uid).copied().ok_or_else(|| {
+            Error::Config(format!("trace: event for uid {uid} before its submission"))
+        })
+    };
+
+    for ev in events {
+        match ev {
+            ObsEvent::CapacityOffered { t, cores, gpus } => match capacity.as_mut() {
+                None => capacity = Some(CapacityTimeline::constant(*cores, *gpus)),
+                Some(cap) => cap.record(*t, *cores, *gpus),
+            },
+            ObsEvent::WorkflowArrived { slot, arrival, .. } => {
+                arrivals.insert(*slot, *arrival);
+            }
+            ObsEvent::TaskSubmitted {
+                t, uid, slot, local, kind, cores, gpus, attempt, ..
+            } => {
+                open.insert(*uid, (*slot, *local));
+                if *attempt > 0 {
+                    retries += 1;
+                } else {
+                    recs.insert(
+                        (*slot, *local),
+                        RecState {
+                            kind: kind.clone(),
+                            cores: *cores,
+                            gpus: *gpus,
+                            submitted: *t,
+                            started: f64::NAN,
+                            finished: f64::NAN,
+                            failed: false,
+                        },
+                    );
+                }
+            }
+            ObsEvent::TaskStarted { t, uid, slot, local, .. } => {
+                let r = recs.get_mut(&(*slot, *local)).ok_or_else(|| {
+                    Error::Config(format!(
+                        "trace: start for task ({slot},{local}) before its submission"
+                    ))
+                })?;
+                // Retried tasks restart: the final record keeps the
+                // last attempt's start, matching the live driver.
+                r.started = *t;
+                exec_open.insert(*uid, *t);
+            }
+            ObsEvent::TaskCompleted { t, uid, slot, local, failed } => {
+                let (s, l) = route_of(&open, *uid)?;
+                if (s, l) != (*slot, *local) {
+                    return Err(Error::Config(format!(
+                        "trace: completion routes uid {uid} to ({slot},{local}) \
+                         but it was submitted as ({s},{l})"
+                    )));
+                }
+                let r = recs.get_mut(&(s, l)).ok_or_else(|| {
+                    Error::Config(format!(
+                        "trace: completion for unknown task ({s},{l})"
+                    ))
+                })?;
+                r.finished = *t;
+                r.failed = *failed;
+                if let Some(start) = exec_open.remove(uid) {
+                    intervals.push(ExecInterval {
+                        kind: r.kind.clone(),
+                        start,
+                        end: *t,
+                        cores: r.cores,
+                        gpus: r.gpus,
+                    });
+                }
+                open.remove(uid);
+            }
+            ObsEvent::TaskKilled { t, uid, slot, local, .. } => {
+                kills += 1;
+                if let Some(start) = exec_open.remove(uid) {
+                    let kind = recs
+                        .get(&(*slot, *local))
+                        .map(|r| r.kind.clone())
+                        .unwrap_or_default();
+                    let (cores, gpus) = recs
+                        .get(&(*slot, *local))
+                        .map_or((0, 0), |r| (r.cores, r.gpus));
+                    intervals.push(ExecInterval { kind, start, end: *t, cores, gpus });
+                }
+            }
+            ObsEvent::WorkflowCompleted { .. } => workflows_completed += 1,
+            ObsEvent::NodeFault { .. } => faults += 1,
+            ObsEvent::CheckpointTaken { .. } => checkpoints += 1,
+            ObsEvent::RetryScheduled { .. }
+            | ObsEvent::RetriesExhausted { .. }
+            | ObsEvent::PilotResized { .. }
+            | ObsEvent::AutoscaleDecision { .. } => {}
+        }
+    }
+
+    let capacity = capacity.ok_or_else(|| {
+        Error::Config(
+            "trace: stream carries no capacity events (not an --emit-events \
+             stream, or truncated before t = 0)"
+                .into(),
+        )
+    })?;
+
+    // Records in merged order: slot-major, local-ascending (BTreeMap
+    // iteration), uid re-assigned sequentially exactly like the
+    // campaign merge.
+    let mut records = Vec::new();
+    let mut record_kinds = Vec::new();
+    let mut n_unfinished = 0usize;
+    for ((_, _), r) in recs.iter() {
+        if !r.finished.is_finite() {
+            n_unfinished += 1;
+            continue;
+        }
+        records.push(TaskRecord {
+            uid: records.len(),
+            set_idx: 0,
+            set_name: String::new(),
+            pipeline: 0,
+            branch: 0,
+            submitted: r.submitted,
+            started: r.started,
+            finished: r.finished,
+            cores: r.cores,
+            gpus: r.gpus,
+            failed: r.failed,
+        });
+        record_kinds.push(r.kind.clone());
+    }
+
+    // Per-workflow wait / TTX in slot order — the same member order and
+    // the same folds (min over starts, max over finishes, arrival
+    // fallback for empty members) as the live TrafficReport.
+    let mut per_slot: BTreeMap<usize, (f64, f64)> = BTreeMap::new();
+    for ((slot, _), r) in recs.iter() {
+        if !r.finished.is_finite() {
+            continue;
+        }
+        let e = per_slot
+            .entry(*slot)
+            .or_insert((f64::INFINITY, 0.0));
+        e.0 = e.0.min(r.started);
+        e.1 = e.1.max(r.finished);
+    }
+    let mut waits = Vec::with_capacity(arrivals.len());
+    let mut ttxs = Vec::with_capacity(arrivals.len());
+    for (&slot, &arrival) in arrivals.iter() {
+        let (first_start, finish) = match per_slot.get(&slot) {
+            Some(&(s, f)) => (s, f),
+            None => (arrival, arrival),
+        };
+        waits.push(first_start - arrival);
+        ttxs.push(finish - arrival);
+    }
+
+    Ok(ReplayedRun {
+        records,
+        record_kinds,
+        capacity,
+        arrivals: arrivals.into_iter().collect(),
+        waits,
+        ttxs,
+        intervals,
+        n_events: events.len(),
+        n_unfinished,
+        workflows_completed,
+        faults,
+        kills,
+        retries,
+        checkpoints,
+    })
+}
+
+/// Per-kind concurrency statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KindStats {
+    /// Kind label.
+    pub kind: String,
+    /// Completed tasks of this kind.
+    pub tasks: usize,
+    /// Seconds with ≥ 1 task of this kind running.
+    pub active_s: f64,
+    /// Integral of concurrency over time (task-seconds).
+    pub busy_task_s: f64,
+    /// Peak concurrent tasks.
+    pub peak_concurrency: u64,
+}
+
+/// The full analysis `asyncflow trace` reports.
+#[derive(Debug, Clone)]
+pub struct TraceAnalysis {
+    /// Events consumed.
+    pub n_events: usize,
+    /// Workflows that arrived.
+    pub n_workflows: usize,
+    /// Completed task records.
+    pub n_tasks: usize,
+    /// Max completion time.
+    pub makespan: f64,
+    /// Mean CPU utilization against offered capacity (events-only
+    /// reconstruction; bit-identical to the live report).
+    pub cpu_utilization: f64,
+    /// Mean GPU utilization against offered capacity.
+    pub gpu_utilization: f64,
+    /// Whether reconstructed usage never exceeded reconstructed offered
+    /// capacity at any instant (the CapacityTimeline cross-check).
+    pub capacity_consistent: bool,
+    /// Peak cores in use at one instant.
+    pub peak_cores_used: u64,
+    /// Peak GPUs in use at one instant.
+    pub peak_gpus_used: u64,
+    /// Offered capacity at stream end.
+    pub final_capacity: (u64, u64),
+    /// Wait distribution (first start − arrival) per workflow.
+    pub wait: Option<Summary>,
+    /// TTX distribution (finish − arrival) per workflow.
+    pub ttx: Option<Summary>,
+    /// Per-kind concurrency stats, kind-sorted.
+    pub kinds: Vec<KindStats>,
+    /// `overlap[i][j]`: seconds kinds `i` and `j` were simultaneously
+    /// active (diagonal = the kind's own active seconds).
+    pub overlap: Vec<Vec<f64>>,
+    /// Seconds with any task running.
+    pub any_active_s: f64,
+    /// Seconds with ≥ 2 distinct kinds running.
+    pub multi_active_s: f64,
+    /// `multi_active_s / any_active_s` — the measured degree of
+    /// asynchronicity (0 when nothing overlapped, i.e. stage-like).
+    pub degree_of_asynchronicity: f64,
+    /// Sequential-stage baseline: Σ per-kind active seconds (each kind
+    /// run back-to-back with no cross-kind overlap).
+    pub serial_baseline_s: f64,
+    /// `1 − any_active_s / serial_baseline_s`: the makespan fraction
+    /// saved versus the stage-sequential schedule (the paper's
+    /// improvement metric computed over the measured trace).
+    pub async_improvement: f64,
+    /// Node faults observed.
+    pub faults: usize,
+    /// Task kills observed.
+    pub kills: usize,
+    /// Retry resubmissions observed.
+    pub retries: usize,
+    /// Checkpoint markers observed.
+    pub checkpoints: usize,
+}
+
+/// Analyze a parsed stream. See [`replay`] for the reconstruction
+/// semantics; the overlap/concurrency sweep runs over execution
+/// attempts (killed attempts occupied resources too).
+pub fn analyze(events: &[ObsEvent]) -> Result<TraceAnalysis> {
+    let run = replay(events)?;
+    analyze_replayed(&run)
+}
+
+/// [`analyze`] over an already-replayed run.
+pub fn analyze_replayed(run: &ReplayedRun) -> Result<TraceAnalysis> {
+    // Kind index, label-sorted for a stable matrix.
+    let mut kind_idx: BTreeMap<&str, usize> = BTreeMap::new();
+    for iv in &run.intervals {
+        let next = kind_idx.len();
+        kind_idx.entry(iv.kind.as_str()).or_insert(next);
+    }
+    // BTreeMap iteration is label-sorted but insertion order assigned
+    // arbitrary indices; re-index by sorted order.
+    let labels: Vec<String> = kind_idx.keys().map(|k| k.to_string()).collect();
+    for (i, k) in labels.iter().enumerate() {
+        if let Some(slot) = kind_idx.get_mut(k.as_str()) {
+            *slot = i;
+        }
+    }
+    let nk = labels.len();
+
+    // Boundary sweep over execution attempts: at each event instant the
+    // per-kind concurrency and the core/GPU usage change; between
+    // instants they are constant.
+    #[derive(Clone, Copy)]
+    struct Delta {
+        t: f64,
+        kind: usize,
+        conc: i64,
+        cores: i64,
+        gpus: i64,
+    }
+    let mut deltas: Vec<Delta> = Vec::with_capacity(run.intervals.len() * 2);
+    for iv in &run.intervals {
+        let k = kind_idx.get(iv.kind.as_str()).copied().unwrap_or(0);
+        deltas.push(Delta {
+            t: iv.start,
+            kind: k,
+            conc: 1,
+            cores: iv.cores as i64,
+            gpus: iv.gpus as i64,
+        });
+        deltas.push(Delta {
+            t: iv.end,
+            kind: k,
+            conc: -1,
+            cores: -(iv.cores as i64),
+            gpus: -(iv.gpus as i64),
+        });
+    }
+    deltas.sort_by(|a, b| a.t.total_cmp(&b.t));
+
+    let mut conc = vec![0i64; nk];
+    let mut busy_task_s = vec![0.0f64; nk];
+    let mut active_s = vec![0.0f64; nk];
+    let mut peak_conc = vec![0u64; nk];
+    let mut tasks_per_kind = vec![0usize; nk];
+    for k in &run.record_kinds {
+        if let Some(&i) = kind_idx.get(k.as_str()) {
+            tasks_per_kind[i] += 1;
+        }
+    }
+    let mut overlap = vec![vec![0.0f64; nk]; nk];
+    let (mut any_active, mut multi_active) = (0.0f64, 0.0f64);
+    let (mut used_cores, mut used_gpus) = (0i64, 0i64);
+    let (mut peak_cores, mut peak_gpus) = (0i64, 0i64);
+    let mut capacity_consistent = true;
+
+    let mut i = 0usize;
+    while i < deltas.len() {
+        let t = deltas[i].t;
+        // Apply every delta at this instant.
+        while i < deltas.len() && deltas[i].t == t {
+            let d = deltas[i];
+            conc[d.kind] += d.conc;
+            used_cores += d.cores;
+            used_gpus += d.gpus;
+            peak_conc[d.kind] = peak_conc[d.kind].max(conc[d.kind].max(0) as u64);
+            i += 1;
+        }
+        peak_cores = peak_cores.max(used_cores);
+        peak_gpus = peak_gpus.max(used_gpus);
+        // Accumulate the segment up to the next instant.
+        let Some(next) = deltas.get(i) else { break };
+        let seg = next.t - t;
+        if seg <= 0.0 {
+            continue;
+        }
+        let active: Vec<usize> = (0..nk).filter(|&k| conc[k] > 0).collect();
+        for &k in &active {
+            active_s[k] += seg;
+            busy_task_s[k] += seg * conc[k] as f64;
+        }
+        for (ai, &a) in active.iter().enumerate() {
+            overlap[a][a] += seg;
+            for &b in &active[ai + 1..] {
+                overlap[a][b] += seg;
+                overlap[b][a] += seg;
+            }
+        }
+        if !active.is_empty() {
+            any_active += seg;
+        }
+        if active.len() >= 2 {
+            multi_active += seg;
+        }
+        // Cross-check: usage must never exceed offered capacity. The
+        // capacity timeline is piecewise-constant from the left, so a
+        // mid-segment probe sees the value governing the segment.
+        let (cap_c, cap_g) = run.capacity.at(t + seg * 0.5);
+        if used_cores > cap_c as i64 || used_gpus > cap_g as i64 {
+            capacity_consistent = false;
+        }
+    }
+
+    let trace =
+        UtilizationTrace::from_records_capacity(&run.records, run.capacity.clone());
+    let (cpu_u, gpu_u) = trace.mean_utilization();
+    let makespan = run
+        .records
+        .iter()
+        .map(|r| r.finished)
+        .fold(0.0f64, f64::max);
+    let serial_baseline: f64 = active_s.iter().sum();
+    let kinds: Vec<KindStats> = labels
+        .iter()
+        .enumerate()
+        .map(|(k, label)| KindStats {
+            kind: label.clone(),
+            tasks: tasks_per_kind[k],
+            active_s: active_s[k],
+            busy_task_s: busy_task_s[k],
+            peak_concurrency: peak_conc[k],
+        })
+        .collect();
+
+    Ok(TraceAnalysis {
+        n_events: run.n_events,
+        n_workflows: run.arrivals.len(),
+        n_tasks: run.records.len(),
+        makespan,
+        cpu_utilization: cpu_u,
+        gpu_utilization: gpu_u,
+        capacity_consistent,
+        peak_cores_used: peak_cores.max(0) as u64,
+        peak_gpus_used: peak_gpus.max(0) as u64,
+        final_capacity: run.capacity.final_capacity(),
+        wait: Summary::try_of(&run.waits),
+        ttx: Summary::try_of(&run.ttxs),
+        kinds,
+        overlap,
+        any_active_s: any_active,
+        multi_active_s: multi_active,
+        degree_of_asynchronicity: if any_active > 0.0 {
+            multi_active / any_active
+        } else {
+            0.0
+        },
+        serial_baseline_s: serial_baseline,
+        async_improvement: if serial_baseline > 0.0 {
+            1.0 - any_active / serial_baseline
+        } else {
+            0.0
+        },
+        faults: run.faults,
+        kills: run.kills,
+        retries: run.retries,
+        checkpoints: run.checkpoints,
+    })
+}
+
+fn summary_json(s: &Option<Summary>) -> Json {
+    match s {
+        None => Json::Null,
+        Some(s) => obj([
+            ("n", Json::from(s.n)),
+            ("mean", Json::from(s.mean)),
+            ("std", Json::from(s.std)),
+            ("min", Json::from(s.min)),
+            ("max", Json::from(s.max)),
+            ("p50", Json::from(s.p50)),
+            ("p95", Json::from(s.p95)),
+            ("p99", Json::from(s.p99)),
+        ]),
+    }
+}
+
+fn summary_line(s: &Option<Summary>) -> String {
+    match s {
+        None => "n=0".to_string(),
+        Some(s) => format!(
+            "n={} mean={:.3} p50={:.3} p95={:.3} p99={:.3} max={:.3}",
+            s.n, s.mean, s.p50, s.p95, s.p99, s.max
+        ),
+    }
+}
+
+impl TraceAnalysis {
+    /// Human-readable report (the default `asyncflow trace` output).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace: {} events | {} workflows | {} tasks | makespan {:.3} s",
+            self.n_events, self.n_workflows, self.n_tasks, self.makespan
+        );
+        let _ = writeln!(
+            out,
+            "utilization (events-only): cpu {:.1}%  gpu {:.1}%   capacity check: {} \
+             (peak used {}/{} cores, {}/{} gpus)",
+            self.cpu_utilization * 100.0,
+            self.gpu_utilization * 100.0,
+            if self.capacity_consistent { "consistent" } else { "VIOLATED" },
+            self.peak_cores_used,
+            self.final_capacity.0,
+            self.peak_gpus_used,
+            self.final_capacity.1,
+        );
+        let _ = writeln!(out, "wait: {}", summary_line(&self.wait));
+        let _ = writeln!(out, "ttx:  {}", summary_line(&self.ttx));
+        if self.faults + self.kills + self.retries + self.checkpoints > 0 {
+            let _ = writeln!(
+                out,
+                "resilience: {} faults, {} kills, {} retries, {} checkpoints",
+                self.faults, self.kills, self.retries, self.checkpoints
+            );
+        }
+        let _ = writeln!(out, "per-kind concurrency:");
+        let _ = writeln!(
+            out,
+            "  {:<12} {:>8} {:>12} {:>14} {:>6}",
+            "kind", "tasks", "active_s", "busy_task_s", "peak"
+        );
+        for k in &self.kinds {
+            let _ = writeln!(
+                out,
+                "  {:<12} {:>8} {:>12.3} {:>14.3} {:>6}",
+                k.kind, k.tasks, k.active_s, k.busy_task_s, k.peak_concurrency
+            );
+        }
+        if self.kinds.len() > 1 {
+            let _ = writeln!(out, "overlap matrix (s):");
+            let mut hdr = format!("  {:<12}", "");
+            for k in &self.kinds {
+                let _ = write!(hdr, " {:>12}", k.kind);
+            }
+            let _ = writeln!(out, "{hdr}");
+            for (i, k) in self.kinds.iter().enumerate() {
+                let mut row = format!("  {:<12}", k.kind);
+                for j in 0..self.kinds.len() {
+                    let _ = write!(row, " {:>12.3}", self.overlap[i][j]);
+                }
+                let _ = writeln!(out, "{row}");
+            }
+        }
+        let _ = writeln!(
+            out,
+            "degree of asynchronicity: {:.3}  ({:.3} s multi-kind active / {:.3} s \
+             any active)",
+            self.degree_of_asynchronicity, self.multi_active_s, self.any_active_s
+        );
+        let _ = writeln!(
+            out,
+            "async improvement vs sequential stages: {:.3}  (active span {:.3} s vs \
+             {:.3} s staged)",
+            self.async_improvement, self.any_active_s, self.serial_baseline_s
+        );
+        out
+    }
+
+    /// Machine-readable analysis (output-only; derived entirely from
+    /// the stream, so it has no parse path).
+    pub fn to_json(&self) -> Json {
+        let kinds: Vec<Json> = self
+            .kinds
+            .iter()
+            .map(|k| {
+                obj([
+                    ("kind", Json::from(k.kind.clone())),
+                    ("tasks", Json::from(k.tasks)),
+                    ("active_s", Json::from(k.active_s)),
+                    ("busy_task_s", Json::from(k.busy_task_s)),
+                    ("peak_concurrency", from_u64(k.peak_concurrency)),
+                ])
+            })
+            .collect();
+        let overlap: Vec<Json> = self
+            .overlap
+            .iter()
+            .map(|row| Json::Arr(row.iter().map(|&v| Json::from(v)).collect()))
+            .collect();
+        obj([
+            ("n_events", Json::from(self.n_events)),
+            ("n_workflows", Json::from(self.n_workflows)),
+            ("n_tasks", Json::from(self.n_tasks)),
+            ("makespan_s", Json::from(self.makespan)),
+            ("cpu_utilization", Json::from(self.cpu_utilization)),
+            ("gpu_utilization", Json::from(self.gpu_utilization)),
+            ("capacity_consistent", Json::from(self.capacity_consistent)),
+            ("peak_cores_used", from_u64(self.peak_cores_used)),
+            ("peak_gpus_used", from_u64(self.peak_gpus_used)),
+            ("final_cores", from_u64(self.final_capacity.0)),
+            ("final_gpus", from_u64(self.final_capacity.1)),
+            ("wait", summary_json(&self.wait)),
+            ("ttx", summary_json(&self.ttx)),
+            ("kinds", Json::Arr(kinds)),
+            ("overlap_s", Json::Arr(overlap)),
+            ("any_active_s", Json::from(self.any_active_s)),
+            ("multi_active_s", Json::from(self.multi_active_s)),
+            (
+                "degree_of_asynchronicity",
+                Json::from(self.degree_of_asynchronicity),
+            ),
+            ("serial_baseline_s", Json::from(self.serial_baseline_s)),
+            ("async_improvement", Json::from(self.async_improvement)),
+            ("faults", Json::from(self.faults)),
+            ("kills", Json::from(self.kills)),
+            ("retries", Json::from(self.retries)),
+            ("checkpoints", Json::from(self.checkpoints)),
+        ])
+    }
+
+    /// Per-kind stats as CSV.
+    pub fn kinds_csv(&self) -> String {
+        let mut out = String::from("kind,tasks,active_s,busy_task_s,peak_concurrency\n");
+        for k in &self.kinds {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                k.kind, k.tasks, k.active_s, k.busy_task_s, k.peak_concurrency
+            ));
+        }
+        out
+    }
+
+    /// The overlap matrix as CSV (kind × kind, seconds).
+    pub fn overlap_csv(&self) -> String {
+        let mut out = String::from("kind");
+        for k in &self.kinds {
+            out.push(',');
+            out.push_str(&k.kind);
+        }
+        out.push('\n');
+        for (i, k) in self.kinds.iter().enumerate() {
+            out.push_str(&k.kind);
+            for j in 0..self.kinds.len() {
+                out.push_str(&format!(",{}", self.overlap[i][j]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built stream: 2 kinds, partial overlap, one workflow.
+    fn stream() -> Vec<ObsEvent> {
+        vec![
+            ObsEvent::CapacityOffered { t: 0.0, cores: 8, gpus: 2 },
+            ObsEvent::WorkflowArrived {
+                t: 0.0,
+                slot: 0,
+                workflow: "w".into(),
+                arrival: 0.0,
+            },
+            ObsEvent::TaskSubmitted {
+                t: 0.0,
+                uid: 0,
+                slot: 0,
+                local: 0,
+                kind: "simulation".into(),
+                cores: 4,
+                gpus: 1,
+                tx: 10.0,
+                attempt: 0,
+            },
+            ObsEvent::TaskSubmitted {
+                t: 0.0,
+                uid: 1,
+                slot: 0,
+                local: 1,
+                kind: "training".into(),
+                cores: 2,
+                gpus: 1,
+                tx: 10.0,
+                attempt: 0,
+            },
+            ObsEvent::TaskStarted {
+                t: 1.0,
+                uid: 0,
+                slot: 0,
+                local: 0,
+                node: 0,
+                cores: 4,
+                gpus: 1,
+            },
+            ObsEvent::TaskStarted {
+                t: 6.0,
+                uid: 1,
+                slot: 0,
+                local: 1,
+                node: 0,
+                cores: 2,
+                gpus: 1,
+            },
+            ObsEvent::TaskCompleted { t: 11.0, uid: 0, slot: 0, local: 0, failed: false },
+            ObsEvent::TaskCompleted { t: 16.0, uid: 1, slot: 0, local: 1, failed: false },
+            ObsEvent::WorkflowCompleted { t: 16.0, slot: 0, workflow: "w".into() },
+        ]
+    }
+
+    #[test]
+    fn replay_reconstructs_records_and_waits() {
+        let run = replay(&stream()).unwrap();
+        assert_eq!(run.records.len(), 2);
+        assert_eq!(run.records[0].started, 1.0);
+        assert_eq!(run.records[0].finished, 11.0);
+        assert_eq!(run.records[1].cores, 2);
+        assert_eq!(run.waits, vec![1.0]);
+        assert_eq!(run.ttxs, vec![16.0]);
+        assert_eq!(run.n_unfinished, 0);
+        assert_eq!(run.capacity.final_capacity(), (8, 2));
+    }
+
+    #[test]
+    fn overlap_and_doa_measure_the_window() {
+        let a = analyze(&stream()).unwrap();
+        assert_eq!(a.kinds.len(), 2);
+        assert_eq!(a.kinds[0].kind, "simulation");
+        assert_eq!(a.kinds[1].kind, "training");
+        // sim active [1, 11), train [6, 16): overlap [6, 11) = 5 s.
+        assert!((a.overlap[0][1] - 5.0).abs() < 1e-12);
+        assert!((a.any_active_s - 15.0).abs() < 1e-12);
+        assert!((a.multi_active_s - 5.0).abs() < 1e-12);
+        assert!((a.degree_of_asynchronicity - 5.0 / 15.0).abs() < 1e-12);
+        // staged baseline 20 s vs 15 s measured span.
+        assert!((a.serial_baseline_s - 20.0).abs() < 1e-12);
+        assert!((a.async_improvement - 0.25).abs() < 1e-12);
+        assert!(a.capacity_consistent);
+        assert_eq!(a.peak_cores_used, 6);
+        assert_eq!(a.peak_gpus_used, 2);
+    }
+
+    #[test]
+    fn ndjson_round_trip_and_outputs() {
+        let text: String = stream()
+            .iter()
+            .map(|e| format!("{}\n", e.to_ndjson()))
+            .collect();
+        let parsed = parse_stream(&text).unwrap();
+        assert_eq!(parsed, stream());
+        let a = analyze(&parsed).unwrap();
+        let rendered = a.render();
+        assert!(rendered.contains("degree of asynchronicity"));
+        assert!(rendered.contains("overlap matrix"));
+        let j = a.to_json();
+        assert_eq!(j.req_f64("degree_of_asynchronicity").unwrap(), 5.0 / 15.0);
+        assert!(a.kinds_csv().starts_with("kind,tasks"));
+        assert!(a.overlap_csv().contains("simulation"));
+    }
+
+    #[test]
+    fn killed_attempts_count_toward_overlap_not_records() {
+        let mut evs = stream();
+        // Inject a kill + retry of uid 0 before its completion.
+        evs.insert(
+            5,
+            ObsEvent::TaskKilled {
+                t: 3.0,
+                uid: 0,
+                slot: 0,
+                local: 0,
+                node: 0,
+                attempt: 1,
+                lost_core_s: 8.0,
+            },
+        );
+        evs.insert(
+            6,
+            ObsEvent::TaskSubmitted {
+                t: 4.0,
+                uid: 0,
+                slot: 0,
+                local: 0,
+                kind: "simulation".into(),
+                cores: 4,
+                gpus: 1,
+                tx: 10.0,
+                attempt: 1,
+            },
+        );
+        evs.insert(
+            7,
+            ObsEvent::TaskStarted {
+                t: 5.0,
+                uid: 0,
+                slot: 0,
+                local: 0,
+                node: 1,
+                cores: 4,
+                gpus: 1,
+            },
+        );
+        let run = replay(&evs).unwrap();
+        // Still 2 final records; the retried task keeps its last start.
+        assert_eq!(run.records.len(), 2);
+        assert_eq!(run.records[0].started, 5.0);
+        assert_eq!(run.kills, 1);
+        assert_eq!(run.retries, 1);
+        // 3 execution attempts: the killed one plus two completions.
+        assert_eq!(run.intervals.len(), 3);
+    }
+
+    #[test]
+    fn streams_without_capacity_are_rejected() {
+        let evs = vec![ObsEvent::CheckpointTaken { t: 1.0 }];
+        assert!(replay(&evs).is_err());
+        assert!(parse_stream("not json\n").is_err());
+    }
+}

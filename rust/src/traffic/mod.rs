@@ -77,12 +77,17 @@ mod report;
 
 pub use report::{TrafficReport, WorkflowStat};
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 use crate::checkpoint::SimSnapshot;
 use crate::ddmd::{ddmd_workflow, DdmdConfig};
 use crate::engine::{Coordinator, EngineConfig, ExecutionMode, RunOutcome};
 use crate::entk::Workflow;
 use crate::error::{Error, Result};
 use crate::failure::FailureSpec;
+use crate::obs::profile::EngineProfile;
+use crate::obs::EventSink;
 use crate::pilot::ResourcePlan;
 use crate::resources::ClusterSpec;
 use crate::sched::Policy;
@@ -445,6 +450,35 @@ pub fn sweep_json(rates: &[f64], reports: &[TrafficReport]) -> Json {
     )
 }
 
+/// Observability attachments for one traffic run: an optional
+/// [`EventSink`] (`--emit-events`) and an optional self-profiling
+/// handle (`--profile`), threaded into the run's [`Coordinator`].
+/// The default attaches nothing and costs nothing.
+///
+/// Sinks are typically shared handles (`Rc<RefCell<FileSink>>` /
+/// `Rc<RefCell<MemSink>>`) so the stream outlives the run — and so one
+/// stream can span every leg of a chained checkpoint/resume run (see
+/// [`run_chained_obs`](crate::failure::cadence::run_chained_obs)).
+#[derive(Default)]
+pub struct TrafficObs {
+    /// Event sink attached to the run's coordinator.
+    pub sink: Option<Box<dyn EventSink>>,
+    /// Self-profiling handle (counters accumulate across the run).
+    pub profile: Option<Rc<RefCell<EngineProfile>>>,
+}
+
+impl TrafficObs {
+    /// Attach `self` to a coordinator (consuming the attachments).
+    fn install(self, coord: &mut Coordinator) {
+        if let Some(sink) = self.sink {
+            coord.set_event_sink(sink);
+        }
+        if let Some(p) = self.profile {
+            coord.set_profile_handle(p);
+        }
+    }
+}
+
 /// How a (possibly preempted) traffic run ended.
 #[derive(Debug)]
 pub enum TrafficOutcome {
@@ -465,6 +499,21 @@ pub fn run_traffic_resumable(
     catalog: &Catalog,
     cluster: &ClusterSpec,
     cfg: &EngineConfig,
+) -> Result<TrafficOutcome> {
+    run_traffic_resumable_obs(spec, catalog, cluster, cfg, TrafficObs::default())
+}
+
+/// [`run_traffic_resumable`] with observability attachments: the sink
+/// receives the run's typed event stream and the profile handle its
+/// wall-clock counters (see [`TrafficObs`]). The attachments never
+/// change the simulation — a run with a sink is bit-identical to one
+/// without.
+pub fn run_traffic_resumable_obs(
+    spec: &TrafficSpec,
+    catalog: &Catalog,
+    cluster: &ClusterSpec,
+    cfg: &EngineConfig,
+    obs: TrafficObs,
 ) -> Result<TrafficOutcome> {
     if !spec.duration.is_finite() || spec.duration <= 0.0 {
         return Err(Error::Config(format!(
@@ -526,6 +575,7 @@ pub fn run_traffic_resumable(
     if let Some(failure) = &spec.failure {
         coord.set_failure_spec(failure.clone())?;
     }
+    obs.install(&mut coord);
     let mut names = Vec::with_capacity(arrivals.len());
     let mut times = Vec::with_capacity(arrivals.len());
     for a in &arrivals {
@@ -605,6 +655,20 @@ impl TrafficCheckpoint {
         plan: Option<ResourcePlan>,
         checkpoint_at: Option<f64>,
     ) -> Result<TrafficOutcome> {
+        self.resume_until_obs(plan, checkpoint_at, TrafficObs::default())
+    }
+
+    /// [`resume_until`](Self::resume_until) with observability
+    /// attachments. The event stream is derived state and never part of
+    /// the checkpoint, so the caller re-attaches a sink per leg —
+    /// typically the *same* shared handle, making the concatenated
+    /// stream across legs equal the uninterrupted run's stream.
+    pub fn resume_until_obs(
+        self,
+        plan: Option<ResourcePlan>,
+        checkpoint_at: Option<f64>,
+        obs: TrafficObs,
+    ) -> Result<TrafficOutcome> {
         let TrafficCheckpoint { arrival_window, names, arrivals, sim } = self;
         if names.len() != sim.n_members || arrivals.len() != sim.n_members {
             return Err(Error::Config(format!(
@@ -619,6 +683,7 @@ impl TrafficCheckpoint {
         if let Some(p) = plan {
             coord.set_resource_plan(p)?;
         }
+        obs.install(&mut coord);
         let mut ex = VirtualExecutor::new();
         match coord.run_until(&mut ex, checkpoint_at)? {
             RunOutcome::Completed(members) => Ok(TrafficOutcome::Completed(Box::new(

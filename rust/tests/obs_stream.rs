@@ -1,0 +1,335 @@
+//! Bit-identity property tests for the typed event stream (`obs`).
+//!
+//! The determinism contract under test:
+//!
+//! 1. **Wake-policy independence** — events hook state transitions,
+//!    never loop iterations, so [`WakePolicy::Calendar`] and
+//!    [`WakePolicy::FullScan`] (wildly different driver-wake counts)
+//!    must render byte-identical NDJSON for the same seed, and reruns
+//!    must too.
+//! 2. **Resume concatenation** — the stream is derived state, never
+//!    snapshotted: the pre-checkpoint prefix (seam marker stripped)
+//!    plus the resumed run's stream equals the uninterrupted stream,
+//!    even when the resume runs under the *opposite* wake policy.
+//! 3. **Failure-lane accounting** — under stochastic faults the stream
+//!    stays deterministic and internally consistent: every kill is a
+//!    fault victim, schedules a retry, and resubmits.
+//! 4. **Chained runs** — one shared sink spans every leg of a
+//!    `--checkpoint-every` chain; markers stripped, the stream equals
+//!    the uninterrupted run's, and the shared profile's lane counters
+//!    equal the event counts.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use asyncflow::dag::Dag;
+use asyncflow::engine::{Coordinator, EngineConfig, ExecutionMode, RunOutcome, WakePolicy};
+use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::failure::cadence::run_chained_obs;
+use asyncflow::failure::{FailureSpec, RetryPolicy};
+use asyncflow::obs::profile::EngineProfile;
+use asyncflow::obs::{strip_checkpoint_markers, MemSink, ObsEvent};
+use asyncflow::pilot::{AutoscalePolicy, Policy, ResourcePlan};
+use asyncflow::resources::{ClusterSpec, ResourceRequest};
+use asyncflow::sim::VirtualExecutor;
+use asyncflow::task::TaskSetSpec;
+use asyncflow::traffic::{
+    run_traffic_resumable_obs, ArrivalProcess, Catalog, TrafficObs, TrafficOutcome,
+    TrafficReport, TrafficSpec, WorkloadMix,
+};
+use asyncflow::util::rng::Rng;
+use asyncflow::workflows::random_workflow;
+
+/// Build the seed's scenario from scratch (the `tests/loop_equiv.rs`
+/// matrix): random workflows, arrivals, scheduling policy, and — for
+/// most seeds — an elastic plan with an optional autoscaler, so the
+/// resize/autoscale event lanes are load-bearing too.
+fn coordinator_for(seed: u64, wake: WakePolicy) -> Coordinator {
+    let mut rng = Rng::new(seed);
+    let policy = [Policy::FifoBackfill, Policy::WeightedFair, Policy::Backfill]
+        [rng.below(3) as usize];
+    let cfg = EngineConfig { policy, seed: seed ^ 0x5eed, ..EngineConfig::default() };
+    let cluster = ClusterSpec::uniform("t", 3, 8, 2);
+    let mut coord = Coordinator::new(&cluster, &cfg);
+    coord.set_wake_policy(wake);
+    let n = 2 + rng.below(5) as usize;
+    for _ in 0..n {
+        let wf = random_workflow(&mut rng, 3, 3);
+        let mode = if rng.f64() < 0.5 {
+            ExecutionMode::Asynchronous
+        } else {
+            ExecutionMode::Sequential
+        };
+        let arrival = rng.f64() * 120.0;
+        coord.add_workflow(wf, mode, arrival).unwrap();
+    }
+    if rng.f64() < 0.6 {
+        let mut plan = ResourcePlan::new()
+            .resize(20.0 + rng.f64() * 40.0, 1)
+            .resize(80.0 + rng.f64() * 40.0, -1);
+        if rng.f64() < 0.5 {
+            plan = plan.with_autoscale(AutoscalePolicy {
+                interval: 10.0,
+                min_nodes: 2,
+                max_nodes: 5,
+                step: 1,
+                ..Default::default()
+            });
+        }
+        coord.set_resource_plan(plan).unwrap();
+    }
+    coord
+}
+
+/// Attach a shared in-memory sink and hand back the keeper handle.
+fn attach(coord: &mut Coordinator) -> Rc<RefCell<MemSink>> {
+    let sink = Rc::new(RefCell::new(MemSink::new()));
+    coord.set_event_sink(Box::new(Rc::clone(&sink)));
+    sink
+}
+
+/// The full event stream of the seed's scenario run to completion.
+fn events_of(seed: u64, wake: WakePolicy) -> Vec<ObsEvent> {
+    let mut coord = coordinator_for(seed, wake);
+    let sink = attach(&mut coord);
+    let mut ex = VirtualExecutor::new();
+    coord.run(&mut ex).unwrap();
+    let events = sink.borrow().events.clone();
+    events
+}
+
+fn ndjson(events: &[ObsEvent]) -> String {
+    events.iter().map(|e| e.to_ndjson() + "\n").collect()
+}
+
+fn n_of(events: &[ObsEvent], tag: &str) -> usize {
+    events.iter().filter(|e| e.tag() == tag).count()
+}
+
+#[test]
+fn stream_is_bit_identical_across_wake_policies_and_reruns() {
+    for seed in 0..16u64 {
+        let scan = events_of(seed, WakePolicy::FullScan);
+        let cal = events_of(seed, WakePolicy::Calendar);
+        assert!(
+            matches!(scan.first(), Some(ObsEvent::CapacityOffered { t, .. }) if *t == 0.0),
+            "seed {seed}: the stream must open with the initial offered capacity"
+        );
+        assert_eq!(
+            ndjson(&scan),
+            ndjson(&cal),
+            "seed {seed}: FullScan and Calendar must render identical NDJSON"
+        );
+        assert_eq!(
+            cal,
+            events_of(seed, WakePolicy::Calendar),
+            "seed {seed}: rerunning the same seed must replay the same stream"
+        );
+        // Structural sanity on a completed failure-free run: everything
+        // that arrived completed, and every submission ran exactly once.
+        assert_eq!(
+            n_of(&scan, "workflow_arrived"),
+            n_of(&scan, "workflow_completed"),
+            "seed {seed}: arrivals vs workflow completions"
+        );
+        assert_eq!(
+            n_of(&scan, "task_submitted"),
+            n_of(&scan, "task_completed"),
+            "seed {seed}: submissions vs completions"
+        );
+        assert_eq!(
+            n_of(&scan, "task_started"),
+            n_of(&scan, "task_completed"),
+            "seed {seed}: starts vs completions"
+        );
+    }
+}
+
+#[test]
+fn resume_concatenation_equals_uninterrupted_stream() {
+    let t_ck = 40.0;
+    let mut checkpointed = 0;
+    for seed in 0..16u64 {
+        let full = events_of(seed, WakePolicy::Calendar);
+        let mut coord = coordinator_for(seed, WakePolicy::Calendar);
+        let pre = attach(&mut coord);
+        let mut ex = VirtualExecutor::new();
+        let snap = match coord.run_until(&mut ex, Some(t_ck)).unwrap() {
+            RunOutcome::Checkpointed(s) => s,
+            // Every workflow of this seed drained before t_ck — the
+            // completed-run property above already covers it.
+            RunOutcome::Completed(_) => continue,
+        };
+        checkpointed += 1;
+        let prefix = pre.borrow().events.clone();
+        assert!(
+            matches!(prefix.last(), Some(ObsEvent::CheckpointTaken { .. })),
+            "seed {seed}: the prefix must end with the seam marker"
+        );
+        // Resume under the opposite wake policy: the stream must not
+        // care how the loop wakes. A resumed run emits no fresh
+        // initial-capacity point — the prefix already carries it.
+        let mut coord = Coordinator::restore(*snap).unwrap();
+        coord.set_wake_policy(WakePolicy::FullScan);
+        let post = attach(&mut coord);
+        let mut ex = VirtualExecutor::new();
+        coord.run(&mut ex).unwrap();
+        let mut joined = strip_checkpoint_markers(&prefix);
+        joined.extend(post.borrow().events.iter().cloned());
+        assert_eq!(
+            ndjson(&joined),
+            ndjson(&full),
+            "seed {seed}: prefix + resumed stream must equal the uninterrupted one"
+        );
+        assert_eq!(joined, full, "seed {seed}: typed events agree too");
+    }
+    assert!(checkpointed >= 4, "too few scenarios reached t = {t_ck}: {checkpointed}");
+}
+
+/// Single-task workflow: 1 core for `tx` seconds, deterministic.
+fn solo(tx: f64) -> Workflow {
+    let mut dag = Dag::new();
+    dag.add_node("A");
+    Workflow {
+        name: "solo".into(),
+        sets: vec![TaskSetSpec::new("A", 1, ResourceRequest::new(1, 0), tx).with_sigma(0.0)],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0])],
+        asynchronous: vec![Pipeline::new("a").stage(&[0])],
+    }
+}
+
+fn catalog(tx: f64) -> Catalog {
+    Catalog::new().insert("solo", solo(tx))
+}
+
+/// Poisson traffic over a shrinking allocation with MTBF faults and
+/// unlimited retries (the `tests/resilience.rs` scenario shape).
+fn faulty_spec(seed: u64) -> TrafficSpec {
+    TrafficSpec {
+        process: ArrivalProcess::Poisson { rate: 1.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 30.0,
+        max_workflows: 100_000,
+        seed,
+        plan: Some(ResourcePlan::new().resize(15.0, -1)),
+        checkpoint_at: None,
+        policy: None,
+        failure: Some(FailureSpec {
+            retry: RetryPolicy { max_attempts: 0, base: 2.0, factor: 2.0, jitter: 0.25 },
+            ..FailureSpec::mtbf(8.0)
+        }),
+    }
+}
+
+/// Run the spec to completion with a memory sink attached.
+fn traffic_events(spec: &TrafficSpec) -> (TrafficReport, Vec<ObsEvent>) {
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let sink = Rc::new(RefCell::new(MemSink::new()));
+    let obs = TrafficObs { sink: Some(Box::new(Rc::clone(&sink))), profile: None };
+    let outcome =
+        run_traffic_resumable_obs(spec, &catalog(4.0), &cluster, &EngineConfig::ideal(), obs)
+            .unwrap();
+    let TrafficOutcome::Completed(rep) = outcome else {
+        panic!("spec has no checkpoint time, the run must complete")
+    };
+    let events = sink.borrow().events.clone();
+    (*rep, events)
+}
+
+#[test]
+fn failure_lane_stream_is_deterministic_and_accounted() {
+    let mut total_kills = 0;
+    for seed in 1..=3u64 {
+        let spec = faulty_spec(seed);
+        let (rep, events) = traffic_events(&spec);
+        let (rep2, events2) = traffic_events(&spec);
+        assert_eq!(rep, rep2, "seed {seed}: reports must be identical across reruns");
+        assert_eq!(events, events2, "seed {seed}: streams must be identical across reruns");
+
+        let kills = n_of(&events, "task_killed");
+        let victims: usize = events
+            .iter()
+            .map(|e| match e {
+                ObsEvent::NodeFault { victims, .. } => *victims,
+                _ => 0,
+            })
+            .sum();
+        let resubmits = events
+            .iter()
+            .filter(|e| matches!(e, ObsEvent::TaskSubmitted { attempt, .. } if *attempt > 0))
+            .count();
+        let first_submits = events
+            .iter()
+            .filter(|e| matches!(e, ObsEvent::TaskSubmitted { attempt: 0, .. }))
+            .count();
+        assert_eq!(victims, kills, "seed {seed}: every kill is some fault's victim");
+        assert_eq!(
+            n_of(&events, "retry_scheduled"),
+            kills,
+            "seed {seed}: unlimited retries back off every kill"
+        );
+        assert_eq!(resubmits, kills, "seed {seed}: every backoff resubmits");
+        assert_eq!(n_of(&events, "retries_exhausted"), 0, "seed {seed}: nothing exhausts");
+        assert_eq!(
+            first_submits,
+            n_of(&events, "task_completed"),
+            "seed {seed}: unlimited retries drop nothing"
+        );
+        assert_eq!(n_of(&events, "resize"), 1, "seed {seed}: the planned drain applies once");
+        total_kills += kills;
+    }
+    assert!(total_kills > 0, "mtbf 8 s over 30 s x 3 seeds must kill something");
+}
+
+#[test]
+fn chained_stream_and_profile_match_the_uninterrupted_run() {
+    let spec = faulty_spec(2);
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let cfg = EngineConfig::ideal();
+    let (straight_rep, straight) = traffic_events(&spec);
+
+    // One shared sink and one shared profile span every leg.
+    let shared = Rc::new(RefCell::new(MemSink::new()));
+    let profile = Rc::new(RefCell::new(EngineProfile::new()));
+    let leg = || TrafficObs {
+        sink: Some(Box::new(Rc::clone(&shared))),
+        profile: Some(Rc::clone(&profile)),
+    };
+    let (chained_rep, legs) =
+        run_chained_obs(&spec, &catalog(4.0), &cluster, &cfg, 7.0, leg).unwrap();
+    assert!(legs >= 2, "a 7 s cadence over a ~30 s run must take several legs, got {legs}");
+    assert_eq!(chained_rep, straight_rep, "chained report == uninterrupted report");
+
+    let events = shared.borrow().events.clone();
+    assert_eq!(n_of(&events, "checkpoint"), legs, "one seam marker per leg");
+    assert_eq!(
+        strip_checkpoint_markers(&events),
+        straight,
+        "markers stripped, the chained stream equals the uninterrupted one"
+    );
+
+    // The shared profile accumulated across every leg: lane counters
+    // must equal the event counts of the whole run.
+    let p = profile.borrow();
+    assert_eq!(p.checkpoints, legs as u64, "checkpoint lane");
+    assert_eq!(p.arrivals, n_of(&events, "workflow_arrived") as u64, "arrival lane");
+    assert_eq!(p.completions, n_of(&events, "task_completed") as u64, "drain lane");
+    assert_eq!(p.tasks_started, n_of(&events, "task_started") as u64, "launch flow");
+    assert_eq!(p.faults, n_of(&events, "node_fault") as u64, "failure lane");
+    let resubmits = events
+        .iter()
+        .filter(|e| matches!(e, ObsEvent::TaskSubmitted { attempt, .. } if *attempt > 0))
+        .count();
+    assert_eq!(p.retries_resubmitted, resubmits as u64, "retry lane");
+    assert_eq!(
+        p.submissions + p.retries_resubmitted,
+        n_of(&events, "task_submitted") as u64,
+        "every submission event is a first submission or a retry"
+    );
+    assert!(p.loop_iterations > 0 && p.driver_wakes > 0, "loop accounting moved");
+    assert!(
+        p.sched_rounds.count() > 0 && p.drain_rounds.count() > 0,
+        "hot-round histograms sampled"
+    );
+}

@@ -1,0 +1,245 @@
+//! Trace-analyzer reconstruction tests: [`asyncflow::obs::trace::analyze`]
+//! over a live event stream must reproduce the run's own
+//! [`TrafficReport`] figures **bit for bit** — utilization integrated
+//! against the events-only capacity timeline, and the per-workflow
+//! wait/TTX distributions — while the overlap sweep stays internally
+//! consistent (symmetric matrix, bounded degree of asynchronicity,
+//! usage never exceeding offered capacity).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use asyncflow::dag::Dag;
+use asyncflow::engine::EngineConfig;
+use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::failure::cadence::run_chained_obs;
+use asyncflow::failure::{FailureSpec, RetryPolicy};
+use asyncflow::obs::trace::{analyze, parse_stream, TraceAnalysis};
+use asyncflow::obs::{MemSink, ObsEvent};
+use asyncflow::pilot::ResourcePlan;
+use asyncflow::resources::{ClusterSpec, ResourceRequest};
+use asyncflow::task::{TaskKind, TaskSetSpec};
+use asyncflow::traffic::{
+    run_traffic_resumable_obs, ArrivalProcess, Catalog, TrafficObs, TrafficOutcome,
+    TrafficReport, TrafficSpec, WorkloadMix,
+};
+use asyncflow::util::stats::Summary;
+
+/// Two-kind chain: four "simulation" tasks (GPU-bound) feeding one
+/// "training" task, so both utilization figures and the cross-kind
+/// overlap matrix are non-trivial.
+fn chain() -> Workflow {
+    let mut dag = Dag::new();
+    let a = dag.add_node("sim");
+    let b = dag.add_node("train");
+    dag.add_edge(a, b).unwrap();
+    Workflow {
+        name: "chain".into(),
+        sets: vec![
+            TaskSetSpec::new("sim", 4, ResourceRequest::new(2, 1), 20.0)
+                .with_sigma(0.1)
+                .with_kind(TaskKind::MdSimulation { chunks: 1 }),
+            TaskSetSpec::new("train", 1, ResourceRequest::new(4, 0), 10.0)
+                .with_sigma(0.1)
+                .with_kind(TaskKind::Training { steps: 1 }),
+        ],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0]).stage(&[1])],
+        asynchronous: vec![Pipeline::new("p").stage(&[0]).stage(&[1])],
+    }
+}
+
+/// Single-task workflow: 1 core for `tx` seconds, deterministic.
+fn solo(tx: f64) -> Workflow {
+    let mut dag = Dag::new();
+    dag.add_node("A");
+    Workflow {
+        name: "solo".into(),
+        sets: vec![TaskSetSpec::new("A", 1, ResourceRequest::new(1, 0), tx).with_sigma(0.0)],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0])],
+        asynchronous: vec![Pipeline::new("a").stage(&[0])],
+    }
+}
+
+/// Run `spec` to completion with a memory sink attached.
+fn run_with_stream(
+    spec: &TrafficSpec,
+    cat: &Catalog,
+    cluster: &ClusterSpec,
+) -> (TrafficReport, Vec<ObsEvent>) {
+    let sink = Rc::new(RefCell::new(MemSink::new()));
+    let obs = TrafficObs { sink: Some(Box::new(Rc::clone(&sink))), profile: None };
+    let outcome =
+        run_traffic_resumable_obs(spec, cat, cluster, &EngineConfig::ideal(), obs).unwrap();
+    let TrafficOutcome::Completed(rep) = outcome else {
+        panic!("spec has no checkpoint time, the run must complete")
+    };
+    let events = sink.borrow().events.clone();
+    (*rep, events)
+}
+
+fn assert_summary_bits(got: Option<&Summary>, want: &Summary, what: &str) {
+    let got = got.unwrap_or_else(|| panic!("{what}: analyzer produced no summary"));
+    assert_eq!(got.n, want.n, "{what}: n");
+    for (g, w, field) in [
+        (got.mean, want.mean, "mean"),
+        (got.std, want.std, "std"),
+        (got.min, want.min, "min"),
+        (got.max, want.max, "max"),
+        (got.p50, want.p50, "p50"),
+        (got.p95, want.p95, "p95"),
+        (got.p99, want.p99, "p99"),
+    ] {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: {field}");
+    }
+}
+
+/// The bit-equality core shared by every scenario below.
+fn assert_reconstructs(a: &TraceAnalysis, rep: &TrafficReport, what: &str) {
+    assert_eq!(
+        a.cpu_utilization.to_bits(),
+        rep.cpu_utilization.to_bits(),
+        "{what}: cpu utilization"
+    );
+    assert_eq!(
+        a.gpu_utilization.to_bits(),
+        rep.gpu_utilization.to_bits(),
+        "{what}: gpu utilization"
+    );
+    assert_summary_bits(a.wait.as_ref(), &rep.wait, &format!("{what}: wait"));
+    assert_summary_bits(a.ttx.as_ref(), &rep.ttx, &format!("{what}: ttx"));
+    assert_eq!(a.n_workflows, rep.workflows.len(), "{what}: workflow count");
+    assert_eq!(a.n_tasks, rep.total_tasks, "{what}: task count");
+    let last_finish = rep.workflows.iter().map(|w| w.finish).fold(0.0f64, f64::max);
+    assert_eq!(a.makespan.to_bits(), last_finish.to_bits(), "{what}: last finish");
+    assert_eq!(
+        a.final_capacity,
+        rep.capacity.final_capacity(),
+        "{what}: final offered capacity"
+    );
+    assert!(a.capacity_consistent, "{what}: usage must stay within offered capacity");
+    assert!(
+        (0.0..=1.0).contains(&a.degree_of_asynchronicity),
+        "{what}: DOA {} out of range",
+        a.degree_of_asynchronicity
+    );
+    assert!(
+        a.multi_active_s <= a.any_active_s + 1e-9,
+        "{what}: multi-kind time cannot exceed any-active time"
+    );
+}
+
+#[test]
+fn analyzer_reconstructs_live_traffic_report_bit_for_bit() {
+    let cat = Catalog::new().insert("chain", chain());
+    let cluster = ClusterSpec::uniform("t", 3, 8, 2);
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Poisson { rate: 0.5 },
+        mix: WorkloadMix::parse("chain").unwrap(),
+        duration: 40.0,
+        max_workflows: 100_000,
+        seed: 7,
+        plan: None,
+        checkpoint_at: None,
+        policy: None,
+        failure: None,
+    };
+    let (rep, events) = run_with_stream(&spec, &cat, &cluster);
+    let a = analyze(&events).unwrap();
+    assert_reconstructs(&a, &rep, "chain traffic");
+
+    // Kind decomposition: labels sorted, per-kind task counts exact.
+    let n_wf = rep.workflows.len();
+    assert_eq!(a.kinds.len(), 2, "two task kinds");
+    assert_eq!(a.kinds[0].kind, "simulation");
+    assert_eq!(a.kinds[1].kind, "training");
+    assert_eq!(a.kinds[0].tasks, 4 * n_wf, "four simulation tasks per workflow");
+    assert_eq!(a.kinds[1].tasks, n_wf, "one training task per workflow");
+
+    // Overlap matrix: symmetric, diagonal = the kind's active seconds.
+    for i in 0..a.kinds.len() {
+        assert_eq!(
+            a.overlap[i][i].to_bits(),
+            a.kinds[i].active_s.to_bits(),
+            "diagonal {i}"
+        );
+        for j in 0..a.kinds.len() {
+            assert_eq!(
+                a.overlap[i][j].to_bits(),
+                a.overlap[j][i].to_bits(),
+                "symmetry {i},{j}"
+            );
+        }
+    }
+
+    // The stream survives its wire format: parse(render) is identity,
+    // and the analysis of the parsed stream is bit-identical.
+    let text: String = events.iter().map(|e| e.to_ndjson() + "\n").collect();
+    let parsed = parse_stream(&text).unwrap();
+    assert_eq!(parsed, events, "NDJSON round-trip");
+    let b = analyze(&parsed).unwrap();
+    assert_eq!(b.cpu_utilization.to_bits(), a.cpu_utilization.to_bits());
+    assert_eq!(b.any_active_s.to_bits(), a.any_active_s.to_bits());
+    assert_eq!(b.degree_of_asynchronicity.to_bits(), a.degree_of_asynchronicity.to_bits());
+}
+
+/// Poisson traffic over a shrinking allocation with MTBF faults and
+/// unlimited retries: the reconstruction must hold when records carry
+/// retried attempts and the capacity timeline steps downward mid-run.
+fn faulty_spec(seed: u64) -> TrafficSpec {
+    TrafficSpec {
+        process: ArrivalProcess::Poisson { rate: 1.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 30.0,
+        max_workflows: 100_000,
+        seed,
+        plan: Some(ResourcePlan::new().resize(15.0, -1)),
+        checkpoint_at: None,
+        policy: None,
+        failure: Some(FailureSpec {
+            retry: RetryPolicy { max_attempts: 0, base: 2.0, factor: 2.0, jitter: 0.25 },
+            ..FailureSpec::mtbf(8.0)
+        }),
+    }
+}
+
+#[test]
+fn failure_and_elastic_runs_reconstruct_bit_equal() {
+    let cat = Catalog::new().insert("solo", solo(4.0));
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let mut total_kills = 0;
+    for seed in 1..=3u64 {
+        let spec = faulty_spec(seed);
+        let (rep, events) = run_with_stream(&spec, &cat, &cluster);
+        let a = analyze(&events).unwrap();
+        assert_reconstructs(&a, &rep, &format!("faulty seed {seed}"));
+        assert_eq!(a.kinds.len(), 1, "seed {seed}: one kind");
+        assert_eq!(a.kinds[0].kind, "stress", "seed {seed}");
+        assert_eq!(a.kills, a.retries, "seed {seed}: every kill retried (unlimited budget)");
+        total_kills += a.kills;
+    }
+    assert!(total_kills > 0, "mtbf 8 s over 30 s x 3 seeds must kill something");
+}
+
+#[test]
+fn chained_stream_analysis_matches_the_chained_report() {
+    let cat = Catalog::new().insert("solo", solo(4.0));
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let cfg = EngineConfig::ideal();
+    let spec = faulty_spec(3);
+    let shared = Rc::new(RefCell::new(MemSink::new()));
+    let leg = || TrafficObs {
+        sink: Some(Box::new(Rc::clone(&shared))),
+        profile: None,
+    };
+    let (rep, legs) = run_chained_obs(&spec, &cat, &cluster, &cfg, 7.0, leg).unwrap();
+    assert!(legs >= 2, "a 7 s cadence over a ~30 s run must take several legs, got {legs}");
+    // Analyze the raw multi-leg stream, seam markers and all: the
+    // replay treats them as annotations, so the reconstruction still
+    // matches the (bit-identical-to-uninterrupted) chained report.
+    let events = shared.borrow().events.clone();
+    let a = analyze(&events).unwrap();
+    assert_reconstructs(&a, &rep, "chained run");
+    assert_eq!(a.checkpoints, legs, "one seam marker per leg");
+}
