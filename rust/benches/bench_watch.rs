@@ -1,0 +1,172 @@
+//! Watch-pipeline throughput: incremental NDJSON tailing
+//! ([`TailParser`]), sliding-window rollups ([`WindowStats`]), and the
+//! replay → headline reconstruction, each driven over the same
+//! recorded traffic stream.
+//!
+//! `cargo bench --bench bench_watch` — flags after `--`:
+//!   `--n N`       workflows to stream (default 1000)
+//!   `--window S`  rollup window in sim-seconds (default 300)
+//!   `--smoke`     CI mode: tiny stream, one timed iteration
+//!   `--json PATH` write the machine-readable result
+//!
+//! Every stage is a pure function of the stream, so besides the
+//! timings this asserts determinism: the dashboard frame and the
+//! headline render must hash identically across iterations.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use asyncflow::dag::Dag;
+use asyncflow::engine::EngineConfig;
+use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::obs::tail::TailParser;
+use asyncflow::obs::trace::replay;
+use asyncflow::obs::watch::{headline, render_frame};
+use asyncflow::obs::window::WindowStats;
+use asyncflow::obs::{MemSink, ObsEvent};
+use asyncflow::resources::{ClusterSpec, ResourceRequest};
+use asyncflow::task::TaskSetSpec;
+use asyncflow::traffic::{
+    run_traffic_resumable_obs, ArrivalProcess, Catalog, TrafficObs, TrafficOutcome,
+    TrafficSpec, WorkloadMix,
+};
+use asyncflow::util::bench::{bench, report, report_header, BenchResult};
+use asyncflow::util::cli::Args;
+use asyncflow::util::json::{obj, Json};
+
+/// Two-stage chain (4 + 1 tasks): the `bench_obs` workload, so the
+/// stream shape matches the emission-overhead bench it rides beside.
+fn chain() -> Workflow {
+    let mut dag = Dag::new();
+    let a = dag.add_node("A");
+    let b = dag.add_node("B");
+    dag.add_edge(a, b).unwrap();
+    Workflow {
+        name: "chain".into(),
+        sets: vec![
+            TaskSetSpec::new("A", 4, ResourceRequest::new(2, 0), 20.0).with_sigma(0.05),
+            TaskSetSpec::new("B", 1, ResourceRequest::new(4, 0), 10.0).with_sigma(0.05),
+        ],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0]).stage(&[1])],
+        asynchronous: vec![Pipeline::new("p").stage(&[0]).stage(&[1])],
+    }
+}
+
+fn fnv(bytes: &[u8]) -> u64 {
+    let mut d = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        d = (d ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+    }
+    d
+}
+
+fn main() {
+    let args = Args::from_env(&["smoke"]).unwrap();
+    let smoke = args.flag("smoke");
+    let default_n = if smoke { 200 } else { 1_000 };
+    let n = args.get_usize("n", default_n).unwrap();
+    let window = args.get_f64("window", 300.0).unwrap();
+    let iters = if smoke { 1 } else { 5 };
+
+    // Record the stream once; the timed stages only consume it.
+    let catalog = Catalog::new().insert("chain", chain());
+    let cluster = ClusterSpec::uniform("bench", 4, 16, 2);
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Poisson { rate: 0.5 },
+        mix: WorkloadMix::parse("chain").unwrap(),
+        duration: 1e9,
+        max_workflows: n,
+        seed: 1,
+        plan: None,
+        checkpoint_at: None,
+        policy: None,
+        failure: None,
+    };
+    let sink = Rc::new(RefCell::new(MemSink::new()));
+    let obs = TrafficObs { sink: Some(Box::new(Rc::clone(&sink))), profile: None };
+    match run_traffic_resumable_obs(&spec, &catalog, &cluster, &EngineConfig::ideal(), obs)
+        .unwrap()
+    {
+        TrafficOutcome::Completed(_) => {}
+        TrafficOutcome::Checkpointed(_) => unreachable!("spec has no checkpoint time"),
+    }
+    let events = sink.borrow().events.clone();
+    let text: String = events.iter().map(|e| e.to_ndjson() + "\n").collect();
+    println!(
+        "bench_watch: {} events / {} KiB over {n} workflows x {iters} iterations ({} mode)",
+        events.len(),
+        text.len() / 1024,
+        if smoke { "smoke" } else { "full" }
+    );
+
+    report_header();
+    // Stage 1: incremental parse in 64 KiB chunks (the follower's read
+    // size), partial trailing lines and all.
+    let mut parsed = 0usize;
+    let tail = bench("tail: 64 KiB chunked NDJSON parse", 1, iters, || {
+        let mut p = TailParser::new();
+        let mut out: Vec<ObsEvent> = Vec::with_capacity(events.len());
+        for chunk in text.as_bytes().chunks(64 * 1024) {
+            p.feed(chunk, &mut out).unwrap();
+        }
+        p.finish(&mut out).unwrap();
+        parsed = out.len();
+    });
+    report(&tail);
+    assert_eq!(parsed, events.len(), "chunked parse must see every event");
+
+    // Stage 2: sliding-window rollups + one frame render.
+    let mut frame_digest = None;
+    let roll = bench("window: rollups + frame render", 1, iters, || {
+        let mut ws = WindowStats::new(window);
+        for ev in &events {
+            ws.push(ev);
+        }
+        let d = fnv(render_frame(&ws, "bench", false).as_bytes());
+        match frame_digest {
+            None => frame_digest = Some(d),
+            Some(prev) => assert_eq!(prev, d, "frame must be deterministic"),
+        }
+    });
+    report(&roll);
+
+    // Stage 3: full replay → headline reconstruction.
+    let mut head_digest = None;
+    let head = bench("headline: replay + reconstruction", 1, iters, || {
+        let run = replay(&events).unwrap();
+        let d = fnv(headline(&run).render().as_bytes());
+        match head_digest {
+            None => head_digest = Some(d),
+            Some(prev) => assert_eq!(prev, d, "headline must be deterministic"),
+        }
+    });
+    report(&head);
+
+    let per_ev = |r: &BenchResult| r.throughput_per_sec(events.len() as f64);
+    println!(
+        "  throughput: tail {:.0} ev/s, window {:.0} ev/s, headline {:.0} ev/s",
+        per_ev(&tail),
+        per_ev(&roll),
+        per_ev(&head),
+    );
+
+    if let Some(path) = args.get("json") {
+        let out = obj([
+            ("bench", Json::Str("bench_watch".into())),
+            ("measured", Json::Bool(true)),
+            ("smoke", Json::Bool(smoke)),
+            ("n_workflows", Json::Num(n as f64)),
+            ("n_events", Json::Num(events.len() as f64)),
+            ("window_s", Json::Num(window)),
+            ("tail_mean_s", Json::Num(tail.secs.mean)),
+            ("window_mean_s", Json::Num(roll.secs.mean)),
+            ("headline_mean_s", Json::Num(head.secs.mean)),
+            ("tail_events_per_s", Json::Num(per_ev(&tail))),
+            ("window_events_per_s", Json::Num(per_ev(&roll))),
+            ("headline_events_per_s", Json::Num(per_ev(&head))),
+        ]);
+        std::fs::write(path, out.to_string_pretty() + "\n").unwrap();
+        println!("  wrote {path}");
+    }
+}

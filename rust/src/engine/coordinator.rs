@@ -913,7 +913,10 @@ impl EngineLoop {
                         // The sink outlives the snapshot (it is derived
                         // state, never captured); push the prefix to its
                         // destination before the loop state is consumed.
-                        self.sink.flush()?;
+                        // Best-effort: file sinks keep the error latched
+                        // for the CLI's final flush, and a stream write
+                        // failure must not abort the snapshot itself.
+                        let _ = self.sink.flush();
                     }
                     if let Some(p) = &self.profile {
                         p.borrow_mut().checkpoints += 1;
@@ -1503,7 +1506,11 @@ impl EngineLoop {
                 self.done[di] = Some(d.into_report(&self.capacity));
             }
         }
-        self.sink.flush()?;
+        // Best-effort: a completed simulation must still fold into its
+        // reports when the stream destination failed. File sinks latch
+        // the error; the CLI's final flush surfaces it (warning +
+        // nonzero exit) after the report prints.
+        let _ = self.sink.flush();
         let n_members = self.done.len();
         let mut reports: Vec<RunReport> = Vec::with_capacity(n_members);
         for slot in self.done {
@@ -1572,17 +1579,18 @@ impl EngineLoop {
             p.borrow_mut().faults += 1;
         }
         let victims = self.agent.kill_node(node);
-        if victims.is_empty() {
-            return Ok(());
-        }
-        // A victimless fault changes no engine state; only faults that
-        // kill work appear on the stream.
+        // Every injected fault that reached a node appears on the
+        // stream — victimless ones too, so a replay's ledger counts
+        // `failures_injected` exactly as the live run does.
         if self.obs {
             self.sink.emit(&ObsEvent::NodeFault {
                 t: now,
                 node,
                 victims: victims.len(),
             });
+        }
+        if victims.is_empty() {
+            return Ok(());
         }
         self.sched_dirty = true; // capacity returned / queue changed
         for (uid, meta) in victims {

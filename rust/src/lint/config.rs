@@ -147,7 +147,9 @@ impl LintConfig {
                 "panic.budget" => {
                     let mut budgets = Vec::new();
                     for it in &items {
-                        let (module, n) = it.split_once(':').ok_or_else(|| {
+                        // Split on the *last* colon so nested module
+                        // scopes (`obs::tail:0`) parse.
+                        let (module, n) = it.rsplit_once(':').ok_or_else(|| {
                             Error::Config(format!(
                                 "lint config line {}: panic.budget entry '{it}' \
                                  must be module:count",
@@ -226,6 +228,16 @@ mod tests {
         assert_eq!(c.panic_budgets, vec![("engine".to_string(), 3), ("sched".to_string(), 0)]);
         // Untouched keys keep their defaults.
         assert!(!c.det001_scope.is_empty());
+    }
+
+    #[test]
+    fn panic_budget_accepts_nested_module_scopes() {
+        let mut c = LintConfig::default();
+        c.apply("panic.budget = obs::tail:0, engine:15\n").unwrap();
+        assert_eq!(
+            c.panic_budgets,
+            vec![("obs::tail".to_string(), 0), ("engine".to_string(), 15)]
+        );
     }
 
     #[test]

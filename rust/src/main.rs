@@ -31,7 +31,9 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 fn main() {
-    let args = match Args::from_env(&["verbose", "ascii", "autoscale", "deny", "profile"]) {
+    let args = match Args::from_env(&[
+        "verbose", "ascii", "autoscale", "deny", "profile", "follow", "once",
+    ]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -55,6 +57,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("resilience") => cmd_resilience(args),
         Some("resume") => cmd_resume(args),
         Some("trace") => cmd_trace(args),
+        Some("watch") => cmd_watch(args),
         Some("lint") => cmd_lint(args),
         _ => {
             println!("{}", HELP);
@@ -162,7 +165,7 @@ subcommands:
   trace    events.ndjson                 asynchronicity analyzer over a
            [--format human|json]         --emit-events stream: replays
            [--out DIR]                   the typed events into per-kind
-                                         concurrency timelines, the
+           [--render DIR]                concurrency timelines, the
                                          pairwise overlap matrix, the
                                          degree of asynchronicity vs the
                                          sequential-stage baseline, and
@@ -171,7 +174,33 @@ subcommands:
                                          purely from the stream. --out
                                          writes trace_analysis.json plus
                                          trace_kinds.csv /
-                                         trace_overlap.csv.
+                                         trace_overlap.csv. --render
+                                         writes self-contained SVGs
+                                         (kind-overlap heatmap, per-kind
+                                         concurrency timelines,
+                                         utilization/backlog strip) and
+                                         a Chrome trace (trace_chrome
+                                         .json, open in Perfetto) —
+                                         byte-identical per seed.
+  watch    events.ndjson                 live terminal dashboard over an
+           [--once] [--window S]         --emit-events stream: tails the
+           [--interval S] [--follow]     file as the producer appends
+                                         (partial trailing lines wait
+                                         for their newline), rolling up
+                                         arrival/start/completion rates,
+                                         backlog + utilization
+                                         sparklines, per-kind
+                                         concurrency, and windowed
+                                         wait/TTX percentiles over a
+                                         trailing --window (default
+                                         300 s) of *simulation* time.
+                                         Repaints every --interval wall
+                                         seconds (default 2). --once
+                                         renders a single plain frame
+                                         plus the exact TrafficReport
+                                         headline reconstructed from the
+                                         stream, then exits — the CI
+                                         form (deterministic bytes).
 
 common options:
   --cluster summit_paper|summit_706|summit_8gpu|local_small
@@ -476,16 +505,31 @@ impl ObsCli {
         }
     }
 
-    /// Flush the stream and print the profile, after the run.
+    /// Flush the stream and print the profile, after the run. A
+    /// latched stream-write error (disk full, deleted directory, ...)
+    /// is surfaced *here*, after the report has printed: the run's
+    /// numbers are still good, but the exit turns nonzero so CI never
+    /// trusts a silently truncated stream.
     fn finish(&self) -> Result<()> {
+        let mut stream_err = None;
         if let (Some(h), Some(p)) = (&self.sink, &self.path) {
-            h.borrow_mut().flush()?;
-            println!("wrote {p} (event stream; analyze with: asyncflow trace {p})");
+            match h.borrow_mut().flush() {
+                Ok(()) => {
+                    println!("wrote {p} (event stream; analyze with: asyncflow trace {p})");
+                }
+                Err(e) => {
+                    eprintln!("warning: event stream '{p}' is incomplete: {e}");
+                    stream_err = Some(Error::Config(format!("--emit-events {p}: {e}")));
+                }
+            }
         }
         if let Some(p) = &self.profile {
             print!("{}", p.borrow().render());
         }
-        Ok(())
+        match stream_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
@@ -847,7 +891,9 @@ fn cmd_resume(args: &Args) -> Result<()> {
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
-    use asyncflow::obs::trace::{analyze, parse_stream};
+    use asyncflow::metrics::chrome_trace_records;
+    use asyncflow::obs::render::{kind_timeline_svg, overlap_heatmap_svg, util_backlog_svg};
+    use asyncflow::obs::trace::{analyze_replayed, parse_stream, replay};
     let path = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
         Error::Config(
             "trace: expected an event stream (asyncflow trace events.ndjson)".into(),
@@ -856,7 +902,8 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let src = std::fs::read_to_string(path)
         .map_err(|e| Error::Config(format!("trace: cannot read '{path}': {e}")))?;
     let events = parse_stream(&src)?;
-    let analysis = analyze(&events)?;
+    let run = replay(&events)?;
+    let analysis = analyze_replayed(&run)?;
     match args.get_or("format", "human") {
         "human" => print!("{}", analysis.render()),
         "json" => println!("{}", analysis.to_json().to_string_pretty()),
@@ -877,6 +924,58 @@ fn cmd_trace(args: &Args) -> Result<()> {
         std::fs::write(&op, analysis.overlap_csv())?;
         println!("wrote {}, {}, {}", jp.display(), kp.display(), op.display());
     }
+    // --render DIR: deterministic SVG figures + a Chrome trace, all
+    // reconstructed purely from the stream (byte-identical per seed).
+    if let Some(dir) = args.get("render") {
+        std::fs::create_dir_all(dir)?;
+        let base = std::path::Path::new(dir);
+        let hp = base.join("trace_overlap.svg");
+        std::fs::write(&hp, overlap_heatmap_svg(&analysis))?;
+        let kp = base.join("trace_kinds.svg");
+        std::fs::write(&kp, kind_timeline_svg(&run))?;
+        let up = base.join("trace_util.svg");
+        std::fs::write(&up, util_backlog_svg(&run))?;
+        let cp = base.join("trace_chrome.json");
+        std::fs::write(&cp, chrome_trace_records(&run.records, "slot"))?;
+        println!(
+            "wrote {}, {}, {}, {}",
+            hp.display(),
+            kp.display(),
+            up.display(),
+            cp.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_watch(args: &Args) -> Result<()> {
+    use asyncflow::obs::tail::TailParser;
+    use asyncflow::obs::watch::{follow, watch_once};
+    let path = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
+        Error::Config(
+            "watch: expected an event stream (asyncflow watch events.ndjson [--once])"
+                .into(),
+        )
+    })?;
+    let window = args.get_f64("window", 300.0)?;
+    if !args.flag("once") {
+        // Live mode (the default; --follow spells it out): tail the
+        // growing file and repaint every --interval wall seconds.
+        let interval = args.get_f64("interval", 2.0)?;
+        return follow(std::path::Path::new(path), window, interval, None);
+    }
+    // --once: one plain frame + headline, then exit — the CI form.
+    // Reading through the tail parser tolerates a mid-write trailing
+    // line, so `watch --once` is safe against a live stream too.
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::Config(format!("watch: cannot read '{path}': {e}")))?;
+    let mut events = Vec::new();
+    let mut parser = TailParser::new();
+    parser.feed(&bytes, &mut events)?;
+    if let Err(e) = parser.finish(&mut events) {
+        eprintln!("warning: ignoring truncated trailing line: {e}");
+    }
+    print!("{}", watch_once(&events, path, window));
     Ok(())
 }
 

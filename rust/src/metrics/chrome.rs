@@ -3,6 +3,7 @@
 //! complete event — the interactive equivalent of the paper's Figs 4–6.
 
 use crate::engine::RunReport;
+use crate::metrics::TaskRecord;
 use crate::util::json::{obj, Json};
 
 /// Serialize a run as a Chrome trace (JSON array format).
@@ -10,8 +11,17 @@ use crate::util::json::{obj, Json};
 /// Times are exported in microseconds (trace-viewer convention) with
 /// 1 paper-second = 1 us so makespans stay readable.
 pub fn chrome_trace(rep: &RunReport) -> String {
-    let mut events = Vec::with_capacity(rep.records.len() + 8);
-    for r in &rep.records {
+    chrome_trace_records(&rep.records, "pipeline")
+}
+
+/// [`chrome_trace`] over bare records: the live report's records and a
+/// replayed stream's (`obs::trace::replay`) export identically, so a
+/// Chrome trace can be produced from any recorded NDJSON stream —
+/// `lane_label` names what `tid` groups by (`"pipeline"` live,
+/// `"slot"` replayed).
+pub fn chrome_trace_records(records: &[TaskRecord], lane_label: &str) -> String {
+    let mut events = Vec::with_capacity(records.len() + 8);
+    for r in records {
         events.push(obj([
             ("name", Json::from(format!("{}[{}]", r.set_name, r.uid))),
             ("cat", Json::from(r.set_name.clone())),
@@ -31,15 +41,15 @@ pub fn chrome_trace(rep: &RunReport) -> String {
             ),
         ]));
     }
-    // Thread name metadata per pipeline.
-    let max_pipe = rep.records.iter().map(|r| r.pipeline).max().unwrap_or(0);
+    // Thread name metadata per lane.
+    let max_pipe = records.iter().map(|r| r.pipeline).max().unwrap_or(0);
     for p in 0..=max_pipe {
         events.push(obj([
             ("name", Json::from("thread_name")),
             ("ph", Json::from("M")),
             ("pid", Json::from(0usize)),
             ("tid", Json::from(p)),
-            ("args", obj([("name", Json::from(format!("pipeline {p}")))])),
+            ("args", obj([("name", Json::from(format!("{lane_label} {p}")))])),
         ]));
     }
     Json::Arr(events).to_string()

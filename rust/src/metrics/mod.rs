@@ -5,7 +5,7 @@ mod chrome;
 mod plot;
 mod report;
 
-pub use chrome::chrome_trace;
+pub use chrome::{chrome_trace, chrome_trace_records};
 pub use plot::ascii_timeline;
 pub use report::{per_set_summaries, report_to_json, SetSummary};
 

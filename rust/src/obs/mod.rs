@@ -9,8 +9,9 @@
 //!
 //! - [`ObsEvent`]: one typed variant per engine occurrence (workflow
 //!   arrival, task submit/start/complete, node fault, kill, retry,
-//!   resize, autoscale decision, checkpoint), each carrying sim-time and
-//!   the relevant uids/shape/node.
+//!   resize, autoscale decision, checkpoint — plus the traffic layer's
+//!   one-shot stream header), each carrying sim-time and the relevant
+//!   uids/shape/node.
 //! - [`EventSink`]: where events go. The default [`NullSink`] is a
 //!   disabled sink the engine skips with one branch (zero cost);
 //!   [`FileSink`] buffers NDJSON lines to disk (`--emit-events PATH`);
@@ -47,7 +48,11 @@
 //! excluded from that equality).
 
 pub mod profile;
+pub mod render;
+pub mod tail;
 pub mod trace;
+pub mod watch;
+pub mod window;
 
 use std::cell::RefCell;
 use std::fmt::Write as _;
@@ -66,6 +71,25 @@ use crate::util::json::{from_u64, obj, FromJson, Json, ToJson};
 /// `RunReport` records).
 #[derive(Debug, Clone, PartialEq)]
 pub enum ObsEvent {
+    /// Stream header from the traffic layer: the run's arrival window
+    /// (the denominator of the `TrafficReport` backlog-saturation
+    /// verdict). Emitted exactly once, before any engine event, by a
+    /// *fresh* `run_traffic_resumable_obs` run — resumed legs never
+    /// re-emit it, so a resume-concatenated stream still carries it
+    /// exactly once and the concatenation equality holds unchanged.
+    /// Raw-`Coordinator` streams (no traffic layer) have no header.
+    TrafficMeta {
+        /// Always 0.0 — the header precedes the simulation.
+        t: f64,
+        /// Arrival window in engine seconds (`TrafficReport`'s
+        /// `arrival_window`).
+        window: f64,
+        /// Whether failure injection was configured. The live report
+        /// carries a resilience ledger whenever a `FailureSpec` is set
+        /// — even if zero faults fired — so a replay cannot infer the
+        /// ledger's *presence* from fault events alone.
+        failure: bool,
+    },
     /// Offered capacity (free + busy cores/GPUs) changed — emitted once
     /// at t = 0 with the initial allocation and thereafter whenever a
     /// grow, drain, kill or graceful-shrink release moves it. Replaying
@@ -240,7 +264,8 @@ impl ObsEvent {
     /// Engine time the event carries.
     pub fn time(&self) -> f64 {
         match *self {
-            ObsEvent::CapacityOffered { t, .. }
+            ObsEvent::TrafficMeta { t, .. }
+            | ObsEvent::CapacityOffered { t, .. }
             | ObsEvent::WorkflowArrived { t, .. }
             | ObsEvent::TaskSubmitted { t, .. }
             | ObsEvent::TaskStarted { t, .. }
@@ -259,6 +284,7 @@ impl ObsEvent {
     /// The `ev` tag this variant serializes under.
     pub fn tag(&self) -> &'static str {
         match self {
+            ObsEvent::TrafficMeta { .. } => "traffic_meta",
             ObsEvent::CapacityOffered { .. } => "capacity",
             ObsEvent::WorkflowArrived { .. } => "workflow_arrived",
             ObsEvent::TaskSubmitted { .. } => "task_submitted",
@@ -285,6 +311,12 @@ impl ToJson for ObsEvent {
     fn to_json(&self) -> Json {
         let tag = Json::from(self.tag());
         match self {
+            ObsEvent::TrafficMeta { t, window, failure } => obj([
+                ("ev", tag),
+                ("t", Json::from(*t)),
+                ("window", Json::from(*window)),
+                ("failure", Json::from(*failure)),
+            ]),
             ObsEvent::CapacityOffered { t, cores, gpus } => obj([
                 ("ev", tag),
                 ("t", Json::from(*t)),
@@ -402,6 +434,11 @@ impl FromJson for ObsEvent {
     fn from_json(v: &Json) -> Result<ObsEvent> {
         let t = v.req_f64("t")?;
         Ok(match v.req_str("ev")? {
+            "traffic_meta" => ObsEvent::TrafficMeta {
+                t,
+                window: v.req_f64("window")?,
+                failure: v.req_bool("failure")?,
+            },
             "capacity" => ObsEvent::CapacityOffered {
                 t,
                 cores: v.req_u64("cores")?,
@@ -504,8 +541,10 @@ pub fn strip_checkpoint_markers(events: &[ObsEvent]) -> Vec<ObsEvent> {
 /// skips event *construction* entirely when it returns false, so a
 /// disabled sink costs one boolean per emission site. `emit` must be
 /// infallible on the hot path — file sinks latch I/O errors internally
-/// and surface them from [`flush`](Self::flush), which the engine calls
-/// when a run completes or checkpoints.
+/// and surface them from [`flush`](Self::flush). The engine's own
+/// flush calls (run completion, checkpoints) are best-effort pushes; the
+/// CLI performs the final flush after the report prints and turns a
+/// still-latched error into a visible warning plus a nonzero exit.
 pub trait EventSink {
     /// Whether events should be constructed and emitted at all.
     fn enabled(&self) -> bool {
@@ -563,12 +602,16 @@ impl EventSink for MemSink {
 
 /// Buffered NDJSON file sink (`--emit-events PATH`). Write errors are
 /// latched and surfaced by `flush` — the simulation itself never aborts
-/// mid-flight on a full disk.
+/// mid-flight on a full disk. The latch is *sticky*: once a write has
+/// failed, every subsequent `flush` re-reports it, so the engine's
+/// best-effort mid-run flushes cannot consume the error before the CLI
+/// performs its final, user-visible flush.
 #[derive(Debug)]
 pub struct FileSink {
     out: BufWriter<File>,
-    /// First write error, deferred to `flush`.
-    err: Option<std::io::Error>,
+    /// First write error (kind + rendered message), held for every
+    /// later `flush`.
+    err: Option<(std::io::ErrorKind, String)>,
     /// Reused per-line render buffer.
     line: String,
 }
@@ -578,6 +621,12 @@ impl FileSink {
     pub fn create<P: AsRef<Path>>(path: P) -> Result<FileSink> {
         let f = File::create(path)?;
         Ok(FileSink { out: BufWriter::new(f), err: None, line: String::new() })
+    }
+
+    fn latch(&mut self, e: std::io::Error) {
+        if self.err.is_none() {
+            self.err = Some((e.kind(), e.to_string()));
+        }
     }
 }
 
@@ -590,15 +639,20 @@ impl EventSink for FileSink {
         let _ = write!(self.line, "{}", ev.to_json());
         self.line.push('\n');
         if let Err(e) = self.out.write_all(self.line.as_bytes()) {
-            self.err = Some(e);
+            self.latch(e);
         }
     }
 
     fn flush(&mut self) -> Result<()> {
-        if let Some(e) = self.err.take() {
-            return Err(Error::Io(e));
+        if self.err.is_none() {
+            if let Err(e) = self.out.flush() {
+                self.latch(e);
+            }
         }
-        self.out.flush().map_err(Error::Io)
+        match &self.err {
+            Some((kind, msg)) => Err(Error::Io(std::io::Error::new(*kind, msg.clone()))),
+            None => Ok(()),
+        }
     }
 }
 
@@ -618,58 +672,49 @@ impl<S: EventSink> EventSink for Rc<RefCell<S>> {
     }
 }
 
+/// One event of every variant — the shared fixture for round-trip,
+/// rollup, and renderer tests across the obs modules.
+#[cfg(test)]
+pub(crate) fn samples() -> Vec<ObsEvent> {
+    vec![
+        ObsEvent::TrafficMeta { t: 0.0, window: 600.0, failure: true },
+        ObsEvent::CapacityOffered { t: 0.0, cores: 84, gpus: 12 },
+        ObsEvent::WorkflowArrived { t: 0.0, slot: 0, workflow: "ddmd".into(), arrival: 0.0 },
+        ObsEvent::TaskSubmitted {
+            t: 0.5,
+            uid: 3,
+            slot: 0,
+            local: 1,
+            kind: "simulation".into(),
+            cores: 4,
+            gpus: 1,
+            tx: 123.456,
+            attempt: 0,
+        },
+        ObsEvent::TaskStarted { t: 0.5, uid: 3, slot: 0, local: 1, node: 2, cores: 4, gpus: 1 },
+        ObsEvent::TaskCompleted { t: 124.0, uid: 3, slot: 0, local: 1, failed: false },
+        ObsEvent::WorkflowCompleted { t: 124.0, slot: 0, workflow: "ddmd".into() },
+        ObsEvent::NodeFault { t: 60.0, node: 2, victims: 1 },
+        ObsEvent::TaskKilled {
+            t: 60.0,
+            uid: 3,
+            slot: 0,
+            local: 1,
+            node: 2,
+            attempt: 1,
+            lost_core_s: 238.0,
+        },
+        ObsEvent::RetryScheduled { t: 60.0, uid: 3, due: 65.0, attempt: 1 },
+        ObsEvent::RetriesExhausted { t: 99.0, uid: 3, slot: 0, attempts: 4 },
+        ObsEvent::PilotResized { t: 100.0, delta: -2 },
+        ObsEvent::AutoscaleDecision { t: 150.0, delta: 1, acted: true },
+        ObsEvent::CheckpointTaken { t: 200.0 },
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn samples() -> Vec<ObsEvent> {
-        vec![
-            ObsEvent::CapacityOffered { t: 0.0, cores: 84, gpus: 12 },
-            ObsEvent::WorkflowArrived {
-                t: 0.0,
-                slot: 0,
-                workflow: "ddmd".into(),
-                arrival: 0.0,
-            },
-            ObsEvent::TaskSubmitted {
-                t: 0.5,
-                uid: 3,
-                slot: 0,
-                local: 1,
-                kind: "simulation".into(),
-                cores: 4,
-                gpus: 1,
-                tx: 123.456,
-                attempt: 0,
-            },
-            ObsEvent::TaskStarted {
-                t: 0.5,
-                uid: 3,
-                slot: 0,
-                local: 1,
-                node: 2,
-                cores: 4,
-                gpus: 1,
-            },
-            ObsEvent::TaskCompleted { t: 124.0, uid: 3, slot: 0, local: 1, failed: false },
-            ObsEvent::WorkflowCompleted { t: 124.0, slot: 0, workflow: "ddmd".into() },
-            ObsEvent::NodeFault { t: 60.0, node: 2, victims: 1 },
-            ObsEvent::TaskKilled {
-                t: 60.0,
-                uid: 3,
-                slot: 0,
-                local: 1,
-                node: 2,
-                attempt: 1,
-                lost_core_s: 238.0,
-            },
-            ObsEvent::RetryScheduled { t: 60.0, uid: 3, due: 65.0, attempt: 1 },
-            ObsEvent::RetriesExhausted { t: 99.0, uid: 3, slot: 0, attempts: 4 },
-            ObsEvent::PilotResized { t: 100.0, delta: -2 },
-            ObsEvent::AutoscaleDecision { t: 150.0, delta: 1, acted: true },
-            ObsEvent::CheckpointTaken { t: 200.0 },
-        ]
-    }
 
     #[test]
     fn every_variant_round_trips_through_ndjson() {

@@ -1,0 +1,429 @@
+//! Deterministic SVG renderers over a replayed event stream.
+//!
+//! Three hand-rolled, self-contained figures (no external templates,
+//! no fonts beyond the SVG `font-family` hint):
+//!
+//! - [`overlap_heatmap_svg`]: the kind×kind overlap matrix as a
+//!   heatmap — the visual form of the paper's heterogeneous-overlap
+//!   argument (off-diagonal mass = cross-kind asynchrony);
+//! - [`kind_timeline_svg`]: per-kind concurrency step timelines over
+//!   the run (execution attempts, so killed work shows too);
+//! - [`util_backlog_svg`]: offered-vs-used cores and the queued-task
+//!   backlog on a shared time axis, with arrival-window half markers
+//!   (the saturation-verdict inputs, drawn).
+//!
+//! ## Determinism contract
+//!
+//! Every function is a pure `String` of its input: fixed palette,
+//! fixed geometry, all coordinates formatted with `{:.2}` and values
+//! with `{:.3}` (shortest-round-trip float printing never reaches the
+//! output). The same seed therefore produces byte-identical SVGs
+//! across runs, machines, and wake policies — asserted in
+//! `tests/obs_watch.rs` — which makes the figures safe to commit as CI
+//! artifacts and diff like text.
+
+use super::trace::{ReplayedRun, TraceAnalysis};
+
+/// Categorical palette (Tableau 10 subset), cycled per kind.
+const PALETTE: [&str; 8] = [
+    "#4e79a7", "#f28e2b", "#e15759", "#76b7b2", "#59a14f", "#edc949", "#b07aa1", "#9c755f",
+];
+
+/// XML-escape a label for attribute/text positions.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            '\'' => out.push_str("&apos;"),
+            _ => out.push(ch),
+        }
+    }
+    out
+}
+
+/// Heatmap cell fill: linear white → palette-blue by `frac` ∈ [0,1],
+/// with integer-rounded channels so the bytes never depend on float
+/// formatting.
+fn heat_color(frac: f64) -> String {
+    let frac = frac.clamp(0.0, 1.0);
+    // #4e79a7 = (78, 121, 167).
+    let ch = |hi: f64| (255.0 + (hi - 255.0) * frac).round() as u8;
+    format!("rgb({},{},{})", ch(78.0), ch(121.0), ch(167.0))
+}
+
+fn svg_open(w: f64, h: f64) -> String {
+    format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{w:.0}\" height=\"{h:.0}\" \
+         viewBox=\"0 0 {w:.0} {h:.0}\" font-family=\"monospace\" font-size=\"11\">\n",
+    )
+}
+
+/// Step polyline path (`M … H … V …`) through `(t, v)` change points,
+/// holding each value to the next point and closing at `t_end`.
+fn step_path(
+    points: &[(f64, f64)],
+    t_end: f64,
+    x: impl Fn(f64) -> f64,
+    y: impl Fn(f64) -> f64,
+) -> String {
+    let mut d = String::new();
+    for (i, &(t, v)) in points.iter().enumerate() {
+        if i == 0 {
+            d.push_str(&format!("M {:.2} {:.2}", x(t), y(v)));
+        } else {
+            d.push_str(&format!(" H {:.2} V {:.2}", x(t), y(v)));
+        }
+    }
+    if let Some(&(last_t, _)) = points.last() {
+        if t_end > last_t {
+            d.push_str(&format!(" H {:.2}", x(t_end)));
+        }
+    }
+    d
+}
+
+/// Kind-overlap heatmap: cell (i,j) shaded by seconds kinds i and j
+/// were simultaneously active, annotated with the value; the diagonal
+/// is each kind's own active time.
+pub fn overlap_heatmap_svg(a: &TraceAnalysis) -> String {
+    let n = a.kinds.len();
+    let cell = 64.0;
+    let label_w = 150.0;
+    let top = 40.0;
+    let w = label_w + n as f64 * cell + 20.0;
+    let h = top + n as f64 * cell + 60.0;
+    let mut s = svg_open(w.max(320.0), h);
+    s.push_str(&format!(
+        "<text x=\"10\" y=\"20\" font-size=\"13\">kind overlap (seconds co-active) — DOA {:.3}, \
+         async improvement {:.1}%</text>\n",
+        a.degree_of_asynchronicity,
+        a.async_improvement * 100.0,
+    ));
+    let max = a
+        .overlap
+        .iter()
+        .flat_map(|row| row.iter().copied())
+        .fold(0.0f64, f64::max);
+    for (i, ki) in a.kinds.iter().enumerate() {
+        // Row label.
+        s.push_str(&format!(
+            "<text x=\"{:.2}\" y=\"{:.2}\" text-anchor=\"end\">{}</text>\n",
+            label_w - 8.0,
+            top + i as f64 * cell + cell / 2.0 + 4.0,
+            esc(&ki.kind),
+        ));
+        // Column label (under the grid, angled not needed for few kinds).
+        s.push_str(&format!(
+            "<text x=\"{:.2}\" y=\"{:.2}\" text-anchor=\"middle\">{}</text>\n",
+            label_w + i as f64 * cell + cell / 2.0,
+            top + n as f64 * cell + 18.0,
+            esc(&ki.kind),
+        ));
+        for j in 0..n {
+            let v = a
+                .overlap
+                .get(i)
+                .and_then(|row| row.get(j))
+                .copied()
+                .unwrap_or(0.0);
+            let frac = if max > 0.0 { v / max } else { 0.0 };
+            let x = label_w + j as f64 * cell;
+            let y = top + i as f64 * cell;
+            s.push_str(&format!(
+                "<rect x=\"{x:.2}\" y=\"{y:.2}\" width=\"{cell:.2}\" height=\"{cell:.2}\" \
+                 fill=\"{}\" stroke=\"#ffffff\"/>\n",
+                heat_color(frac),
+            ));
+            s.push_str(&format!(
+                "<text x=\"{:.2}\" y=\"{:.2}\" text-anchor=\"middle\" fill=\"{}\">{v:.3}</text>\n",
+                x + cell / 2.0,
+                y + cell / 2.0 + 4.0,
+                if frac > 0.55 { "#ffffff" } else { "#333333" },
+            ));
+        }
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+/// Per-kind concurrency timelines: one colored step line per task
+/// kind over the run's makespan, with a legend carrying each kind's
+/// peak. Computed over execution attempts (kills included), matching
+/// the analyzer's sweep.
+pub fn kind_timeline_svg(run: &ReplayedRun) -> String {
+    // Label-sorted kinds, as everywhere else.
+    let mut kinds: Vec<&str> = run.intervals.iter().map(|iv| iv.kind.as_str()).collect();
+    kinds.sort_unstable();
+    kinds.dedup();
+    let t_end = run
+        .intervals
+        .iter()
+        .map(|iv| iv.end)
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+
+    // Per-kind step series from interval deltas.
+    let mut series: Vec<Vec<(f64, f64)>> = Vec::with_capacity(kinds.len());
+    let mut peaks: Vec<f64> = Vec::with_capacity(kinds.len());
+    let mut global_peak = 0.0f64;
+    for k in &kinds {
+        let mut deltas: Vec<(f64, i64)> = Vec::new();
+        for iv in run.intervals.iter().filter(|iv| iv.kind == *k) {
+            deltas.push((iv.start, 1));
+            deltas.push((iv.end, -1));
+        }
+        deltas.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut pts: Vec<(f64, f64)> = vec![(0.0, 0.0)];
+        let mut c = 0i64;
+        let mut i = 0usize;
+        let mut peak = 0.0f64;
+        while i < deltas.len() {
+            let t = deltas[i].0;
+            while i < deltas.len() && deltas[i].0 == t {
+                c += deltas[i].1;
+                i += 1;
+            }
+            let v = c.max(0) as f64;
+            peak = peak.max(v);
+            pts.push((t, v));
+        }
+        global_peak = global_peak.max(peak);
+        peaks.push(peak);
+        series.push(pts);
+    }
+    let global_peak = global_peak.max(1.0);
+
+    let (w, h) = (900.0, 360.0);
+    let (ml, mr, mt, mb) = (60.0, 20.0, 40.0, 50.0);
+    let (pw, ph) = (w - ml - mr, h - mt - mb);
+    let x = |t: f64| ml + t / t_end * pw;
+    let y = |v: f64| mt + ph - v / global_peak * ph;
+    let mut s = svg_open(w, h + 24.0 * kinds.len() as f64);
+    s.push_str(&format!(
+        "<text x=\"10\" y=\"20\" font-size=\"13\">per-kind concurrency over {t_end:.3} s \
+         ({} attempts)</text>\n",
+        run.intervals.len(),
+    ));
+    // Axes.
+    s.push_str(&format!(
+        "<line x1=\"{ml:.2}\" y1=\"{:.2}\" x2=\"{:.2}\" y2=\"{:.2}\" stroke=\"#888888\"/>\n",
+        mt + ph,
+        ml + pw,
+        mt + ph,
+    ));
+    s.push_str(&format!(
+        "<line x1=\"{ml:.2}\" y1=\"{mt:.2}\" x2=\"{ml:.2}\" y2=\"{:.2}\" stroke=\"#888888\"/>\n",
+        mt + ph,
+    ));
+    s.push_str(&format!(
+        "<text x=\"{:.2}\" y=\"{:.2}\" text-anchor=\"end\">{global_peak:.0}</text>\n",
+        ml - 6.0,
+        mt + 10.0,
+    ));
+    s.push_str(&format!(
+        "<text x=\"{:.2}\" y=\"{:.2}\" text-anchor=\"end\">0</text>\n",
+        ml - 6.0,
+        mt + ph,
+    ));
+    s.push_str(&format!(
+        "<text x=\"{:.2}\" y=\"{:.2}\" text-anchor=\"end\">{t_end:.0} s</text>\n",
+        ml + pw,
+        mt + ph + 16.0,
+    ));
+    for (ki, pts) in series.iter().enumerate() {
+        let color = PALETTE.get(ki % PALETTE.len()).copied().unwrap_or("#333333");
+        s.push_str(&format!(
+            "<path d=\"{}\" fill=\"none\" stroke=\"{color}\" stroke-width=\"1.5\"/>\n",
+            step_path(pts, t_end, x, y),
+        ));
+        // Legend row under the chart.
+        let ly = h + 16.0 + 24.0 * ki as f64;
+        s.push_str(&format!(
+            "<rect x=\"{ml:.2}\" y=\"{:.2}\" width=\"12\" height=\"12\" fill=\"{color}\"/>\n",
+            ly - 10.0,
+        ));
+        s.push_str(&format!(
+            "<text x=\"{:.2}\" y=\"{ly:.2}\">{} (peak {:.0})</text>\n",
+            ml + 18.0,
+            esc(kinds.get(ki).copied().unwrap_or("?")),
+            peaks.get(ki).copied().unwrap_or(0.0),
+        ));
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+/// Utilization / backlog strip: offered cores (grey step) vs cores in
+/// use (blue step, filled) on the top panel, queued tasks (orange
+/// step) below, sharing the time axis. When the stream carries a
+/// traffic header the arrival window's half and end are marked — the
+/// two integration ranges behind the live SATURATED/bounded verdict.
+pub fn util_backlog_svg(run: &ReplayedRun) -> String {
+    use crate::metrics::{BacklogTrace, UtilizationTrace};
+    let util = UtilizationTrace::from_records_capacity(&run.records, run.capacity.clone());
+    let backlog = BacklogTrace::from_records(&run.records);
+    let t_end = util.makespan.max(backlog.horizon).max(1e-9);
+
+    let used: Vec<(f64, f64)> = util.points.iter().map(|&(t, c, _)| (t, c as f64)).collect();
+    let offered: Vec<(f64, f64)> = if run.capacity.points.is_empty() {
+        vec![(0.0, 0.0)]
+    } else {
+        run.capacity.points.iter().map(|&(t, c, _)| (t, c as f64)).collect()
+    };
+    let queued: Vec<(f64, f64)> = backlog.points.iter().map(|&(t, n, _, _)| (t, n as f64)).collect();
+    let cores_max = offered
+        .iter()
+        .chain(used.iter())
+        .map(|&(_, v)| v)
+        .fold(0.0f64, f64::max)
+        .max(1.0);
+    let queue_max = queued.iter().map(|&(_, v)| v).fold(0.0f64, f64::max).max(1.0);
+
+    let w = 900.0;
+    let (ml, mr) = (60.0, 20.0);
+    let pw = w - ml - mr;
+    let (top_y, top_h) = (40.0, 180.0);
+    let (bot_y, bot_h) = (top_y + top_h + 40.0, 120.0);
+    let h = bot_y + bot_h + 50.0;
+    let x = |t: f64| ml + t / t_end * pw;
+
+    let mut s = svg_open(w, h);
+    s.push_str(&format!(
+        "<text x=\"10\" y=\"20\" font-size=\"13\">cores offered vs used, and queued-task \
+         backlog, over {t_end:.3} s</text>\n",
+    ));
+
+    // Top panel: capacity + usage.
+    let ty = |v: f64| top_y + top_h - v / cores_max * top_h;
+    s.push_str(&format!(
+        "<line x1=\"{ml:.2}\" y1=\"{:.2}\" x2=\"{:.2}\" y2=\"{:.2}\" stroke=\"#888888\"/>\n",
+        top_y + top_h,
+        ml + pw,
+        top_y + top_h,
+    ));
+    s.push_str(&format!(
+        "<text x=\"{:.2}\" y=\"{:.2}\" text-anchor=\"end\">{cores_max:.0}</text>\n",
+        ml - 6.0,
+        top_y + 10.0,
+    ));
+    s.push_str(&format!(
+        "<text x=\"{:.2}\" y=\"{:.2}\" text-anchor=\"end\">cores</text>\n",
+        ml - 6.0,
+        top_y + top_h,
+    ));
+    // Used-cores filled area: step path closed down to the axis.
+    let mut area = step_path(&used, t_end, x, ty);
+    if !used.is_empty() {
+        area.push_str(&format!(
+            " V {:.2} H {:.2} Z",
+            top_y + top_h,
+            x(used.first().map_or(0.0, |&(t, _)| t)),
+        ));
+    }
+    s.push_str(&format!(
+        "<path d=\"{area}\" fill=\"#4e79a7\" fill-opacity=\"0.35\" stroke=\"none\"/>\n",
+    ));
+    s.push_str(&format!(
+        "<path d=\"{}\" fill=\"none\" stroke=\"#4e79a7\" stroke-width=\"1.5\"/>\n",
+        step_path(&used, t_end, x, ty),
+    ));
+    s.push_str(&format!(
+        "<path d=\"{}\" fill=\"none\" stroke=\"#666666\" stroke-width=\"1.5\" \
+         stroke-dasharray=\"6 3\"/>\n",
+        step_path(&offered, t_end, x, ty),
+    ));
+    s.push_str(&format!(
+        "<text x=\"{:.2}\" y=\"{:.2}\">used (cpu {:.1}%)  — offered dashed</text>\n",
+        ml + 8.0,
+        top_y + 14.0,
+        util.mean_utilization().0 * 100.0,
+    ));
+
+    // Bottom panel: backlog.
+    let by = |v: f64| bot_y + bot_h - v / queue_max * bot_h;
+    s.push_str(&format!(
+        "<line x1=\"{ml:.2}\" y1=\"{:.2}\" x2=\"{:.2}\" y2=\"{:.2}\" stroke=\"#888888\"/>\n",
+        bot_y + bot_h,
+        ml + pw,
+        bot_y + bot_h,
+    ));
+    s.push_str(&format!(
+        "<text x=\"{:.2}\" y=\"{:.2}\" text-anchor=\"end\">{queue_max:.0}</text>\n",
+        ml - 6.0,
+        bot_y + 10.0,
+    ));
+    s.push_str(&format!(
+        "<text x=\"{:.2}\" y=\"{:.2}\" text-anchor=\"end\">queued</text>\n",
+        ml - 6.0,
+        bot_y + bot_h,
+    ));
+    s.push_str(&format!(
+        "<path d=\"{}\" fill=\"none\" stroke=\"#f28e2b\" stroke-width=\"1.5\"/>\n",
+        step_path(&queued, t_end, x, by),
+    ));
+    s.push_str(&format!(
+        "<text x=\"{:.2}\" y=\"{:.2}\" text-anchor=\"end\">{t_end:.0} s</text>\n",
+        ml + pw,
+        bot_y + bot_h + 16.0,
+    ));
+
+    // Arrival-window markers across both panels.
+    if let Some(aw) = run.arrival_window {
+        for (t, label) in [(aw / 2.0, "w/2"), (aw, "w")] {
+            if t <= t_end {
+                s.push_str(&format!(
+                    "<line x1=\"{0:.2}\" y1=\"{top_y:.2}\" x2=\"{0:.2}\" y2=\"{1:.2}\" \
+                     stroke=\"#e15759\" stroke-dasharray=\"2 3\"/>\n",
+                    x(t),
+                    bot_y + bot_h,
+                ));
+                s.push_str(&format!(
+                    "<text x=\"{:.2}\" y=\"{:.2}\" fill=\"#e15759\">{label}</text>\n",
+                    x(t) + 3.0,
+                    top_y - 6.0,
+                ));
+            }
+        }
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{analyze, replay};
+
+    #[test]
+    fn renders_are_wellformed_and_deterministic() {
+        let evs = crate::obs::samples();
+        let run = replay(&evs).unwrap();
+        let a = analyze(&evs).unwrap();
+        for svg in [
+            overlap_heatmap_svg(&a),
+            kind_timeline_svg(&run),
+            util_backlog_svg(&run),
+        ] {
+            assert!(svg.starts_with("<svg "));
+            assert!(svg.ends_with("</svg>\n"));
+            // Every <text> closes and no float leaked as NaN/inf.
+            assert_eq!(svg.matches("<text").count(), svg.matches("</text>").count());
+            assert!(!svg.contains("NaN") && !svg.contains("inf"));
+        }
+        // Byte-identity: same input, same bytes.
+        let run2 = replay(&evs).unwrap();
+        assert_eq!(util_backlog_svg(&run), util_backlog_svg(&run2));
+        assert_eq!(kind_timeline_svg(&run), kind_timeline_svg(&run2));
+    }
+
+    #[test]
+    fn heat_color_endpoints() {
+        assert_eq!(heat_color(0.0), "rgb(255,255,255)");
+        assert_eq!(heat_color(1.0), "rgb(78,121,167)");
+        assert_eq!(esc("a<b&c>\"d'"), "a&lt;b&amp;c&gt;&quot;d&apos;");
+    }
+}

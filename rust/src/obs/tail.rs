@@ -1,0 +1,333 @@
+//! Incremental NDJSON tailing: parse an event stream as it is written.
+//!
+//! `asyncflow trace` reads a finished file in one shot; the live
+//! console (`asyncflow watch`) instead follows a file that a running
+//! `--emit-events` simulation is still appending to. That changes the
+//! parsing contract in two ways:
+//!
+//! - the last line is routinely **incomplete** (the writer is mid-line
+//!   or mid-buffer-flush), so the parser must hold partial bytes back
+//!   instead of erroring, and resume cleanly when the rest arrives;
+//! - a follower must be **resumable**: [`TailParser::offset`] reports
+//!   how many bytes were fully consumed (complete lines only), so a
+//!   restarted watcher can seek straight past everything it already
+//!   processed and re-feed from there ([`TailParser::resume_at`]).
+//!
+//! [`TailParser`] is the pure byte-stream half (no I/O, fully
+//! deterministic — it is what the rollup property tests drive);
+//! [`TailFollower`] wraps it around a [`File`] with a read-to-EOF
+//! poll, still without touching the wall clock: *when* to poll again
+//! is the caller's business (`obs::watch` owns the sleep).
+
+use std::fs::File;
+use std::io::{Read as _, Seek, SeekFrom};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::{FromJson, Json};
+
+use super::ObsEvent;
+
+/// Read chunk size for [`TailFollower::poll`].
+const CHUNK: usize = 64 * 1024;
+
+/// Incremental NDJSON parser tolerating a partial trailing line.
+///
+/// Feed byte chunks in arrival order; every *complete* line (terminated
+/// by `\n`) is parsed immediately, bytes after the last newline wait in
+/// an internal buffer for the next [`feed`](Self::feed). Blank lines
+/// are skipped but still advance the offset, exactly like
+/// [`parse_stream`](super::trace::parse_stream) skips them — a one-shot
+/// parse and any chunking of the same bytes produce the same events.
+#[derive(Debug, Default)]
+pub struct TailParser {
+    /// Bytes after the last seen newline (a partial line).
+    pending: Vec<u8>,
+    /// Bytes fully consumed (complete lines only).
+    offset: u64,
+    /// Complete lines consumed, for 1-based error positions.
+    lines: u64,
+}
+
+impl TailParser {
+    /// Parser positioned at the start of a stream.
+    pub fn new() -> TailParser {
+        TailParser::default()
+    }
+
+    /// Parser resuming at a byte offset previously reported by
+    /// [`offset`](Self::offset) — the caller seeks the source there
+    /// and feeds from that point. Line numbers in errors restart at 1
+    /// (the resumed parser has not seen the earlier lines).
+    pub fn resume_at(offset: u64) -> TailParser {
+        TailParser { pending: Vec::new(), offset, lines: 0 }
+    }
+
+    /// Bytes fully consumed so far: feeding a fresh source from this
+    /// offset replays nothing and loses nothing. The partial trailing
+    /// line (if any) is *not* counted — it will be re-read whole.
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+
+    /// Bytes currently held back as a partial trailing line.
+    pub fn pending_bytes(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Consume a chunk, appending every event on a now-complete line to
+    /// `out`. On a malformed line the error carries its 1-based line
+    /// number; the parser state is unspecified afterwards (a malformed
+    /// *complete* line is corruption, not a mid-write tail).
+    pub fn feed(&mut self, chunk: &[u8], out: &mut Vec<ObsEvent>) -> Result<()> {
+        self.pending.extend_from_slice(chunk);
+        let Some(last_nl) = self.pending.iter().rposition(|&b| b == b'\n') else {
+            return Ok(());
+        };
+        let consumed = last_nl + 1;
+        for raw in self.pending[..last_nl].split(|&b| b == b'\n') {
+            self.lines += 1;
+            parse_line(raw, self.lines, out)?;
+        }
+        self.offset += consumed as u64;
+        self.pending.drain(..consumed);
+        Ok(())
+    }
+
+    /// End-of-stream: parse a non-empty unterminated trailing line (a
+    /// file whose final line lacks `\n` — `parse_stream` accepts those
+    /// too). Errors leave the bytes pending, so a live follower can
+    /// treat the failure as "still mid-write" and keep feeding.
+    pub fn finish(&mut self, out: &mut Vec<ObsEvent>) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let raw = std::mem::take(&mut self.pending);
+        let before = out.len();
+        if let Err(e) = parse_line(&raw, self.lines + 1, out) {
+            self.pending = raw;
+            return Err(e);
+        }
+        if out.len() > before || is_blank(&raw) {
+            self.lines += 1;
+            self.offset += raw.len() as u64;
+        }
+        Ok(())
+    }
+}
+
+fn is_blank(raw: &[u8]) -> bool {
+    raw.iter().all(|b| b.is_ascii_whitespace())
+}
+
+/// Parse one raw line (blank lines skip), pushing the event to `out`.
+fn parse_line(raw: &[u8], lineno: u64, out: &mut Vec<ObsEvent>) -> Result<()> {
+    let line = std::str::from_utf8(raw)
+        .map_err(|e| Error::Config(format!("events line {lineno}: not UTF-8 ({e})")))?
+        .trim();
+    if line.is_empty() {
+        return Ok(());
+    }
+    let v = Json::parse(line)
+        .map_err(|e| Error::Config(format!("events line {lineno}: {e}")))?;
+    out.push(
+        ObsEvent::from_json(&v)
+            .map_err(|e| Error::Config(format!("events line {lineno}: {e}")))?,
+    );
+    Ok(())
+}
+
+/// A [`TailParser`] attached to a file: each [`poll`](Self::poll)
+/// reads whatever the writer appended since the last one and parses
+/// it. Owns no clock and never sleeps — callers decide the cadence.
+#[derive(Debug)]
+pub struct TailFollower {
+    file: File,
+    parser: TailParser,
+    buf: Vec<u8>,
+}
+
+impl TailFollower {
+    /// Follow `path` from the beginning.
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<TailFollower> {
+        Self::resume(path, 0)
+    }
+
+    /// Follow `path` from a byte offset previously reported by
+    /// [`offset`](Self::offset) (a restartable watch).
+    pub fn resume<P: AsRef<Path>>(path: P, offset: u64) -> Result<TailFollower> {
+        let mut file = File::open(path)?;
+        file.seek(SeekFrom::Start(offset))?;
+        Ok(TailFollower {
+            file,
+            parser: TailParser::resume_at(offset),
+            buf: vec![0u8; CHUNK],
+        })
+    }
+
+    /// Read to the file's current end, appending parsed events to
+    /// `out`; returns how many were appended. A partial trailing line
+    /// stays buffered for the next poll.
+    pub fn poll(&mut self, out: &mut Vec<ObsEvent>) -> Result<usize> {
+        let before = out.len();
+        loop {
+            let n = self.file.read(&mut self.buf)?;
+            if n == 0 {
+                break;
+            }
+            self.parser.feed(&self.buf[..n], out)?;
+        }
+        Ok(out.len() - before)
+    }
+
+    /// Bytes fully consumed (see [`TailParser::offset`]).
+    pub fn offset(&self) -> u64 {
+        self.parser.offset()
+    }
+
+    /// Bytes held back as a partial trailing line.
+    pub fn pending_bytes(&self) -> usize {
+        self.parser.pending_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::parse_stream;
+
+    fn sample_text() -> String {
+        let evs = vec![
+            ObsEvent::CapacityOffered { t: 0.0, cores: 8, gpus: 2 },
+            ObsEvent::WorkflowArrived {
+                t: 0.0,
+                slot: 0,
+                workflow: "w".into(),
+                arrival: 0.0,
+            },
+            ObsEvent::CheckpointTaken { t: 5.0 },
+            ObsEvent::WorkflowCompleted { t: 9.0, slot: 0, workflow: "w".into() },
+        ];
+        evs.iter().map(|e| e.to_ndjson() + "\n").collect()
+    }
+
+    #[test]
+    fn every_chunking_matches_the_one_shot_parse() {
+        let text = sample_text();
+        let want = parse_stream(&text).unwrap();
+        for chunk in 1..=text.len() {
+            let mut p = TailParser::new();
+            let mut got = Vec::new();
+            for piece in text.as_bytes().chunks(chunk) {
+                p.feed(piece, &mut got).unwrap();
+            }
+            p.finish(&mut got).unwrap();
+            assert_eq!(got, want, "chunk size {chunk}");
+            assert_eq!(p.offset(), text.len() as u64, "chunk size {chunk}");
+            assert_eq!(p.pending_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn partial_trailing_line_waits_for_the_rest() {
+        let text = sample_text();
+        let cut = text.len() - 10; // mid-final-line
+        let mut p = TailParser::new();
+        let mut got = Vec::new();
+        p.feed(&text.as_bytes()[..cut], &mut got).unwrap();
+        assert_eq!(got.len(), 3, "three complete lines");
+        assert!(p.pending_bytes() > 0);
+        let offset_mid = p.offset();
+        assert!(offset_mid < cut as u64, "partial line not counted consumed");
+        p.feed(&text.as_bytes()[cut..], &mut got).unwrap();
+        p.finish(&mut got).unwrap();
+        assert_eq!(got, parse_stream(&text).unwrap());
+    }
+
+    #[test]
+    fn unterminated_final_line_parses_at_finish() {
+        let text = sample_text();
+        let trimmed = text.trim_end_matches('\n');
+        let mut p = TailParser::new();
+        let mut got = Vec::new();
+        p.feed(trimmed.as_bytes(), &mut got).unwrap();
+        assert_eq!(got.len(), 3);
+        p.finish(&mut got).unwrap();
+        assert_eq!(got, parse_stream(&text).unwrap());
+        assert_eq!(p.offset(), trimmed.len() as u64);
+    }
+
+    #[test]
+    fn truncated_garbage_tail_errors_but_stays_pending() {
+        let mut text = sample_text();
+        text.push_str("{\"ev\":\"capacity\",\"t\":1"); // mid-write tail
+        let mut p = TailParser::new();
+        let mut got = Vec::new();
+        p.feed(text.as_bytes(), &mut got).unwrap();
+        assert_eq!(got.len(), 4, "complete lines all parsed");
+        let err = p.finish(&mut got).unwrap_err();
+        assert!(err.to_string().contains("line 5"), "{err}");
+        // The bytes stay pending: feeding the rest completes the line.
+        assert!(p.pending_bytes() > 0);
+        p.feed(b",\"cores\":1,\"gpus\":0}\n", &mut got).unwrap();
+        assert_eq!(got.len(), 5);
+    }
+
+    #[test]
+    fn resume_from_offset_replays_nothing_and_loses_nothing() {
+        let text = sample_text();
+        let cut = text.len() / 2;
+        let mut first = TailParser::new();
+        let mut got = Vec::new();
+        first.feed(&text.as_bytes()[..cut], &mut got).unwrap();
+        let off = first.offset() as usize;
+
+        // A fresh parser seeks to `off` and reads from there.
+        let mut second = TailParser::resume_at(off as u64);
+        second.feed(&text.as_bytes()[off..], &mut got).unwrap();
+        second.finish(&mut got).unwrap();
+        assert_eq!(got, parse_stream(&text).unwrap());
+        assert_eq!(second.offset(), text.len() as u64);
+    }
+
+    #[test]
+    fn blank_lines_skip_but_advance_the_offset() {
+        let text = format!("\n  \n{}", sample_text());
+        let mut p = TailParser::new();
+        let mut got = Vec::new();
+        p.feed(text.as_bytes(), &mut got).unwrap();
+        p.finish(&mut got).unwrap();
+        assert_eq!(got, parse_stream(&sample_text()).unwrap());
+        assert_eq!(p.offset(), text.len() as u64);
+    }
+
+    #[test]
+    fn malformed_complete_line_reports_its_line_number() {
+        let text = format!("{}not json\n", sample_text());
+        let mut p = TailParser::new();
+        let mut got = Vec::new();
+        let err = p.feed(text.as_bytes(), &mut got).unwrap_err();
+        assert!(err.to_string().contains("line 5"), "{err}");
+    }
+
+    #[test]
+    fn follower_tails_a_growing_file() {
+        let path = std::env::temp_dir().join("asyncflow_tail_follower_test.ndjson");
+        let text = sample_text();
+        let cut = text.len() - 7;
+        std::fs::write(&path, &text.as_bytes()[..cut]).unwrap();
+
+        let mut f = TailFollower::open(&path).unwrap();
+        let mut got = Vec::new();
+        f.poll(&mut got).unwrap();
+        assert_eq!(got.len(), 3, "partial tail held back");
+
+        // The writer appends the rest; the next poll completes it.
+        std::fs::write(&path, text.as_bytes()).unwrap();
+        let mut f2 = TailFollower::resume(&path, f.offset()).unwrap();
+        f2.poll(&mut got).unwrap();
+        assert_eq!(got, parse_stream(&text).unwrap());
+        assert_eq!(f2.offset(), text.len() as u64);
+        let _ = std::fs::remove_file(&path);
+    }
+}

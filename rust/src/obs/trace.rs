@@ -32,6 +32,7 @@
 use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
+use crate::failure::ResilienceStats;
 use crate::metrics::{CapacityTimeline, TaskRecord, UtilizationTrace};
 use crate::util::json::{from_u64, obj, FromJson, Json};
 use crate::util::stats::Summary;
@@ -110,6 +111,20 @@ pub struct ReplayedRun {
     pub retries: usize,
     /// Checkpoint markers observed.
     pub checkpoints: usize,
+    /// Arrival window from the stream's [`ObsEvent::TrafficMeta`]
+    /// header (`None` for raw-`Coordinator` streams, which have no
+    /// traffic layer).
+    pub arrival_window: Option<f64>,
+    /// Goodput-vs-lost ledger re-accumulated from the stream, in stream
+    /// order — the same order the live engine booked each term, so
+    /// every float is bit-identical to the live
+    /// [`ResilienceStats`]. `Some` when the header says failure
+    /// injection was configured, or (headerless streams) when any
+    /// fault-family event appears. Caveat: a stochastic fault drawn
+    /// when *no* schedulable node remains bumps only the live
+    /// `failures_injected` — there is no node to attribute, so no event
+    /// — and that starved corner undercounts here.
+    pub ledger: Option<ResilienceStats>,
 }
 
 /// Per-(slot, local) record state while replaying.
@@ -138,6 +153,9 @@ pub fn replay(events: &[ObsEvent]) -> Result<ReplayedRun> {
     let mut intervals: Vec<ExecInterval> = Vec::new();
     let (mut faults, mut kills, mut retries, mut checkpoints) = (0, 0, 0, 0);
     let mut workflows_completed = 0usize;
+    let mut arrival_window: Option<f64> = None;
+    let mut failure_configured = false;
+    let mut stats = ResilienceStats::default();
 
     let route_of = |open: &BTreeMap<usize, (usize, usize)>, uid: usize| {
         open.get(&uid).copied().ok_or_else(|| {
@@ -147,6 +165,10 @@ pub fn replay(events: &[ObsEvent]) -> Result<ReplayedRun> {
 
     for ev in events {
         match ev {
+            ObsEvent::TrafficMeta { window, failure, .. } => {
+                arrival_window = Some(*window);
+                failure_configured |= *failure;
+            }
             ObsEvent::CapacityOffered { t, cores, gpus } => match capacity.as_mut() {
                 None => capacity = Some(CapacityTimeline::constant(*cores, *gpus)),
                 Some(cap) => cap.record(*t, *cores, *gpus),
@@ -201,6 +223,14 @@ pub fn replay(events: &[ObsEvent]) -> Result<ReplayedRun> {
                 })?;
                 r.finished = *t;
                 r.failed = *failed;
+                // Goodput in stream order — the live engine books it as
+                // each completion drains, so the float accumulation
+                // order (and therefore every bit) matches.
+                if r.started.is_finite() {
+                    let dt = *t - r.started;
+                    stats.goodput_core_s += dt * r.cores as f64;
+                    stats.goodput_gpu_s += dt * r.gpus as f64;
+                }
                 if let Some(start) = exec_open.remove(uid) {
                     intervals.push(ExecInterval {
                         kind: r.kind.clone(),
@@ -214,6 +244,8 @@ pub fn replay(events: &[ObsEvent]) -> Result<ReplayedRun> {
             }
             ObsEvent::TaskKilled { t, uid, slot, local, .. } => {
                 kills += 1;
+                failure_configured = true;
+                stats.tasks_killed += 1;
                 if let Some(start) = exec_open.remove(uid) {
                     let kind = recs
                         .get(&(*slot, *local))
@@ -222,16 +254,31 @@ pub fn replay(events: &[ObsEvent]) -> Result<ReplayedRun> {
                     let (cores, gpus) = recs
                         .get(&(*slot, *local))
                         .map_or((0, 0), |r| (r.cores, r.gpus));
+                    // Lost partial work, mirroring the live booking
+                    // (`(now - started).max(0.0)` times the *requested*
+                    // shape) term for term.
+                    let dt = (*t - start).max(0.0);
+                    stats.lost_core_s += dt * cores as f64;
+                    stats.lost_gpu_s += dt * gpus as f64;
                     intervals.push(ExecInterval { kind, start, end: *t, cores, gpus });
                 }
             }
             ObsEvent::WorkflowCompleted { .. } => workflows_completed += 1,
-            ObsEvent::NodeFault { .. } => faults += 1,
+            ObsEvent::NodeFault { .. } => {
+                faults += 1;
+                failure_configured = true;
+                stats.failures_injected += 1;
+            }
             ObsEvent::CheckpointTaken { .. } => checkpoints += 1,
-            ObsEvent::RetryScheduled { .. }
-            | ObsEvent::RetriesExhausted { .. }
-            | ObsEvent::PilotResized { .. }
-            | ObsEvent::AutoscaleDecision { .. } => {}
+            ObsEvent::RetryScheduled { .. } => {
+                failure_configured = true;
+                stats.retries_scheduled += 1;
+            }
+            ObsEvent::RetriesExhausted { .. } => {
+                failure_configured = true;
+                stats.retries_exhausted += 1;
+            }
+            ObsEvent::PilotResized { .. } | ObsEvent::AutoscaleDecision { .. } => {}
         }
     }
 
@@ -249,16 +296,19 @@ pub fn replay(events: &[ObsEvent]) -> Result<ReplayedRun> {
     let mut records = Vec::new();
     let mut record_kinds = Vec::new();
     let mut n_unfinished = 0usize;
-    for ((_, _), r) in recs.iter() {
+    for ((slot, _), r) in recs.iter() {
         if !r.finished.is_finite() {
             n_unfinished += 1;
             continue;
         }
+        // `set_name`/`pipeline` carry the kind label and workflow slot
+        // so a replayed run can feed renderers that group by lane
+        // (`chrome_trace_records`) — no live reader depends on them.
         records.push(TaskRecord {
             uid: records.len(),
             set_idx: 0,
-            set_name: String::new(),
-            pipeline: 0,
+            set_name: r.kind.clone(),
+            pipeline: *slot,
             branch: 0,
             submitted: r.submitted,
             started: r.started,
@@ -310,6 +360,8 @@ pub fn replay(events: &[ObsEvent]) -> Result<ReplayedRun> {
         kills,
         retries,
         checkpoints,
+        arrival_window,
+        ledger: failure_configured.then_some(stats),
     })
 }
 

@@ -1,0 +1,504 @@
+//! The `asyncflow watch` console: a zero-dependency terminal dashboard
+//! over a recorded or live-tailed event stream.
+//!
+//! Three layers, separable on purpose:
+//!
+//! - [`Headline`] / [`headline`]: the run-so-far reduced to the same
+//!   figures [`TrafficReport`](crate::traffic::TrafficReport) prints —
+//!   computed from a [`ReplayedRun`] with the *same folds in the same
+//!   order* as the live report, so every float is bit-identical to
+//!   what the live run would print (`tests/obs_watch.rs` asserts
+//!   equality down to `f64::to_bits`).
+//! - [`render_frame`]: one dashboard frame from a
+//!   [`WindowStats`] — sparklines, lane rates, per-kind concurrency.
+//!   Pure string building over sim-time rollups: byte-deterministic
+//!   per stream, which is what lets `--once` run in CI.
+//! - [`follow`]: the only impure part — a wall-clock poll loop that
+//!   tails a growing file and repaints. Quarantined here (and
+//!   allow-listed for the DET003 lint) so everything above stays
+//!   clock-free.
+
+use std::path::Path;
+
+use crate::util::error::Result;
+use crate::util::stats::Summary;
+
+use super::tail::TailFollower;
+use super::trace::{replay, ReplayedRun};
+use super::window::WindowStats;
+use super::ObsEvent;
+
+/// The live `TrafficReport` figures reconstructed from a stream.
+///
+/// Field-for-field these reproduce the live report's numbers using the
+/// identical expressions (`metrics::throughput`, `BacklogTrace` means,
+/// `UtilizationTrace::mean_utilization`, `Summary` over slot-ordered
+/// waits), so a recorded stream answers "what would the run have
+/// printed" exactly — not approximately.
+#[derive(Debug, Clone)]
+pub struct Headline {
+    /// Workflows that arrived.
+    pub n_workflows: usize,
+    /// Completed task records.
+    pub n_tasks: usize,
+    /// Records flagged failed. (The live report counts the engine's
+    /// `failed_tasks`; these agree on any complete stream.)
+    pub failed_tasks: usize,
+    /// Tasks submitted but not completed by stream end.
+    pub n_unfinished: usize,
+    /// Last task finish time.
+    pub makespan: f64,
+    /// Time-integrated core utilization against offered capacity.
+    pub cpu_utilization: f64,
+    /// ... and GPU utilization.
+    pub gpu_utilization: f64,
+    /// Completed tasks per second over the makespan.
+    pub task_throughput: f64,
+    /// Completed workflows per second over the makespan.
+    pub workflow_throughput: f64,
+    /// Time-averaged queued tasks over the horizon.
+    pub mean_backlog_tasks: f64,
+    /// Peak queued (tasks, cores, gpus).
+    pub peak_backlog: (u64, u64, u64),
+    /// Arrival window from the stream header (`None` for raw
+    /// coordinator streams).
+    pub arrival_window: Option<f64>,
+    /// Mean backlog over the first half of the arrival window.
+    pub backlog_first_half: Option<f64>,
+    /// ... and the second half (the saturation signal).
+    pub backlog_second_half: Option<f64>,
+    /// Wait distribution across workflows (slot order).
+    pub wait: Option<Summary>,
+    /// TTX distribution across workflows (slot order).
+    pub ttx: Option<Summary>,
+    /// Resilience ledger re-accumulated in stream order.
+    pub ledger: Option<crate::failure::ResilienceStats>,
+}
+
+impl Headline {
+    /// Second-half over first-half mean backlog (the live report's
+    /// growth signal); `None` without an arrival window.
+    pub fn backlog_growth(&self) -> Option<f64> {
+        match (self.backlog_second_half, self.backlog_first_half) {
+            (Some(s), Some(f)) => Some(s / f.max(1e-9)),
+            _ => None,
+        }
+    }
+
+    /// The live report's saturation heuristic; `None` without an
+    /// arrival window.
+    pub fn is_saturated(&self) -> Option<bool> {
+        match (self.backlog_second_half, self.backlog_first_half) {
+            (Some(s), Some(f)) => Some(s > 2.0 * f.max(0.5)),
+            _ => None,
+        }
+    }
+
+    /// Multi-line summary mirroring `TrafficReport::render`'s formats
+    /// line for line, so live and replayed output diff cleanly.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        match self.arrival_window {
+            Some(w) => s.push_str(&format!(
+                "traffic: {} workflows ({} tasks, {} failed) over a {:.0} s arrival window\n",
+                self.n_workflows, self.n_tasks, self.failed_tasks, w,
+            )),
+            None => s.push_str(&format!(
+                "trace: {} workflows ({} tasks, {} failed)\n",
+                self.n_workflows, self.n_tasks, self.failed_tasks,
+            )),
+        }
+        if let Some(w) = &self.wait {
+            s.push_str(&format!(
+                "  wait    mean {:>8.1} s  p50 {:>8.1}  p95 {:>8.1}  p99 {:>8.1}  max {:>8.1}\n",
+                w.mean, w.p50, w.p95, w.p99, w.max
+            ));
+        }
+        if let Some(w) = &self.ttx {
+            s.push_str(&format!(
+                "  TTX     mean {:>8.1} s  p50 {:>8.1}  p95 {:>8.1}  p99 {:>8.1}  max {:>8.1}\n",
+                w.mean, w.p50, w.p95, w.p99, w.max
+            ));
+        }
+        match self.backlog_growth() {
+            Some(g) => s.push_str(&format!(
+                "  backlog mean {:.1} tasks  peak {} tasks / {} cores / {} gpus  half-window growth {:.2}x ({})\n",
+                self.mean_backlog_tasks,
+                self.peak_backlog.0,
+                self.peak_backlog.1,
+                self.peak_backlog.2,
+                g,
+                if self.is_saturated() == Some(true) { "SATURATED" } else { "bounded" },
+            )),
+            None => s.push_str(&format!(
+                "  backlog mean {:.1} tasks  peak {} tasks / {} cores / {} gpus\n",
+                self.mean_backlog_tasks,
+                self.peak_backlog.0,
+                self.peak_backlog.1,
+                self.peak_backlog.2,
+            )),
+        }
+        s.push_str(&format!(
+            "  makespan {:.0} s  throughput {:.4} wf/s, {:.3} tasks/s  cpu {:.1}%  gpu {:.1}%\n",
+            self.makespan,
+            self.workflow_throughput,
+            self.task_throughput,
+            self.cpu_utilization * 100.0,
+            self.gpu_utilization * 100.0,
+        ));
+        if let Some(r) = &self.ledger {
+            s.push_str(&format!(
+                "  resilience: {} node failures, {} tasks killed, {} retries ({} exhausted)\n",
+                r.failures_injected, r.tasks_killed, r.retries_scheduled, r.retries_exhausted,
+            ));
+            let delivered = r.goodput_core_s + r.lost_core_s;
+            s.push_str(&format!(
+                "    goodput {:.0} core-s / {:.0} gpu-s; lost {:.0} core-s / {:.0} gpu-s ({:.1}% of delivered core-time wasted)\n",
+                r.goodput_core_s,
+                r.goodput_gpu_s,
+                r.lost_core_s,
+                r.lost_gpu_s,
+                if delivered > 0.0 { r.lost_core_s / delivered * 100.0 } else { 0.0 },
+            ));
+        }
+        if self.n_unfinished > 0 {
+            s.push_str(&format!(
+                "  note: {} tasks unfinished at stream end (live or truncated stream)\n",
+                self.n_unfinished,
+            ));
+        }
+        s
+    }
+}
+
+/// Reduce a replayed run to the live report's headline figures. See
+/// [`Headline`] for the bit-equality contract.
+pub fn headline(run: &ReplayedRun) -> Headline {
+    use crate::metrics::{throughput, BacklogTrace, UtilizationTrace};
+    let util = UtilizationTrace::from_records_capacity(&run.records, run.capacity.clone());
+    let (cpu_utilization, gpu_utilization) = util.mean_utilization();
+    let makespan = run.records.iter().map(|r| r.finished).fold(0.0, f64::max);
+    let workflow_throughput = if makespan > 0.0 {
+        run.arrivals.len() as f64 / makespan
+    } else {
+        0.0
+    };
+    let backlog = BacklogTrace::from_records(&run.records);
+    let (backlog_first_half, backlog_second_half) = match run.arrival_window {
+        Some(w) => {
+            let half = w / 2.0;
+            (
+                Some(backlog.mean_tasks_between(0.0, half)),
+                Some(backlog.mean_tasks_between(half, w)),
+            )
+        }
+        None => (None, None),
+    };
+    Headline {
+        n_workflows: run.arrivals.len(),
+        n_tasks: run.records.len(),
+        failed_tasks: run.records.iter().filter(|r| r.failed).count(),
+        n_unfinished: run.n_unfinished,
+        makespan,
+        cpu_utilization,
+        gpu_utilization,
+        task_throughput: throughput(&run.records),
+        workflow_throughput,
+        mean_backlog_tasks: backlog.mean_tasks(),
+        peak_backlog: backlog.peak(),
+        arrival_window: run.arrival_window,
+        backlog_first_half,
+        backlog_second_half,
+        wait: Summary::try_of(&run.waits),
+        ttx: Summary::try_of(&run.ttxs),
+        ledger: run.ledger,
+    }
+}
+
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Render values as a unicode sparkline scaled to `max` (values at or
+/// below zero draw the lowest bar; `max <= 0` flattens everything).
+pub fn sparkline(values: &[f64], max: f64) -> String {
+    values
+        .iter()
+        .map(|&v| {
+            if max <= 0.0 || !v.is_finite() || v <= 0.0 {
+                SPARK[0]
+            } else {
+                let lvl = ((v / max) * 7.0).round();
+                let lvl = if lvl < 0.0 { 0.0 } else if lvl > 7.0 { 7.0 } else { lvl };
+                SPARK.get(lvl as usize).copied().unwrap_or('█')
+            }
+        })
+        .collect()
+}
+
+/// Width of the sparkline strips in a frame.
+const SPARK_W: usize = 48;
+
+/// Render one dashboard frame from the rollups. Pure function of the
+/// consumed stream (sim-time only): the same events produce the same
+/// bytes, with or without `color` (which only adds ANSI SGR wrapping,
+/// never changes content). `source` labels the stream in the header.
+pub fn render_frame(ws: &WindowStats, source: &str, color: bool) -> String {
+    let bold = |s: &str| if color { format!("\x1b[1m{s}\x1b[0m") } else { s.to_string() };
+    let alert = |s: &str, on: bool| {
+        if color && on {
+            format!("\x1b[31;1m{s}\x1b[0m")
+        } else {
+            s.to_string()
+        }
+    };
+    let mut out = String::new();
+    out.push_str(&bold(&format!("asyncflow watch — {source}")));
+    out.push('\n');
+    let (used_c, used_g) = ws.used();
+    let (off_c, off_g) = ws.offered();
+    let util_pct = if off_c > 0 {
+        used_c as f64 / off_c as f64 * 100.0
+    } else {
+        0.0
+    };
+    out.push_str(&format!(
+        "  sim t {:>9.1} s   window {:>6.0} s   events {}\n",
+        ws.now(),
+        ws.effective_window(),
+        ws.n_events(),
+    ));
+    out.push_str(&format!(
+        "  capacity {used_c}/{off_c} cores  {used_g}/{off_g} gpus   cpu {util_pct:.1}%\n",
+    ));
+    let (peak_q, peak_r) = ws.peaks();
+    out.push_str(&format!(
+        "  tasks    {} queued  {} running  {} backoff   peak {}q/{}r\n",
+        ws.queued(),
+        ws.running(),
+        ws.backoff(),
+        peak_q,
+        peak_r,
+    ));
+
+    // Sparklines over the trailing window.
+    let bl = ws.backlog_samples(SPARK_W);
+    let bl_max = bl.iter().copied().fold(0.0f64, f64::max);
+    out.push_str(&format!(
+        "  backlog  {}  now {:>4}  max {:>4.0}\n",
+        sparkline(&bl, bl_max),
+        ws.queued(),
+        bl_max,
+    ));
+    let ut = ws.util_samples(SPARK_W);
+    out.push_str(&format!(
+        "  cpu util {}  now {:>4.0}%\n",
+        sparkline(&ut, 1.0),
+        util_pct,
+    ));
+
+    // Saturation verdict from the windowed backlog trend: same 2x rule
+    // as the live report, applied to the window's two halves.
+    let half = bl.len() / 2;
+    let (first, second) = bl.split_at(half);
+    let mean = |xs: &[f64]| {
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    };
+    let (m1, m2) = (mean(first), mean(second));
+    let saturated = m2 > 2.0 * m1.max(0.5);
+    out.push_str(&format!(
+        "  window backlog growth {:.2}x ({})\n",
+        m2 / m1.max(1e-9),
+        alert(
+            if saturated { "SATURATED" } else { "bounded" },
+            saturated
+        ),
+    ));
+
+    // Lane table: cumulative, in-window, rate.
+    let t = ws.totals();
+    let w = ws.in_window();
+    out.push_str("  lane          total   in-win    per-s\n");
+    let rows: [(&str, u64, u64); 7] = [
+        ("arrivals", t.arrivals, w.arrivals),
+        ("submits", t.submissions + t.resubmissions, w.submissions),
+        ("starts", t.starts, w.starts),
+        ("completes", t.completions, w.completions),
+        ("faults", t.faults, w.faults),
+        ("kills", t.kills, w.kills),
+        ("retries", t.retries_scheduled, w.retries),
+    ];
+    for (name, total, in_win) in rows {
+        out.push_str(&format!(
+            "  {name:<11} {total:>7}  {in_win:>7}  {:>7.3}\n",
+            ws.rate(in_win),
+        ));
+    }
+
+    // Per-kind concurrency.
+    let kinds = ws.kind_table();
+    if !kinds.is_empty() {
+        out.push_str("  kind              run   peak   done\n");
+        for k in &kinds {
+            out.push_str(&format!(
+                "  {:<15} {:>5}  {:>5}  {:>5}\n",
+                k.kind, k.running, k.peak, k.completed,
+            ));
+        }
+    }
+
+    // Windowed latency percentiles.
+    match (ws.wait(), ws.ttx()) {
+        (Some(wt), Some(tx)) => out.push_str(&format!(
+            "  wait p50 {:>8.1} s  p99 {:>8.1} s   TTX p50 {:>8.1} s  p99 {:>8.1} s\n",
+            wt.p50, wt.p99, tx.p50, tx.p99,
+        )),
+        (Some(wt), None) => out.push_str(&format!(
+            "  wait p50 {:>8.1} s  p99 {:>8.1} s   TTX (none in window)\n",
+            wt.p50, wt.p99,
+        )),
+        _ => {}
+    }
+    if let Some((aw, failure)) = ws.meta() {
+        out.push_str(&format!(
+            "  stream: traffic, arrival window {:.0} s{}\n",
+            aw,
+            if failure { ", failure injection on" } else { "" },
+        ));
+    }
+    out
+}
+
+/// One-shot dashboard: roll up `events`, render a plain (colorless)
+/// frame, and append the [`Headline`] reconstruction below it. Replay
+/// failures (e.g. a stream with no capacity point) degrade to a note
+/// rather than an error — the frame itself never needs a full replay.
+pub fn watch_once(events: &[ObsEvent], source: &str, window: f64) -> String {
+    let mut ws = WindowStats::new(window);
+    for ev in events {
+        ws.push(ev);
+    }
+    let mut out = render_frame(&ws, source, false);
+    out.push('\n');
+    match replay(events) {
+        Ok(run) => out.push_str(&headline(&run).render()),
+        Err(e) => out.push_str(&format!("  headline unavailable: {e}\n")),
+    }
+    out
+}
+
+/// Follow a growing events file, repainting every `interval_s` wall
+/// seconds; stops (Ok) after `max_frames` frames if given, else runs
+/// until the process is interrupted. The sole wall-clock dependency in
+/// the obs layer (DET003-exempt by configuration): rollups and frames
+/// remain pure functions of the stream, only the repaint cadence and
+/// screen clearing live here.
+pub fn follow(
+    path: &Path,
+    window: f64,
+    interval_s: f64,
+    max_frames: Option<u64>,
+) -> Result<()> {
+    use std::io::Write;
+    let mut follower = TailFollower::open(path)?;
+    let mut ws = WindowStats::new(window);
+    let mut fresh: Vec<ObsEvent> = Vec::new();
+    let mut frames = 0u64;
+    let source = path.display().to_string();
+    loop {
+        fresh.clear();
+        let stream_note = match follower.poll(&mut fresh) {
+            Ok(_) => None,
+            Err(e) => Some(format!("stream error: {e}")),
+        };
+        for ev in &fresh {
+            ws.push(ev);
+        }
+        let mut frame = String::from("\x1b[2J\x1b[H");
+        frame.push_str(&render_frame(&ws, &source, true));
+        frame.push_str(&format!(
+            "  tail: {} bytes consumed, {} pending   (ctrl-c to stop)\n",
+            follower.offset(),
+            follower.pending_bytes(),
+        ));
+        if let Some(note) = &stream_note {
+            frame.push_str(&format!("  {note}\n"));
+        }
+        let mut stdout = std::io::stdout().lock();
+        let _ = stdout.write_all(frame.as_bytes());
+        let _ = stdout.flush();
+        drop(stdout);
+        if stream_note.is_some() {
+            // A malformed line never heals on retry; leave the last
+            // frame (with the error) on screen and stop following.
+            return Ok(());
+        }
+        frames += 1;
+        if max_frames.is_some_and(|m| frames >= m) {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval_s.max(0.05)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_scales_and_clamps() {
+        assert_eq!(sparkline(&[0.0, 1.0], 1.0), "▁█");
+        assert_eq!(sparkline(&[0.5], 1.0), "▅");
+        // Everything flat when max is zero; negatives clamp low.
+        assert_eq!(sparkline(&[3.0, -1.0], 0.0), "▁▁");
+        // Values above max clamp to the top glyph.
+        assert_eq!(sparkline(&[9.0], 1.0), "█");
+    }
+
+    #[test]
+    fn frame_is_deterministic_and_color_only_wraps() {
+        let evs = crate::obs::samples();
+        let mut a = WindowStats::new(300.0);
+        let mut b = WindowStats::new(300.0);
+        for ev in &evs {
+            a.push(ev);
+            b.push(ev);
+        }
+        let fa = render_frame(&a, "s", false);
+        let fb = render_frame(&b, "s", false);
+        assert_eq!(fa, fb);
+        // Color mode only inserts ANSI escapes.
+        let fc = render_frame(&a, "s", true);
+        let stripped: String = {
+            let mut out = String::new();
+            let mut esc = false;
+            for ch in fc.chars() {
+                if esc {
+                    if ch == 'm' {
+                        esc = false;
+                    }
+                } else if ch == '\x1b' {
+                    esc = true;
+                } else {
+                    out.push(ch);
+                }
+            }
+            out
+        };
+        assert_eq!(stripped, fa);
+        assert!(fa.contains("asyncflow watch — s"));
+        assert!(fa.contains("lane"));
+    }
+
+    #[test]
+    fn watch_once_appends_a_headline() {
+        let evs = crate::obs::samples();
+        let out = watch_once(&evs, "sample", 0.0);
+        assert!(out.contains("asyncflow watch — sample"));
+        // samples() carries a traffic header, so the headline renders
+        // the traffic form with an arrival window.
+        assert!(out.contains("arrival window"));
+    }
+}

@@ -1,0 +1,707 @@
+//! Sliding-window rollups over the event stream (the `watch` model).
+//!
+//! [`WindowStats`] consumes [`ObsEvent`]s in stream order and maintains
+//! two views at once:
+//!
+//! - **instantaneous state**: queued / running / in-backoff task
+//!   counts, cores and GPUs in use vs offered, per-kind concurrency
+//!   with peaks — the numbers a live operator wants *right now*;
+//! - **windowed rollups**: ring buffers of event timestamps inside the
+//!   trailing window `(now − w, now]`, yielding arrival / start /
+//!   completion / fault rates and windowed wait / TTX percentiles.
+//!
+//! ## Determinism contract
+//!
+//! Everything is keyed on **simulation time** — `now` is the latest
+//! event time seen, never the wall clock, and eviction uses the exact
+//! comparison `t <= now − w` on unrounded `f64`s. Feeding the same
+//! stream therefore produces the same rollups whether it arrives in
+//! one shot, byte-by-byte through a [`TailParser`](super::tail), or
+//! across a watch session's polls — and two wake policies that emit
+//! byte-identical streams roll up identically. The property test in
+//! `tests/obs_watch.rs` recomputes every figure from scratch over the
+//! raw prefix and asserts equality at each step, across seeds ×
+//! `WakePolicy`.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::util::stats::Summary;
+
+use super::ObsEvent;
+
+/// Cumulative per-lane event totals since the start of the stream.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaneTotals {
+    /// Workflows materialized.
+    pub arrivals: u64,
+    /// Workflows completed.
+    pub workflows_completed: u64,
+    /// First-attempt task submissions.
+    pub submissions: u64,
+    /// Retry resubmissions (`attempt > 0`).
+    pub resubmissions: u64,
+    /// Task launches.
+    pub starts: u64,
+    /// Task completions.
+    pub completions: u64,
+    /// Node faults.
+    pub faults: u64,
+    /// Tasks killed by faults.
+    pub kills: u64,
+    /// Retries scheduled into backoff.
+    pub retries_scheduled: u64,
+    /// Retry budgets exhausted.
+    pub retries_exhausted: u64,
+    /// Timed plan resizes applied.
+    pub resizes: u64,
+    /// Autoscaler evaluations.
+    pub autoscale_evals: u64,
+    /// Autoscaler evaluations that changed the allocation.
+    pub autoscale_acts: u64,
+    /// Checkpoint seam markers.
+    pub checkpoints: u64,
+}
+
+/// Event counts inside the trailing window, one per rate lane.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaneWindow {
+    /// Workflow arrivals in-window.
+    pub arrivals: u64,
+    /// Task submissions (all attempts) in-window.
+    pub submissions: u64,
+    /// Task launches in-window.
+    pub starts: u64,
+    /// Task completions in-window.
+    pub completions: u64,
+    /// Node faults in-window.
+    pub faults: u64,
+    /// Task kills in-window.
+    pub kills: u64,
+    /// Retries scheduled in-window.
+    pub retries: u64,
+}
+
+/// One row of the per-kind concurrency table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KindRow {
+    /// Kind label.
+    pub kind: String,
+    /// Tasks of this kind running now.
+    pub running: u64,
+    /// Peak concurrent tasks of this kind.
+    pub peak: u64,
+    /// Completions of this kind since stream start.
+    pub completed: u64,
+}
+
+/// A task the stream has submitted but not retired.
+#[derive(Debug, Clone)]
+struct OpenTask {
+    kind: usize,
+    cores: u64,
+    gpus: u64,
+    running: bool,
+}
+
+#[derive(Debug, Clone)]
+struct SlotState {
+    arrival: f64,
+    first_start: Option<f64>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct KindLane {
+    running: u64,
+    peak: u64,
+    completed: u64,
+}
+
+/// Sliding-window rollup engine. See the module docs for the contract.
+#[derive(Debug)]
+pub struct WindowStats {
+    window: f64,
+    now: f64,
+    t0: Option<f64>,
+    n_events: u64,
+    cum: LaneTotals,
+
+    // Instantaneous state.
+    queued: u64,
+    running: u64,
+    backoff: u64,
+    peak_queued: u64,
+    peak_running: u64,
+    used_cores: u64,
+    used_gpus: u64,
+    offered: (u64, u64),
+    meta: Option<(f64, bool)>,
+
+    open: BTreeMap<usize, OpenTask>,
+    slots: BTreeMap<usize, SlotState>,
+    kind_ids: BTreeMap<String, usize>,
+    kinds: Vec<KindLane>,
+
+    // Windowed rings: event timestamps per rate lane.
+    q_arrivals: VecDeque<f64>,
+    q_submissions: VecDeque<f64>,
+    q_starts: VecDeque<f64>,
+    q_completions: VecDeque<f64>,
+    q_faults: VecDeque<f64>,
+    q_kills: VecDeque<f64>,
+    q_retries: VecDeque<f64>,
+    // Windowed samples: (t, value).
+    q_waits: VecDeque<(f64, f64)>,
+    q_ttxs: VecDeque<(f64, f64)>,
+
+    // Step histories for sparklines: (t, value); the point at or
+    // before the window start is retained as the step baseline.
+    h_backlog: VecDeque<(f64, f64)>,
+    h_util: VecDeque<(f64, f64)>,
+}
+
+impl WindowStats {
+    /// Rollups over a trailing window of `window` sim-seconds
+    /// (non-positive or non-finite values mean "everything").
+    pub fn new(window: f64) -> WindowStats {
+        let window = if window.is_finite() && window > 0.0 {
+            window
+        } else {
+            f64::INFINITY
+        };
+        WindowStats {
+            window,
+            now: 0.0,
+            t0: None,
+            n_events: 0,
+            cum: LaneTotals::default(),
+            queued: 0,
+            running: 0,
+            backoff: 0,
+            peak_queued: 0,
+            peak_running: 0,
+            used_cores: 0,
+            used_gpus: 0,
+            offered: (0, 0),
+            meta: None,
+            open: BTreeMap::new(),
+            slots: BTreeMap::new(),
+            kind_ids: BTreeMap::new(),
+            kinds: Vec::new(),
+            q_arrivals: VecDeque::new(),
+            q_submissions: VecDeque::new(),
+            q_starts: VecDeque::new(),
+            q_completions: VecDeque::new(),
+            q_faults: VecDeque::new(),
+            q_kills: VecDeque::new(),
+            q_retries: VecDeque::new(),
+            q_waits: VecDeque::new(),
+            q_ttxs: VecDeque::new(),
+            h_backlog: VecDeque::new(),
+            h_util: VecDeque::new(),
+        }
+    }
+
+    /// Consume one event (must arrive in stream order).
+    pub fn push(&mut self, ev: &ObsEvent) {
+        let t = ev.time();
+        if self.t0.is_none() {
+            self.t0 = Some(t);
+        }
+        if t > self.now {
+            self.now = t;
+        }
+        self.n_events += 1;
+        match ev {
+            ObsEvent::TrafficMeta { window, failure, .. } => {
+                self.meta = Some((*window, *failure));
+            }
+            ObsEvent::CapacityOffered { cores, gpus, .. } => {
+                self.offered = (*cores, *gpus);
+                self.note_util(t);
+            }
+            ObsEvent::WorkflowArrived { slot, arrival, .. } => {
+                self.cum.arrivals += 1;
+                self.q_arrivals.push_back(t);
+                self.slots
+                    .insert(*slot, SlotState { arrival: *arrival, first_start: None });
+            }
+            ObsEvent::TaskSubmitted { uid, kind, cores, gpus, attempt, .. } => {
+                if *attempt > 0 {
+                    self.cum.resubmissions += 1;
+                    self.backoff = self.backoff.saturating_sub(1);
+                } else {
+                    self.cum.submissions += 1;
+                }
+                self.q_submissions.push_back(t);
+                self.queued += 1;
+                self.peak_queued = self.peak_queued.max(self.queued);
+                self.note_backlog(t);
+                let kind = self.kind_id(kind);
+                self.open
+                    .insert(*uid, OpenTask { kind, cores: *cores, gpus: *gpus, running: false });
+            }
+            ObsEvent::TaskStarted { uid, slot, cores, gpus, .. } => {
+                self.cum.starts += 1;
+                self.q_starts.push_back(t);
+                self.queued = self.queued.saturating_sub(1);
+                self.running += 1;
+                self.peak_running = self.peak_running.max(self.running);
+                self.used_cores += cores;
+                self.used_gpus += gpus;
+                if let Some(task) = self.open.get_mut(uid) {
+                    task.running = true;
+                    let k = task.kind;
+                    if let Some(lane) = self.kinds.get_mut(k) {
+                        lane.running += 1;
+                        lane.peak = lane.peak.max(lane.running);
+                    }
+                }
+                if let Some(s) = self.slots.get_mut(slot) {
+                    if s.first_start.is_none() {
+                        s.first_start = Some(t);
+                        self.q_waits.push_back((t, t - s.arrival));
+                    }
+                }
+                self.note_backlog(t);
+                self.note_util(t);
+            }
+            ObsEvent::TaskCompleted { uid, .. } => {
+                self.cum.completions += 1;
+                self.q_completions.push_back(t);
+                self.running = self.running.saturating_sub(1);
+                self.retire(*uid, true);
+                self.note_util(t);
+            }
+            ObsEvent::WorkflowCompleted { slot, .. } => {
+                self.cum.workflows_completed += 1;
+                if let Some(s) = self.slots.get(slot) {
+                    self.q_ttxs.push_back((t, t - s.arrival));
+                }
+            }
+            ObsEvent::NodeFault { .. } => {
+                self.cum.faults += 1;
+                self.q_faults.push_back(t);
+            }
+            ObsEvent::TaskKilled { uid, .. } => {
+                self.cum.kills += 1;
+                self.q_kills.push_back(t);
+                self.running = self.running.saturating_sub(1);
+                self.release(*uid);
+                self.note_util(t);
+            }
+            ObsEvent::RetryScheduled { .. } => {
+                self.cum.retries_scheduled += 1;
+                self.q_retries.push_back(t);
+                self.backoff += 1;
+            }
+            ObsEvent::RetriesExhausted { uid, .. } => {
+                self.cum.retries_exhausted += 1;
+                self.open.remove(uid);
+            }
+            ObsEvent::PilotResized { .. } => self.cum.resizes += 1,
+            ObsEvent::AutoscaleDecision { acted, .. } => {
+                self.cum.autoscale_evals += 1;
+                if *acted {
+                    self.cum.autoscale_acts += 1;
+                }
+            }
+            ObsEvent::CheckpointTaken { .. } => self.cum.checkpoints += 1,
+        }
+        self.evict();
+    }
+
+    /// Free a running task's resources and per-kind slot (kill path:
+    /// the entry stays open, awaiting its retry resubmission).
+    fn release(&mut self, uid: usize) {
+        if let Some(task) = self.open.get_mut(&uid) {
+            if task.running {
+                task.running = false;
+                self.used_cores = self.used_cores.saturating_sub(task.cores);
+                self.used_gpus = self.used_gpus.saturating_sub(task.gpus);
+                let k = task.kind;
+                if let Some(lane) = self.kinds.get_mut(k) {
+                    lane.running = lane.running.saturating_sub(1);
+                }
+            }
+        }
+    }
+
+    /// Retire a task for good (completion path).
+    fn retire(&mut self, uid: usize, completed: bool) {
+        self.release(uid);
+        if let Some(task) = self.open.remove(&uid) {
+            if completed {
+                if let Some(lane) = self.kinds.get_mut(task.kind) {
+                    lane.completed += 1;
+                }
+            }
+        }
+    }
+
+    fn kind_id(&mut self, name: &str) -> usize {
+        if let Some(&k) = self.kind_ids.get(name) {
+            return k;
+        }
+        let k = self.kinds.len();
+        self.kind_ids.insert(name.to_string(), k);
+        self.kinds.push(KindLane::default());
+        k
+    }
+
+    fn note_backlog(&mut self, t: f64) {
+        push_step(&mut self.h_backlog, t, self.queued as f64);
+    }
+
+    fn note_util(&mut self, t: f64) {
+        let frac = if self.offered.0 > 0 {
+            self.used_cores as f64 / self.offered.0 as f64
+        } else {
+            0.0
+        };
+        push_step(&mut self.h_util, t, frac);
+    }
+
+    /// Evict everything outside the half-open window `(now − w, now]`.
+    fn evict(&mut self) {
+        if !self.window.is_finite() {
+            return;
+        }
+        let cut = self.now - self.window;
+        for q in [
+            &mut self.q_arrivals,
+            &mut self.q_submissions,
+            &mut self.q_starts,
+            &mut self.q_completions,
+            &mut self.q_faults,
+            &mut self.q_kills,
+            &mut self.q_retries,
+        ] {
+            while q.front().is_some_and(|&t| t <= cut) {
+                q.pop_front();
+            }
+        }
+        for q in [&mut self.q_waits, &mut self.q_ttxs] {
+            while q.front().is_some_and(|&(t, _)| t <= cut) {
+                q.pop_front();
+            }
+        }
+        // Histories keep one point at or before the cut as the step
+        // baseline for sampling.
+        for h in [&mut self.h_backlog, &mut self.h_util] {
+            while h.len() >= 2 && h.get(1).is_some_and(|&(t, _)| t <= cut) {
+                h.pop_front();
+            }
+        }
+    }
+
+    /// Latest event time (the dashboard's sim clock).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Configured window length (sim-seconds; ∞ = everything).
+    pub fn window(&self) -> f64 {
+        self.window
+    }
+
+    /// Events consumed.
+    pub fn n_events(&self) -> u64 {
+        self.n_events
+    }
+
+    /// Cumulative lane totals.
+    pub fn totals(&self) -> &LaneTotals {
+        &self.cum
+    }
+
+    /// The stream's [`ObsEvent::TrafficMeta`] header, if seen:
+    /// `(arrival_window, failure_configured)`.
+    pub fn meta(&self) -> Option<(f64, bool)> {
+        self.meta
+    }
+
+    /// Tasks submitted and not yet started.
+    pub fn queued(&self) -> u64 {
+        self.queued
+    }
+
+    /// Tasks running now.
+    pub fn running(&self) -> u64 {
+        self.running
+    }
+
+    /// Tasks parked in retry backoff.
+    pub fn backoff(&self) -> u64 {
+        self.backoff
+    }
+
+    /// High-water marks of `(queued, running)`.
+    pub fn peaks(&self) -> (u64, u64) {
+        (self.peak_queued, self.peak_running)
+    }
+
+    /// `(cores, gpus)` in use now.
+    pub fn used(&self) -> (u64, u64) {
+        (self.used_cores, self.used_gpus)
+    }
+
+    /// `(cores, gpus)` offered now.
+    pub fn offered(&self) -> (u64, u64) {
+        self.offered
+    }
+
+    /// The span rates are computed over: the window, clipped to the
+    /// stream's actual extent (a 300 s window over 40 s of events
+    /// averages over 40 s, not 300).
+    pub fn effective_window(&self) -> f64 {
+        let span = match self.t0 {
+            Some(t0) => self.now - t0,
+            None => 0.0,
+        };
+        if span > 0.0 {
+            self.window.min(span)
+        } else {
+            self.window
+        }
+    }
+
+    /// Event counts inside the window.
+    pub fn in_window(&self) -> LaneWindow {
+        LaneWindow {
+            arrivals: self.q_arrivals.len() as u64,
+            submissions: self.q_submissions.len() as u64,
+            starts: self.q_starts.len() as u64,
+            completions: self.q_completions.len() as u64,
+            faults: self.q_faults.len() as u64,
+            kills: self.q_kills.len() as u64,
+            retries: self.q_retries.len() as u64,
+        }
+    }
+
+    /// In-window count → events per sim-second.
+    pub fn rate(&self, count: u64) -> f64 {
+        let w = self.effective_window();
+        if w.is_finite() && w > 0.0 {
+            count as f64 / w
+        } else {
+            0.0
+        }
+    }
+
+    /// Windowed wait distribution (first start − arrival, sampled at
+    /// the start instant).
+    pub fn wait(&self) -> Option<Summary> {
+        let xs: Vec<f64> = self.q_waits.iter().map(|&(_, v)| v).collect();
+        Summary::try_of(&xs)
+    }
+
+    /// Windowed TTX distribution (sampled at workflow completion).
+    pub fn ttx(&self) -> Option<Summary> {
+        let xs: Vec<f64> = self.q_ttxs.iter().map(|&(_, v)| v).collect();
+        Summary::try_of(&xs)
+    }
+
+    /// Per-kind concurrency rows, label-sorted.
+    pub fn kind_table(&self) -> Vec<KindRow> {
+        self.kind_ids
+            .iter()
+            .filter_map(|(name, &k)| {
+                self.kinds.get(k).map(|lane| KindRow {
+                    kind: name.clone(),
+                    running: lane.running,
+                    peak: lane.peak,
+                    completed: lane.completed,
+                })
+            })
+            .collect()
+    }
+
+    /// Backlog (queued tasks) sampled at `n` evenly spaced instants
+    /// across the window — sparkline feed.
+    pub fn backlog_samples(&self, n: usize) -> Vec<f64> {
+        sample_step(&self.h_backlog, self.now, self.effective_window(), n)
+    }
+
+    /// Core-utilization fraction sampled across the window.
+    pub fn util_samples(&self, n: usize) -> Vec<f64> {
+        sample_step(&self.h_util, self.now, self.effective_window(), n)
+    }
+}
+
+/// Append a step point, collapsing repeats of the same value and
+/// same-instant revisions (last write at an instant wins).
+fn push_step(h: &mut VecDeque<(f64, f64)>, t: f64, v: f64) {
+    if let Some(&(lt, lv)) = h.back() {
+        if lv == v {
+            return;
+        }
+        if lt == t {
+            h.pop_back();
+            if h.back().is_some_and(|&(_, pv)| pv == v) {
+                return;
+            }
+        }
+    }
+    h.push_back((t, v));
+}
+
+/// Sample a step series at `n` instants over `[now − span, now]`.
+fn sample_step(h: &VecDeque<(f64, f64)>, now: f64, span: f64, n: usize) -> Vec<f64> {
+    if n == 0 || h.is_empty() {
+        return vec![0.0; n];
+    }
+    let span = if span.is_finite() && span > 0.0 { span } else { 0.0 };
+    let start = now - span;
+    let mut out = Vec::with_capacity(n);
+    let mut it = h.iter().peekable();
+    let mut cur = 0.0;
+    for i in 0..n {
+        let st = if n == 1 {
+            now
+        } else {
+            start + span * (i as f64 / (n - 1) as f64)
+        };
+        while it.peek().is_some_and(|&&(t, _)| t <= st) {
+            if let Some(&(_, v)) = it.next() {
+                cur = v;
+            }
+        }
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev_sub(t: f64, uid: usize, kind: &str) -> ObsEvent {
+        ObsEvent::TaskSubmitted {
+            t,
+            uid,
+            slot: 0,
+            local: uid,
+            kind: kind.into(),
+            cores: 2,
+            gpus: 1,
+            tx: 5.0,
+            attempt: 0,
+        }
+    }
+
+    fn ev_start(t: f64, uid: usize) -> ObsEvent {
+        ObsEvent::TaskStarted { t, uid, slot: 0, local: uid, node: 0, cores: 2, gpus: 1 }
+    }
+
+    fn ev_done(t: f64, uid: usize) -> ObsEvent {
+        ObsEvent::TaskCompleted { t, uid, slot: 0, local: uid, failed: false }
+    }
+
+    #[test]
+    fn live_counters_track_the_lifecycle() {
+        let mut ws = WindowStats::new(100.0);
+        ws.push(&ObsEvent::CapacityOffered { t: 0.0, cores: 8, gpus: 2 });
+        ws.push(&ObsEvent::WorkflowArrived {
+            t: 0.0,
+            slot: 0,
+            workflow: "w".into(),
+            arrival: 0.0,
+        });
+        ws.push(&ev_sub(1.0, 0, "simulation"));
+        ws.push(&ev_sub(1.0, 1, "training"));
+        assert_eq!(ws.queued(), 2);
+        ws.push(&ev_start(2.0, 0));
+        assert_eq!((ws.queued(), ws.running()), (1, 1));
+        assert_eq!(ws.used(), (2, 1));
+        ws.push(&ev_start(3.0, 1));
+        assert_eq!(ws.used(), (4, 2));
+        let table = ws.kind_table();
+        assert_eq!(table.len(), 2);
+        assert_eq!(table[0].kind, "simulation");
+        assert_eq!(table[0].running, 1);
+        ws.push(&ev_done(7.0, 0));
+        ws.push(&ev_done(9.0, 1));
+        assert_eq!((ws.queued(), ws.running()), (0, 0));
+        assert_eq!(ws.used(), (0, 0));
+        assert_eq!(ws.peaks(), (2, 2));
+        assert_eq!(ws.totals().completions, 2);
+        // Wait sampled at the slot's first start: 2.0 − 0.0.
+        let w = ws.wait().unwrap();
+        assert_eq!(w.n, 1);
+        assert_eq!(w.mean, 2.0);
+    }
+
+    #[test]
+    fn window_evicts_old_events() {
+        let mut ws = WindowStats::new(10.0);
+        ws.push(&ObsEvent::CapacityOffered { t: 0.0, cores: 4, gpus: 0 });
+        for i in 0..5 {
+            ws.push(&ObsEvent::WorkflowArrived {
+                t: i as f64 * 4.0,
+                slot: i,
+                workflow: "w".into(),
+                arrival: i as f64 * 4.0,
+            });
+        }
+        // now = 16, window (6, 16]: arrivals at 8, 12, 16 survive.
+        assert_eq!(ws.in_window().arrivals, 3);
+        assert_eq!(ws.totals().arrivals, 5);
+        // Rates clip to the stream extent (16 s < no clip here: w=10).
+        assert!((ws.rate(ws.in_window().arrivals) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kills_release_resources_and_backoff_tracks_retries() {
+        let mut ws = WindowStats::new(f64::INFINITY);
+        ws.push(&ObsEvent::CapacityOffered { t: 0.0, cores: 8, gpus: 2 });
+        ws.push(&ev_sub(0.0, 0, "stress"));
+        ws.push(&ev_start(1.0, 0));
+        ws.push(&ObsEvent::NodeFault { t: 2.0, node: 0, victims: 1 });
+        ws.push(&ObsEvent::TaskKilled {
+            t: 2.0,
+            uid: 0,
+            slot: 0,
+            local: 0,
+            node: 0,
+            attempt: 1,
+            lost_core_s: 2.0,
+        });
+        ws.push(&ObsEvent::RetryScheduled { t: 2.0, uid: 0, due: 4.0, attempt: 1 });
+        assert_eq!(ws.used(), (0, 0));
+        assert_eq!((ws.running(), ws.backoff()), (0, 1));
+        ws.push(&ObsEvent::TaskSubmitted {
+            t: 4.0,
+            uid: 0,
+            slot: 0,
+            local: 0,
+            kind: "stress".into(),
+            cores: 2,
+            gpus: 1,
+            tx: 5.0,
+            attempt: 1,
+        });
+        assert_eq!((ws.queued(), ws.backoff()), (1, 0));
+        assert_eq!(ws.totals().resubmissions, 1);
+        ws.push(&ev_start(4.0, 0));
+        ws.push(&ev_done(9.0, 0));
+        assert_eq!(ws.kind_table()[0].completed, 1);
+        assert_eq!(ws.totals().kills, 1);
+    }
+
+    #[test]
+    fn step_sampling_holds_values_between_points() {
+        let mut h = VecDeque::new();
+        push_step(&mut h, 0.0, 0.0);
+        push_step(&mut h, 2.0, 3.0);
+        push_step(&mut h, 8.0, 1.0);
+        let s = sample_step(&h, 10.0, 10.0, 5);
+        // Samples at t = 0, 2.5, 5, 7.5, 10.
+        assert_eq!(s, vec![0.0, 3.0, 3.0, 3.0, 1.0]);
+        // Same-value repeats collapse; same-instant revisions win last.
+        let mut h2 = VecDeque::new();
+        push_step(&mut h2, 0.0, 1.0);
+        push_step(&mut h2, 0.0, 2.0);
+        push_step(&mut h2, 1.0, 2.0);
+        assert_eq!(h2, VecDeque::from(vec![(0.0, 2.0)]));
+    }
+}

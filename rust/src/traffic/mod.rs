@@ -87,7 +87,7 @@ use crate::entk::Workflow;
 use crate::error::{Error, Result};
 use crate::failure::FailureSpec;
 use crate::obs::profile::EngineProfile;
-use crate::obs::EventSink;
+use crate::obs::{EventSink, ObsEvent};
 use crate::pilot::ResourcePlan;
 use crate::resources::ClusterSpec;
 use crate::sched::Policy;
@@ -574,6 +574,22 @@ pub fn run_traffic_resumable_obs(
     }
     if let Some(failure) = &spec.failure {
         coord.set_failure_spec(failure.clone())?;
+    }
+    // Stream header: a fresh traffic run stamps its arrival window
+    // before the engine's first event, so a replay can reproduce the
+    // report's backlog-saturation verdict. Resumed legs never re-emit
+    // it (see `TrafficCheckpoint::resume_until_obs`) — a chained
+    // stream carries exactly one header and the resume-concatenation
+    // equality is untouched.
+    let mut obs = obs;
+    if let Some(sink) = obs.sink.as_mut() {
+        if sink.enabled() {
+            sink.emit(&ObsEvent::TrafficMeta {
+                t: 0.0,
+                window: arrival_window,
+                failure: spec.failure.is_some(),
+            });
+        }
     }
     obs.install(&mut coord);
     let mut names = Vec::with_capacity(arrivals.len());

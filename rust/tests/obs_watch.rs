@@ -1,0 +1,682 @@
+//! Acceptance tests for the watch console family (`obs::tail`,
+//! `obs::window`, `obs::watch`, `obs::render`):
+//!
+//! 1. **Headline bit-equality** — `watch --once`'s reconstruction must
+//!    reproduce the live [`TrafficReport`]'s figures down to
+//!    `f64::to_bits`, clean and fault-injected runs alike, and its
+//!    rendered lines must appear verbatim in the live render.
+//! 2. **Windowed rollups vs full recompute** — [`WindowStats`]'
+//!    incremental eviction must agree with a from-scratch scan of the
+//!    raw event prefix at every step, across seeds × [`WakePolicy`].
+//! 3. **Tail parsing** — any chunking of a stream through
+//!    [`TailParser`], and any offset resume, must parse exactly what
+//!    the one-shot parser sees; resume-concatenated (chained) streams
+//!    roll up like the uninterrupted run's.
+//! 4. **Deterministic figures** — the `trace --render` SVGs are
+//!    byte-identical across reruns of the same seed.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use asyncflow::dag::Dag;
+use asyncflow::engine::{Coordinator, EngineConfig, ExecutionMode, WakePolicy};
+use asyncflow::entk::{Pipeline, Workflow};
+use asyncflow::failure::cadence::run_chained_obs;
+use asyncflow::failure::{FailureSpec, RetryPolicy};
+use asyncflow::obs::render::{kind_timeline_svg, overlap_heatmap_svg, util_backlog_svg};
+use asyncflow::obs::tail::TailParser;
+use asyncflow::obs::trace::{analyze_replayed, parse_stream, replay};
+use asyncflow::obs::watch::{headline, render_frame, watch_once};
+use asyncflow::obs::window::WindowStats;
+use asyncflow::obs::{strip_checkpoint_markers, MemSink, ObsEvent};
+use asyncflow::pilot::{AutoscalePolicy, Policy, ResourcePlan};
+use asyncflow::resources::{ClusterSpec, ResourceRequest};
+use asyncflow::sim::VirtualExecutor;
+use asyncflow::task::{TaskKind, TaskSetSpec};
+use asyncflow::traffic::{
+    run_traffic_resumable_obs, ArrivalProcess, Catalog, TrafficObs, TrafficOutcome,
+    TrafficReport, TrafficSpec, WorkloadMix,
+};
+use asyncflow::util::rng::Rng;
+use asyncflow::util::stats::Summary;
+use asyncflow::workflows::random_workflow;
+
+/// Two-kind chain (the `tests/obs_trace.rs` shape): four GPU-bound
+/// "simulation" tasks feeding one "training" task.
+fn chain() -> Workflow {
+    let mut dag = Dag::new();
+    let a = dag.add_node("sim");
+    let b = dag.add_node("train");
+    dag.add_edge(a, b).unwrap();
+    Workflow {
+        name: "chain".into(),
+        sets: vec![
+            TaskSetSpec::new("sim", 4, ResourceRequest::new(2, 1), 20.0)
+                .with_sigma(0.1)
+                .with_kind(TaskKind::MdSimulation { chunks: 1 }),
+            TaskSetSpec::new("train", 1, ResourceRequest::new(4, 0), 10.0)
+                .with_sigma(0.1)
+                .with_kind(TaskKind::Training { steps: 1 }),
+        ],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0]).stage(&[1])],
+        asynchronous: vec![Pipeline::new("p").stage(&[0]).stage(&[1])],
+    }
+}
+
+/// Single-task workflow: 1 core for `tx` seconds, deterministic.
+fn solo(tx: f64) -> Workflow {
+    let mut dag = Dag::new();
+    dag.add_node("A");
+    Workflow {
+        name: "solo".into(),
+        sets: vec![TaskSetSpec::new("A", 1, ResourceRequest::new(1, 0), tx).with_sigma(0.0)],
+        dag,
+        sequential: vec![Pipeline::new("s").stage(&[0])],
+        asynchronous: vec![Pipeline::new("a").stage(&[0])],
+    }
+}
+
+fn chain_spec(seed: u64) -> TrafficSpec {
+    TrafficSpec {
+        process: ArrivalProcess::Poisson { rate: 0.5 },
+        mix: WorkloadMix::parse("chain").unwrap(),
+        duration: 40.0,
+        max_workflows: 100_000,
+        seed,
+        plan: None,
+        checkpoint_at: None,
+        policy: None,
+        failure: None,
+    }
+}
+
+/// Poisson traffic over a shrinking allocation with MTBF faults and
+/// unlimited retries (the `tests/obs_trace.rs` resilience shape).
+fn faulty_spec(seed: u64) -> TrafficSpec {
+    TrafficSpec {
+        process: ArrivalProcess::Poisson { rate: 1.0 },
+        mix: WorkloadMix::parse("solo").unwrap(),
+        duration: 30.0,
+        max_workflows: 100_000,
+        seed,
+        plan: Some(ResourcePlan::new().resize(15.0, -1)),
+        checkpoint_at: None,
+        policy: None,
+        failure: Some(FailureSpec {
+            retry: RetryPolicy { max_attempts: 0, base: 2.0, factor: 2.0, jitter: 0.25 },
+            ..FailureSpec::mtbf(8.0)
+        }),
+    }
+}
+
+/// Run `spec` to completion with a memory sink attached.
+fn run_with_stream(
+    spec: &TrafficSpec,
+    cat: &Catalog,
+    cluster: &ClusterSpec,
+) -> (TrafficReport, Vec<ObsEvent>) {
+    let sink = Rc::new(RefCell::new(MemSink::new()));
+    let obs = TrafficObs { sink: Some(Box::new(Rc::clone(&sink))), profile: None };
+    let outcome =
+        run_traffic_resumable_obs(spec, cat, cluster, &EngineConfig::ideal(), obs).unwrap();
+    let TrafficOutcome::Completed(rep) = outcome else {
+        panic!("spec has no checkpoint time, the run must complete")
+    };
+    let events = sink.borrow().events.clone();
+    (*rep, events)
+}
+
+fn ndjson(events: &[ObsEvent]) -> String {
+    events.iter().map(|e| e.to_ndjson() + "\n").collect()
+}
+
+fn assert_summary_bits(got: Option<&Summary>, want: &Summary, what: &str) {
+    let got = got.unwrap_or_else(|| panic!("{what}: headline produced no summary"));
+    assert_eq!(got.n, want.n, "{what}: n");
+    for (g, w, field) in [
+        (got.mean, want.mean, "mean"),
+        (got.std, want.std, "std"),
+        (got.min, want.min, "min"),
+        (got.max, want.max, "max"),
+        (got.p50, want.p50, "p50"),
+        (got.p95, want.p95, "p95"),
+        (got.p99, want.p99, "p99"),
+    ] {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: {field}");
+    }
+}
+
+/// The bit-equality core: every figure the live report prints,
+/// reconstructed from the stream, compared at the bit level.
+fn assert_headline_matches(rep: &TrafficReport, events: &[ObsEvent], what: &str) {
+    let run = replay(events).unwrap();
+    let h = headline(&run);
+    assert_eq!(h.n_workflows, rep.workflows.len(), "{what}: workflows");
+    assert_eq!(h.n_tasks, rep.total_tasks, "{what}: tasks");
+    assert_eq!(h.failed_tasks, rep.failed_tasks, "{what}: failed tasks");
+    assert_eq!(h.n_unfinished, 0, "{what}: a complete stream leaves nothing open");
+    for (g, w, field) in [
+        (h.makespan, rep.makespan, "makespan"),
+        (h.cpu_utilization, rep.cpu_utilization, "cpu utilization"),
+        (h.gpu_utilization, rep.gpu_utilization, "gpu utilization"),
+        (h.task_throughput, rep.task_throughput, "task throughput"),
+        (h.workflow_throughput, rep.workflow_throughput, "workflow throughput"),
+        (h.mean_backlog_tasks, rep.mean_backlog_tasks, "mean backlog"),
+    ] {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: {field}");
+    }
+    assert_eq!(h.peak_backlog, rep.peak_backlog, "{what}: peak backlog");
+    assert_eq!(
+        h.arrival_window.map(f64::to_bits),
+        Some(rep.arrival_window.to_bits()),
+        "{what}: arrival window"
+    );
+    assert_eq!(
+        h.backlog_first_half.map(f64::to_bits),
+        Some(rep.backlog_first_half.to_bits()),
+        "{what}: first-half backlog"
+    );
+    assert_eq!(
+        h.backlog_second_half.map(f64::to_bits),
+        Some(rep.backlog_second_half.to_bits()),
+        "{what}: second-half backlog"
+    );
+    assert_eq!(
+        h.backlog_growth().map(f64::to_bits),
+        Some(rep.backlog_growth().to_bits()),
+        "{what}: backlog growth"
+    );
+    assert_eq!(h.is_saturated(), Some(rep.is_saturated()), "{what}: saturation verdict");
+    assert_summary_bits(h.wait.as_ref(), &rep.wait, &format!("{what}: wait"));
+    assert_summary_bits(h.ttx.as_ref(), &rep.ttx, &format!("{what}: ttx"));
+    match (&h.ledger, &rep.resilience) {
+        (None, None) => {}
+        (Some(g), Some(w)) => {
+            assert_eq!(g.failures_injected, w.failures_injected, "{what}: failures");
+            assert_eq!(g.tasks_killed, w.tasks_killed, "{what}: kills");
+            assert_eq!(g.retries_scheduled, w.retries_scheduled, "{what}: retries");
+            assert_eq!(g.retries_exhausted, w.retries_exhausted, "{what}: exhausted");
+            for (gf, wf, field) in [
+                (g.lost_core_s, w.lost_core_s, "lost core-s"),
+                (g.lost_gpu_s, w.lost_gpu_s, "lost gpu-s"),
+                (g.goodput_core_s, w.goodput_core_s, "goodput core-s"),
+                (g.goodput_gpu_s, w.goodput_gpu_s, "goodput gpu-s"),
+            ] {
+                assert_eq!(gf.to_bits(), wf.to_bits(), "{what}: {field}");
+            }
+        }
+        (g, w) => panic!("{what}: ledger presence mismatch ({g:?} vs {w:?})"),
+    }
+    // Rendered lines diff cleanly: every headline line is verbatim in
+    // the live render (which just carries extra lines).
+    let live = rep.render(false);
+    for line in h.render().lines() {
+        assert!(live.contains(line), "{what}: headline line {line:?} missing from live render");
+    }
+}
+
+#[test]
+fn headline_matches_the_live_report_bit_for_bit() {
+    let cat = Catalog::new().insert("chain", chain());
+    let cluster = ClusterSpec::uniform("t", 3, 8, 2);
+    for seed in [5, 7] {
+        let (rep, events) = run_with_stream(&chain_spec(seed), &cat, &cluster);
+        assert_headline_matches(&rep, &events, &format!("chain seed {seed}"));
+    }
+    let cat = Catalog::new().insert("solo", solo(4.0));
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let mut total_kills = 0;
+    for seed in 1..=3u64 {
+        let (rep, events) = run_with_stream(&faulty_spec(seed), &cat, &cluster);
+        assert_headline_matches(&rep, &events, &format!("faulty seed {seed}"));
+        total_kills += rep.resilience.map_or(0, |r| r.tasks_killed);
+    }
+    assert!(total_kills > 0, "the faulty seeds must exercise the resilience lines");
+}
+
+/// Independent windowed recompute, rebuilt from the raw prefix at every
+/// checkpoint: lane counts by direct scan with the same
+/// `t > now − w` comparison, instantaneous gauges derived from lane
+/// totals (never from `WindowStats`' own increments).
+#[derive(Default)]
+struct Brute {
+    now: f64,
+    t0: Option<f64>,
+    /// uid → kind of its latest submission.
+    kinds: BTreeMap<usize, String>,
+    /// uid → `(kind, cores, gpus)` of tasks started and not retired,
+    /// with the shape taken from the *start* event.
+    live: BTreeMap<usize, (String, u64, u64)>,
+    /// slot → (arrival, started?).
+    slots: BTreeMap<usize, (f64, bool)>,
+    waits: Vec<(f64, f64)>,
+    ttxs: Vec<(f64, f64)>,
+    kind_running: BTreeMap<String, u64>,
+    kind_peak: BTreeMap<String, u64>,
+    kind_done: BTreeMap<String, u64>,
+    // Cumulative lane totals (counted, not mirrored).
+    subs: u64,
+    resubs: u64,
+    starts: u64,
+    dones: u64,
+    kills: u64,
+    sched: u64,
+    peak_queued: u64,
+    peak_running: u64,
+}
+
+impl Brute {
+    fn push(&mut self, ev: &ObsEvent) {
+        let t = ev.time();
+        if self.t0.is_none() {
+            self.t0 = Some(t);
+        }
+        if t > self.now {
+            self.now = t;
+        }
+        match ev {
+            ObsEvent::WorkflowArrived { slot, arrival, .. } => {
+                self.slots.insert(*slot, (*arrival, false));
+            }
+            ObsEvent::TaskSubmitted { uid, kind, attempt, .. } => {
+                self.subs += 1;
+                if *attempt > 0 {
+                    self.resubs += 1;
+                }
+                self.kinds.insert(*uid, kind.clone());
+            }
+            ObsEvent::TaskStarted { uid, slot, cores, gpus, .. } => {
+                self.starts += 1;
+                let kind = self.kinds.get(uid).cloned().unwrap_or_default();
+                *self.kind_running.entry(kind.clone()).or_insert(0) += 1;
+                let r = self.kind_running[&kind];
+                let p = self.kind_peak.entry(kind.clone()).or_insert(0);
+                *p = (*p).max(r);
+                self.live.insert(*uid, (kind, *cores, *gpus));
+                if let Some(s) = self.slots.get_mut(slot) {
+                    if !s.1 {
+                        s.1 = true;
+                        self.waits.push((t, t - s.0));
+                    }
+                }
+            }
+            ObsEvent::TaskCompleted { uid, .. } => {
+                self.dones += 1;
+                if let Some((kind, _, _)) = self.live.remove(uid) {
+                    *self.kind_running.entry(kind.clone()).or_insert(0) -= 1;
+                    *self.kind_done.entry(kind).or_insert(0) += 1;
+                }
+            }
+            ObsEvent::TaskKilled { uid, .. } => {
+                self.kills += 1;
+                if let Some((kind, _, _)) = self.live.remove(uid) {
+                    *self.kind_running.entry(kind).or_insert(0) -= 1;
+                }
+            }
+            ObsEvent::RetryScheduled { .. } => self.sched += 1,
+            ObsEvent::WorkflowCompleted { slot, .. } => {
+                if let Some(&(arrival, _)) = self.slots.get(slot) {
+                    self.ttxs.push((t, t - arrival));
+                }
+            }
+            _ => {}
+        }
+        let (queued, running, _) = self.gauges();
+        self.peak_queued = self.peak_queued.max(queued);
+        self.peak_running = self.peak_running.max(running);
+    }
+
+    /// `(queued, running, backoff)` derived purely from lane totals.
+    fn gauges(&self) -> (u64, u64, u64) {
+        (
+            self.subs - self.starts,
+            self.starts - self.dones - self.kills,
+            self.sched - self.resubs,
+        )
+    }
+}
+
+/// Events in `prefix` matching `pred` with time strictly after `cut`.
+fn count(prefix: &[ObsEvent], pred: impl Fn(&ObsEvent) -> bool, cut: f64) -> u64 {
+    prefix.iter().filter(|e| pred(e) && e.time() > cut).count() as u64
+}
+
+/// The `tests/obs_stream.rs` scenario matrix: random workflows and
+/// policies, elastic plans with autoscalers for most seeds.
+fn coordinator_for(seed: u64, wake: WakePolicy) -> Coordinator {
+    let mut rng = Rng::new(seed);
+    let policy = [Policy::FifoBackfill, Policy::WeightedFair, Policy::Backfill]
+        [rng.below(3) as usize];
+    let cfg = EngineConfig { policy, seed: seed ^ 0x5eed, ..EngineConfig::default() };
+    let cluster = ClusterSpec::uniform("t", 3, 8, 2);
+    let mut coord = Coordinator::new(&cluster, &cfg);
+    coord.set_wake_policy(wake);
+    let n = 2 + rng.below(5) as usize;
+    for _ in 0..n {
+        let wf = random_workflow(&mut rng, 3, 3);
+        let mode = if rng.f64() < 0.5 {
+            ExecutionMode::Asynchronous
+        } else {
+            ExecutionMode::Sequential
+        };
+        let arrival = rng.f64() * 120.0;
+        coord.add_workflow(wf, mode, arrival).unwrap();
+    }
+    if rng.f64() < 0.6 {
+        let mut plan = ResourcePlan::new()
+            .resize(20.0 + rng.f64() * 40.0, 1)
+            .resize(80.0 + rng.f64() * 40.0, -1);
+        if rng.f64() < 0.5 {
+            plan = plan.with_autoscale(AutoscalePolicy {
+                interval: 10.0,
+                min_nodes: 2,
+                max_nodes: 5,
+                step: 1,
+                ..Default::default()
+            });
+        }
+        coord.set_resource_plan(plan).unwrap();
+    }
+    coord
+}
+
+fn events_of(seed: u64, wake: WakePolicy) -> Vec<ObsEvent> {
+    let mut coord = coordinator_for(seed, wake);
+    let sink = Rc::new(RefCell::new(MemSink::new()));
+    coord.set_event_sink(Box::new(Rc::clone(&sink)));
+    let mut ex = VirtualExecutor::new();
+    coord.run(&mut ex).unwrap();
+    let events = sink.borrow().events.clone();
+    events
+}
+
+#[test]
+fn windowed_rollups_match_a_full_recompute() {
+    for seed in 0..6u64 {
+        let mut frames = Vec::new();
+        for wake in [WakePolicy::Calendar, WakePolicy::FullScan] {
+            let events = events_of(seed, wake);
+            for window in [25.0, 80.0, f64::INFINITY] {
+                let mut ws = WindowStats::new(window);
+                let mut brute = Brute::default();
+                for (i, ev) in events.iter().enumerate() {
+                    ws.push(ev);
+                    brute.push(ev);
+                    // Full recompute every few events and at the end.
+                    if i % 7 != 0 && i + 1 != events.len() {
+                        continue;
+                    }
+                    let prefix = &events[..=i];
+                    let what = format!("seed {seed} {wake:?} w={window} event {i}");
+                    let cut = brute.now - window;
+                    let win = ws.in_window();
+                    let scan = |pred: fn(&ObsEvent) -> bool| count(prefix, pred, cut);
+                    assert_eq!(
+                        win.arrivals,
+                        scan(|e| matches!(e, ObsEvent::WorkflowArrived { .. })),
+                        "{what}: in-window arrivals"
+                    );
+                    assert_eq!(
+                        win.submissions,
+                        scan(|e| matches!(e, ObsEvent::TaskSubmitted { .. })),
+                        "{what}: in-window submissions"
+                    );
+                    assert_eq!(
+                        win.starts,
+                        scan(|e| matches!(e, ObsEvent::TaskStarted { .. })),
+                        "{what}: in-window starts"
+                    );
+                    assert_eq!(
+                        win.completions,
+                        scan(|e| matches!(e, ObsEvent::TaskCompleted { .. })),
+                        "{what}: in-window completions"
+                    );
+                    assert_eq!(
+                        win.faults,
+                        scan(|e| matches!(e, ObsEvent::NodeFault { .. })),
+                        "{what}: in-window faults"
+                    );
+                    assert_eq!(
+                        win.kills,
+                        scan(|e| matches!(e, ObsEvent::TaskKilled { .. })),
+                        "{what}: in-window kills"
+                    );
+                    assert_eq!(
+                        win.retries,
+                        scan(|e| matches!(e, ObsEvent::RetryScheduled { .. })),
+                        "{what}: in-window retries"
+                    );
+                    // Instantaneous gauges from lane totals alone.
+                    let (queued, running, backoff) = brute.gauges();
+                    assert_eq!(ws.queued(), queued, "{what}: queued");
+                    assert_eq!(ws.running(), running, "{what}: running");
+                    assert_eq!(ws.backoff(), backoff, "{what}: backoff");
+                    assert_eq!(
+                        ws.peaks(),
+                        (brute.peak_queued, brute.peak_running),
+                        "{what}: peaks"
+                    );
+                    // Resources in use: summed from start-event shapes.
+                    let (mut uc, mut ug) = (0u64, 0u64);
+                    for (_, c, g) in brute.live.values() {
+                        uc += c;
+                        ug += g;
+                    }
+                    assert_eq!(ws.used(), (uc, ug), "{what}: used resources");
+                    // Windowed latency summaries over the same samples.
+                    let waits: Vec<f64> = brute
+                        .waits
+                        .iter()
+                        .filter(|&&(t, _)| t > cut)
+                        .map(|&(_, v)| v)
+                        .collect();
+                    let ttxs: Vec<f64> = brute
+                        .ttxs
+                        .iter()
+                        .filter(|&&(t, _)| t > cut)
+                        .map(|&(_, v)| v)
+                        .collect();
+                    assert_eq!(ws.wait(), Summary::try_of(&waits), "{what}: wait summary");
+                    assert_eq!(ws.ttx(), Summary::try_of(&ttxs), "{what}: ttx summary");
+                    // Per-kind table against the independent lane maps.
+                    for row in ws.kind_table() {
+                        assert_eq!(
+                            row.running,
+                            brute.kind_running.get(&row.kind).copied().unwrap_or(0),
+                            "{what}: kind {} running",
+                            row.kind
+                        );
+                        assert_eq!(
+                            row.peak,
+                            brute.kind_peak.get(&row.kind).copied().unwrap_or(0),
+                            "{what}: kind {} peak",
+                            row.kind
+                        );
+                        assert_eq!(
+                            row.completed,
+                            brute.kind_done.get(&row.kind).copied().unwrap_or(0),
+                            "{what}: kind {} completed",
+                            row.kind
+                        );
+                    }
+                    // Rates: the exact effective-window expression.
+                    let span = brute.now - brute.t0.unwrap();
+                    let eff = if span > 0.0 { window.min(span) } else { window };
+                    assert_eq!(ws.effective_window().to_bits(), eff.to_bits(), "{what}: eff");
+                    let want_rate = if eff.is_finite() && eff > 0.0 {
+                        win.arrivals as f64 / eff
+                    } else {
+                        0.0
+                    };
+                    assert_eq!(
+                        ws.rate(win.arrivals).to_bits(),
+                        want_rate.to_bits(),
+                        "{what}: arrival rate"
+                    );
+                }
+                if window == 25.0 {
+                    frames.push(render_frame(&ws, "matrix", false));
+                }
+            }
+        }
+        // Both wake policies emitted the same stream, so the dashboard
+        // frames must be byte-identical too.
+        assert_eq!(frames[0], frames[1], "seed {seed}: frames differ across wake policies");
+    }
+}
+
+#[test]
+fn tailed_chunks_and_offset_resume_match_the_one_shot_parse() {
+    let cat = Catalog::new().insert("solo", solo(4.0));
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let (_, events) = run_with_stream(&faulty_spec(1), &cat, &cluster);
+    let text = ndjson(&events);
+    let want = parse_stream(&text).unwrap();
+    let frame_of = |events: &[ObsEvent]| {
+        let mut ws = WindowStats::new(60.0);
+        for ev in events {
+            ws.push(ev);
+        }
+        render_frame(&ws, "tail", false)
+    };
+    let want_frame = frame_of(&want);
+    for chunk in [1usize, 7, 64, 4096] {
+        let mut p = TailParser::new();
+        let mut got = Vec::new();
+        for piece in text.as_bytes().chunks(chunk) {
+            p.feed(piece, &mut got).unwrap();
+        }
+        p.finish(&mut got).unwrap();
+        assert_eq!(got, want, "chunk size {chunk}");
+        assert_eq!(p.offset(), text.len() as u64, "chunk size {chunk}");
+        assert_eq!(frame_of(&got), want_frame, "chunk size {chunk}: rollup frame");
+    }
+    // Stop mid-line, then resume a fresh parser from the reported
+    // offset: nothing replays, nothing is lost.
+    let cut = text.len() * 2 / 3;
+    let mut first = TailParser::new();
+    let mut got = Vec::new();
+    first.feed(&text.as_bytes()[..cut], &mut got).unwrap();
+    let off = first.offset() as usize;
+    assert!(off <= cut, "offset counts complete lines only");
+    let mut second = TailParser::resume_at(off as u64);
+    second.feed(&text.as_bytes()[off..], &mut got).unwrap();
+    second.finish(&mut got).unwrap();
+    assert_eq!(got, want, "offset resume");
+    assert_eq!(frame_of(&got), want_frame, "offset resume: rollup frame");
+}
+
+#[test]
+fn chained_streams_watch_like_the_uninterrupted_run() {
+    let cat = Catalog::new().insert("solo", solo(4.0));
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let cfg = EngineConfig::ideal();
+    let spec = faulty_spec(3);
+    let (_, straight) = run_with_stream(&spec, &cat, &cluster);
+
+    let shared = Rc::new(RefCell::new(MemSink::new()));
+    let leg = || TrafficObs { sink: Some(Box::new(Rc::clone(&shared))), profile: None };
+    let (_, legs) = run_chained_obs(&spec, &cat, &cluster, &cfg, 7.0, leg).unwrap();
+    assert!(legs >= 2, "a 7 s cadence over a ~30 s run must take several legs, got {legs}");
+    let chained = shared.borrow().events.clone();
+
+    // Seam markers stripped, the resume-concatenated stream is the
+    // uninterrupted one — so the console shows the same dashboard.
+    let stripped = strip_checkpoint_markers(&chained);
+    assert_eq!(stripped, straight, "stripped chained stream == uninterrupted stream");
+    assert_eq!(
+        watch_once(&stripped, "s", 60.0),
+        watch_once(&straight, "s", 60.0),
+        "one-shot dashboards agree"
+    );
+    // Markers left in, the headline still reconstructs identically
+    // (replay treats them as annotations).
+    assert_eq!(
+        headline(&replay(&chained).unwrap()).render(),
+        headline(&replay(&straight).unwrap()).render(),
+        "headline survives the seam markers"
+    );
+    // The multi-leg NDJSON tails exactly like a one-shot parse.
+    let text = ndjson(&chained);
+    let want = parse_stream(&text).unwrap();
+    for chunk in [3usize, 117] {
+        let mut p = TailParser::new();
+        let mut got = Vec::new();
+        for piece in text.as_bytes().chunks(chunk) {
+            p.feed(piece, &mut got).unwrap();
+        }
+        p.finish(&mut got).unwrap();
+        assert_eq!(got, want, "chunk size {chunk}");
+    }
+}
+
+#[test]
+fn svg_renders_are_byte_identical_per_seed() {
+    let cat = Catalog::new().insert("solo", solo(4.0));
+    let cluster = ClusterSpec::uniform("t", 2, 2, 0);
+    let spec = faulty_spec(2);
+    let (_, e1) = run_with_stream(&spec, &cat, &cluster);
+    let (_, e2) = run_with_stream(&spec, &cat, &cluster);
+    let (r1, r2) = (replay(&e1).unwrap(), replay(&e2).unwrap());
+    let (a1, a2) = (analyze_replayed(&r1).unwrap(), analyze_replayed(&r2).unwrap());
+    let pairs = [
+        (overlap_heatmap_svg(&a1), overlap_heatmap_svg(&a2), "overlap heatmap"),
+        (kind_timeline_svg(&r1), kind_timeline_svg(&r2), "kind timeline"),
+        (util_backlog_svg(&r1), util_backlog_svg(&r2), "util/backlog strip"),
+    ];
+    for (x, y, what) in &pairs {
+        assert_eq!(x, y, "{what}: same seed must render identical bytes");
+        assert!(x.starts_with("<svg"), "{what}: svg root");
+        assert!(x.trim_end().ends_with("</svg>"), "{what}: closed root");
+        assert!(!x.contains("NaN") && !x.contains("inf"), "{what}: finite coordinates");
+    }
+}
+
+#[test]
+fn watch_once_cli_reproduces_the_live_report_headline() {
+    let cat = Catalog::new().insert("chain", chain());
+    let cluster = ClusterSpec::uniform("t", 3, 8, 2);
+    let (rep, events) = run_with_stream(&chain_spec(7), &cat, &cluster);
+    let dir = std::env::temp_dir().join("asyncflow_obs_watch_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("events.ndjson");
+    std::fs::write(&path, ndjson(&events)).unwrap();
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_asyncflow"))
+        .args(["watch", path.to_str().unwrap(), "--once"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "watch --once failed: {:?}", out);
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert!(stdout.contains("asyncflow watch — "), "frame header");
+    // Every headline line the live run printed appears verbatim.
+    let live = rep.render(false);
+    for prefix in ["  wait    ", "  TTX     ", "  backlog ", "  makespan "] {
+        let line = live
+            .lines()
+            .find(|l| l.starts_with(prefix))
+            .unwrap_or_else(|| panic!("live render lacks a {prefix:?} line"));
+        assert!(stdout.contains(line), "watch --once must print the live line {line:?}");
+    }
+
+    let rdir = dir.join("svg");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_asyncflow"))
+        .args(["trace", path.to_str().unwrap(), "--render", rdir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "trace --render failed: {:?}", out);
+    let run = replay(&events).unwrap();
+    let analysis = analyze_replayed(&run).unwrap();
+    for (file, want) in [
+        ("trace_overlap.svg", overlap_heatmap_svg(&analysis)),
+        ("trace_kinds.svg", kind_timeline_svg(&run)),
+        ("trace_util.svg", util_backlog_svg(&run)),
+    ] {
+        let got = std::fs::read_to_string(rdir.join(file)).unwrap();
+        assert_eq!(got, want, "{file}: CLI render must match the library render");
+    }
+    assert!(rdir.join("trace_chrome.json").exists(), "chrome trace written");
+    let _ = std::fs::remove_dir_all(&dir);
+}
